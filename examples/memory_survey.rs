@@ -1,0 +1,38 @@
+//! Memory survey: which models fit in which GPUs under which optimizer —
+//! the paper's Tab. 5 arithmetic as a library call.
+//!
+//! Run: `cargo run --release --example memory_survey`
+
+use lowbit_opt::memory::{largest_trainable, training_bytes, StatePreset, TrainSetup, GB};
+use lowbit_opt::model::{llama_family, opt_family};
+
+fn main() {
+    let setup = TrainSetup { batch: 1, seq: 512 };
+    println!("largest trainable model per budget (batch 1, seq 512):\n");
+    println!("{:<8} {:<14} {:<14} {:<14}", "budget", "32-bit AdamW", "4-bit AdamW", "4-bit Factor");
+    let fam = opt_family();
+    for budget in [16u64, 24, 40, 48, 80] {
+        let b = budget * GB;
+        let pick = |p| largest_trainable(&fam, p, setup, b).unwrap_or("-");
+        println!(
+            "{:<8} {:<14} {:<14} {:<14}",
+            format!("{budget} GB"),
+            pick(StatePreset::AdamW32),
+            pick(StatePreset::AdamW4),
+            pick(StatePreset::Factor4),
+        );
+    }
+
+    println!("\nLLaMA family footprints:");
+    for m in llama_family() {
+        print!("{:<10}", m.name);
+        for p in [StatePreset::AdamW32, StatePreset::AdamW8, StatePreset::AdamW4, StatePreset::Factor4] {
+            print!(
+                "  {}: {:>6.1} GB",
+                p.label().split(' ').next().unwrap(),
+                training_bytes(&m.cfg, p, setup) as f64 / GB as f64
+            );
+        }
+        println!();
+    }
+}

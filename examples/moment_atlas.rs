@@ -1,0 +1,87 @@
+//! Moment atlas: train a small LM, capture its Adam moments, and report
+//! per-tensor outlier structure + quantization error under every paper
+//! quantizer — the data behind Figs. 1/2/3, exported to
+//! `results/moment_atlas.json`.
+//!
+//! Run: `cargo run --release --example moment_atlas [steps]`
+
+use lowbit_opt::data::MarkovCorpus;
+use lowbit_opt::model::TransformerConfig;
+use lowbit_opt::optim::adamw::AdamW;
+use lowbit_opt::optim::{Hyper, Optimizer, Param};
+use lowbit_opt::quant::error::{inv_sqrt_overshoot, reconstruction_error, zero_fraction};
+use lowbit_opt::quant::{MapKind, NormKind, Quantizer};
+use lowbit_opt::train::{LrSchedule, Trainer, TransformerEngine};
+use lowbit_opt::util::json::Json;
+use lowbit_opt::util::rng::Pcg64;
+
+fn main() {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150);
+    let cfg = TransformerConfig::tiny();
+    let engine = TransformerEngine::new(cfg);
+    let corpus = MarkovCorpus::new(cfg.vocab, 11);
+    let mut rng = Pcg64::seeded(3);
+    let mut params = cfg.init_params(&mut rng);
+    let mut opt = AdamW::new(Hyper::default());
+    let trainer = Trainer::new(steps, LrSchedule::Constant(2e-3));
+    let mut data_rng = Pcg64::seeded(4);
+    let mut engine_fn =
+        |p: &[Param], b: &lowbit_opt::data::LmBatch| engine.loss_and_grads(p, b);
+    trainer.run(&mut params, &mut opt, &mut engine_fn, |_| {
+        corpus.sample(8, cfg.max_seq, &mut data_rng)
+    });
+    println!("trained {} steps; analyzing moments\n", steps);
+
+    let quantizers: Vec<(&str, Quantizer)> = vec![
+        ("B2048/DE", Quantizer::new(NormKind::Block(2048), MapKind::DynExp, 4, true)),
+        ("B128/DE", Quantizer::first_moment_4bit()),
+        ("Rank-1/Linear", Quantizer::second_moment_4bit()),
+        ("B128/DE-0", Quantizer::new(NormKind::Block(128), MapKind::DynExpNoZero, 4, false)),
+    ];
+
+    let mut entries = Vec::new();
+    for (idx, p) in params.iter().enumerate() {
+        if p.tensor.numel() < 2048 {
+            continue;
+        }
+        let (m, v) = opt.moments(idx).unwrap();
+        println!("{} {:?}", p.name, p.tensor.shape);
+        let mut entry = Json::obj();
+        entry.set("name", Json::Str(p.name.clone()));
+        entry.set("shape", Json::from_usizes(&p.tensor.shape));
+        for (qname, q) in &quantizers {
+            // First moment for signed quantizers, second for unsigned.
+            let (target, which) = if q.signed { (m, "m") } else { (v, "v") };
+            let mut r = Pcg64::seeded(0);
+            let deq = q.quantize(target, &mut r).dequantize();
+            let err = reconstruction_error(target, &deq);
+            let extra = if which == "v" {
+                format!(
+                    " zero_frac {:.3} overshoot {:.3}",
+                    zero_fraction(&deq),
+                    inv_sqrt_overshoot(target, &deq, 1e-6)
+                )
+            } else {
+                String::new()
+            };
+            println!(
+                "  {which} ~ {qname:<14} mse {:.3e} max {:.3e}{extra}",
+                err.mse, err.max_abs
+            );
+            let mut j = Json::obj();
+            j.set("mse", Json::Num(err.mse));
+            j.set("max_abs", Json::Num(err.max_abs));
+            entry.set(&format!("{which}:{qname}"), j);
+        }
+        entries.push(entry);
+    }
+    let mut doc = Json::obj();
+    doc.set("steps", Json::Num(steps as f64));
+    doc.set("tensors", Json::Arr(entries));
+    let path = format!("{}/moment_atlas.json", lowbit_opt::util::results_dir());
+    lowbit_opt::util::write_file(&path, &doc.pretty()).unwrap();
+    println!("\nwritten to {path}");
+}

@@ -1,0 +1,42 @@
+//! Quickstart: train a tiny transformer LM with the 4-bit AdamW optimizer
+//! (builtin engine, no artifacts needed) and compare its optimizer-state
+//! memory against fp32 AdamW.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use lowbit_opt::data::MarkovCorpus;
+use lowbit_opt::model::TransformerConfig;
+use lowbit_opt::optim::{build, Hyper, Optimizer, Param};
+use lowbit_opt::train::{LrSchedule, Trainer, TransformerEngine};
+use lowbit_opt::util::rng::Pcg64;
+use lowbit_opt::util::stats::fmt_bytes;
+
+fn main() {
+    let cfg = TransformerConfig::tiny();
+    let engine = TransformerEngine::new(cfg);
+    let corpus = MarkovCorpus::new(cfg.vocab, 42);
+    println!("tiny transformer: {} parameters", cfg.n_params());
+
+    for preset in ["adamw32", "adamw4"] {
+        let mut rng = Pcg64::seeded(0);
+        let mut params = cfg.init_params(&mut rng);
+        let mut opt = build(preset, Hyper::default()).unwrap();
+        let trainer = Trainer::new(60, LrSchedule::Constant(2e-3));
+        let mut data_rng = Pcg64::seeded(1);
+        let mut engine_fn = |p: &[Param], b: &lowbit_opt::data::LmBatch| {
+            engine.loss_and_grads(p, b)
+        };
+        let report = trainer.run(&mut params, opt.as_mut(), &mut engine_fn, |_| {
+            corpus.sample(8, cfg.max_seq, &mut data_rng)
+        });
+        println!(
+            "{:<14} loss {:.3} -> {:.3} | {:.1} ms/step | optimizer state {}",
+            opt.name(),
+            report.losses[0],
+            report.final_loss,
+            report.step_seconds * 1e3,
+            fmt_bytes(report.state_bytes as u64),
+        );
+    }
+    println!("\n4-bit states: same convergence, ~8x smaller optimizer memory.");
+}

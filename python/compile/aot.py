@@ -1,0 +1,199 @@
+"""AOT entry point: lower the L2 graphs (which embed the L1 Pallas
+kernels) to HLO *text* artifacts for the rust PJRT runtime, and emit the
+golden parity vectors that pin the rust quantizer to the python oracle.
+
+HLO text — not `.serialize()` — is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out ../artifacts          # all artifacts
+    python -m compile.aot --out ../artifacts --golden # + golden vectors
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import quant4, ref
+
+FUSED_CHUNK = 16384  # flat elements per fused-optimizer dispatch
+FUSED_BLOCK = 128
+TRAIN_BATCH = 8
+TRAIN_CONFIGS = {"tiny": model.Config.tiny(), "small": model.Config.small()}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unwraps one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big array
+    # literals as `{...}`, which xla_extension 0.5.1's text parser reads
+    # back as zeros — silently corrupting e.g. the quantization tables.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_train_step(cfg: model.Config, batch: int):
+    tokens = jax.ShapeDtypeStruct((batch, cfg.max_seq + 1), jnp.int32)
+    params = [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _, shape in model.param_specs(cfg)
+    ]
+    return jax.jit(model.make_train_step(cfg)).lower(tokens, *params)
+
+
+def lower_eval_loss(cfg: model.Config, batch: int):
+    tokens = jax.ShapeDtypeStruct((batch, cfg.max_seq + 1), jnp.int32)
+    params = [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _, shape in model.param_specs(cfg)
+    ]
+    return jax.jit(model.make_eval_loss(cfg)).lower(tokens, *params)
+
+
+def lower_fused_adamw4(n: int):
+    f32 = lambda shape: jax.ShapeDtypeStruct(shape, jnp.float32)
+    u8 = lambda shape: jax.ShapeDtypeStruct(shape, jnp.uint8)
+    grid = n // FUSED_BLOCK
+
+    def fn(w, g, mc, ms, vc, vs, hyper):
+        return quant4.fused_adamw4_chunk(w, g, mc, ms, vc, vs, hyper,
+                                         block=FUSED_BLOCK)
+
+    return jax.jit(fn).lower(
+        f32((n,)), f32((n,)), u8((n,)), f32((grid,)), u8((n,)), f32((grid,)),
+        f32((8,)),
+    )
+
+
+def write(path: str, text: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+# --------------------------------------------------------------------------
+# Golden parity vectors: inputs + expected codes/scales/dequant computed by
+# the oracle, replayed bit-exactly by rust/tests/golden_parity.rs.
+# --------------------------------------------------------------------------
+
+def golden_cases():
+    rng = np.random.RandomState(20230612)
+    cases = []
+
+    def add_blockwise(name, kind, bits, signed, block, x):
+        table = ref.build_map(kind, bits, signed)
+        codes, scales = ref.quantize_blockwise(x, block, table)
+        deq = ref.dequantize_blockwise(codes, scales, block, table, x.size)
+        cases.append({
+            "name": name,
+            "scheme": {"norm": f"B{block}", "map": kind, "bits": bits,
+                       "signed": signed},
+            "shape": list(x.shape),
+            "input": [float(v) for v in x.reshape(-1)],
+            "codes": [int(c) for c in np.asarray(codes)],
+            "scales": [float(s) for s in np.asarray(scales)],
+            "dequant": [float(v) for v in np.asarray(deq)],
+        })
+
+    def add_rank1(name, kind, bits, x2d):
+        table = ref.build_map(kind, bits, False)
+        codes, r, c = ref.quantize_rank1(x2d, table)
+        deq = ref.dequantize_rank1(codes, r, c, table)
+        cases.append({
+            "name": name,
+            "scheme": {"norm": "Rank-1", "map": kind, "bits": bits,
+                       "signed": False},
+            "shape": list(x2d.shape),
+            "input": [float(v) for v in x2d.reshape(-1)],
+            "codes": [int(v) for v in np.asarray(codes).reshape(-1)],
+            "row_scales": [float(v) for v in np.asarray(r)],
+            "col_scales": [float(v) for v in np.asarray(c)],
+            "dequant": [float(v) for v in np.asarray(deq).reshape(-1)],
+        })
+
+    # First-moment style: signed, outliers mixed in.
+    m = rng.randn(384).astype(np.float32) * 0.01
+    m[::37] = rng.randn(len(m[::37])).astype(np.float32)
+    add_blockwise("m_b128_de4", "de", 4, True, 128, m)
+    add_blockwise("m_b2048_de8", "de", 8, True, 2048,
+                  rng.randn(4096).astype(np.float32) * 0.02)
+
+    # Second-moment style: non-negative, heavy-tailed.
+    v = (rng.randn(256).astype(np.float32) * 1e-3) ** 2
+    v[::53] = np.abs(rng.randn(len(v[::53])).astype(np.float32)) * 0.1
+    add_blockwise("v_b128_linear4", "linear", 4, False, 128, v)
+    add_blockwise("v_b128_de0_4", "de0", 4, False, 128, v)
+
+    v2 = (rng.randn(24, 16).astype(np.float32) * 1e-2) ** 2
+    v2[:, 3] += 0.5  # column outlier
+    v2[5, :] += 0.3  # row outlier
+    add_rank1("v_rank1_linear4", "linear", 4, v2)
+
+    # Map tables themselves (rust asserts table equality).
+    tables = {}
+    for kind in ("linear", "de", "de0"):
+        for signed in (False, True):
+            t = ref.build_map(kind, 4, signed)
+            tables[f"{kind}_4_{'s' if signed else 'u'}"] = [float(v) for v in t]
+    tables["de_8_s"] = [float(v) for v in ref.build_map("de", 8, True)]
+
+    return {"cases": cases, "tables": tables}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--golden", action="store_true",
+                    help="also write golden parity vectors")
+    ap.add_argument("--golden-out", default="../rust/tests/golden")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="only lower the fused optimizer artifact")
+    args = ap.parse_args()
+
+    out = args.out
+    if not args.skip_train:
+        for name, cfg in TRAIN_CONFIGS.items():
+            lowered = lower_train_step(cfg, TRAIN_BATCH)
+            write(os.path.join(out, f"train_step_{name}.hlo.txt"),
+                  to_hlo_text(lowered))
+            write(os.path.join(out, f"eval_loss_{name}.hlo.txt"),
+                  to_hlo_text(lower_eval_loss(cfg, TRAIN_BATCH)))
+        # Machine-readable manifest of shapes for the rust runtime.
+        manifest = {}
+        for name, cfg in TRAIN_CONFIGS.items():
+            manifest[name] = {
+                "batch": TRAIN_BATCH,
+                "vocab": cfg.vocab, "d_model": cfg.d_model,
+                "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+                "n_layers": cfg.n_layers, "max_seq": cfg.max_seq,
+                "params": [
+                    {"name": n, "shape": list(s)}
+                    for n, s in model.param_specs(cfg)
+                ],
+            }
+        manifest["fused_adamw4"] = {"chunk": FUSED_CHUNK, "block": FUSED_BLOCK}
+        write(os.path.join(out, "manifest.json"), json.dumps(manifest, indent=1))
+
+    write(os.path.join(out, f"fused_adamw4_{FUSED_CHUNK}.hlo.txt"),
+          to_hlo_text(lower_fused_adamw4(FUSED_CHUNK)))
+
+    if args.golden:
+        write(os.path.join(args.golden_out, "quant_golden.json"),
+              json.dumps(golden_cases()))
+
+
+if __name__ == "__main__":
+    main()

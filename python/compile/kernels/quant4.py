@@ -1,0 +1,196 @@
+"""Layer-1 Pallas kernels: block-wise quantize / dequantize and the fused
+4-bit AdamW chunk update.
+
+TPU mapping of the paper's CUDA kernels (DESIGN.md §Hardware-Adaptation):
+one normalization block (B=128) = one VMEM tile = one grid step; the
+16-entry quantization table is a VMEM-resident constant broadcast to every
+grid step via a zero index_map; encode is a vectorized argmin over the
+(block, 16) distance matrix (branch-free VPU work, not a scalar binary
+search); the fused kernel keeps dequant -> AdamW -> requant inside one
+tile so states never round-trip to HBM in f32.
+
+Kernels run with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowering inlines the kernel into portable
+HLO that the rust runtime executes directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK = 128
+
+
+# --------------------------------------------------------------------------
+# Quantize
+# --------------------------------------------------------------------------
+
+def _quantize_block_kernel(x_ref, table_ref, codes_ref, scale_ref):
+    x = x_ref[...]                       # (block,) VMEM tile
+    t = table_ref[...]                   # (K,) broadcast constant
+    s = jnp.max(jnp.abs(x))
+    safe = jnp.where(s > 0, s, 1.0)
+    n = jnp.where(s > 0, x / safe, 0.0)
+    d = jnp.abs(n[:, None] - t[None, :])  # (block, K) distance matrix
+    codes_ref[...] = jnp.argmin(d, axis=1).astype(jnp.uint8)
+    scale_ref[...] = jnp.full((1,), s, dtype=jnp.float32)
+
+
+def quantize_blockwise(x_flat, table, block: int = DEFAULT_BLOCK):
+    """Pallas block-wise quantization of a flat f32 array whose length is a
+    multiple of `block`. Returns (codes uint8, scales f32[n/block])."""
+    n = x_flat.shape[0]
+    assert n % block == 0, "pad to a block multiple before calling"
+    grid = n // block
+    table = jnp.asarray(table, dtype=jnp.float32)
+    k = table.shape[0]
+    return pl.pallas_call(
+        _quantize_block_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint8),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+        ],
+        interpret=True,
+    )(x_flat, table)
+
+
+# --------------------------------------------------------------------------
+# Dequantize
+# --------------------------------------------------------------------------
+
+def _dequantize_block_kernel(codes_ref, scale_ref, table_ref, out_ref):
+    codes = codes_ref[...]
+    t = table_ref[...]
+    s = scale_ref[0]
+    out_ref[...] = t[codes] * s
+
+
+def dequantize_blockwise(codes, scales, table, block: int = DEFAULT_BLOCK):
+    """Inverse of `quantize_blockwise`."""
+    n = codes.shape[0]
+    assert n % block == 0
+    grid = n // block
+    table = jnp.asarray(table, dtype=jnp.float32)
+    k = table.shape[0]
+    return pl.pallas_call(
+        _dequantize_block_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(codes, scales, table)
+
+
+# --------------------------------------------------------------------------
+# Fused 4-bit AdamW chunk update (the FSDP-packed / "(fused)" path of the
+# paper's Tab. 4): dequantize m,v -> AdamW -> requantize, one VMEM tile at
+# a time. Hyperparameters arrive as an 8-vector so the artifact is reusable
+# across steps: [lr, beta1, beta2, eps, weight_decay, bc1, bc2, 0] where
+# bc1/bc2 are the step-t bias corrections (1 - beta^t), precomputed by the
+# rust coordinator.
+# --------------------------------------------------------------------------
+
+def _fused_adamw4_kernel(
+    w_ref, g_ref, m_codes_ref, m_scale_ref, v_codes_ref, v_scale_ref,
+    hyper_ref, m_table_ref, v_table_ref,
+    w_out_ref, m_codes_out_ref, m_scale_out_ref, v_codes_out_ref,
+    v_scale_out_ref,
+):
+    w = w_ref[...]
+    g = g_ref[...]
+    hyper = hyper_ref[...]
+    lr, beta1, beta2, eps, wd, bc1, bc2 = (
+        hyper[0], hyper[1], hyper[2], hyper[3], hyper[4], hyper[5], hyper[6]
+    )
+    m_t = m_table_ref[...]
+    v_t = v_table_ref[...]
+
+    # Dequantize states (VMEM-resident tiles).
+    m = m_t[m_codes_ref[...]] * m_scale_ref[0]
+    v = v_t[v_codes_ref[...]] * v_scale_ref[0]
+
+    # AdamW (paper Eq. 1, decoupled weight decay).
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m / bc1
+    vhat = v / bc2
+    w_out_ref[...] = w - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * w)
+
+    # Requantize m (signed table).
+    ms = jnp.max(jnp.abs(m))
+    ms_safe = jnp.where(ms > 0, ms, 1.0)
+    mn = jnp.where(ms > 0, m / ms_safe, 0.0)
+    m_codes_out_ref[...] = jnp.argmin(
+        jnp.abs(mn[:, None] - m_t[None, :]), axis=1
+    ).astype(jnp.uint8)
+    m_scale_out_ref[...] = jnp.full((1,), ms, dtype=jnp.float32)
+
+    # Requantize v (unsigned, zero-free linear table).
+    vs = jnp.max(jnp.abs(v))
+    vs_safe = jnp.where(vs > 0, vs, 1.0)
+    vn = jnp.where(vs > 0, v / vs_safe, 0.0)
+    v_codes_out_ref[...] = jnp.argmin(
+        jnp.abs(vn[:, None] - v_t[None, :]), axis=1
+    ).astype(jnp.uint8)
+    v_scale_out_ref[...] = jnp.full((1,), vs, dtype=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fused_adamw4_chunk(w, g, m_codes, m_scales, v_codes, v_scales, hyper,
+                       block: int = DEFAULT_BLOCK):
+    """One fused 4-bit AdamW step over a flat chunk (paper's FSDP-packed
+    fused path). m uses the signed 4-bit DE table, v the unsigned 4-bit
+    linear table (B128 falls out of the grid)."""
+    n = w.shape[0]
+    assert n % block == 0
+    grid = n // block
+    m_table = jnp.asarray(ref.build_map("de", 4, True))
+    v_table = jnp.asarray(ref.build_map("linear", 4, False))
+    km = m_table.shape[0]
+    kv = v_table.shape[0]
+    blk = lambda: pl.BlockSpec((block,), lambda i: (i,))
+    one = lambda: pl.BlockSpec((1,), lambda i: (i,))
+    return pl.pallas_call(
+        _fused_adamw4_kernel,
+        grid=(grid,),
+        in_specs=[
+            blk(),  # w
+            blk(),  # g
+            blk(),  # m codes
+            one(),  # m scale
+            blk(),  # v codes
+            one(),  # v scale
+            pl.BlockSpec((8,), lambda i: (0,)),   # hyper
+            pl.BlockSpec((km,), lambda i: (0,)),  # m table
+            pl.BlockSpec((kv,), lambda i: (0,)),  # v table
+        ],
+        out_specs=[blk(), blk(), one(), blk(), one()],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.uint8),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.uint8),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+        ],
+        interpret=True,
+    )(w, g, m_codes, m_scales, v_codes, v_scales, hyper, m_table, v_table)

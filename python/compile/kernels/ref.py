@@ -1,0 +1,175 @@
+"""Pure-jnp reference (oracle) for the 4-bit optimizer-state quantizers.
+
+This file is the single source of truth for numerics: the Pallas kernels
+(`quant4.py`) are tested against it with hypothesis, and the rust engine is
+tested against golden vectors generated from it (`aot.py --golden`). The
+constructions mirror the paper (App. E.2, Alg. 4) and the rust module
+`rust/src/quant/` exactly:
+
+* Linear mapping:  T(i) = (i+1)/2^b  (zero excluded by construction)
+* DE mapping: leading zeros = power-of-ten exponent; fraction bits span
+  (0.1, 1); special codes 0 -> 0.0 and 1.0 for the reassigned top code
+* DE-0: DE with the zero removed (2^b - 1 codes)
+* Block-wise normalization with true division x / scale
+* Rank-1 normalization: scale_ij = min(row_max_i, col_max_j)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Mapping construction (float64, cast to float32 at the end — identical to
+# the rust builder in rust/src/quant/mapping.rs).
+# --------------------------------------------------------------------------
+
+def _fractions(f_bits: int) -> list:
+    n = 1 << f_bits
+    step = (1.0 - 0.1) / n
+    return [0.5 * ((0.1 + step * k) + (0.1 + step * (k + 1))) for k in range(n)]
+
+
+def _dynexp_unsigned(bits: int) -> list:
+    assert bits >= 2
+    vals = [0.0, 1.0]
+    for e in range(bits - 1):  # E in [0, b-2]
+        f_bits = bits - 1 - e
+        scale = 10.0 ** (-e)
+        vals.extend(scale * f for f in _fractions(f_bits))
+    return vals
+
+
+def _dynexp_signed(bits: int) -> list:
+    assert bits >= 3
+    vals = [0.0, 1.0]
+    for e in range(bits - 1):  # E in [0, b-2]
+        f_bits = bits - 2 - e
+        scale = 10.0 ** (-e)
+        for f in _fractions(f_bits):
+            vals.append(scale * f)
+            vals.append(-scale * f)
+    return vals
+
+
+def build_map(kind: str, bits: int, signed: bool) -> np.ndarray:
+    """Sorted table of representable values, float32.
+    kind in {'linear', 'de', 'de0'}."""
+    if kind == "linear":
+        if not signed:
+            vals = [(i + 1) / (1 << bits) for i in range(1 << bits)]
+        else:
+            half = 1 << (bits - 1)
+            vals = []
+            for i in range(half):
+                x = (i + 1) / half
+                vals.extend([x, -x])
+    elif kind in ("de", "de0"):
+        vals = _dynexp_signed(bits) if signed else _dynexp_unsigned(bits)
+        if kind == "de0":
+            vals = [v for v in vals if v != 0.0]
+    else:
+        raise ValueError(f"unknown map kind {kind!r}")
+    vals = sorted(set(vals))
+    expected = (1 << bits) - (1 if kind == "de0" else 0)
+    assert len(vals) == expected, (kind, bits, signed, len(vals))
+    return np.asarray(vals, dtype=np.float32)
+
+
+# --------------------------------------------------------------------------
+# Encode / decode
+# --------------------------------------------------------------------------
+
+def encode(n, table) -> jnp.ndarray:
+    """argmin_i |n - T(i)| with first-index tie-breaking (jnp.argmin)."""
+    n = jnp.asarray(n, dtype=jnp.float32)
+    t = jnp.asarray(table, dtype=jnp.float32)
+    d = jnp.abs(jnp.expand_dims(n, -1) - t)
+    return jnp.argmin(d, axis=-1).astype(jnp.uint8)
+
+
+def decode(codes, table) -> jnp.ndarray:
+    t = jnp.asarray(table, dtype=jnp.float32)
+    return t[codes]
+
+
+# --------------------------------------------------------------------------
+# Normalizations
+# --------------------------------------------------------------------------
+
+def block_scales(x_flat: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Per-block max-magnitude scales; the last block may be partial.
+    Returns shape (ceil(n/block),)."""
+    n = x_flat.shape[0]
+    pad = (-n) % block
+    xp = jnp.pad(jnp.abs(x_flat), (0, pad))
+    return jnp.max(xp.reshape(-1, block), axis=1)
+
+
+def quantize_blockwise(x, block: int, table):
+    """Returns (codes flat uint8, scales). Normalized with true division;
+    zero-scale blocks encode normalized 0."""
+    x_flat = jnp.asarray(x, dtype=jnp.float32).reshape(-1)
+    scales = block_scales(x_flat, block)
+    per_elem = jnp.repeat(scales, block)[: x_flat.shape[0]]
+    safe = jnp.where(per_elem > 0, per_elem, 1.0)
+    n = jnp.where(per_elem > 0, x_flat / safe, 0.0)
+    return encode(n, table), scales
+
+
+def dequantize_blockwise(codes, scales, block: int, table, n: int):
+    per_elem = jnp.repeat(scales, block)[:n]
+    return decode(codes, table) * per_elem
+
+
+def rank1_scales(x2d: jnp.ndarray):
+    """Row and column max-magnitude statistics of a 2-D tensor."""
+    a = jnp.abs(jnp.asarray(x2d, dtype=jnp.float32))
+    return jnp.max(a, axis=1), jnp.max(a, axis=0)
+
+
+def quantize_rank1(x2d, table):
+    """Rank-1 normalization + mapping for a 2-D tensor (paper Alg. 4)."""
+    x2d = jnp.asarray(x2d, dtype=jnp.float32)
+    r, c = rank1_scales(x2d)
+    s = jnp.minimum(r[:, None], c[None, :])
+    safe = jnp.where(s > 0, s, 1.0)
+    n = jnp.where(s > 0, x2d / safe, 0.0)
+    return encode(n, table), r, c
+
+
+def dequantize_rank1(codes, r, c, table):
+    s = jnp.minimum(r[:, None], c[None, :])
+    return decode(codes, table) * s
+
+
+# --------------------------------------------------------------------------
+# Reference AdamW (paper Eq. 1 + decoupled weight decay), matching
+# rust/src/optim/adamw.rs::adamw_update_tensor.
+# --------------------------------------------------------------------------
+
+def adamw_step(w, m, v, g, lr, beta1, beta2, eps, weight_decay, t):
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * g * g
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+    mhat = m / bc1
+    vhat = v / bc2
+    w = w - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * w)
+    return w, m, v
+
+
+def fused_adamw4_reference(w, g, m_codes, m_scales, v_codes, v_scales,
+                           lr, beta1, beta2, eps, weight_decay, t,
+                           block: int, m_table, v_table):
+    """One fused 4-bit AdamW step on a flat chunk, entirely via the
+    reference quantizers: dequantize states -> AdamW -> requantize.
+    Mirrors the Pallas kernel contract in quant4.py."""
+    n = w.shape[0]
+    m = dequantize_blockwise(m_codes, m_scales, block, m_table, n)
+    v = dequantize_blockwise(v_codes, v_scales, block, v_table, n)
+    w, m, v = adamw_step(w, m, v, g, lr, beta1, beta2, eps, weight_decay, t)
+    m_codes, m_scales = quantize_blockwise(m, block, m_table)
+    v_codes, v_scales = quantize_blockwise(v, block, v_table)
+    return w, m_codes, m_scales, v_codes, v_scales

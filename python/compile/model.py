@@ -1,0 +1,139 @@
+"""Layer-2: the JAX transformer LM (fwd + bwd), lowered once by aot.py.
+
+The architecture and parameter ordering mirror the rust builtin engine
+(`rust/src/train/transformer.rs` / `TransformerConfig::param_specs`)
+exactly: GPT-style pre-LN decoder, learned positional embeddings, ReLU
+MLP, separate LM head, LN eps 1e-5. The rust coordinator feeds parameters
+positionally in this order and receives (loss, *grads) back.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+LN_EPS = 1e-5
+
+
+@dataclass(frozen=True)
+class Config:
+    vocab: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_layers: int
+    max_seq: int
+
+    @staticmethod
+    def tiny():
+        return Config(vocab=256, d_model=64, n_heads=4, d_ff=256,
+                      n_layers=2, max_seq=32)
+
+    @staticmethod
+    def small():
+        return Config(vocab=512, d_model=128, n_heads=8, d_ff=512,
+                      n_layers=4, max_seq=64)
+
+
+def param_specs(cfg: Config):
+    """(name, shape) list, same order as the rust inventory."""
+    d = cfg.d_model
+    specs = [("tok_emb", (cfg.vocab, d)), ("pos_emb", (cfg.max_seq, d))]
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}."
+        specs += [
+            (p + "ln1.g", (d,)), (p + "ln1.b", (d,)),
+            (p + "attn.wq", (d, d)), (p + "attn.wk", (d, d)),
+            (p + "attn.wv", (d, d)), (p + "attn.wo", (d, d)),
+            (p + "ln2.g", (d,)), (p + "ln2.b", (d,)),
+            (p + "mlp.fc1", (d, cfg.d_ff)), (p + "mlp.b1", (cfg.d_ff,)),
+            (p + "mlp.fc2", (cfg.d_ff, d)), (p + "mlp.b2", (d,)),
+        ]
+    specs += [("ln_f.g", (d,)), ("ln_f.b", (d,)), ("lm_head", (d, cfg.vocab))]
+    return specs
+
+
+def init_params(cfg: Config, key):
+    """GPT-2-style init, matching the rust initializer's structure (not its
+    RNG stream — cross-engine tests compare behaviour, not bits)."""
+    params = []
+    std, resid_std = 0.02, 0.02 / (2.0 * cfg.n_layers) ** 0.5
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".g"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".b", ".b1", ".b2")) or ".ln" in name:
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            s = resid_std if ("wo" in name or "fc2" in name) else std
+            params.append(jax.random.normal(sub, shape, jnp.float32) * s)
+    return params
+
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + LN_EPS) * g + b
+
+
+def forward_loss(cfg: Config, params, tokens):
+    """Mean next-token cross-entropy. `tokens`: int32 [B, T+1]."""
+    d, heads = cfg.d_model, cfg.n_heads
+    hs = d // heads
+    inp = tokens[:, :-1]
+    tgt = tokens[:, 1:]
+    bsz, t_len = inp.shape
+
+    it = iter(params)
+    tok_emb = next(it)
+    pos_emb = next(it)
+    x = tok_emb[inp] + pos_emb[:t_len][None, :, :]
+
+    mask = jnp.tril(jnp.ones((t_len, t_len), bool))
+    for _ in range(cfg.n_layers):
+        g1, b1 = next(it), next(it)
+        wq, wk, wv, wo = next(it), next(it), next(it), next(it)
+        g2, b2 = next(it), next(it)
+        fc1, bb1, fc2, bb2 = next(it), next(it), next(it), next(it)
+
+        a = _layernorm(x, g1, b1)
+        q = (a @ wq).reshape(bsz, t_len, heads, hs)
+        k = (a @ wk).reshape(bsz, t_len, heads, hs)
+        v = (a @ wv).reshape(bsz, t_len, heads, hs)
+        scores = jnp.einsum("bthd,buhd->bhtu", q, k) / jnp.sqrt(
+            jnp.asarray(hs, jnp.float32))
+        scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhtu,buhd->bthd", probs, v).reshape(bsz, t_len, d)
+        x = x + attn @ wo
+
+        a2 = _layernorm(x, g2, b2)
+        h = jax.nn.relu(a2 @ fc1 + bb1)
+        x = x + (h @ fc2 + bb2)
+
+    gf, bf = next(it), next(it)
+    lm_head = next(it)
+    xf = _layernorm(x, gf, bf)
+    logits = xf @ lm_head
+
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def make_train_step(cfg: Config):
+    """(tokens, *params) -> (loss, *grads). Positional signature so the
+    HLO parameter order is explicit for the rust runtime."""
+    def step(tokens, *params):
+        loss, grads = jax.value_and_grad(
+            lambda ps: forward_loss(cfg, ps, tokens))(list(params))
+        return (loss, *grads)
+    return step
+
+
+def make_eval_loss(cfg: Config):
+    def ev(tokens, *params):
+        return (forward_loss(cfg, list(params), tokens),)
+    return ev

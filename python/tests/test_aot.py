@@ -1,0 +1,49 @@
+"""AOT lowering smoke tests: HLO text is produced, parses basic sanity,
+and the golden-vector generator is self-consistent."""
+
+import json
+
+import numpy as np
+
+from compile import aot, model
+
+
+def test_train_step_lowers_to_hlo_text():
+    lowered = aot.lower_train_step(model.Config.tiny(), batch=2)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32" in text
+    # One HLO parameter per model tensor + tokens.
+    n_params = len(model.param_specs(model.Config.tiny()))
+    assert text.count("parameter(") >= n_params + 1
+
+
+def test_fused_adamw4_lowers_with_static_shapes():
+    lowered = aot.lower_fused_adamw4(512)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "u8[512" in text.replace(" ", "")
+
+
+def test_golden_cases_internally_consistent():
+    g = aot.golden_cases()
+    assert len(g["cases"]) >= 5
+    for case in g["cases"]:
+        n = int(np.prod(case["shape"]))
+        assert len(case["input"]) == n
+        assert len(case["codes"]) == n
+        assert len(case["dequant"]) == n
+        bits = case["scheme"]["bits"]
+        assert max(case["codes"]) < (1 << bits)
+        # Dequantized magnitude never exceeds the input magnitude bound.
+        bound = max(abs(v) for v in case["input"]) * 1.0001 + 1e-12
+        assert all(abs(v) <= bound for v in case["dequant"])
+    # Tables present and sorted.
+    for name, tab in g["tables"].items():
+        assert tab == sorted(tab), name
+
+
+def test_golden_json_serializable():
+    text = json.dumps(aot.golden_cases())
+    assert len(text) > 1000
+    json.loads(text)

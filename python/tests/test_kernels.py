@@ -1,0 +1,154 @@
+"""Pallas kernels vs the pure-jnp oracle, swept with hypothesis."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant4, ref
+
+MAPS = [("de", 4, True), ("de0", 4, False), ("linear", 4, False),
+        ("de", 8, True), ("de", 8, False)]
+
+
+def _rand_array(n, seed, scale_mix=True):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n).astype(np.float32)
+    if scale_mix:
+        # Inject outliers and dead zones like real moment tensors.
+        x[:: max(1, n // 7)] *= 100.0
+        x[1:: max(1, n // 5)] *= 1e-6
+        if n > 3:
+            x[3] = 0.0
+    return x
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    map_idx=st.integers(min_value=0, max_value=len(MAPS) - 1),
+    block=st.sampled_from([32, 128, 256]),
+)
+def test_quantize_matches_ref(blocks, seed, map_idx, block):
+    kind, bits, signed = MAPS[map_idx]
+    table = ref.build_map(kind, bits, signed)
+    n = blocks * block
+    x = _rand_array(n, seed)
+    if not signed:
+        x = np.abs(x)
+    c_k, s_k = quant4.quantize_blockwise(jnp.asarray(x), table, block=block)
+    c_r, s_r = ref.quantize_blockwise(x, block, table)
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dequantize_roundtrip_bounded(blocks, seed):
+    table = ref.build_map("de", 4, True)
+    n = blocks * 128
+    x = _rand_array(n, seed, scale_mix=False)
+    codes, scales = quant4.quantize_blockwise(jnp.asarray(x), table)
+    y = np.asarray(quant4.dequantize_blockwise(codes, scales, table))
+    # Error bounded by half the largest map gap times the block scale.
+    gaps = np.diff(np.asarray(table))
+    per = np.repeat(np.asarray(scales), 128)[:n]
+    bound = per * (gaps.max() / 2 + 1e-6) + 1e-7
+    assert (np.abs(x - y) <= bound).all()
+
+
+def test_dequantize_matches_ref_exactly():
+    table = ref.build_map("linear", 4, False)
+    x = np.abs(_rand_array(512, 7))
+    codes, scales = ref.quantize_blockwise(x, 128, table)
+    y_k = np.asarray(quant4.dequantize_blockwise(
+        jnp.asarray(np.asarray(codes)), jnp.asarray(np.asarray(scales)), table))
+    y_r = np.asarray(ref.dequantize_blockwise(codes, scales, 128, table, 512))
+    np.testing.assert_array_equal(y_k, y_r)
+
+
+def test_zero_block_is_safe():
+    table = ref.build_map("linear", 4, False)
+    x = np.zeros(256, np.float32)
+    codes, scales = quant4.quantize_blockwise(jnp.asarray(x), table)
+    y = np.asarray(quant4.dequantize_blockwise(codes, scales, table))
+    assert np.isfinite(y).all()
+    np.testing.assert_array_equal(y, x)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    t=st.integers(min_value=1, max_value=50),
+)
+def test_fused_adamw4_matches_reference(seed, t):
+    rng = np.random.RandomState(seed)
+    n = 256
+    mt = ref.build_map("de", 4, True)
+    vt = ref.build_map("linear", 4, False)
+    w = rng.randn(n).astype(np.float32)
+    g = rng.randn(n).astype(np.float32) * 0.1
+    mc, ms = ref.quantize_blockwise(rng.randn(n).astype(np.float32) * 0.01,
+                                    128, mt)
+    vc, vs = ref.quantize_blockwise(
+        (rng.randn(n).astype(np.float32) * 0.01) ** 2, 128, vt)
+    lr, b1, b2, eps, wd = 1e-3, 0.9, 0.999, 1e-6, 0.01
+    hyper = np.array([lr, b1, b2, eps, wd, 1 - b1**t, 1 - b2**t, 0.0],
+                     np.float32)
+    out = quant4.fused_adamw4_chunk(
+        jnp.asarray(w), jnp.asarray(g), mc, ms, vc, vs, jnp.asarray(hyper))
+    expect = ref.fused_adamw4_reference(
+        w, g, np.asarray(mc), np.asarray(ms), np.asarray(vc), np.asarray(vs),
+        lr, b1, b2, eps, wd, t, 128, mt, vt)
+    names = ["w", "m_codes", "m_scales", "v_codes", "v_scales"]
+    for a, b, name in zip(out, expect, names):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype == np.uint8:
+            np.testing.assert_array_equal(a, b, err_msg=name)
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7,
+                                       err_msg=name)
+
+
+def test_fused_adamw4_descends_quadratic():
+    # Drive the fused kernel as a real optimizer for 200 steps.
+    n = 256
+    rng = np.random.RandomState(0)
+    target = rng.randn(n).astype(np.float32)
+    w = np.zeros(n, np.float32)
+    mt = ref.build_map("de", 4, True)
+    vt = ref.build_map("linear", 4, False)
+    mc, ms = ref.quantize_blockwise(np.zeros(n, np.float32), 128, mt)
+    vc, vs = ref.quantize_blockwise(np.zeros(n, np.float32), 128, vt)
+    w_j, mc, ms, vc, vs = (jnp.asarray(w), jnp.asarray(np.asarray(mc)),
+                           jnp.asarray(np.asarray(ms)),
+                           jnp.asarray(np.asarray(vc)),
+                           jnp.asarray(np.asarray(vs)))
+    lr, b1, b2, eps, wd = 0.05, 0.9, 0.999, 1e-6, 0.0
+    for t in range(1, 201):
+        g = w_j - jnp.asarray(target)
+        hyper = jnp.asarray(
+            np.array([lr, b1, b2, eps, wd, 1 - b1**t, 1 - b2**t, 0],
+                     np.float32))
+        w_j, mc, ms, vc, vs = quant4.fused_adamw4_chunk(
+            w_j, g, mc, ms, vc, vs, hyper)
+    rel = float(jnp.sum((w_j - target) ** 2) / jnp.sum(target ** 2))
+    assert rel < 5e-2, rel
+
+
+def test_rank1_ref_tighter_than_per_tensor():
+    rng = np.random.RandomState(3)
+    x = (rng.randn(32, 24).astype(np.float32) * 1e-3) ** 2
+    x[:, 5] += 1.0
+    table = ref.build_map("linear", 4, False)
+    codes, r, c = ref.quantize_rank1(x, table)
+    deq = np.asarray(ref.dequantize_rank1(codes, r, c, table))
+    err_r1 = np.abs(deq - x).mean()
+    pt_codes = ref.encode(x / np.abs(x).max(), table)
+    deq_pt = np.asarray(ref.decode(pt_codes, table)) * np.abs(x).max()
+    err_pt = np.abs(deq_pt - x).mean()
+    assert err_r1 < err_pt

@@ -1,0 +1,67 @@
+"""Quantization-mapping construction invariants (paper App. E.2)."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 5, 6, 8])
+def test_linear_unsigned(bits):
+    t = ref.build_map("linear", bits, False)
+    assert len(t) == 1 << bits
+    assert t[0] == pytest.approx(1.0 / (1 << bits))
+    assert t[-1] == 1.0
+    assert (t > 0).all(), "linear map excludes zero by construction"
+    assert (np.diff(t) > 0).all()
+
+
+def test_linear4_min_positive_matches_paper():
+    # Paper §4.1: smallest representable of 4-bit Linear is 0.0625.
+    t = ref.build_map("linear", 4, False)
+    assert t[0] == pytest.approx(0.0625)
+
+
+def test_de0_min_positive_matches_paper():
+    # Paper §4.1: smallest representable of 4-bit DE-0 is 0.0033.
+    t = ref.build_map("de0", 4, False)
+    assert min(v for v in t if v > 0) == pytest.approx(0.00325, abs=1e-6)
+
+
+@pytest.mark.parametrize("bits", [3, 4, 8])
+@pytest.mark.parametrize("signed", [False, True])
+def test_de_counts_and_extremes(bits, signed):
+    t = ref.build_map("de", bits, signed)
+    assert len(t) == 1 << bits
+    assert t[-1] == 1.0
+    assert 0.0 in t
+    if signed:
+        assert t[0] > -1.0, "signed DE is asymmetric: -1 not representable"
+
+
+def test_de0_drops_exactly_zero():
+    de = ref.build_map("de", 4, False)
+    de0 = ref.build_map("de0", 4, False)
+    assert len(de0) == len(de) - 1
+    assert 0.0 in de and 0.0 not in de0
+    assert set(np.asarray(de0)) == set(np.asarray(de)) - {0.0}
+
+
+def test_signed_de4_known_values():
+    # From the paper's construction: +/-{0.0055, 0.0325, 0.0775, 0.2125,
+    # 0.4375, 0.6625, 0.8875}, 0 and 1.
+    t = ref.build_map("de", 4, True)
+    expect = sorted(
+        [0.0, 1.0]
+        + [s * v for v in (0.2125, 0.4375, 0.6625, 0.8875,
+                           0.0325, 0.0775, 0.0055) for s in (1, -1)]
+    )
+    np.testing.assert_allclose(t, np.asarray(expect, np.float32), rtol=1e-6)
+
+
+def test_encode_is_nearest():
+    t = ref.build_map("de", 4, True)
+    grid = np.linspace(-1.2, 1.2, 4001).astype(np.float32)
+    codes = np.asarray(ref.encode(grid, t))
+    brute = np.argmin(np.abs(grid[:, None] - t[None, :]), axis=1)
+    np.testing.assert_array_equal(codes, brute)

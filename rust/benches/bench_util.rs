@@ -1,0 +1,67 @@
+//! Minimal benchmarking harness shared by the `[[bench]]` binaries.
+//! (The offline crate set has no `criterion`; `cargo bench` runs these as
+//! `harness = false` executables.)
+//!
+//! Method: warm up, then run timed batches until both a minimum wall time
+//! and a minimum iteration count are reached; report mean / p50 / p95 per
+//! iteration and derived throughput.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_line(&self, bytes_per_iter: Option<u64>) -> String {
+        let mut s = format!(
+            "{:<44} {:>10.2} us/iter  p50 {:>8.2}  p95 {:>8.2}  ({} iters)",
+            self.name,
+            self.mean_ns / 1e3,
+            self.p50_ns / 1e3,
+            self.p95_ns / 1e3,
+            self.iters
+        );
+        if let Some(b) = bytes_per_iter {
+            let gbs = b as f64 / self.mean_ns; // bytes/ns == GB/s
+            s.push_str(&format!("  {:>7.2} GB/s", gbs));
+        }
+        s
+    }
+}
+
+/// Benchmark a closure. `min_seconds` of measurement after 3 warmup calls.
+pub fn bench(name: &str, min_seconds: f64, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..3 {
+        f();
+    }
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < min_seconds || samples_ns.len() < 10 {
+        let t = Instant::now();
+        f();
+        samples_ns.push(t.elapsed().as_nanos() as f64);
+        if samples_ns.len() > 100_000 {
+            break;
+        }
+    }
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples_ns.len();
+    let mean = samples_ns.iter().sum::<f64>() / n as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        p50_ns: samples_ns[n / 2],
+        p95_ns: samples_ns[(n as f64 * 0.95) as usize % n],
+    }
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

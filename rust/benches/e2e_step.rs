@@ -1,0 +1,61 @@
+//! Bench: end-to-end training step (fwd + bwd + optimizer) through the
+//! builtin engine and, when artifacts exist, through the PJRT engine.
+//! This is the whole-stack number the §Perf pass optimizes.
+
+mod bench_util;
+
+use bench_util::{bench, section};
+use lowbit_opt::data::MarkovCorpus;
+use lowbit_opt::model::TransformerConfig;
+use lowbit_opt::optim::{build, Hyper, Param};
+use lowbit_opt::train::TransformerEngine;
+use lowbit_opt::util::rng::Pcg64;
+
+fn main() {
+    let cfg = TransformerConfig::tiny();
+    let engine = TransformerEngine::new(cfg);
+    let corpus = MarkovCorpus::new(cfg.vocab, 3);
+    let mut rng = Pcg64::seeded(1);
+    let batch = corpus.sample(8, cfg.max_seq, &mut rng);
+
+    section("builtin engine (tiny config, batch 8)");
+    for preset in ["adamw32", "adamw8", "adamw4", "factor4"] {
+        let mut params: Vec<Param> = cfg.init_params(&mut rng);
+        let mut opt = build(preset, Hyper::default()).unwrap();
+        let res = bench(&format!("builtin fwd+bwd+{preset}"), 2.0, || {
+            let (_, grads) = engine.loss_and_grads(&params, &batch);
+            opt.step(&mut params, &grads, 1e-3);
+        });
+        println!("{}", res.throughput_line(None));
+    }
+    {
+        let params: Vec<Param> = cfg.init_params(&mut rng);
+        let res = bench("builtin fwd+bwd only", 2.0, || {
+            let (l, g) = engine.loss_and_grads(&params, &batch);
+            std::hint::black_box((l, g));
+        });
+        println!("{}", res.throughput_line(None));
+    }
+
+    let dir = lowbit_opt::util::artifacts_dir();
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        if let Ok(rt) = lowbit_opt::runtime::Runtime::cpu() {
+            if let Ok(step) = lowbit_opt::runtime::PjrtTrainStep::load(&rt, &dir, "tiny") {
+                section("PJRT engine (AOT artifact, batch 8)");
+                let acfg = step.entry.cfg;
+                let params: Vec<Param> = {
+                    let mut r = Pcg64::seeded(2);
+                    acfg.init_params(&mut r)
+                };
+                let corpus = MarkovCorpus::new(acfg.vocab, 3);
+                let mut r = Pcg64::seeded(4);
+                let b = corpus.sample(step.entry.batch, acfg.max_seq, &mut r);
+                let res = bench("pjrt fwd+bwd (train_step_tiny)", 2.0, || {
+                    let out = step.step(&params, &b).expect("pjrt step");
+                    std::hint::black_box(&out);
+                });
+                println!("{}", res.throughput_line(None));
+            }
+        }
+    }
+}

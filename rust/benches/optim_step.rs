@@ -1,0 +1,63 @@
+//! Bench: full optimizer step time per preset on a realistic parameter
+//! set (the small transformer config). Regenerates the measured half of
+//! the paper's Tab. 4 and quantifies the unfused 4-bit overhead.
+
+mod bench_util;
+
+use bench_util::{bench, section};
+use lowbit_opt::model::TransformerConfig;
+use lowbit_opt::optim::{build, Hyper, Param};
+use lowbit_opt::tensor::Tensor;
+use lowbit_opt::util::rng::Pcg64;
+
+fn main() {
+    let cfg = TransformerConfig::small();
+    let mut rng = Pcg64::seeded(5);
+    let grads: Vec<Tensor> = cfg
+        .param_specs()
+        .iter()
+        .map(|(_, _, s)| Tensor::randn(s, 0.01, &mut rng))
+        .collect();
+    let n_params: usize = cfg.n_params();
+    println!("model: {} params ({} tensors)", n_params, grads.len());
+
+    section("optimizer step (full parameter set)");
+    for preset in ["adamw32", "sgdm", "adafactor", "adafactor-b0", "sm3", "adamw8", "adamw4", "adamw4-sr", "factor4"] {
+        let mut params: Vec<Param> = cfg.init_params(&mut rng);
+        let mut opt = build(preset, Hyper::default()).unwrap();
+        opt.step(&mut params, &grads, 1e-3); // lazy init outside the timer
+        let res = bench(preset, 1.0, || {
+            opt.step(&mut params, &grads, 1e-3);
+        });
+        let ns_per_param = res.mean_ns / n_params as f64;
+        println!(
+            "{}  {:>6.2} ns/param  state {} B",
+            res.throughput_line(None),
+            ns_per_param,
+            opt.state_bytes()
+        );
+    }
+
+    // The fused PJRT path, when artifacts are present.
+    let dir = lowbit_opt::util::artifacts_dir();
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        if let Ok(rt) = lowbit_opt::runtime::Runtime::cpu() {
+            if let Ok(mut fused) =
+                lowbit_opt::runtime::fused::FusedAdamW4::load(&rt, &dir, Hyper::default())
+            {
+                section("fused AOT path (PJRT; paper's '(fused)' rows)");
+                let mut params: Vec<Param> = cfg.init_params(&mut rng);
+                fused.step(&mut params, &grads, 1e-3);
+                use lowbit_opt::optim::Optimizer;
+                let res = bench("adamw4-fused (pjrt)", 2.0, || {
+                    fused.step(&mut params, &grads, 1e-3);
+                });
+                println!(
+                    "{}  {:>6.2} ns/param",
+                    res.throughput_line(None),
+                    res.mean_ns / n_params as f64
+                );
+            }
+        }
+    }
+}

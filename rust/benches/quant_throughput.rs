@@ -1,0 +1,72 @@
+//! Bench: quantize + dequantize throughput by bitwidth, mapping, and
+//! normalization (the L3 hot path; supports the paper's Tab. 4 time
+//! discussion). Reported in GB/s of f32 input processed.
+
+mod bench_util;
+
+use bench_util::{bench, section};
+use lowbit_opt::quant::{MapKind, NormKind, Quantizer};
+use lowbit_opt::tensor::Tensor;
+use lowbit_opt::util::rng::Pcg64;
+
+fn main() {
+    let mut rng = Pcg64::seeded(7);
+    let n = 1 << 20; // 1M elements = 4 MB
+    let x2d = Tensor::randn(&[1024, 1024], 0.02, &mut rng);
+    let bytes = (n * 4) as u64;
+
+    section("quantize (1M f32)");
+    let cases: Vec<(&str, Quantizer)> = vec![
+        ("B128/DE 4-bit signed (m, ours)", Quantizer::first_moment_4bit()),
+        ("Rank-1/Linear 4-bit (v, ours)", Quantizer::second_moment_4bit()),
+        (
+            "B128/Linear 4-bit",
+            Quantizer::new(NormKind::Block(128), MapKind::Linear, 4, false),
+        ),
+        ("B2048/DE 8-bit signed (Dettmers)", Quantizer::moment_8bit(true)),
+        (
+            "B2048/DE 4-bit signed",
+            Quantizer::new(NormKind::Block(2048), MapKind::DynExp, 4, true),
+        ),
+        (
+            "per-tensor/Linear 4-bit",
+            Quantizer::new(NormKind::PerTensor, MapKind::Linear, 4, false),
+        ),
+        (
+            "B128/DE+SR 4-bit (stochastic)",
+            Quantizer::first_moment_4bit().with_stochastic(true),
+        ),
+    ];
+    for (name, q) in &cases {
+        let map = q.build_map();
+        let mut r = Pcg64::seeded(1);
+        let res = bench(name, 0.5, || {
+            let qt = q.quantize_with(&x2d, &map, &mut r);
+            std::hint::black_box(&qt);
+        });
+        println!("{}", res.throughput_line(Some(bytes)));
+    }
+
+    section("dequantize (1M codes)");
+    for (name, q) in &cases {
+        let map = q.build_map();
+        let mut r = Pcg64::seeded(1);
+        let qt = q.quantize_with(&x2d, &map, &mut r);
+        let res = bench(name, 0.5, || {
+            let t = qt.dequantize_with(&map);
+            std::hint::black_box(&t);
+        });
+        println!("{}", res.throughput_line(Some(bytes)));
+    }
+
+    section("roundtrip (quantize + dequantize)");
+    let q = Quantizer::first_moment_4bit();
+    let map = q.build_map();
+    let mut r = Pcg64::seeded(1);
+    let res = bench("B128/DE 4-bit roundtrip", 0.5, || {
+        let qt = q.quantize_with(&x2d, &map, &mut r);
+        let t = qt.dequantize_with(&map);
+        std::hint::black_box(&t);
+    });
+    println!("{}", res.throughput_line(Some(bytes)));
+}

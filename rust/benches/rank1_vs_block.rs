@@ -1,0 +1,45 @@
+//! Bench: rank-1 vs block-wise normalization — compute cost and memory
+//! overhead across tensor shapes (the paper's §4.2 trade-off discussion).
+
+mod bench_util;
+
+use bench_util::{bench, section};
+use lowbit_opt::quant::normalize::{compute_scales, NormKind};
+use lowbit_opt::quant::{MapKind, Quantizer};
+use lowbit_opt::tensor::Tensor;
+use lowbit_opt::util::rng::Pcg64;
+
+fn main() {
+    let mut rng = Pcg64::seeded(9);
+    section("scale computation cost by shape");
+    for shape in [
+        vec![4096usize, 64],
+        vec![512, 512],
+        vec![64, 4096],
+        vec![1024, 1024],
+    ] {
+        let x = Tensor::randn(&shape, 0.02, &mut rng);
+        for kind in [NormKind::Block(128), NormKind::Block(2048), NormKind::Rank1] {
+            let name = format!("{:?} {}", shape, kind.name());
+            let res = bench(&name, 0.3, || {
+                let s = compute_scales(&x, kind);
+                std::hint::black_box(&s);
+            });
+            let overhead = compute_scales(&x, kind).overhead_bytes();
+            println!("{}  scale-overhead {} B", res.throughput_line(None), overhead);
+        }
+    }
+
+    section("full quantize cost: Rank-1/Linear vs B128/Linear (1024x1024)");
+    let x = Tensor::randn(&[1024, 1024], 0.02, &mut rng).map(|v| v.abs());
+    for (name, norm) in [("Rank-1", NormKind::Rank1), ("B128", NormKind::Block(128))] {
+        let q = Quantizer::new(norm, MapKind::Linear, 4, false);
+        let map = q.build_map();
+        let mut r = Pcg64::seeded(2);
+        let res = bench(name, 0.5, || {
+            let qt = q.quantize_with(&x, &map, &mut r);
+            std::hint::black_box(&qt);
+        });
+        println!("{}", res.throughput_line(Some(4 << 20)));
+    }
+}

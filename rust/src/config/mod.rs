@@ -1,0 +1,261 @@
+//! The configuration system for the `lowbit` launcher: a TOML-subset
+//! parser (sections, `key = value` with strings / numbers / booleans),
+//! typed run configs with validation, and `--set section.key=value` CLI
+//! overrides. No external crates — the offline set ships no `serde`.
+
+use crate::model::TransformerConfig;
+use crate::optim::Hyper;
+use std::collections::BTreeMap;
+
+/// Raw parsed config: section -> key -> value (string form).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RawConfig {
+    pub sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl RawConfig {
+    /// Parse a TOML-subset document: `[section]` headers, `key = value`,
+    /// `#` comments. Values keep their string form; typed getters convert.
+    pub fn parse(text: &str) -> Result<RawConfig, String> {
+        let mut cfg = RawConfig::default();
+        let mut section = String::from("root");
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                Some(i) if !raw[..i].contains('"') => &raw[..i],
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let v = v.trim().trim_matches('"').to_string();
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<RawConfig, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    /// Apply a `section.key=value` override.
+    pub fn set(&mut self, dotted: &str) -> Result<(), String> {
+        let (path, value) = dotted
+            .split_once('=')
+            .ok_or_else(|| format!("override '{dotted}' must be section.key=value"))?;
+        let (section, key) = path
+            .split_once('.')
+            .ok_or_else(|| format!("override '{dotted}' must be section.key=value"))?;
+        self.sections
+            .entry(section.trim().to_string())
+            .or_default()
+            .insert(key.trim().to_string(), value.trim().to_string());
+        Ok(())
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("{section}.{key} = '{v}' is not an integer")),
+        }
+    }
+
+    pub fn get_f32(&self, section: &str, key: &str, default: f32) -> Result<f32, String> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("{section}.{key} = '{v}' is not a number")),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> Result<bool, String> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(v) => Err(format!("{section}.{key} = '{v}' is not a boolean")),
+        }
+    }
+}
+
+/// Typed training-run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: TransformerConfig,
+    pub optimizer: String,
+    pub hyper: Hyper,
+    pub steps: usize,
+    pub batch: usize,
+    pub warmup: usize,
+    pub seed: u64,
+    pub engine: String, // "builtin" | "pjrt"
+    pub artifact_model: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> RunConfig {
+        RunConfig {
+            model: TransformerConfig::tiny(),
+            optimizer: "adamw4".to_string(),
+            hyper: Hyper::default(),
+            steps: 200,
+            batch: 8,
+            warmup: 20,
+            seed: 0,
+            engine: "builtin".to_string(),
+            artifact_model: "tiny".to_string(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from a raw config + defaults, with validation.
+    pub fn from_raw(raw: &RawConfig) -> Result<RunConfig, String> {
+        let d = RunConfig::default();
+        let model = TransformerConfig {
+            vocab: raw.get_usize("model", "vocab", d.model.vocab)?,
+            d_model: raw.get_usize("model", "d_model", d.model.d_model)?,
+            n_heads: raw.get_usize("model", "n_heads", d.model.n_heads)?,
+            d_ff: raw.get_usize("model", "d_ff", d.model.d_ff)?,
+            n_layers: raw.get_usize("model", "n_layers", d.model.n_layers)?,
+            max_seq: raw.get_usize("model", "max_seq", d.model.max_seq)?,
+        };
+        let hyper = Hyper {
+            lr: raw.get_f32("optimizer", "lr", d.hyper.lr)?,
+            beta1: raw.get_f32("optimizer", "beta1", d.hyper.beta1)?,
+            beta2: raw.get_f32("optimizer", "beta2", d.hyper.beta2)?,
+            eps: raw.get_f32("optimizer", "eps", d.hyper.eps)?,
+            weight_decay: raw.get_f32("optimizer", "weight_decay", d.hyper.weight_decay)?,
+        };
+        let cfg = RunConfig {
+            model,
+            optimizer: raw
+                .get("optimizer", "name")
+                .unwrap_or(&d.optimizer)
+                .to_string(),
+            hyper,
+            steps: raw.get_usize("train", "steps", d.steps)?,
+            batch: raw.get_usize("train", "batch", d.batch)?,
+            warmup: raw.get_usize("train", "warmup", d.warmup)?,
+            seed: raw.get_usize("train", "seed", d.seed as usize)? as u64,
+            engine: raw.get("train", "engine").unwrap_or(&d.engine).to_string(),
+            artifact_model: raw
+                .get("train", "artifact_model")
+                .unwrap_or(&d.artifact_model)
+                .to_string(),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.model.d_model % self.model.n_heads != 0 {
+            return Err(format!(
+                "model.d_model ({}) must be divisible by model.n_heads ({})",
+                self.model.d_model, self.model.n_heads
+            ));
+        }
+        if !matches!(self.engine.as_str(), "builtin" | "pjrt") {
+            return Err(format!("train.engine '{}' must be builtin|pjrt", self.engine));
+        }
+        if crate::optim::build(&self.optimizer, self.hyper).is_none()
+            && self.optimizer != "adamw4-fused"
+        {
+            return Err(format!("unknown optimizer '{}'", self.optimizer));
+        }
+        if self.steps == 0 || self.batch == 0 {
+            return Err("train.steps and train.batch must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+[model]
+d_model = 64
+n_heads = 4   # heads
+vocab = 256
+
+[train]
+steps = 50
+engine = "builtin"
+
+[optimizer]
+name = "adamw4"
+lr = 2e-3
+"#;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let raw = RawConfig::parse(SAMPLE).unwrap();
+        assert_eq!(raw.get("model", "d_model"), Some("64"));
+        assert_eq!(raw.get("optimizer", "name"), Some("adamw4"));
+        assert_eq!(raw.get_f32("optimizer", "lr", 0.0).unwrap(), 2e-3);
+    }
+
+    #[test]
+    fn run_config_from_raw_with_defaults() {
+        let raw = RawConfig::parse(SAMPLE).unwrap();
+        let cfg = RunConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.model.d_model, 64);
+        assert_eq!(cfg.steps, 50);
+        assert_eq!(cfg.model.d_ff, TransformerConfig::tiny().d_ff); // default
+        assert_eq!(cfg.hyper.lr, 2e-3);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut raw = RawConfig::parse(SAMPLE).unwrap();
+        raw.set("train.steps=99").unwrap();
+        raw.set("optimizer.name=adamw32").unwrap();
+        let cfg = RunConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.steps, 99);
+        assert_eq!(cfg.optimizer, "adamw32");
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut raw = RawConfig::parse(SAMPLE).unwrap();
+        raw.set("model.n_heads=7").unwrap();
+        assert!(RunConfig::from_raw(&raw).is_err());
+
+        let mut raw2 = RawConfig::parse(SAMPLE).unwrap();
+        raw2.set("optimizer.name=bogus").unwrap();
+        assert!(RunConfig::from_raw(&raw2).is_err());
+
+        let mut raw3 = RawConfig::parse(SAMPLE).unwrap();
+        raw3.set("train.engine=gpu").unwrap();
+        assert!(RunConfig::from_raw(&raw3).is_err());
+    }
+
+    #[test]
+    fn bad_syntax_reports_line() {
+        let err = RawConfig::parse("[a]\nkey value").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+}

@@ -1,0 +1,302 @@
+//! Seeded synthetic workloads standing in for the paper's datasets (see
+//! DESIGN.md §3 for the substitution rationale). Three generators:
+//!
+//! * [`MarkovCorpus`] — a zipfian-unigram / sparse-Markov token stream.
+//!   Learnable next-token structure; drives the NLG/QA/instruction-tuning
+//!   surrogates and the end-to-end LM example. Anisotropic token
+//!   frequencies are what give moment tensors their row/column outliers.
+//! * [`ClusterData`] — anisotropic Gaussian blobs for classification (the
+//!   CLS/NLU surrogate).
+//! * [`copy_task_batch`] — a copy/translation sequence task (MT surrogate):
+//!   the second half of each sequence deterministically transforms the
+//!   first half, so a causal LM must learn an input-dependent mapping.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// A batch of token sequences: `tokens[b][t]`, targets are the next token.
+#[derive(Clone, Debug)]
+pub struct LmBatch {
+    pub tokens: Vec<Vec<u32>>, // [batch][seq+1]
+}
+
+impl LmBatch {
+    pub fn batch_size(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.tokens.first().map_or(0, |t| t.len() - 1)
+    }
+}
+
+/// A classification batch.
+#[derive(Clone, Debug)]
+pub struct ClsBatch {
+    pub x: Tensor,      // [batch, d_in]
+    pub y: Vec<usize>,  // [batch]
+}
+
+/// Zipfian-unigram, sparse-Markov synthetic corpus.
+///
+/// Token `t+1` is drawn from a per-token sparse transition row with
+/// probability `markov_weight`, otherwise from a global zipfian unigram.
+/// The chain is fixed at construction, so the distribution is stationary
+/// and a trained LM's loss has a well-defined floor.
+pub struct MarkovCorpus {
+    pub vocab: usize,
+    markov_weight: f64,
+    /// Per-token successor candidates (sparse transition support).
+    successors: Vec<Vec<u32>>,
+    zipf_weights: Vec<f64>,
+}
+
+impl MarkovCorpus {
+    pub fn new(vocab: usize, seed: u64) -> MarkovCorpus {
+        let mut rng = Pcg64::new(seed, 101);
+        let branch = 4usize;
+        let successors = (0..vocab)
+            .map(|_| (0..branch).map(|_| rng.below(vocab) as u32).collect())
+            .collect();
+        // Zipf(1.0) unigram.
+        let zipf_weights = (0..vocab).map(|i| 1.0 / (i + 1) as f64).collect();
+        MarkovCorpus {
+            vocab,
+            markov_weight: 0.75,
+            successors,
+            zipf_weights,
+        }
+    }
+
+    fn next_token(&self, cur: u32, rng: &mut Pcg64) -> u32 {
+        if rng.next_f64() < self.markov_weight {
+            let succ = &self.successors[cur as usize];
+            succ[rng.below(succ.len())]
+        } else {
+            rng.categorical(&self.zipf_weights) as u32
+        }
+    }
+
+    /// Sample a batch of `batch` sequences of `seq` tokens (plus one for
+    /// the shifted target).
+    pub fn sample(&self, batch: usize, seq: usize, rng: &mut Pcg64) -> LmBatch {
+        let tokens = (0..batch)
+            .map(|_| {
+                let mut s = Vec::with_capacity(seq + 1);
+                let mut cur = rng.categorical(&self.zipf_weights) as u32;
+                s.push(cur);
+                for _ in 0..seq {
+                    cur = self.next_token(cur, rng);
+                    s.push(cur);
+                }
+                s
+            })
+            .collect();
+        LmBatch { tokens }
+    }
+
+    /// Entropy floor estimate (nats/token) via Monte-Carlo — a trained LM
+    /// cannot do better than this; used to sanity-check convergence.
+    pub fn entropy_floor(&self, samples: usize, rng: &mut Pcg64) -> f64 {
+        // For each sampled current token, the next-token distribution is
+        // markov_weight * uniform(successors) + (1-w) * zipf.
+        let zipf_total: f64 = self.zipf_weights.iter().sum();
+        let mut acc = 0.0;
+        for _ in 0..samples {
+            let cur = rng.categorical(&self.zipf_weights);
+            let succ = &self.successors[cur];
+            // Entropy of the mixture, summed over support (approximate:
+            // zipf mass spread over vocab, successors get spikes).
+            let mut h = 0.0;
+            for tok in 0..self.vocab {
+                let spike = succ.iter().filter(|&&s| s as usize == tok).count() as f64
+                    / succ.len() as f64;
+                let p = self.markov_weight * spike
+                    + (1.0 - self.markov_weight) * self.zipf_weights[tok] / zipf_total;
+                if p > 0.0 {
+                    h -= p * p.ln();
+                }
+            }
+            acc += h;
+        }
+        acc / samples as f64
+    }
+}
+
+/// Anisotropic Gaussian blobs: class `c` has a random mean and a shared
+/// diagonal covariance with a few high-variance directions (which is what
+/// pushes outlier structure into first-layer moments).
+pub struct ClusterData {
+    pub d_in: usize,
+    pub n_classes: usize,
+    means: Vec<Vec<f32>>,
+    scales: Vec<f32>,
+}
+
+impl ClusterData {
+    pub fn new(d_in: usize, n_classes: usize, seed: u64) -> ClusterData {
+        Self::with_spread(d_in, n_classes, seed, 2.0)
+    }
+
+    /// `mean_scale` controls class separation (smaller = harder task).
+    pub fn with_spread(d_in: usize, n_classes: usize, seed: u64, mean_scale: f32) -> ClusterData {
+        let mut rng = Pcg64::new(seed, 202);
+        let means = (0..n_classes)
+            .map(|_| (0..d_in).map(|_| rng.normal() * mean_scale).collect())
+            .collect();
+        // A few coordinates get 8x the noise scale.
+        let scales = (0..d_in)
+            .map(|_| if rng.next_f64() < 0.1 { 8.0 } else { 1.0 })
+            .collect();
+        ClusterData {
+            d_in,
+            n_classes,
+            means,
+            scales,
+        }
+    }
+
+    pub fn sample(&self, batch: usize, rng: &mut Pcg64) -> ClsBatch {
+        let mut x = Tensor::zeros(&[batch, self.d_in]);
+        let mut y = Vec::with_capacity(batch);
+        for b in 0..batch {
+            let c = rng.below(self.n_classes);
+            y.push(c);
+            for j in 0..self.d_in {
+                x.data[b * self.d_in + j] =
+                    self.means[c][j] + rng.normal() * self.scales[j];
+            }
+        }
+        ClsBatch { x, y }
+    }
+
+    /// Bayes-ish reference accuracy via nearest-mean classification on a
+    /// fresh sample (upper bound proxy for learned accuracy).
+    pub fn nearest_mean_accuracy(&self, n: usize, rng: &mut Pcg64) -> f64 {
+        let batch = self.sample(n, rng);
+        let mut correct = 0usize;
+        for b in 0..n {
+            let mut best = 0;
+            let mut bestd = f64::INFINITY;
+            for (c, mean) in self.means.iter().enumerate() {
+                let mut d = 0.0f64;
+                for j in 0..self.d_in {
+                    let diff = (batch.x.data[b * self.d_in + j] - mean[j]) as f64
+                        / self.scales[j] as f64;
+                    d += diff * diff;
+                }
+                if d < bestd {
+                    bestd = d;
+                    best = c;
+                }
+            }
+            if best == batch.y[b] {
+                correct += 1;
+            }
+        }
+        correct as f64 / n as f64
+    }
+}
+
+/// Copy/translation task (MT surrogate): tokens `[0, T/2)` are random from
+/// the source half of the vocab; tokens `[T/2, T)` are `f(token[t - T/2])`
+/// where `f` is a fixed random bijection into the target half. A causal LM
+/// must learn `f` to predict the second half.
+pub fn copy_task_batch(
+    vocab: usize,
+    batch: usize,
+    seq: usize,
+    seed: u64,
+    rng: &mut Pcg64,
+) -> LmBatch {
+    assert!(vocab >= 4 && seq >= 2);
+    let half_v = vocab / 2;
+    // Fixed bijection derived from seed.
+    let mut perm: Vec<u32> = (0..half_v as u32).collect();
+    let mut prng = Pcg64::new(seed, 303);
+    prng.shuffle(&mut perm);
+    let half_t = seq / 2;
+    let tokens = (0..batch)
+        .map(|_| {
+            let mut s = Vec::with_capacity(seq + 1);
+            for _ in 0..half_t {
+                s.push(rng.below(half_v) as u32);
+            }
+            for t in 0..(seq + 1 - half_t) {
+                let src = s[t % half_t];
+                s.push(half_v as u32 + perm[src as usize]);
+            }
+            s
+        })
+        .collect();
+    LmBatch { tokens }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markov_deterministic_given_seed() {
+        let c1 = MarkovCorpus::new(64, 9);
+        let c2 = MarkovCorpus::new(64, 9);
+        let mut r1 = Pcg64::seeded(1);
+        let mut r2 = Pcg64::seeded(1);
+        assert_eq!(c1.sample(2, 8, &mut r1).tokens, c2.sample(2, 8, &mut r2).tokens);
+    }
+
+    #[test]
+    fn markov_tokens_in_vocab() {
+        let c = MarkovCorpus::new(32, 3);
+        let mut rng = Pcg64::seeded(0);
+        let b = c.sample(4, 16, &mut rng);
+        assert_eq!(b.batch_size(), 4);
+        assert_eq!(b.seq_len(), 16);
+        for s in &b.tokens {
+            assert_eq!(s.len(), 17);
+            assert!(s.iter().all(|&t| (t as usize) < 32));
+        }
+    }
+
+    #[test]
+    fn markov_entropy_below_uniform() {
+        let c = MarkovCorpus::new(64, 5);
+        let mut rng = Pcg64::seeded(0);
+        let h = c.entropy_floor(200, &mut rng);
+        let uniform = (64f64).ln();
+        assert!(h < uniform * 0.8, "floor {h} vs uniform {uniform}");
+        assert!(h > 0.5);
+    }
+
+    #[test]
+    fn clusters_learnable() {
+        let d = ClusterData::new(16, 4, 7);
+        let mut rng = Pcg64::seeded(0);
+        let acc = d.nearest_mean_accuracy(500, &mut rng);
+        assert!(acc > 0.5, "nearest-mean acc {acc} should beat chance 0.25");
+        let b = d.sample(8, &mut rng);
+        assert_eq!(b.x.shape, vec![8, 16]);
+        assert!(b.y.iter().all(|&y| y < 4));
+    }
+
+    #[test]
+    fn copy_task_is_deterministic_mapping() {
+        let mut rng = Pcg64::seeded(0);
+        let b = copy_task_batch(32, 4, 16, 11, &mut rng);
+        for s in &b.tokens {
+            // Second half must be a function of the first half: same source
+            // token -> same target token.
+            let half = 8;
+            for t in 0..half.min(s.len() - half) {
+                for u in 0..half.min(s.len() - half) {
+                    if s[t] == s[u] {
+                        assert_eq!(s[half + t], s[half + u]);
+                    }
+                }
+            }
+            // Halves use disjoint vocab ranges.
+            assert!(s[..half].iter().all(|&t| t < 16));
+            assert!(s[half..].iter().all(|&t| t >= 16 && t < 32));
+        }
+    }
+}

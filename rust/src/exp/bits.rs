@@ -1,0 +1,58 @@
+//! Extension experiment (paper §7 future-work direction): how low can the
+//! bitwidth go? Sweeps 2..8 bits for both moments with the paper's final
+//! scheme (m: B128/DE, v: Rank-1-or-B128/Linear) on the standard LM
+//! workload. The paper stops at 4; this shows where the cliff is.
+
+use super::common::{compressed, exp_seed, metric_cell, run_lm, ExpContext, LmWorkload};
+use crate::optim::lowbit::QuantPolicy;
+use crate::optim::Hyper;
+use crate::quant::{MapKind, NormKind, Quantizer};
+use crate::util::table::Table;
+
+fn policy_for_bits(bits: u8) -> QuantPolicy {
+    // Signed DE needs >= 3 bits; at 2 bits fall back to signed linear.
+    let m_map = if bits >= 3 { MapKind::DynExp } else { MapKind::Linear };
+    let m = Quantizer::new(NormKind::Block(128), m_map, bits, true);
+    let v = Quantizer::new(NormKind::Rank1, MapKind::Linear, bits, false);
+    QuantPolicy::bit4().with_m(Some(m)).with_v(Some(v))
+}
+
+pub fn run(ctx: &ExpContext) -> Vec<Table> {
+    let w = LmWorkload::standard();
+    let hp = Hyper::default();
+    let mut table = Table::new(
+        "Bitwidth sweep (extension) — paper scheme at 2..8 bits \
+         (score = held-out next-token acc %)",
+        &["Bits", "Unstable(%)", "Score", "State bytes/param"],
+    );
+    let steps = ctx.lm_steps();
+    for bits in [2u8, 3, 4, 5, 6, 8] {
+        let mut scores = Vec::new();
+        let mut unstable = 0usize;
+        let mut state_bytes = 0usize;
+        let mut n_params = 0usize;
+        for s in 0..ctx.seeds() {
+            let mut opt = compressed(hp, policy_for_bits(bits));
+            let out = run_lm(&w, &mut opt, steps, exp_seed(&format!("bits/{bits}"), s));
+            state_bytes = out.report.state_bytes;
+            n_params = out.params.iter().map(|p| p.tensor.numel()).sum();
+            if out.report.diverged {
+                unstable += 1;
+            } else {
+                scores.push(out.eval_acc * 100.0);
+            }
+        }
+        let score = if scores.is_empty() {
+            "diverged".to_string()
+        } else {
+            metric_cell(&scores, 1)
+        };
+        table.row(&[
+            format!("{bits}"),
+            format!("{:.0}", 100.0 * unstable as f64 / ctx.seeds() as f64),
+            score,
+            format!("{:.2}", state_bytes as f64 / n_params as f64),
+        ]);
+    }
+    vec![table]
+}

@@ -1,0 +1,309 @@
+//! Shared experiment infrastructure: standard workloads (LM, CLS,
+//! copy-translation), metric extraction, and result persistence.
+//!
+//! Scale note (DESIGN.md §3): at toy scale the paper's ≤4096 "don't
+//! quantize small tensors" rule would exempt *every* tensor, so the
+//! convergence experiments drop it (`min_quant_size = 0`) — the rule is a
+//! memory optimization, not a stability requirement. Memory experiments
+//! (Tab. 4/5) keep the rule, exactly as implemented.
+
+use crate::data::{copy_task_batch, ClusterData, LmBatch, MarkovCorpus};
+use crate::model::{MlpConfig, TransformerConfig};
+use crate::optim::lowbit::{CompressedAdamW, QuantPolicy};
+use crate::optim::{build, Hyper, Optimizer, Param};
+use crate::train::{LrSchedule, MlpEngine, Trainer, TrainReport, TransformerEngine};
+use crate::util::json::Json;
+use crate::util::rng::{seed_from, Pcg64};
+use crate::util::table::Table;
+
+/// Global experiment context.
+#[derive(Clone, Debug)]
+pub struct ExpContext {
+    /// Quick mode: fewer steps/seeds; used by tests and smoke runs.
+    pub quick: bool,
+    pub out_dir: String,
+}
+
+impl ExpContext {
+    pub fn new(quick: bool) -> ExpContext {
+        ExpContext {
+            quick,
+            out_dir: crate::util::results_dir(),
+        }
+    }
+
+    pub fn seeds(&self) -> usize {
+        if self.quick {
+            2
+        } else {
+            5
+        }
+    }
+
+    pub fn lm_steps(&self) -> usize {
+        if self.quick {
+            80
+        } else {
+            300
+        }
+    }
+
+    pub fn cls_steps(&self) -> usize {
+        if self.quick {
+            120
+        } else {
+            400
+        }
+    }
+
+    /// Persist a set of tables under `results/<id>.json` and return the
+    /// rendered text.
+    pub fn save(&self, id: &str, tables: &[Table]) -> String {
+        let mut rendered = String::new();
+        let mut arr = Vec::new();
+        for t in tables {
+            rendered.push_str(&t.render());
+            arr.push(t.to_json());
+        }
+        let mut doc = Json::obj();
+        doc.set("experiment", Json::Str(id.to_string()));
+        doc.set("quick", Json::Bool(self.quick));
+        doc.set("tables", Json::Arr(arr));
+        let path = format!("{}/{id}.json", self.out_dir);
+        if let Err(e) = crate::util::write_file(&path, &doc.pretty()) {
+            crate::util::log(1, "exp", &format!("could not write {path}: {e}"));
+        }
+        rendered
+    }
+}
+
+/// The standard small LM workload used by tables 1/2/3/6 and the figures.
+#[derive(Clone, Copy)]
+pub struct LmWorkload {
+    pub cfg: TransformerConfig,
+    pub batch: usize,
+    pub corpus_seed: u64,
+    pub lr: f32,
+}
+
+impl LmWorkload {
+    pub fn standard() -> LmWorkload {
+        LmWorkload {
+            cfg: TransformerConfig {
+                vocab: 256,
+                d_model: 64,
+                n_heads: 4,
+                d_ff: 128,
+                n_layers: 2,
+                max_seq: 24,
+            },
+            batch: 8,
+            corpus_seed: 1234,
+            lr: 2e-3,
+        }
+    }
+
+    /// Scaled family used by the Tab. 3 reproduction. Smaller vocab than
+    /// `standard()` so each scale trains to a meaningful accuracy within
+    /// the experiment budget.
+    pub fn scaled(depth: usize, width: usize) -> LmWorkload {
+        let mut w = LmWorkload::standard();
+        w.cfg = TransformerConfig {
+            vocab: 64,
+            d_model: width,
+            n_heads: (width / 16).max(1),
+            d_ff: width * 2,
+            n_layers: depth,
+            max_seq: 24,
+        };
+        w
+    }
+}
+
+/// Outcome of one LM run with evaluation.
+pub struct LmOutcome {
+    pub report: TrainReport,
+    /// Held-out next-token top-1 accuracy (the QA/F1 surrogate).
+    pub eval_acc: f64,
+    /// Held-out mean loss.
+    pub eval_loss: f64,
+    pub params: Vec<Param>,
+}
+
+/// Train an LM workload with the given optimizer; evaluate on held-out
+/// batches.
+pub fn run_lm(
+    w: &LmWorkload,
+    opt: &mut dyn Optimizer,
+    steps: usize,
+    seed: u64,
+) -> LmOutcome {
+    let engine = TransformerEngine::new(w.cfg);
+    let corpus = MarkovCorpus::new(w.cfg.vocab, w.corpus_seed);
+    let mut init_rng = Pcg64::new(seed, 11);
+    let mut params = w.cfg.init_params(&mut init_rng);
+    let mut data_rng = Pcg64::new(seed, 12);
+    let trainer = Trainer::new(
+        steps,
+        LrSchedule::LinearWarmupDecay {
+            peak: w.lr,
+            warmup: steps / 10 + 1,
+            total: steps,
+        },
+    );
+    let mut engine_fn = |p: &[Param], b: &LmBatch| engine.loss_and_grads(p, b);
+    let report = trainer.run(&mut params, opt, &mut engine_fn, |_| {
+        corpus.sample(w.batch, w.cfg.max_seq, &mut data_rng)
+    });
+    let (eval_loss, eval_acc) = lm_eval(&engine, &params, &corpus, w, seed ^ 0xEEEE, 6);
+    LmOutcome {
+        report,
+        eval_acc,
+        eval_loss,
+        params,
+    }
+}
+
+/// Held-out evaluation: mean loss + next-token top-1 accuracy.
+pub fn lm_eval(
+    engine: &TransformerEngine,
+    params: &[Param],
+    corpus: &MarkovCorpus,
+    w: &LmWorkload,
+    seed: u64,
+    batches: usize,
+) -> (f64, f64) {
+    let mut rng = Pcg64::new(seed, 99);
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for _ in 0..batches {
+        let batch = corpus.sample(w.batch, w.cfg.max_seq, &mut rng);
+        loss_sum += engine.loss(params, &batch) as f64;
+        let (c, t) = next_token_accuracy(engine, params, &batch);
+        correct += c;
+        total += t;
+    }
+    (loss_sum / batches as f64, correct as f64 / total as f64)
+}
+
+/// Top-1 next-token accuracy of a trained LM on one batch.
+pub fn next_token_accuracy(
+    engine: &TransformerEngine,
+    params: &[Param],
+    batch: &LmBatch,
+) -> (usize, usize) {
+    // Greedy: for each position, rerun loss with logits argmax — the
+    // builtin engine exposes loss only, so take a cheap path: compare
+    // per-position losses is overkill; instead reuse the forward pass by
+    // scoring each candidate? Too slow. We re-implement a light forward
+    // via the engine's loss on crafted batches would be wasteful, so the
+    // engine provides logits through loss_and_grads' softmax — simplest
+    // correct approach: use a 1-step readout below.
+    engine.next_token_accuracy(params, batch)
+}
+
+/// Build a `CompressedAdamW` with the convergence-experiment policy
+/// adjustments (min_quant_size = 0).
+pub fn compressed(hp: Hyper, mut policy: QuantPolicy) -> CompressedAdamW {
+    policy.min_quant_size = 0;
+    CompressedAdamW::new(hp, policy)
+}
+
+/// Build a preset optimizer with experiment-scale adjustments applied.
+pub fn preset_optimizer(name: &str, hp: Hyper) -> Box<dyn Optimizer> {
+    match name {
+        "adamw8" => Box::new(compressed(hp, QuantPolicy::bit8())),
+        "adamw4" => Box::new(compressed(hp, QuantPolicy::bit4())),
+        "factor4" => Box::new(compressed(hp, QuantPolicy::bit4().factored())),
+        other => build(other, hp).unwrap_or_else(|| panic!("unknown preset {other}")),
+    }
+}
+
+/// Classification workload (CLS/NLU surrogates).
+pub struct ClsOutcome {
+    pub report: TrainReport,
+    pub accuracy: f64,
+}
+
+pub fn run_cls(
+    cfg: MlpConfig,
+    data_seed: u64,
+    opt: &mut dyn Optimizer,
+    steps: usize,
+    seed: u64,
+) -> ClsOutcome {
+    run_cls_spread(cfg, data_seed, opt, steps, seed, 2.0)
+}
+
+/// `spread` < 2.0 makes the task harder (class means closer together).
+pub fn run_cls_spread(
+    cfg: MlpConfig,
+    data_seed: u64,
+    opt: &mut dyn Optimizer,
+    steps: usize,
+    seed: u64,
+    spread: f32,
+) -> ClsOutcome {
+    let engine = MlpEngine::new(cfg);
+    let data = ClusterData::with_spread(cfg.d_in, cfg.n_classes, data_seed, spread);
+    let mut init_rng = Pcg64::new(seed, 21);
+    let mut params = cfg.init_params(&mut init_rng);
+    let mut data_rng = Pcg64::new(seed, 22);
+    let trainer = Trainer::new(steps, LrSchedule::Constant(3e-3));
+    let mut engine_fn =
+        |p: &[Param], b: &crate::data::ClsBatch| engine.loss_and_grads(p, b);
+    let report = trainer.run(&mut params, opt, &mut engine_fn, |_| {
+        data.sample(32, &mut data_rng)
+    });
+    let mut eval_rng = Pcg64::new(seed ^ 0xAAAA, 23);
+    let test = data.sample(600, &mut eval_rng);
+    let accuracy = engine.accuracy(&params, &test);
+    ClsOutcome { report, accuracy }
+}
+
+/// Copy-translation workload (MT surrogate): returns accuracy on the
+/// "translated" second half.
+pub fn run_copy_task(opt: &mut dyn Optimizer, steps: usize, seed: u64) -> (TrainReport, f64) {
+    let cfg = TransformerConfig {
+        vocab: 64,
+        d_model: 64,
+        n_heads: 4,
+        d_ff: 128,
+        n_layers: 2,
+        max_seq: 16,
+    };
+    let engine = TransformerEngine::new(cfg);
+    let mut init_rng = Pcg64::new(seed, 31);
+    let mut params = cfg.init_params(&mut init_rng);
+    let mut data_rng = Pcg64::new(seed, 32);
+    let task_seed = 777u64;
+    let trainer = Trainer::new(
+        steps,
+        LrSchedule::LinearWarmupDecay {
+            peak: 3e-3,
+            warmup: steps / 10 + 1,
+            total: steps,
+        },
+    );
+    let mut engine_fn = |p: &[Param], b: &LmBatch| engine.loss_and_grads(p, b);
+    let report = trainer.run(&mut params, opt, &mut engine_fn, |_| {
+        copy_task_batch(cfg.vocab, 8, cfg.max_seq, task_seed, &mut data_rng)
+    });
+    // Accuracy on the second (translated) half of held-out sequences.
+    let mut eval_rng = Pcg64::new(seed ^ 0x7777, 33);
+    let batch = copy_task_batch(cfg.vocab, 16, cfg.max_seq, task_seed, &mut eval_rng);
+    let acc = engine.second_half_accuracy(&params, &batch);
+    (report, acc)
+}
+
+/// Mean ± std cell over per-seed metric values, flagging divergence.
+pub fn metric_cell(values: &[f64], decimals: usize) -> String {
+    let s = crate::util::stats::summarize(values);
+    crate::util::table::pm(s.mean(), s.std(), decimals)
+}
+
+/// Derive per-(row, seed) seeds deterministically from a label.
+pub fn exp_seed(label: &str, seed_idx: usize) -> u64 {
+    seed_from(&format!("{label}/seed{seed_idx}"))
+}

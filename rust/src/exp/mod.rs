@@ -1,0 +1,64 @@
+//! The paper-experiment harness: one module per table/figure of the
+//! evaluation section (see DESIGN.md §5 for the index). Each experiment
+//! prints the paper's rows and writes `results/<id>.json`.
+
+pub mod common;
+pub mod bits;
+pub mod figs;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+
+pub use common::ExpContext;
+
+use crate::util::table::Table;
+
+/// All experiment ids in paper order.
+pub fn ids() -> Vec<&'static str> {
+    vec![
+        "table1", "table2", "table3", "table4", "table5", "table6",
+        "fig1", "fig2", "fig3", "fig4", "bits",
+    ]
+}
+
+/// Run one experiment by id; returns the rendered tables.
+pub fn run(id: &str, ctx: &ExpContext) -> Option<String> {
+    let tables: Vec<Table> = match id {
+        "table1" => table1::run(ctx),
+        "table2" => table2::run(ctx),
+        "table3" => table3::run(ctx),
+        "table4" => table4::run(ctx),
+        "table5" => table5::run(ctx),
+        "table6" => table6::run(ctx),
+        "fig1" => figs::fig1(ctx),
+        "fig2" => figs::fig2(ctx),
+        "fig3" => figs::fig3(ctx),
+        "fig4" => figs::fig4(ctx),
+        "bits" => bits::run(ctx),
+        _ => return None,
+    };
+    Some(ctx.save(id, &tables))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_rejected() {
+        let ctx = ExpContext::new(true);
+        assert!(run("table99", &ctx).is_none());
+    }
+
+    #[test]
+    fn table5_runs_instantly() {
+        // The analytic experiments must run fast and produce rows.
+        let ctx = ExpContext::new(true);
+        let out = run("table5", &ctx).unwrap();
+        assert!(out.contains("LLaMA-7B"));
+        assert!(out.contains("24 GB"));
+    }
+}

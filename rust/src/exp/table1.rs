@@ -1,0 +1,134 @@
+//! Tab. 1 reproduction: ablation of second-moment quantization schemes.
+//!
+//! Paper setting: GPT-2 Medium on E2E-NLG, BLEU + Unstable%. Ours: the
+//! standard synthetic LM workload; "score" is held-out next-token
+//! accuracy (higher = better, BLEU surrogate) and Unstable% is the
+//! fraction of seeds whose run diverged (same definition as the paper).
+//! The first moment is fixed at 4-bit B2048/DE (the "barely 4-bit" of the
+//! paper's first row); rows vary only the second-moment scheme.
+//!
+//! Expected shape: DE rows (zero point) are unstable or degraded; the
+//! stable-embedding mitigation helps but does not fix non-embedding
+//! layers; DE-0 / Linear rows are stable; Rank-1/Linear is best.
+
+use super::common::{compressed, exp_seed, metric_cell, run_lm, ExpContext, LmWorkload};
+use crate::optim::lowbit::QuantPolicy;
+use crate::optim::Hyper;
+use crate::quant::{MapKind, NormKind, Quantizer};
+use crate::util::table::Table;
+
+struct Row {
+    norm: &'static str,
+    map: &'static str,
+    stable_embed: bool,
+    factored: bool,
+    sr: bool,
+}
+
+fn rows() -> Vec<Row> {
+    let r = |norm, map, stable_embed, factored, sr| Row {
+        norm,
+        map,
+        stable_embed,
+        factored,
+        sr,
+    };
+    vec![
+        r("B2048", "DE", false, false, false),
+        r("B2048", "DE", true, false, false),
+        r("B128", "DE", false, false, false),
+        r("B128", "DE", false, false, true),
+        r("B128", "DE", true, false, false),
+        r("B2048", "DE-0", false, false, false),
+        r("B2048", "DE-0", true, false, false),
+        r("B128", "DE-0", false, false, false),
+        r("Rank-1", "DE-0", false, false, false),
+        r("Rank-1", "Linear", false, false, false),
+        r("Rank-1", "Linear", false, true, false),
+    ]
+}
+
+fn policy_for(row: &Row) -> QuantPolicy {
+    let norm = NormKind::parse(row.norm).expect("norm");
+    let map = MapKind::parse(row.map).expect("map");
+    let mut v = Quantizer::new(norm, map, 4, false);
+    if row.sr {
+        v = v.with_stochastic(true);
+    }
+    // First moment fixed: 4-bit B2048/DE (paper's baseline row).
+    let m = Quantizer::new(NormKind::Block(2048), MapKind::DynExp, 4, true);
+    let mut p = QuantPolicy::bit4()
+        .with_m(Some(m))
+        .with_v(Some(v))
+        .with_skip_embedding(row.stable_embed);
+    if row.factored {
+        p = p.factored();
+    }
+    p
+}
+
+pub fn run(ctx: &ExpContext) -> Vec<Table> {
+    let mut w = LmWorkload::standard();
+    // More aggressive LR than the other experiments: the zero-point
+    // instability the paper reports at GPT-2-M scale only surfaces at toy
+    // scale when updates are large enough for a v->0 block to kick the
+    // weights hard (see DESIGN.md §3).
+    w.lr = 6e-3;
+    let hp = Hyper::default();
+    let mut table = Table::new(
+        "Table 1 — second-moment quantizer ablation (synthetic LM; \
+         score = held-out next-token acc %, paper metric: BLEU)",
+        &["Normalization", "Mapping", "StableEmb", "Factorized", "Unstable(%)", "Score"],
+    );
+    let steps = ctx.lm_steps();
+    for row in rows() {
+        let label = format!(
+            "table1/{}-{}-se{}-f{}-sr{}",
+            row.norm, row.map, row.stable_embed, row.factored, row.sr
+        );
+        let mut scores = Vec::new();
+        let mut unstable = 0usize;
+        for s in 0..ctx.seeds() {
+            let mut opt = compressed(hp, policy_for(&row));
+            let out = run_lm(&w, &mut opt, steps, exp_seed(&label, s));
+            if out.report.diverged {
+                unstable += 1;
+            } else {
+                scores.push(out.eval_acc * 100.0);
+            }
+        }
+        let unstable_pct = 100.0 * unstable as f64 / ctx.seeds() as f64;
+        let score = if scores.is_empty() {
+            "diverged".to_string()
+        } else {
+            metric_cell(&scores, 1)
+        };
+        table.row(&[
+            row.norm.to_string(),
+            if row.sr { format!("{}+SR", row.map) } else { row.map.to_string() },
+            if row.stable_embed { "Yes" } else { "No" }.to_string(),
+            if row.factored { "Yes" } else { "No" }.to_string(),
+            format!("{unstable_pct:.0}"),
+            score,
+        ]);
+    }
+    vec![table]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policies_construct_for_all_rows() {
+        for row in rows() {
+            let p = policy_for(&row);
+            assert_eq!(p.factor_v, row.factored);
+            assert_eq!(p.skip_embedding, row.stable_embed);
+            let v = p.v_quant.unwrap();
+            assert_eq!(v.norm.name(), row.norm);
+            assert_eq!(v.map.name(), row.map);
+            assert_eq!(v.stochastic, row.sr);
+        }
+    }
+}

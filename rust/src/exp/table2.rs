@@ -1,0 +1,86 @@
+//! Tab. 2 reproduction: seven optimizers × five tasks.
+//!
+//! Task surrogates (DESIGN.md §3): NLU/CLS → two classification datasets
+//! (accuracy), NLG → LM score, QA → held-out next-token accuracy on a
+//! second corpus, MT → copy-translation second-half accuracy. Expected
+//! shape: 4-bit AdamW / 4-bit Factor within noise of 32-bit AdamW;
+//! SM3 and Adafactor(β1=0) degrade, most visibly on the CLS surrogate.
+
+use super::common::{
+    exp_seed, metric_cell, preset_optimizer, run_cls, run_cls_spread, run_copy_task, run_lm,
+    ExpContext, LmWorkload,
+};
+use crate::model::MlpConfig;
+use crate::optim::{table2_presets, Hyper};
+use crate::util::table::Table;
+
+fn display(preset: &str) -> &'static str {
+    match preset {
+        "adamw32" => "32-bit AdamW",
+        "adafactor" => "32-bit Adafactor",
+        "adafactor-b0" => "32-bit Adafactor (b1=0)",
+        "sm3" => "32-bit SM3",
+        "adamw8" => "8-bit AdamW",
+        "adamw4" => "4-bit AdamW (ours)",
+        "factor4" => "4-bit Factor (ours)",
+        _ => "?",
+    }
+}
+
+pub fn run(ctx: &ExpContext) -> Vec<Table> {
+    let hp = Hyper::default();
+    let mut table = Table::new(
+        "Table 2 — optimizers across tasks (all metrics: %, higher better; \
+         paper tasks: NLU/CLS/NLG/QA/MT)",
+        &["Optimizer", "NLU", "CLS", "NLG", "QA", "MT"],
+    );
+    let nlu_cfg = MlpConfig {
+        d_in: 24,
+        d_hidden: 64,
+        n_layers: 2,
+        n_classes: 6,
+    };
+    let cls_cfg = MlpConfig {
+        d_in: 32,
+        d_hidden: 96,
+        n_layers: 3,
+        n_classes: 10,
+    };
+    let w_nlg = LmWorkload::standard();
+    let mut w_qa = LmWorkload::standard();
+    w_qa.corpus_seed = 4321;
+
+    for preset in table2_presets() {
+        let mut nlu = Vec::new();
+        let mut cls = Vec::new();
+        let mut nlg = Vec::new();
+        let mut qa = Vec::new();
+        let mut mt = Vec::new();
+        for s in 0..ctx.seeds() {
+            let seed = exp_seed(&format!("table2/{preset}"), s);
+            let mut o = preset_optimizer(preset, hp);
+            nlu.push(run_cls(nlu_cfg, 17, o.as_mut(), ctx.cls_steps(), seed).accuracy * 100.0);
+            let mut o = preset_optimizer(preset, hp);
+            cls.push(
+                run_cls_spread(cls_cfg, 29, o.as_mut(), ctx.cls_steps(), seed ^ 1, 0.9)
+                    .accuracy
+                    * 100.0,
+            );
+            let mut o = preset_optimizer(preset, hp);
+            nlg.push(run_lm(&w_nlg, o.as_mut(), ctx.lm_steps(), seed ^ 2).eval_acc * 100.0);
+            let mut o = preset_optimizer(preset, hp);
+            qa.push(run_lm(&w_qa, o.as_mut(), ctx.lm_steps(), seed ^ 3).eval_acc * 100.0);
+            let mut o = preset_optimizer(preset, hp);
+            mt.push(run_copy_task(o.as_mut(), ctx.lm_steps(), seed ^ 4).1 * 100.0);
+        }
+        table.row(&[
+            display(preset).to_string(),
+            metric_cell(&nlu, 1),
+            metric_cell(&cls, 1),
+            metric_cell(&nlg, 1),
+            metric_cell(&qa, 1),
+            metric_cell(&mt, 1),
+        ]);
+    }
+    vec![table]
+}

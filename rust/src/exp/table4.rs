@@ -1,0 +1,166 @@
+//! Tab. 4 reproduction: memory and time per optimizer.
+//!
+//! Two sub-tables:
+//! 1. **Measured** on this testbed — the small builtin transformer: wall
+//!    time per optimizer step, exact persistent state bytes, and savings
+//!    vs 32-bit. Includes the AOT fused path when artifacts are present.
+//! 2. **Modeled** for the paper's models (LLaMA-7B / RoBERTa-L /
+//!    GPT-2-M): total training memory from the exact state accounting +
+//!    activation model, plus the offload-communication speedup from
+//!    `offload::simulate_step` (the paper's reduced-communication claim).
+
+use super::common::{preset_optimizer, ExpContext};
+use crate::memory::{training_bytes, StatePreset, TrainSetup, GB};
+use crate::model::TransformerConfig;
+use crate::offload::{simulate_step, LinkModel};
+use crate::optim::{Hyper, Optimizer, Param};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+use crate::util::stats::{fmt_bytes, Timer};
+use crate::util::table::Table;
+
+/// Paper-model configs for the modeled sub-table.
+fn paper_models() -> Vec<(&'static str, TransformerConfig)> {
+    vec![
+        ("LLaMA-7B", crate::model::llama_family()[0].cfg),
+        (
+            "RoBERTa-L",
+            TransformerConfig {
+                vocab: 50265,
+                d_model: 1024,
+                n_heads: 16,
+                d_ff: 4096,
+                n_layers: 24,
+                max_seq: 512,
+            },
+        ),
+        (
+            "GPT-2 Medium",
+            TransformerConfig {
+                vocab: 50257,
+                d_model: 1024,
+                n_heads: 16,
+                d_ff: 4096,
+                n_layers: 24,
+                max_seq: 1024,
+            },
+        ),
+    ]
+}
+
+fn measured_table(ctx: &ExpContext) -> Table {
+    let mut table = Table::new(
+        "Table 4a — measured optimizer step time & state memory \
+         (builtin small transformer, this CPU)",
+        &["Optimizer", "Step time (ms)", "State mem", "Saved vs 32-bit"],
+    );
+    let cfg = TransformerConfig::small();
+    let mut rng = Pcg64::seeded(123);
+    let reps = if ctx.quick { 3 } else { 10 };
+    let grads: Vec<Tensor> = cfg
+        .param_specs()
+        .iter()
+        .map(|(_, _, s)| Tensor::randn(s, 0.01, &mut rng))
+        .collect();
+    let hp = Hyper::default();
+    let mut baseline_bytes = 0usize;
+    for preset in ["adamw32", "adamw8", "adamw4", "factor4"] {
+        let mut params: Vec<Param> = cfg.init_params(&mut rng);
+        let mut opt = preset_optimizer(preset, hp);
+        // Warm-up step (lazy init + map build).
+        opt.step(&mut params, &grads, 1e-3);
+        let timer = Timer::start();
+        for _ in 0..reps {
+            opt.step(&mut params, &grads, 1e-3);
+        }
+        let ms = timer.millis() / reps as f64;
+        let bytes = opt.state_bytes();
+        if preset == "adamw32" {
+            baseline_bytes = bytes;
+        }
+        let saved = if baseline_bytes > 0 {
+            format!(
+                "{} ({:.1}%)",
+                fmt_bytes((baseline_bytes - bytes) as u64),
+                100.0 * (baseline_bytes - bytes) as f64 / baseline_bytes as f64
+            )
+        } else {
+            "-".into()
+        };
+        table.row(&[
+            opt.name(),
+            format!("{ms:.1}"),
+            fmt_bytes(bytes as u64),
+            saved,
+        ]);
+    }
+    // Fused AOT path if artifacts are available.
+    let dir = crate::util::artifacts_dir();
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        if let Ok(rt) = crate::runtime::Runtime::cpu() {
+            if let Ok(mut fused) = crate::runtime::fused::FusedAdamW4::load(&rt, &dir, hp) {
+                let mut params: Vec<Param> = cfg.init_params(&mut rng);
+                fused.step(&mut params, &grads, 1e-3);
+                let timer = Timer::start();
+                for _ in 0..reps {
+                    fused.step(&mut params, &grads, 1e-3);
+                }
+                let ms = timer.millis() / reps as f64;
+                let bytes = fused.state_bytes();
+                table.row(&[
+                    fused.name(),
+                    format!("{ms:.1}"),
+                    fmt_bytes(bytes as u64),
+                    format!(
+                        "{} ({:.1}%)",
+                        fmt_bytes((baseline_bytes.saturating_sub(bytes)) as u64),
+                        100.0 * (baseline_bytes.saturating_sub(bytes)) as f64
+                            / baseline_bytes.max(1) as f64
+                    ),
+                ]);
+            }
+        }
+    }
+    table
+}
+
+fn modeled_table() -> Table {
+    let mut table = Table::new(
+        "Table 4b — modeled training memory & offload step time \
+         (paper models; exact state accounting + activation/link model)",
+        &["Model", "Optimizer", "Total mem", "Saved", "Offload step (rel.)"],
+    );
+    for (name, cfg) in paper_models() {
+        let setup = TrainSetup {
+            batch: 1,
+            seq: 512.min(cfg.max_seq),
+        };
+        // Compute time per step scales with parameter count; calibrated so
+        // LLaMA-7B lands near the paper's measured ~4 s/step on 2xA100.
+        let compute = 4.0 * cfg.n_params() as f64 / 6.9e9;
+        let link = LinkModel::pcie_offload(compute);
+        let base = training_bytes(&cfg, StatePreset::AdamW32, setup);
+        let base_step = simulate_step(&cfg, StatePreset::AdamW32, &link).step_seconds;
+        for preset in [
+            StatePreset::AdamW32,
+            StatePreset::AdamW8,
+            StatePreset::AdamW4,
+            StatePreset::Factor4,
+        ] {
+            let total = training_bytes(&cfg, preset, setup);
+            let step = simulate_step(&cfg, preset, &link).step_seconds;
+            table.row(&[
+                name.to_string(),
+                preset.label().to_string(),
+                format!("{:.2} GB", total as f64 / GB as f64),
+                format!("{:.1}%", 100.0 * (base - total) as f64 / base as f64),
+                format!("{:.2}x", base_step / step),
+            ]);
+        }
+    }
+    table
+}
+
+pub fn run(ctx: &ExpContext) -> Vec<Table> {
+    vec![measured_table(ctx), modeled_table()]
+}

@@ -1,0 +1,25 @@
+//! `lowbit-opt` — a reproduction of *Memory Efficient Optimizers with
+//! 4-bit States* (Li, Chen & Zhu, NeurIPS 2023) as a three-layer
+//! Rust + JAX + Pallas training framework.
+//!
+//! Layer map (see DESIGN.md):
+//! * L1/L2 live in `python/compile/` (Pallas kernels + JAX graphs, AOT
+//!   lowered to HLO text at build time).
+//! * L3 is this crate: quantization engine ([`quant`]), optimizer zoo
+//!   ([`optim`]), builtin training engines ([`train`]), synthetic data
+//!   ([`data`]), the PJRT runtime ([`runtime`]) that executes the AOT
+//!   artifacts, memory accounting ([`memory`]), the offload simulator
+//!   ([`offload`]), and the paper-experiment harness ([`exp`]).
+
+pub mod util;
+pub mod tensor;
+pub mod quant;
+pub mod optim;
+pub mod model;
+pub mod data;
+pub mod train;
+pub mod runtime;
+pub mod memory;
+pub mod offload;
+pub mod config;
+pub mod exp;

@@ -1,0 +1,344 @@
+//! `lowbit` — the launcher CLI for the 4-bit-optimizer training framework.
+//!
+//! Subcommands:
+//!   train    train a transformer LM (builtin or PJRT engine)
+//!   exp      regenerate a paper table/figure (table1..6, fig1..4, all)
+//!   memory   memory estimator / largest-trainable-model search
+//!   inspect  dump quantization map tables and quantizer behaviour
+//!   info     runtime + artifact status
+
+use lowbit_opt::config::{RawConfig, RunConfig};
+use lowbit_opt::data::{LmBatch, MarkovCorpus};
+use lowbit_opt::exp::{self, ExpContext};
+use lowbit_opt::memory::{training_bytes, StatePreset, TrainSetup, GB};
+use lowbit_opt::model::{llama_family, opt_family};
+use lowbit_opt::optim::{Optimizer, Param};
+use lowbit_opt::quant::{MapKind, QuantMap};
+use lowbit_opt::train::{LrSchedule, Trainer, TransformerEngine};
+use lowbit_opt::util::cli::Command;
+use lowbit_opt::util::rng::Pcg64;
+use lowbit_opt::util::stats::fmt_bytes;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&argv[1..]),
+        Some("exp") => cmd_exp(&argv[1..]),
+        Some("memory") => cmd_memory(&argv[1..]),
+        Some("inspect") => cmd_inspect(&argv[1..]),
+        Some("info") => cmd_info(),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "lowbit — memory-efficient 4-bit optimizer training framework\n\n\
+         USAGE: lowbit <subcommand> [options]\n\n\
+         Subcommands:\n\
+         \x20 train    train a transformer LM with any optimizer preset\n\
+         \x20 exp      regenerate a paper table/figure (table1..table6, fig1..fig4, all)\n\
+         \x20 memory   memory estimator + largest-trainable-model search\n\
+         \x20 inspect  print quantization map tables\n\
+         \x20 info     runtime + artifact status\n\n\
+         Run `lowbit <subcommand> --help` for options."
+    );
+}
+
+fn cmd_train(argv: &[String]) -> i32 {
+    let cmd = Command::new("train", "train a transformer LM")
+        .opt("config", "TOML config file", None)
+        .opt(
+            "set",
+            "override, e.g. --set train.steps=100 (comma-separable)",
+            None,
+        )
+        .opt("optimizer", "optimizer preset (overrides config)", None)
+        .opt("steps", "training steps (overrides config)", None)
+        .opt("engine", "builtin | pjrt", None)
+        .opt("seed", "run seed", None)
+        .flag("quiet", "suppress progress logs");
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    if args.has_flag("quiet") {
+        lowbit_opt::util::set_log_level(1);
+    }
+    let mut raw = match args.get("config") {
+        Some(path) => match RawConfig::load(path) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        },
+        None => RawConfig::default(),
+    };
+    if let Some(sets) = args.get("set") {
+        for s in sets.split(',') {
+            if let Err(e) = raw.set(s) {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    for (key, target) in [
+        ("optimizer", "optimizer.name"),
+        ("steps", "train.steps"),
+        ("engine", "train.engine"),
+        ("seed", "train.seed"),
+    ] {
+        if let Some(v) = args.get(key) {
+            raw.set(&format!("{target}={v}")).unwrap();
+        }
+    }
+    let cfg = match RunConfig::from_raw(&raw) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    match run_training(&cfg) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("training failed: {e}");
+            1
+        }
+    }
+}
+
+fn run_training(cfg: &RunConfig) -> anyhow::Result<()> {
+    println!(
+        "model: {} params | optimizer: {} | engine: {} | steps: {}",
+        cfg.model.n_params(),
+        cfg.optimizer,
+        cfg.engine,
+        cfg.steps
+    );
+    let mut rng = Pcg64::seeded(cfg.seed);
+    let schedule = LrSchedule::LinearWarmupDecay {
+        peak: cfg.hyper.lr,
+        warmup: cfg.warmup,
+        total: cfg.steps,
+    };
+    let trainer = Trainer::new(cfg.steps, schedule);
+
+    // Optimizer: presets + the PJRT fused variant.
+    let mut opt: Box<dyn Optimizer> = if cfg.optimizer == "adamw4-fused" {
+        let rt = lowbit_opt::runtime::Runtime::cpu()?;
+        Box::new(lowbit_opt::runtime::fused::FusedAdamW4::load(
+            &rt,
+            &lowbit_opt::util::artifacts_dir(),
+            cfg.hyper,
+        )?)
+    } else {
+        lowbit_opt::optim::build(&cfg.optimizer, cfg.hyper)
+            .ok_or_else(|| anyhow::anyhow!("unknown optimizer {}", cfg.optimizer))?
+    };
+
+    let report = if cfg.engine == "pjrt" {
+        let rt = lowbit_opt::runtime::Runtime::cpu()?;
+        let mut step = lowbit_opt::runtime::PjrtTrainStep::load(
+            &rt,
+            &lowbit_opt::util::artifacts_dir(),
+            &cfg.artifact_model,
+        )?;
+        let acfg = step.entry.cfg;
+        let abatch = step.entry.batch;
+        let mut params = acfg.init_params(&mut rng);
+        step.check_params(&params)?;
+        let mut data_rng = rng.split(1);
+        let corpus = MarkovCorpus::new(acfg.vocab, cfg.seed ^ 0xC0DE);
+        trainer.run(&mut params, opt.as_mut(), &mut step, |_| {
+            corpus.sample(abatch, acfg.max_seq, &mut data_rng)
+        })
+    } else {
+        let corpus = MarkovCorpus::new(cfg.model.vocab, cfg.seed ^ 0xC0DE);
+        let engine = TransformerEngine::new(cfg.model);
+        let mut params = cfg.model.init_params(&mut rng);
+        let mut data_rng = rng.split(1);
+        let mut engine_fn = |p: &[Param], b: &LmBatch| engine.loss_and_grads(p, b);
+        let batch = cfg.batch;
+        let max_seq = cfg.model.max_seq;
+        trainer.run(&mut params, opt.as_mut(), &mut engine_fn, |_| {
+            corpus.sample(batch, max_seq, &mut data_rng)
+        })
+    };
+
+    let probes = 10.min(report.losses.len());
+    for k in 0..probes {
+        let i = k * report.losses.len().saturating_sub(1) / probes.max(1);
+        println!("step {i:>5}  loss {:.4}", report.losses[i]);
+    }
+    println!(
+        "done: {} steps in {:.1}s ({:.1} ms/step) | final loss {:.4} | \
+         diverged: {} | optimizer state: {}",
+        report.steps,
+        report.total_seconds,
+        report.step_seconds * 1e3,
+        report.final_loss,
+        report.diverged,
+        fmt_bytes(report.state_bytes as u64)
+    );
+    Ok(())
+}
+
+fn cmd_exp(argv: &[String]) -> i32 {
+    let cmd = Command::new("exp", "regenerate a paper table/figure")
+        .opt("id", "experiment id (table1..table6, fig1..fig4, all)", Some("all"))
+        .flag("full", "full scale (more steps/seeds; default is quick)");
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let id = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or_else(|| args.get_or("id", "all"))
+        .to_string();
+    let ctx = ExpContext::new(!args.has_flag("full"));
+    let ids: Vec<&str> = if id == "all" { exp::ids() } else { vec![id.as_str()] };
+    for id in ids {
+        eprintln!(
+            "== running {id} ({}) ==",
+            if ctx.quick { "quick" } else { "full" }
+        );
+        match exp::run(id, &ctx) {
+            Some(rendered) => println!("{rendered}"),
+            None => {
+                eprintln!("unknown experiment '{id}'; known: {:?}", exp::ids());
+                return 2;
+            }
+        }
+    }
+    0
+}
+
+fn cmd_memory(argv: &[String]) -> i32 {
+    let cmd = Command::new("memory", "memory estimator")
+        .opt("budget", "GPU memory budget in GB", Some("80"))
+        .opt("batch", "batch size", Some("1"))
+        .opt("seq", "sequence length", Some("512"));
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let setup = TrainSetup {
+        batch: args.get_usize("batch", 1),
+        seq: args.get_usize("seq", 512),
+    };
+    let budget = args.get_usize("budget", 80) as u64 * GB;
+    println!(
+        "budget {} | batch {} | seq {}\n",
+        fmt_bytes(budget),
+        setup.batch,
+        setup.seq
+    );
+    for fam in [opt_family(), llama_family()] {
+        for m in fam {
+            print!("{:<12}", m.name);
+            for preset in [
+                StatePreset::AdamW32,
+                StatePreset::AdamW8,
+                StatePreset::AdamW4,
+                StatePreset::Factor4,
+            ] {
+                let need = training_bytes(&m.cfg, preset, setup);
+                let fit = if need <= budget { "FITS" } else { "over" };
+                print!(
+                    "  {}={:.1}GB {}",
+                    preset.label().split(' ').next().unwrap(),
+                    need as f64 / GB as f64,
+                    fit
+                );
+            }
+            println!();
+        }
+    }
+    0
+}
+
+fn cmd_inspect(argv: &[String]) -> i32 {
+    let cmd =
+        Command::new("inspect", "print quantization map tables").opt("bits", "bitwidth", Some("4"));
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let bits = args.get_usize("bits", 4) as u8;
+    for (kind, name) in [
+        (MapKind::Linear, "Linear"),
+        (MapKind::DynExp, "DE"),
+        (MapKind::DynExpNoZero, "DE-0"),
+    ] {
+        for signed in [false, true] {
+            let m = QuantMap::new(kind, bits, signed);
+            println!(
+                "{name} {bits}-bit {}: {} values, min positive {:.5}",
+                if signed { "signed" } else { "unsigned" },
+                m.len(),
+                m.min_positive()
+            );
+            println!("  {:?}", m.values);
+        }
+    }
+    0
+}
+
+fn cmd_info() -> i32 {
+    println!("lowbit-opt — Memory Efficient Optimizers with 4-bit States (NeurIPS'23)");
+    let dir = lowbit_opt::util::artifacts_dir();
+    let manifest = format!("{dir}/manifest.json");
+    if std::path::Path::new(&manifest).exists() {
+        println!("artifacts: {dir} (present)");
+        match lowbit_opt::runtime::Runtime::cpu() {
+            Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+            Err(e) => println!("PJRT unavailable: {e}"),
+        }
+        match lowbit_opt::runtime::ArtifactManifest::load(&dir) {
+            Ok(m) => {
+                for model in &m.models {
+                    println!(
+                        "  model '{}': {} tensors, batch {}, vocab {}",
+                        model.name,
+                        model.params.len(),
+                        model.batch,
+                        model.cfg.vocab
+                    );
+                }
+                println!(
+                    "  fused_adamw4: chunk {} block {}",
+                    m.fused_chunk, m.fused_block
+                );
+            }
+            Err(e) => println!("  manifest unreadable: {e}"),
+        }
+    } else {
+        println!("artifacts: missing — run `make artifacts`");
+    }
+    0
+}

@@ -1,0 +1,260 @@
+//! Memory accounting: exact optimizer-state sizes per preset (the basis of
+//! the paper's Tab. 4 "Saved Mem.") and a whole-training-footprint
+//! estimator powering the Tab. 5 "largest trainable model" search.
+//!
+//! The state model replicates the implementation rules exactly:
+//! * ≤4096-element tensors stay fp32 (App. D.1);
+//! * the 8-bit baseline keeps embedding states fp32;
+//! * block-wise scales cost 4 bytes per block, rank-1 scales 4 bytes per
+//!   row + column, factored second moments 4 bytes per row + column.
+
+use crate::model::{NamedModel, TransformerConfig};
+use crate::optim::ParamKind;
+
+pub const GB: u64 = 1024 * 1024 * 1024;
+
+/// Optimizer presets the estimator understands (same names as
+/// `optim::build`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StatePreset {
+    AdamW32,
+    AdamW8,
+    AdamW4,
+    Factor4,
+    AdafactorB0,
+}
+
+impl StatePreset {
+    pub fn parse(s: &str) -> Option<StatePreset> {
+        Some(match s {
+            "adamw32" => StatePreset::AdamW32,
+            "adamw8" => StatePreset::AdamW8,
+            "adamw4" => StatePreset::AdamW4,
+            "factor4" => StatePreset::Factor4,
+            "adafactor-b0" => StatePreset::AdafactorB0,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            StatePreset::AdamW32 => "32-bit AdamW",
+            StatePreset::AdamW8 => "8-bit AdamW",
+            StatePreset::AdamW4 => "4-bit AdamW",
+            StatePreset::Factor4 => "4-bit Factor",
+            StatePreset::AdafactorB0 => "Adafactor (b1=0)",
+        }
+    }
+}
+
+/// State bytes for one tensor of `shape` and `kind` under `preset`.
+pub fn tensor_state_bytes(shape: &[usize], kind: ParamKind, preset: StatePreset) -> u64 {
+    let n: u64 = shape.iter().map(|&d| d as u64).product();
+    let dense32 = 2 * 4 * n; // m + v fp32
+    let small = n <= 4096;
+    match preset {
+        StatePreset::AdamW32 => dense32,
+        StatePreset::AdamW8 => {
+            if small || kind == ParamKind::Embedding {
+                dense32
+            } else {
+                // m + v at 1 byte each + B2048 scales (x2).
+                2 * n + 2 * 4 * n.div_ceil(2048)
+            }
+        }
+        StatePreset::AdamW4 => {
+            if small {
+                dense32
+            } else {
+                let m = n.div_ceil(2) + 4 * n.div_ceil(128); // B128/DE
+                let v = if shape.len() >= 2 {
+                    // Rank-1/Linear: codes + row & col stats.
+                    let rows = shape[0] as u64;
+                    let cols = n / rows;
+                    n.div_ceil(2) + 4 * (rows + cols)
+                } else {
+                    n.div_ceil(2) + 4 * n.div_ceil(128) // B128/Linear 1-D
+                };
+                m + v
+            }
+        }
+        StatePreset::Factor4 => {
+            if small {
+                dense32
+            } else {
+                let m = n.div_ceil(2) + 4 * n.div_ceil(128);
+                let v = if shape.len() >= 2 {
+                    let rows = shape[0] as u64;
+                    4 * (rows + n / rows) // factored stats only
+                } else {
+                    n.div_ceil(2) + 4 * n.div_ceil(128)
+                };
+                m + v
+            }
+        }
+        StatePreset::AdafactorB0 => {
+            if shape.len() >= 2 {
+                let rows = shape[0] as u64;
+                4 * (rows + n / rows)
+            } else {
+                4 * n
+            }
+        }
+    }
+}
+
+/// Total optimizer-state bytes for a transformer config.
+pub fn model_state_bytes(cfg: &TransformerConfig, preset: StatePreset) -> u64 {
+    cfg.param_specs()
+        .iter()
+        .map(|(_, kind, shape)| tensor_state_bytes(shape, *kind, preset))
+        .sum()
+}
+
+/// Whole-training memory estimate (bytes) for fine-tuning: fp32 weights +
+/// fp32 gradients + optimizer states + activations. The activation model
+/// assumes no gradient checkpointing and counts the standard per-layer
+/// buffers (residuals, LN outputs, QKV, attention probs, MLP hidden),
+/// which is what dominates at batch 1 / seq 512 in the paper's Tab. 5.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainSetup {
+    pub batch: usize,
+    pub seq: usize,
+}
+
+pub fn activation_bytes(cfg: &TransformerConfig, setup: TrainSetup) -> u64 {
+    let b = setup.batch as u64;
+    let t = setup.seq as u64;
+    let c = cfg.d_model as u64;
+    let f = cfg.d_ff as u64;
+    let h = cfg.n_heads as u64;
+    let l = cfg.n_layers as u64;
+    // Per layer: x_in, ln1, q, k, v, attn_out, x_mid, ln2, h1 (d_ff), out
+    // = 8 tensors of [B,T,C] + 1 of [B,T,F] + probs [B,H,T,T].
+    let per_layer = 8 * b * t * c + b * t * f + b * h * t * t;
+    let logits = b * t * cfg.vocab as u64;
+    4 * (l * per_layer + logits + 2 * b * t * c)
+}
+
+/// Allocator fragmentation + framework/runtime overhead. The paper's
+/// Tab. 4 reports *total* memory including "data, activations, and memory
+/// fragments"; comparing its measured totals against raw tensor bytes for
+/// RoBERTa-L / GPT-2-M / LLaMA-7B gives a consistent ~10% multiplicative
+/// overhead plus ~1.5 GB fixed (CUDA context, workspace buffers). We fold
+/// the same calibration into the estimator so the Tab. 5 search reproduces
+/// the paper's budget boundaries.
+pub fn runtime_overhead(raw: u64) -> u64 {
+    raw + raw / 10 + 3 * GB / 2
+}
+
+pub fn training_bytes(cfg: &TransformerConfig, preset: StatePreset, setup: TrainSetup) -> u64 {
+    let n: u64 = cfg.n_params() as u64;
+    let weights = 4 * n;
+    let grads = 4 * n;
+    let states = model_state_bytes(cfg, preset);
+    runtime_overhead(weights + grads + states + activation_bytes(cfg, setup))
+}
+
+/// The Tab. 5 search: largest model in `family` whose training footprint
+/// fits in `budget_bytes`.
+pub fn largest_trainable(
+    family: &[NamedModel],
+    preset: StatePreset,
+    setup: TrainSetup,
+    budget_bytes: u64,
+) -> Option<&'static str> {
+    let mut best: Option<(&'static str, u64)> = None;
+    for m in family {
+        let need = training_bytes(&m.cfg, preset, setup);
+        if need <= budget_bytes {
+            let n = m.cfg.n_params() as u64;
+            if best.map_or(true, |(_, bn)| n > bn) {
+                best = Some((m.name, n));
+            }
+        }
+    }
+    best.map(|(name, _)| name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{llama_family, opt_family};
+    use crate::optim::{build, Hyper, Optimizer, Param};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn estimator_matches_actual_optimizer_bytes() {
+        // The analytic model must agree exactly with what the real
+        // optimizers report after one step.
+        let cfg = TransformerConfig::tiny();
+        let mut rng = crate::util::rng::Pcg64::seeded(0);
+        for (preset_name, preset) in [
+            ("adamw32", StatePreset::AdamW32),
+            ("adamw8", StatePreset::AdamW8),
+            ("adamw4", StatePreset::AdamW4),
+            ("factor4", StatePreset::Factor4),
+        ] {
+            let mut params: Vec<Param> = cfg.init_params(&mut rng);
+            let grads: Vec<Tensor> = params
+                .iter()
+                .map(|p| Tensor::full(&p.tensor.shape, 0.01))
+                .collect();
+            let mut opt = build(preset_name, Hyper::default()).unwrap();
+            opt.step(&mut params, &grads, 1e-3);
+            let actual = opt.state_bytes() as u64;
+            let predicted = model_state_bytes(&cfg, preset);
+            assert_eq!(
+                actual, predicted,
+                "{preset_name}: actual {actual} vs predicted {predicted}"
+            );
+        }
+    }
+
+    #[test]
+    fn state_bytes_ratios_match_paper() {
+        // Paper: optimizer states 2x smaller for 4-bit vs 8-bit, ~8x vs
+        // 32-bit (modulo fp32-kept small tensors / embeddings).
+        let cfg = llama_family()[0].cfg; // LLaMA-7B
+        let b32 = model_state_bytes(&cfg, StatePreset::AdamW32);
+        let b8 = model_state_bytes(&cfg, StatePreset::AdamW8);
+        let b4 = model_state_bytes(&cfg, StatePreset::AdamW4);
+        let bf = model_state_bytes(&cfg, StatePreset::Factor4);
+        let r84 = b8 as f64 / b4 as f64;
+        assert!((1.6..2.4).contains(&r84), "8-bit/4-bit ratio {r84}");
+        let r324 = b32 as f64 / b4 as f64;
+        assert!((6.0..8.5).contains(&r324), "32-bit/4-bit ratio {r324}");
+        assert!(bf < b4, "factored should beat plain 4-bit");
+    }
+
+    #[test]
+    fn llama7b_fits_80gb_only_with_4bit() {
+        // The paper's headline Tab. 5 row: LLaMA-7B trains on one 80GB GPU
+        // with 4-bit AdamW but not with 32-bit AdamW.
+        let setup = TrainSetup { batch: 1, seq: 512 };
+        let fam = llama_family();
+        let need32 = training_bytes(&fam[0].cfg, StatePreset::AdamW32, setup);
+        let need4 = training_bytes(&fam[0].cfg, StatePreset::AdamW4, setup);
+        assert!(need32 > 80 * GB, "32-bit LLaMA-7B should exceed 80GB: {need32}");
+        assert!(need4 <= 80 * GB, "4-bit LLaMA-7B should fit 80GB: {need4}");
+    }
+
+    #[test]
+    fn opt_family_search_shape() {
+        let setup = TrainSetup { batch: 1, seq: 512 };
+        let fam = opt_family();
+        let best32 = largest_trainable(&fam, StatePreset::AdamW32, setup, 24 * GB);
+        let best4 = largest_trainable(&fam, StatePreset::AdamW4, setup, 24 * GB);
+        // 4-bit must unlock a strictly larger model at 24 GB.
+        let idx = |name: Option<&str>| fam.iter().position(|m| Some(m.name) == name);
+        assert!(idx(best4) > idx(best32), "4-bit {best4:?} vs 32-bit {best32:?}");
+    }
+
+    #[test]
+    fn activation_bytes_scale_with_batch() {
+        let cfg = TransformerConfig::small();
+        let a1 = activation_bytes(&cfg, TrainSetup { batch: 1, seq: 64 });
+        let a4 = activation_bytes(&cfg, TrainSetup { batch: 4, seq: 64 });
+        assert_eq!(a4, a1 * 4);
+    }
+}

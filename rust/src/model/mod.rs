@@ -1,0 +1,322 @@
+//! Model *specifications*: named, classified parameter inventories.
+//!
+//! A spec is enough to (a) allocate and initialize parameters for the
+//! builtin engines, (b) size optimizer states exactly (the paper's memory
+//! accounting), and (c) describe the shapes the AOT compile path lowers.
+//! Includes the OPT / LLaMA family configs used by the Tab. 5 "largest
+//! trainable model" search.
+
+use crate::optim::{Param, ParamKind};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Transformer LM configuration (decoder-only, GPT-style).
+#[derive(Clone, Copy, Debug)]
+pub struct TransformerConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+}
+
+impl TransformerConfig {
+    /// Tiny config for unit tests and fast CPU experiments.
+    pub fn tiny() -> TransformerConfig {
+        TransformerConfig {
+            vocab: 256,
+            d_model: 64,
+            n_heads: 4,
+            d_ff: 256,
+            n_layers: 2,
+            max_seq: 32,
+        }
+    }
+
+    /// Small config for the end-to-end example (few-M params).
+    pub fn small() -> TransformerConfig {
+        TransformerConfig {
+            vocab: 512,
+            d_model: 128,
+            n_heads: 8,
+            d_ff: 512,
+            n_layers: 4,
+            max_seq: 64,
+        }
+    }
+
+    /// ~100M-parameter config (GPT-2-small-like); used by the AOT path
+    /// sizing and the memory estimator, not by the builtin CPU engine.
+    pub fn gpt2_small_like() -> TransformerConfig {
+        TransformerConfig {
+            vocab: 50257,
+            d_model: 768,
+            n_heads: 12,
+            d_ff: 3072,
+            n_layers: 12,
+            max_seq: 1024,
+        }
+    }
+
+    pub fn scaled(depth: usize, width: usize) -> TransformerConfig {
+        TransformerConfig {
+            vocab: 512,
+            d_model: width,
+            n_heads: (width / 16).max(1),
+            d_ff: width * 4,
+            n_layers: depth,
+            max_seq: 64,
+        }
+    }
+
+    /// Parameter inventory: (name, kind, shape). Matches the layout of the
+    /// builtin transformer engine exactly (same order).
+    pub fn param_specs(&self) -> Vec<(String, ParamKind, Vec<usize>)> {
+        let d = self.d_model;
+        let mut v: Vec<(String, ParamKind, Vec<usize>)> = Vec::new();
+        v.push(("tok_emb".into(), ParamKind::Embedding, vec![self.vocab, d]));
+        v.push(("pos_emb".into(), ParamKind::Embedding, vec![self.max_seq, d]));
+        for l in 0..self.n_layers {
+            let p = |s: &str| format!("layers.{l}.{s}");
+            v.push((p("ln1.g"), ParamKind::Norm, vec![d]));
+            v.push((p("ln1.b"), ParamKind::Norm, vec![d]));
+            v.push((p("attn.wq"), ParamKind::Weight, vec![d, d]));
+            v.push((p("attn.wk"), ParamKind::Weight, vec![d, d]));
+            v.push((p("attn.wv"), ParamKind::Weight, vec![d, d]));
+            v.push((p("attn.wo"), ParamKind::Weight, vec![d, d]));
+            v.push((p("ln2.g"), ParamKind::Norm, vec![d]));
+            v.push((p("ln2.b"), ParamKind::Norm, vec![d]));
+            v.push((p("mlp.fc1"), ParamKind::Weight, vec![d, self.d_ff]));
+            v.push((p("mlp.b1"), ParamKind::Bias, vec![self.d_ff]));
+            v.push((p("mlp.fc2"), ParamKind::Weight, vec![self.d_ff, d]));
+            v.push((p("mlp.b2"), ParamKind::Bias, vec![d]));
+        }
+        v.push(("ln_f.g".into(), ParamKind::Norm, vec![d]));
+        v.push(("ln_f.b".into(), ParamKind::Norm, vec![d]));
+        v.push(("lm_head".into(), ParamKind::Weight, vec![d, self.vocab]));
+        v
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.param_specs()
+            .iter()
+            .map(|(_, _, s)| s.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Allocate + initialize parameters (GPT-2-style init).
+    pub fn init_params(&self, rng: &mut Pcg64) -> Vec<Param> {
+        let std = 0.02f32;
+        let resid_std = std / (2.0 * self.n_layers as f32).sqrt();
+        self.param_specs()
+            .into_iter()
+            .map(|(name, kind, shape)| {
+                let t = match kind {
+                    ParamKind::Norm => {
+                        if name.ends_with(".g") {
+                            Tensor::full(&shape, 1.0)
+                        } else {
+                            Tensor::zeros(&shape)
+                        }
+                    }
+                    ParamKind::Bias => Tensor::zeros(&shape),
+                    _ => {
+                        // Scaled init on residual-output projections.
+                        let s = if name.contains("wo") || name.contains("fc2") {
+                            resid_std
+                        } else {
+                            std
+                        };
+                        Tensor::randn(&shape, s, rng)
+                    }
+                };
+                Param::new(&name, kind, t)
+            })
+            .collect()
+    }
+}
+
+/// MLP classifier configuration (the CLS-task surrogate).
+#[derive(Clone, Copy, Debug)]
+pub struct MlpConfig {
+    pub d_in: usize,
+    pub d_hidden: usize,
+    pub n_layers: usize,
+    pub n_classes: usize,
+}
+
+impl MlpConfig {
+    pub fn tiny() -> MlpConfig {
+        MlpConfig {
+            d_in: 32,
+            d_hidden: 128,
+            n_layers: 2,
+            n_classes: 8,
+        }
+    }
+
+    pub fn param_specs(&self) -> Vec<(String, ParamKind, Vec<usize>)> {
+        let mut v = Vec::new();
+        let mut prev = self.d_in;
+        for l in 0..self.n_layers {
+            v.push((
+                format!("fc{l}.w"),
+                ParamKind::Weight,
+                vec![prev, self.d_hidden],
+            ));
+            v.push((format!("fc{l}.b"), ParamKind::Bias, vec![self.d_hidden]));
+            prev = self.d_hidden;
+        }
+        v.push(("head.w".into(), ParamKind::Weight, vec![prev, self.n_classes]));
+        v.push(("head.b".into(), ParamKind::Bias, vec![self.n_classes]));
+        v
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_specs()
+            .iter()
+            .map(|(_, _, s)| s.iter().product::<usize>())
+            .sum()
+    }
+
+    pub fn init_params(&self, rng: &mut Pcg64) -> Vec<Param> {
+        self.param_specs()
+            .into_iter()
+            .map(|(name, kind, shape)| {
+                let t = match kind {
+                    ParamKind::Bias => Tensor::zeros(&shape),
+                    _ => {
+                        let fan_in = shape[0] as f32;
+                        Tensor::randn(&shape, (2.0 / fan_in).sqrt(), rng)
+                    }
+                };
+                Param::new(&name, kind, t)
+            })
+            .collect()
+    }
+}
+
+/// A named large-model config for the Tab. 5 memory-budget search.
+#[derive(Clone, Copy, Debug)]
+pub struct NamedModel {
+    pub name: &'static str,
+    pub cfg: TransformerConfig,
+}
+
+/// The OPT family (Zhang et al. '22) sizes the paper's Tab. 5 sweeps.
+pub fn opt_family() -> Vec<NamedModel> {
+    let m = |name, d_model, n_heads, n_layers, d_ff| NamedModel {
+        name,
+        cfg: TransformerConfig {
+            vocab: 50272,
+            d_model,
+            n_heads,
+            d_ff,
+            n_layers,
+            max_seq: 2048,
+        },
+    };
+    vec![
+        m("OPT-125M", 768, 12, 12, 3072),
+        m("OPT-350M", 1024, 16, 24, 4096),
+        m("OPT-1.3B", 2048, 32, 24, 8192),
+        m("OPT-2.7B", 2560, 32, 32, 10240),
+        m("OPT-6.7B", 4096, 32, 32, 16384),
+        m("OPT-13B", 5120, 40, 40, 20480),
+    ]
+}
+
+/// LLaMA family (Touvron et al. '23).
+pub fn llama_family() -> Vec<NamedModel> {
+    let m = |name, d_model, n_heads, n_layers, d_ff| NamedModel {
+        name,
+        cfg: TransformerConfig {
+            vocab: 32000,
+            d_model,
+            n_heads,
+            d_ff,
+            n_layers,
+            max_seq: 2048,
+        },
+    };
+    vec![
+        m("LLaMA-7B", 4096, 32, 32, 11008),
+        m("LLaMA-13B", 5120, 40, 40, 13824),
+        m("LLaMA-33B", 6656, 52, 60, 17920),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_param_inventory_consistent() {
+        let cfg = TransformerConfig::tiny();
+        let mut rng = Pcg64::seeded(0);
+        let params = cfg.init_params(&mut rng);
+        let specs = cfg.param_specs();
+        assert_eq!(params.len(), specs.len());
+        for (p, (name, kind, shape)) in params.iter().zip(specs.iter()) {
+            assert_eq!(&p.name, name);
+            assert_eq!(p.kind, *kind);
+            assert_eq!(&p.tensor.shape, shape);
+        }
+        assert_eq!(
+            cfg.n_params(),
+            params.iter().map(|p| p.tensor.numel()).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn gpt2_small_like_is_about_100m() {
+        let n = TransformerConfig::gpt2_small_like().n_params();
+        assert!(
+            (100_000_000..180_000_000).contains(&n),
+            "n_params = {n}"
+        );
+    }
+
+    #[test]
+    fn llama7b_param_count_plausible() {
+        // LLaMA-7B has ~6.7B params; our GPT-style stand-in (learned pos
+        // emb, 2-matrix MLP where LLaMA uses 3 incl. the gate) lands ~20%
+        // below — close enough for memory-budget arithmetic.
+        let n = llama_family()[0].cfg.n_params();
+        assert!(
+            (5_000_000_000..8_500_000_000u64).contains(&(n as u64)),
+            "n = {n}"
+        );
+    }
+
+    #[test]
+    fn norm_params_initialized_to_identity() {
+        let cfg = TransformerConfig::tiny();
+        let mut rng = Pcg64::seeded(0);
+        let params = cfg.init_params(&mut rng);
+        let g = params.iter().find(|p| p.name == "ln_f.g").unwrap();
+        assert!(g.tensor.data.iter().all(|&x| x == 1.0));
+        let b = params.iter().find(|p| p.name == "ln_f.b").unwrap();
+        assert!(b.tensor.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn mlp_inventory() {
+        let cfg = MlpConfig::tiny();
+        let mut rng = Pcg64::seeded(0);
+        let params = cfg.init_params(&mut rng);
+        assert_eq!(params.len(), 2 * cfg.n_layers + 2);
+        assert_eq!(
+            cfg.n_params(),
+            params.iter().map(|p| p.tensor.numel()).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn families_listed() {
+        assert_eq!(opt_family().len(), 6);
+        assert_eq!(llama_family().len(), 3);
+    }
+}

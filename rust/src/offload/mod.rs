@@ -1,0 +1,138 @@
+//! Offload / sharding communication simulator.
+//!
+//! The paper's Tab. 4 shows 4-bit states *speeding up* LLaMA fine-tuning
+//! under FSDP because optimizer-state traffic shrinks. We cannot measure
+//! two A100s here, so this module models the communication arithmetic:
+//! per training step the optimizer states cross a link (PCIe for
+//! ZeRO-Offload-style CPU offload, NVLink/IB for sharded updates), and the
+//! step time is `max(compute, comm)` for the overlapped fraction plus the
+//! serial remainder. The *relative* speedups between 32/8/4-bit states —
+//! what the paper claims — fall out of the byte counts, which we take from
+//! the exact accounting in [`crate::memory`].
+
+use crate::memory::{model_state_bytes, StatePreset};
+use crate::model::TransformerConfig;
+
+/// Link + compute characteristics of a simulated node.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// Link bandwidth, bytes/second (e.g. PCIe 4.0 x16 ≈ 25e9 effective).
+    pub bandwidth: f64,
+    /// Per-transfer latency, seconds.
+    pub latency: f64,
+    /// Pure compute time per step, seconds (fwd + bwd + update math).
+    pub compute_per_step: f64,
+    /// Fraction of communication that overlaps compute (0 = fully serial,
+    /// 1 = fully hidden).
+    pub overlap: f64,
+}
+
+impl LinkModel {
+    /// PCIe-offload profile roughly shaped on ZeRO-Offload numbers.
+    pub fn pcie_offload(compute_per_step: f64) -> LinkModel {
+        LinkModel {
+            bandwidth: 25e9,
+            latency: 30e-6,
+            compute_per_step,
+            overlap: 0.5,
+        }
+    }
+
+    /// Sharded-update (FSDP) profile: faster link, better overlap.
+    pub fn fsdp(compute_per_step: f64) -> LinkModel {
+        LinkModel {
+            bandwidth: 100e9,
+            latency: 10e-6,
+            compute_per_step,
+            overlap: 0.7,
+        }
+    }
+}
+
+/// Result of simulating one configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct StepEstimate {
+    pub state_bytes: u64,
+    pub comm_seconds: f64,
+    pub step_seconds: f64,
+}
+
+/// Per-step time when optimizer states of `cfg` under `preset` must cross
+/// the link once per step (down + up = 2x for offload round trip).
+pub fn simulate_step(cfg: &TransformerConfig, preset: StatePreset, link: &LinkModel) -> StepEstimate {
+    let state_bytes = model_state_bytes(cfg, preset);
+    let comm = link.latency + (2 * state_bytes) as f64 / link.bandwidth;
+    let hidden = comm.min(link.compute_per_step * link.overlap);
+    let serial = comm - hidden;
+    StepEstimate {
+        state_bytes,
+        comm_seconds: comm,
+        step_seconds: link.compute_per_step + serial,
+    }
+}
+
+/// Relative throughput of `preset` vs the fp32 baseline on the same link.
+pub fn speedup_vs_fp32(cfg: &TransformerConfig, preset: StatePreset, link: &LinkModel) -> f64 {
+    let base = simulate_step(cfg, StatePreset::AdamW32, link).step_seconds;
+    let ours = simulate_step(cfg, preset, link).step_seconds;
+    base / ours
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::llama_family;
+
+    #[test]
+    fn lower_bitwidth_is_never_slower() {
+        let cfg = llama_family()[0].cfg;
+        let link = LinkModel::pcie_offload(0.5);
+        let t32 = simulate_step(&cfg, StatePreset::AdamW32, &link).step_seconds;
+        let t8 = simulate_step(&cfg, StatePreset::AdamW8, &link).step_seconds;
+        let t4 = simulate_step(&cfg, StatePreset::AdamW4, &link).step_seconds;
+        assert!(t8 <= t32);
+        assert!(t4 <= t8);
+    }
+
+    #[test]
+    fn offload_speedup_shape_matches_paper() {
+        // Paper Tab. 4: LLaMA-7B 3.35h (32-bit) -> 3.07h (4-bit), i.e.
+        // ~1.09x from reduced communication under FSDP. On the FSDP link
+        // profile the simulator should land in a plausible band (>1x,
+        // <2x — communication is only part of the step).
+        let cfg = llama_family()[0].cfg;
+        let link = LinkModel::fsdp(1.0);
+        let s = speedup_vs_fp32(&cfg, StatePreset::AdamW4, &link);
+        assert!(s > 1.02 && s < 2.0, "speedup {s}");
+    }
+
+    #[test]
+    fn fully_hidden_comm_gives_no_speedup() {
+        let cfg = llama_family()[0].cfg;
+        // Enormous compute per step: everything overlaps.
+        let link = LinkModel {
+            bandwidth: 25e9,
+            latency: 0.0,
+            compute_per_step: 1e4,
+            overlap: 1.0,
+        };
+        let s = speedup_vs_fp32(&cfg, StatePreset::AdamW4, &link);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_time_proportional_to_bytes() {
+        let cfg = llama_family()[0].cfg;
+        let link = LinkModel {
+            bandwidth: 1e9,
+            latency: 0.0,
+            compute_per_step: 0.0,
+            overlap: 0.0,
+        };
+        let e32 = simulate_step(&cfg, StatePreset::AdamW32, &link);
+        let e4 = simulate_step(&cfg, StatePreset::AdamW4, &link);
+        let byte_ratio = e32.state_bytes as f64 / e4.state_bytes as f64;
+        let time_ratio = e32.comm_seconds / e4.comm_seconds;
+        assert!((byte_ratio - time_ratio).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,219 @@
+//! Adafactor (Shazeer & Stern '18) — the sublinear-memory baseline of the
+//! paper's Tab. 2. Second moment is factored for ≥2-D parameters and kept
+//! dense for 1-D; the first moment is optional (`β1 = 0` is the
+//! memory-lean configuration the paper also compares).
+//!
+//! Following the paper's App. D we drive Adafactor with an *external*
+//! learning rate and the same β's as AdamW; Adafactor-specific defaults
+//! (update clipping `d=1.0`, `eps2=1e-30`) keep their original values.
+
+use super::factor::FactoredSecond;
+use super::{Hyper, Optimizer, Param};
+use crate::tensor::Tensor;
+
+enum Second {
+    Factored(FactoredSecond),
+    Dense(Tensor),
+}
+
+pub struct Adafactor {
+    hp: Hyper,
+    use_momentum: bool,
+    t: usize,
+    m: Vec<Option<Tensor>>,
+    v: Vec<Second>,
+    /// Update clipping threshold d (Adafactor Alg. 4).
+    pub clip_threshold: f32,
+    /// Small constant added to squared gradients.
+    pub eps2: f32,
+}
+
+impl Adafactor {
+    pub fn new(hp: Hyper, use_momentum: bool) -> Adafactor {
+        Adafactor {
+            hp,
+            use_momentum,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+            clip_threshold: 1.0,
+            eps2: 1e-30,
+        }
+    }
+
+    fn lazy_init(&mut self, params: &[Param]) {
+        if !self.v.is_empty() {
+            return;
+        }
+        for p in params {
+            self.v.push(if p.tensor.ndim() >= 2 {
+                Second::Factored(FactoredSecond::zeros(&p.tensor.shape))
+            } else {
+                Second::Dense(Tensor::zeros(&p.tensor.shape))
+            });
+            self.m.push(if self.use_momentum {
+                Some(Tensor::zeros(&p.tensor.shape))
+            } else {
+                None
+            });
+        }
+    }
+}
+
+impl Optimizer for Adafactor {
+    fn step(&mut self, params: &mut [Param], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        self.lazy_init(params);
+        self.t += 1;
+        // Adafactor's default decaying beta2: 1 - t^{-0.8}.
+        let beta2 = 1.0 - (self.t as f32).powf(-0.8);
+        for (i, p) in params.iter_mut().enumerate() {
+            let g = &grads[i];
+            // Preconditioned update u = g / sqrt(v̂).
+            let mut u = Tensor::zeros(&g.shape);
+            match &mut self.v[i] {
+                Second::Factored(f) => {
+                    f.update(g, beta2, self.eps2);
+                    let rm = f.row_mean();
+                    let cols = f.cols();
+                    for (k, uv) in u.data.iter_mut().enumerate() {
+                        let vhat = f.reconstruct_at(k / cols, k % cols, rm);
+                        *uv = g.data[k] / (vhat.sqrt() + self.hp.eps);
+                    }
+                }
+                Second::Dense(v) => {
+                    for (k, uv) in u.data.iter_mut().enumerate() {
+                        let gv = g.data[k];
+                        v.data[k] = beta2 * v.data[k] + (1.0 - beta2) * (gv * gv + self.eps2);
+                        *uv = gv / (v.data[k].sqrt() + self.hp.eps);
+                    }
+                }
+            }
+            // Update clipping: u /= max(1, RMS(u)/d).
+            let rms = u.rms() as f32;
+            let denom = (rms / self.clip_threshold).max(1.0);
+            if denom > 1.0 {
+                let inv = 1.0 / denom;
+                for uv in u.data.iter_mut() {
+                    *uv *= inv;
+                }
+            }
+            // Optional momentum on the clipped update.
+            if let Some(m) = &mut self.m[i] {
+                let b1 = self.hp.beta1;
+                for k in 0..u.data.len() {
+                    m.data[k] = b1 * m.data[k] + (1.0 - b1) * u.data[k];
+                    u.data[k] = m.data[k];
+                }
+            }
+            for k in 0..p.tensor.data.len() {
+                p.tensor.data[k] -=
+                    lr * (u.data[k] + self.hp.weight_decay * p.tensor.data[k]);
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        let second: usize = self
+            .v
+            .iter()
+            .map(|s| match s {
+                Second::Factored(f) => f.bytes(),
+                Second::Dense(t) => t.numel() * 4,
+            })
+            .sum();
+        let first: usize = self
+            .m
+            .iter()
+            .map(|m| m.as_ref().map_or(0, |t| t.numel() * 4))
+            .sum();
+        second + first
+    }
+
+    fn name(&self) -> String {
+        if self.use_momentum {
+            "32-bit Adafactor".to_string()
+        } else {
+            "32-bit Adafactor (b1=0)".to_string()
+        }
+    }
+
+    fn t(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::ParamKind;
+    use crate::util::rng::Pcg64;
+
+    fn run_quadratic_2d(opt: &mut dyn Optimizer, steps: usize) -> f64 {
+        let mut rng = Pcg64::seeded(8);
+        let target = Tensor::randn(&[8, 4], 1.0, &mut rng);
+        let mut params = vec![Param::new(
+            "w",
+            ParamKind::Weight,
+            Tensor::zeros(&[8, 4]),
+        )];
+        for _ in 0..steps {
+            let g = params[0].tensor.sub(&target);
+            opt.step(&mut params, &[g], 0.05);
+        }
+        params[0].tensor.sub(&target).sq_l2() / target.sq_l2()
+    }
+
+    #[test]
+    fn converges_with_and_without_momentum() {
+        let hp = Hyper {
+            weight_decay: 0.0,
+            ..Hyper::default()
+        };
+        for momentum in [true, false] {
+            let mut opt = Adafactor::new(hp, momentum);
+            let rel = run_quadratic_2d(&mut opt, 600);
+            assert!(rel < 1e-2, "momentum={momentum} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn memory_is_sublinear_for_matrices() {
+        let hp = Hyper::default();
+        let mut opt = Adafactor::new(hp, false);
+        let mut params = vec![Param::new(
+            "w",
+            ParamKind::Weight,
+            Tensor::zeros(&[256, 256]),
+        )];
+        let g = Tensor::zeros(&[256, 256]);
+        opt.step(&mut params, &[g], 0.01);
+        // 256 + 256 f32 stats, vs 256*256*4 dense.
+        assert_eq!(opt.state_bytes(), 4 * 512);
+    }
+
+    #[test]
+    fn momentum_costs_full_precision_state() {
+        let hp = Hyper::default();
+        let mut opt = Adafactor::new(hp, true);
+        let mut params = vec![Param::new(
+            "w",
+            ParamKind::Weight,
+            Tensor::zeros(&[64, 64]),
+        )];
+        let g = Tensor::zeros(&[64, 64]);
+        opt.step(&mut params, &[g], 0.01);
+        assert_eq!(opt.state_bytes(), 4 * 128 + 4 * 64 * 64);
+    }
+
+    #[test]
+    fn dense_path_for_1d() {
+        let hp = Hyper::default();
+        let mut opt = Adafactor::new(hp, false);
+        let mut params = vec![Param::new("b", ParamKind::Bias, Tensor::zeros(&[32]))];
+        let g = Tensor::full(&[32], 0.1);
+        opt.step(&mut params, &[g], 0.01);
+        assert_eq!(opt.state_bytes(), 32 * 4);
+        assert!(params[0].tensor.data.iter().all(|&x| x < 0.0));
+    }
+}

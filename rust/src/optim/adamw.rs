@@ -1,0 +1,187 @@
+//! Full-precision AdamW (Loshchilov & Hutter) — the paper's Eq. 1 with
+//! decoupled weight decay. This is both the 32-bit baseline and the inner
+//! update `A` shared by every compressed variant (they call
+//! [`adamw_update_tensor`] on the decompressed states).
+
+use super::{Hyper, Optimizer, Param};
+use crate::tensor::Tensor;
+
+/// In-place AdamW update of one parameter tensor given its decompressed
+/// moments. Returns nothing; `m`/`v` are updated to the new (pre-compress)
+/// state. Bias correction uses step counter `t` (1-based).
+#[allow(clippy::too_many_arguments)]
+pub fn adamw_update_tensor(
+    w: &mut Tensor,
+    m: &mut Tensor,
+    v: &mut Tensor,
+    g: &Tensor,
+    hp: &Hyper,
+    lr: f32,
+    t: usize,
+) {
+    debug_assert_eq!(w.shape, g.shape);
+    let b1 = hp.beta1;
+    let b2 = hp.beta2;
+    let bc1 = 1.0 - b1.powi(t as i32);
+    let bc2 = 1.0 - b2.powi(t as i32);
+    for i in 0..w.data.len() {
+        let gi = g.data[i];
+        let mi = b1 * m.data[i] + (1.0 - b1) * gi;
+        let vi = b2 * v.data[i] + (1.0 - b2) * gi * gi;
+        m.data[i] = mi;
+        v.data[i] = vi;
+        let mhat = mi / bc1;
+        let vhat = vi / bc2;
+        let upd = mhat / (vhat.sqrt() + hp.eps) + hp.weight_decay * w.data[i];
+        w.data[i] -= lr * upd;
+    }
+}
+
+/// 32-bit AdamW keeping full-precision `m`, `v` per parameter.
+pub struct AdamW {
+    hp: Hyper,
+    t: usize,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+}
+
+impl AdamW {
+    pub fn new(hp: Hyper) -> AdamW {
+        AdamW {
+            hp,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    fn lazy_init(&mut self, params: &[Param]) {
+        if self.m.is_empty() {
+            self.m = params.iter().map(|p| Tensor::zeros(&p.tensor.shape)).collect();
+            self.v = params.iter().map(|p| Tensor::zeros(&p.tensor.shape)).collect();
+        }
+    }
+
+    /// Peek at the current moments (used by the moment-atlas experiments
+    /// that visualize outlier patterns, Figs. 1/2).
+    pub fn moments(&self, idx: usize) -> Option<(&Tensor, &Tensor)> {
+        Some((self.m.get(idx)?, self.v.get(idx)?))
+    }
+}
+
+impl Optimizer for AdamW {
+    fn step(&mut self, params: &mut [Param], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        self.lazy_init(params);
+        self.t += 1;
+        for (i, p) in params.iter_mut().enumerate() {
+            adamw_update_tensor(
+                &mut p.tensor,
+                &mut self.m[i],
+                &mut self.v[i],
+                &grads[i],
+                &self.hp,
+                lr,
+                self.t,
+            );
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.m
+            .iter()
+            .chain(self.v.iter())
+            .map(|t| t.numel() * 4)
+            .sum()
+    }
+
+    fn name(&self) -> String {
+        "32-bit AdamW".to_string()
+    }
+
+    fn t(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::ParamKind;
+
+    /// Minimize f(w) = 0.5 * ||w - target||^2; gradient = w - target.
+    fn quadratic_converges(opt: &mut dyn Optimizer, steps: usize) -> f64 {
+        let target = Tensor::from_vec(&[4], vec![1.0, -2.0, 3.0, 0.5]);
+        let mut params = vec![Param::new(
+            "w",
+            ParamKind::Weight,
+            Tensor::zeros(&[4]),
+        )];
+        for _ in 0..steps {
+            let g = params[0].tensor.sub(&target);
+            opt.step(&mut params, &[g], 0.05);
+        }
+        params[0].tensor.sub(&target).sq_l2()
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let hp = Hyper {
+            weight_decay: 0.0,
+            ..Hyper::default()
+        };
+        let mut opt = AdamW::new(hp);
+        let residual = quadratic_converges(&mut opt, 800);
+        assert!(residual < 1e-3, "residual {residual}");
+    }
+
+    #[test]
+    fn weight_decay_shrinks_weights() {
+        let hp = Hyper {
+            weight_decay: 0.5,
+            ..Hyper::default()
+        };
+        let mut opt = AdamW::new(hp);
+        let mut params = vec![Param::new(
+            "w",
+            ParamKind::Weight,
+            Tensor::full(&[8], 1.0),
+        )];
+        let zero_grad = Tensor::zeros(&[8]);
+        for _ in 0..50 {
+            let g = zero_grad.clone();
+            opt.step(&mut params, &[g], 0.1);
+        }
+        assert!(params[0].tensor.abs_max() < 1.0);
+    }
+
+    #[test]
+    fn state_bytes_is_8_per_param() {
+        let mut opt = AdamW::new(Hyper::default());
+        let mut params = vec![Param::new(
+            "w",
+            ParamKind::Weight,
+            Tensor::zeros(&[100]),
+        )];
+        let g = Tensor::zeros(&[100]);
+        opt.step(&mut params, &[g], 0.1);
+        assert_eq!(opt.state_bytes(), 800);
+    }
+
+    #[test]
+    fn bias_correction_first_step() {
+        // After one step with beta1=0.9, mhat should equal g exactly.
+        let hp = Hyper {
+            weight_decay: 0.0,
+            eps: 0.0,
+            ..Hyper::default()
+        };
+        let mut w = Tensor::zeros(&[1]);
+        let mut m = Tensor::zeros(&[1]);
+        let mut v = Tensor::zeros(&[1]);
+        let g = Tensor::from_vec(&[1], vec![0.3]);
+        adamw_update_tensor(&mut w, &mut m, &mut v, &g, &hp, 1.0, 1);
+        // update = mhat / sqrt(vhat) = g/|g| = 1 (sign of g).
+        assert!((w.data[0] + 1.0).abs() < 1e-5, "w={}", w.data[0]);
+    }
+}

@@ -1,0 +1,173 @@
+//! Rank-1 (outer-product) factorization of the second moment, following
+//! Adafactor (Shazeer & Stern '18). For a non-negative matrix `V`, store
+//! row sums `R` and column sums `C`; reconstruct `V̂ = R Cᵀ / sum(R)`.
+//! This is the paper's §4.3 sublinear representation, reused by both the
+//! Adafactor baseline and the 4-bit Factor optimizer. Tensors with more
+//! than 2 dims are folded to 2-D over (dim0, rest); 1-D tensors are not
+//! factorizable (callers quantize them instead).
+
+use crate::tensor::Tensor;
+
+/// Factored second-moment statistics for one ≥2-D tensor.
+#[derive(Clone, Debug)]
+pub struct FactoredSecond {
+    pub shape: Vec<usize>,
+    /// Row statistics, length = shape[0].
+    pub row: Vec<f32>,
+    /// Column statistics, length = numel / shape[0].
+    pub col: Vec<f32>,
+}
+
+impl FactoredSecond {
+    pub fn zeros(shape: &[usize]) -> FactoredSecond {
+        assert!(shape.len() >= 2, "factorization needs >= 2 dims");
+        let rows = shape[0];
+        let cols: usize = shape[1..].iter().product();
+        FactoredSecond {
+            shape: shape.to_vec(),
+            row: vec![0.0; rows],
+            col: vec![0.0; cols],
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.row.len()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.col.len()
+    }
+
+    /// Persistent bytes (f32 row + col stats) — sublinear in numel.
+    pub fn bytes(&self) -> usize {
+        4 * (self.row.len() + self.col.len())
+    }
+
+    /// EMA update with the squared gradient:
+    /// `R ← β2 R + (1-β2) rowmean(G²+eps)`, likewise for `C`
+    /// (Adafactor Alg. 1; we use means so R and C share the scale of V).
+    pub fn update(&mut self, g: &Tensor, beta2: f32, eps2: f32) {
+        let rows = self.rows();
+        let cols = self.cols();
+        debug_assert_eq!(g.numel(), rows * cols);
+        let mut rsum = vec![0.0f32; rows];
+        let mut csum = vec![0.0f32; cols];
+        for i in 0..rows {
+            let grow = &g.data[i * cols..(i + 1) * cols];
+            let mut acc = 0.0f32;
+            for (j, &gv) in grow.iter().enumerate() {
+                let sq = gv * gv + eps2;
+                acc += sq;
+                csum[j] += sq;
+            }
+            rsum[i] = acc;
+        }
+        for i in 0..rows {
+            self.row[i] = beta2 * self.row[i] + (1.0 - beta2) * (rsum[i] / cols as f32);
+        }
+        for j in 0..cols {
+            self.col[j] = beta2 * self.col[j] + (1.0 - beta2) * (csum[j] / rows as f32);
+        }
+    }
+
+    /// Reconstructed second moment at (i, j):
+    /// `v̂_ij = R_i C_j / mean(R)` (means-normalized outer product).
+    #[inline]
+    pub fn reconstruct_at(&self, i: usize, j: usize, row_mean: f32) -> f32 {
+        if row_mean <= 0.0 {
+            return 0.0;
+        }
+        self.row[i] * self.col[j] / row_mean
+    }
+
+    pub fn row_mean(&self) -> f32 {
+        if self.row.is_empty() {
+            0.0
+        } else {
+            self.row.iter().sum::<f32>() / self.row.len() as f32
+        }
+    }
+
+    /// Dense reconstruction (for tests / analysis only — the optimizer
+    /// streams `reconstruct_at`).
+    pub fn reconstruct(&self) -> Tensor {
+        let rm = self.row_mean();
+        let rows = self.rows();
+        let cols = self.cols();
+        let mut out = Tensor::zeros(&[rows, cols]);
+        for i in 0..rows {
+            for j in 0..cols {
+                out.data[i * cols + j] = self.reconstruct_at(i, j, rm);
+            }
+        }
+        out.reshape(&self.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn exact_for_rank1_input() {
+        // If V = r cᵀ exactly, the factorization reconstructs it exactly
+        // (after one update from zero with beta2 -> 0).
+        let r = [1.0f32, 2.0, 4.0];
+        let c = [0.5f32, 1.0];
+        let mut g = Tensor::zeros(&[3, 2]);
+        for i in 0..3 {
+            for j in 0..2 {
+                // g² = r_i c_j  =>  g = sqrt(r_i c_j)
+                g.data[i * 2 + j] = (r[i] * c[j]).sqrt();
+            }
+        }
+        let mut f = FactoredSecond::zeros(&[3, 2]);
+        f.update(&g, 0.0, 0.0);
+        let v = f.reconstruct();
+        for i in 0..3 {
+            for j in 0..2 {
+                let want = r[i] * c[j];
+                let got = v.data[i * 2 + j];
+                assert!(
+                    (want - got).abs() < 1e-5,
+                    "({i},{j}): want {want} got {got}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reconstruction_nonnegative_and_bounded() {
+        let mut rng = Pcg64::seeded(10);
+        let g = Tensor::randn(&[16, 8], 1.0, &mut rng);
+        let mut f = FactoredSecond::zeros(&[16, 8]);
+        for _ in 0..5 {
+            f.update(&g, 0.9, 1e-30);
+        }
+        let v = f.reconstruct();
+        assert!(v.data.iter().all(|&x| x >= 0.0));
+        assert!(v.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn bytes_sublinear() {
+        let f = FactoredSecond::zeros(&[1024, 1024]);
+        assert_eq!(f.bytes(), 4 * 2048); // vs 4 * 1M dense
+    }
+
+    #[test]
+    fn folds_higher_dims() {
+        let f = FactoredSecond::zeros(&[4, 3, 2]);
+        assert_eq!(f.rows(), 4);
+        assert_eq!(f.cols(), 6);
+        let g = Tensor::full(&[4, 3, 2], 2.0);
+        let mut f2 = f;
+        f2.update(&g, 0.0, 0.0);
+        let v = f2.reconstruct();
+        assert_eq!(v.shape, vec![4, 3, 2]);
+        for &x in &v.data {
+            assert!((x - 4.0).abs() < 1e-5);
+        }
+    }
+}

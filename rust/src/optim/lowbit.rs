@@ -1,0 +1,502 @@
+//! The paper's optimizer: AdamW with compressed states (Alg. 1 + Alg. 3).
+//!
+//! Per parameter tensor and step: decompress m̄, v̄ → run the exact AdamW
+//! update → re-compress. Only one tensor's states are in full precision at
+//! any moment; everything else stays packed. The quantization policy is
+//! fully configurable so the Tab. 1 ablation grid (normalization × mapping
+//! × stochastic rounding × factorization × stable-embedding) is expressible
+//! with this one type.
+
+use super::adamw::adamw_update_tensor;
+use super::factor::FactoredSecond;
+use super::state::{MomentState, SecondState};
+use super::{Hyper, Optimizer, Param, ParamKind};
+use crate::quant::{MapKind, NormKind, QuantMap, Quantizer};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Which states get quantized and how (paper §5 + App. D.1).
+#[derive(Clone, Copy, Debug)]
+pub struct QuantPolicy {
+    /// First-moment quantizer; `None` keeps m in fp32.
+    pub m_quant: Option<Quantizer>,
+    /// Second-moment quantizer for ≥2-D tensors; `None` keeps v in fp32.
+    pub v_quant: Option<Quantizer>,
+    /// Second-moment quantizer for 1-D tensors. The paper uses B128 with
+    /// the same mapping because rank-1 degenerates to per-tensor on 1-D.
+    pub v_quant_1d: Option<Quantizer>,
+    /// Factorize the second moment of ≥2-D tensors instead of quantizing
+    /// (the "4-bit Factor" optimizer, §4.3).
+    pub factor_v: bool,
+    /// Tensors with numel <= this stay fp32 (App. D.1: 4096).
+    pub min_quant_size: usize,
+    /// Keep embedding-layer states fp32 (the 8-bit baseline's behaviour;
+    /// also our stand-in for "Stable Embedding" rows in Tab. 1).
+    pub skip_embedding: bool,
+}
+
+impl QuantPolicy {
+    /// 4-bit AdamW (ours): m B128/DE, v Rank-1/Linear (+B128/Linear 1-D).
+    pub fn bit4() -> QuantPolicy {
+        QuantPolicy {
+            m_quant: Some(Quantizer::first_moment_4bit()),
+            v_quant: Some(Quantizer::second_moment_4bit()),
+            v_quant_1d: Some(Quantizer::new(
+                NormKind::Block(128),
+                MapKind::Linear,
+                4,
+                false,
+            )),
+            factor_v: false,
+            min_quant_size: 4096,
+            skip_embedding: false,
+        }
+    }
+
+    /// 8-bit AdamW (Dettmers'22): B2048/DE both moments, embeddings fp32.
+    pub fn bit8() -> QuantPolicy {
+        QuantPolicy {
+            m_quant: Some(Quantizer::moment_8bit(true)),
+            v_quant: Some(Quantizer::moment_8bit(false)),
+            v_quant_1d: Some(Quantizer::moment_8bit(false)),
+            factor_v: false,
+            min_quant_size: 4096,
+            skip_embedding: true,
+        }
+    }
+
+    /// Enable second-moment factorization (4-bit Factor).
+    pub fn factored(mut self) -> QuantPolicy {
+        self.factor_v = true;
+        self
+    }
+
+    /// Stochastic rounding on both moments (Tab. 1 SR row).
+    pub fn stochastic(mut self) -> QuantPolicy {
+        self.m_quant = self.m_quant.map(|q| q.with_stochastic(true));
+        self.v_quant = self.v_quant.map(|q| q.with_stochastic(true));
+        self.v_quant_1d = self.v_quant_1d.map(|q| q.with_stochastic(true));
+        self
+    }
+
+    /// Keep embedding states fp32 (stable-embedding stand-in).
+    pub fn with_skip_embedding(mut self, skip: bool) -> QuantPolicy {
+        self.skip_embedding = skip;
+        self
+    }
+
+    /// Explicit second-moment scheme (Tab. 1 ablation rows).
+    pub fn with_v(mut self, q: Option<Quantizer>) -> QuantPolicy {
+        self.v_quant = q;
+        self.v_quant_1d = q.map(|mut qq| {
+            // 1-D fallback keeps the mapping but uses B128 normalization.
+            if qq.norm == NormKind::Rank1 {
+                qq.norm = NormKind::Block(128);
+            }
+            qq
+        });
+        self
+    }
+
+    /// Explicit first-moment scheme.
+    pub fn with_m(mut self, q: Option<Quantizer>) -> QuantPolicy {
+        self.m_quant = q;
+        self
+    }
+
+    fn should_quantize(&self, p: &Param) -> bool {
+        if p.tensor.numel() <= self.min_quant_size {
+            return false;
+        }
+        if self.skip_embedding && p.kind == ParamKind::Embedding {
+            return false;
+        }
+        true
+    }
+}
+
+/// AdamW with compressed optimizer states.
+pub struct CompressedAdamW {
+    hp: Hyper,
+    pub policy: QuantPolicy,
+    t: usize,
+    m: Vec<MomentState>,
+    v: Vec<SecondState>,
+    // Cached mapping tables (hot path: built once, reused every step).
+    m_map: Option<QuantMap>,
+    v_map: Option<QuantMap>,
+    v1_map: Option<QuantMap>,
+    rng: Pcg64,
+}
+
+impl CompressedAdamW {
+    pub fn new(hp: Hyper, policy: QuantPolicy) -> CompressedAdamW {
+        CompressedAdamW {
+            hp,
+            t: 0,
+            m_map: policy.m_quant.map(|q| q.build_map()),
+            v_map: policy.v_quant.map(|q| q.build_map()),
+            v1_map: policy.v_quant_1d.map(|q| q.build_map()),
+            policy,
+            m: Vec::new(),
+            v: Vec::new(),
+            rng: Pcg64::seeded(0x10B1),
+        }
+    }
+
+    fn lazy_init(&mut self, params: &[Param]) {
+        if !self.m.is_empty() {
+            return;
+        }
+        for p in params {
+            let shape = &p.tensor.shape;
+            let quantize = self.policy.should_quantize(p);
+            // Initial states are exact zeros; store them compressed from
+            // the start (zero quantizes exactly under every scheme).
+            let zero = Tensor::zeros(shape);
+            let m = if quantize {
+                MomentState::compress(
+                    zero.clone(),
+                    self.policy.m_quant.as_ref(),
+                    self.m_map.as_ref(),
+                    &mut self.rng,
+                )
+            } else {
+                MomentState::F32(zero.clone())
+            };
+            let v = if quantize && self.policy.factor_v && shape.len() >= 2 {
+                SecondState::Factored(FactoredSecond::zeros(shape))
+            } else if quantize {
+                let (q, map) = self.v_scheme(shape.len());
+                let (q, map) = (q.copied(), map.cloned());
+                match q {
+                    Some(q) => SecondState::Quant(match &map {
+                        Some(m) => q.quantize_with(&zero, m, &mut self.rng),
+                        None => q.quantize(&zero, &mut self.rng),
+                    }),
+                    _ => SecondState::F32(zero),
+                }
+            } else {
+                SecondState::F32(zero)
+            };
+            self.m.push(m);
+            self.v.push(v);
+        }
+    }
+
+    fn v_scheme(&self, ndim: usize) -> (Option<&Quantizer>, Option<&QuantMap>) {
+        if ndim >= 2 {
+            (self.policy.v_quant.as_ref(), self.v_map.as_ref())
+        } else {
+            (self.policy.v_quant_1d.as_ref(), self.v1_map.as_ref())
+        }
+    }
+
+    /// Decompressed view of the moments of parameter `idx` (analysis /
+    /// figures only; the step path streams per tensor).
+    pub fn moments(&self, idx: usize) -> Option<(Tensor, Tensor)> {
+        let m = match self.m.get(idx)? {
+            MomentState::F32(t) => t.clone(),
+            MomentState::Quant(q) => q.dequantize_with(self.m_map.as_ref()?),
+        };
+        let v = match self.v.get(idx)? {
+            SecondState::F32(t) => t.clone(),
+            SecondState::Quant(q) => q.dequantize(),
+            SecondState::Factored(f) => f.reconstruct(),
+        };
+        Some((m, v))
+    }
+}
+
+impl Optimizer for CompressedAdamW {
+    fn step(&mut self, params: &mut [Param], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        self.lazy_init(params);
+        self.t += 1;
+        let hp = self.hp;
+        let t = self.t;
+        for (i, p) in params.iter_mut().enumerate() {
+            let g = &grads[i];
+            let quantize = self.policy.should_quantize(p);
+
+            // ---- Factored-v path (Alg. 1 with v held sublinearly) ----
+            if let SecondState::Factored(f) = &mut self.v[i] {
+                // v-EMA on the factored stats, exact AdamW elsewhere.
+                f.update(g, hp.beta2, 0.0);
+                let rm = f.row_mean();
+                let cols = f.cols();
+                let bc1 = 1.0 - hp.beta1.powi(t as i32);
+                let bc2 = 1.0 - hp.beta2.powi(t as i32);
+                let mut m = self.m[i].decompress(self.m_map.as_ref());
+                for k in 0..p.tensor.data.len() {
+                    let gv = g.data[k];
+                    let mi = hp.beta1 * m.data[k] + (1.0 - hp.beta1) * gv;
+                    m.data[k] = mi;
+                    let vhat = f.reconstruct_at(k / cols, k % cols, rm) / bc2;
+                    let upd = (mi / bc1) / (vhat.sqrt() + hp.eps)
+                        + hp.weight_decay * p.tensor.data[k];
+                    p.tensor.data[k] -= lr * upd;
+                }
+                self.m[i] = if quantize {
+                    MomentState::compress(
+                        m,
+                        self.policy.m_quant.as_ref(),
+                        self.m_map.as_ref(),
+                        &mut self.rng,
+                    )
+                } else {
+                    MomentState::F32(m)
+                };
+                continue;
+            }
+
+            // ---- Quantized / fp32 path: decompress → AdamW → compress ----
+            let mut m = self.m[i].decompress(self.m_map.as_ref());
+            let mut v = match &self.v[i] {
+                SecondState::F32(tns) => tns.clone(),
+                SecondState::Quant(q) => q.dequantize(),
+                SecondState::Factored(_) => unreachable!(),
+            };
+            adamw_update_tensor(&mut p.tensor, &mut m, &mut v, g, &hp, lr, t);
+            if quantize {
+                self.m[i] = MomentState::compress(
+                    m,
+                    self.policy.m_quant.as_ref(),
+                    self.m_map.as_ref(),
+                    &mut self.rng,
+                );
+                let ndim = p.tensor.ndim();
+                let (q, map) = match ndim {
+                    n if n >= 2 => (self.policy.v_quant, self.v_map.clone()),
+                    _ => (self.policy.v_quant_1d, self.v1_map.clone()),
+                };
+                self.v[i] = match q {
+                    Some(q) => SecondState::Quant(match &map {
+                        Some(mp) => q.quantize_with(&v, mp, &mut self.rng),
+                        None => q.quantize(&v, &mut self.rng),
+                    }),
+                    None => SecondState::F32(v),
+                };
+            } else {
+                self.m[i] = MomentState::F32(m);
+                self.v[i] = SecondState::F32(v);
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.m.iter().map(|s| s.bytes()).sum::<usize>()
+            + self.v.iter().map(|s| s.bytes()).sum::<usize>()
+    }
+
+    fn name(&self) -> String {
+        let bits = self
+            .policy
+            .m_quant
+            .map(|q| q.bits)
+            .or(self.policy.v_quant.map(|q| q.bits))
+            .unwrap_or(32);
+        if self.policy.factor_v {
+            format!("{bits}-bit Factor")
+        } else {
+            format!("{bits}-bit AdamW")
+        }
+    }
+
+    fn t(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::adamw::AdamW;
+    use crate::util::rng::Pcg64;
+
+    fn quadratic_run(opt: &mut dyn Optimizer, shape: &[usize], steps: usize) -> (f64, Vec<f32>) {
+        let mut rng = Pcg64::seeded(31);
+        let target = Tensor::randn(shape, 1.0, &mut rng);
+        let mut params = vec![Param::new(
+            "w",
+            ParamKind::Weight,
+            Tensor::zeros(shape),
+        )];
+        for _ in 0..steps {
+            let g = params[0].tensor.sub(&target);
+            opt.step(&mut params, &[g], 0.05);
+        }
+        let rel = params[0].tensor.sub(&target).sq_l2() / target.sq_l2();
+        (rel, params[0].tensor.data.clone())
+    }
+
+    #[test]
+    fn disabled_policy_matches_fp32_adamw_exactly() {
+        // With all quantizers off, CompressedAdamW must be bit-identical
+        // to the 32-bit AdamW baseline.
+        let hp = Hyper::default();
+        let policy = QuantPolicy {
+            m_quant: None,
+            v_quant: None,
+            v_quant_1d: None,
+            factor_v: false,
+            min_quant_size: 0,
+            skip_embedding: false,
+        };
+        let mut a = CompressedAdamW::new(hp, policy);
+        let mut b = AdamW::new(hp);
+        let (_, wa) = quadratic_run(&mut a, &[16, 8], 50);
+        let (_, wb) = quadratic_run(&mut b, &[16, 8], 50);
+        assert_eq!(wa, wb);
+    }
+
+    #[test]
+    fn bit4_converges_close_to_fp32() {
+        let hp = Hyper {
+            weight_decay: 0.0,
+            ..Hyper::default()
+        };
+        // Lower the small-tensor threshold so the toy problem is actually
+        // quantized.
+        let mut policy = QuantPolicy::bit4();
+        policy.min_quant_size = 0;
+        let mut q4 = CompressedAdamW::new(hp, policy);
+        let (rel, _) = quadratic_run(&mut q4, &[32, 16], 600);
+        assert!(rel < 5e-2, "4-bit AdamW rel residual {rel}");
+    }
+
+    #[test]
+    fn factored_variant_converges() {
+        let hp = Hyper {
+            weight_decay: 0.0,
+            ..Hyper::default()
+        };
+        let mut policy = QuantPolicy::bit4().factored();
+        policy.min_quant_size = 0;
+        let mut opt = CompressedAdamW::new(hp, policy);
+        let (rel, _) = quadratic_run(&mut opt, &[32, 16], 600);
+        assert!(rel < 5e-2, "4-bit Factor rel residual {rel}");
+    }
+
+    #[test]
+    fn state_bytes_hierarchy() {
+        // 32-bit > 8-bit > 4-bit > 4-bit factored, on one 256x256 matrix.
+        let hp = Hyper::default();
+        let shape = [256usize, 256];
+        let mk = |policy: Option<QuantPolicy>| -> usize {
+            let mut params = vec![Param::new(
+                "w",
+                ParamKind::Weight,
+                Tensor::zeros(&shape),
+            )];
+            let g = Tensor::full(&shape, 0.01);
+            match policy {
+                None => {
+                    let mut o = AdamW::new(hp);
+                    o.step(&mut params, &[g], 0.01);
+                    o.state_bytes()
+                }
+                Some(p) => {
+                    let mut o = CompressedAdamW::new(hp, p);
+                    o.step(&mut params, &[g], 0.01);
+                    o.state_bytes()
+                }
+            }
+        };
+        let b32 = mk(None);
+        let b8 = mk(Some(QuantPolicy::bit8()));
+        let b4 = mk(Some(QuantPolicy::bit4()));
+        let bf = mk(Some(QuantPolicy::bit4().factored()));
+        assert_eq!(b32, 2 * 4 * 65536);
+        assert!(b8 < b32 / 3, "8-bit {b8} vs 32-bit {b32}");
+        assert!(b4 < b8 * 6 / 10, "4-bit {b4} vs 8-bit {b8}");
+        assert!(bf < b4 * 6 / 10, "factored {bf} vs 4-bit {b4}");
+    }
+
+    #[test]
+    fn small_tensor_rule_keeps_fp32() {
+        let hp = Hyper::default();
+        let policy = QuantPolicy::bit4(); // min_quant_size = 4096
+        let mut opt = CompressedAdamW::new(hp, policy);
+        let mut params = vec![Param::new(
+            "bias",
+            ParamKind::Bias,
+            Tensor::zeros(&[100]),
+        )];
+        let g = Tensor::full(&[100], 0.1);
+        opt.step(&mut params, &[g], 0.01);
+        // 100 params * 2 states * 4 bytes, untouched by quantization.
+        assert_eq!(opt.state_bytes(), 800);
+    }
+
+    #[test]
+    fn skip_embedding_rule() {
+        let hp = Hyper::default();
+        let policy = QuantPolicy::bit8(); // skip_embedding = true
+        let mut opt = CompressedAdamW::new(hp, policy);
+        let mut params = vec![
+            Param::new("emb", ParamKind::Embedding, Tensor::zeros(&[100, 64])),
+            Param::new("w", ParamKind::Weight, Tensor::zeros(&[100, 64])),
+        ];
+        let g = Tensor::full(&[100, 64], 0.1);
+        opt.step(&mut params, &[g.clone(), g], 0.01);
+        // Embedding stays 8*numel bytes; weight compresses to ~2*numel.
+        let total = opt.state_bytes();
+        let dense = 2 * 4 * 6400;
+        assert!(total > dense && total < dense + 2 * 6400 + 1024,
+            "total {total}");
+    }
+
+    #[test]
+    fn zero_point_mapping_destabilizes_sparse_gradients() {
+        // The Tab. 1 phenomenon in miniature: with rare large gradients,
+        // per-block v is dominated by one outlier; DE's zero point crushes
+        // the rest of the block to v=0 and the next update explodes.
+        let hp = Hyper {
+            weight_decay: 0.0,
+            eps: 1e-10,
+            ..Hyper::default()
+        };
+        let mk_policy = |map: MapKind| {
+            QuantPolicy::bit4()
+                .with_v(Some(Quantizer::new(NormKind::Block(2048), map, 4, false)))
+        };
+        let run = |map: MapKind| -> f64 {
+            let mut policy = mk_policy(map);
+            policy.min_quant_size = 0;
+            policy.m_quant = None; // isolate the second moment
+            let mut opt = CompressedAdamW::new(hp, policy);
+            let mut rng = Pcg64::seeded(77);
+            let n = 4096;
+            let mut params = vec![Param::new(
+                "w",
+                ParamKind::Weight,
+                Tensor::zeros(&[64, 64]),
+            )];
+            let mut worst_step = 0.0f64;
+            for s in 0..60 {
+                // Mostly tiny gradients with a huge outlier coordinate.
+                let mut g = Tensor::randn(&[64, 64], 1e-4, &mut rng);
+                g.data[0] = 5.0;
+                let before = params[0].tensor.data.clone();
+                opt.step(&mut params, &[g], 1e-3);
+                if s > 5 {
+                    for k in 1..n {
+                        let delta = (params[0].tensor.data[k] - before[k]).abs() as f64;
+                        worst_step = worst_step.max(delta);
+                    }
+                }
+            }
+            worst_step
+        };
+        let blowup_de = run(MapKind::DynExp);
+        let blowup_lin = run(MapKind::Linear);
+        // DE zero-point: v quantized to 0 => update magnitude ~ lr (1e-3)
+        // for coordinates with tiny gradients. Linear keeps v bounded away
+        // from zero => updates stay proportional to the tiny gradients.
+        assert!(
+            blowup_de > 5.0 * blowup_lin,
+            "DE worst step {blowup_de} vs Linear {blowup_lin}"
+        );
+    }
+}

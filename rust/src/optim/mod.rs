@@ -1,0 +1,147 @@
+//! The optimizer zoo: full-precision baselines (AdamW, SGDM, Adafactor,
+//! SM3) and the paper's compressed optimizers (8-bit AdamW, 4-bit AdamW,
+//! 4-bit Factor) built on the Alg. 1 compress/decompress wrapper.
+
+pub mod adafactor;
+pub mod adamw;
+pub mod factor;
+pub mod lowbit;
+pub mod sgdm;
+pub mod sm3;
+pub mod state;
+
+use crate::tensor::Tensor;
+
+/// What a parameter tensor is; drives per-parameter quantization policy
+/// (the 8-bit baseline skips embeddings, the ≤4096 rule skips small
+/// tensors such as biases and LayerNorm gains).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    Embedding,
+    Weight,
+    Bias,
+    Norm,
+}
+
+/// A named, classified parameter tensor.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub kind: ParamKind,
+    pub tensor: Tensor,
+}
+
+impl Param {
+    pub fn new(name: &str, kind: ParamKind, tensor: Tensor) -> Param {
+        Param {
+            name: name.to_string(),
+            kind,
+            tensor,
+        }
+    }
+}
+
+/// Shared optimizer hyperparameters (paper App. D conventions).
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Hyper {
+        Hyper {
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-6,
+            weight_decay: 0.01,
+        }
+    }
+}
+
+/// The common optimizer interface. `step` consumes one gradient per
+/// parameter (same order); optimizers lazily initialize state on first
+/// use, so the same instance works for any model.
+pub trait Optimizer {
+    /// One update step. `lr` override allows schedules without mutating
+    /// the stored hyperparameters.
+    fn step(&mut self, params: &mut [Param], grads: &[Tensor], lr: f32);
+
+    /// Persistent optimizer-state memory in bytes — the paper's central
+    /// accounting quantity (codes + quantization scales + factored stats).
+    fn state_bytes(&self) -> usize;
+
+    fn name(&self) -> String;
+
+    /// Steps taken so far (for bias correction and schedules).
+    fn t(&self) -> usize;
+}
+
+/// Construct an optimizer by preset name (the names used across the
+/// experiment harness and CLI):
+///
+/// * `adamw32`  — 32-bit AdamW
+/// * `adamw8`   — 8-bit AdamW, B2048/DE, embeddings kept fp32 (Dettmers'22)
+/// * `adamw4`   — 4-bit AdamW (ours): m B128/DE, v Rank-1/Linear
+/// * `factor4`  — 4-bit Factor (ours): m B128/DE, v factored (≥2-D) /
+///                quantized Rank-1/Linear (1-D)
+/// * `adafactor` / `adafactor-b0` — Adafactor with/without first moment
+/// * `sm3`      — SM3 with momentum
+/// * `sgdm` / `sgdm4` — SGD with (quantized) momentum
+pub fn build(preset: &str, hp: Hyper) -> Option<Box<dyn Optimizer>> {
+    use crate::quant::Quantizer;
+    Some(match preset {
+        "adamw32" => Box::new(adamw::AdamW::new(hp)),
+        "adamw8" => Box::new(lowbit::CompressedAdamW::new(hp, lowbit::QuantPolicy::bit8())),
+        "adamw4" => Box::new(lowbit::CompressedAdamW::new(hp, lowbit::QuantPolicy::bit4())),
+        "adamw4-sr" => Box::new(lowbit::CompressedAdamW::new(
+            hp,
+            lowbit::QuantPolicy::bit4().stochastic(),
+        )),
+        "factor4" => Box::new(lowbit::CompressedAdamW::new(
+            hp,
+            lowbit::QuantPolicy::bit4().factored(),
+        )),
+        "adafactor" => Box::new(adafactor::Adafactor::new(hp, true)),
+        "adafactor-b0" => Box::new(adafactor::Adafactor::new(hp, false)),
+        "sm3" => Box::new(sm3::Sm3::new(hp)),
+        "sgdm" => Box::new(sgdm::Sgdm::new(hp, None)),
+        "sgdm4" => Box::new(sgdm::Sgdm::new(
+            hp,
+            Some(Quantizer::first_moment_4bit()),
+        )),
+        _ => return None,
+    })
+}
+
+/// All presets compared in the paper's Tab. 2.
+pub fn table2_presets() -> Vec<&'static str> {
+    vec![
+        "adamw32",
+        "adafactor",
+        "adafactor-b0",
+        "sm3",
+        "adamw8",
+        "adamw4",
+        "factor4",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_all_presets() {
+        for p in table2_presets() {
+            assert!(build(p, Hyper::default()).is_some(), "preset {p}");
+        }
+        assert!(build("adamw4-sr", Hyper::default()).is_some());
+        assert!(build("sgdm4", Hyper::default()).is_some());
+        assert!(build("nope", Hyper::default()).is_none());
+    }
+}

@@ -1,0 +1,149 @@
+//! SGD with momentum, in both full-precision and compressed form
+//! (paper Alg. 2: the quantized state is the momentum buffer). The
+//! compressed variant is the optimizer analyzed by the paper's
+//! convergence theorem (App. H).
+
+use super::{Hyper, Optimizer, Param};
+use crate::quant::{QuantMap, QuantizedTensor, Quantizer};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+enum Momentum {
+    Full(Tensor),
+    Quant(QuantizedTensor),
+}
+
+pub struct Sgdm {
+    hp: Hyper,
+    t: usize,
+    quantizer: Option<Quantizer>,
+    map: Option<QuantMap>,
+    state: Vec<Momentum>,
+    rng: Pcg64,
+}
+
+impl Sgdm {
+    pub fn new(hp: Hyper, quantizer: Option<Quantizer>) -> Sgdm {
+        let map = quantizer.as_ref().map(|q| q.build_map());
+        Sgdm {
+            hp,
+            t: 0,
+            quantizer,
+            map,
+            state: Vec::new(),
+            rng: Pcg64::seeded(0x5D6D),
+        }
+    }
+}
+
+impl Optimizer for Sgdm {
+    fn step(&mut self, params: &mut [Param], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        if self.state.is_empty() {
+            self.state = params
+                .iter()
+                .map(|p| Momentum::Full(Tensor::zeros(&p.tensor.shape)))
+                .collect();
+        }
+        self.t += 1;
+        let beta = self.hp.beta1;
+        for (i, p) in params.iter_mut().enumerate() {
+            // Decompress (Alg. 2 line 3).
+            let mut m = match &self.state[i] {
+                Momentum::Full(t) => t.clone(),
+                Momentum::Quant(q) => q.dequantize_with(self.map.as_ref().unwrap()),
+            };
+            // m <- beta m + g; w <- w - lr m (Alg. 2 lines 4-5).
+            for j in 0..m.data.len() {
+                m.data[j] = beta * m.data[j] + grads[i].data[j];
+                p.tensor.data[j] -=
+                    lr * (m.data[j] + self.hp.weight_decay * p.tensor.data[j]);
+            }
+            // Compress (Alg. 2 line 6).
+            self.state[i] = match (&self.quantizer, &self.map) {
+                (Some(q), Some(map)) => {
+                    Momentum::Quant(q.quantize_with(&m, map, &mut self.rng))
+                }
+                _ => Momentum::Full(m),
+            };
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.state
+            .iter()
+            .map(|m| match m {
+                Momentum::Full(t) => t.numel() * 4,
+                Momentum::Quant(q) => q.bytes(),
+            })
+            .sum()
+    }
+
+    fn name(&self) -> String {
+        match &self.quantizer {
+            Some(q) => format!("4-bit SGDM ({})", q.name()),
+            None => "32-bit SGDM".to_string(),
+        }
+    }
+
+    fn t(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::ParamKind;
+
+    fn run_quadratic(opt: &mut dyn Optimizer, steps: usize, lr: f32) -> f64 {
+        let target = Tensor::from_vec(&[8], vec![1., -1., 2., 0.5, -0.25, 0.75, -1.5, 0.1]);
+        let mut params = vec![Param::new("w", ParamKind::Weight, Tensor::zeros(&[8]))];
+        for _ in 0..steps {
+            let g = params[0].tensor.sub(&target);
+            opt.step(&mut params, &[g], lr);
+        }
+        params[0].tensor.sub(&target).sq_l2()
+    }
+
+    #[test]
+    fn full_precision_converges() {
+        let hp = Hyper {
+            beta1: 0.9,
+            weight_decay: 0.0,
+            ..Hyper::default()
+        };
+        let mut opt = Sgdm::new(hp, None);
+        assert!(run_quadratic(&mut opt, 300, 0.02) < 1e-6);
+    }
+
+    #[test]
+    fn quantized_momentum_still_converges() {
+        // Paper Thm. 1: quantized SGDM converges to a noise ball around the
+        // optimum; on a clean quadratic it should get very close.
+        let hp = Hyper {
+            beta1: 0.9,
+            weight_decay: 0.0,
+            ..Hyper::default()
+        };
+        let mut opt = Sgdm::new(hp, Some(Quantizer::first_moment_4bit()));
+        let residual = run_quadratic(&mut opt, 300, 0.02);
+        assert!(residual < 1e-2, "residual {residual}");
+    }
+
+    #[test]
+    fn quantized_state_is_8x_smaller() {
+        let hp = Hyper::default();
+        let mut full = Sgdm::new(hp, None);
+        let mut quant = Sgdm::new(hp, Some(Quantizer::first_moment_4bit()));
+        let mk = || vec![Param::new("w", ParamKind::Weight, Tensor::zeros(&[1024]))];
+        let g = Tensor::zeros(&[1024]);
+        let mut p1 = mk();
+        let mut p2 = mk();
+        full.step(&mut p1, &[g.clone()], 0.1);
+        quant.step(&mut p2, &[g], 0.1);
+        assert_eq!(full.state_bytes(), 4096);
+        // 512 code bytes + 8 blocks * 4 scale bytes.
+        assert_eq!(quant.state_bytes(), 512 + 32);
+    }
+}

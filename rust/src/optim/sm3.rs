@@ -1,0 +1,224 @@
+//! SM3 (Anil et al. '19) — the second sublinear baseline in the paper's
+//! Tab. 2. The cover is the experimentally-standard choice of co-dimension
+//! 1 slices (rows and columns for matrices); one accumulator per slice.
+//!
+//! SM3-II per step, for a 2-D parameter:
+//!   ν_ij = min(μ_row[i], μ_col[j]) + g²_ij
+//!   μ_row[i] = max_j ν_ij ;  μ_col[j] = max_i ν_ij
+//!   w -= lr * m, with m the β1-momentum of g / sqrt(ν)
+//! 1-D parameters degenerate to full AdaGrad accumulators.
+
+use super::{Hyper, Optimizer, Param};
+use crate::tensor::Tensor;
+
+enum Accum {
+    /// Per-axis max accumulators (2-D folded shape).
+    Cover {
+        rows: usize,
+        cols: usize,
+        mu_row: Vec<f32>,
+        mu_col: Vec<f32>,
+    },
+    /// Dense AdaGrad accumulator (1-D tensors).
+    Dense(Tensor),
+}
+
+pub struct Sm3 {
+    hp: Hyper,
+    t: usize,
+    acc: Vec<Accum>,
+    m: Vec<Tensor>,
+}
+
+impl Sm3 {
+    pub fn new(hp: Hyper) -> Sm3 {
+        Sm3 {
+            hp,
+            t: 0,
+            acc: Vec::new(),
+            m: Vec::new(),
+        }
+    }
+
+    fn lazy_init(&mut self, params: &[Param]) {
+        if !self.acc.is_empty() {
+            return;
+        }
+        for p in params {
+            let acc = if p.tensor.ndim() >= 2 {
+                let rows = p.tensor.shape[0];
+                let cols = p.tensor.numel() / rows;
+                Accum::Cover {
+                    rows,
+                    cols,
+                    mu_row: vec![0.0; rows],
+                    mu_col: vec![0.0; cols],
+                }
+            } else {
+                Accum::Dense(Tensor::zeros(&p.tensor.shape))
+            };
+            self.acc.push(acc);
+            self.m.push(Tensor::zeros(&p.tensor.shape));
+        }
+    }
+}
+
+impl Optimizer for Sm3 {
+    fn step(&mut self, params: &mut [Param], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        self.lazy_init(params);
+        self.t += 1;
+        let b1 = self.hp.beta1;
+        for (i, p) in params.iter_mut().enumerate() {
+            let g = &grads[i];
+            let m = &mut self.m[i];
+            match &mut self.acc[i] {
+                Accum::Cover {
+                    rows,
+                    cols,
+                    mu_row,
+                    mu_col,
+                } => {
+                    let (rows, cols) = (*rows, *cols);
+                    let mut new_row = vec![0.0f32; rows];
+                    let mut new_col = vec![0.0f32; cols];
+                    for r in 0..rows {
+                        let base = r * cols;
+                        let mur = mu_row[r];
+                        for c in 0..cols {
+                            let gv = g.data[base + c];
+                            let nu = mur.min(mu_col[c]) + gv * gv;
+                            let upd = gv / (nu.sqrt() + self.hp.eps);
+                            let mm = b1 * m.data[base + c] + (1.0 - b1) * upd;
+                            m.data[base + c] = mm;
+                            p.tensor.data[base + c] -= lr
+                                * (mm + self.hp.weight_decay * p.tensor.data[base + c]);
+                            if nu > new_row[r] {
+                                new_row[r] = nu;
+                            }
+                            if nu > new_col[c] {
+                                new_col[c] = nu;
+                            }
+                        }
+                    }
+                    *mu_row = new_row;
+                    *mu_col = new_col;
+                }
+                Accum::Dense(v) => {
+                    for k in 0..g.data.len() {
+                        let gv = g.data[k];
+                        v.data[k] += gv * gv;
+                        let upd = gv / (v.data[k].sqrt() + self.hp.eps);
+                        let mm = b1 * m.data[k] + (1.0 - b1) * upd;
+                        m.data[k] = mm;
+                        p.tensor.data[k] -=
+                            lr * (mm + self.hp.weight_decay * p.tensor.data[k]);
+                    }
+                }
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        let acc: usize = self
+            .acc
+            .iter()
+            .map(|a| match a {
+                Accum::Cover { mu_row, mu_col, .. } => 4 * (mu_row.len() + mu_col.len()),
+                Accum::Dense(t) => 4 * t.numel(),
+            })
+            .sum();
+        // Momentum buffers are full precision (as in the paper's beta1>0
+        // configuration).
+        let m: usize = self.m.iter().map(|t| 4 * t.numel()).sum();
+        acc + m
+    }
+
+    fn name(&self) -> String {
+        "32-bit SM3".to_string()
+    }
+
+    fn t(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::ParamKind;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let hp = Hyper {
+            weight_decay: 0.0,
+            ..Hyper::default()
+        };
+        let mut opt = Sm3::new(hp);
+        let mut rng = Pcg64::seeded(2);
+        let target = Tensor::randn(&[6, 5], 1.0, &mut rng);
+        let mut params = vec![Param::new(
+            "w",
+            ParamKind::Weight,
+            Tensor::zeros(&[6, 5]),
+        )];
+        for _ in 0..500 {
+            let g = params[0].tensor.sub(&target);
+            opt.step(&mut params, &[g], 0.1);
+        }
+        let rel = params[0].tensor.sub(&target).sq_l2() / target.sq_l2();
+        assert!(rel < 5e-2, "rel {rel}");
+    }
+
+    #[test]
+    fn accumulators_bound_squared_grad_sum() {
+        // SM3 invariant: mu_row[i] >= sum_t g_ij(t)^2 for every j (the
+        // accumulator upper-bounds the true per-coordinate sum).
+        let hp = Hyper::default();
+        let mut opt = Sm3::new(hp);
+        let mut rng = Pcg64::seeded(5);
+        let mut params = vec![Param::new(
+            "w",
+            ParamKind::Weight,
+            Tensor::zeros(&[4, 3]),
+        )];
+        let mut true_sum = Tensor::zeros(&[4, 3]);
+        for _ in 0..20 {
+            let g = Tensor::randn(&[4, 3], 1.0, &mut rng);
+            for k in 0..12 {
+                true_sum.data[k] += g.data[k] * g.data[k];
+            }
+            opt.step(&mut params, &[g], 0.01);
+        }
+        match &opt.acc[0] {
+            Accum::Cover { mu_row, mu_col, .. } => {
+                for i in 0..4 {
+                    for j in 0..3 {
+                        let bound = mu_row[i].min(mu_col[j]);
+                        assert!(
+                            bound + 1e-4 >= true_sum.data[i * 3 + j],
+                            "cover bound violated at ({i},{j})"
+                        );
+                    }
+                }
+            }
+            _ => panic!("expected cover accumulator"),
+        }
+    }
+
+    #[test]
+    fn accumulator_memory_sublinear() {
+        let hp = Hyper::default();
+        let mut opt = Sm3::new(hp);
+        let mut params = vec![Param::new(
+            "w",
+            ParamKind::Weight,
+            Tensor::zeros(&[128, 128]),
+        )];
+        let g = Tensor::zeros(&[128, 128]);
+        opt.step(&mut params, &[g], 0.01);
+        // accumulators 2*128 f32; momentum dense.
+        assert_eq!(opt.state_bytes(), 4 * 256 + 4 * 128 * 128);
+    }
+}

@@ -1,0 +1,93 @@
+//! Persistent storage forms of one optimizer-state tensor (paper Alg. 1's
+//! `s̄`): full precision, quantized, or factored. The trainer only ever
+//! holds one decompressed copy at a time (per-layer decompression).
+
+use super::factor::FactoredSecond;
+use crate::quant::{QuantMap, QuantizedTensor, Quantizer};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Storage of a first-moment (or momentum) tensor.
+pub enum MomentState {
+    F32(Tensor),
+    Quant(QuantizedTensor),
+}
+
+impl MomentState {
+    pub fn decompress(&self, map: Option<&QuantMap>) -> Tensor {
+        match self {
+            MomentState::F32(t) => t.clone(),
+            MomentState::Quant(q) => match map {
+                Some(m) => q.dequantize_with(m),
+                None => q.dequantize(),
+            },
+        }
+    }
+
+    pub fn compress(
+        value: Tensor,
+        quantizer: Option<&Quantizer>,
+        map: Option<&QuantMap>,
+        rng: &mut Pcg64,
+    ) -> MomentState {
+        match (quantizer, map) {
+            (Some(q), Some(m)) => MomentState::Quant(q.quantize_with(&value, m, rng)),
+            (Some(q), None) => MomentState::Quant(q.quantize(&value, rng)),
+            _ => MomentState::F32(value),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            MomentState::F32(t) => 4 * t.numel(),
+            MomentState::Quant(q) => q.bytes(),
+        }
+    }
+}
+
+/// Storage of a second-moment tensor; adds the factored form (§4.3).
+pub enum SecondState {
+    F32(Tensor),
+    Quant(QuantizedTensor),
+    Factored(FactoredSecond),
+}
+
+impl SecondState {
+    pub fn bytes(&self) -> usize {
+        match self {
+            SecondState::F32(t) => 4 * t.numel(),
+            SecondState::Quant(q) => q.bytes(),
+            SecondState::Factored(f) => f.bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Quantizer;
+
+    #[test]
+    fn moment_roundtrip_f32() {
+        let t = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let mut rng = Pcg64::seeded(0);
+        let s = MomentState::compress(t.clone(), None, None, &mut rng);
+        assert_eq!(s.decompress(None).data, t.data);
+        assert_eq!(s.bytes(), 12);
+    }
+
+    #[test]
+    fn moment_roundtrip_quantized() {
+        let q = Quantizer::first_moment_4bit();
+        let map = q.build_map();
+        let t = Tensor::from_vec(&[4], vec![0.5, -0.25, 1.0, 0.0]);
+        let mut rng = Pcg64::seeded(0);
+        let s = MomentState::compress(t.clone(), Some(&q), Some(&map), &mut rng);
+        let back = s.decompress(Some(&map));
+        // Values representable up to 4-bit DE resolution around scale 1.
+        for (a, b) in t.data.iter().zip(back.data.iter()) {
+            assert!((a - b).abs() < 0.15, "{a} vs {b}");
+        }
+        assert!(s.bytes() < 12);
+    }
+}

@@ -1,0 +1,165 @@
+//! Quantization-error metrics, including the paper's zero-point
+//! diagnostic: the deviation of the *inverse square root* of the second
+//! moment (Fig. 3), which is the quantity the Adam update actually
+//! consumes.
+
+use crate::tensor::Tensor;
+
+/// Plain elementwise error statistics between a tensor and its
+/// reconstruction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QuantError {
+    pub mse: f64,
+    pub mean_abs: f64,
+    pub max_abs: f64,
+    /// Relative error of the mean magnitude (scale preservation).
+    pub rel_mean_mag: f64,
+}
+
+pub fn reconstruction_error(x: &Tensor, y: &Tensor) -> QuantError {
+    assert_eq!(x.shape, y.shape);
+    let n = x.numel().max(1) as f64;
+    let mut se = 0.0f64;
+    let mut ae = 0.0f64;
+    let mut mx = 0.0f64;
+    let mut mag_x = 0.0f64;
+    let mut mag_y = 0.0f64;
+    for (&a, &b) in x.data.iter().zip(y.data.iter()) {
+        let d = (a - b) as f64;
+        se += d * d;
+        ae += d.abs();
+        mx = mx.max(d.abs());
+        mag_x += (a as f64).abs();
+        mag_y += (b as f64).abs();
+    }
+    QuantError {
+        mse: se / n,
+        mean_abs: ae / n,
+        max_abs: mx,
+        rel_mean_mag: if mag_x > 0.0 {
+            (mag_y - mag_x).abs() / mag_x
+        } else {
+            0.0
+        },
+    }
+}
+
+/// The paper's Fig. 3 transform: `h(v) = 1 / (sqrt(v) + eps)`. Quantizing
+/// `v` to zero sends `h` to `1/eps` (1e6 for the paper's eps) — the
+/// zero-point catastrophe.
+pub fn inv_sqrt_transform(v: &Tensor, eps: f32) -> Tensor {
+    v.map(|x| 1.0 / (x.max(0.0).sqrt() + eps))
+}
+
+/// Mean absolute log10 deviation of the inverse-sqrt transform — the
+/// scalar we report for the Fig. 3 reproduction. Large values mean the
+/// update direction is destroyed even when plain MSE looks small.
+pub fn inv_sqrt_log_deviation(v: &Tensor, v_hat: &Tensor, eps: f32) -> f64 {
+    assert_eq!(v.shape, v_hat.shape);
+    let h = inv_sqrt_transform(v, eps);
+    let h_hat = inv_sqrt_transform(v_hat, eps);
+    let n = v.numel().max(1) as f64;
+    h.data
+        .iter()
+        .zip(h_hat.data.iter())
+        .map(|(&a, &b)| ((b.max(1e-30) as f64).log10() - (a.max(1e-30) as f64).log10()).abs())
+        .sum::<f64>()
+        / n
+}
+
+/// One-sided *overshoot* of the inverse-sqrt transform:
+/// `mean log10(max(h(v̂)/h(v), 1))`. Quantizing v below its true value
+/// (worst case: to zero) makes the Adam update `m/(sqrt(v)+eps)` explode —
+/// this is the direction that destabilizes training. Overestimating v only
+/// shrinks the update (conservative), which the paper shows is benign;
+/// this metric therefore penalizes only the explosive direction.
+pub fn inv_sqrt_overshoot(v: &Tensor, v_hat: &Tensor, eps: f32) -> f64 {
+    assert_eq!(v.shape, v_hat.shape);
+    let h = inv_sqrt_transform(v, eps);
+    let h_hat = inv_sqrt_transform(v_hat, eps);
+    let n = v.numel().max(1) as f64;
+    h.data
+        .iter()
+        .zip(h_hat.data.iter())
+        .map(|(&a, &b)| {
+            let ratio = (b.max(1e-30) / a.max(1e-30)) as f64;
+            ratio.max(1.0).log10()
+        })
+        .sum::<f64>()
+        / n
+}
+
+/// Fraction of entries quantized to exact zero — the zero-point mass the
+/// paper's §4.1 histograms visualize.
+pub fn zero_fraction(x: &Tensor) -> f64 {
+    if x.numel() == 0 {
+        return 0.0;
+    }
+    x.data.iter().filter(|&&v| v == 0.0).count() as f64 / x.numel() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::mapping::MapKind;
+    use crate::quant::normalize::NormKind;
+    use crate::quant::quantizer::Quantizer;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn zero_error_on_identity() {
+        let x = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let e = reconstruction_error(&x, &x);
+        assert_eq!(e.mse, 0.0);
+        assert_eq!(e.max_abs, 0.0);
+    }
+
+    #[test]
+    fn inv_sqrt_punishes_zero_point() {
+        // Second-moment-like values; DE quantization sends the small ones
+        // to zero, inflating h(v) to ~1/eps.
+        let mut rng = Pcg64::seeded(3);
+        let v = Tensor::from_vec(
+            &[4096],
+            (0..4096)
+                .map(|_| {
+                    let z: f32 = rng.normal() * 1e-4;
+                    z * z + 1e-12
+                })
+                .collect(),
+        )
+        // One large outlier so the quantization scale is dominated.
+        .map(|x| x)
+        ;
+        let mut v = v;
+        v.data[0] = 1.0;
+        let eps = 1e-6;
+
+        let de = Quantizer::new(NormKind::PerTensor, MapKind::DynExp, 4, false);
+        let de0 = Quantizer::new(NormKind::PerTensor, MapKind::DynExpNoZero, 4, false);
+        let mut r = Pcg64::seeded(0);
+        let v_de = de.quantize(&v, &mut r).dequantize();
+        let v_de0 = de0.quantize(&v, &mut r).dequantize();
+
+        // DE quantizes the bulk to zero -> h explodes to ~1/eps; DE-0 only
+        // *overestimates* v (conservative direction), so its overshoot is
+        // near zero while DE's is large.
+        let over_de = inv_sqrt_overshoot(&v, &v_de, eps);
+        let over_de0 = inv_sqrt_overshoot(&v, &v_de0, eps);
+        assert!(
+            over_de > over_de0 * 10.0 && over_de > 0.5,
+            "DE overshoot {over_de} should dwarf DE-0 overshoot {over_de0}"
+        );
+        // And DE indeed produces a big zero mass while DE-0 produces none.
+        assert!(zero_fraction(&v_de) > 0.5);
+        assert_eq!(zero_fraction(&v_de0), 0.0);
+    }
+
+    #[test]
+    fn inv_sqrt_transform_range() {
+        let v = Tensor::from_vec(&[2], vec![0.0, 1.0]);
+        let h = inv_sqrt_transform(&v, 1e-6);
+        assert!((h.data[0] - 1e6).abs() / 1e6 < 1e-3);
+        assert!((h.data[1] - 1.0).abs() < 1e-3);
+    }
+}

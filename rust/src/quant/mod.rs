@@ -1,0 +1,20 @@
+//! The paper's core contribution: 4-bit quantization of optimizer states.
+//!
+//! * [`mapping`] — quantization mappings **T** (Linear, DE, DE-0);
+//! * [`normalize`] — normalization **N** (per-tensor, block-wise, rank-1);
+//! * [`packing`] — nibble/byte packing of codes;
+//! * [`stochastic`] — stochastic rounding;
+//! * [`quantizer`] — the composed quantizer `M ∘ N` and
+//!   [`quantizer::QuantizedTensor`], the persisted state form;
+//! * [`error`] — reconstruction metrics incl. the zero-point diagnostic.
+
+pub mod error;
+pub mod mapping;
+pub mod normalize;
+pub mod packing;
+pub mod quantizer;
+pub mod stochastic;
+
+pub use mapping::{MapKind, QuantMap};
+pub use normalize::{NormKind, Scales};
+pub use quantizer::{QuantizedTensor, Quantizer};

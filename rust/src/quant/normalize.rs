@@ -1,0 +1,284 @@
+//! Normalization operators **N** (paper §2.2, §4.2, App. G).
+//!
+//! A normalization assigns every tensor element a positive *quantization
+//! scale*; the normalized value `n_j = x_j / scale_j` lands in the unit
+//! interval. Scales are what gets stored alongside the packed codes, so
+//! each variant also knows its memory overhead:
+//!
+//! * **per-tensor** — one scale (`max |x|`);
+//! * **block-wise(B)** — the flattened tensor is cut into blocks of `B`
+//!   elements with one scale each (Dettmers'22 uses B=2048; the paper's
+//!   first-moment fix is B=128);
+//! * **rank-1** — per-axis max-magnitude statistics; the scale of element
+//!   `(i, j, ...)` is the **min** over axes of the statistic (paper
+//!   Alg. 4). Falls back to per-tensor for 1-D tensors.
+
+use crate::tensor::Tensor;
+
+/// Which normalization to apply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NormKind {
+    PerTensor,
+    Block(usize),
+    Rank1,
+}
+
+impl NormKind {
+    pub fn name(self) -> String {
+        match self {
+            NormKind::PerTensor => "per-tensor".to_string(),
+            NormKind::Block(b) => format!("B{b}"),
+            NormKind::Rank1 => "Rank-1".to_string(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<NormKind> {
+        let l = s.to_ascii_lowercase();
+        match l.as_str() {
+            "per-tensor" | "tensor" => Some(NormKind::PerTensor),
+            "rank-1" | "rank1" => Some(NormKind::Rank1),
+            _ => l
+                .strip_prefix('b')
+                .and_then(|n| n.parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .map(NormKind::Block),
+        }
+    }
+}
+
+/// Computed scales for one tensor, in the exact layout that would be
+/// persisted next to the packed codes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Scales {
+    PerTensor(f32),
+    /// One scale per block of `block` flattened elements.
+    Block { block: usize, scales: Vec<f32> },
+    /// One max-magnitude statistic vector per axis (paper Alg. 4).
+    Rank1 { per_axis: Vec<Vec<f32>> },
+}
+
+impl Scales {
+    /// Bytes consumed by the persisted scales (f32 each).
+    pub fn overhead_bytes(&self) -> usize {
+        match self {
+            Scales::PerTensor(_) => 4,
+            Scales::Block { scales, .. } => 4 * scales.len(),
+            Scales::Rank1 { per_axis } => 4 * per_axis.iter().map(|a| a.len()).sum::<usize>(),
+        }
+    }
+
+    /// The scale of flattened element `idx` of a tensor with `shape`.
+    #[inline]
+    pub fn scale_at(&self, idx: usize, shape: &[usize]) -> f32 {
+        match self {
+            Scales::PerTensor(s) => *s,
+            Scales::Block { block, scales } => scales[idx / block],
+            Scales::Rank1 { per_axis } => {
+                // Decompose idx into per-axis coordinates (row-major) and
+                // take the min statistic (Alg. 4 line 7).
+                let mut rem = idx;
+                let mut m = f32::INFINITY;
+                for (axis, &dim) in shape.iter().enumerate().rev() {
+                    let coord = rem % dim;
+                    rem /= dim;
+                    let s = per_axis[axis][coord];
+                    if s < m {
+                        m = s;
+                    }
+                }
+                m
+            }
+        }
+    }
+}
+
+/// Compute scales for `x` under `kind`. All statistics are max-magnitude,
+/// so they work for both signed (first moment) and non-negative (second
+/// moment) tensors.
+pub fn compute_scales(x: &Tensor, kind: NormKind) -> Scales {
+    match kind {
+        NormKind::PerTensor => Scales::PerTensor(x.abs_max()),
+        NormKind::Block(block) => {
+            assert!(block > 0);
+            let scales = x
+                .data
+                .chunks(block)
+                .map(|c| c.iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+                .collect();
+            Scales::Block { block, scales }
+        }
+        NormKind::Rank1 => {
+            if x.ndim() <= 1 {
+                // Paper §4.2: rank-1 falls back to per-tensor for 1-D.
+                return Scales::PerTensor(x.abs_max());
+            }
+            let shape = &x.shape;
+            let mut per_axis: Vec<Vec<f32>> =
+                shape.iter().map(|&d| vec![0.0f32; d]).collect();
+            // Single pass: update every axis statistic per element.
+            let mut coords = vec![0usize; shape.len()];
+            for &v in &x.data {
+                let a = v.abs();
+                for (axis, &c) in coords.iter().enumerate() {
+                    if a > per_axis[axis][c] {
+                        per_axis[axis][c] = a;
+                    }
+                }
+                // Increment row-major coordinates.
+                for axis in (0..shape.len()).rev() {
+                    coords[axis] += 1;
+                    if coords[axis] < shape[axis] {
+                        break;
+                    }
+                    coords[axis] = 0;
+                }
+            }
+            Scales::Rank1 { per_axis }
+        }
+    }
+}
+
+/// Normalize: `n_j = x_j / scale_j`, with zero scales mapping to 0 (an
+/// all-zero block has nothing to encode; 0/0 would poison the codes).
+pub fn normalize(x: &Tensor, scales: &Scales) -> Vec<f32> {
+    let shape = &x.shape;
+    x.data
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let s = scales.scale_at(i, shape);
+            if s > 0.0 {
+                v / s
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// Denormalize in place: `x_j = n_j * scale_j`.
+pub fn denormalize(n: &mut [f32], scales: &Scales, shape: &[usize]) {
+    for (i, v) in n.iter_mut().enumerate() {
+        *v *= scales.scale_at(i, shape);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn per_tensor_scale() {
+        let x = Tensor::from_vec(&[4], vec![1.0, -3.0, 0.5, 2.0]);
+        let s = compute_scales(&x, NormKind::PerTensor);
+        assert_eq!(s, Scales::PerTensor(3.0));
+        let n = normalize(&x, &s);
+        assert!(n.iter().all(|&v| v.abs() <= 1.0));
+        assert_eq!(s.overhead_bytes(), 4);
+    }
+
+    #[test]
+    fn blockwise_partial_last_block() {
+        let x = Tensor::from_vec(&[5], vec![1.0, 2.0, -4.0, 0.0, 8.0]);
+        let s = compute_scales(&x, NormKind::Block(2));
+        match &s {
+            Scales::Block { scales, .. } => assert_eq!(scales, &vec![2.0, 4.0, 8.0]),
+            _ => panic!(),
+        }
+        assert_eq!(s.scale_at(4, &[5]), 8.0);
+    }
+
+    #[test]
+    fn blockwise_zero_block_is_safe() {
+        let x = Tensor::from_vec(&[4], vec![0.0, 0.0, 1.0, -1.0]);
+        let s = compute_scales(&x, NormKind::Block(2));
+        let n = normalize(&x, &s);
+        assert!(n.iter().all(|v| v.is_finite()));
+        assert_eq!(&n[..2], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn rank1_matches_paper_definition_2d() {
+        // x = [[1, 8], [4, 2]]; r = [8, 4], c = [4, 8];
+        // scale(0,0)=min(8,4)=4, (0,1)=min(8,8)=8, (1,0)=min(4,4)=4, (1,1)=min(4,8)=4
+        let x = Tensor::from_vec(&[2, 2], vec![1.0, 8.0, 4.0, 2.0]);
+        let s = compute_scales(&x, NormKind::Rank1);
+        assert_eq!(s.scale_at(0, &x.shape), 4.0);
+        assert_eq!(s.scale_at(1, &x.shape), 8.0);
+        assert_eq!(s.scale_at(2, &x.shape), 4.0);
+        assert_eq!(s.scale_at(3, &x.shape), 4.0);
+        assert_eq!(s.overhead_bytes(), 16); // 2 + 2 stats
+    }
+
+    #[test]
+    fn rank1_on_1d_falls_back_to_per_tensor() {
+        let x = Tensor::from_vec(&[3], vec![1.0, -5.0, 2.0]);
+        let s = compute_scales(&x, NormKind::Rank1);
+        assert_eq!(s, Scales::PerTensor(5.0));
+    }
+
+    #[test]
+    fn rank1_3d_consistency() {
+        let mut rng = Pcg64::seeded(4);
+        let x = Tensor::randn(&[3, 4, 5], 1.0, &mut rng);
+        let s = compute_scales(&x, NormKind::Rank1);
+        // Every element's scale must be >= |x| (it's a max over a slab
+        // containing the element) and equal to the min over its 3 slabs.
+        for (i, &v) in x.data.iter().enumerate() {
+            let sc = s.scale_at(i, &x.shape);
+            assert!(sc >= v.abs() - 1e-6, "scale must bound the element");
+        }
+    }
+
+    #[test]
+    fn normalize_denormalize_is_identity_where_scale_positive() {
+        propcheck::check("norm-denorm-roundtrip", 60, |g| {
+            let n = g.len() * 4;
+            let rows = 1 + g.rng.below(4);
+            let cols = (n / rows).max(1);
+            let x = Tensor::from_vec(&[rows, cols], g.vec_f32(rows * cols));
+            let kind = *g.choose(&[
+                NormKind::PerTensor,
+                NormKind::Block(3),
+                NormKind::Block(128),
+                NormKind::Rank1,
+            ]);
+            let s = compute_scales(&x, kind);
+            let mut norm = normalize(&x, &s);
+            // All normalized magnitudes must be <= 1.
+            for (i, &v) in norm.iter().enumerate() {
+                if v.abs() > 1.0 + 1e-6 {
+                    return Err(format!("|n[{i}]| = {v} > 1 under {kind:?}"));
+                }
+            }
+            denormalize(&mut norm, &s, &x.shape);
+            for (i, (&a, &b)) in x.data.iter().zip(norm.iter()).enumerate() {
+                let tol = 1e-5 * a.abs().max(1.0);
+                if (a - b).abs() > tol {
+                    return Err(format!("roundtrip[{i}]: {a} vs {b} under {kind:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rank1_tighter_than_per_tensor() {
+        // Rank-1 scales are elementwise <= the per-tensor scale.
+        propcheck::check("rank1-le-pertensor", 40, |g| {
+            let r = 2 + g.rng.below(6);
+            let c = 2 + g.rng.below(6);
+            let x = Tensor::from_vec(&[r, c], g.vec_f32(r * c));
+            let s1 = compute_scales(&x, NormKind::Rank1);
+            let st = x.abs_max();
+            for i in 0..x.numel() {
+                if s1.scale_at(i, &x.shape) > st + 1e-6 {
+                    return Err("rank-1 scale exceeded per-tensor scale".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,138 @@
+//! Bit-packing of quantization codes. 4-bit codes are packed two per byte
+//! (low nibble first), 8-bit codes are stored as-is; other bitwidths are
+//! stored one code per byte (sub-byte packing beyond 4-bit is not worth
+//! the complexity for the bitwidths the paper evaluates).
+
+/// How many bytes `n` codes of `bits` width occupy.
+pub fn packed_len(n: usize, bits: u8) -> usize {
+    match bits {
+        4 => n.div_ceil(2),
+        _ => n,
+    }
+}
+
+/// Pack `codes` (each `< 2^bits`) into bytes.
+pub fn pack(codes: &[u8], bits: u8) -> Vec<u8> {
+    match bits {
+        4 => {
+            let mut out = vec![0u8; codes.len().div_ceil(2)];
+            for (i, &c) in codes.iter().enumerate() {
+                debug_assert!(c < 16, "4-bit code out of range: {c}");
+                if i % 2 == 0 {
+                    out[i / 2] = c & 0x0F;
+                } else {
+                    out[i / 2] |= (c & 0x0F) << 4;
+                }
+            }
+            out
+        }
+        _ => codes.to_vec(),
+    }
+}
+
+/// Unpack `n` codes of `bits` width from `bytes`.
+pub fn unpack(bytes: &[u8], n: usize, bits: u8) -> Vec<u8> {
+    match bits {
+        4 => {
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = bytes[i / 2];
+                out.push(if i % 2 == 0 { b & 0x0F } else { b >> 4 });
+            }
+            out
+        }
+        _ => bytes[..n].to_vec(),
+    }
+}
+
+/// Read a single code without unpacking the whole buffer.
+#[inline]
+pub fn get(bytes: &[u8], i: usize, bits: u8) -> u8 {
+    match bits {
+        4 => {
+            let b = bytes[i / 2];
+            if i % 2 == 0 {
+                b & 0x0F
+            } else {
+                b >> 4
+            }
+        }
+        _ => bytes[i],
+    }
+}
+
+/// Write a single code in place.
+#[inline]
+pub fn set(bytes: &mut [u8], i: usize, code: u8, bits: u8) {
+    match bits {
+        4 => {
+            let slot = &mut bytes[i / 2];
+            if i % 2 == 0 {
+                *slot = (*slot & 0xF0) | (code & 0x0F);
+            } else {
+                *slot = (*slot & 0x0F) | ((code & 0x0F) << 4);
+            }
+        }
+        _ => bytes[i] = code,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    #[test]
+    fn pack4_roundtrip_odd_len() {
+        let codes = vec![1u8, 15, 7, 0, 9];
+        let packed = pack(&codes, 4);
+        assert_eq!(packed.len(), 3);
+        assert_eq!(unpack(&packed, 5, 4), codes);
+    }
+
+    #[test]
+    fn pack8_is_identity() {
+        let codes = vec![0u8, 255, 128];
+        assert_eq!(pack(&codes, 8), codes);
+        assert_eq!(unpack(&codes, 3, 8), codes);
+    }
+
+    #[test]
+    fn single_element_access() {
+        let codes = vec![3u8, 12, 5, 8];
+        let mut packed = pack(&codes, 4);
+        for (i, &c) in codes.iter().enumerate() {
+            assert_eq!(get(&packed, i, 4), c);
+        }
+        set(&mut packed, 1, 9, 4);
+        assert_eq!(get(&packed, 1, 4), 9);
+        assert_eq!(get(&packed, 0, 4), 3); // neighbor untouched
+    }
+
+    #[test]
+    fn packed_len_matches() {
+        assert_eq!(packed_len(0, 4), 0);
+        assert_eq!(packed_len(1, 4), 1);
+        assert_eq!(packed_len(2, 4), 1);
+        assert_eq!(packed_len(3, 4), 2);
+        assert_eq!(packed_len(7, 8), 7);
+    }
+
+    #[test]
+    fn pack_unpack_property() {
+        propcheck::check("pack-bijective", 80, |g| {
+            let n = g.len0();
+            let bits = *g.choose(&[4u8, 8]);
+            let mask = if bits == 4 { 0x0F } else { 0xFF };
+            let codes: Vec<u8> = (0..n).map(|_| (g.rng.next_u32() as u8) & mask).collect();
+            let packed = pack(&codes, bits);
+            if packed.len() != packed_len(n, bits) {
+                return Err("packed_len mismatch".into());
+            }
+            if unpack(&packed, n, bits) != codes {
+                return Err("unpack(pack(x)) != x".into());
+            }
+            Ok(())
+        });
+    }
+}

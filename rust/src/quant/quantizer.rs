@@ -1,0 +1,404 @@
+//! The quantizer `Q = M ∘ N` (paper §2.2) and its persisted form,
+//! [`QuantizedTensor`]. This is the compression/decompression pair used by
+//! Alg. 1: the optimizer's working state exists in f32 only transiently;
+//! what lives in memory between steps is a `QuantizedTensor`.
+
+use super::mapping::{MapKind, QuantMap};
+use super::normalize::{compute_scales, denormalize, NormKind, Scales};
+use super::packing;
+use super::stochastic::encode_stochastic;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Quantizer configuration. Named `Norm./Map.` in the paper, e.g.
+/// `B128/DE` or `Rank-1/Linear`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Quantizer {
+    pub norm: NormKind,
+    pub map: MapKind,
+    pub bits: u8,
+    pub signed: bool,
+    pub stochastic: bool,
+}
+
+impl Quantizer {
+    pub fn new(norm: NormKind, map: MapKind, bits: u8, signed: bool) -> Quantizer {
+        Quantizer {
+            norm,
+            map,
+            bits,
+            signed,
+            stochastic: false,
+        }
+    }
+
+    /// Paper presets -------------------------------------------------
+
+    /// First-moment quantizer of 4-bit AdamW: B128/DE, signed.
+    pub fn first_moment_4bit() -> Quantizer {
+        Quantizer::new(NormKind::Block(128), MapKind::DynExp, 4, true)
+    }
+
+    /// Second-moment quantizer of 4-bit AdamW: Rank-1/Linear, unsigned.
+    pub fn second_moment_4bit() -> Quantizer {
+        Quantizer::new(NormKind::Rank1, MapKind::Linear, 4, false)
+    }
+
+    /// Dettmers'22 8-bit moments: B2048/DE (signed for m, unsigned for v).
+    pub fn moment_8bit(signed: bool) -> Quantizer {
+        Quantizer::new(NormKind::Block(2048), MapKind::DynExp, 8, signed)
+    }
+
+    pub fn with_stochastic(mut self, on: bool) -> Quantizer {
+        self.stochastic = on;
+        self
+    }
+
+    /// Paper-style name, e.g. `B128/DE` or `Rank-1/Linear`.
+    pub fn name(&self) -> String {
+        format!("{}/{}", self.norm.name(), self.map.name())
+    }
+
+    pub fn build_map(&self) -> QuantMap {
+        QuantMap::new(self.map, self.bits, self.signed)
+    }
+
+    /// Compress a tensor. `rng` is only consulted when
+    /// `self.stochastic` is set.
+    pub fn quantize(&self, x: &Tensor, rng: &mut Pcg64) -> QuantizedTensor {
+        let map = self.build_map();
+        self.quantize_with(x, &map, rng)
+    }
+
+    /// Compress with a prebuilt map (hot path: the map is cached by the
+    /// optimizer and reused across tensors and steps).
+    pub fn quantize_with(&self, x: &Tensor, map: &QuantMap, rng: &mut Pcg64) -> QuantizedTensor {
+        debug_assert_eq!(map.kind, self.map);
+        debug_assert_eq!(map.bits, self.bits);
+        let scales = compute_scales(x, self.norm);
+        let n = x.numel();
+        let mut codes = vec![0u8; n];
+        match &scales {
+            // Fast path for block scales: iterate block-wise, avoiding the
+            // per-element scale lookup.
+            Scales::Block { block, scales: sc } => {
+                // §Perf: two passes per block — a tight division loop the
+                // compiler vectorizes, then the branch-free encode. True
+                // division (not reciprocal multiply) keeps the codes
+                // bit-identical to the python oracle, which the golden
+                // parity tests require.
+                let mut norm = vec![0.0f32; (*block).min(x.data.len())];
+                for (bi, chunk) in x.data.chunks(*block).enumerate() {
+                    let s = sc[bi];
+                    let base = bi * *block;
+                    if s <= 0.0 {
+                        // All-zero block: every code encodes normalized 0.
+                        let zero_code = map.encode(0.0);
+                        for j in 0..chunk.len() {
+                            codes[base + j] = zero_code;
+                        }
+                        continue;
+                    }
+                    let nb = &mut norm[..chunk.len()];
+                    for (o, &v) in nb.iter_mut().zip(chunk.iter()) {
+                        *o = v / s;
+                    }
+                    let cb = &mut codes[base..base + chunk.len()];
+                    if self.stochastic {
+                        for (code, &nv) in cb.iter_mut().zip(nb.iter()) {
+                            *code = encode_stochastic(map, nv, rng);
+                        }
+                    } else {
+                        for (code, &nv) in cb.iter_mut().zip(nb.iter()) {
+                            *code = map.encode(nv);
+                        }
+                    }
+                }
+            }
+            // Fast path for rank-1 scales on 2-D tensors (§Perf): avoid
+            // the generic per-element div/mod coordinate decomposition.
+            Scales::Rank1 { per_axis } if x.ndim() == 2 && !self.stochastic => {
+                let (rows, cols) = x.dims2();
+                let r = &per_axis[0];
+                let c = &per_axis[1];
+                for i in 0..rows {
+                    let ri = r[i];
+                    let xrow = &x.data[i * cols..(i + 1) * cols];
+                    let crow = &mut codes[i * cols..(i + 1) * cols];
+                    for ((&v, code), &cj) in
+                        xrow.iter().zip(crow.iter_mut()).zip(c.iter())
+                    {
+                        let s = if ri < cj { ri } else { cj };
+                        let nrm = if s > 0.0 { v / s } else { 0.0 };
+                        *code = map.encode(nrm);
+                    }
+                }
+            }
+            _ => {
+                for (i, &v) in x.data.iter().enumerate() {
+                    let s = scales.scale_at(i, &x.shape);
+                    let nrm = if s > 0.0 { v / s } else { 0.0 };
+                    codes[i] = if self.stochastic {
+                        encode_stochastic(map, nrm, rng)
+                    } else {
+                        map.encode(nrm)
+                    };
+                }
+            }
+        }
+        QuantizedTensor {
+            shape: x.shape.clone(),
+            bits: self.bits,
+            packed: packing::pack(&codes, self.bits),
+            scales,
+            quantizer: *self,
+        }
+    }
+}
+
+/// A compressed tensor: packed codes + quantization scales. This is the
+/// persistent representation of an optimizer state (paper Alg. 1's `s̄`).
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub shape: Vec<usize>,
+    pub bits: u8,
+    pub packed: Vec<u8>,
+    pub scales: Scales,
+    pub quantizer: Quantizer,
+}
+
+impl QuantizedTensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Persistent memory footprint in bytes (codes + scales). This is the
+    /// quantity the paper's Tab. 4/5 memory accounting is built on.
+    pub fn bytes(&self) -> usize {
+        self.packed.len() + self.scales.overhead_bytes()
+    }
+
+    /// Decompress to f32 (`N^{-1} ∘ T`).
+    pub fn dequantize(&self) -> Tensor {
+        let map = self.quantizer.build_map();
+        self.dequantize_with(&map)
+    }
+
+    /// Decompress with a prebuilt map (hot path).
+    pub fn dequantize_with(&self, map: &QuantMap) -> Tensor {
+        let n = self.numel();
+        let mut out = Vec::with_capacity(n);
+        match &self.scales {
+            Scales::Block { block, scales } => {
+                // §Perf: decode two nibbles per byte, per block, without
+                // the per-element packed-index arithmetic. Requires even
+                // block size so blocks start on byte boundaries.
+                if self.bits == 4 && *block % 2 == 0 {
+                    out.resize(n, 0.0);
+                    for (bi, chunk) in out.chunks_mut(*block).enumerate() {
+                        let s = scales[bi];
+                        let base = bi * *block;
+                        let mut i = 0;
+                        while i + 1 < chunk.len() {
+                            let byte = self.packed[(base + i) / 2];
+                            chunk[i] = map.decode(byte & 0x0F) * s;
+                            chunk[i + 1] = map.decode(byte >> 4) * s;
+                            i += 2;
+                        }
+                        if i < chunk.len() {
+                            let code = packing::get(&self.packed, base + i, 4);
+                            chunk[i] = map.decode(code) * s;
+                        }
+                    }
+                    return Tensor::from_vec(&self.shape, out);
+                }
+                for i in 0..n {
+                    let code = packing::get(&self.packed, i, self.bits);
+                    out.push(map.decode(code) * scales[i / block]);
+                }
+            }
+            Scales::Rank1 { per_axis } if self.shape.len() == 2 => {
+                let rows = self.shape[0];
+                let cols = self.shape[1];
+                let r = &per_axis[0];
+                let c = &per_axis[1];
+                for i in 0..rows {
+                    let ri = r[i];
+                    for (j, &cj) in c.iter().enumerate().take(cols) {
+                        let code = packing::get(&self.packed, i * cols + j, self.bits);
+                        let s = if ri < cj { ri } else { cj };
+                        out.push(map.decode(code) * s);
+                    }
+                }
+            }
+            _ => {
+                for i in 0..n {
+                    let code = packing::get(&self.packed, i, self.bits);
+                    out.push(map.decode(code));
+                }
+                denormalize(&mut out, &self.scales, &self.shape);
+            }
+        }
+        Tensor::from_vec(&self.shape, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    fn roundtrip_err(q: Quantizer, x: &Tensor) -> f64 {
+        let mut rng = Pcg64::seeded(0);
+        let qt = q.quantize(x, &mut rng);
+        let y = qt.dequantize();
+        let mut worst = 0.0f64;
+        for (a, b) in x.data.iter().zip(y.data.iter()) {
+            worst = worst.max((a - b).abs() as f64);
+        }
+        worst
+    }
+
+    #[test]
+    fn exact_on_representable_values() {
+        // A tensor whose entries are exactly scale * T(i) must survive the
+        // round trip bit-for-bit.
+        let q = Quantizer::new(NormKind::PerTensor, MapKind::Linear, 4, false);
+        let map = q.build_map();
+        let vals: Vec<f32> = (0..16).map(|i| 2.0 * map.decode(i)).collect();
+        let x = Tensor::from_vec(&[16], vals.clone());
+        let mut rng = Pcg64::seeded(0);
+        let qt = q.quantize(&x, &mut rng);
+        assert_eq!(qt.dequantize().data, vals);
+    }
+
+    #[test]
+    fn bytes_accounting_4bit() {
+        let q = Quantizer::first_moment_4bit();
+        let x = Tensor::zeros(&[256]);
+        let mut rng = Pcg64::seeded(0);
+        let qt = q.quantize(&x, &mut rng);
+        // 256 codes -> 128 bytes; 2 blocks of 128 -> 8 scale bytes.
+        assert_eq!(qt.bytes(), 128 + 8);
+    }
+
+    #[test]
+    fn bytes_accounting_rank1() {
+        let q = Quantizer::second_moment_4bit();
+        let x = Tensor::full(&[64, 32], 0.5);
+        let mut rng = Pcg64::seeded(0);
+        let qt = q.quantize(&x, &mut rng);
+        // 2048 codes -> 1024 bytes; scales: 64 + 32 f32s.
+        assert_eq!(qt.bytes(), 1024 + 4 * 96);
+    }
+
+    #[test]
+    fn error_bounded_by_map_resolution() {
+        // For per-tensor linear quantization of non-negative input, the
+        // roundtrip error is at most scale * (gap/2 + smallest point).
+        propcheck::check("linear-roundtrip-bound", 60, |g| {
+            let n = g.len() * 3;
+            let x = Tensor::from_vec(&[n], g.vec_f32_nonneg(n));
+            let q = Quantizer::new(NormKind::PerTensor, MapKind::Linear, 4, false);
+            let mut rng = Pcg64::seeded(1);
+            let qt = q.quantize(&x, &mut rng);
+            let y = qt.dequantize();
+            let s = x.abs_max();
+            let bound = s * (1.0 / 16.0) + 1e-6; // first point is 1/16 from 0
+            for (a, b) in x.data.iter().zip(y.data.iter()) {
+                if (a - b).abs() > bound {
+                    return Err(format!("err {} > bound {bound}", (a - b).abs()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn smaller_blocks_never_much_worse() {
+        // B128 should approximate a column-outlier tensor much better than
+        // B2048 (the Fig. 1 phenomenon).
+        let mut rng = Pcg64::seeded(42);
+        let rows = 64;
+        let cols = 64;
+        let mut x = Tensor::randn(&[rows, cols], 0.001, &mut rng);
+        for i in 0..rows {
+            // Outlier column 7.
+            x.set2(i, 7, 1.0 + rng.next_f32());
+        }
+        let q_small = Quantizer::new(NormKind::Block(128), MapKind::DynExp, 4, true);
+        let q_large = Quantizer::new(NormKind::Block(2048), MapKind::DynExp, 4, true);
+        let e_small = roundtrip_err(q_small, &x);
+        let e_large = roundtrip_err(q_large, &x);
+        assert!(
+            e_small < e_large,
+            "B128 err {e_small} should beat B2048 err {e_large}"
+        );
+    }
+
+    #[test]
+    fn rank1_beats_per_tensor_on_cross_outliers() {
+        // Outliers concentrated in one row AND one column: rank-1 gives
+        // per-element scales that bound tightly; per-tensor is poisoned.
+        let mut rng = Pcg64::seeded(7);
+        let mut x = Tensor::randn(&[32, 32], 0.001, &mut rng);
+        for j in 0..32 {
+            x.set2(3, j, 2.0);
+        }
+        let q_r1 = Quantizer::new(NormKind::Rank1, MapKind::Linear, 4, false);
+        let q_pt = Quantizer::new(NormKind::PerTensor, MapKind::Linear, 4, false);
+        let x_abs = x.map(|v| v.abs());
+        let e_r1 = roundtrip_err(q_r1, &x_abs);
+        let e_pt = roundtrip_err(q_pt, &x_abs);
+        assert!(e_r1 <= e_pt, "rank-1 {e_r1} should be <= per-tensor {e_pt}");
+    }
+
+    #[test]
+    fn quantize_all_presets_roundtrip_property() {
+        propcheck::check("preset-roundtrip-finite", 50, |g| {
+            let r = 1 + g.rng.below(8);
+            let c = 1 + g.rng.below(40);
+            let signedness = g.bool();
+            let data = if signedness {
+                g.vec_f32(r * c)
+            } else {
+                g.vec_f32_nonneg(r * c)
+            };
+            let x = Tensor::from_vec(&[r, c], data);
+            let q = if signedness {
+                *g.choose(&[
+                    Quantizer::first_moment_4bit(),
+                    Quantizer::moment_8bit(true),
+                    Quantizer::first_moment_4bit().with_stochastic(true),
+                ])
+            } else {
+                *g.choose(&[
+                    Quantizer::second_moment_4bit(),
+                    Quantizer::moment_8bit(false),
+                    Quantizer::new(NormKind::Block(128), MapKind::DynExpNoZero, 4, false),
+                ])
+            };
+            let mut rng = Pcg64::seeded(g.case as u64);
+            let qt = q.quantize(&x, &mut rng);
+            let y = qt.dequantize_with(&q.build_map());
+            if y.any_nonfinite() {
+                return Err(format!("non-finite dequant under {}", q.name()));
+            }
+            // Dequantized magnitude can never exceed the scale bound.
+            let bound = x.abs_max() * 1.0001 + 1e-12;
+            for &v in &y.data {
+                if v.abs() > bound {
+                    return Err(format!("|deq| {v} > bound {bound} under {}", q.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn preset_names() {
+        assert_eq!(Quantizer::first_moment_4bit().name(), "B128/DE");
+        assert_eq!(Quantizer::second_moment_4bit().name(), "Rank-1/Linear");
+        assert_eq!(Quantizer::moment_8bit(true).name(), "B2048/DE");
+    }
+}

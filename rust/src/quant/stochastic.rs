@@ -1,0 +1,72 @@
+//! Stochastic rounding (paper App. E.3): instead of nearest-value
+//! rounding, a normalized value between two representable points is
+//! rounded up with probability proportional to its distance from the
+//! lower point, making the quantizer unbiased in expectation.
+
+use super::mapping::QuantMap;
+use crate::util::rng::Pcg64;
+
+/// Stochastically round `n` onto `map`. When `n` lies outside the table or
+/// exactly on a representable value the result is deterministic.
+#[inline]
+pub fn encode_stochastic(map: &QuantMap, n: f32, rng: &mut Pcg64) -> u8 {
+    let (lo, hi) = map.bracket(n);
+    if lo == hi {
+        return lo;
+    }
+    let a = map.decode(lo);
+    let b = map.decode(hi);
+    let p_hi = (n - a) / (b - a);
+    if rng.next_f32() < p_hi {
+        hi
+    } else {
+        lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::mapping::MapKind;
+
+    #[test]
+    fn deterministic_on_exact_values() {
+        let map = QuantMap::new(MapKind::Linear, 4, false);
+        let mut rng = Pcg64::seeded(0);
+        for q in 0..map.len() as u8 {
+            let v = map.decode(q);
+            assert_eq!(encode_stochastic(&map, v, &mut rng), q);
+        }
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let map = QuantMap::new(MapKind::Linear, 4, false);
+        // Pick a point 30% of the way between codes 4 (0.3125) and 5 (0.375).
+        let a = map.decode(4);
+        let b = map.decode(5);
+        let n = a + 0.3 * (b - a);
+        let mut rng = Pcg64::seeded(123);
+        let trials = 20_000;
+        let mut mean = 0.0f64;
+        for _ in 0..trials {
+            mean += map.decode(encode_stochastic(&map, n, &mut rng)) as f64;
+        }
+        mean /= trials as f64;
+        assert!(
+            (mean - n as f64).abs() < 2e-3,
+            "E[deq] = {mean}, want ~{n}"
+        );
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let map = QuantMap::new(MapKind::DynExp, 4, true);
+        let mut rng = Pcg64::seeded(1);
+        assert_eq!(encode_stochastic(&map, -9.0, &mut rng), 0);
+        assert_eq!(
+            encode_stochastic(&map, 9.0, &mut rng) as usize,
+            map.len() - 1
+        );
+    }
+}

@@ -1,0 +1,237 @@
+//! The fused 4-bit AdamW optimizer backed by the AOT Pallas kernel
+//! (`fused_adamw4_<chunk>.hlo.txt`) — the paper's "(fused)" rows in
+//! Tab. 4 and its FSDP-packed mode (App. D: FSDP packs parameters into
+//! 1-D arrays, where only block-wise quantization applies).
+//!
+//! Parameters are flattened into fixed-size chunks; each step sends
+//! (w, g, m codes, m scales, v codes, v scales, hyper) through PJRT and
+//! receives the updated weights and requantized states. Between steps the
+//! codes are stored nibble-packed, so persistent memory matches the
+//! native 4-bit optimizer exactly.
+
+use super::{literal_to_f32, tensor_to_literal, u8_literal, Executable, Runtime};
+use crate::optim::{Hyper, Optimizer, Param};
+use crate::quant::packing;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+
+struct ChunkState {
+    /// Nibble-packed m codes (chunk/2 bytes).
+    m_packed: Vec<u8>,
+    m_scales: Vec<f32>,
+    v_packed: Vec<u8>,
+    v_scales: Vec<f32>,
+}
+
+pub struct FusedAdamW4 {
+    hp: Hyper,
+    t: usize,
+    chunk: usize,
+    block: usize,
+    exec: Executable,
+    /// Flat parameter image (padded to a chunk multiple).
+    flat: Vec<f32>,
+    chunks: Vec<ChunkState>,
+    n_real: usize,
+}
+
+impl FusedAdamW4 {
+    pub fn load(rt: &Runtime, dir: &str, hp: Hyper) -> Result<FusedAdamW4> {
+        let manifest = super::ArtifactManifest::load(dir)?;
+        if manifest.fused_chunk == 0 {
+            return Err(anyhow!("manifest has no fused_adamw4 entry"));
+        }
+        let exec = rt.load(&format!(
+            "{dir}/fused_adamw4_{}.hlo.txt",
+            manifest.fused_chunk
+        ))?;
+        Ok(FusedAdamW4 {
+            hp,
+            t: 0,
+            chunk: manifest.fused_chunk,
+            block: manifest.fused_block,
+            exec,
+            flat: Vec::new(),
+            chunks: Vec::new(),
+            n_real: 0,
+        })
+    }
+
+    fn lazy_init(&mut self, params: &[Param]) {
+        if !self.chunks.is_empty() {
+            return;
+        }
+        self.n_real = params.iter().map(|p| p.tensor.numel()).sum();
+        let padded = self.n_real.div_ceil(self.chunk) * self.chunk;
+        self.flat = vec![0.0; padded];
+        let mut off = 0;
+        for p in params {
+            self.flat[off..off + p.tensor.numel()].copy_from_slice(&p.tensor.data);
+            off += p.tensor.numel();
+        }
+        let n_chunks = padded / self.chunk;
+        let scales_per_chunk = self.chunk / self.block;
+        // Zero states: code for normalized 0 under each map. scale = 0.
+        self.chunks = (0..n_chunks)
+            .map(|_| ChunkState {
+                m_packed: vec![0u8; packing::packed_len(self.chunk, 4)],
+                m_scales: vec![0.0; scales_per_chunk],
+                v_packed: vec![0u8; packing::packed_len(self.chunk, 4)],
+                v_scales: vec![0.0; scales_per_chunk],
+            })
+            .collect();
+        // The all-zeros code must decode to ~0 for both maps: for the
+        // signed DE map, code 0 is the most-negative value, but scale 0
+        // zeroes it out; dequant = T(code) * 0 = 0 regardless. OK.
+    }
+
+    /// One fused step over all chunks. `flat_grads` must be the gradient
+    /// image in the same flattening order.
+    fn step_flat(&mut self, flat_grads: &[f32], lr: f32) -> Result<()> {
+        self.t += 1;
+        let hp = self.hp;
+        let bc1 = 1.0 - hp.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - hp.beta2.powi(self.t as i32);
+        let hyper = [
+            lr,
+            hp.beta1,
+            hp.beta2,
+            hp.eps,
+            hp.weight_decay,
+            bc1,
+            bc2,
+            0.0,
+        ];
+        let n_chunks = self.chunks.len();
+        let scales_per_chunk = self.chunk / self.block;
+        for ci in 0..n_chunks {
+            let lo = ci * self.chunk;
+            let hi = lo + self.chunk;
+            let w = Tensor::from_vec(&[self.chunk], self.flat[lo..hi].to_vec());
+            let mut g = vec![0.0f32; self.chunk];
+            let avail = flat_grads.len().saturating_sub(lo).min(self.chunk);
+            g[..avail].copy_from_slice(&flat_grads[lo..lo + avail]);
+            let g = Tensor::from_vec(&[self.chunk], g);
+            let st = &self.chunks[ci];
+            let m_codes = packing::unpack(&st.m_packed, self.chunk, 4);
+            let v_codes = packing::unpack(&st.v_packed, self.chunk, 4);
+            let inputs = vec![
+                tensor_to_literal(&w)?,
+                tensor_to_literal(&g)?,
+                u8_literal(&m_codes, &[self.chunk])?,
+                tensor_to_literal(&Tensor::from_vec(
+                    &[scales_per_chunk],
+                    st.m_scales.clone(),
+                ))?,
+                u8_literal(&v_codes, &[self.chunk])?,
+                tensor_to_literal(&Tensor::from_vec(
+                    &[scales_per_chunk],
+                    st.v_scales.clone(),
+                ))?,
+                tensor_to_literal(&Tensor::from_vec(&[8], hyper.to_vec()))?,
+            ];
+            let outs = self.exec.run(&inputs)?;
+            if outs.len() != 5 {
+                return Err(anyhow!("fused artifact returned {} outputs", outs.len()));
+            }
+            let new_w = outs[0]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("fused w out: {e:?}"))?;
+            self.flat[lo..hi].copy_from_slice(&new_w);
+            let m_codes = outs[1]
+                .to_vec::<u8>()
+                .map_err(|e| anyhow!("fused m codes: {e:?}"))?;
+            let m_scales = outs[2]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("fused m scales: {e:?}"))?;
+            let v_codes = outs[3]
+                .to_vec::<u8>()
+                .map_err(|e| anyhow!("fused v codes: {e:?}"))?;
+            let v_scales = outs[4]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("fused v scales: {e:?}"))?;
+            let st = &mut self.chunks[ci];
+            st.m_packed = packing::pack(&m_codes, 4);
+            st.m_scales = m_scales;
+            st.v_packed = packing::pack(&v_codes, 4);
+            st.v_scales = v_scales;
+        }
+        Ok(())
+    }
+
+    /// Loss hook for parity checks: dequantized moments of the flat image.
+    pub fn chunk_count(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Dequantized (m, v) images for parity tests/analysis.
+    pub fn debug_moments(&self) -> (Vec<f32>, Vec<f32>) {
+        use crate::quant::{MapKind, QuantMap};
+        let m_map = QuantMap::new(MapKind::DynExp, 4, true);
+        let v_map = QuantMap::new(MapKind::Linear, 4, false);
+        let mut m = Vec::with_capacity(self.flat.len());
+        let mut v = Vec::with_capacity(self.flat.len());
+        for st in &self.chunks {
+            for i in 0..self.chunk {
+                let mc = packing::get(&st.m_packed, i, 4);
+                let vc = packing::get(&st.v_packed, i, 4);
+                m.push(m_map.decode(mc) * st.m_scales[i / self.block]);
+                v.push(v_map.decode(vc) * st.v_scales[i / self.block]);
+            }
+        }
+        (m, v)
+    }
+
+    pub fn flat_params(&self) -> &[f32] {
+        &self.flat[..self.n_real]
+    }
+}
+
+impl Optimizer for FusedAdamW4 {
+    fn step(&mut self, params: &mut [Param], grads: &[Tensor], lr: f32) {
+        self.lazy_init(params);
+        // Gather grads into the flat image order.
+        let mut flat_g = vec![0.0f32; self.n_real];
+        let mut off = 0;
+        for g in grads {
+            flat_g[off..off + g.numel()].copy_from_slice(&g.data);
+            off += g.numel();
+        }
+        // Scatter current params in (they may have been mutated elsewhere).
+        let mut off_w = 0;
+        for p in params.iter() {
+            self.flat[off_w..off_w + p.tensor.numel()].copy_from_slice(&p.tensor.data);
+            off_w += p.tensor.numel();
+        }
+        if let Err(e) = self.step_flat(&flat_g, lr) {
+            crate::util::log(1, "fused", &format!("fused step failed: {e}"));
+            return;
+        }
+        // Scatter updated weights back.
+        let mut off = 0;
+        for p in params.iter_mut() {
+            let n = p.tensor.numel();
+            p.tensor.data.copy_from_slice(&self.flat[off..off + n]);
+            off += n;
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.chunks
+            .iter()
+            .map(|c| {
+                c.m_packed.len()
+                    + c.v_packed.len()
+                    + 4 * (c.m_scales.len() + c.v_scales.len())
+            })
+            .sum()
+    }
+
+    fn name(&self) -> String {
+        "4-bit AdamW (fused)".to_string()
+    }
+
+    fn t(&self) -> usize {
+        self.t
+    }
+}

@@ -1,0 +1,183 @@
+//! The artifact manifest (`artifacts/manifest.json`, written by aot.py)
+//! and the PJRT-backed gradient engine built from it.
+
+use super::{i32_literal, literal_to_f32, literal_to_tensor, tensor_to_literal, Executable, Runtime};
+use crate::data::LmBatch;
+use crate::model::TransformerConfig;
+use crate::optim::Param;
+use crate::tensor::Tensor;
+use crate::train::trainer::GradEngine;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+
+/// One lowered model's description.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub batch: usize,
+    pub cfg: TransformerConfig,
+    /// (name, shape) in HLO parameter order (after the tokens input).
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub models: Vec<ModelEntry>,
+    pub fused_chunk: usize,
+    pub fused_block: usize,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &str) -> Result<ArtifactManifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} — run `make artifacts`"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        let mut m = ArtifactManifest::default();
+        if let Json::Obj(obj) = &j {
+            for (name, entry) in obj {
+                if name == "fused_adamw4" {
+                    m.fused_chunk = entry.get("chunk").and_then(|x| x.as_usize()).unwrap_or(0);
+                    m.fused_block = entry.get("block").and_then(|x| x.as_usize()).unwrap_or(128);
+                    continue;
+                }
+                let get = |k: &str| -> Result<usize> {
+                    entry
+                        .get(k)
+                        .and_then(|x| x.as_usize())
+                        .ok_or_else(|| anyhow!("manifest {name}: missing {k}"))
+                };
+                let cfg = TransformerConfig {
+                    vocab: get("vocab")?,
+                    d_model: get("d_model")?,
+                    n_heads: get("n_heads")?,
+                    d_ff: get("d_ff")?,
+                    n_layers: get("n_layers")?,
+                    max_seq: get("max_seq")?,
+                };
+                let params = entry
+                    .get("params")
+                    .and_then(|p| p.as_arr())
+                    .ok_or_else(|| anyhow!("manifest {name}: missing params"))?
+                    .iter()
+                    .map(|p| {
+                        let nm = p.get("name").and_then(|x| x.as_str()).unwrap_or("?");
+                        let sh = p
+                            .get("shape")
+                            .and_then(|x| x.as_usize_vec())
+                            .unwrap_or_default();
+                        (nm.to_string(), sh)
+                    })
+                    .collect();
+                m.models.push(ModelEntry {
+                    name: name.clone(),
+                    batch: get("batch")?,
+                    cfg,
+                    params,
+                });
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelEntry> {
+        self.models.iter().find(|m| m.name == name)
+    }
+}
+
+/// PJRT-backed gradient engine: executes `train_step_<name>.hlo.txt`.
+/// Implements the same [`GradEngine`] interface as the builtin engines, so
+/// the trainer, the experiment harness, and every optimizer work unchanged
+/// on top of it.
+pub struct PjrtTrainStep {
+    exec: Executable,
+    pub entry: ModelEntry,
+}
+
+impl PjrtTrainStep {
+    pub fn load(rt: &Runtime, dir: &str, name: &str) -> Result<PjrtTrainStep> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let entry = manifest
+            .model(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))?
+            .clone();
+        let exec = rt.load(&format!("{dir}/train_step_{name}.hlo.txt"))?;
+        Ok(PjrtTrainStep { exec, entry })
+    }
+
+    /// Validate that a parameter vector matches the manifest.
+    pub fn check_params(&self, params: &[Param]) -> Result<()> {
+        if params.len() != self.entry.params.len() {
+            return Err(anyhow!(
+                "param count mismatch: have {}, artifact wants {}",
+                params.len(),
+                self.entry.params.len()
+            ));
+        }
+        for (p, (name, shape)) in params.iter().zip(self.entry.params.iter()) {
+            if &p.tensor.shape != shape {
+                return Err(anyhow!(
+                    "shape mismatch for {name}: have {:?}, artifact wants {shape:?}",
+                    p.tensor.shape
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one train step: (loss, grads in param order).
+    pub fn step(&self, params: &[Param], batch: &LmBatch) -> Result<(f32, Vec<Tensor>)> {
+        let bsz = self.entry.batch;
+        let seq = self.entry.cfg.max_seq;
+        if batch.batch_size() != bsz || batch.seq_len() != seq {
+            return Err(anyhow!(
+                "batch shape ({}, {}) does not match artifact ({bsz}, {seq})",
+                batch.batch_size(),
+                batch.seq_len()
+            ));
+        }
+        let tokens: Vec<i32> = batch
+            .tokens
+            .iter()
+            .flat_map(|row| row.iter().map(|&t| t as i32))
+            .collect();
+        let mut inputs = Vec::with_capacity(1 + params.len());
+        inputs.push(i32_literal(&tokens, &[bsz, seq + 1])?);
+        for p in params {
+            inputs.push(tensor_to_literal(&p.tensor)?);
+        }
+        let outs = self.exec.run(&inputs)?;
+        if outs.len() != 1 + params.len() {
+            return Err(anyhow!(
+                "artifact returned {} outputs, expected {}",
+                outs.len(),
+                1 + params.len()
+            ));
+        }
+        let loss = literal_to_f32(&outs[0])?;
+        let grads = outs[1..]
+            .iter()
+            .zip(params.iter())
+            .map(|(l, p)| literal_to_tensor(l, &p.tensor.shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
+    }
+}
+
+impl GradEngine<LmBatch> for PjrtTrainStep {
+    fn loss_and_grads(&mut self, params: &[Param], batch: &LmBatch) -> (f32, Vec<Tensor>) {
+        match self.step(params, batch) {
+            Ok(r) => r,
+            Err(e) => {
+                // Surfaced as divergence by the trainer rather than a
+                // panic deep inside the loop.
+                crate::util::log(1, "pjrt", &format!("train step failed: {e}"));
+                (
+                    f32::NAN,
+                    params.iter().map(|p| Tensor::zeros(&p.tensor.shape)).collect(),
+                )
+            }
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! The PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path.
+//! Python is never invoked here — the artifacts directory is the entire
+//! interface between the layers.
+
+pub mod fused;
+pub mod manifest;
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+pub use manifest::{ArtifactManifest, PjrtTrainStep};
+
+/// A PJRT CPU client plus an executable cache. One per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load(&self, path: &str) -> Result<Executable> {
+        if !Path::new(path).exists() {
+            return Err(anyhow!(
+                "artifact {path} not found — run `make artifacts` first"
+            ));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path}: {e:?}"))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled computation. All our artifacts are lowered with
+/// `return_tuple=True`, so every execution returns one tuple literal that
+/// [`Executable::run`] unwraps into its elements.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Literal <-> native conversions
+// ---------------------------------------------------------------------
+
+/// f32 tensor -> literal of the same shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(&t.data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// Literal -> f32 tensor with the given shape (shape is known to callers
+/// from the artifact manifest).
+pub fn literal_to_tensor(l: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = l
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to f32 vec: {e:?}"))?;
+    Ok(Tensor::from_vec(shape, data))
+}
+
+/// i32 matrix literal (token batches).
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape i32 literal: {e:?}"))
+}
+
+/// u8 vector literal (quantization codes).
+pub fn u8_literal(data: &[u8], shape: &[usize]) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U8,
+        shape,
+        data,
+    )
+    .map_err(|e| anyhow!("u8 literal: {e:?}"))
+}
+
+/// Scalar f32 from a literal (losses).
+pub fn literal_to_f32(l: &xla::Literal) -> Result<f32> {
+    let v = l
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to f32: {e:?}"))?;
+    v.first()
+        .copied()
+        .ok_or_else(|| anyhow!("empty literal where scalar expected"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_tensor_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l, &[2, 3]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn u8_literal_roundtrip() {
+        let data = vec![0u8, 15, 7, 255];
+        let l = u8_literal(&data, &[4]).unwrap();
+        assert_eq!(l.to_vec::<u8>().unwrap(), data);
+    }
+}

@@ -1,0 +1,330 @@
+//! A small dense f32 tensor used throughout the native (rust) compute and
+//! quantization paths. It deliberately stays simple: contiguous row-major
+//! storage, explicit shapes, and exactly the operations the builtin
+//! training engine and the quantizers need.
+
+use crate::util::rng::Pcg64;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// N(0, std^2) init.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Pcg64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    /// Uniform(lo, hi) init.
+    pub fn rand_uniform(shape: &[usize], lo: f32, hi: f32, rng: &mut Pcg64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        for v in t.data.iter_mut() {
+            *v = rng.uniform(lo, hi);
+        }
+        t
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows/cols of a 2-D tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.ndim(), 2, "dims2 on shape {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        let (_, c) = self.dims2();
+        self.data[i * c + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        let (_, c) = self.dims2();
+        self.data[i * c + j] = v;
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?}",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.data.len() as f64
+        }
+    }
+
+    /// Root-mean-square of entries (Adafactor's RMS(x)).
+    pub fn rms(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        (self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+            / self.data.len() as f64)
+            .sqrt()
+    }
+
+    pub fn sq_l2(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn any_nonfinite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+
+    /// C = A @ B for 2-D tensors. The builtin engine's hot loop; written
+    /// in ikj order so the inner loop is a contiguous AXPY the compiler
+    /// auto-vectorizes.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (n, k) = self.dims2();
+        let (k2, m) = other.dims2();
+        assert_eq!(k, k2, "matmul inner dims: {:?} x {:?}", self.shape, other.shape);
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..n {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * m..(i + 1) * m];
+            for (p, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * m..(p + 1) * m];
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// C = A^T @ B (A: [k, n], B: [k, m] -> [n, m]); used by backprop.
+    pub fn matmul_tn(&self, other: &Tensor) -> Tensor {
+        let (k, n) = self.dims2();
+        let (k2, m) = other.dims2();
+        assert_eq!(k, k2);
+        let mut out = Tensor::zeros(&[n, m]);
+        for p in 0..k {
+            let arow = &self.data[p * n..(p + 1) * n];
+            let brow = &other.data[p * m..(p + 1) * m];
+            for (i, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * m..(i + 1) * m];
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// C = A @ B^T (A: [n, k], B: [m, k] -> [n, m]); used by backprop.
+    pub fn matmul_nt(&self, other: &Tensor) -> Tensor {
+        let (n, k) = self.dims2();
+        let (m, k2) = other.dims2();
+        assert_eq!(k, k2);
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..n {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..m {
+                let brow = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (a, b) in arow.iter().zip(brow.iter()) {
+                    acc += a * b;
+                }
+                out.data[i * m + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// Row-wise softmax in place (2-D).
+    pub fn softmax_rows(&mut self) {
+        let (n, m) = self.dims2();
+        for i in 0..n {
+            let row = &mut self.data[i * m..(i + 1) * m];
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut z = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                z += *v;
+            }
+            let inv = 1.0 / z;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.dims2(), (2, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn bad_shape_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![5., 6., 7., 8.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut rng = Pcg64::seeded(1);
+        let a = Tensor::randn(&[4, 5], 1.0, &mut rng);
+        let b = Tensor::randn(&[5, 3], 1.0, &mut rng);
+        let c = a.matmul(&b);
+        // A @ B == (A^T)^T @ B via matmul_tn with explicitly transposed A.
+        let mut at = Tensor::zeros(&[5, 4]);
+        for i in 0..4 {
+            for j in 0..5 {
+                at.set2(j, i, a.at2(i, j));
+            }
+        }
+        let c2 = at.matmul_tn(&b);
+        for (x, y) in c.data.iter().zip(c2.data.iter()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        // A @ B == matmul_nt(A, B^T)
+        let mut bt = Tensor::zeros(&[3, 5]);
+        for i in 0..5 {
+            for j in 0..3 {
+                bt.set2(j, i, b.at2(i, j));
+            }
+        }
+        let c3 = a.matmul_nt(&bt);
+        for (x, y) in c.data.iter().zip(c3.data.iter()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 0., 0., 0.]);
+        t.softmax_rows();
+        for i in 0..2 {
+            let s: f32 = (0..3).map(|j| t.at2(i, j)).sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert!((t.at2(1, 0) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn elementwise_and_stats() {
+        let a = Tensor::from_vec(&[3], vec![1., -2., 2.]);
+        let b = Tensor::from_vec(&[3], vec![1., 1., 1.]);
+        assert_eq!(a.add(&b).data, vec![2., -1., 3.]);
+        assert_eq!(a.abs_max(), 2.0);
+        assert!((a.rms() - (3.0f64).sqrt()).abs() < 1e-9);
+        assert!(!a.any_nonfinite());
+        assert!(a.map(|x| x / 0.0).any_nonfinite());
+    }
+}

@@ -1,0 +1,251 @@
+//! Builtin MLP classifier engine (manual backprop). The CLS-task
+//! surrogate: ReLU MLP + softmax cross-entropy over [`ClsBatch`]es.
+
+use crate::data::ClsBatch;
+use crate::model::MlpConfig;
+use crate::optim::Param;
+use crate::tensor::Tensor;
+
+pub struct MlpEngine {
+    pub cfg: MlpConfig,
+}
+
+impl MlpEngine {
+    pub fn new(cfg: MlpConfig) -> MlpEngine {
+        MlpEngine { cfg }
+    }
+
+    /// Forward + backward. Returns (mean CE loss, grads aligned with
+    /// `MlpConfig::param_specs` order).
+    pub fn loss_and_grads(&self, params: &[Param], batch: &ClsBatch) -> (f32, Vec<Tensor>) {
+        let (logits, hidden) = self.forward(params, &batch.x);
+        let (loss, dlogits) = softmax_xent(&logits, &batch.y);
+        let grads = self.backward(params, &batch.x, &hidden, dlogits);
+        (loss, grads)
+    }
+
+    /// Forward only; returns per-class logits.
+    pub fn forward_logits(&self, params: &[Param], x: &Tensor) -> Tensor {
+        self.forward(params, x).0
+    }
+
+    /// Accuracy on a batch.
+    pub fn accuracy(&self, params: &[Param], batch: &ClsBatch) -> f64 {
+        let logits = self.forward_logits(params, &batch.x);
+        let (n, c) = logits.dims2();
+        let mut correct = 0usize;
+        for i in 0..n {
+            let row = &logits.data[i * c..(i + 1) * c];
+            let mut best = 0;
+            for j in 1..c {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            if best == batch.y[i] {
+                correct += 1;
+            }
+        }
+        correct as f64 / n as f64
+    }
+
+    fn forward(&self, params: &[Param], x: &Tensor) -> (Tensor, Vec<Tensor>) {
+        let l = self.cfg.n_layers;
+        let mut hidden = Vec::with_capacity(l);
+        let mut h = x.clone();
+        for i in 0..l {
+            let w = &params[2 * i].tensor;
+            let b = &params[2 * i + 1].tensor;
+            let mut z = h.matmul(w);
+            add_bias(&mut z, b);
+            relu_inplace(&mut z);
+            hidden.push(z.clone());
+            h = z;
+        }
+        let w = &params[2 * l].tensor;
+        let b = &params[2 * l + 1].tensor;
+        let mut logits = h.matmul(w);
+        add_bias(&mut logits, b);
+        (logits, hidden)
+    }
+
+    fn backward(
+        &self,
+        params: &[Param],
+        x: &Tensor,
+        hidden: &[Tensor],
+        dlogits: Tensor,
+    ) -> Vec<Tensor> {
+        let l = self.cfg.n_layers;
+        let mut grads: Vec<Tensor> = params
+            .iter()
+            .map(|p| Tensor::zeros(&p.tensor.shape))
+            .collect();
+        // Head.
+        let last_h = if l == 0 { x } else { &hidden[l - 1] };
+        grads[2 * l] = last_h.matmul_tn(&dlogits);
+        grads[2 * l + 1] = sum_rows(&dlogits);
+        let mut dh = dlogits.matmul_nt(&params[2 * l].tensor);
+        // Hidden layers, last to first.
+        for i in (0..l).rev() {
+            // ReLU mask from the stored post-activation.
+            for (dv, hv) in dh.data.iter_mut().zip(hidden[i].data.iter()) {
+                if *hv <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+            let inp = if i == 0 { x } else { &hidden[i - 1] };
+            grads[2 * i] = inp.matmul_tn(&dh);
+            grads[2 * i + 1] = sum_rows(&dh);
+            if i > 0 {
+                dh = dh.matmul_nt(&params[2 * i].tensor);
+            }
+        }
+        grads
+    }
+}
+
+/// Mean softmax cross-entropy and its gradient w.r.t. logits.
+pub fn softmax_xent(logits: &Tensor, y: &[usize]) -> (f32, Tensor) {
+    let (n, c) = logits.dims2();
+    assert_eq!(n, y.len());
+    let mut probs = logits.clone();
+    probs.softmax_rows();
+    let mut loss = 0.0f64;
+    for (i, &yi) in y.iter().enumerate() {
+        loss -= (probs.data[i * c + yi].max(1e-12) as f64).ln();
+    }
+    let inv = 1.0 / n as f32;
+    let mut d = probs;
+    for (i, &yi) in y.iter().enumerate() {
+        d.data[i * c + yi] -= 1.0;
+    }
+    for v in d.data.iter_mut() {
+        *v *= inv;
+    }
+    ((loss / n as f64) as f32, d)
+}
+
+pub(crate) fn add_bias(z: &mut Tensor, b: &Tensor) {
+    let (n, c) = z.dims2();
+    assert_eq!(b.numel(), c);
+    for i in 0..n {
+        for j in 0..c {
+            z.data[i * c + j] += b.data[j];
+        }
+    }
+}
+
+pub(crate) fn relu_inplace(z: &mut Tensor) {
+    for v in z.data.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+pub(crate) fn sum_rows(z: &Tensor) -> Tensor {
+    let (n, c) = z.dims2();
+    let mut out = Tensor::zeros(&[c]);
+    for i in 0..n {
+        for j in 0..c {
+            out.data[j] += z.data[i * c + j];
+        }
+    }
+    out
+}
+
+impl Tensor {
+    /// Transposed copy of a 2-D tensor (helper for the builtin engines).
+    pub fn transpose2(self) -> Tensor {
+        let (n, m) = self.dims2();
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..n {
+            for j in 0..m {
+                out.data[j * n + i] = self.data[i * m + j];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ClusterData;
+    use crate::optim::{build, Hyper};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn gradient_check_finite_differences() {
+        let cfg = MlpConfig {
+            d_in: 5,
+            d_hidden: 7,
+            n_layers: 2,
+            n_classes: 3,
+        };
+        let engine = MlpEngine::new(cfg);
+        let mut rng = Pcg64::seeded(123);
+        let mut params = cfg.init_params(&mut rng);
+        let x = Tensor::randn(&[4, 5], 1.0, &mut rng);
+        let y = vec![0usize, 2, 1, 2];
+        let batch = ClsBatch { x, y };
+        let (_, grads) = engine.loss_and_grads(&params, &batch);
+        let eps = 1e-3f32;
+        let mut checked = 0;
+        for pi in 0..params.len() {
+            // Spot-check a few coordinates per tensor.
+            let n = params[pi].tensor.numel();
+            for k in [0, n / 2, n - 1] {
+                let orig = params[pi].tensor.data[k];
+                params[pi].tensor.data[k] = orig + eps;
+                let (lp, _) = engine.loss_and_grads(&params, &batch);
+                params[pi].tensor.data[k] = orig - eps;
+                let (lm, _) = engine.loss_and_grads(&params, &batch);
+                params[pi].tensor.data[k] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grads[pi].data[k];
+                assert!(
+                    (fd - an).abs() < 2e-2 * (1.0 + fd.abs().max(an.abs())),
+                    "param {pi} ({}) coord {k}: fd={fd} analytic={an}",
+                    params[pi].name
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked >= 18);
+    }
+
+    #[test]
+    fn trains_to_high_accuracy() {
+        let cfg = MlpConfig {
+            d_in: 16,
+            d_hidden: 32,
+            n_layers: 2,
+            n_classes: 4,
+        };
+        let engine = MlpEngine::new(cfg);
+        let data = ClusterData::new(16, 4, 7);
+        let mut rng = Pcg64::seeded(5);
+        let mut params = cfg.init_params(&mut rng);
+        let mut opt = build("adamw32", Hyper::default()).unwrap();
+        for _ in 0..200 {
+            let batch = data.sample(32, &mut rng);
+            let (_, grads) = engine.loss_and_grads(&params, &batch);
+            opt.step(&mut params, &grads, 3e-3);
+        }
+        let test = data.sample(400, &mut rng);
+        let acc = engine.accuracy(&params, &test);
+        assert!(acc > 0.6, "accuracy {acc}");
+    }
+
+    #[test]
+    fn softmax_xent_gradient_sums_to_zero_per_row() {
+        let logits = Tensor::from_vec(&[2, 3], vec![0.1, 0.5, -0.2, 1.0, 0.0, 0.0]);
+        let (_, d) = softmax_xent(&logits, &[1, 0]);
+        for i in 0..2 {
+            let s: f32 = (0..3).map(|j| d.data[i * 3 + j]).sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Builtin (native, no-PJRT) training: gradient engines with manual
+//! backprop, the generic trainer loop, and checkpointing.
+
+pub mod checkpoint;
+pub mod mlp;
+pub mod trainer;
+pub mod transformer;
+
+pub use mlp::MlpEngine;
+pub use trainer::{GradEngine, LrSchedule, Trainer, TrainReport};
+pub use transformer::TransformerEngine;

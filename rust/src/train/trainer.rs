@@ -1,0 +1,275 @@
+//! The training loop: gradient engine + optimizer + schedule + divergence
+//! detection. All paper experiments (tables 1/2/3/6, figure 4) run through
+//! [`Trainer::run`]; the "Unstable %" column of Tab. 1 is exactly the
+//! fraction of seeds for which [`TrainReport::diverged`] is set.
+
+use crate::data::{ClsBatch, LmBatch};
+use crate::optim::{Optimizer, Param};
+use crate::tensor::Tensor;
+use crate::util::stats::Timer;
+
+/// A gradient engine: anything that can turn (params, batch) into
+/// (loss, grads). Implemented by the builtin MLP/transformer engines and
+/// by the PJRT runtime.
+pub trait GradEngine<B> {
+    fn loss_and_grads(&mut self, params: &[Param], batch: &B) -> (f32, Vec<Tensor>);
+}
+
+impl<F, B> GradEngine<B> for F
+where
+    F: FnMut(&[Param], &B) -> (f32, Vec<Tensor>),
+{
+    fn loss_and_grads(&mut self, params: &[Param], batch: &B) -> (f32, Vec<Tensor>) {
+        self(params, batch)
+    }
+}
+
+/// Learning-rate schedule: linear warmup then linear decay to zero (the
+/// paper's fine-tuning recipe) or constant.
+#[derive(Clone, Copy, Debug)]
+pub enum LrSchedule {
+    Constant(f32),
+    LinearWarmupDecay {
+        peak: f32,
+        warmup: usize,
+        total: usize,
+    },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match *self {
+            LrSchedule::Constant(lr) => lr,
+            LrSchedule::LinearWarmupDecay {
+                peak,
+                warmup,
+                total,
+            } => {
+                if step < warmup {
+                    peak * (step + 1) as f32 / warmup.max(1) as f32
+                } else if step >= total {
+                    0.0
+                } else {
+                    peak * (total - step) as f32 / (total - warmup).max(1) as f32
+                }
+            }
+        }
+    }
+}
+
+/// Divergence detector: training is "unstable" when the loss goes
+/// non-finite or exceeds `blowup_factor ×` the initial-window mean after
+/// the warmup window (the paper's Tab. 1 notion, made precise).
+#[derive(Clone, Copy, Debug)]
+pub struct DivergenceRule {
+    pub warmup_steps: usize,
+    pub blowup_factor: f32,
+}
+
+impl Default for DivergenceRule {
+    fn default() -> DivergenceRule {
+        DivergenceRule {
+            warmup_steps: 20,
+            blowup_factor: 2.5,
+        }
+    }
+}
+
+/// Outcome of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub diverged: bool,
+    pub final_loss: f32,
+    /// Mean loss over the last 10% of steps (smoother than final_loss).
+    pub tail_loss: f32,
+    pub steps: usize,
+    pub total_seconds: f64,
+    pub step_seconds: f64,
+    pub state_bytes: usize,
+}
+
+impl TrainReport {
+    fn from_losses(
+        losses: Vec<f32>,
+        diverged: bool,
+        total_seconds: f64,
+        state_bytes: usize,
+    ) -> TrainReport {
+        let steps = losses.len();
+        let final_loss = losses.last().copied().unwrap_or(f32::NAN);
+        let tail_n = (steps / 10).max(1).min(steps.max(1));
+        let tail_loss = if steps == 0 {
+            f32::NAN
+        } else {
+            losses[steps - tail_n..].iter().sum::<f32>() / tail_n as f32
+        };
+        TrainReport {
+            losses,
+            diverged,
+            final_loss,
+            tail_loss,
+            steps,
+            total_seconds,
+            step_seconds: if steps > 0 {
+                total_seconds / steps as f64
+            } else {
+                0.0
+            },
+            state_bytes,
+        }
+    }
+}
+
+/// Generic trainer over any batch type / engine / sampler.
+pub struct Trainer {
+    pub schedule: LrSchedule,
+    pub divergence: DivergenceRule,
+    pub steps: usize,
+    /// Stop early on divergence (keeps ablation sweeps fast).
+    pub stop_on_divergence: bool,
+}
+
+impl Trainer {
+    pub fn new(steps: usize, schedule: LrSchedule) -> Trainer {
+        Trainer {
+            schedule,
+            divergence: DivergenceRule::default(),
+            steps,
+            stop_on_divergence: true,
+        }
+    }
+
+    /// Run the loop. `sampler(step)` provides the batch for each step.
+    pub fn run<B>(
+        &self,
+        params: &mut Vec<Param>,
+        opt: &mut dyn Optimizer,
+        engine: &mut dyn GradEngine<B>,
+        mut sampler: impl FnMut(usize) -> B,
+    ) -> TrainReport {
+        let timer = Timer::start();
+        let mut losses = Vec::with_capacity(self.steps);
+        let mut diverged = false;
+        let mut ref_loss = f32::NAN;
+        for step in 0..self.steps {
+            let batch = sampler(step);
+            let (loss, grads) = engine.loss_and_grads(params, &batch);
+            losses.push(loss);
+            if step + 1 == self.divergence.warmup_steps.max(1) {
+                ref_loss = losses.iter().sum::<f32>() / losses.len() as f32;
+            }
+            let blown = !loss.is_finite()
+                || (step >= self.divergence.warmup_steps
+                    && ref_loss.is_finite()
+                    && loss > ref_loss * self.divergence.blowup_factor)
+                || params.iter().any(|p| p.tensor.any_nonfinite());
+            if blown {
+                diverged = true;
+                if self.stop_on_divergence {
+                    break;
+                }
+            }
+            let lr = self.schedule.at(step);
+            opt.step(params, &grads, lr);
+        }
+        TrainReport::from_losses(losses, diverged, timer.seconds(), opt.state_bytes())
+    }
+}
+
+/// Convenience samplers -----------------------------------------------
+
+/// Build an LM batch sampler from a corpus closure.
+pub fn lm_sampler<'a>(
+    mut f: impl FnMut(usize) -> LmBatch + 'a,
+) -> impl FnMut(usize) -> LmBatch + 'a {
+    move |s| f(s)
+}
+
+/// Build a classification sampler.
+pub fn cls_sampler<'a>(
+    mut f: impl FnMut(usize) -> ClsBatch + 'a,
+) -> impl FnMut(usize) -> ClsBatch + 'a {
+    move |s| f(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ClusterData;
+    use crate::model::MlpConfig;
+    use crate::optim::{build, Hyper};
+    use crate::train::mlp::MlpEngine;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn schedule_shapes() {
+        let s = LrSchedule::LinearWarmupDecay {
+            peak: 1.0,
+            warmup: 10,
+            total: 110,
+        };
+        assert!(s.at(0) > 0.0 && s.at(0) < 0.2);
+        assert!((s.at(9) - 1.0).abs() < 1e-6);
+        assert!(s.at(60) < 1.0 && s.at(60) > 0.0);
+        assert_eq!(s.at(110), 0.0);
+        assert_eq!(LrSchedule::Constant(0.5).at(1000), 0.5);
+    }
+
+    #[test]
+    fn trainer_trains_mlp_and_reports() {
+        let cfg = MlpConfig::tiny();
+        let data = ClusterData::new(cfg.d_in, cfg.n_classes, 3);
+        let mut rng = Pcg64::seeded(0);
+        let mut params = cfg.init_params(&mut rng);
+        let mut opt = build("adamw4", Hyper::default()).unwrap();
+        let engine = MlpEngine::new(cfg);
+        let mut engine_fn =
+            |p: &[Param], b: &crate::data::ClsBatch| engine.loss_and_grads(p, b);
+        let trainer = Trainer::new(80, LrSchedule::Constant(3e-3));
+        let mut sample_rng = Pcg64::seeded(1);
+        let report = trainer.run(&mut params, opt.as_mut(), &mut engine_fn, |_| {
+            data.sample(16, &mut sample_rng)
+        });
+        assert!(!report.diverged);
+        assert_eq!(report.steps, 80);
+        assert!(report.final_loss < report.losses[0]);
+        assert!(report.state_bytes > 0);
+        assert!(report.step_seconds > 0.0);
+    }
+
+    #[test]
+    fn divergence_detection_fires_on_nan() {
+        let mut params = vec![Param::new(
+            "w",
+            crate::optim::ParamKind::Weight,
+            Tensor::zeros(&[4]),
+        )];
+        let mut opt = build("adamw32", Hyper::default()).unwrap();
+        let mut engine_fn = |_: &[Param], s: &usize| {
+            let loss = if *s > 5 { f32::NAN } else { 1.0 };
+            (loss, vec![Tensor::zeros(&[4])])
+        };
+        let trainer = Trainer::new(50, LrSchedule::Constant(1e-3));
+        let report = trainer.run(&mut params, opt.as_mut(), &mut engine_fn, |s| s);
+        assert!(report.diverged);
+        assert!(report.steps < 50, "stopped early at {}", report.steps);
+    }
+
+    #[test]
+    fn divergence_detection_fires_on_blowup() {
+        let mut params = vec![Param::new(
+            "w",
+            crate::optim::ParamKind::Weight,
+            Tensor::zeros(&[4]),
+        )];
+        let mut opt = build("adamw32", Hyper::default()).unwrap();
+        let mut engine_fn = |_: &[Param], s: &usize| {
+            let loss = if *s > 30 { 100.0 } else { 1.0 };
+            (loss, vec![Tensor::zeros(&[4])])
+        };
+        let trainer = Trainer::new(60, LrSchedule::Constant(1e-3));
+        let report = trainer.run(&mut params, opt.as_mut(), &mut engine_fn, |s| s);
+        assert!(report.diverged);
+    }
+}

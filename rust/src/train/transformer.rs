@@ -1,0 +1,664 @@
+//! Builtin decoder-only transformer LM with full manual backprop.
+//!
+//! This is the native (no-PJRT) gradient engine: it produces *real* Adam
+//! moment tensors with the row/column outlier structure the paper
+//! analyzes, and powers every convergence experiment that needs to run in
+//! milliseconds on CPU. The parameter order matches
+//! [`TransformerConfig::param_specs`] exactly.
+//!
+//! Architecture (GPT-2 style, pre-LN):
+//!   x = tok_emb[t] + pos_emb
+//!   per layer: x += Wo·Attn(LN1(x));  x += W2·relu(W1·LN2(x) + b1) + b2
+//!   logits = LN_f(x) · W_lm
+
+use crate::data::LmBatch;
+use crate::model::TransformerConfig;
+use crate::optim::Param;
+use crate::tensor::Tensor;
+
+use super::mlp::{add_bias, relu_inplace, sum_rows};
+
+const LN_EPS: f32 = 1e-5;
+
+/// Cached LayerNorm statistics for backward.
+struct LnCache {
+    xhat: Tensor,        // normalized input
+    inv_std: Vec<f32>,   // 1/sigma per row
+}
+
+/// Per-layer forward cache.
+struct LayerCache {
+    x_in: Tensor,   // residual stream entering the layer
+    ln1: LnCache,
+    a1: Tensor,     // LN1 output
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    probs: Vec<Tensor>, // attention probs per (batch*head), each [T, T]
+    attn_concat: Tensor, // heads concatenated, pre-Wo
+    x_mid: Tensor,  // after attention residual
+    ln2: LnCache,
+    a2: Tensor,     // LN2 output
+    h1: Tensor,     // post-ReLU hidden
+}
+
+pub struct TransformerEngine {
+    pub cfg: TransformerConfig,
+}
+
+/// Offsets of each parameter inside the flat parameter vector.
+struct Idx;
+impl Idx {
+    const TOK: usize = 0;
+    const POS: usize = 1;
+    const PER_LAYER: usize = 12;
+    fn layer(l: usize, o: usize) -> usize {
+        2 + l * Self::PER_LAYER + o
+    }
+    // per-layer offsets
+    const LN1G: usize = 0;
+    const LN1B: usize = 1;
+    const WQ: usize = 2;
+    const WK: usize = 3;
+    const WV: usize = 4;
+    const WO: usize = 5;
+    const LN2G: usize = 6;
+    const LN2B: usize = 7;
+    const FC1: usize = 8;
+    const B1: usize = 9;
+    const FC2: usize = 10;
+    const B2: usize = 11;
+    fn lnf_g(n_layers: usize) -> usize {
+        2 + n_layers * Self::PER_LAYER
+    }
+    fn lnf_b(n_layers: usize) -> usize {
+        Self::lnf_g(n_layers) + 1
+    }
+    fn lm_head(n_layers: usize) -> usize {
+        Self::lnf_g(n_layers) + 2
+    }
+}
+
+fn layernorm(x: &Tensor, g: &Tensor, b: &Tensor) -> (Tensor, LnCache) {
+    let (n, c) = x.dims2();
+    let mut out = Tensor::zeros(&[n, c]);
+    let mut xhat = Tensor::zeros(&[n, c]);
+    let mut inv_std = vec![0.0f32; n];
+    for i in 0..n {
+        let row = &x.data[i * c..(i + 1) * c];
+        let mean: f32 = row.iter().sum::<f32>() / c as f32;
+        let var: f32 = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / c as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        inv_std[i] = inv;
+        for j in 0..c {
+            let xh = (row[j] - mean) * inv;
+            xhat.data[i * c + j] = xh;
+            out.data[i * c + j] = xh * g.data[j] + b.data[j];
+        }
+    }
+    (out, LnCache { xhat, inv_std })
+}
+
+/// Backward through LayerNorm. Returns dx; accumulates dg/db.
+fn layernorm_backward(
+    dy: &Tensor,
+    cache: &LnCache,
+    g: &Tensor,
+    dg: &mut Tensor,
+    db: &mut Tensor,
+) -> Tensor {
+    let (n, c) = dy.dims2();
+    let mut dx = Tensor::zeros(&[n, c]);
+    for i in 0..n {
+        let base = i * c;
+        let mut mean_dyg = 0.0f32;
+        let mut mean_dyg_xhat = 0.0f32;
+        for j in 0..c {
+            let dyg = dy.data[base + j] * g.data[j];
+            let xh = cache.xhat.data[base + j];
+            mean_dyg += dyg;
+            mean_dyg_xhat += dyg * xh;
+            dg.data[j] += dy.data[base + j] * xh;
+            db.data[j] += dy.data[base + j];
+        }
+        mean_dyg /= c as f32;
+        mean_dyg_xhat /= c as f32;
+        let inv = cache.inv_std[i];
+        for j in 0..c {
+            let dyg = dy.data[base + j] * g.data[j];
+            let xh = cache.xhat.data[base + j];
+            dx.data[base + j] = inv * (dyg - mean_dyg - xh * mean_dyg_xhat);
+        }
+    }
+    dx
+}
+
+impl TransformerEngine {
+    pub fn new(cfg: TransformerConfig) -> TransformerEngine {
+        assert_eq!(cfg.d_model % cfg.n_heads, 0, "d_model % n_heads != 0");
+        TransformerEngine { cfg }
+    }
+
+    /// Forward + backward over a token batch. Returns (mean next-token CE
+    /// loss in nats, grads aligned with `param_specs`).
+    pub fn loss_and_grads(&self, params: &[Param], batch: &LmBatch) -> (f32, Vec<Tensor>) {
+        let (loss, caches, xf, lnf, logits_probs, flat_targets) =
+            self.forward(params, batch, true);
+        let grads = self.backward(
+            params,
+            batch,
+            caches.unwrap(),
+            xf.unwrap(),
+            lnf.unwrap(),
+            logits_probs.unwrap(),
+            &flat_targets,
+        );
+        (loss, grads)
+    }
+
+    /// Forward only; returns mean loss.
+    pub fn loss(&self, params: &[Param], batch: &LmBatch) -> f32 {
+        self.forward(params, batch, false).0
+    }
+
+    /// Greedy next-token predictions for every position: `[B*T]` argmax of
+    /// the output distribution. Used by the evaluation metrics.
+    pub fn predictions(&self, params: &[Param], batch: &LmBatch) -> Vec<u32> {
+        let (_, _, _, _, probs, _) = self.forward(params, batch, true);
+        let probs = probs.expect("forward(keep) returns probs");
+        let (n, v) = probs.dims2();
+        (0..n)
+            .map(|i| {
+                let row = &probs.data[i * v..(i + 1) * v];
+                let mut best = 0usize;
+                for j in 1..v {
+                    if row[j] > row[best] {
+                        best = j;
+                    }
+                }
+                best as u32
+            })
+            .collect()
+    }
+
+    /// Top-1 next-token accuracy over all positions: (correct, total).
+    pub fn next_token_accuracy(&self, params: &[Param], batch: &LmBatch) -> (usize, usize) {
+        let preds = self.predictions(params, batch);
+        let t_len = batch.seq_len();
+        let mut correct = 0usize;
+        for (b, seq) in batch.tokens.iter().enumerate() {
+            for t in 0..t_len {
+                if preds[b * t_len + t] == seq[t + 1] {
+                    correct += 1;
+                }
+            }
+        }
+        (correct, preds.len())
+    }
+
+    /// Accuracy restricted to the second half of each sequence (the
+    /// "translated" targets of the copy task — the MT surrogate metric).
+    pub fn second_half_accuracy(&self, params: &[Param], batch: &LmBatch) -> f64 {
+        let preds = self.predictions(params, batch);
+        let t_len = batch.seq_len();
+        let half = t_len / 2;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (b, seq) in batch.tokens.iter().enumerate() {
+            for t in half..t_len {
+                total += 1;
+                if preds[b * t_len + t] == seq[t + 1] {
+                    correct += 1;
+                }
+            }
+        }
+        correct as f64 / total.max(1) as f64
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn forward(
+        &self,
+        params: &[Param],
+        batch: &LmBatch,
+        keep: bool,
+    ) -> (
+        f32,
+        Option<Vec<LayerCache>>,
+        Option<Tensor>,
+        Option<LnCache>,
+        Option<Tensor>,
+        Vec<u32>,
+    ) {
+        let cfg = &self.cfg;
+        let bsz = batch.batch_size();
+        let t_len = batch.seq_len();
+        assert!(t_len <= cfg.max_seq, "sequence longer than max_seq");
+        let c = cfg.d_model;
+        let n = bsz * t_len;
+        let heads = cfg.n_heads;
+        let hs = c / heads;
+        let scale = 1.0 / (hs as f32).sqrt();
+
+        let tok_emb = &params[Idx::TOK].tensor;
+        let pos_emb = &params[Idx::POS].tensor;
+
+        // Embedding.
+        let mut x = Tensor::zeros(&[n, c]);
+        for b in 0..bsz {
+            for t in 0..t_len {
+                let tok = batch.tokens[b][t] as usize;
+                let row = (b * t_len + t) * c;
+                for j in 0..c {
+                    x.data[row + j] = tok_emb.data[tok * c + j] + pos_emb.data[t * c + j];
+                }
+            }
+        }
+
+        let mut caches: Vec<LayerCache> = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let g1 = &params[Idx::layer(l, Idx::LN1G)].tensor;
+            let b1 = &params[Idx::layer(l, Idx::LN1B)].tensor;
+            let (a1, ln1) = layernorm(&x, g1, b1);
+            let q = a1.matmul(&params[Idx::layer(l, Idx::WQ)].tensor);
+            let k = a1.matmul(&params[Idx::layer(l, Idx::WK)].tensor);
+            let v = a1.matmul(&params[Idx::layer(l, Idx::WV)].tensor);
+
+            // Causal attention per (batch, head).
+            let mut probs: Vec<Tensor> = Vec::with_capacity(bsz * heads);
+            let mut concat = Tensor::zeros(&[n, c]);
+            for b in 0..bsz {
+                for h in 0..heads {
+                    let mut p = Tensor::zeros(&[t_len, t_len]);
+                    for ti in 0..t_len {
+                        let qrow = (b * t_len + ti) * c + h * hs;
+                        // Scores over u <= ti, in-place softmax.
+                        let mut mx = f32::NEG_INFINITY;
+                        for u in 0..=ti {
+                            let krow = (b * t_len + u) * c + h * hs;
+                            let mut s = 0.0f32;
+                            for d in 0..hs {
+                                s += q.data[qrow + d] * k.data[krow + d];
+                            }
+                            let s = s * scale;
+                            p.data[ti * t_len + u] = s;
+                            if s > mx {
+                                mx = s;
+                            }
+                        }
+                        let mut z = 0.0f32;
+                        for u in 0..=ti {
+                            let e = (p.data[ti * t_len + u] - mx).exp();
+                            p.data[ti * t_len + u] = e;
+                            z += e;
+                        }
+                        let inv = 1.0 / z;
+                        for u in 0..=ti {
+                            p.data[ti * t_len + u] *= inv;
+                        }
+                        // Weighted sum of V.
+                        let orow = (b * t_len + ti) * c + h * hs;
+                        for u in 0..=ti {
+                            let w = p.data[ti * t_len + u];
+                            let vrow = (b * t_len + u) * c + h * hs;
+                            for d in 0..hs {
+                                concat.data[orow + d] += w * v.data[vrow + d];
+                            }
+                        }
+                    }
+                    probs.push(p);
+                }
+            }
+            let attn_out = concat.matmul(&params[Idx::layer(l, Idx::WO)].tensor);
+            let x_mid = x.add(&attn_out);
+
+            let g2 = &params[Idx::layer(l, Idx::LN2G)].tensor;
+            let b2 = &params[Idx::layer(l, Idx::LN2B)].tensor;
+            let (a2, ln2) = layernorm(&x_mid, g2, b2);
+            let mut h1 = a2.matmul(&params[Idx::layer(l, Idx::FC1)].tensor);
+            add_bias(&mut h1, &params[Idx::layer(l, Idx::B1)].tensor);
+            relu_inplace(&mut h1);
+            let mut h2 = h1.matmul(&params[Idx::layer(l, Idx::FC2)].tensor);
+            add_bias(&mut h2, &params[Idx::layer(l, Idx::B2)].tensor);
+            let x_out = x_mid.add(&h2);
+
+            if keep {
+                caches.push(LayerCache {
+                    x_in: x,
+                    ln1,
+                    a1,
+                    q,
+                    k,
+                    v,
+                    probs,
+                    attn_concat: concat,
+                    x_mid,
+                    ln2,
+                    a2,
+                    h1,
+                });
+            }
+            x = x_out;
+        }
+
+        let gf = &params[Idx::lnf_g(cfg.n_layers)].tensor;
+        let bf = &params[Idx::lnf_b(cfg.n_layers)].tensor;
+        let (xf, lnf) = layernorm(&x, gf, bf);
+        let mut logits = xf.matmul(&params[Idx::lm_head(cfg.n_layers)].tensor);
+
+        // Loss + softmax in place (logits become probs).
+        let flat_targets: Vec<u32> = (0..bsz)
+            .flat_map(|b| (0..t_len).map(move |t| batch.tokens[b][t + 1]))
+            .collect();
+        logits.softmax_rows();
+        let vsz = cfg.vocab;
+        let mut loss = 0.0f64;
+        for (i, &y) in flat_targets.iter().enumerate() {
+            loss -= (logits.data[i * vsz + y as usize].max(1e-12) as f64).ln();
+        }
+        let loss = (loss / flat_targets.len() as f64) as f32;
+
+        if keep {
+            (
+                loss,
+                Some(caches),
+                Some(x),
+                Some(lnf),
+                Some(logits),
+                flat_targets,
+            )
+        } else {
+            (loss, None, None, None, None, flat_targets)
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn backward(
+        &self,
+        params: &[Param],
+        batch: &LmBatch,
+        caches: Vec<LayerCache>,
+        x_final: Tensor,
+        lnf: LnCache,
+        mut probs_logits: Tensor,
+        flat_targets: &[u32],
+    ) -> Vec<Tensor> {
+        let cfg = &self.cfg;
+        let bsz = batch.batch_size();
+        let t_len = batch.seq_len();
+        let c = cfg.d_model;
+        let heads = cfg.n_heads;
+        let hs = c / heads;
+        let scale = 1.0 / (hs as f32).sqrt();
+        let vsz = cfg.vocab;
+        let ntok = flat_targets.len();
+
+        let mut grads: Vec<Tensor> = params
+            .iter()
+            .map(|p| Tensor::zeros(&p.tensor.shape))
+            .collect();
+
+        // dlogits = (probs - onehot) / ntok
+        let inv_n = 1.0 / ntok as f32;
+        for (i, &y) in flat_targets.iter().enumerate() {
+            probs_logits.data[i * vsz + y as usize] -= 1.0;
+        }
+        for v in probs_logits.data.iter_mut() {
+            *v *= inv_n;
+        }
+        let dlogits = probs_logits;
+
+        // lm head: logits = xf @ W
+        let xf = {
+            // recompute xf from cache: xhat * g + b
+            let gf = &params[Idx::lnf_g(cfg.n_layers)].tensor;
+            let bf = &params[Idx::lnf_b(cfg.n_layers)].tensor;
+            let (n, _) = lnf.xhat.dims2();
+            let mut out = Tensor::zeros(&[n, c]);
+            for i in 0..n {
+                for j in 0..c {
+                    out.data[i * c + j] =
+                        lnf.xhat.data[i * c + j] * gf.data[j] + bf.data[j];
+                }
+            }
+            out
+        };
+        grads[Idx::lm_head(cfg.n_layers)] = xf.matmul_tn(&dlogits);
+        let dxf = dlogits.matmul_nt(&params[Idx::lm_head(cfg.n_layers)].tensor);
+
+        // Final LN backward.
+        let _ = x_final;
+        let mut dgf = Tensor::zeros(&[c]);
+        let mut dbf = Tensor::zeros(&[c]);
+        let mut dx = layernorm_backward(
+            &dxf,
+            &lnf,
+            &params[Idx::lnf_g(cfg.n_layers)].tensor,
+            &mut dgf,
+            &mut dbf,
+        );
+        grads[Idx::lnf_g(cfg.n_layers)] = dgf;
+        grads[Idx::lnf_b(cfg.n_layers)] = dbf;
+
+        for l in (0..cfg.n_layers).rev() {
+            let cache = &caches[l];
+            // ---- MLP block ----
+            // x_out = x_mid + h2; dh2 = dx (residual passes dx through).
+            let dh2 = dx.clone();
+            grads[Idx::layer(l, Idx::B2)] = sum_rows(&dh2);
+            grads[Idx::layer(l, Idx::FC2)] = cache.h1.matmul_tn(&dh2);
+            let mut dh1 = dh2.matmul_nt(&params[Idx::layer(l, Idx::FC2)].tensor);
+            for (dv, hv) in dh1.data.iter_mut().zip(cache.h1.data.iter()) {
+                if *hv <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+            grads[Idx::layer(l, Idx::B1)] = sum_rows(&dh1);
+            grads[Idx::layer(l, Idx::FC1)] = cache.a2.matmul_tn(&dh1);
+            let da2 = dh1.matmul_nt(&params[Idx::layer(l, Idx::FC1)].tensor);
+            let mut dg2 = Tensor::zeros(&[c]);
+            let mut db2 = Tensor::zeros(&[c]);
+            let dx_mid_from_ln = layernorm_backward(
+                &da2,
+                &cache.ln2,
+                &params[Idx::layer(l, Idx::LN2G)].tensor,
+                &mut dg2,
+                &mut db2,
+            );
+            grads[Idx::layer(l, Idx::LN2G)] = dg2;
+            grads[Idx::layer(l, Idx::LN2B)] = db2;
+            // dx_mid = residual + LN path.
+            let dx_mid = dx.add(&dx_mid_from_ln);
+
+            // ---- Attention block ----
+            // x_mid = x_in + concat @ Wo
+            let dattn_out = dx_mid.clone();
+            grads[Idx::layer(l, Idx::WO)] = cache.attn_concat.matmul_tn(&dattn_out);
+            let dconcat = dattn_out.matmul_nt(&params[Idx::layer(l, Idx::WO)].tensor);
+
+            let n = bsz * t_len;
+            let mut dq = Tensor::zeros(&[n, c]);
+            let mut dk = Tensor::zeros(&[n, c]);
+            let mut dv = Tensor::zeros(&[n, c]);
+            for b in 0..bsz {
+                for h in 0..heads {
+                    let p = &cache.probs[b * heads + h];
+                    for ti in 0..t_len {
+                        let orow = (b * t_len + ti) * c + h * hs;
+                        // dP[ti,u] = dO . V[u]; dV[u] += P * dO
+                        let mut dp = vec![0.0f32; ti + 1];
+                        for u in 0..=ti {
+                            let vrow = (b * t_len + u) * c + h * hs;
+                            let w = p.data[ti * t_len + u];
+                            let mut acc = 0.0f32;
+                            for d in 0..hs {
+                                let dov = dconcat.data[orow + d];
+                                acc += dov * cache.v.data[vrow + d];
+                                dv.data[vrow + d] += w * dov;
+                            }
+                            dp[u] = acc;
+                        }
+                        // Softmax backward: dS = P * (dP - sum(P*dP)).
+                        let mut dot = 0.0f32;
+                        for u in 0..=ti {
+                            dot += p.data[ti * t_len + u] * dp[u];
+                        }
+                        let qrow = (b * t_len + ti) * c + h * hs;
+                        for u in 0..=ti {
+                            let ds = p.data[ti * t_len + u] * (dp[u] - dot) * scale;
+                            let krow = (b * t_len + u) * c + h * hs;
+                            for d in 0..hs {
+                                dq.data[qrow + d] += ds * cache.k.data[krow + d];
+                                dk.data[krow + d] += ds * cache.q.data[qrow + d];
+                            }
+                        }
+                    }
+                }
+            }
+
+            grads[Idx::layer(l, Idx::WQ)] = cache.a1.matmul_tn(&dq);
+            grads[Idx::layer(l, Idx::WK)] = cache.a1.matmul_tn(&dk);
+            grads[Idx::layer(l, Idx::WV)] = cache.a1.matmul_tn(&dv);
+            let mut da1 = dq.matmul_nt(&params[Idx::layer(l, Idx::WQ)].tensor);
+            da1 = da1.add(&dk.matmul_nt(&params[Idx::layer(l, Idx::WK)].tensor));
+            da1 = da1.add(&dv.matmul_nt(&params[Idx::layer(l, Idx::WV)].tensor));
+
+            let mut dg1 = Tensor::zeros(&[c]);
+            let mut db1 = Tensor::zeros(&[c]);
+            let dx_in_from_ln = layernorm_backward(
+                &da1,
+                &cache.ln1,
+                &params[Idx::layer(l, Idx::LN1G)].tensor,
+                &mut dg1,
+                &mut db1,
+            );
+            grads[Idx::layer(l, Idx::LN1G)] = dg1;
+            grads[Idx::layer(l, Idx::LN1B)] = db1;
+            dx = dx_mid.add(&dx_in_from_ln);
+            let _ = &cache.x_in;
+        }
+
+        // Embedding scatter.
+        for b in 0..bsz {
+            for t in 0..t_len {
+                let tok = batch.tokens[b][t] as usize;
+                let row = (b * t_len + t) * c;
+                for j in 0..c {
+                    grads[Idx::TOK].data[tok * c + j] += dx.data[row + j];
+                    grads[Idx::POS].data[t * c + j] += dx.data[row + j];
+                }
+            }
+        }
+
+        grads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MarkovCorpus;
+    use crate::optim::{build, Hyper};
+    use crate::util::rng::Pcg64;
+
+    fn tiny_cfg() -> TransformerConfig {
+        TransformerConfig {
+            vocab: 11,
+            d_model: 8,
+            n_heads: 2,
+            d_ff: 16,
+            n_layers: 2,
+            max_seq: 6,
+        }
+    }
+
+    #[test]
+    fn gradient_check_finite_differences() {
+        let cfg = tiny_cfg();
+        let engine = TransformerEngine::new(cfg);
+        let mut rng = Pcg64::seeded(99);
+        let mut params = cfg.init_params(&mut rng);
+        // Perturb params away from init symmetry.
+        for p in params.iter_mut() {
+            for v in p.tensor.data.iter_mut() {
+                *v += rng.normal() * 0.05;
+            }
+        }
+        let batch = LmBatch {
+            tokens: vec![vec![1, 5, 3, 9, 2], vec![4, 4, 0, 10, 7]],
+        };
+        let (_, grads) = engine.loss_and_grads(&params, &batch);
+        let eps = 1e-2f32;
+        for pi in 0..params.len() {
+            let n = params[pi].tensor.numel();
+            for k in [0usize, n / 3, n - 1] {
+                let orig = params[pi].tensor.data[k];
+                params[pi].tensor.data[k] = orig + eps;
+                let lp = engine.loss(&params, &batch);
+                params[pi].tensor.data[k] = orig - eps;
+                let lm = engine.loss(&params, &batch);
+                params[pi].tensor.data[k] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grads[pi].data[k];
+                let tol = 3e-2 * (1.0 + fd.abs().max(an.abs()));
+                assert!(
+                    (fd - an).abs() < tol,
+                    "param {pi} ({}) coord {k}: fd={fd} analytic={an}",
+                    params[pi].name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn loss_starts_near_uniform_entropy() {
+        let cfg = tiny_cfg();
+        let engine = TransformerEngine::new(cfg);
+        let mut rng = Pcg64::seeded(1);
+        let params = cfg.init_params(&mut rng);
+        let batch = LmBatch {
+            tokens: vec![vec![0, 1, 2, 3, 4], vec![5, 6, 7, 8, 9]],
+        };
+        let loss = engine.loss(&params, &batch);
+        let uniform = (cfg.vocab as f32).ln();
+        assert!(
+            (loss - uniform).abs() < 0.5,
+            "initial loss {loss} vs ln(V) {uniform}"
+        );
+    }
+
+    #[test]
+    fn trains_below_entropy_gap_on_markov_corpus() {
+        let cfg = TransformerConfig {
+            vocab: 32,
+            d_model: 32,
+            n_heads: 2,
+            d_ff: 64,
+            n_layers: 1,
+            max_seq: 16,
+        };
+        let engine = TransformerEngine::new(cfg);
+        let corpus = MarkovCorpus::new(cfg.vocab, 7);
+        let mut rng = Pcg64::seeded(3);
+        let mut params = cfg.init_params(&mut rng);
+        let mut opt = build("adamw32", Hyper::default()).unwrap();
+        let mut first = None;
+        let mut last = 0.0f32;
+        for step in 0..120 {
+            let batch = corpus.sample(8, 16, &mut rng);
+            let (loss, grads) = engine.loss_and_grads(&params, &batch);
+            if step == 0 {
+                first = Some(loss);
+            }
+            last = loss;
+            opt.step(&mut params, &grads, 2e-3);
+        }
+        let first = first.unwrap();
+        assert!(
+            last < first * 0.8,
+            "loss should drop: first {first} last {last}"
+        );
+        // Should approach (not necessarily reach) the corpus entropy floor.
+        let floor = corpus.entropy_floor(100, &mut rng) as f32;
+        assert!(last > floor * 0.5, "loss {last} below plausible floor {floor}");
+    }
+}

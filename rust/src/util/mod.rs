@@ -1,0 +1,82 @@
+//! Shared substrate: RNG, JSON, CLI parsing, stats, tables, property
+//! testing, and a tiny logger. Everything here exists because the offline
+//! crate set ships no `rand`/`serde`/`clap`/`proptest`/`criterion`.
+
+pub mod cli;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(2); // 0=quiet 1=warn 2=info 3=debug
+
+pub fn set_log_level(level: u8) {
+    LOG_LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn log_enabled(level: u8) -> bool {
+    LOG_LEVEL.load(Ordering::Relaxed) >= level
+}
+
+pub fn log(level: u8, tag: &str, msg: &str) {
+    if log_enabled(level) {
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "[{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::log(2, "info", &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::util::log(1, "warn", &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::log(3, "debug", &format!($($arg)*)) };
+}
+
+/// Ensure a directory exists (mkdir -p).
+pub fn ensure_dir(path: &str) -> std::io::Result<()> {
+    std::fs::create_dir_all(path)
+}
+
+/// Write a string to a file, creating parent directories.
+pub fn write_file(path: &str, contents: &str) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, contents)
+}
+
+/// Repository-relative results directory; honors `LOWBIT_RESULTS_DIR`.
+pub fn results_dir() -> String {
+    std::env::var("LOWBIT_RESULTS_DIR").unwrap_or_else(|_| "results".to_string())
+}
+
+/// Repository-relative artifacts directory; honors `LOWBIT_ARTIFACTS_DIR`.
+pub fn artifacts_dir() -> String {
+    std::env::var("LOWBIT_ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_file_creates_dirs() {
+        let dir = std::env::temp_dir().join(format!("lowbit_util_{}", std::process::id()));
+        let path = dir.join("a/b/c.txt");
+        write_file(path.to_str().unwrap(), "hi").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "hi");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,152 @@
+//! A miniature property-based testing driver (offline substitute for
+//! `proptest`). A property is a closure over a [`Gen`]; the driver runs it
+//! for `cases` seeded iterations and, on failure, retries with the failing
+//! seed reported so the case can be reproduced exactly.
+//!
+//! Shrinking is deliberately minimal: generators are encouraged to draw
+//! sizes first so that failures at small sizes are found early (sizes grow
+//! with the case index).
+
+use super::rng::Pcg64;
+
+/// Generation context handed to properties: a seeded RNG plus a `size`
+/// hint that ramps up over the run.
+pub struct Gen {
+    pub rng: Pcg64,
+    pub size: usize,
+    pub case: usize,
+}
+
+impl Gen {
+    /// A length in `[1, size]` (never zero — most tensor properties need
+    /// non-empty input; ask for `len0` when zero-length matters).
+    pub fn len(&mut self) -> usize {
+        1 + self.rng.below(self.size.max(1))
+    }
+
+    /// A length in `[0, size]`.
+    pub fn len0(&mut self) -> usize {
+        self.rng.below(self.size + 1)
+    }
+
+    /// A "nice" float: mixes normals, exact zeros, subnormal-ish tiny
+    /// values and large outliers — the distributions that matter for
+    /// quantization code.
+    pub fn f32(&mut self) -> f32 {
+        match self.rng.below(10) {
+            0 => 0.0,
+            1 => self.rng.normal() * 1e-8,
+            2 => self.rng.normal() * 1e4,
+            3 => -self.rng.next_f32(),
+            _ => self.rng.normal(),
+        }
+    }
+
+    /// Non-negative variant (second-moment-like).
+    pub fn f32_nonneg(&mut self) -> f32 {
+        self.f32().abs()
+    }
+
+    /// Vector of `n` floats.
+    pub fn vec_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    pub fn vec_f32_nonneg(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.f32_nonneg()).collect()
+    }
+
+    /// Pick one of the provided items.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 0
+    }
+}
+
+/// Run `prop` for `cases` cases. Panics (failing the enclosing `#[test]`)
+/// with the seed and case number on the first property violation, which the
+/// property signals by returning `Err(message)`.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check_seeded(name, cases, 0xC0FFEE, &mut prop);
+}
+
+/// Same as [`check`] with an explicit base seed (used to reproduce a
+/// reported failure).
+pub fn check_seeded<F>(name: &str, cases: usize, base_seed: u64, prop: &mut F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // Sizes ramp from small to larger so that minimal counterexamples
+        // surface first.
+        let size = 2 + (case * 64) / cases.max(1);
+        let mut g = Gen {
+            rng: Pcg64::new(seed, 77),
+            size,
+            case,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (base_seed={base_seed:#x}, \
+                 case_seed={seed:#x}, size={size}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check("tautology", 50, |g| {
+            ran += 1;
+            let n = g.len();
+            if n >= 1 {
+                Ok(())
+            } else {
+                Err("len() returned 0".into())
+            }
+        });
+        assert_eq!(ran, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |g| {
+            if g.case < 3 {
+                Ok(())
+            } else {
+                Err("boom".into())
+            }
+        });
+    }
+
+    #[test]
+    fn generator_mixes_distributions() {
+        let mut zeros = 0;
+        let mut big = 0;
+        check("dist", 200, |g| {
+            let x = g.f32();
+            if x == 0.0 {
+                zeros += 1;
+            }
+            if x.abs() > 100.0 {
+                big += 1;
+            }
+            Ok(())
+        });
+        assert!(zeros > 0, "expected some exact zeros");
+        assert!(big > 0, "expected some outliers");
+    }
+}

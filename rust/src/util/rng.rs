@@ -1,0 +1,235 @@
+//! Deterministic, splittable pseudo-random number generation.
+//!
+//! Every stochastic component of the framework (data synthesis, parameter
+//! init, stochastic rounding, experiment seeds) draws from [`Pcg64`], a
+//! PCG-XSL-RR 128/64 generator. We implement it locally because the offline
+//! crate set has no `rand`; the implementation follows O'Neill's reference
+//! constants and is fully deterministic across platforms.
+
+/// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id. Different streams
+    /// with the same seed are statistically independent.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let initseq = ((stream as u128) << 64) | 0xda3e_39cb_94b9_5bdb;
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: (initseq << 1) | 1,
+        };
+        rng.step();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.step();
+        rng
+    }
+
+    /// Single-argument constructor on the default stream.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+    }
+
+    /// Next uniform `u64`.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let s = self.state;
+        let xored = ((s >> 64) as u64) ^ (s as u64);
+        let rot = (s >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Next uniform `u32`.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform float in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform float in `[0, 1)` (f32).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's multiply-shift (unbiased
+    /// enough for our workloads; n is tiny relative to 2^64).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached second value dropped for
+    /// simplicity; the generators are cheap).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-12 {
+                let u2 = self.next_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+            }
+        }
+    }
+
+    /// Normal with explicit mean / std.
+    pub fn normal_ms(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal()
+    }
+
+    /// Fill a slice with N(0, std^2) samples.
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal() * std;
+        }
+    }
+
+    /// Derive an independent child generator; used to give each tensor /
+    /// worker / experiment arm its own stream deterministically.
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        let seed = self.next_u64() ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        Pcg64::new(seed, tag)
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut x = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Hash arbitrary labels into a seed; lets experiments derive stable seeds
+/// from human-readable names (`seed_from("table1/rank1-linear/run3")`).
+pub fn seed_from(label: &str) -> u64 {
+    // FNV-1a 64-bit.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in label.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Pcg64::seeded(7);
+        for _ in 0..10_000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg64::seeded(9);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[r.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seeded(3);
+        let n = 50_000;
+        let mut sum = 0.0f64;
+        let mut sumsq = 0.0f64;
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            sum += x;
+            sumsq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn seed_from_stable() {
+        assert_eq!(seed_from("abc"), seed_from("abc"));
+        assert_ne!(seed_from("abc"), seed_from("abd"));
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Pcg64::seeded(11);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..4000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert!(counts[2] > counts[0] * 2);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seeded(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,137 @@
+//! Markdown-style table rendering for the experiment harness. Every paper
+//! table reproduction builds a [`Table`] and prints it; the same structure
+//! is serialized to `results/*.json`.
+
+use super::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    /// Render as a column-aligned markdown table.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let c = cells.get(i).map(|x| x.as_str()).unwrap_or("");
+                let pad = widths[i] - c.chars().count();
+                s.push(' ');
+                s.push_str(c);
+                s.push_str(&" ".repeat(pad));
+                s.push_str(" |");
+            }
+            s
+        };
+        let mut out = format!("\n## {}\n\n", self.title);
+        out.push_str(&line(&self.headers));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("title", Json::Str(self.title.clone()));
+        o.set(
+            "headers",
+            Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+        );
+        o.set(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                    .collect(),
+            ),
+        );
+        o
+    }
+}
+
+/// `mean ± std` cell formatting used across the table reproductions.
+pub fn pm(mean: f64, std: f64, decimals: usize) -> String {
+    format!("{mean:.prec$} ± {std:.prec$}", prec = decimals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo", &["Optimizer", "Score"]);
+        t.row_strs(&["32-bit AdamW", "67.7"]);
+        t.row_strs(&["4-bit AdamW (ours)", "67.8"]);
+        let r = t.render();
+        assert!(r.contains("## Demo"));
+        assert!(r.contains("| 4-bit AdamW (ours) | 67.8  |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row_strs(&["only one"]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = Table::new("x", &["a"]);
+        t.row_strs(&["1"]);
+        let j = t.to_json();
+        assert_eq!(j.get("title").unwrap().as_str(), Some("x"));
+        assert_eq!(
+            j.get("rows").unwrap().idx(0).unwrap().idx(0).unwrap().as_str(),
+            Some("1")
+        );
+    }
+
+    #[test]
+    fn pm_format() {
+        assert_eq!(pm(67.75, 0.51, 1), "67.8 ± 0.5");
+    }
+}
