@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# CI for lowbit-opt: tier-1 verify (build + tests), style gates, and a
+# bench smoke run that records the step-engine perf trajectory in
+# BENCH_engine.json.
+#
+# Usage: ./ci.sh
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo build --release"
+cargo build --release
+
+echo "== cargo test -q"
+cargo test -q
+
+echo "== cargo fmt --check"
+cargo fmt --check
+
+echo "== cargo clippy (all targets, -D warnings)"
+cargo clippy --all-targets -- -D warnings
+
+echo "== bench smoke: quant_throughput"
+cargo bench --bench quant_throughput -- --smoke
+
+echo "== bench smoke: optim_step (writes BENCH_engine.json)"
+cargo bench --bench optim_step -- --smoke --json BENCH_engine.json
+
+echo "CI OK"

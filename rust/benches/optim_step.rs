@@ -1,16 +1,32 @@
 //! Bench: full optimizer step time per preset on a realistic parameter
-//! set (the small transformer config). Regenerates the measured half of
-//! the paper's Tab. 4 and quantifies the unfused 4-bit overhead.
+//! set (the small transformer config), plus the shard-parallel engine's
+//! thread scaling on a ≥16M-parameter synthetic model — the CPU analogue
+//! of the paper's Tab. 4 "(fused)" speed story.
+//!
+//! Flags:
+//!   --smoke        short measurement windows (CI)
+//!   --json PATH    write the engine-scaling results (BENCH_engine.json)
 
 mod bench_util;
 
-use bench_util::{bench, section};
+use bench_util::{bench, section, BenchResult};
 use lowbit_opt::model::TransformerConfig;
-use lowbit_opt::optim::{build, Hyper, Param};
+use lowbit_opt::optim::lowbit::{CompressedAdamW, QuantPolicy};
+use lowbit_opt::optim::{build, Hyper, Optimizer, Param, ParamKind};
 use lowbit_opt::tensor::Tensor;
+use lowbit_opt::util::json::Json;
 use lowbit_opt::util::rng::Pcg64;
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let min_secs = if smoke { 0.25 } else { 1.0 };
+
     let cfg = TransformerConfig::small();
     let mut rng = Pcg64::seeded(5);
     let grads: Vec<Tensor> = cfg
@@ -22,11 +38,21 @@ fn main() {
     println!("model: {} params ({} tensors)", n_params, grads.len());
 
     section("optimizer step (full parameter set)");
-    for preset in ["adamw32", "sgdm", "adafactor", "adafactor-b0", "sm3", "adamw8", "adamw4", "adamw4-sr", "factor4"] {
+    for preset in [
+        "adamw32",
+        "sgdm",
+        "adafactor",
+        "adafactor-b0",
+        "sm3",
+        "adamw8",
+        "adamw4",
+        "adamw4-sr",
+        "factor4",
+    ] {
         let mut params: Vec<Param> = cfg.init_params(&mut rng);
         let mut opt = build(preset, Hyper::default()).unwrap();
         opt.step(&mut params, &grads, 1e-3); // lazy init outside the timer
-        let res = bench(preset, 1.0, || {
+        let res = bench(preset, min_secs, || {
             opt.step(&mut params, &grads, 1e-3);
         });
         let ns_per_param = res.mean_ns / n_params as f64;
@@ -36,6 +62,95 @@ fn main() {
             ns_per_param,
             opt.state_bytes()
         );
+    }
+
+    // --------------------------------------------------------------
+    // Shard-parallel engine scaling: 4-bit AdamW on a ≥16M-parameter
+    // synthetic set. threads=1 is the sequential schedule (the seed's
+    // per-tensor loop shape); higher counts run the same plan parallel.
+    // --------------------------------------------------------------
+    section("shard-parallel engine scaling (synthetic >=16M params, adamw4)");
+    let shapes: Vec<Vec<usize>> = vec![vec![2048, 2048]; 4]
+        .into_iter()
+        .chain(std::iter::once(vec![8192]))
+        .collect();
+    let big_n: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+    let mut brng = Pcg64::seeded(11);
+    let big_grads: Vec<Tensor> = shapes
+        .iter()
+        .map(|s| Tensor::randn(s, 0.01, &mut brng))
+        .collect();
+    println!("synthetic model: {big_n} params ({} tensors)", shapes.len());
+
+    let thread_cases = [1usize, 2, 4, 8];
+    let mut results: Vec<(usize, BenchResult)> = Vec::new();
+    for &threads in &thread_cases {
+        let mut opt =
+            CompressedAdamW::new(Hyper::default(), QuantPolicy::bit4()).with_threads(threads);
+        let mut prng = Pcg64::seeded(13);
+        let mut params: Vec<Param> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                Param::new(
+                    &format!("p{i}"),
+                    ParamKind::Weight,
+                    Tensor::randn(s, 0.1, &mut prng),
+                )
+            })
+            .collect();
+        opt.step(&mut params, &big_grads, 1e-3); // lazy init outside the timer
+        let res = bench(
+            &format!("adamw4 engine, {threads} thread(s)"),
+            min_secs.max(0.3),
+            || {
+                opt.step(&mut params, &big_grads, 1e-3);
+            },
+        );
+        println!(
+            "{}  {:>6.2} ns/param",
+            res.throughput_line(None),
+            res.mean_ns / big_n as f64
+        );
+        results.push((threads, res));
+    }
+    let mean_of = |t: usize| {
+        results
+            .iter()
+            .find(|(th, _)| *th == t)
+            .map(|(_, r)| r.mean_ns)
+    };
+    if let (Some(t1), Some(t4)) = (mean_of(1), mean_of(4)) {
+        println!("speedup at 4 threads vs sequential: {:.2}x", t1 / t4);
+    }
+
+    if let Some(path) = json_path {
+        let mut doc = Json::obj();
+        doc.set("bench", Json::Str("optim_step/engine-scaling".to_string()));
+        doc.set("optimizer", Json::Str("adamw4".to_string()));
+        doc.set("model_params", Json::Num(big_n as f64));
+        doc.set("smoke", Json::Bool(smoke));
+        let mut by_threads = Json::obj();
+        for (t, r) in &results {
+            let mut jr = Json::obj();
+            jr.set("mean_us", Json::Num(r.mean_ns / 1e3));
+            jr.set("p50_us", Json::Num(r.p50_ns / 1e3));
+            jr.set("p95_us", Json::Num(r.p95_ns / 1e3));
+            jr.set("iters", Json::Num(r.iters as f64));
+            by_threads.set(&t.to_string(), jr);
+        }
+        doc.set("threads", by_threads);
+        if let (Some(t1), Some(t2)) = (mean_of(1), mean_of(2)) {
+            doc.set("speedup_2t", Json::Num(t1 / t2));
+        }
+        if let (Some(t1), Some(t4)) = (mean_of(1), mean_of(4)) {
+            doc.set("speedup_4t", Json::Num(t1 / t4));
+        }
+        if let (Some(t1), Some(t8)) = (mean_of(1), mean_of(8)) {
+            doc.set("speedup_8t", Json::Num(t1 / t8));
+        }
+        lowbit_opt::util::write_file(&path, &doc.pretty()).expect("write bench json");
+        println!("wrote {path}");
     }
 
     // The fused PJRT path, when artifacts are present.
@@ -48,7 +163,6 @@ fn main() {
                 section("fused AOT path (PJRT; paper's '(fused)' rows)");
                 let mut params: Vec<Param> = cfg.init_params(&mut rng);
                 fused.step(&mut params, &grads, 1e-3);
-                use lowbit_opt::optim::Optimizer;
                 let res = bench("adamw4-fused (pjrt)", 2.0, || {
                     fused.step(&mut params, &grads, 1e-3);
                 });

@@ -10,6 +10,8 @@ use lowbit_opt::tensor::Tensor;
 use lowbit_opt::util::rng::Pcg64;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let min_secs = if smoke { 0.1 } else { 0.5 };
     let mut rng = Pcg64::seeded(7);
     let n = 1 << 20; // 1M elements = 4 MB
     let x2d = Tensor::randn(&[1024, 1024], 0.02, &mut rng);
@@ -40,7 +42,7 @@ fn main() {
     for (name, q) in &cases {
         let map = q.build_map();
         let mut r = Pcg64::seeded(1);
-        let res = bench(name, 0.5, || {
+        let res = bench(name, min_secs, || {
             let qt = q.quantize_with(&x2d, &map, &mut r);
             std::hint::black_box(&qt);
         });
@@ -52,7 +54,7 @@ fn main() {
         let map = q.build_map();
         let mut r = Pcg64::seeded(1);
         let qt = q.quantize_with(&x2d, &map, &mut r);
-        let res = bench(name, 0.5, || {
+        let res = bench(name, min_secs, || {
             let t = qt.dequantize_with(&map);
             std::hint::black_box(&t);
         });
@@ -63,7 +65,7 @@ fn main() {
     let q = Quantizer::first_moment_4bit();
     let map = q.build_map();
     let mut r = Pcg64::seeded(1);
-    let res = bench("B128/DE 4-bit roundtrip", 0.5, || {
+    let res = bench("B128/DE 4-bit roundtrip", min_secs, || {
         let qt = q.quantize_with(&x2d, &map, &mut r);
         let t = qt.dequantize_with(&map);
         std::hint::black_box(&t);

@@ -110,6 +110,8 @@ pub struct RunConfig {
     pub seed: u64,
     pub engine: String, // "builtin" | "pjrt"
     pub artifact_model: String,
+    /// Step-engine worker threads for compressed optimizers (0 = auto).
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -124,6 +126,7 @@ impl Default for RunConfig {
             seed: 0,
             engine: "builtin".to_string(),
             artifact_model: "tiny".to_string(),
+            threads: 0,
         }
     }
 }
@@ -163,6 +166,7 @@ impl RunConfig {
                 .get("train", "artifact_model")
                 .unwrap_or(&d.artifact_model)
                 .to_string(),
+            threads: raw.get_usize("train", "threads", d.threads)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -236,6 +240,16 @@ lr = 2e-3
         let cfg = RunConfig::from_raw(&raw).unwrap();
         assert_eq!(cfg.steps, 99);
         assert_eq!(cfg.optimizer, "adamw32");
+    }
+
+    #[test]
+    fn threads_default_and_override() {
+        let raw = RawConfig::parse(SAMPLE).unwrap();
+        let cfg = RunConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.threads, 0, "default is auto");
+        let mut raw2 = RawConfig::parse(SAMPLE).unwrap();
+        raw2.set("train.threads=4").unwrap();
+        assert_eq!(RunConfig::from_raw(&raw2).unwrap().threads, 4);
     }
 
     #[test]

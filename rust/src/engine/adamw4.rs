@@ -1,0 +1,783 @@
+//! The compressed-AdamW step executor: runs one optimizer step of
+//! [`crate::optim::lowbit::CompressedAdamW`] on the shard plan.
+//!
+//! Responsibilities per phase (see the module docs in `mod.rs` for the
+//! determinism contract):
+//!
+//! * **Phase F** — factored-v tensors: accumulate per-shard row/col
+//!   partial sums of `g²` into stat slots; a sequential reduce applies
+//!   the Adafactor EMA to the `FactoredSecond` state.
+//! * **Phase A** — every shard: decompress its slice of m (and v),
+//!   run the exact AdamW update in place on the weights, requantize
+//!   block-normalized states shard-locally, and accumulate per-axis /
+//!   per-tensor max-magnitude statistics for globally-normalized states.
+//! * **Phase C** — globally-normalized (rank-1 / per-tensor) states:
+//!   after the scale reduction, re-derive the updated state values from
+//!   the *old* codes + gradient (bit-identical to what phase A computed)
+//!   and encode them against the new global scales into fresh packed
+//!   buffers, which are committed into the state vector at the end.
+//!
+//! All cross-thread mutation goes through [`SharedSlice`] views over
+//! disjoint shard ranges; every `unsafe` block names the plan invariant
+//! (block / row / byte alignment) it relies on.
+
+use super::plan::{build_plan, Piece, StateLayout, TensorMeta};
+use super::shared::SharedSlice;
+use super::{step_seed, StepEngine, PHASE_C_STREAM_BASE};
+use crate::optim::factor::FactoredSecond;
+use crate::optim::state::{MomentState, SecondState};
+use crate::optim::{Hyper, Param};
+use crate::quant::{packing, NormKind, QuantMap, QuantizedTensor, Quantizer, Scales};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Immutable per-step inputs threaded through the executor.
+pub struct StepParams<'a> {
+    pub hp: Hyper,
+    /// 1-based step counter (bias correction).
+    pub t: usize,
+    pub lr: f32,
+    /// Optimizer base seed; per-shard streams derive from
+    /// `step_seed(base_seed, t)`.
+    pub base_seed: u64,
+    /// Cached decode tables (built once by the optimizer, borrowed here —
+    /// never cloned on the hot path).
+    pub m_map: Option<&'a QuantMap>,
+    pub v_map: Option<&'a QuantMap>,
+    pub v1_map: Option<&'a QuantMap>,
+}
+
+/// Per-worker scratch: decompressed state slices, reused across every
+/// task the worker runs (grown once to the largest shard).
+#[derive(Default)]
+pub struct Scratch {
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// How a shard reaches one tensor's first-moment state.
+///
+/// Deliberately kept in lockstep with [`VRoute`] (which adds only the
+/// `Factored` arm): any change to the Block/Global routing here must be
+/// mirrored there and in both construction sites in `compressed_step`.
+enum MRoute<'a> {
+    F32(SharedSlice<'a, f32>),
+    Block {
+        q: Quantizer,
+        map: &'a QuantMap,
+        block: usize,
+        packed: SharedSlice<'a, u8>,
+        scales: SharedSlice<'a, f32>,
+    },
+    Global {
+        q: Quantizer,
+        map: &'a QuantMap,
+        old: &'a QuantizedTensor,
+        new_packed: SharedSlice<'a, u8>,
+        buf: usize,
+    },
+}
+
+/// How a shard reaches one tensor's second-moment state.
+enum VRoute<'a> {
+    F32(SharedSlice<'a, f32>),
+    Block {
+        q: Quantizer,
+        map: &'a QuantMap,
+        block: usize,
+        packed: SharedSlice<'a, u8>,
+        scales: SharedSlice<'a, f32>,
+    },
+    Global {
+        q: Quantizer,
+        map: &'a QuantMap,
+        old: &'a QuantizedTensor,
+        new_packed: SharedSlice<'a, u8>,
+        buf: usize,
+    },
+    Factored {
+        f: &'a FactoredSecond,
+        row_mean: f32,
+    },
+}
+
+/// Shared per-tensor context for the parallel phases.
+struct TensorCtx<'a> {
+    shape: &'a [usize],
+    /// Trailing-axes slab size (`numel / shape[0]` for ≥2-D, else numel).
+    cols: usize,
+    w: SharedSlice<'a, f32>,
+    g: &'a [f32],
+    m: MRoute<'a>,
+    v: VRoute<'a>,
+}
+
+/// A globally-normalized state scheduled for the phase-C re-encode.
+struct GlobalState {
+    tensor: usize,
+    is_m: bool,
+    q: Quantizer,
+    buf: usize,
+}
+
+/// Byte range of the packed code buffer holding elements `[lo, hi)`.
+#[inline]
+fn packed_range(bits: u8, lo: usize, hi: usize) -> (usize, usize) {
+    if bits == 4 {
+        (lo / 2, hi.div_ceil(2))
+    } else {
+        (lo, hi)
+    }
+}
+
+/// Planner layout + stat-slot length for one quantized state.
+fn layout_of(q: &Quantizer, shape: &[usize]) -> (StateLayout, usize) {
+    match q.norm {
+        NormKind::Block(b) => (StateLayout::Block(b), 0),
+        NormKind::Rank1 if shape.len() >= 2 => (StateLayout::Global, shape.iter().sum()),
+        // Per-tensor normalization, incl. rank-1's 1-D fallback.
+        _ => (StateLayout::Global, 1),
+    }
+}
+
+/// One optimizer step, shard-parallel. `m_states` / `v_states` must be
+/// initialized (one entry per parameter, as after `lazy_init`).
+pub fn compressed_step(
+    eng: &StepEngine,
+    sp: &StepParams,
+    params: &mut [Param],
+    grads: &[Tensor],
+    m_states: &mut [MomentState],
+    v_states: &mut [SecondState],
+) {
+    let n = params.len();
+    debug_assert_eq!(grads.len(), n);
+    debug_assert_eq!(m_states.len(), n);
+    debug_assert_eq!(v_states.len(), n);
+
+    let metas: Vec<TensorMeta> = (0..n)
+        .map(|i| {
+            let shape = params[i].tensor.shape.clone();
+            let (m, m_stat_len) = match &m_states[i] {
+                MomentState::F32(_) => (StateLayout::F32, 0),
+                MomentState::Quant(q) => layout_of(&q.quantizer, &shape),
+            };
+            let (v, v_stat_len) = match &v_states[i] {
+                SecondState::F32(_) => (StateLayout::F32, 0),
+                SecondState::Quant(q) => layout_of(&q.quantizer, &shape),
+                SecondState::Factored(f) => (StateLayout::Factored, f.rows() + f.cols()),
+            };
+            TensorMeta {
+                numel: params[i].tensor.numel(),
+                shape,
+                m,
+                v,
+                m_stat_len,
+                v_stat_len,
+            }
+        })
+        .collect();
+
+    let plan = build_plan(&metas, eng.shard_elems());
+    if plan.tasks.is_empty() {
+        return;
+    }
+    let threads = eng.resolve_threads(plan.tasks.len(), plan.total_elems);
+    let seed = step_seed(sp.base_seed, sp.t as u64);
+    let hp = sp.hp;
+
+    let mut slots: Vec<Vec<f32>> = plan.slot_lens.iter().map(|&l| vec![0.0f32; l]).collect();
+
+    // ---------------- Phase F: factored-v statistics -----------------
+    let mut rowmeans = vec![0.0f32; n];
+    if metas.iter().any(|m| m.v == StateLayout::Factored) {
+        {
+            let slot_views: Vec<SharedSlice<f32>> = slots
+                .iter_mut()
+                .map(|s| SharedSlice::new(s.as_mut_slice()))
+                .collect();
+            let slot_views = &slot_views;
+            let plan_ref = &plan;
+            let metas_ref = &metas;
+            eng.run_tasks::<(), _>(threads, plan.tasks.len(), |ti, _| {
+                for piece in &plan_ref.tasks[ti].pieces {
+                    let meta = &metas_ref[piece.tensor];
+                    if meta.v != StateLayout::Factored {
+                        continue;
+                    }
+                    let rows_total = meta.shape[0];
+                    let cols = meta.numel / rows_total;
+                    let slot_id = piece.v_slot.expect("factored piece has a stat slot");
+                    // SAFETY: each piece owns its stat slot exclusively
+                    // (plan assigns one slot per piece).
+                    let slot =
+                        unsafe { slot_views[slot_id].range_mut(0, plan_ref.slot_lens[slot_id]) };
+                    let (rsum, csum) = slot.split_at_mut(rows_total);
+                    let g = &grads[piece.tensor].data[piece.lo..piece.hi];
+                    let row0 = piece.lo / cols;
+                    for (ri, grow) in g.chunks(cols).enumerate() {
+                        let mut acc = 0.0f32;
+                        for (j, &gv) in grow.iter().enumerate() {
+                            let sq = gv * gv;
+                            acc += sq;
+                            csum[j] += sq;
+                        }
+                        rsum[row0 + ri] = acc;
+                    }
+                }
+            });
+        }
+        // Sequential reduce in shard order + Adafactor EMA (mirrors
+        // FactoredSecond::update with eps2 = 0).
+        for i in 0..n {
+            if metas[i].v != StateLayout::Factored {
+                continue;
+            }
+            let f = match &mut v_states[i] {
+                SecondState::Factored(f) => f,
+                _ => unreachable!("meta says factored"),
+            };
+            let rows = f.rows();
+            let cols = f.cols();
+            let mut rsum = vec![0.0f32; rows];
+            let mut csum = vec![0.0f32; cols];
+            for task in &plan.tasks {
+                for p in task.pieces.iter().filter(|p| p.tensor == i) {
+                    let s = &slots[p.v_slot.expect("factored slot")];
+                    for (a, b) in rsum.iter_mut().zip(&s[..rows]) {
+                        *a += *b;
+                    }
+                    for (a, b) in csum.iter_mut().zip(&s[rows..]) {
+                        *a += *b;
+                    }
+                }
+            }
+            for (ri, r) in f.row.iter_mut().enumerate() {
+                *r = hp.beta2 * *r + (1.0 - hp.beta2) * (rsum[ri] / cols as f32);
+            }
+            for (cj, c) in f.col.iter_mut().enumerate() {
+                *c = hp.beta2 * *c + (1.0 - hp.beta2) * (csum[cj] / rows as f32);
+            }
+            rowmeans[i] = f.row_mean();
+        }
+    }
+
+    // -------- Globally-normalized states: fresh code buffers ---------
+    let mut globals: Vec<GlobalState> = Vec::new();
+    let mut new_bufs: Vec<Vec<u8>> = Vec::new();
+    for i in 0..n {
+        if metas[i].m == StateLayout::Global {
+            let q = match &m_states[i] {
+                MomentState::Quant(qt) => qt.quantizer,
+                _ => unreachable!("meta says quantized m"),
+            };
+            globals.push(GlobalState {
+                tensor: i,
+                is_m: true,
+                q,
+                buf: new_bufs.len(),
+            });
+            new_bufs.push(vec![0u8; packing::packed_len(metas[i].numel, q.bits)]);
+        }
+        if metas[i].v == StateLayout::Global {
+            let q = match &v_states[i] {
+                SecondState::Quant(qt) => qt.quantizer,
+                _ => unreachable!("meta says quantized v"),
+            };
+            globals.push(GlobalState {
+                tensor: i,
+                is_m: false,
+                q,
+                buf: new_bufs.len(),
+            });
+            new_bufs.push(vec![0u8; packing::packed_len(metas[i].numel, q.bits)]);
+        }
+    }
+    let mut new_scales: Vec<Option<Scales>> = vec![None; new_bufs.len()];
+
+    {
+        let buf_views: Vec<SharedSlice<u8>> = new_bufs
+            .iter_mut()
+            .map(|b| SharedSlice::new(b.as_mut_slice()))
+            .collect();
+        let mut m_buf_of = vec![usize::MAX; n];
+        let mut v_buf_of = vec![usize::MAX; n];
+        for gs in &globals {
+            if gs.is_m {
+                m_buf_of[gs.tensor] = gs.buf;
+            } else {
+                v_buf_of[gs.tensor] = gs.buf;
+            }
+        }
+
+        // Per-tensor contexts: disjoint &mut borrows of weights and
+        // states, wrapped in shared views for the task closures.
+        let mut ctxs: Vec<TensorCtx> = Vec::with_capacity(n);
+        for (i, ((p, ms), vs)) in params
+            .iter_mut()
+            .zip(m_states.iter_mut())
+            .zip(v_states.iter_mut())
+            .enumerate()
+        {
+            let shape: &[usize] = &metas[i].shape;
+            let cols = if shape.len() >= 2 {
+                metas[i].numel / shape[0]
+            } else {
+                metas[i].numel
+            };
+            let m_route = match ms {
+                MomentState::F32(tns) => MRoute::F32(SharedSlice::new(tns.data.as_mut_slice())),
+                MomentState::Quant(qt) => {
+                    let q = qt.quantizer;
+                    let map = sp.m_map.expect("cached m map exists for quantized m");
+                    if let NormKind::Block(b) = q.norm {
+                        let QuantizedTensor { packed, scales, .. } = qt;
+                        let sc = match scales {
+                            Scales::Block { scales, .. } => scales,
+                            _ => unreachable!("block-normed state carries block scales"),
+                        };
+                        MRoute::Block {
+                            q,
+                            map,
+                            block: b,
+                            packed: SharedSlice::new(packed.as_mut_slice()),
+                            scales: SharedSlice::new(sc.as_mut_slice()),
+                        }
+                    } else {
+                        MRoute::Global {
+                            q,
+                            map,
+                            old: &*qt,
+                            new_packed: buf_views[m_buf_of[i]],
+                            buf: m_buf_of[i],
+                        }
+                    }
+                }
+            };
+            let v_route = match vs {
+                SecondState::F32(tns) => VRoute::F32(SharedSlice::new(tns.data.as_mut_slice())),
+                SecondState::Factored(f) => VRoute::Factored {
+                    f: &*f,
+                    row_mean: rowmeans[i],
+                },
+                SecondState::Quant(qt) => {
+                    let q = qt.quantizer;
+                    let map = if shape.len() >= 2 { sp.v_map } else { sp.v1_map }
+                        .expect("cached v map exists for quantized v");
+                    if let NormKind::Block(b) = q.norm {
+                        let QuantizedTensor { packed, scales, .. } = qt;
+                        let sc = match scales {
+                            Scales::Block { scales, .. } => scales,
+                            _ => unreachable!("block-normed state carries block scales"),
+                        };
+                        VRoute::Block {
+                            q,
+                            map,
+                            block: b,
+                            packed: SharedSlice::new(packed.as_mut_slice()),
+                            scales: SharedSlice::new(sc.as_mut_slice()),
+                        }
+                    } else {
+                        VRoute::Global {
+                            q,
+                            map,
+                            old: &*qt,
+                            new_packed: buf_views[v_buf_of[i]],
+                            buf: v_buf_of[i],
+                        }
+                    }
+                }
+            };
+            ctxs.push(TensorCtx {
+                shape,
+                cols,
+                w: SharedSlice::new(p.tensor.data.as_mut_slice()),
+                g: &grads[i].data,
+                m: m_route,
+                v: v_route,
+            });
+        }
+        let ctxs = &ctxs;
+
+        // -------------------- Phase A: the update --------------------
+        {
+            let slot_views: Vec<SharedSlice<f32>> = slots
+                .iter_mut()
+                .map(|s| SharedSlice::new(s.as_mut_slice()))
+                .collect();
+            let slot_views = &slot_views;
+            let plan_ref = &plan;
+            eng.run_tasks::<Scratch, _>(threads, plan.tasks.len(), |ti, scratch| {
+                let mut rng = Pcg64::new(seed, ti as u64);
+                for piece in &plan_ref.tasks[ti].pieces {
+                    phase_a_piece(piece, ctxs, slot_views, &hp, sp.t, sp.lr, scratch, &mut rng);
+                }
+            });
+        }
+
+        // ---------- Reduce A→C: combine scale statistics -------------
+        for gs in &globals {
+            let meta = &metas[gs.tensor];
+            let stat_len = if gs.is_m {
+                meta.m_stat_len
+            } else {
+                meta.v_stat_len
+            };
+            let mut acc = vec![0.0f32; stat_len];
+            for task in &plan.tasks {
+                for p in task.pieces.iter().filter(|p| p.tensor == gs.tensor) {
+                    let slot_id = if gs.is_m { p.m_slot } else { p.v_slot };
+                    let s = &slots[slot_id.expect("global state has a slot")];
+                    for (a, b) in acc.iter_mut().zip(s.iter()) {
+                        if *b > *a {
+                            *a = *b;
+                        }
+                    }
+                }
+            }
+            let scales = if acc.len() == 1 {
+                Scales::PerTensor(acc[0])
+            } else {
+                let mut per_axis = Vec::with_capacity(meta.shape.len());
+                let mut off = 0;
+                for &d in &meta.shape {
+                    per_axis.push(acc[off..off + d].to_vec());
+                    off += d;
+                }
+                Scales::Rank1 { per_axis }
+            };
+            new_scales[gs.buf] = Some(scales);
+        }
+
+        // --------------- Phase C: global re-encode -------------------
+        if !globals.is_empty() {
+            let plan_ref = &plan;
+            let new_scales_ref = &new_scales;
+            eng.run_tasks::<Scratch, _>(threads, plan.tasks.len(), |ti, scratch| {
+                let mut rng = Pcg64::new(seed, PHASE_C_STREAM_BASE + ti as u64);
+                for piece in &plan_ref.tasks[ti].pieces {
+                    phase_c_piece(piece, ctxs, new_scales_ref, &hp, scratch, &mut rng);
+                }
+            });
+        }
+    }
+
+    // ------------------ Commit re-encoded states ---------------------
+    for gs in globals {
+        let meta = &metas[gs.tensor];
+        let qt = QuantizedTensor {
+            shape: meta.shape.clone(),
+            bits: gs.q.bits,
+            packed: std::mem::take(&mut new_bufs[gs.buf]),
+            scales: new_scales[gs.buf].take().expect("reduced scales"),
+            quantizer: gs.q,
+        };
+        if gs.is_m {
+            m_states[gs.tensor] = MomentState::Quant(qt);
+        } else {
+            v_states[gs.tensor] = SecondState::Quant(qt);
+        }
+    }
+}
+
+/// Decompress block-quantized elements `[lo, lo + out.len())` from local
+/// packed/scale slices (both starting at the shard boundary).
+fn dequant_block_slice(
+    map: &QuantMap,
+    bits: u8,
+    block: usize,
+    packed: &[u8],
+    scales: &[f32],
+    out: &mut [f32],
+) {
+    for (k, o) in out.iter_mut().enumerate() {
+        let code = packing::get(packed, k, bits);
+        *o = map.decode(code) * scales[k / block];
+    }
+}
+
+/// Accumulate max-magnitude scale statistics of `vals` (elements starting
+/// at flat offset `lo` of a tensor with `shape`) into a stat slot:
+/// one f32 for per-tensor scales, concatenated per-axis vectors for
+/// rank-1.
+fn accumulate_scale_stats(vals: &[f32], lo: usize, shape: &[usize], slot: &mut [f32]) {
+    if slot.len() == 1 {
+        let mut m = slot[0];
+        for &v in vals {
+            let a = v.abs();
+            if a > m {
+                m = a;
+            }
+        }
+        slot[0] = m;
+        return;
+    }
+    if shape.len() == 2 {
+        let cols = shape[1];
+        let (rs, cs) = slot.split_at_mut(shape[0]);
+        let hi = lo + vals.len();
+        let mut i = lo;
+        while i < hi {
+            let row = i / cols;
+            let row_start = row * cols;
+            let row_end = (row_start + cols).min(hi);
+            let mut rmax = rs[row];
+            for j in i..row_end {
+                let a = vals[j - lo].abs();
+                if a > rmax {
+                    rmax = a;
+                }
+                let c = &mut cs[j - row_start];
+                if a > *c {
+                    *c = a;
+                }
+            }
+            rs[row] = rmax;
+            i = row_end;
+        }
+        return;
+    }
+    // Generic N-d: walk row-major coordinates incrementally.
+    let mut coords = vec![0usize; shape.len()];
+    let mut idx = lo;
+    for (axis, &d) in shape.iter().enumerate().rev() {
+        coords[axis] = idx % d;
+        idx /= d;
+    }
+    for &v in vals {
+        let a = v.abs();
+        let mut off = 0;
+        for (axis, &d) in shape.iter().enumerate() {
+            let s = &mut slot[off + coords[axis]];
+            if a > *s {
+                *s = a;
+            }
+            off += d;
+        }
+        for axis in (0..shape.len()).rev() {
+            coords[axis] += 1;
+            if coords[axis] < shape[axis] {
+                break;
+            }
+            coords[axis] = 0;
+        }
+    }
+}
+
+/// Phase A for one piece: decompress → AdamW → requantize/accumulate.
+#[allow(clippy::too_many_arguments)]
+fn phase_a_piece(
+    piece: &Piece,
+    ctxs: &[TensorCtx<'_>],
+    slot_views: &[SharedSlice<'_, f32>],
+    hp: &Hyper,
+    t: usize,
+    lr: f32,
+    scratch: &mut Scratch,
+    rng: &mut Pcg64,
+) {
+    let tc = &ctxs[piece.tensor];
+    let (lo, hi) = (piece.lo, piece.hi);
+    let len = hi - lo;
+    let g = &tc.g[lo..hi];
+    // SAFETY: pieces partition each tensor disjointly (plan invariant),
+    // so this shard is the only writer of w[lo..hi].
+    let w = unsafe { tc.w.range_mut(lo, hi) };
+    let Scratch { m: sm, v: sv } = scratch;
+
+    // ---- load the first moment ----
+    let m_vals: &mut [f32] = match &tc.m {
+        // SAFETY: disjoint shard ranges (plan invariant).
+        MRoute::F32(s) => unsafe { s.range_mut(lo, hi) },
+        MRoute::Block {
+            q,
+            map,
+            block,
+            packed,
+            scales,
+        } => {
+            sm.resize(len, 0.0);
+            let (b0, b1) = packed_range(q.bits, lo, hi);
+            // SAFETY: shard boundaries are block- and byte-aligned, so
+            // the packed bytes and block scales of [lo, hi) have a
+            // single owner (this task). Read-only here.
+            let pk = unsafe { packed.range_mut(b0, b1) };
+            let sc = unsafe { scales.range_mut(lo / block, hi.div_ceil(*block)) };
+            dequant_block_slice(map, q.bits, *block, pk, sc, &mut sm[..len]);
+            &mut sm[..len]
+        }
+        MRoute::Global { map, old, .. } => {
+            sm.resize(len, 0.0);
+            old.dequantize_range_into(map, lo, hi, &mut sm[..len]);
+            &mut sm[..len]
+        }
+    };
+
+    let b1 = hp.beta1;
+    let b2 = hp.beta2;
+    let bc1 = 1.0 - b1.powi(t as i32);
+    let bc2 = 1.0 - b2.powi(t as i32);
+
+    // ---- update (exact AdamW; mirrors adamw_update_tensor) ----
+    match &tc.v {
+        VRoute::Factored { f, row_mean } => {
+            let cols = tc.cols;
+            for k in 0..len {
+                let gi = g[k];
+                let mi = b1 * m_vals[k] + (1.0 - b1) * gi;
+                m_vals[k] = mi;
+                let idx = lo + k;
+                let vhat = f.reconstruct_at(idx / cols, idx % cols, *row_mean) / bc2;
+                let wi = w[k];
+                let upd = (mi / bc1) / (vhat.sqrt() + hp.eps) + hp.weight_decay * wi;
+                w[k] = wi - lr * upd;
+            }
+        }
+        v_route => {
+            let v_vals: &mut [f32] = match v_route {
+                // SAFETY: disjoint shard ranges (plan invariant).
+                VRoute::F32(s) => unsafe { s.range_mut(lo, hi) },
+                VRoute::Block {
+                    q,
+                    map,
+                    block,
+                    packed,
+                    scales,
+                } => {
+                    sv.resize(len, 0.0);
+                    let (b0, b1_) = packed_range(q.bits, lo, hi);
+                    // SAFETY: block- and byte-aligned shard boundaries.
+                    let pk = unsafe { packed.range_mut(b0, b1_) };
+                    let sc = unsafe { scales.range_mut(lo / block, hi.div_ceil(*block)) };
+                    dequant_block_slice(map, q.bits, *block, pk, sc, &mut sv[..len]);
+                    &mut sv[..len]
+                }
+                VRoute::Global { map, old, .. } => {
+                    sv.resize(len, 0.0);
+                    old.dequantize_range_into(map, lo, hi, &mut sv[..len]);
+                    &mut sv[..len]
+                }
+                VRoute::Factored { .. } => unreachable!(),
+            };
+            for k in 0..len {
+                let gi = g[k];
+                let mi = b1 * m_vals[k] + (1.0 - b1) * gi;
+                let vi = b2 * v_vals[k] + (1.0 - b2) * gi * gi;
+                m_vals[k] = mi;
+                v_vals[k] = vi;
+                let mhat = mi / bc1;
+                let vhat = vi / bc2;
+                let wi = w[k];
+                w[k] = wi - lr * (mhat / (vhat.sqrt() + hp.eps) + hp.weight_decay * wi);
+            }
+            // ---- requantize / accumulate v ----
+            match v_route {
+                VRoute::F32(_) => {}
+                VRoute::Block {
+                    q,
+                    map,
+                    block,
+                    packed,
+                    scales,
+                } => {
+                    let (b0, b1_) = packed_range(q.bits, lo, hi);
+                    // SAFETY: same single-owner ranges as the read above.
+                    let pk = unsafe { packed.range_mut(b0, b1_) };
+                    let sc = unsafe { scales.range_mut(lo / block, hi.div_ceil(*block)) };
+                    q.encode_block_range(map, v_vals, *block, sc, pk, rng);
+                }
+                VRoute::Global { .. } => {
+                    let slot_id = piece.v_slot.expect("global v has a slot");
+                    // SAFETY: one stat slot per piece (plan invariant).
+                    let slot = unsafe {
+                        slot_views[slot_id].range_mut(0, slot_views[slot_id].len())
+                    };
+                    accumulate_scale_stats(v_vals, lo, tc.shape, slot);
+                }
+                VRoute::Factored { .. } => unreachable!(),
+            }
+        }
+    }
+
+    // ---- requantize / accumulate m ----
+    match &tc.m {
+        MRoute::F32(_) => {}
+        MRoute::Block {
+            q,
+            map,
+            block,
+            packed,
+            scales,
+        } => {
+            let (b0, b1_) = packed_range(q.bits, lo, hi);
+            // SAFETY: same single-owner ranges as the read above.
+            let pk = unsafe { packed.range_mut(b0, b1_) };
+            let sc = unsafe { scales.range_mut(lo / block, hi.div_ceil(*block)) };
+            q.encode_block_range(map, m_vals, *block, sc, pk, rng);
+        }
+        MRoute::Global { .. } => {
+            let slot_id = piece.m_slot.expect("global m has a slot");
+            // SAFETY: one stat slot per piece (plan invariant).
+            let slot = unsafe { slot_views[slot_id].range_mut(0, slot_views[slot_id].len()) };
+            accumulate_scale_stats(m_vals, lo, tc.shape, slot);
+        }
+    }
+}
+
+/// Phase C for one piece: re-derive updated state values from the old
+/// codes + gradient (bit-identical to phase A's computation) and encode
+/// against the reduced global scales.
+fn phase_c_piece(
+    piece: &Piece,
+    ctxs: &[TensorCtx<'_>],
+    new_scales: &[Option<Scales>],
+    hp: &Hyper,
+    scratch: &mut Scratch,
+    rng: &mut Pcg64,
+) {
+    let tc = &ctxs[piece.tensor];
+    let (lo, hi) = (piece.lo, piece.hi);
+    let len = hi - lo;
+    let g = &tc.g[lo..hi];
+    let Scratch { m: sm, v: sv } = scratch;
+
+    if let MRoute::Global {
+        q,
+        map,
+        old,
+        new_packed,
+        buf,
+    } = &tc.m
+    {
+        sm.resize(len, 0.0);
+        old.dequantize_range_into(map, lo, hi, &mut sm[..len]);
+        for (mv, &gv) in sm[..len].iter_mut().zip(g.iter()) {
+            *mv = hp.beta1 * *mv + (1.0 - hp.beta1) * gv;
+        }
+        let scales = new_scales[*buf].as_ref().expect("reduced m scales");
+        let (b0, b1) = packed_range(q.bits, lo, hi);
+        // SAFETY: byte-aligned disjoint shard ranges of the fresh buffer.
+        let dst = unsafe { new_packed.range_mut(b0, b1) };
+        q.encode_range_with_scales(map, &sm[..len], lo, tc.shape, scales, dst, rng);
+    }
+
+    if let VRoute::Global {
+        q,
+        map,
+        old,
+        new_packed,
+        buf,
+    } = &tc.v
+    {
+        sv.resize(len, 0.0);
+        old.dequantize_range_into(map, lo, hi, &mut sv[..len]);
+        for (vv, &gv) in sv[..len].iter_mut().zip(g.iter()) {
+            *vv = hp.beta2 * *vv + (1.0 - hp.beta2) * gv * gv;
+        }
+        let scales = new_scales[*buf].as_ref().expect("reduced v scales");
+        let (b0, b1) = packed_range(q.bits, lo, hi);
+        // SAFETY: byte-aligned disjoint shard ranges of the fresh buffer.
+        let dst = unsafe { new_packed.range_mut(b0, b1) };
+        q.encode_range_with_scales(map, &sv[..len], lo, tc.shape, scales, dst, rng);
+    }
+}

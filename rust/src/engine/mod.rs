@@ -1,0 +1,226 @@
+//! The shard-parallel optimizer step engine.
+//!
+//! The paper's headline speed numbers (Tab. 4 "(fused)" rows) exist
+//! because a naive decompress → AdamW → recompress loop makes quantized
+//! optimizers *slower* than fp32 ones. On CPU, the analogue of the fused
+//! GPU kernel is this engine: the parameter set is partitioned into
+//! block-aligned shards ([`plan`]) and each step runs
+//! dequantize → update → requantize shard-parallel over scoped threads,
+//! with shard-local scratch buffers instead of per-tensor allocations
+//! ([`adamw4`]).
+//!
+//! # Determinism contract
+//!
+//! The engine is **bit-identical at every thread count**, including
+//! stochastic rounding. Three rules make that hold:
+//!
+//! 1. **Planning is thread-blind.** The shard decomposition is a pure
+//!    function of tensor shapes, state layouts and the configured shard
+//!    size (`plan::build_plan`); worker count only decides who executes
+//!    a task, never what the task is.
+//! 2. **One RNG stream per shard.** Task `i` of step `t` draws from
+//!    `Pcg64::new(step_seed(t), stream_id)` — the splittable streams from
+//!    [`crate::util::rng`] — so stochastic rounding consumes the same
+//!    random sequence no matter which worker runs the task or in which
+//!    order tasks complete. Phase C re-encode streams live in a disjoint
+//!    stream-id range from phase A/F streams.
+//! 3. **Reductions run in shard order.** Cross-shard statistics (rank-1
+//!    scale maxima, factored row/col sums) are combined sequentially in
+//!    ascending shard order between phases, so float rounding does not
+//!    depend on completion order.
+//!
+//! Under these rules "sequential" is just the 1-thread schedule of the
+//! same plan, which is what the parity suite
+//! (`rust/tests/engine_parity.rs`) checks at thread counts 1, 2 and 7.
+//!
+//! # Phases
+//!
+//! A step of the compressed optimizer runs up to three parallel phases
+//! with cheap sequential reductions between them:
+//!
+//! * **F** (factored tensors only): accumulate per-shard row/col partial
+//!   sums of `g²`; reduce into the factored EMA state.
+//! * **A**: per shard — decompress states, run the exact AdamW update,
+//!   requantize block-local states in place, and accumulate scale
+//!   statistics for globally-normalized states (rank-1 / per-tensor).
+//! * **C** (globally-normalized states only): after the scale reduction,
+//!   re-derive the updated state values and encode them against the new
+//!   global scales into fresh packed buffers.
+
+pub mod adamw4;
+pub mod plan;
+pub mod shared;
+
+pub use adamw4::{compressed_step, StepParams};
+pub use plan::{build_plan, Plan, StateLayout, TensorMeta};
+pub use shared::SharedSlice;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default shard size in elements (~256 KB of f32 values per shard).
+pub const DEFAULT_SHARD_ELEMS: usize = 1 << 16;
+
+/// Below this much total work an auto-threaded engine stays sequential —
+/// spawn overhead would dominate. Explicit thread counts are honored
+/// regardless (the parity suite relies on that).
+pub const MIN_PARALLEL_ELEMS: usize = 1 << 15;
+
+/// The task scheduler: each phase runs its tasks on freshly spawned
+/// scoped threads pulling task indices off an atomic queue. Execution
+/// *order* is nondeterministic; results are not, because each task is
+/// self-contained (see the module docs).
+///
+/// Threads are spawned per phase, not kept in a persistent pool: scoped
+/// spawns are what let tasks borrow the step's plan and tensor views
+/// directly, and the ~10-20 µs spawn cost per worker is noise against
+/// the multi-millisecond shards the engine targets (tiny workloads stay
+/// sequential via [`MIN_PARALLEL_ELEMS`]). A persistent worker pool is a
+/// ROADMAP follow-on for the high-step-rate small-model regime.
+#[derive(Clone, Debug)]
+pub struct StepEngine {
+    /// Worker threads; 0 = auto (available parallelism).
+    threads: usize,
+    /// Target shard size in elements.
+    shard_elems: usize,
+}
+
+impl Default for StepEngine {
+    fn default() -> StepEngine {
+        StepEngine::new()
+    }
+}
+
+impl StepEngine {
+    pub fn new() -> StepEngine {
+        StepEngine {
+            threads: 0,
+            shard_elems: DEFAULT_SHARD_ELEMS,
+        }
+    }
+
+    /// Set the worker count (0 = auto).
+    pub fn with_threads(mut self, threads: usize) -> StepEngine {
+        self.threads = threads;
+        self
+    }
+
+    /// Set the target shard size in elements (tests use small values to
+    /// force multi-shard plans on small tensors).
+    pub fn with_shard_elems(mut self, shard_elems: usize) -> StepEngine {
+        assert!(shard_elems >= 2, "shard_elems must be at least 2");
+        self.shard_elems = shard_elems;
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn shard_elems(&self) -> usize {
+        self.shard_elems
+    }
+
+    /// Worker count for a workload of `n_tasks` tasks over `total_elems`
+    /// elements. Auto mode (threads = 0) stays sequential for small
+    /// workloads; explicit counts are only clamped to the task count.
+    pub fn resolve_threads(&self, n_tasks: usize, total_elems: usize) -> usize {
+        let t = match self.threads {
+            0 => {
+                if total_elems < MIN_PARALLEL_ELEMS {
+                    1
+                } else {
+                    std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1)
+                }
+            }
+            n => n,
+        };
+        t.max(1).min(n_tasks.max(1))
+    }
+
+    /// Execute `f(task_index, scratch)` for every task index in
+    /// `0..n_tasks` on `threads` workers. Each worker owns one scratch
+    /// value (`S::default()`), reused across the tasks it runs. With
+    /// `threads <= 1` this is a plain loop on the calling thread.
+    pub fn run_tasks<S, F>(&self, threads: usize, n_tasks: usize, f: F)
+    where
+        S: Default + Send,
+        F: Fn(usize, &mut S) + Sync,
+    {
+        if n_tasks == 0 {
+            return;
+        }
+        if threads <= 1 {
+            let mut scratch = S::default();
+            for i in 0..n_tasks {
+                f(i, &mut scratch);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        let next = &next;
+        let f = &f;
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(move || {
+                    let mut scratch = S::default();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n_tasks {
+                            break;
+                        }
+                        f(i, &mut scratch);
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Per-step seed mixing: derives the seed for step `t` from the
+/// optimizer's base seed so every step draws fresh per-shard streams
+/// while staying reproducible.
+pub fn step_seed(base: u64, t: u64) -> u64 {
+    base ^ t.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
+/// Stream-id namespace for phase C (re-encode) tasks, disjoint from the
+/// phase A/F namespace which uses plain task indices.
+pub const PHASE_C_STREAM_BASE: u64 = 1 << 32;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_tasks_covers_every_index_once() {
+        for threads in [1, 2, 7] {
+            let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+            let eng = StepEngine::new();
+            eng.run_tasks::<(), _>(threads, 100, |i, _| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_threads_policy() {
+        let eng = StepEngine::new(); // auto
+        assert_eq!(eng.resolve_threads(10, 100), 1, "tiny work stays sequential");
+        let eng2 = StepEngine::new().with_threads(7);
+        assert_eq!(eng2.resolve_threads(3, 100), 3, "clamped to task count");
+        assert_eq!(eng2.resolve_threads(100, 100), 7, "explicit count honored");
+        assert_eq!(eng2.resolve_threads(0, 0), 1);
+    }
+
+    #[test]
+    fn step_seed_varies_per_step() {
+        assert_ne!(step_seed(1, 1), step_seed(1, 2));
+        assert_eq!(step_seed(5, 3), step_seed(5, 3));
+    }
+}

@@ -1,0 +1,327 @@
+//! Shard planning: cut the parameter set into block-aligned pieces and
+//! group them into balanced tasks.
+//!
+//! The plan is a pure function of the tensor metadata and the configured
+//! shard size — never of the thread count. That is the first half of the
+//! engine's determinism contract (see the module docs in `mod.rs`): any
+//! number of workers executes the *same* tasks over the *same* ranges
+//! with the *same* per-task RNG streams.
+//!
+//! Alignment rules per tensor (all boundaries are element offsets):
+//!
+//! * block-quantized states: boundaries are multiples of every block
+//!   size involved, so each shard owns whole blocks (scales + codes);
+//! * rank-1 / factored states on ≥2-D tensors: boundaries additionally
+//!   fall on axis-0 slab (row) boundaries, so row statistics have a
+//!   single writer;
+//! * 4-bit packing: boundaries are even, so each shard owns whole bytes
+//!   of the nibble-packed code buffer.
+//!
+//! Large tensors are split into roughly `shard_elems`-sized pieces (one
+//! task each); small tensors are coalesced, several whole-tensor pieces
+//! per task, so a model with many tiny biases/norms does not drown the
+//! queue in sub-microsecond tasks.
+
+/// How one optimizer-state tensor is stored, from the planner's view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StateLayout {
+    /// Dense f32, updated in place by the shard.
+    F32,
+    /// Block-quantized with the given block size: fully shard-local
+    /// (decompress → update → requantize inside one task).
+    Block(usize),
+    /// Globally-scaled quantization (rank-1 / per-tensor): shards
+    /// accumulate scale statistics in phase A and encode in phase C
+    /// after a deterministic reduction.
+    Global,
+    /// Factored second moment (Adafactor-style row/col statistics):
+    /// shards accumulate partial sums in phase F; the reduced factors
+    /// are read-only during phase A.
+    Factored,
+}
+
+/// Planner-relevant description of one parameter tensor.
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub numel: usize,
+    pub shape: Vec<usize>,
+    pub m: StateLayout,
+    pub v: StateLayout,
+    /// Length of the stat slot a shard needs for the first moment
+    /// (0 unless `m` is `Global`).
+    pub m_stat_len: usize,
+    /// Length of the stat slot for the second moment (`Global`: scale
+    /// stats; `Factored`: rows + cols partial sums; else 0).
+    pub v_stat_len: usize,
+}
+
+/// A contiguous element range of one tensor, owned by exactly one task.
+#[derive(Clone, Debug)]
+pub struct Piece {
+    pub tensor: usize,
+    pub lo: usize,
+    pub hi: usize,
+    /// Stat slot index for the first moment (when `m` is `Global`).
+    pub m_slot: Option<usize>,
+    /// Stat slot index for the second moment (`Global` or `Factored`).
+    pub v_slot: Option<usize>,
+}
+
+/// One unit of work: a few pieces executed back-to-back by one worker,
+/// with one RNG stream.
+#[derive(Clone, Debug, Default)]
+pub struct Task {
+    pub pieces: Vec<Piece>,
+}
+
+/// The full step plan.
+#[derive(Clone, Debug, Default)]
+pub struct Plan {
+    pub tasks: Vec<Task>,
+    /// Length of each stat slot, indexed by `Piece::{m_slot, v_slot}`.
+    pub slot_lens: Vec<usize>,
+    pub total_elems: usize,
+}
+
+fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    if a == 0 || b == 0 {
+        return a.max(b);
+    }
+    a / gcd(a, b) * b
+}
+
+/// Shard-boundary alignment (in elements) for one tensor.
+pub fn alignment(meta: &TensorMeta) -> usize {
+    // Nibble packing: shards own whole bytes of 4-bit code buffers.
+    let mut a = 2usize;
+    if let StateLayout::Block(b) = meta.m {
+        a = lcm(a, b);
+    }
+    if let StateLayout::Block(b) = meta.v {
+        a = lcm(a, b);
+    }
+    let needs_rows = meta.shape.len() >= 2
+        && (matches!(meta.v, StateLayout::Global | StateLayout::Factored)
+            || matches!(meta.m, StateLayout::Global));
+    if needs_rows {
+        let slab: usize = meta.shape[1..].iter().product();
+        a = lcm(a, slab);
+    }
+    a
+}
+
+/// Build the step plan. Pure in (metas, shard_elems) — thread count never
+/// enters here.
+pub fn build_plan(metas: &[TensorMeta], shard_elems: usize) -> Plan {
+    let target = shard_elems.max(2);
+    let mut tasks: Vec<Task> = Vec::new();
+    let mut slot_lens: Vec<usize> = Vec::new();
+    let mut pending: Vec<Piece> = Vec::new();
+    let mut pending_elems = 0usize;
+    let mut total_elems = 0usize;
+
+    let mk_piece = |tensor: usize, lo: usize, hi: usize, slot_lens: &mut Vec<usize>| {
+        let meta = &metas[tensor];
+        let m_slot = if meta.m == StateLayout::Global {
+            slot_lens.push(meta.m_stat_len);
+            Some(slot_lens.len() - 1)
+        } else {
+            None
+        };
+        let v_slot = if matches!(meta.v, StateLayout::Global | StateLayout::Factored) {
+            slot_lens.push(meta.v_stat_len);
+            Some(slot_lens.len() - 1)
+        } else {
+            None
+        };
+        Piece {
+            tensor,
+            lo,
+            hi,
+            m_slot,
+            v_slot,
+        }
+    };
+
+    for (ti, meta) in metas.iter().enumerate() {
+        let n = meta.numel;
+        total_elems += n;
+        if n == 0 {
+            continue;
+        }
+        if n > target {
+            let align = alignment(meta);
+            if align >= n {
+                // Unsplittable (alignment unit spans the tensor).
+                tasks.push(Task {
+                    pieces: vec![mk_piece(ti, 0, n, &mut slot_lens)],
+                });
+            } else {
+                let units = n.div_ceil(align);
+                let shards = n.div_ceil(target).min(units);
+                let units_per = units.div_ceil(shards);
+                let mut lo = 0;
+                while lo < n {
+                    let hi = (lo + units_per * align).min(n);
+                    tasks.push(Task {
+                        pieces: vec![mk_piece(ti, lo, hi, &mut slot_lens)],
+                    });
+                    lo = hi;
+                }
+            }
+        } else {
+            // Coalesce small tensors into one task.
+            pending_elems += n;
+            pending.push(mk_piece(ti, 0, n, &mut slot_lens));
+            if pending_elems >= target {
+                tasks.push(Task {
+                    pieces: std::mem::take(&mut pending),
+                });
+                pending_elems = 0;
+            }
+        }
+    }
+    if !pending.is_empty() {
+        tasks.push(Task { pieces: pending });
+    }
+    Plan {
+        tasks,
+        slot_lens,
+        total_elems,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(numel: usize, shape: &[usize], m: StateLayout, v: StateLayout) -> TensorMeta {
+        TensorMeta {
+            numel,
+            shape: shape.to_vec(),
+            m,
+            v,
+            m_stat_len: if m == StateLayout::Global { 1 } else { 0 },
+            v_stat_len: match v {
+                StateLayout::Global => shape.iter().sum(),
+                StateLayout::Factored => shape.iter().sum(),
+                _ => 0,
+            },
+        }
+    }
+
+    #[test]
+    fn alignment_combines_blocks_and_rows() {
+        let m = meta(
+            1024 * 96,
+            &[1024, 96],
+            StateLayout::Block(128),
+            StateLayout::Global,
+        );
+        // lcm(2, 128, 96) = 384 elements = 4 rows.
+        assert_eq!(alignment(&m), 384);
+        let m1d = meta(8192, &[8192], StateLayout::Block(128), StateLayout::Block(128));
+        assert_eq!(alignment(&m1d), 128);
+        let f32s = meta(100, &[100], StateLayout::F32, StateLayout::F32);
+        assert_eq!(alignment(&f32s), 2);
+    }
+
+    #[test]
+    fn plan_covers_disjointly_and_aligned() {
+        let metas = vec![
+            meta(
+                512 * 96,
+                &[512, 96],
+                StateLayout::Block(128),
+                StateLayout::Global,
+            ),
+            meta(4096, &[4096], StateLayout::Block(128), StateLayout::Block(128)),
+            meta(100, &[100], StateLayout::F32, StateLayout::F32),
+            meta(60, &[60], StateLayout::F32, StateLayout::F32),
+        ];
+        let plan = build_plan(&metas, 4096);
+        assert_eq!(plan.total_elems, 512 * 96 + 4096 + 160);
+        // Every tensor is exactly covered by its pieces, in order.
+        for (ti, m) in metas.iter().enumerate() {
+            let mut cursor = 0;
+            let align = alignment(m);
+            for t in &plan.tasks {
+                for p in t.pieces.iter().filter(|p| p.tensor == ti) {
+                    assert_eq!(p.lo, cursor, "tensor {ti} gap");
+                    assert!(p.hi > p.lo && p.hi <= m.numel);
+                    assert!(
+                        p.lo % align == 0,
+                        "tensor {ti} piece lo {} misaligned ({align})",
+                        p.lo
+                    );
+                    assert!(p.hi == m.numel || p.hi % align == 0);
+                    cursor = p.hi;
+                }
+            }
+            assert_eq!(cursor, m.numel, "tensor {ti} not fully covered");
+        }
+        // The big tensor was split into several tasks.
+        let big_tasks = plan
+            .tasks
+            .iter()
+            .filter(|t| t.pieces.iter().any(|p| p.tensor == 0))
+            .count();
+        assert!(big_tasks >= 8, "expected a real split, got {big_tasks}");
+        // The two tiny tensors were coalesced into one task.
+        let tiny_task = plan
+            .tasks
+            .iter()
+            .find(|t| t.pieces.iter().any(|p| p.tensor == 2))
+            .unwrap();
+        assert!(tiny_task.pieces.iter().any(|p| p.tensor == 3));
+    }
+
+    #[test]
+    fn plan_is_independent_of_nothing_but_inputs() {
+        let metas = vec![meta(
+            1 << 18,
+            &[512, 512],
+            StateLayout::Block(128),
+            StateLayout::Global,
+        )];
+        let a = build_plan(&metas, 1 << 14);
+        let b = build_plan(&metas, 1 << 14);
+        assert_eq!(a.tasks.len(), b.tasks.len());
+        for (x, y) in a.tasks.iter().zip(b.tasks.iter()) {
+            assert_eq!(x.pieces.len(), y.pieces.len());
+            for (p, q) in x.pieces.iter().zip(y.pieces.iter()) {
+                assert_eq!((p.tensor, p.lo, p.hi), (q.tensor, q.lo, q.hi));
+            }
+        }
+    }
+
+    #[test]
+    fn stat_slots_assigned_per_global_piece() {
+        let metas = vec![meta(
+            256 * 96,
+            &[256, 96],
+            StateLayout::Block(128),
+            StateLayout::Global,
+        )];
+        let plan = build_plan(&metas, 4096);
+        let mut seen = std::collections::BTreeSet::new();
+        for t in &plan.tasks {
+            for p in &t.pieces {
+                assert!(p.m_slot.is_none());
+                let slot = p.v_slot.expect("global v needs a slot");
+                assert!(seen.insert(slot), "slot reused");
+                assert_eq!(plan.slot_lens[slot], 256 + 96);
+            }
+        }
+        assert_eq!(seen.len(), plan.slot_lens.len());
+    }
+}

@@ -1,0 +1,97 @@
+//! Unsafe-but-contained shared-memory primitives for the step engine.
+//!
+//! A step's shard tasks mutate *disjoint* regions of shared buffers
+//! (parameter data, packed state codes, block scales, stat slots). Rust's
+//! borrow checker cannot express "disjoint ranges handed to different
+//! scoped threads", so the engine routes those accesses through
+//! [`SharedSlice`], which carries the base pointer and defers the
+//! disjointness proof to the *planner*: shard ranges are constructed
+//! non-overlapping and byte-aligned (see `plan.rs`), and every unsafe
+//! access site states which plan invariant it relies on.
+
+use std::marker::PhantomData;
+
+/// A length-checked shared view over a `&mut [T]` that can be sliced into
+/// disjoint mutable ranges from multiple threads.
+///
+/// Constructing one borrows the underlying slice mutably for lifetime
+/// `'a`, so no *safe* alias can exist while tasks run. All mutation goes
+/// through [`SharedSlice::range_mut`], whose caller must guarantee range
+/// disjointness across concurrently running tasks.
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _lt: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: the wrapper only hands out raw-derived references through
+// `range_mut`, whose contract requires disjoint ranges per concurrent
+// task; with disjoint ranges, sending/sharing the view across threads is
+// equivalent to sending disjoint `&mut [T]` sub-slices.
+unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> SharedSlice<'a, T> {
+        SharedSlice {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _lt: PhantomData,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable view of elements `[lo, hi)`.
+    ///
+    /// # Safety
+    /// Ranges obtained from concurrently running tasks must be disjoint,
+    /// and no range may be re-materialized while an earlier one for an
+    /// overlapping region is still alive in the same task.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut(&self, lo: usize, hi: usize) -> &mut [T] {
+        debug_assert!(lo <= hi && hi <= self.len, "range {lo}..{hi} of {}", self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+}
+
+impl<T> Clone for SharedSlice<'_, T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T> Copy for SharedSlice<'_, T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_ranges_mutate_independently() {
+        let mut data = vec![0u32; 64];
+        let view = SharedSlice::new(&mut data);
+        std::thread::scope(|s| {
+            for w in 0..4 {
+                let view = view;
+                s.spawn(move || {
+                    // SAFETY: each worker writes its own 16-element range.
+                    let part = unsafe { view.range_mut(w * 16, (w + 1) * 16) };
+                    for (i, v) in part.iter_mut().enumerate() {
+                        *v = (w * 16 + i) as u32;
+                    }
+                });
+            }
+        });
+        assert_eq!(data, (0..64).collect::<Vec<u32>>());
+    }
+}

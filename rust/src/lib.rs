@@ -5,7 +5,8 @@
 //! Layer map (see DESIGN.md):
 //! * L1/L2 live in `python/compile/` (Pallas kernels + JAX graphs, AOT
 //!   lowered to HLO text at build time).
-//! * L3 is this crate: quantization engine ([`quant`]), optimizer zoo
+//! * L3 is this crate: quantization engine ([`quant`]), the
+//!   shard-parallel optimizer step engine ([`engine`]), optimizer zoo
 //!   ([`optim`]), builtin training engines ([`train`]), synthetic data
 //!   ([`data`]), the PJRT runtime ([`runtime`]) that executes the AOT
 //!   artifacts, memory accounting ([`memory`]), the offload simulator
@@ -14,6 +15,7 @@
 pub mod util;
 pub mod tensor;
 pub mod quant;
+pub mod engine;
 pub mod optim;
 pub mod model;
 pub mod data;

@@ -66,6 +66,7 @@ fn cmd_train(argv: &[String]) -> i32 {
         .opt("steps", "training steps (overrides config)", None)
         .opt("engine", "builtin | pjrt", None)
         .opt("seed", "run seed", None)
+        .opt("threads", "step-engine worker threads (0 = auto)", None)
         .flag("quiet", "suppress progress logs");
     let args = match cmd.parse(argv) {
         Ok(a) => a,
@@ -100,6 +101,7 @@ fn cmd_train(argv: &[String]) -> i32 {
         ("steps", "train.steps"),
         ("engine", "train.engine"),
         ("seed", "train.seed"),
+        ("threads", "train.threads"),
     ] {
         if let Some(v) = args.get(key) {
             raw.set(&format!("{target}={v}")).unwrap();
@@ -123,11 +125,16 @@ fn cmd_train(argv: &[String]) -> i32 {
 
 fn run_training(cfg: &RunConfig) -> anyhow::Result<()> {
     println!(
-        "model: {} params | optimizer: {} | engine: {} | steps: {}",
+        "model: {} params | optimizer: {} | engine: {} | steps: {} | threads: {}",
         cfg.model.n_params(),
         cfg.optimizer,
         cfg.engine,
-        cfg.steps
+        cfg.steps,
+        if cfg.threads == 0 {
+            "auto".to_string()
+        } else {
+            cfg.threads.to_string()
+        }
     );
     let mut rng = Pcg64::seeded(cfg.seed);
     let schedule = LrSchedule::LinearWarmupDecay {
@@ -146,7 +153,7 @@ fn run_training(cfg: &RunConfig) -> anyhow::Result<()> {
             cfg.hyper,
         )?)
     } else {
-        lowbit_opt::optim::build(&cfg.optimizer, cfg.hyper)
+        lowbit_opt::optim::build_threaded(&cfg.optimizer, cfg.hyper, cfg.threads)
             .ok_or_else(|| anyhow::anyhow!("unknown optimizer {}", cfg.optimizer))?
     };
 

@@ -1,16 +1,21 @@
 //! The paper's optimizer: AdamW with compressed states (Alg. 1 + Alg. 3).
 //!
-//! Per parameter tensor and step: decompress m̄, v̄ → run the exact AdamW
-//! update → re-compress. Only one tensor's states are in full precision at
-//! any moment; everything else stays packed. The quantization policy is
-//! fully configurable so the Tab. 1 ablation grid (normalization × mapping
-//! × stochastic rounding × factorization × stable-embedding) is expressible
-//! with this one type.
+//! Per parameter shard and step: decompress m̄, v̄ → run the exact AdamW
+//! update → re-compress. Only a shard's states are in full precision at
+//! any moment; everything else stays packed. The step itself runs on the
+//! shard-parallel [`crate::engine`]: block-aligned shards execute
+//! concurrently with one deterministic RNG stream each, so results are
+//! bit-identical at every thread count (see the engine module docs for
+//! the contract and `rust/tests/engine_parity.rs` for the proof).
+//!
+//! The quantization policy is fully configurable so the Tab. 1 ablation
+//! grid (normalization × mapping × stochastic rounding × factorization ×
+//! stable-embedding) is expressible with this one type.
 
-use super::adamw::adamw_update_tensor;
 use super::factor::FactoredSecond;
 use super::state::{MomentState, SecondState};
 use super::{Hyper, Optimizer, Param, ParamKind};
+use crate::engine::{compressed_step, StepEngine, StepParams};
 use crate::quant::{MapKind, NormKind, QuantMap, Quantizer};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
@@ -115,18 +120,24 @@ impl QuantPolicy {
     }
 }
 
-/// AdamW with compressed optimizer states.
+/// AdamW with compressed optimizer states, stepped on the shard-parallel
+/// [`StepEngine`].
 pub struct CompressedAdamW {
     hp: Hyper,
     pub policy: QuantPolicy,
     t: usize,
     m: Vec<MomentState>,
     v: Vec<SecondState>,
-    // Cached mapping tables (hot path: built once, reused every step).
+    // Cached mapping tables (hot path: built once, borrowed every step).
     m_map: Option<QuantMap>,
     v_map: Option<QuantMap>,
     v1_map: Option<QuantMap>,
+    /// Base seed for the per-shard stochastic-rounding streams.
+    seed: u64,
+    /// Init-time RNG (state initialization only; the step path draws
+    /// from deterministic per-shard streams instead).
     rng: Pcg64,
+    engine: StepEngine,
 }
 
 impl CompressedAdamW {
@@ -140,8 +151,34 @@ impl CompressedAdamW {
             policy,
             m: Vec::new(),
             v: Vec::new(),
+            seed: 0x10B1,
             rng: Pcg64::seeded(0x10B1),
+            engine: StepEngine::new(),
         }
+    }
+
+    /// Set the engine worker count (0 = auto). Results are bit-identical
+    /// at every setting; this is purely a throughput knob.
+    pub fn with_threads(mut self, threads: usize) -> CompressedAdamW {
+        self.engine = self.engine.clone().with_threads(threads);
+        self
+    }
+
+    /// Set the engine shard size in elements (tests use small values to
+    /// force multi-shard plans on small tensors).
+    pub fn with_shard_elems(mut self, shard_elems: usize) -> CompressedAdamW {
+        self.engine = self.engine.clone().with_shard_elems(shard_elems);
+        self
+    }
+
+    /// Set the base seed of the per-shard stochastic-rounding streams.
+    pub fn with_seed(mut self, seed: u64) -> CompressedAdamW {
+        self.seed = seed;
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.engine.threads()
     }
 
     fn lazy_init(&mut self, params: &[Param]) {
@@ -213,75 +250,27 @@ impl Optimizer for CompressedAdamW {
         assert_eq!(params.len(), grads.len());
         self.lazy_init(params);
         self.t += 1;
-        let hp = self.hp;
-        let t = self.t;
-        for (i, p) in params.iter_mut().enumerate() {
-            let g = &grads[i];
-            let quantize = self.policy.should_quantize(p);
-
-            // ---- Factored-v path (Alg. 1 with v held sublinearly) ----
-            if let SecondState::Factored(f) = &mut self.v[i] {
-                // v-EMA on the factored stats, exact AdamW elsewhere.
-                f.update(g, hp.beta2, 0.0);
-                let rm = f.row_mean();
-                let cols = f.cols();
-                let bc1 = 1.0 - hp.beta1.powi(t as i32);
-                let bc2 = 1.0 - hp.beta2.powi(t as i32);
-                let mut m = self.m[i].decompress(self.m_map.as_ref());
-                for k in 0..p.tensor.data.len() {
-                    let gv = g.data[k];
-                    let mi = hp.beta1 * m.data[k] + (1.0 - hp.beta1) * gv;
-                    m.data[k] = mi;
-                    let vhat = f.reconstruct_at(k / cols, k % cols, rm) / bc2;
-                    let upd = (mi / bc1) / (vhat.sqrt() + hp.eps)
-                        + hp.weight_decay * p.tensor.data[k];
-                    p.tensor.data[k] -= lr * upd;
-                }
-                self.m[i] = if quantize {
-                    MomentState::compress(
-                        m,
-                        self.policy.m_quant.as_ref(),
-                        self.m_map.as_ref(),
-                        &mut self.rng,
-                    )
-                } else {
-                    MomentState::F32(m)
-                };
-                continue;
-            }
-
-            // ---- Quantized / fp32 path: decompress → AdamW → compress ----
-            let mut m = self.m[i].decompress(self.m_map.as_ref());
-            let mut v = match &self.v[i] {
-                SecondState::F32(tns) => tns.clone(),
-                SecondState::Quant(q) => q.dequantize(),
-                SecondState::Factored(_) => unreachable!(),
-            };
-            adamw_update_tensor(&mut p.tensor, &mut m, &mut v, g, &hp, lr, t);
-            if quantize {
-                self.m[i] = MomentState::compress(
-                    m,
-                    self.policy.m_quant.as_ref(),
-                    self.m_map.as_ref(),
-                    &mut self.rng,
-                );
-                let ndim = p.tensor.ndim();
-                let (q, map) = match ndim {
-                    n if n >= 2 => (self.policy.v_quant, self.v_map.clone()),
-                    _ => (self.policy.v_quant_1d, self.v1_map.clone()),
-                };
-                self.v[i] = match q {
-                    Some(q) => SecondState::Quant(match &map {
-                        Some(mp) => q.quantize_with(&v, mp, &mut self.rng),
-                        None => q.quantize(&v, &mut self.rng),
-                    }),
-                    None => SecondState::F32(v),
-                };
-            } else {
-                self.m[i] = MomentState::F32(m);
-                self.v[i] = SecondState::F32(v);
-            }
-        }
+        // The whole decompress → AdamW → requantize pass runs on the
+        // shard-parallel engine; the cached decode tables are borrowed
+        // (never cloned) and shard scratch replaces per-tensor
+        // allocations. Bit-identical at every thread count.
+        let sp = StepParams {
+            hp: self.hp,
+            t: self.t,
+            lr,
+            base_seed: self.seed,
+            m_map: self.m_map.as_ref(),
+            v_map: self.v_map.as_ref(),
+            v1_map: self.v1_map.as_ref(),
+        };
+        compressed_step(
+            &self.engine,
+            &sp,
+            params,
+            grads,
+            &mut self.m,
+            &mut self.v,
+        );
     }
 
     fn state_bytes(&self) -> usize {

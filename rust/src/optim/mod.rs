@@ -93,19 +93,23 @@ pub trait Optimizer {
 /// * `sm3`      — SM3 with momentum
 /// * `sgdm` / `sgdm4` — SGD with (quantized) momentum
 pub fn build(preset: &str, hp: Hyper) -> Option<Box<dyn Optimizer>> {
+    build_threaded(preset, hp, 0)
+}
+
+/// [`build`] with an explicit step-engine worker count for the
+/// compressed presets (0 = auto). Thread count is purely a throughput
+/// knob: the engine is bit-identical at every setting.
+pub fn build_threaded(preset: &str, hp: Hyper, threads: usize) -> Option<Box<dyn Optimizer>> {
     use crate::quant::Quantizer;
+    let compressed = |policy: lowbit::QuantPolicy| {
+        lowbit::CompressedAdamW::new(hp, policy).with_threads(threads)
+    };
     Some(match preset {
         "adamw32" => Box::new(adamw::AdamW::new(hp)),
-        "adamw8" => Box::new(lowbit::CompressedAdamW::new(hp, lowbit::QuantPolicy::bit8())),
-        "adamw4" => Box::new(lowbit::CompressedAdamW::new(hp, lowbit::QuantPolicy::bit4())),
-        "adamw4-sr" => Box::new(lowbit::CompressedAdamW::new(
-            hp,
-            lowbit::QuantPolicy::bit4().stochastic(),
-        )),
-        "factor4" => Box::new(lowbit::CompressedAdamW::new(
-            hp,
-            lowbit::QuantPolicy::bit4().factored(),
-        )),
+        "adamw8" => Box::new(compressed(lowbit::QuantPolicy::bit8())),
+        "adamw4" => Box::new(compressed(lowbit::QuantPolicy::bit4())),
+        "adamw4-sr" => Box::new(compressed(lowbit::QuantPolicy::bit4().stochastic())),
+        "factor4" => Box::new(compressed(lowbit::QuantPolicy::bit4().factored())),
         "adafactor" => Box::new(adafactor::Adafactor::new(hp, true)),
         "adafactor-b0" => Box::new(adafactor::Adafactor::new(hp, false)),
         "sm3" => Box::new(sm3::Sm3::new(hp)),

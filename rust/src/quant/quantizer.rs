@@ -154,6 +154,144 @@ impl Quantizer {
             quantizer: *self,
         }
     }
+
+    // ------------------------------------------------------------------
+    // §Perf: range-based hot paths for the shard-parallel step engine
+    // ([`crate::engine`]). They quantize element *sub-ranges* with
+    // caller-provided output buffers, so a training step allocates
+    // nothing per tensor; each mirrors the whole-tensor path above
+    // bit-exactly (pinned by `range_apis_match_whole_tensor_paths`).
+    // ------------------------------------------------------------------
+
+    /// Quantize a block-aligned element range of a tensor: per-block
+    /// scales go to `scales_out` (indexed from the range's first block)
+    /// and packed codes to `dst`, the packed-byte sub-range of the same
+    /// elements.
+    ///
+    /// Contract (the caller's — i.e. the engine planner's — to uphold;
+    /// only the buffer lengths are debug-asserted here): the range starts
+    /// on a block boundary (`vals[0]` is the first element of a block)
+    /// and, for 4-bit codes, on an even element so it owns whole bytes;
+    /// it ends on a block boundary or at the end of the tensor. A
+    /// mid-block start would silently compute a wrong scale for the
+    /// partial first block.
+    pub fn encode_block_range(
+        &self,
+        map: &QuantMap,
+        vals: &[f32],
+        block: usize,
+        scales_out: &mut [f32],
+        dst: &mut [u8],
+        rng: &mut Pcg64,
+    ) {
+        debug_assert_eq!(map.kind, self.map);
+        debug_assert_eq!(map.bits, self.bits);
+        debug_assert!(block > 0);
+        debug_assert_eq!(scales_out.len(), vals.len().div_ceil(block));
+        debug_assert_eq!(dst.len(), packing::packed_len(vals.len(), self.bits));
+        for (bi, chunk) in vals.chunks(block).enumerate() {
+            let s = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            scales_out[bi] = s;
+            let base = bi * block;
+            if s <= 0.0 {
+                // All-zero block: every code encodes normalized 0, and the
+                // RNG is deliberately NOT consumed (matches quantize_with).
+                let zero_code = map.encode(0.0);
+                for j in 0..chunk.len() {
+                    packing::set(dst, base + j, zero_code, self.bits);
+                }
+                continue;
+            }
+            if self.stochastic {
+                for (j, &v) in chunk.iter().enumerate() {
+                    let code = encode_stochastic(map, v / s, rng);
+                    packing::set(dst, base + j, code, self.bits);
+                }
+            } else {
+                for (j, &v) in chunk.iter().enumerate() {
+                    packing::set(dst, base + j, map.encode(v / s), self.bits);
+                }
+            }
+        }
+        // A trailing partial byte (odd tensor length) keeps its stale high
+        // nibble under read-modify-write `set`; clear it so the stored
+        // image matches a fresh `pack` of the same codes.
+        if self.bits == 4 && vals.len() % 2 == 1 {
+            let last = dst.len() - 1;
+            dst[last] &= 0x0F;
+        }
+    }
+
+    /// Encode the element range starting at `elem_lo` of a tensor with
+    /// `shape` under precomputed global `scales` (rank-1 or per-tensor),
+    /// writing packed codes into `dst` (packed-byte sub-range of the same
+    /// elements; `elem_lo` must be even for 4-bit codes). Block scales
+    /// belong to [`Self::encode_block_range`] — they are per-range state,
+    /// not global.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode_range_with_scales(
+        &self,
+        map: &QuantMap,
+        vals: &[f32],
+        elem_lo: usize,
+        shape: &[usize],
+        scales: &Scales,
+        dst: &mut [u8],
+        rng: &mut Pcg64,
+    ) {
+        debug_assert_eq!(map.kind, self.map);
+        debug_assert_eq!(map.bits, self.bits);
+        debug_assert!(
+            !matches!(scales, Scales::Block { .. }),
+            "block scales are per-range: use encode_block_range"
+        );
+        debug_assert_eq!(dst.len(), packing::packed_len(vals.len(), self.bits));
+        match scales {
+            // Row-segment fast path for rank-1 scales on 2-D tensors.
+            Scales::Rank1 { per_axis } if shape.len() == 2 => {
+                let cols = shape[1];
+                let r = &per_axis[0];
+                let c = &per_axis[1];
+                let hi = elem_lo + vals.len();
+                let mut i = elem_lo;
+                while i < hi {
+                    let row = i / cols;
+                    let row_start = row * cols;
+                    let row_end = (row_start + cols).min(hi);
+                    let ri = r[row];
+                    for j in i..row_end {
+                        let cj = c[j - row_start];
+                        let s = if ri < cj { ri } else { cj };
+                        let v = vals[j - elem_lo];
+                        let nrm = if s > 0.0 { v / s } else { 0.0 };
+                        let code = if self.stochastic {
+                            encode_stochastic(map, nrm, rng)
+                        } else {
+                            map.encode(nrm)
+                        };
+                        packing::set(dst, j - elem_lo, code, self.bits);
+                    }
+                    i = row_end;
+                }
+            }
+            _ => {
+                for (k, &v) in vals.iter().enumerate() {
+                    let s = scales.scale_at(elem_lo + k, shape);
+                    let nrm = if s > 0.0 { v / s } else { 0.0 };
+                    let code = if self.stochastic {
+                        encode_stochastic(map, nrm, rng)
+                    } else {
+                        map.encode(nrm)
+                    };
+                    packing::set(dst, k, code, self.bits);
+                }
+            }
+        }
+        if self.bits == 4 && vals.len() % 2 == 1 {
+            let last = dst.len() - 1;
+            dst[last] &= 0x0F;
+        }
+    }
 }
 
 /// A compressed tensor: packed codes + quantization scales. This is the
@@ -240,6 +378,48 @@ impl QuantizedTensor {
             }
         }
         Tensor::from_vec(&self.shape, out)
+    }
+
+    /// §Perf engine hot path: decompress the element range `[lo, hi)`
+    /// into `out` (`out.len() == hi - lo`), no allocation. Bit-identical
+    /// to the corresponding slice of [`Self::dequantize_with`].
+    pub fn dequantize_range_into(&self, map: &QuantMap, lo: usize, hi: usize, out: &mut [f32]) {
+        debug_assert_eq!(map.kind, self.quantizer.map);
+        debug_assert!(lo <= hi && hi <= self.numel());
+        debug_assert_eq!(out.len(), hi - lo);
+        match &self.scales {
+            Scales::Block { block, scales } => {
+                for (o, i) in out.iter_mut().zip(lo..hi) {
+                    let code = packing::get(&self.packed, i, self.bits);
+                    *o = map.decode(code) * scales[i / block];
+                }
+            }
+            Scales::Rank1 { per_axis } if self.shape.len() == 2 => {
+                let cols = self.shape[1];
+                let r = &per_axis[0];
+                let c = &per_axis[1];
+                let mut i = lo;
+                while i < hi {
+                    let row = i / cols;
+                    let row_start = row * cols;
+                    let row_end = (row_start + cols).min(hi);
+                    let ri = r[row];
+                    for j in i..row_end {
+                        let code = packing::get(&self.packed, j, self.bits);
+                        let cj = c[j - row_start];
+                        let s = if ri < cj { ri } else { cj };
+                        out[j - lo] = map.decode(code) * s;
+                    }
+                    i = row_end;
+                }
+            }
+            scales => {
+                for (o, i) in out.iter_mut().zip(lo..hi) {
+                    let code = packing::get(&self.packed, i, self.bits);
+                    *o = map.decode(code) * scales.scale_at(i, &self.shape);
+                }
+            }
+        }
     }
 }
 
@@ -400,5 +580,99 @@ mod tests {
         assert_eq!(Quantizer::first_moment_4bit().name(), "B128/DE");
         assert_eq!(Quantizer::second_moment_4bit().name(), "Rank-1/Linear");
         assert_eq!(Quantizer::moment_8bit(true).name(), "B2048/DE");
+    }
+
+    #[test]
+    fn range_apis_match_whole_tensor_paths() {
+        // The engine's shard contract: encoding/decoding aligned
+        // sub-ranges must reproduce the whole-tensor quantize/dequantize
+        // bit-exactly (same packed bytes, same f32 values).
+        let mut data_rng = Pcg64::seeded(99);
+        let x = Tensor::randn(&[48, 40], 0.5, &mut data_rng); // 1920 elems
+        let n = x.numel();
+        let cases = vec![
+            Quantizer::first_moment_4bit(),
+            Quantizer::moment_8bit(true),
+            Quantizer::new(NormKind::Block(128), MapKind::Linear, 4, false),
+            Quantizer::second_moment_4bit(),
+            Quantizer::new(NormKind::PerTensor, MapKind::Linear, 4, false),
+        ];
+        for q in cases {
+            let map = q.build_map();
+            let mut r0 = Pcg64::seeded(0);
+            let whole = q.quantize_with(&x, &map, &mut r0);
+
+            // Split points must respect the scheme's alignment; B2048 on
+            // a 1920-element tensor is a single (partial) block.
+            let ranges: Vec<(usize, usize)> = match q.norm {
+                NormKind::Block(2048) => vec![(0, n)],
+                _ => vec![(0, 640), (640, 1280), (1280, n)],
+            };
+
+            let mut packed = vec![0u8; whole.packed.len()];
+            for &(lo, hi) in &ranges {
+                let mut rr = Pcg64::seeded(1);
+                let (b0, b1) = if q.bits == 4 {
+                    (lo / 2, hi.div_ceil(2))
+                } else {
+                    (lo, hi)
+                };
+                match q.norm {
+                    NormKind::Block(b) => {
+                        let mut sc = vec![0.0f32; (hi - lo).div_ceil(b)];
+                        q.encode_block_range(
+                            &map,
+                            &x.data[lo..hi],
+                            b,
+                            &mut sc,
+                            &mut packed[b0..b1],
+                            &mut rr,
+                        );
+                        match &whole.scales {
+                            Scales::Block { scales, .. } => {
+                                assert_eq!(&scales[lo / b..hi.div_ceil(b)], &sc[..]);
+                            }
+                            _ => unreachable!(),
+                        }
+                    }
+                    _ => q.encode_range_with_scales(
+                        &map,
+                        &x.data[lo..hi],
+                        lo,
+                        &x.shape,
+                        &whole.scales,
+                        &mut packed[b0..b1],
+                        &mut rr,
+                    ),
+                }
+            }
+            assert_eq!(packed, whole.packed, "{} range codes differ", q.name());
+
+            let full = whole.dequantize_with(&map);
+            let mut out = vec![0.0f32; n];
+            for &(lo, hi) in &ranges {
+                whole.dequantize_range_into(&map, lo, hi, &mut out[lo..hi]);
+            }
+            assert_eq!(out, full.data, "{} range dequant differs", q.name());
+        }
+    }
+
+    #[test]
+    fn encode_block_range_handles_odd_tail_and_zero_blocks() {
+        let q = Quantizer::new(NormKind::Block(4), MapKind::Linear, 4, false);
+        let map = q.build_map();
+        // 7 elements: one zero block, then a partial block with content.
+        let x = Tensor::from_vec(&[7], vec![0.0, 0.0, 0.0, 0.0, 0.5, 1.0, 0.25]);
+        let mut rng = Pcg64::seeded(0);
+        let whole = q.quantize_with(&x, &map, &mut rng);
+        let mut packed = vec![0xFFu8; whole.packed.len()]; // poisoned
+        let mut sc = vec![0.0f32; 2];
+        let mut rng2 = Pcg64::seeded(0);
+        q.encode_block_range(&map, &x.data, 4, &mut sc, &mut packed, &mut rng2);
+        assert_eq!(packed, whole.packed, "stale high nibble must be cleared");
+        match &whole.scales {
+            Scales::Block { scales, .. } => assert_eq!(&sc, scales),
+            _ => unreachable!(),
+        }
     }
 }

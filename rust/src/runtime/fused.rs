@@ -9,7 +9,7 @@
 //! codes are stored nibble-packed, so persistent memory matches the
 //! native 4-bit optimizer exactly.
 
-use super::{literal_to_f32, tensor_to_literal, u8_literal, Executable, Runtime};
+use super::{tensor_to_literal, u8_literal, Executable, Runtime};
 use crate::optim::{Hyper, Optimizer, Param};
 use crate::quant::packing;
 use crate::tensor::Tensor;
@@ -86,12 +86,15 @@ impl FusedAdamW4 {
     }
 
     /// One fused step over all chunks. `flat_grads` must be the gradient
-    /// image in the same flattening order.
+    /// image in the same flattening order. Atomic on failure: updated
+    /// chunk states are staged and only committed once every chunk has
+    /// executed, and `self.t` is advanced by the caller afterwards — so a
+    /// failed dispatch leaves states and bias correction untouched.
     fn step_flat(&mut self, flat_grads: &[f32], lr: f32) -> Result<()> {
-        self.t += 1;
         let hp = self.hp;
-        let bc1 = 1.0 - hp.beta1.powi(self.t as i32);
-        let bc2 = 1.0 - hp.beta2.powi(self.t as i32);
+        let t_next = self.t + 1;
+        let bc1 = 1.0 - hp.beta1.powi(t_next as i32);
+        let bc2 = 1.0 - hp.beta2.powi(t_next as i32);
         let hyper = [
             lr,
             hp.beta1,
@@ -104,6 +107,7 @@ impl FusedAdamW4 {
         ];
         let n_chunks = self.chunks.len();
         let scales_per_chunk = self.chunk / self.block;
+        let mut staged: Vec<ChunkState> = Vec::with_capacity(n_chunks);
         for ci in 0..n_chunks {
             let lo = ci * self.chunk;
             let hi = lo + self.chunk;
@@ -150,12 +154,14 @@ impl FusedAdamW4 {
             let v_scales = outs[4]
                 .to_vec::<f32>()
                 .map_err(|e| anyhow!("fused v scales: {e:?}"))?;
-            let st = &mut self.chunks[ci];
-            st.m_packed = packing::pack(&m_codes, 4);
-            st.m_scales = m_scales;
-            st.v_packed = packing::pack(&v_codes, 4);
-            st.v_scales = v_scales;
+            staged.push(ChunkState {
+                m_packed: packing::pack(&m_codes, 4),
+                m_scales,
+                v_packed: packing::pack(&v_codes, 4),
+                v_scales,
+            });
         }
+        self.chunks = staged;
         Ok(())
     }
 
@@ -164,15 +170,20 @@ impl FusedAdamW4 {
         self.chunks.len()
     }
 
-    /// Dequantized (m, v) images for parity tests/analysis.
+    /// Dequantized (m, v) images for parity tests/analysis, truncated to
+    /// the real (unpadded) parameter count — the zero-padded tail past
+    /// `n_real` is a chunking artifact and must not enter parity checks.
     pub fn debug_moments(&self) -> (Vec<f32>, Vec<f32>) {
         use crate::quant::{MapKind, QuantMap};
         let m_map = QuantMap::new(MapKind::DynExp, 4, true);
         let v_map = QuantMap::new(MapKind::Linear, 4, false);
-        let mut m = Vec::with_capacity(self.flat.len());
-        let mut v = Vec::with_capacity(self.flat.len());
-        for st in &self.chunks {
+        let mut m = Vec::with_capacity(self.n_real);
+        let mut v = Vec::with_capacity(self.n_real);
+        'outer: for st in &self.chunks {
             for i in 0..self.chunk {
+                if m.len() == self.n_real {
+                    break 'outer;
+                }
                 let mc = packing::get(&st.m_packed, i, 4);
                 let vc = packing::get(&st.v_packed, i, 4);
                 m.push(m_map.decode(mc) * st.m_scales[i / self.block]);
@@ -185,10 +196,14 @@ impl FusedAdamW4 {
     pub fn flat_params(&self) -> &[f32] {
         &self.flat[..self.n_real]
     }
-}
 
-impl Optimizer for FusedAdamW4 {
-    fn step(&mut self, params: &mut [Param], grads: &[Tensor], lr: f32) {
+    /// One optimizer step with an error channel. Atomic on failure: the
+    /// step counter, the quantized m/v states and the parameters are all
+    /// left untouched (updated chunk states are staged and committed only
+    /// after every chunk executed), so callers can safely retry or abort
+    /// without bias-correction drift or double-applied EMA updates.
+    pub fn try_step(&mut self, params: &mut [Param], grads: &[Tensor], lr: f32) -> Result<()> {
+        assert_eq!(params.len(), grads.len());
         self.lazy_init(params);
         // Gather grads into the flat image order.
         let mut flat_g = vec![0.0f32; self.n_real];
@@ -203,16 +218,26 @@ impl Optimizer for FusedAdamW4 {
             self.flat[off_w..off_w + p.tensor.numel()].copy_from_slice(&p.tensor.data);
             off_w += p.tensor.numel();
         }
-        if let Err(e) = self.step_flat(&flat_g, lr) {
-            crate::util::log(1, "fused", &format!("fused step failed: {e}"));
-            return;
-        }
+        self.step_flat(&flat_g, lr)?;
+        self.t += 1;
         // Scatter updated weights back.
         let mut off = 0;
         for p in params.iter_mut() {
             let n = p.tensor.numel();
             p.tensor.data.copy_from_slice(&self.flat[off..off + n]);
             off += n;
+        }
+        Ok(())
+    }
+}
+
+impl Optimizer for FusedAdamW4 {
+    fn step(&mut self, params: &mut [Param], grads: &[Tensor], lr: f32) {
+        // The trait has no error channel; a failed PJRT dispatch must not
+        // be silently swallowed (weights would freeze while the trainer
+        // keeps feeding batches), so surface it loudly.
+        if let Err(e) = self.try_step(params, grads, lr) {
+            panic!("FusedAdamW4::step failed (step counter not advanced): {e}");
         }
     }
 

@@ -2,9 +2,19 @@
 //! `python/compile/aot.py` and executes them from the rust hot path.
 //! Python is never invoked here — the artifacts directory is the entire
 //! interface between the layers.
+//!
+//! The offline crate set carries no `xla` bindings, so this module
+//! currently compiles against [`xla_stub`]: literal conversions are fully
+//! functional, while client construction / execution report
+//! "PJRT unavailable" and every caller degrades gracefully (the CLI
+//! prints the status, the fused optimizer refuses to load, integration
+//! tests skip). Swap the `use` below for the real crate when available.
 
 pub mod fused;
 pub mod manifest;
+pub mod xla_stub;
+
+use self::xla_stub as xla;
 
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Context, Result};

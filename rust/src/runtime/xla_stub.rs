@@ -1,0 +1,290 @@
+//! In-tree stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The offline crate set this repo builds against ships no `xla` /
+//! `xla_extension` bindings, so the runtime layer compiles against this
+//! shim instead. The split is deliberate:
+//!
+//! * [`Literal`] is a **functional** host-side implementation (typed
+//!   buffer + dims) so every literal<->tensor conversion in
+//!   `runtime::mod` keeps working and stays unit-tested.
+//! * [`PjRtClient`] / compilation / execution are **unavailable**: they
+//!   return [`XlaError`] at runtime, which the callers already surface
+//!   gracefully (`lowbit info` prints "PJRT unavailable", the fused
+//!   optimizer refuses to load, integration tests skip).
+//!
+//! When a real PJRT binding lands in the crate set, delete this module
+//! and re-point `use self::xla_stub as xla;` in `runtime/mod.rs` at it —
+//! the API surface below mirrors the binding 1:1.
+
+use std::fmt;
+
+/// Error type mirroring the binding's error enum. Carries a message only.
+#[derive(Debug, Clone)]
+pub struct XlaError {
+    pub msg: String,
+}
+
+impl XlaError {
+    fn new(msg: impl Into<String>) -> XlaError {
+        XlaError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+const UNAVAILABLE: &str = "PJRT backend not available: built against the xla stub \
+     (no xla crate in the offline set); native optimizers remain fully functional";
+
+/// Element types we transport (f32 tensors, i32 token batches, u8 codes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    I32,
+    U8,
+}
+
+impl ElementType {
+    fn byte_width(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::I32 => 4,
+            ElementType::U8 => 1,
+        }
+    }
+}
+
+/// Rust native types that map onto an [`ElementType`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn write_bytes(xs: &[Self], out: &mut Vec<u8>);
+    fn read_bytes(bytes: &[u8]) -> Vec<Self>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn write_bytes(xs: &[Self], out: &mut Vec<u8>) {
+        for x in xs {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn read_bytes(bytes: &[u8]) -> Vec<Self> {
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::I32;
+    fn write_bytes(xs: &[Self], out: &mut Vec<u8>) {
+        for x in xs {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn read_bytes(bytes: &[u8]) -> Vec<Self> {
+        bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+impl NativeType for u8 {
+    const TY: ElementType = ElementType::U8;
+    fn write_bytes(xs: &[Self], out: &mut Vec<u8>) {
+        out.extend_from_slice(xs);
+    }
+    fn read_bytes(bytes: &[u8]) -> Vec<Self> {
+        bytes.to_vec()
+    }
+}
+
+/// A typed host literal: element type, dims, raw little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    /// 1-D literal from a native slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let mut bytes = Vec::with_capacity(data.len() * std::mem::size_of::<T>());
+        T::write_bytes(data, &mut bytes);
+        Literal {
+            ty: T::TY,
+            dims: vec![data.len() as i64],
+            bytes,
+        }
+    }
+
+    /// Literal from a shape and a raw byte buffer.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal, XlaError> {
+        let n: usize = shape.iter().product();
+        if n * ty.byte_width() != data.len() {
+            return Err(XlaError::new(format!(
+                "shape {shape:?} ({n} x {}B) does not match {} data bytes",
+                ty.byte_width(),
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: shape.iter().map(|&d| d as i64).collect(),
+            bytes: data.to_vec(),
+        })
+    }
+
+    /// Reshape to new dims (element count must match).
+    pub fn reshape(mut self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let n: i64 = dims.iter().product();
+        let have = (self.bytes.len() / self.ty.byte_width()) as i64;
+        if n != have {
+            return Err(XlaError::new(format!(
+                "reshape to {dims:?} ({n} elems) from {have} elems"
+            )));
+        }
+        self.dims = dims.to_vec();
+        Ok(self)
+    }
+
+    /// Element count.
+    pub fn element_count(&self) -> usize {
+        self.bytes.len() / self.ty.byte_width()
+    }
+
+    /// Copy out as a native vector; errors on element-type mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        if self.ty != T::TY {
+            return Err(XlaError::new(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(T::read_bytes(&self.bytes))
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (nothing
+    /// executes), so this always errors.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        Err(XlaError::new("stub literal is not a tuple"))
+    }
+}
+
+/// Parsed HLO module (unavailable in the stub).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(XlaError::new(format!(
+            "cannot parse {path}: {UNAVAILABLE}"
+        )))
+    }
+}
+
+/// A computation handle (never constructible from a real proto here).
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client (unavailable in the stub).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(XlaError::new(UNAVAILABLE))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(XlaError::new(UNAVAILABLE))
+    }
+}
+
+/// Device buffer handle returned by execution.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(XlaError::new(UNAVAILABLE))
+    }
+}
+
+/// Loaded executable (never constructible in the stub).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(XlaError::new(UNAVAILABLE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_typed() {
+        let l = Literal::vec1(&[1.0f32, -2.5, 3.25]);
+        assert_eq!(l.element_count(), 3);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.25]);
+        assert!(l.to_vec::<i32>().is_err(), "type mismatch must error");
+    }
+
+    #[test]
+    fn literal_reshape_checks_count() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4]);
+        let l = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+        let l2 = Literal::vec1(&[1i32, 2, 3]);
+        assert!(l2.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn untyped_construction_validates() {
+        let l =
+            Literal::create_from_shape_and_untyped_data(ElementType::U8, &[4], &[1, 2, 3, 4])
+                .unwrap();
+        assert_eq!(l.to_vec::<u8>().unwrap(), vec![1, 2, 3, 4]);
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 7])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub client must not exist");
+        assert!(err.to_string().contains("PJRT backend not available"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,233 @@
+//! Determinism parity suite for the shard-parallel step engine: a
+//! `CompressedAdamW` stepped at thread counts 1 (the sequential
+//! schedule), 2 and 7 must produce **bit-identical** weights and
+//! optimizer states — for every quantization policy, with stochastic
+//! rounding ON and OFF, factored and quantized second moments, and both
+//! 1-D and 2-D parameters.
+//!
+//! Shard size is forced down to 512 elements so even these small test
+//! tensors split into many shards (the 2-D weight into ~5, the 1-D
+//! vector into ~12), making the parity check exercise real multi-shard
+//! plans rather than trivially passing on single-shard tensors.
+
+use lowbit_opt::optim::lowbit::{CompressedAdamW, QuantPolicy};
+use lowbit_opt::optim::{Hyper, Optimizer, Param, ParamKind};
+use lowbit_opt::quant::{MapKind, NormKind, Quantizer};
+use lowbit_opt::tensor::Tensor;
+use lowbit_opt::util::rng::Pcg64;
+
+const SHARD_ELEMS: usize = 512;
+const STEPS: usize = 4;
+const THREADS: [usize; 3] = [1, 2, 7];
+
+/// Everything observable about a run: final weights, decompressed
+/// moments, and the persistent state footprint.
+#[derive(PartialEq, Debug)]
+struct RunOut {
+    weights: Vec<Vec<f32>>,
+    moments: Vec<(Vec<f32>, Vec<f32>)>,
+    state_bytes: usize,
+}
+
+fn mixed_params() -> Vec<Param> {
+    let mut rng = Pcg64::seeded(7);
+    vec![
+        // 2-D, multi-shard under rank-1 row alignment.
+        Param::new("w2d", ParamKind::Weight, Tensor::randn(&[40, 96], 0.5, &mut rng)),
+        // 1-D, multi-shard under B128 alignment.
+        Param::new("w1d", ParamKind::Weight, Tensor::randn(&[6000], 0.5, &mut rng)),
+        // 2-D, two shards.
+        Param::new("w2d_b", ParamKind::Weight, Tensor::randn(&[24, 32], 0.5, &mut rng)),
+        // Tiny tensor, coalesced with whatever shard has room.
+        Param::new("bias", ParamKind::Bias, Tensor::randn(&[10], 0.5, &mut rng)),
+    ]
+}
+
+/// Larger workload (> `MIN_PARALLEL_ELEMS` = 32768 total elements) so
+/// auto thread mode genuinely goes parallel instead of short-circuiting
+/// to the sequential schedule.
+fn big_mixed_params() -> Vec<Param> {
+    let mut rng = Pcg64::seeded(17);
+    vec![
+        Param::new("w2d", ParamKind::Weight, Tensor::randn(&[64, 384], 0.5, &mut rng)),
+        Param::new("w1d", ParamKind::Weight, Tensor::randn(&[12000], 0.5, &mut rng)),
+        Param::new("w2d_b", ParamKind::Weight, Tensor::randn(&[24, 32], 0.5, &mut rng)),
+        Param::new("bias", ParamKind::Bias, Tensor::randn(&[10], 0.5, &mut rng)),
+    ]
+}
+
+fn run_params(policy: QuantPolicy, threads: usize, mk: fn() -> Vec<Param>) -> RunOut {
+    let hp = Hyper::default();
+    let mut opt = CompressedAdamW::new(hp, policy)
+        .with_threads(threads)
+        .with_shard_elems(SHARD_ELEMS);
+    let mut params = mk();
+    let init: Vec<Vec<f32>> = params.iter().map(|p| p.tensor.data.clone()).collect();
+    for s in 0..STEPS {
+        // Same gradient stream for every run: re-seeded per step.
+        let mut grng = Pcg64::seeded(1000 + s as u64);
+        let grads: Vec<Tensor> = params
+            .iter()
+            .map(|p| Tensor::randn(&p.tensor.shape, 0.1, &mut grng))
+            .collect();
+        opt.step(&mut params, &grads, 1e-2);
+    }
+    // The optimizer must have actually moved the weights.
+    for (p, w0) in params.iter().zip(init.iter()) {
+        assert_ne!(&p.tensor.data, w0, "{} never updated", p.name);
+    }
+    RunOut {
+        weights: params.iter().map(|p| p.tensor.data.clone()).collect(),
+        moments: (0..params.len())
+            .map(|i| {
+                let (m, v) = opt.moments(i).expect("moments");
+                (m.data, v.data)
+            })
+            .collect(),
+        state_bytes: opt.state_bytes(),
+    }
+}
+
+fn run(policy: QuantPolicy, threads: usize) -> RunOut {
+    run_params(policy, threads, mixed_params)
+}
+
+fn assert_parity(mk_policy: impl Fn() -> QuantPolicy, label: &str) {
+    let baseline = run(mk_policy(), THREADS[0]);
+    for &t in &THREADS[1..] {
+        let out = run(mk_policy(), t);
+        assert_eq!(
+            baseline, out,
+            "{label}: threads={t} diverged from the sequential schedule"
+        );
+    }
+}
+
+fn quantize_everything(mut policy: QuantPolicy) -> QuantPolicy {
+    policy.min_quant_size = 0;
+    policy
+}
+
+#[test]
+fn parity_bit4_deterministic_rounding() {
+    assert_parity(
+        || quantize_everything(QuantPolicy::bit4()),
+        "4-bit (m B128/DE, v Rank-1/Linear), SR off",
+    );
+}
+
+#[test]
+fn parity_bit4_stochastic_rounding() {
+    assert_parity(
+        || quantize_everything(QuantPolicy::bit4().stochastic()),
+        "4-bit, SR on",
+    );
+}
+
+#[test]
+fn parity_bit4_factored() {
+    assert_parity(
+        || quantize_everything(QuantPolicy::bit4().factored()),
+        "4-bit Factor, SR off",
+    );
+}
+
+#[test]
+fn parity_bit4_factored_stochastic() {
+    assert_parity(
+        || quantize_everything(QuantPolicy::bit4().factored().stochastic()),
+        "4-bit Factor, SR on",
+    );
+}
+
+#[test]
+fn parity_bit8_blockwise() {
+    assert_parity(
+        || quantize_everything(QuantPolicy::bit8()),
+        "8-bit (B2048/DE both moments)",
+    );
+}
+
+#[test]
+fn parity_per_tensor_v() {
+    // Per-tensor normalization exercises the global-scale route with a
+    // single reduced statistic (and on 1-D tensors too).
+    assert_parity(
+        || {
+            quantize_everything(QuantPolicy::bit4().with_v(Some(Quantizer::new(
+                NormKind::PerTensor,
+                MapKind::Linear,
+                4,
+                false,
+            ))))
+        },
+        "4-bit m + per-tensor/Linear v",
+    );
+}
+
+#[test]
+fn parity_fp32_states_match_dense_adamw() {
+    // With quantization fully disabled the engine must still be
+    // bit-identical to the dense AdamW baseline at every thread count —
+    // the update kernel is the same arithmetic, shard split or not.
+    let policy = QuantPolicy {
+        m_quant: None,
+        v_quant: None,
+        v_quant_1d: None,
+        factor_v: false,
+        min_quant_size: 0,
+        skip_embedding: false,
+    };
+    let hp = Hyper::default();
+    let mut dense = lowbit_opt::optim::adamw::AdamW::new(hp);
+    let mut dense_params = mixed_params();
+    for s in 0..STEPS {
+        let mut grng = Pcg64::seeded(1000 + s as u64);
+        let grads: Vec<Tensor> = dense_params
+            .iter()
+            .map(|p| Tensor::randn(&p.tensor.shape, 0.1, &mut grng))
+            .collect();
+        dense.step(&mut dense_params, &grads, 1e-2);
+    }
+    for &t in &THREADS {
+        let mut opt = CompressedAdamW::new(hp, policy)
+            .with_threads(t)
+            .with_shard_elems(SHARD_ELEMS);
+        let mut params = mixed_params();
+        for s in 0..STEPS {
+            let mut grng = Pcg64::seeded(1000 + s as u64);
+            let grads: Vec<Tensor> = params
+                .iter()
+                .map(|p| Tensor::randn(&p.tensor.shape, 0.1, &mut grng))
+                .collect();
+            opt.step(&mut params, &grads, 1e-2);
+        }
+        for (a, b) in params.iter().zip(dense_params.iter()) {
+            assert_eq!(
+                a.tensor.data, b.tensor.data,
+                "fp32 engine at {t} threads != dense AdamW for {}",
+                a.name
+            );
+        }
+    }
+}
+
+#[test]
+fn parity_auto_threads_equals_explicit() {
+    // Auto mode (threads = 0) may choose any worker count; results must
+    // match the explicit sequential schedule regardless. The workload is
+    // sized above the engine's sequential-shortcut threshold
+    // (MIN_PARALLEL_ELEMS) so auto mode actually runs parallel here.
+    let total: usize = big_mixed_params()
+        .iter()
+        .map(|p| p.tensor.numel())
+        .sum();
+    assert!(
+        total >= lowbit_opt::engine::MIN_PARALLEL_ELEMS,
+        "test workload ({total} elems) must exceed the sequential shortcut"
+    );
+    let policy = quantize_everything(QuantPolicy::bit4().stochastic());
+    let a = run_params(policy, 0, big_mixed_params);
+    let b = run_params(policy, 1, big_mixed_params);
+    assert_eq!(a, b, "auto thread count diverged");
+}
