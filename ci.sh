@@ -3,6 +3,15 @@
 # bench smoke run that records the step-engine perf trajectory in
 # BENCH_engine.json.
 #
+# The test suite runs twice: once with the default engine auto-threading
+# and once with LOWBIT_ENGINE_THREADS pinned, so every auto-threaded
+# engine path (dense + compressed) is exercised at a second worker count
+# on top of the explicit 1/2/7 parity matrix.
+#
+# BENCH_engine.json is *appended to*, one run object per CI invocation
+# (dense + compressed thread scaling), so perf regressions stay visible
+# across PRs.
+#
 # Usage: ./ci.sh
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -10,8 +19,11 @@ cd "$(dirname "$0")"
 echo "== cargo build --release"
 cargo build --release
 
-echo "== cargo test -q"
+echo "== cargo test -q (default engine threads)"
 cargo test -q
+
+echo "== cargo test -q (engine threads pinned to 7)"
+LOWBIT_ENGINE_THREADS=7 cargo test -q
 
 echo "== cargo fmt --check"
 cargo fmt --check
@@ -22,7 +34,7 @@ cargo clippy --all-targets -- -D warnings
 echo "== bench smoke: quant_throughput"
 cargo bench --bench quant_throughput -- --smoke
 
-echo "== bench smoke: optim_step (writes BENCH_engine.json)"
+echo "== bench smoke: optim_step (appends to BENCH_engine.json)"
 cargo bench --bench optim_step -- --smoke --json BENCH_engine.json
 
 echo "CI OK"

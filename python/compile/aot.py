@@ -153,6 +153,68 @@ def golden_cases():
     return {"cases": cases, "tables": tables}
 
 
+def golden_step_cases():
+    """Golden *step* vectors for the dense baselines (sgdm, sm3): inputs
+    plus the expected post-step weights/states computed by the float32
+    oracles in ref.py, replayed bit-exactly by rust/tests/golden_parity.rs
+    against both the sequential loops and the shard-parallel engine."""
+    rng = np.random.RandomState(20230613)
+    f32 = np.float32
+    hyper = {"beta1": 0.9, "eps": 1e-6, "weight_decay": 0.01}
+    lr, b1, eps, wd = f32(0.01), f32(hyper["beta1"]), f32(hyper["eps"]), \
+        f32(hyper["weight_decay"])
+    steps = 4
+    cases = []
+
+    def flat(a):
+        return [float(v) for v in np.asarray(a, dtype=np.float32).reshape(-1)]
+
+    def run(name, optimizer, shape, stepper, extract):
+        w = rng.randn(*shape).astype(np.float32) * f32(0.5)
+        grads = [rng.randn(*shape).astype(np.float32) * f32(0.1)
+                 for _ in range(steps)]
+        case = {"name": name, "optimizer": optimizer, "shape": list(shape),
+                "w0": flat(w), "grads": [flat(g) for g in grads]}
+        state = None
+        for g in grads:
+            w, state = stepper(w, state, g)
+        case["final_w"] = flat(w)
+        case.update({k: flat(v) for k, v in extract(state).items()})
+        cases.append(case)
+
+    def sgdm(w, state, g):
+        m = np.zeros_like(w) if state is None else state
+        w, m = ref.sgdm_step(w, m, g, lr, b1, wd)
+        return w, m
+
+    run("sgdm_2d", "sgdm", (8, 6), sgdm, lambda m: {"final_m": m})
+    run("sgdm_1d", "sgdm", (64,), sgdm, lambda m: {"final_m": m})
+
+    def sm3_2d(w, state, g):
+        if state is None:
+            state = (np.zeros_like(w),
+                     np.zeros(w.shape[0], np.float32),
+                     np.zeros(w.shape[1], np.float32))
+        m, mu_row, mu_col = state
+        w, m, mu_row, mu_col = ref.sm3_step_2d(w, m, mu_row, mu_col, g,
+                                               lr, b1, eps, wd)
+        return w, (m, mu_row, mu_col)
+
+    def sm3_1d(w, state, g):
+        if state is None:
+            state = (np.zeros_like(w), np.zeros_like(w))
+        m, v = state
+        w, m, v = ref.sm3_step_1d(w, m, v, g, lr, b1, eps, wd)
+        return w, (m, v)
+
+    run("sm3_2d", "sm3", (7, 5), sm3_2d,
+        lambda s: {"final_m": s[0], "final_row": s[1], "final_col": s[2]})
+    run("sm3_1d", "sm3", (96,), sm3_1d,
+        lambda s: {"final_m": s[0], "final_v": s[1]})
+
+    return {"hyper": hyper, "lr": float(lr), "steps": steps, "cases": cases}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="../artifacts")
@@ -193,6 +255,8 @@ def main():
     if args.golden:
         write(os.path.join(args.golden_out, "quant_golden.json"),
               json.dumps(golden_cases()))
+        write(os.path.join(args.golden_out, "step_golden.json"),
+              json.dumps(golden_step_cases()))
 
 
 if __name__ == "__main__":

@@ -160,6 +160,41 @@ def adamw_step(w, m, v, g, lr, beta1, beta2, eps, weight_decay, t):
     return w, m, v
 
 
+# --------------------------------------------------------------------------
+# Reference dense-baseline steps (float32, op-for-op the rust loops in
+# rust/src/optim/{sgdm,sm3}.rs). These are the oracle for the golden step
+# vectors pinned by rust/tests/golden_parity.rs: numpy's elementwise
+# float32 ops round identically to the rust scalar loops, so the match is
+# bit-exact as long as the expression nesting mirrors the rust source.
+# --------------------------------------------------------------------------
+
+def sgdm_step(w, m, g, lr, beta1, weight_decay):
+    """One dense-momentum SGDM step (paper Alg. 2, fp32 state)."""
+    m = beta1 * m + g
+    w = w - lr * (m + weight_decay * w)
+    return w, m
+
+
+def sm3_step_2d(w, m, mu_row, mu_col, g, lr, beta1, eps, weight_decay):
+    """One SM3-II step for a 2-D parameter (cover accumulators)."""
+    one = np.float32(1.0)
+    nu = np.minimum(mu_row[:, None], mu_col[None, :]) + g * g
+    upd = g / (np.sqrt(nu) + eps)
+    m = beta1 * m + (one - beta1) * upd
+    w = w - lr * (m + weight_decay * w)
+    return w, m, nu.max(axis=1), nu.max(axis=0)
+
+
+def sm3_step_1d(w, m, v, g, lr, beta1, eps, weight_decay):
+    """One SM3 step for a 1-D parameter (dense AdaGrad accumulator)."""
+    one = np.float32(1.0)
+    v = v + g * g
+    upd = g / (np.sqrt(v) + eps)
+    m = beta1 * m + (one - beta1) * upd
+    w = w - lr * (m + weight_decay * w)
+    return w, m, v
+
+
 def fused_adamw4_reference(w, g, m_codes, m_scales, v_codes, v_scales,
                            lr, beta1, beta2, eps, weight_decay, t,
                            block: int, m_table, v_table):

@@ -1,21 +1,48 @@
 //! Bench: full optimizer step time per preset on a realistic parameter
-//! set (the small transformer config), plus the shard-parallel engine's
-//! thread scaling on a ≥16M-parameter synthetic model — the CPU analogue
-//! of the paper's Tab. 4 "(fused)" speed story.
+//! set (the small transformer config), plus engine thread scaling of the
+//! dense baselines *and* the compressed optimizer on a ≥16M-parameter
+//! synthetic model — the CPU analogue of the paper's Tab. 4 "(fused)"
+//! speed story, apples-to-apples because every optimizer shards through
+//! the same step engine.
 //!
 //! Flags:
 //!   --smoke        short measurement windows (CI)
-//!   --json PATH    write the engine-scaling results (BENCH_engine.json)
+//!   --json PATH    append the engine-scaling run to PATH
+//!                  (BENCH_engine.json keeps one entry per CI run, so
+//!                  the perf trajectory stays visible across PRs)
 
 mod bench_util;
 
 use bench_util::{bench, section, BenchResult};
 use lowbit_opt::model::TransformerConfig;
-use lowbit_opt::optim::lowbit::{CompressedAdamW, QuantPolicy};
-use lowbit_opt::optim::{build, Hyper, Optimizer, Param, ParamKind};
+use lowbit_opt::optim::{build, build_threaded, Hyper, Optimizer, Param, ParamKind};
 use lowbit_opt::tensor::Tensor;
 use lowbit_opt::util::json::Json;
 use lowbit_opt::util::rng::Pcg64;
+
+/// Append one run object to a JSON file holding an array of runs. An
+/// existing single-object file (the pre-append format) is wrapped into
+/// an array, so the perf trajectory accumulates instead of being
+/// overwritten each CI run. An unparseable file (e.g. truncated by a
+/// killed bench run) is preserved under `<path>.bak` before starting a
+/// fresh array, so the accumulated trajectory stays recoverable.
+fn append_bench_run(path: &str, run: Json) {
+    let mut runs = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Arr(v)) => v,
+            Ok(obj @ Json::Obj(_)) => vec![obj],
+            _ => {
+                let bak = format!("{path}.bak");
+                eprintln!("warning: {path} is not valid JSON; saving it to {bak}");
+                let _ = std::fs::rename(path, &bak);
+                Vec::new()
+            }
+        },
+        Err(_) => Vec::new(),
+    };
+    runs.push(run);
+    lowbit_opt::util::write_file(path, &Json::Arr(runs).pretty()).expect("write bench json");
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -65,11 +92,13 @@ fn main() {
     }
 
     // --------------------------------------------------------------
-    // Shard-parallel engine scaling: 4-bit AdamW on a ≥16M-parameter
-    // synthetic set. threads=1 is the sequential schedule (the seed's
-    // per-tensor loop shape); higher counts run the same plan parallel.
+    // Shard-parallel engine scaling, dense vs compressed, on a ≥16M-
+    // parameter synthetic set. threads=1 is the sequential schedule of
+    // the same plan; higher counts run it parallel on the persistent
+    // worker pool. Recording dense baselines alongside adamw4 makes the
+    // Tab. 4 comparison apples-to-apples at every thread count.
     // --------------------------------------------------------------
-    section("shard-parallel engine scaling (synthetic >=16M params, adamw4)");
+    section("shard-parallel engine scaling (synthetic >=16M params, dense vs compressed)");
     let shapes: Vec<Vec<usize>> = vec![vec![2048, 2048]; 4]
         .into_iter()
         .chain(std::iter::once(vec![8192]))
@@ -82,75 +111,92 @@ fn main() {
         .collect();
     println!("synthetic model: {big_n} params ({} tensors)", shapes.len());
 
+    let scaling_presets = ["adamw32", "sgdm", "sm3", "adamw4"];
     let thread_cases = [1usize, 2, 4, 8];
-    let mut results: Vec<(usize, BenchResult)> = Vec::new();
-    for &threads in &thread_cases {
-        let mut opt =
-            CompressedAdamW::new(Hyper::default(), QuantPolicy::bit4()).with_threads(threads);
-        let mut prng = Pcg64::seeded(13);
-        let mut params: Vec<Param> = shapes
-            .iter()
-            .enumerate()
-            .map(|(i, s)| {
-                Param::new(
-                    &format!("p{i}"),
-                    ParamKind::Weight,
-                    Tensor::randn(s, 0.1, &mut prng),
-                )
-            })
-            .collect();
-        opt.step(&mut params, &big_grads, 1e-3); // lazy init outside the timer
-        let res = bench(
-            &format!("adamw4 engine, {threads} thread(s)"),
-            min_secs.max(0.3),
-            || {
-                opt.step(&mut params, &big_grads, 1e-3);
-            },
-        );
-        println!(
-            "{}  {:>6.2} ns/param",
-            res.throughput_line(None),
-            res.mean_ns / big_n as f64
-        );
-        results.push((threads, res));
+    // (preset, threads) -> result.
+    let mut results: Vec<(&str, usize, BenchResult)> = Vec::new();
+    for preset in scaling_presets {
+        for &threads in &thread_cases {
+            let mut opt = build_threaded(preset, Hyper::default(), threads).unwrap();
+            let mut prng = Pcg64::seeded(13);
+            let mut params: Vec<Param> = shapes
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    Param::new(
+                        &format!("p{i}"),
+                        ParamKind::Weight,
+                        Tensor::randn(s, 0.1, &mut prng),
+                    )
+                })
+                .collect();
+            opt.step(&mut params, &big_grads, 1e-3); // lazy init outside the timer
+            let res = bench(
+                &format!("{preset} engine, {threads} thread(s)"),
+                min_secs.max(0.25),
+                || {
+                    opt.step(&mut params, &big_grads, 1e-3);
+                },
+            );
+            println!(
+                "{}  {:>6.2} ns/param",
+                res.throughput_line(None),
+                res.mean_ns / big_n as f64
+            );
+            results.push((preset, threads, res));
+        }
     }
-    let mean_of = |t: usize| {
+    let mean_of = |p: &str, t: usize| {
         results
             .iter()
-            .find(|(th, _)| *th == t)
-            .map(|(_, r)| r.mean_ns)
+            .find(|(pr, th, _)| *pr == p && *th == t)
+            .map(|(_, _, r)| r.mean_ns)
     };
-    if let (Some(t1), Some(t4)) = (mean_of(1), mean_of(4)) {
-        println!("speedup at 4 threads vs sequential: {:.2}x", t1 / t4);
+    for preset in scaling_presets {
+        if let (Some(t1), Some(t4)) = (mean_of(preset, 1), mean_of(preset, 4)) {
+            println!("{preset}: speedup at 4 threads vs sequential: {:.2}x", t1 / t4);
+        }
+    }
+    if let (Some(dense), Some(comp)) = (mean_of("adamw32", 8), mean_of("adamw4", 8)) {
+        println!(
+            "at 8 threads: adamw4 step is {:.2}x the adamw32 step time \
+             (same engine, same plan machinery)",
+            comp / dense
+        );
     }
 
     if let Some(path) = json_path {
-        let mut doc = Json::obj();
-        doc.set("bench", Json::Str("optim_step/engine-scaling".to_string()));
-        doc.set("optimizer", Json::Str("adamw4".to_string()));
-        doc.set("model_params", Json::Num(big_n as f64));
-        doc.set("smoke", Json::Bool(smoke));
-        let mut by_threads = Json::obj();
-        for (t, r) in &results {
-            let mut jr = Json::obj();
-            jr.set("mean_us", Json::Num(r.mean_ns / 1e3));
-            jr.set("p50_us", Json::Num(r.p50_ns / 1e3));
-            jr.set("p95_us", Json::Num(r.p95_ns / 1e3));
-            jr.set("iters", Json::Num(r.iters as f64));
-            by_threads.set(&t.to_string(), jr);
+        let mut run = Json::obj();
+        run.set("bench", Json::Str("optim_step/engine-scaling".to_string()));
+        run.set("model_params", Json::Num(big_n as f64));
+        run.set("smoke", Json::Bool(smoke));
+        let mut by_opt = Json::obj();
+        for preset in scaling_presets {
+            let mut entry = Json::obj();
+            let mut by_threads = Json::obj();
+            for &t in &thread_cases {
+                if let Some((_, _, r)) =
+                    results.iter().find(|(pr, th, _)| *pr == preset && *th == t)
+                {
+                    let mut jr = Json::obj();
+                    jr.set("mean_us", Json::Num(r.mean_ns / 1e3));
+                    jr.set("p50_us", Json::Num(r.p50_ns / 1e3));
+                    jr.set("p95_us", Json::Num(r.p95_ns / 1e3));
+                    jr.set("iters", Json::Num(r.iters as f64));
+                    by_threads.set(&t.to_string(), jr);
+                }
+            }
+            entry.set("threads", by_threads);
+            for &t in &thread_cases[1..] {
+                if let (Some(t1), Some(tt)) = (mean_of(preset, 1), mean_of(preset, t)) {
+                    entry.set(&format!("speedup_{t}t"), Json::Num(t1 / tt));
+                }
+            }
+            by_opt.set(preset, entry);
         }
-        doc.set("threads", by_threads);
-        if let (Some(t1), Some(t2)) = (mean_of(1), mean_of(2)) {
-            doc.set("speedup_2t", Json::Num(t1 / t2));
-        }
-        if let (Some(t1), Some(t4)) = (mean_of(1), mean_of(4)) {
-            doc.set("speedup_4t", Json::Num(t1 / t4));
-        }
-        if let (Some(t1), Some(t8)) = (mean_of(1), mean_of(8)) {
-            doc.set("speedup_8t", Json::Num(t1 / t8));
-        }
-        lowbit_opt::util::write_file(&path, &doc.pretty()).expect("write bench json");
-        println!("wrote {path}");
+        run.set("optimizers", by_opt);
+        append_bench_run(&path, run);
+        println!("appended run to {path}");
     }
 
     // The fused PJRT path, when artifacts are present.

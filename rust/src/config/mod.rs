@@ -110,7 +110,8 @@ pub struct RunConfig {
     pub seed: u64,
     pub engine: String, // "builtin" | "pjrt"
     pub artifact_model: String,
-    /// Step-engine worker threads for compressed optimizers (0 = auto).
+    /// Step-engine worker threads (0 = auto) for every engine-backed
+    /// optimizer — compressed presets and the dense baselines alike.
     pub threads: usize,
 }
 

@@ -1,0 +1,692 @@
+//! Dense-baseline step executors: fp32 AdamW, SGDM, SM3 and Adafactor's
+//! elementwise portion, all running on the shard plan of [`super::plan`]
+//! through [`StepEngine::run_tasks`].
+//!
+//! Before this module the dense baselines stepped sequentially while the
+//! compressed optimizer enjoyed the shard-parallel engine, which made the
+//! Tab. 4 speed comparison apples-to-oranges at every thread count. Here
+//! the baselines shard under the *same* determinism contract (see the
+//! module docs in `mod.rs`):
+//!
+//! * planning is thread-blind (identical plans at every worker count);
+//! * no RNG is consumed (the dense updates are deterministic), so the
+//!   per-shard stream rule is trivially satisfied;
+//! * all cross-shard statistics reduce sequentially in shard order.
+//!
+//! Exactness notes, relied on by `rust/tests/engine_parity.rs`:
+//!
+//! * **AdamW / SGDM** are purely elementwise — the sharded update is
+//!   bit-identical to the sequential per-tensor loop at any thread count
+//!   and any shard size.
+//! * **SM3**'s cross-shard statistic is a max-reduction, which is exact
+//!   under any grouping — also bit-identical to the sequential loop.
+//! * **Adafactor** reduces float *sums* (factored row/col statistics and
+//!   the update-RMS for clipping). Summation order is fixed by the plan,
+//!   not the thread count, so results are bit-identical across thread
+//!   counts; versus the sequential reference they are bit-identical
+//!   exactly when each tensor fits in one shard (one partial per sum)
+//!   and agree to float-rounding otherwise.
+
+use super::plan::{build_plan, StateLayout, TensorMeta};
+use super::shared::SharedSlice;
+use super::StepEngine;
+use crate::optim::adafactor::Second;
+use crate::optim::sm3::Accum;
+use crate::optim::{Hyper, Param};
+use crate::tensor::Tensor;
+
+fn elementwise_metas(params: &[Param]) -> Vec<TensorMeta> {
+    params
+        .iter()
+        .map(|p| TensorMeta {
+            numel: p.tensor.numel(),
+            shape: p.tensor.shape.clone(),
+            m: StateLayout::F32,
+            v: StateLayout::F32,
+            m_stat_len: 0,
+            v_stat_len: 0,
+        })
+        .collect()
+}
+
+fn weight_views(params: &mut [Param]) -> Vec<SharedSlice<'_, f32>> {
+    params
+        .iter_mut()
+        .map(|p| SharedSlice::new(p.tensor.data.as_mut_slice()))
+        .collect()
+}
+
+fn tensor_views(ts: &mut [Tensor]) -> Vec<SharedSlice<'_, f32>> {
+    ts.iter_mut()
+        .map(|t| SharedSlice::new(t.data.as_mut_slice()))
+        .collect()
+}
+
+/// One fp32 AdamW step on the shard plan. Mirrors
+/// [`crate::optim::adamw::adamw_update_tensor`] exactly per element.
+#[allow(clippy::too_many_arguments)]
+pub fn adamw32_step(
+    eng: &StepEngine,
+    hp: &Hyper,
+    t: usize,
+    lr: f32,
+    params: &mut [Param],
+    grads: &[Tensor],
+    m: &mut [Tensor],
+    v: &mut [Tensor],
+) {
+    let n = params.len();
+    debug_assert_eq!(grads.len(), n);
+    debug_assert_eq!(m.len(), n);
+    debug_assert_eq!(v.len(), n);
+    let metas = elementwise_metas(params);
+    let plan = build_plan(&metas, eng.shard_elems());
+    if plan.tasks.is_empty() {
+        return;
+    }
+    let threads = eng.resolve_threads(plan.tasks.len(), plan.total_elems);
+    let b1 = hp.beta1;
+    let b2 = hp.beta2;
+    let bc1 = 1.0 - b1.powi(t as i32);
+    let bc2 = 1.0 - b2.powi(t as i32);
+    let eps = hp.eps;
+    let wd = hp.weight_decay;
+
+    let ws = weight_views(params);
+    let ms = tensor_views(m);
+    let vs = tensor_views(v);
+    let (ws, ms, vs) = (&ws, &ms, &vs);
+    let plan_ref = &plan;
+    eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
+        for piece in &plan_ref.tasks[ti].pieces {
+            let (lo, hi) = (piece.lo, piece.hi);
+            // SAFETY: pieces partition each tensor disjointly (plan
+            // invariant), so this task is the sole writer of [lo, hi).
+            let w = unsafe { ws[piece.tensor].range_mut(lo, hi) };
+            let mm = unsafe { ms[piece.tensor].range_mut(lo, hi) };
+            let vv = unsafe { vs[piece.tensor].range_mut(lo, hi) };
+            let g = &grads[piece.tensor].data[lo..hi];
+            for k in 0..g.len() {
+                let gi = g[k];
+                let mi = b1 * mm[k] + (1.0 - b1) * gi;
+                let vi = b2 * vv[k] + (1.0 - b2) * gi * gi;
+                mm[k] = mi;
+                vv[k] = vi;
+                let mhat = mi / bc1;
+                let vhat = vi / bc2;
+                w[k] -= lr * (mhat / (vhat.sqrt() + eps) + wd * w[k]);
+            }
+        }
+    });
+}
+
+/// One dense-momentum SGDM step on the shard plan (paper Alg. 2 with the
+/// momentum kept fp32). Mirrors the sequential loop in
+/// [`crate::optim::sgdm::Sgdm`] exactly per element.
+pub fn sgdm_step(
+    eng: &StepEngine,
+    hp: &Hyper,
+    lr: f32,
+    params: &mut [Param],
+    grads: &[Tensor],
+    m: &mut [&mut Tensor],
+) {
+    let n = params.len();
+    debug_assert_eq!(grads.len(), n);
+    debug_assert_eq!(m.len(), n);
+    let metas = elementwise_metas(params);
+    let plan = build_plan(&metas, eng.shard_elems());
+    if plan.tasks.is_empty() {
+        return;
+    }
+    let threads = eng.resolve_threads(plan.tasks.len(), plan.total_elems);
+    let beta = hp.beta1;
+    let wd = hp.weight_decay;
+
+    let ws = weight_views(params);
+    let ms: Vec<SharedSlice<f32>> = m
+        .iter_mut()
+        .map(|t| SharedSlice::new(t.data.as_mut_slice()))
+        .collect();
+    let (ws, ms) = (&ws, &ms);
+    let plan_ref = &plan;
+    eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
+        for piece in &plan_ref.tasks[ti].pieces {
+            let (lo, hi) = (piece.lo, piece.hi);
+            // SAFETY: disjoint shard ranges (plan invariant).
+            let w = unsafe { ws[piece.tensor].range_mut(lo, hi) };
+            let mm = unsafe { ms[piece.tensor].range_mut(lo, hi) };
+            let g = &grads[piece.tensor].data[lo..hi];
+            for k in 0..g.len() {
+                let mi = beta * mm[k] + g[k];
+                mm[k] = mi;
+                w[k] -= lr * (mi + wd * w[k]);
+            }
+        }
+    });
+}
+
+/// Per-tensor route of the SM3 executor: cover accumulators (read-only
+/// during the parallel phase; per-shard maxima go to stat slots) or a
+/// dense AdaGrad accumulator updated in place.
+enum Sm3Route<'a> {
+    Cover {
+        rows: usize,
+        cols: usize,
+        mu_row: &'a [f32],
+        mu_col: &'a [f32],
+    },
+    Dense(SharedSlice<'a, f32>),
+}
+
+/// One SM3 step on the shard plan. The per-element update reads the
+/// *old* cover accumulators; fresh accumulators are max-reduced from
+/// per-shard partial maxima in shard order after the parallel phase —
+/// max is exact under any grouping, so this is bit-identical to the
+/// sequential loop in [`crate::optim::sm3::Sm3`].
+#[allow(clippy::too_many_arguments)]
+pub fn sm3_step(
+    eng: &StepEngine,
+    hp: &Hyper,
+    lr: f32,
+    params: &mut [Param],
+    grads: &[Tensor],
+    acc: &mut [Accum],
+    m: &mut [Tensor],
+) {
+    let n = params.len();
+    debug_assert_eq!(grads.len(), n);
+    debug_assert_eq!(acc.len(), n);
+    debug_assert_eq!(m.len(), n);
+    let metas: Vec<TensorMeta> = (0..n)
+        .map(|i| {
+            let shape = params[i].tensor.shape.clone();
+            let numel = params[i].tensor.numel();
+            match &acc[i] {
+                // Factored layout buys exactly what the cover needs: row
+                // (slab) aligned shards + one rows+cols stat slot per piece.
+                Accum::Cover { rows, cols, .. } => TensorMeta {
+                    numel,
+                    shape,
+                    m: StateLayout::F32,
+                    v: StateLayout::Factored,
+                    m_stat_len: 0,
+                    v_stat_len: rows + cols,
+                },
+                Accum::Dense(_) => TensorMeta {
+                    numel,
+                    shape,
+                    m: StateLayout::F32,
+                    v: StateLayout::F32,
+                    m_stat_len: 0,
+                    v_stat_len: 0,
+                },
+            }
+        })
+        .collect();
+    let plan = build_plan(&metas, eng.shard_elems());
+    if plan.tasks.is_empty() {
+        return;
+    }
+    let threads = eng.resolve_threads(plan.tasks.len(), plan.total_elems);
+    let b1 = hp.beta1;
+    let eps = hp.eps;
+    let wd = hp.weight_decay;
+    let mut slots: Vec<Vec<f32>> = plan.slot_lens.iter().map(|&l| vec![0.0f32; l]).collect();
+
+    {
+        let routes: Vec<Sm3Route> = acc
+            .iter_mut()
+            .map(|a| match a {
+                Accum::Cover {
+                    rows,
+                    cols,
+                    mu_row,
+                    mu_col,
+                } => Sm3Route::Cover {
+                    rows: *rows,
+                    cols: *cols,
+                    mu_row: mu_row.as_slice(),
+                    mu_col: mu_col.as_slice(),
+                },
+                Accum::Dense(t) => Sm3Route::Dense(SharedSlice::new(t.data.as_mut_slice())),
+            })
+            .collect();
+        let ws = weight_views(params);
+        let ms = tensor_views(m);
+        let slot_views: Vec<SharedSlice<f32>> = slots
+            .iter_mut()
+            .map(|s| SharedSlice::new(s.as_mut_slice()))
+            .collect();
+        let (routes, ws, ms, slot_views) = (&routes, &ws, &ms, &slot_views);
+        let plan_ref = &plan;
+        eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
+            for piece in &plan_ref.tasks[ti].pieces {
+                let (lo, hi) = (piece.lo, piece.hi);
+                // SAFETY: disjoint shard ranges (plan invariant).
+                let w = unsafe { ws[piece.tensor].range_mut(lo, hi) };
+                let mv = unsafe { ms[piece.tensor].range_mut(lo, hi) };
+                let g = &grads[piece.tensor].data[lo..hi];
+                match &routes[piece.tensor] {
+                    Sm3Route::Cover {
+                        rows,
+                        cols,
+                        mu_row,
+                        mu_col,
+                    } => {
+                        let slot_id = piece.v_slot.expect("cover piece has a stat slot");
+                        // SAFETY: one stat slot per piece (plan invariant).
+                        let slot = unsafe {
+                            slot_views[slot_id].range_mut(0, slot_views[slot_id].len())
+                        };
+                        let (new_row, new_col) = slot.split_at_mut(*rows);
+                        for k in 0..g.len() {
+                            let idx = lo + k;
+                            let (r, c) = (idx / cols, idx % cols);
+                            let gv = g[k];
+                            let nu = mu_row[r].min(mu_col[c]) + gv * gv;
+                            let upd = gv / (nu.sqrt() + eps);
+                            let mi = b1 * mv[k] + (1.0 - b1) * upd;
+                            mv[k] = mi;
+                            w[k] -= lr * (mi + wd * w[k]);
+                            if nu > new_row[r] {
+                                new_row[r] = nu;
+                            }
+                            if nu > new_col[c] {
+                                new_col[c] = nu;
+                            }
+                        }
+                    }
+                    Sm3Route::Dense(vv) => {
+                        // SAFETY: disjoint shard ranges (plan invariant).
+                        let vs = unsafe { vv.range_mut(lo, hi) };
+                        for k in 0..g.len() {
+                            let gv = g[k];
+                            vs[k] += gv * gv;
+                            let upd = gv / (vs[k].sqrt() + eps);
+                            let mi = b1 * mv[k] + (1.0 - b1) * upd;
+                            mv[k] = mi;
+                            w[k] -= lr * (mi + wd * w[k]);
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    // Sequential max-reduce in shard order: fresh cover accumulators.
+    for i in 0..n {
+        if let Accum::Cover {
+            rows,
+            mu_row,
+            mu_col,
+            ..
+        } = &mut acc[i]
+        {
+            let rows = *rows;
+            let mut new_row = vec![0.0f32; mu_row.len()];
+            let mut new_col = vec![0.0f32; mu_col.len()];
+            for task in &plan.tasks {
+                for p in task.pieces.iter().filter(|p| p.tensor == i) {
+                    let s = &slots[p.v_slot.expect("cover slot")];
+                    for (a, b) in new_row.iter_mut().zip(&s[..rows]) {
+                        if *b > *a {
+                            *a = *b;
+                        }
+                    }
+                    for (a, b) in new_col.iter_mut().zip(&s[rows..]) {
+                        if *b > *a {
+                            *a = *b;
+                        }
+                    }
+                }
+            }
+            *mu_row = new_row;
+            *mu_col = new_col;
+        }
+    }
+}
+
+/// Per-tensor route of the Adafactor executor: factored second moment
+/// (read-only after the phase-F reduce) or a dense 1-D accumulator
+/// updated in place during phase U.
+enum AfRoute<'a> {
+    Factored {
+        f: &'a crate::optim::factor::FactoredSecond,
+        row_mean: f32,
+        cols: usize,
+    },
+    Dense(SharedSlice<'a, f32>),
+}
+
+/// One Adafactor step on the shard plan, as three phases:
+///
+/// * **F** (factored tensors): per-shard row/col partial sums of
+///   `g² + eps2`, reduced in shard order into the factored EMA.
+/// * **U**: per shard — update dense accumulators, form the
+///   preconditioned update `u = g / (sqrt(v̂) + eps)` and accumulate the
+///   per-shard `Σu²` partial (f64, matching [`Tensor::rms`]).
+/// * **W**: after the RMS reduce fixes the per-tensor clip factor,
+///   re-derive `u` (bit-identical — same inputs, same expression), clip,
+///   apply optional momentum and write the weights.
+#[allow(clippy::too_many_arguments)]
+pub fn adafactor_step(
+    eng: &StepEngine,
+    hp: &Hyper,
+    t: usize,
+    lr: f32,
+    clip_threshold: f32,
+    eps2: f32,
+    params: &mut [Param],
+    grads: &[Tensor],
+    m: &mut [Option<Tensor>],
+    v: &mut [Second],
+) {
+    let n = params.len();
+    debug_assert_eq!(grads.len(), n);
+    debug_assert_eq!(m.len(), n);
+    debug_assert_eq!(v.len(), n);
+    // Adafactor's default decaying beta2 (as in the sequential path).
+    let beta2 = 1.0 - (t as f32).powf(-0.8);
+    let b1 = hp.beta1;
+    let eps = hp.eps;
+    let wd = hp.weight_decay;
+
+    let metas: Vec<TensorMeta> = (0..n)
+        .map(|i| {
+            let shape = params[i].tensor.shape.clone();
+            let numel = params[i].tensor.numel();
+            // `m: Global` is planner shorthand for "one stat slot per
+            // piece" — it carries the f64 Σu² partial for the RMS clip.
+            match &v[i] {
+                Second::Factored(f) => TensorMeta {
+                    numel,
+                    shape,
+                    m: StateLayout::Global,
+                    v: StateLayout::Factored,
+                    m_stat_len: 1,
+                    v_stat_len: f.rows() + f.cols(),
+                },
+                Second::Dense(_) => TensorMeta {
+                    numel,
+                    shape,
+                    m: StateLayout::Global,
+                    v: StateLayout::F32,
+                    m_stat_len: 1,
+                    v_stat_len: 0,
+                },
+            }
+        })
+        .collect();
+    let plan = build_plan(&metas, eng.shard_elems());
+    if plan.tasks.is_empty() {
+        return;
+    }
+    let threads = eng.resolve_threads(plan.tasks.len(), plan.total_elems);
+    let mut slots: Vec<Vec<f32>> = plan.slot_lens.iter().map(|&l| vec![0.0f32; l]).collect();
+    // Σu² partials, one per piece, indexed by `m_slot` (f64 to mirror
+    // the sequential `Tensor::rms` accumulation exactly).
+    let mut rms_partials: Vec<f64> = vec![0.0; plan.slot_lens.len()];
+
+    // ---------------- Phase F: factored statistics -------------------
+    if metas.iter().any(|mt| mt.v == StateLayout::Factored) {
+        {
+            let slot_views: Vec<SharedSlice<f32>> = slots
+                .iter_mut()
+                .map(|s| SharedSlice::new(s.as_mut_slice()))
+                .collect();
+            let slot_views = &slot_views;
+            let plan_ref = &plan;
+            let metas_ref = &metas;
+            eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
+                for piece in &plan_ref.tasks[ti].pieces {
+                    let meta = &metas_ref[piece.tensor];
+                    if meta.v != StateLayout::Factored {
+                        continue;
+                    }
+                    let rows_total = meta.shape[0];
+                    let cols = meta.numel / rows_total;
+                    let slot_id = piece.v_slot.expect("factored piece has a stat slot");
+                    // SAFETY: one stat slot per piece (plan invariant).
+                    let slot =
+                        unsafe { slot_views[slot_id].range_mut(0, plan_ref.slot_lens[slot_id]) };
+                    let (rsum, csum) = slot.split_at_mut(rows_total);
+                    let g = &grads[piece.tensor].data[piece.lo..piece.hi];
+                    let row0 = piece.lo / cols;
+                    for (ri, grow) in g.chunks(cols).enumerate() {
+                        let mut acc = 0.0f32;
+                        for (j, &gv) in grow.iter().enumerate() {
+                            let sq = gv * gv + eps2;
+                            acc += sq;
+                            csum[j] += sq;
+                        }
+                        rsum[row0 + ri] = acc;
+                    }
+                }
+            });
+        }
+        // Sequential reduce in shard order + EMA (mirrors
+        // FactoredSecond::update).
+        for i in 0..n {
+            if metas[i].v != StateLayout::Factored {
+                continue;
+            }
+            let f = match &mut v[i] {
+                Second::Factored(f) => f,
+                _ => unreachable!("meta says factored"),
+            };
+            let rows = f.rows();
+            let cols = f.cols();
+            let mut rsum = vec![0.0f32; rows];
+            let mut csum = vec![0.0f32; cols];
+            for task in &plan.tasks {
+                for p in task.pieces.iter().filter(|p| p.tensor == i) {
+                    let s = &slots[p.v_slot.expect("factored slot")];
+                    for (a, b) in rsum.iter_mut().zip(&s[..rows]) {
+                        *a += *b;
+                    }
+                    for (a, b) in csum.iter_mut().zip(&s[rows..]) {
+                        *a += *b;
+                    }
+                }
+            }
+            for (ri, r) in f.row.iter_mut().enumerate() {
+                *r = beta2 * *r + (1.0 - beta2) * (rsum[ri] / cols as f32);
+            }
+            for (cj, c) in f.col.iter_mut().enumerate() {
+                *c = beta2 * *c + (1.0 - beta2) * (csum[cj] / rows as f32);
+            }
+        }
+    }
+    let rowmeans: Vec<f32> = v
+        .iter()
+        .map(|s| match s {
+            Second::Factored(f) => f.row_mean(),
+            Second::Dense(_) => 0.0,
+        })
+        .collect();
+
+    {
+        let ws = weight_views(params);
+        let ms: Vec<Option<SharedSlice<f32>>> = m
+            .iter_mut()
+            .map(|o| o.as_mut().map(|t| SharedSlice::new(t.data.as_mut_slice())))
+            .collect();
+        let routes: Vec<AfRoute> = v
+            .iter_mut()
+            .enumerate()
+            .map(|(i, s)| match s {
+                Second::Factored(f) => AfRoute::Factored {
+                    cols: f.cols(),
+                    row_mean: rowmeans[i],
+                    f: &*f,
+                },
+                Second::Dense(t) => AfRoute::Dense(SharedSlice::new(t.data.as_mut_slice())),
+            })
+            .collect();
+        let (ws, ms, routes) = (&ws, &ms, &routes);
+        let plan_ref = &plan;
+
+        // ------------- Phase U: update v, accumulate Σu² -------------
+        {
+            let rms_view = SharedSlice::new(rms_partials.as_mut_slice());
+            let rms_view = &rms_view;
+            eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
+                for piece in &plan_ref.tasks[ti].pieces {
+                    let (lo, hi) = (piece.lo, piece.hi);
+                    let g = &grads[piece.tensor].data[lo..hi];
+                    let slot_id = piece.m_slot.expect("adafactor piece has an rms slot");
+                    let mut partial = 0.0f64;
+                    match &routes[piece.tensor] {
+                        AfRoute::Factored { f, row_mean, cols } => {
+                            for (k, &gv) in g.iter().enumerate() {
+                                let idx = lo + k;
+                                let vhat = f.reconstruct_at(idx / cols, idx % cols, *row_mean);
+                                let u = gv / (vhat.sqrt() + eps);
+                                partial += (u as f64) * (u as f64);
+                            }
+                        }
+                        AfRoute::Dense(vv) => {
+                            // SAFETY: disjoint shard ranges (plan invariant).
+                            let vs = unsafe { vv.range_mut(lo, hi) };
+                            for (k, &gv) in g.iter().enumerate() {
+                                let vi = beta2 * vs[k] + (1.0 - beta2) * (gv * gv + eps2);
+                                vs[k] = vi;
+                                let u = gv / (vi.sqrt() + eps);
+                                partial += (u as f64) * (u as f64);
+                            }
+                        }
+                    }
+                    // SAFETY: one rms slot per piece (plan invariant).
+                    unsafe { rms_view.range_mut(slot_id, slot_id + 1) }[0] = partial;
+                }
+            });
+        }
+
+        // ------- Reduce: per-tensor RMS → clip factor (Alg. 4) -------
+        let mut invs: Vec<Option<f32>> = vec![None; n];
+        for (i, inv) in invs.iter_mut().enumerate() {
+            let numel = metas[i].numel;
+            if numel == 0 {
+                continue;
+            }
+            let mut total = 0.0f64;
+            for task in &plan.tasks {
+                for p in task.pieces.iter().filter(|p| p.tensor == i) {
+                    total += rms_partials[p.m_slot.expect("rms slot")];
+                }
+            }
+            let rms = (total / numel as f64).sqrt() as f32;
+            let denom = (rms / clip_threshold).max(1.0);
+            if denom > 1.0 {
+                *inv = Some(1.0 / denom);
+            }
+        }
+        let invs = &invs;
+
+        // ---------- Phase W: clip, momentum, weight update -----------
+        eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
+            for piece in &plan_ref.tasks[ti].pieces {
+                let (lo, hi) = (piece.lo, piece.hi);
+                let g = &grads[piece.tensor].data[lo..hi];
+                // SAFETY: disjoint shard ranges (plan invariant).
+                let w = unsafe { ws[piece.tensor].range_mut(lo, hi) };
+                let mut mm = ms[piece.tensor]
+                    .as_ref()
+                    // SAFETY: disjoint shard ranges (plan invariant).
+                    .map(|s| unsafe { s.range_mut(lo, hi) });
+                let inv = invs[piece.tensor];
+                let route = &routes[piece.tensor];
+                let dense_vs: Option<&[f32]> = match route {
+                    // SAFETY: read of this task's own disjoint range; the
+                    // phase-U borrow of the same range has ended.
+                    AfRoute::Dense(vv) => Some(unsafe { vv.range_mut(lo, hi) }),
+                    AfRoute::Factored { .. } => None,
+                };
+                for (k, &gv) in g.iter().enumerate() {
+                    // Re-derive u — same inputs and expression as phase
+                    // U, hence bit-identical.
+                    let vhat = match route {
+                        AfRoute::Factored { f, row_mean, cols } => {
+                            let idx = lo + k;
+                            f.reconstruct_at(idx / cols, idx % cols, *row_mean)
+                        }
+                        AfRoute::Dense(_) => dense_vs.expect("dense route has v")[k],
+                    };
+                    let mut u = gv / (vhat.sqrt() + eps);
+                    if let Some(iv) = inv {
+                        u *= iv;
+                    }
+                    if let Some(mslice) = mm.as_mut() {
+                        let mi = b1 * mslice[k] + (1.0 - b1) * u;
+                        mslice[k] = mi;
+                        u = mi;
+                    }
+                    w[k] -= lr * (u + wd * w[k]);
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::adamw::adamw_update_tensor;
+    use crate::optim::ParamKind;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn sharded_adamw_matches_reference_loop_bitwise() {
+        let hp = Hyper::default();
+        let mut rng = Pcg64::seeded(42);
+        let shapes: Vec<Vec<usize>> = vec![vec![13, 24], vec![700], vec![5]];
+        let mk = |rng: &mut Pcg64| -> (Vec<Param>, Vec<Tensor>, Vec<Tensor>) {
+            let params: Vec<Param> = shapes
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    Param::new(&format!("p{i}"), ParamKind::Weight, Tensor::randn(s, 0.5, rng))
+                })
+                .collect();
+            let m = shapes.iter().map(|s| Tensor::randn(s, 0.1, rng)).collect();
+            let v = shapes
+                .iter()
+                .map(|s| {
+                    let mut t = Tensor::randn(s, 0.1, rng);
+                    for x in t.data.iter_mut() {
+                        *x = x.abs();
+                    }
+                    t
+                })
+                .collect();
+            (params, m, v)
+        };
+        let (mut p_ref, mut m_ref, mut v_ref) = mk(&mut rng);
+        let mut rng2 = Pcg64::seeded(42);
+        let (mut p_eng, mut m_eng, mut v_eng) = mk(&mut rng2);
+        let mut grng = Pcg64::seeded(7);
+        let grads: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, 0.1, &mut grng)).collect();
+
+        for (i, g) in grads.iter().enumerate() {
+            adamw_update_tensor(
+                &mut p_ref[i].tensor,
+                &mut m_ref[i],
+                &mut v_ref[i],
+                g,
+                &hp,
+                1e-2,
+                3,
+            );
+        }
+        // Small shards + multiple workers: a genuinely parallel schedule.
+        let eng = StepEngine::new().with_threads(3).with_shard_elems(64);
+        adamw32_step(&eng, &hp, 3, 1e-2, &mut p_eng, &grads, &mut m_eng, &mut v_eng);
+
+        for i in 0..shapes.len() {
+            assert_eq!(p_ref[i].tensor.data, p_eng[i].tensor.data, "w[{i}]");
+            assert_eq!(m_ref[i].data, m_eng[i].data, "m[{i}]");
+            assert_eq!(v_ref[i].data, v_eng[i].data, "v[{i}]");
+        }
+    }
+}

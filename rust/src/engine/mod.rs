@@ -5,9 +5,14 @@
 //! optimizers *slower* than fp32 ones. On CPU, the analogue of the fused
 //! GPU kernel is this engine: the parameter set is partitioned into
 //! block-aligned shards ([`plan`]) and each step runs
-//! dequantize → update → requantize shard-parallel over scoped threads,
-//! with shard-local scratch buffers instead of per-tensor allocations
-//! ([`adamw4`]).
+//! dequantize → update → requantize shard-parallel on a persistent
+//! worker pool ([`pool`]), with shard-local scratch buffers instead of
+//! per-tensor allocations ([`adamw4`]).
+//!
+//! The dense baselines run on the same substrate: [`dense`] executes
+//! fp32 AdamW, SGDM, SM3 and Adafactor's elementwise portion over the
+//! identical plan/slot machinery, so the Tab. 4 speed comparison is
+//! apples-to-apples at every thread count.
 //!
 //! # Determinism contract
 //!
@@ -46,16 +51,40 @@
 //! * **C** (globally-normalized states only): after the scale reduction,
 //!   re-derive the updated state values and encode them against the new
 //!   global scales into fresh packed buffers.
+//!
+//! The dense executors in [`dense`] follow the same shape with their own
+//! phase sets: fp32 AdamW and SGDM are a single update phase; SM3 runs
+//! update + per-shard accumulator maxima with a sequential max-reduce;
+//! Adafactor runs factored-statistics → update-RMS → clipped-write with
+//! two reductions in between. Every parallel phase goes through
+//! [`StepEngine::run_tasks`], so all of them share the pool and the
+//! determinism contract above.
+//!
+//! # Pool lifecycle
+//!
+//! Worker threads are **persistent**, not spawned per phase: the first
+//! parallel phase lazily creates a [`pool::WorkerPool`] sized to the
+//! resolved worker count, and every later phase of every later step
+//! reuses it (the pool is grown — recreated larger — if a step ever
+//! resolves to more workers). The pool is shared by clones of the engine
+//! and is shut down (workers joined) when the owning optimizer drops.
+//! Call sites keep the borrow-friendly scoped API: `run_tasks` blocks
+//! until the phase has drained, so task closures may borrow the step's
+//! plan and tensor views exactly as they could with scoped spawns.
 
 pub mod adamw4;
+pub mod dense;
 pub mod plan;
+pub mod pool;
 pub mod shared;
 
 pub use adamw4::{compressed_step, StepParams};
 pub use plan::{build_plan, Plan, StateLayout, TensorMeta};
 pub use shared::SharedSlice;
 
+use pool::WorkerPool;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Default shard size in elements (~256 KB of f32 values per shard).
 pub const DEFAULT_SHARD_ELEMS: usize = 1 << 16;
@@ -65,23 +94,56 @@ pub const DEFAULT_SHARD_ELEMS: usize = 1 << 16;
 /// regardless (the parity suite relies on that).
 pub const MIN_PARALLEL_ELEMS: usize = 1 << 15;
 
-/// The task scheduler: each phase runs its tasks on freshly spawned
-/// scoped threads pulling task indices off an atomic queue. Execution
-/// *order* is nondeterministic; results are not, because each task is
-/// self-contained (see the module docs).
+/// Lazily created, grow-on-demand handle to the engine's persistent
+/// [`WorkerPool`]. Clones of a `StepEngine` share one cell (and thus one
+/// pool); the pool is created by the first parallel phase and replaced
+/// with a larger one only if a later phase resolves to more workers.
+struct PoolCell {
+    inner: Mutex<Option<Arc<WorkerPool>>>,
+}
+
+impl PoolCell {
+    fn ensure(&self, workers: usize) -> Arc<WorkerPool> {
+        let mut guard = self.inner.lock().unwrap();
+        match guard.as_ref() {
+            Some(p) if p.workers() >= workers => Arc::clone(p),
+            _ => {
+                let p = Arc::new(WorkerPool::new(workers));
+                *guard = Some(Arc::clone(&p));
+                p
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for PoolCell {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let workers = self
+            .inner
+            .lock()
+            .ok()
+            .and_then(|g| g.as_ref().map(|p| p.workers()));
+        write!(f, "PoolCell({workers:?})")
+    }
+}
+
+/// The task scheduler: each phase runs its tasks on the engine's
+/// persistent worker pool, workers pulling task indices off an atomic
+/// queue. Execution *order* is nondeterministic; results are not,
+/// because each task is self-contained (see the module docs).
 ///
-/// Threads are spawned per phase, not kept in a persistent pool: scoped
-/// spawns are what let tasks borrow the step's plan and tensor views
-/// directly, and the ~10-20 µs spawn cost per worker is noise against
-/// the multi-millisecond shards the engine targets (tiny workloads stay
-/// sequential via [`MIN_PARALLEL_ELEMS`]). A persistent worker pool is a
-/// ROADMAP follow-on for the high-step-rate small-model regime.
+/// The pool outlives phases and steps (see the module docs' "Pool
+/// lifecycle"), removing the former per-phase spawn tax; tiny workloads
+/// still stay sequential via [`MIN_PARALLEL_ELEMS`] and never touch the
+/// pool at all.
 #[derive(Clone, Debug)]
 pub struct StepEngine {
     /// Worker threads; 0 = auto (available parallelism).
     threads: usize,
     /// Target shard size in elements.
     shard_elems: usize,
+    /// Persistent worker pool, shared by clones of this engine.
+    pool: Arc<PoolCell>,
 }
 
 impl Default for StepEngine {
@@ -95,6 +157,9 @@ impl StepEngine {
         StepEngine {
             threads: 0,
             shard_elems: DEFAULT_SHARD_ELEMS,
+            pool: Arc::new(PoolCell {
+                inner: Mutex::new(None),
+            }),
         }
     }
 
@@ -129,9 +194,7 @@ impl StepEngine {
                 if total_elems < MIN_PARALLEL_ELEMS {
                     1
                 } else {
-                    std::thread::available_parallelism()
-                        .map(|n| n.get())
-                        .unwrap_or(1)
+                    auto_threads()
                 }
             }
             n => n,
@@ -142,7 +205,10 @@ impl StepEngine {
     /// Execute `f(task_index, scratch)` for every task index in
     /// `0..n_tasks` on `threads` workers. Each worker owns one scratch
     /// value (`S::default()`), reused across the tasks it runs. With
-    /// `threads <= 1` this is a plain loop on the calling thread.
+    /// `threads <= 1` this is a plain loop on the calling thread;
+    /// otherwise the tasks run on the engine's persistent pool, and this
+    /// call blocks until the phase has drained (so `f` may borrow the
+    /// caller's stack exactly as under the old scoped spawns).
     pub fn run_tasks<S, F>(&self, threads: usize, n_tasks: usize, f: F)
     where
         S: Default + Send,
@@ -161,21 +227,34 @@ impl StepEngine {
         let next = AtomicUsize::new(0);
         let next = &next;
         let f = &f;
-        std::thread::scope(|scope| {
-            for _ in 0..threads {
-                scope.spawn(move || {
-                    let mut scratch = S::default();
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n_tasks {
-                            break;
-                        }
-                        f(i, &mut scratch);
-                    }
-                });
+        let body = move |_slot: usize| {
+            let mut scratch = S::default();
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_tasks {
+                    break;
+                }
+                f(i, &mut scratch);
             }
-        });
+        };
+        self.pool.ensure(threads).broadcast(threads, &body);
     }
+}
+
+/// Auto worker count: `LOWBIT_ENGINE_THREADS` when set (CI pins it to run
+/// the whole test suite at a fixed count — see `ci.sh`), else the
+/// machine's available parallelism. Only consulted for workloads above
+/// [`MIN_PARALLEL_ELEMS`]; explicit `with_threads` counts bypass it.
+fn auto_threads() -> usize {
+    std::env::var("LOWBIT_ENGINE_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
 }
 
 /// Per-step seed mixing: derives the seed for step `t` from the
@@ -222,5 +301,37 @@ mod tests {
     fn step_seed_varies_per_step() {
         assert_ne!(step_seed(1, 1), step_seed(1, 2));
         assert_eq!(step_seed(5, 3), step_seed(5, 3));
+    }
+
+    #[test]
+    fn run_tasks_reuses_one_pool_across_phases() {
+        // Many back-to-back parallel phases on one engine: the pool is
+        // created once and reused (this is the spawn-tax fix; it also
+        // stress-tests the broadcast protocol under reuse).
+        let eng = StepEngine::new().with_threads(4);
+        for round in 0..50 {
+            let hits: Vec<AtomicU64> = (0..37).map(|_| AtomicU64::new(0)).collect();
+            eng.run_tasks::<(), _>(4, 37, |i, _| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "round {round} task {i}");
+            }
+        }
+        let workers = eng.pool.inner.lock().unwrap().as_ref().map(|p| p.workers());
+        assert_eq!(workers, Some(4), "pool created once with 4 workers");
+    }
+
+    #[test]
+    fn pool_grows_when_more_workers_are_requested() {
+        let eng = StepEngine::new();
+        eng.run_tasks::<(), _>(2, 16, |_i, _| {});
+        eng.run_tasks::<(), _>(6, 16, |_i, _| {});
+        let workers = eng.pool.inner.lock().unwrap().as_ref().map(|p| p.workers());
+        assert_eq!(workers, Some(6), "pool grown to the largest request");
+        // Shrinking requests keep the larger pool.
+        eng.run_tasks::<(), _>(2, 16, |_i, _| {});
+        let workers = eng.pool.inner.lock().unwrap().as_ref().map(|p| p.workers());
+        assert_eq!(workers, Some(6));
     }
 }

@@ -1,0 +1,268 @@
+//! The persistent worker pool behind [`super::StepEngine::run_tasks`].
+//!
+//! The engine used to spawn fresh scoped threads for every phase — up to
+//! three spawns per optimizer step, a fixed ~100–300 µs tax that dominates
+//! in the high-step-rate small-model regime. The pool keeps long-lived
+//! workers parked on a condvar and hands them one *broadcast job* at a
+//! time: a borrowed closure executed once per claimed worker slot.
+//!
+//! The call-site API stays scoped: [`WorkerPool::broadcast`] blocks the
+//! submitting thread until every participant has finished, so the closure
+//! (and everything it borrows — the step plan, tensor views, scratch
+//! state) provably outlives all worker accesses. That blocking wait is
+//! what lets us erase the closure's lifetime with a raw pointer instead
+//! of requiring `'static` jobs like a conventional thread pool.
+//!
+//! Jobs never overlap: a second submitter blocks until the slot is free.
+//! That is exactly the engine's usage (phases are sequential within a
+//! step), and it keeps the protocol small enough to audit. Re-entrant
+//! submission from inside a task would deadlock — don't call back into
+//! the same pool from a task body.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One in-flight broadcast: a lifetime-erased pointer to the submitter's
+/// closure plus the claim/completion counters.
+struct Job {
+    body: *const (dyn Fn(usize) + Sync),
+    /// Worker slots still unclaimed.
+    tickets: usize,
+    /// Next slot index to hand out (`0..workers`).
+    next_slot: usize,
+    /// Participants that have not finished yet.
+    active: usize,
+}
+
+// SAFETY: the raw closure pointer is only dereferenced by workers while
+// the submitting thread is blocked in `broadcast` waiting for `active`
+// to reach zero, so the pointee is alive for every dereference.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    /// Monotonic id of the most recently installed job; workers use it to
+    /// avoid re-entering a job they already served (or skipped).
+    seq: u64,
+    job: Option<Job>,
+    /// Job id whose body panicked on some worker (re-raised by the
+    /// submitter so failures propagate like scoped-thread panics did).
+    panicked: Option<u64>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for a new job (or shutdown).
+    work_cv: Condvar,
+    /// Submitters wait here for completion and for the job slot.
+    done_cv: Condvar,
+}
+
+/// A fixed-size pool of parked worker threads executing broadcast jobs.
+/// Dropping the pool shuts the workers down and joins them.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                seq: 0,
+                job: None,
+                panicked: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("lowbit-engine-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn engine worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `body(slot)` for every slot in `0..workers` on pool threads and
+    /// block until all of them have finished. `body` may freely borrow the
+    /// caller's stack — the blocking wait is the scope. Panics in `body`
+    /// are re-raised here after the job has fully drained.
+    pub fn broadcast(&self, workers: usize, body: &(dyn Fn(usize) + Sync)) {
+        assert!(workers >= 1, "broadcast needs at least one worker");
+        assert!(
+            workers <= self.workers(),
+            "broadcast of {workers} workers on a {}-worker pool",
+            self.workers()
+        );
+        let body_ptr = body as *const (dyn Fn(usize) + Sync);
+        let mut st = self.shared.state.lock().unwrap();
+        // Claim the job slot (jobs never overlap).
+        while st.job.is_some() {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.seq += 1;
+        let my_seq = st.seq;
+        st.job = Some(Job {
+            body: body_ptr,
+            tickets: workers,
+            next_slot: 0,
+            active: workers,
+        });
+        self.shared.work_cv.notify_all();
+        while st.seq == my_seq && st.job.is_some() {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        let poisoned = st.panicked == Some(my_seq);
+        if poisoned {
+            st.panicked = None;
+        }
+        drop(st);
+        if poisoned {
+            panic!("engine worker panicked during a broadcast task");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    let mut last_seq = 0u64;
+    loop {
+        // Claim a slot in a job we have not inspected yet.
+        let (body, slot, seq) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.seq != last_seq {
+                    last_seq = st.seq;
+                    if let Some(job) = st.job.as_mut() {
+                        if job.tickets > 0 {
+                            job.tickets -= 1;
+                            let slot = job.next_slot;
+                            job.next_slot += 1;
+                            break (job.body, slot, st.seq);
+                        }
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // SAFETY: the submitter is blocked in `broadcast` until this job's
+        // `active` count reaches zero, so the closure is still alive.
+        let body_ref: &(dyn Fn(usize) + Sync) = unsafe { &*body };
+        let ok = catch_unwind(AssertUnwindSafe(|| body_ref(slot))).is_ok();
+        let mut st = shared.state.lock().unwrap();
+        if !ok {
+            st.panicked = Some(seq);
+        }
+        if let Some(job) = st.job.as_mut() {
+            job.active -= 1;
+            if job.active == 0 {
+                st.job = None;
+                shared.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn broadcast_runs_every_slot_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        pool.broadcast(4, &|slot| {
+            hits[slot].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reused_across_many_jobs() {
+        let pool = WorkerPool::new(3);
+        let count = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.broadcast(3, &|_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 600);
+    }
+
+    #[test]
+    fn partial_broadcast_uses_a_subset_of_workers() {
+        let pool = WorkerPool::new(8);
+        let count = AtomicUsize::new(0);
+        pool.broadcast(2, &|slot| {
+            assert!(slot < 2);
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn borrowed_state_is_visible_after_broadcast() {
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0u32; 64];
+        {
+            let view = crate::engine::SharedSlice::new(&mut data);
+            pool.broadcast(4, &|slot| {
+                // SAFETY: each slot writes its own disjoint 16-element range.
+                let part = unsafe { view.range_mut(slot * 16, (slot + 1) * 16) };
+                for (i, v) in part.iter_mut().enumerate() {
+                    *v = (slot * 16 + i) as u32;
+                }
+            });
+        }
+        assert_eq!(data, (0..64).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.broadcast(2, &|slot| {
+                if slot == 0 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "panic must reach the submitter");
+        // The pool still works after a panicked job.
+        let count = AtomicUsize::new(0);
+        pool.broadcast(2, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 2);
+    }
+}

@@ -66,7 +66,11 @@ fn cmd_train(argv: &[String]) -> i32 {
         .opt("steps", "training steps (overrides config)", None)
         .opt("engine", "builtin | pjrt", None)
         .opt("seed", "run seed", None)
-        .opt("threads", "step-engine worker threads (0 = auto)", None)
+        .opt(
+            "threads",
+            "step-engine worker threads, dense + compressed presets (0 = auto)",
+            None,
+        )
         .flag("quiet", "suppress progress logs");
     let args = match cmd.parse(argv) {
         Ok(a) => a,

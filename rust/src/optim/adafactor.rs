@@ -6,12 +6,23 @@
 //! Following the paper's App. D we drive Adafactor with an *external*
 //! learning rate and the same β's as AdamW; Adafactor-specific defaults
 //! (update clipping `d=1.0`, `eps2=1e-30`) keep their original values.
+//!
+//! By default the step runs on the shard-parallel [`crate::engine`]
+//! (`dense::adafactor_step`: factored statistics → update-RMS → clipped
+//! write, with sequential shard-order reductions in between). Results
+//! are bit-identical across thread counts; versus the sequential
+//! reference ([`Adafactor::sequential`]) they are bit-identical when
+//! every tensor fits in one shard and agree to float rounding otherwise
+//! (the row/col and RMS sums associate per shard).
 
 use super::factor::FactoredSecond;
 use super::{Hyper, Optimizer, Param};
+use crate::engine::{dense, StepEngine};
 use crate::tensor::Tensor;
 
-enum Second {
+/// Second-moment state for one parameter tensor (shared with the
+/// engine's dense executor).
+pub enum Second {
     Factored(FactoredSecond),
     Dense(Tensor),
 }
@@ -26,6 +37,9 @@ pub struct Adafactor {
     pub clip_threshold: f32,
     /// Small constant added to squared gradients.
     pub eps2: f32,
+    /// Shard-parallel step engine; `None` keeps the sequential loop
+    /// (the off-engine reference).
+    engine: Option<StepEngine>,
 }
 
 impl Adafactor {
@@ -38,7 +52,44 @@ impl Adafactor {
             v: Vec::new(),
             clip_threshold: 1.0,
             eps2: 1e-30,
+            engine: Some(StepEngine::new()),
         }
+    }
+
+    /// Off-engine reference: the plain sequential per-tensor loop.
+    pub fn sequential(hp: Hyper, use_momentum: bool) -> Adafactor {
+        Adafactor {
+            engine: None,
+            ..Adafactor::new(hp, use_momentum)
+        }
+    }
+
+    /// Set the engine worker count (0 = auto).
+    pub fn with_threads(mut self, threads: usize) -> Adafactor {
+        self.engine = Some(self.engine.unwrap_or_default().with_threads(threads));
+        self
+    }
+
+    /// Set the engine shard size in elements.
+    pub fn with_shard_elems(mut self, shard_elems: usize) -> Adafactor {
+        self.engine = Some(self.engine.unwrap_or_default().with_shard_elems(shard_elems));
+        self
+    }
+
+    /// Momentum buffer of parameter `idx`, when momentum is enabled
+    /// (tests / analysis only).
+    pub fn momentum(&self, idx: usize) -> Option<&Tensor> {
+        self.m.get(idx)?.as_ref()
+    }
+
+    /// Second-moment state of parameter `idx` as `(row-ish, col)`
+    /// vectors: factored statistics for ≥2-D parameters, `(dense, [])`
+    /// for 1-D.
+    pub fn second(&self, idx: usize) -> Option<(Vec<f32>, Vec<f32>)> {
+        Some(match self.v.get(idx)? {
+            Second::Factored(f) => (f.row.clone(), f.col.clone()),
+            Second::Dense(t) => (t.data.clone(), Vec::new()),
+        })
     }
 
     fn lazy_init(&mut self, params: &[Param]) {
@@ -65,6 +116,21 @@ impl Optimizer for Adafactor {
         assert_eq!(params.len(), grads.len());
         self.lazy_init(params);
         self.t += 1;
+        if let Some(eng) = &self.engine {
+            dense::adafactor_step(
+                eng,
+                &self.hp,
+                self.t,
+                lr,
+                self.clip_threshold,
+                self.eps2,
+                params,
+                grads,
+                &mut self.m,
+                &mut self.v,
+            );
+            return;
+        }
         // Adafactor's default decaying beta2: 1 - t^{-0.8}.
         let beta2 = 1.0 - (self.t as f32).powf(-0.8);
         for (i, p) in params.iter_mut().enumerate() {

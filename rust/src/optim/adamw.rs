@@ -2,8 +2,15 @@
 //! decoupled weight decay. This is both the 32-bit baseline and the inner
 //! update `A` shared by every compressed variant (they call
 //! [`adamw_update_tensor`] on the decompressed states).
+//!
+//! By default the baseline steps on the shard-parallel
+//! [`crate::engine`] (the update is purely elementwise, so the sharded
+//! schedule is bit-identical to the sequential loop at every thread
+//! count); [`AdamW::sequential`] keeps the plain per-tensor loop as the
+//! off-engine reference for the parity suite.
 
 use super::{Hyper, Optimizer, Param};
+use crate::engine::{dense, StepEngine};
 use crate::tensor::Tensor;
 
 /// In-place AdamW update of one parameter tensor given its decompressed
@@ -43,6 +50,9 @@ pub struct AdamW {
     t: usize,
     m: Vec<Tensor>,
     v: Vec<Tensor>,
+    /// Shard-parallel step engine; `None` keeps the sequential
+    /// per-tensor loop (the off-engine reference).
+    engine: Option<StepEngine>,
 }
 
 impl AdamW {
@@ -52,7 +62,30 @@ impl AdamW {
             t: 0,
             m: Vec::new(),
             v: Vec::new(),
+            engine: Some(StepEngine::new()),
         }
+    }
+
+    /// Off-engine reference: the plain sequential per-tensor loop.
+    pub fn sequential(hp: Hyper) -> AdamW {
+        AdamW {
+            engine: None,
+            ..AdamW::new(hp)
+        }
+    }
+
+    /// Set the engine worker count (0 = auto). Purely a throughput knob:
+    /// the elementwise update is bit-identical at every setting.
+    pub fn with_threads(mut self, threads: usize) -> AdamW {
+        self.engine = Some(self.engine.unwrap_or_default().with_threads(threads));
+        self
+    }
+
+    /// Set the engine shard size in elements (tests use small values to
+    /// force multi-shard plans on small tensors).
+    pub fn with_shard_elems(mut self, shard_elems: usize) -> AdamW {
+        self.engine = Some(self.engine.unwrap_or_default().with_shard_elems(shard_elems));
+        self
     }
 
     fn lazy_init(&mut self, params: &[Param]) {
@@ -74,6 +107,12 @@ impl Optimizer for AdamW {
         assert_eq!(params.len(), grads.len());
         self.lazy_init(params);
         self.t += 1;
+        if let Some(eng) = &self.engine {
+            dense::adamw32_step(
+                eng, &self.hp, self.t, lr, params, grads, &mut self.m, &mut self.v,
+            );
+            return;
+        }
         for (i, p) in params.iter_mut().enumerate() {
             adamw_update_tensor(
                 &mut p.tensor,

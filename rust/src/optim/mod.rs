@@ -96,24 +96,28 @@ pub fn build(preset: &str, hp: Hyper) -> Option<Box<dyn Optimizer>> {
     build_threaded(preset, hp, 0)
 }
 
-/// [`build`] with an explicit step-engine worker count for the
-/// compressed presets (0 = auto). Thread count is purely a throughput
-/// knob: the engine is bit-identical at every setting.
+/// [`build`] with an explicit step-engine worker count (0 = auto) for
+/// every engine-backed preset — the compressed optimizers *and* the
+/// dense baselines, which shard through the same engine so the Tab. 4
+/// speed comparison is apples-to-apples. Thread count is purely a
+/// throughput knob: the engine is bit-identical at every setting.
 pub fn build_threaded(preset: &str, hp: Hyper, threads: usize) -> Option<Box<dyn Optimizer>> {
     use crate::quant::Quantizer;
     let compressed = |policy: lowbit::QuantPolicy| {
         lowbit::CompressedAdamW::new(hp, policy).with_threads(threads)
     };
     Some(match preset {
-        "adamw32" => Box::new(adamw::AdamW::new(hp)),
+        "adamw32" => Box::new(adamw::AdamW::new(hp).with_threads(threads)),
         "adamw8" => Box::new(compressed(lowbit::QuantPolicy::bit8())),
         "adamw4" => Box::new(compressed(lowbit::QuantPolicy::bit4())),
         "adamw4-sr" => Box::new(compressed(lowbit::QuantPolicy::bit4().stochastic())),
         "factor4" => Box::new(compressed(lowbit::QuantPolicy::bit4().factored())),
-        "adafactor" => Box::new(adafactor::Adafactor::new(hp, true)),
-        "adafactor-b0" => Box::new(adafactor::Adafactor::new(hp, false)),
-        "sm3" => Box::new(sm3::Sm3::new(hp)),
-        "sgdm" => Box::new(sgdm::Sgdm::new(hp, None)),
+        "adafactor" => Box::new(adafactor::Adafactor::new(hp, true).with_threads(threads)),
+        "adafactor-b0" => Box::new(adafactor::Adafactor::new(hp, false).with_threads(threads)),
+        "sm3" => Box::new(sm3::Sm3::new(hp).with_threads(threads)),
+        "sgdm" => Box::new(sgdm::Sgdm::new(hp, None).with_threads(threads)),
+        // The quantized-momentum variant stays sequential (shared RNG
+        // stream); the thread knob is a no-op for it.
         "sgdm4" => Box::new(sgdm::Sgdm::new(
             hp,
             Some(Quantizer::first_moment_4bit()),

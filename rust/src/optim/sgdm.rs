@@ -2,8 +2,18 @@
 //! (paper Alg. 2: the quantized state is the momentum buffer). The
 //! compressed variant is the optimizer analyzed by the paper's
 //! convergence theorem (App. H).
+//!
+//! The dense (full-precision momentum) variant steps on the
+//! shard-parallel [`crate::engine`] by default — the update is purely
+//! elementwise, so the sharded schedule is bit-identical to the
+//! sequential loop at every thread count. The quantized variant keeps
+//! the sequential path (its whole-tensor quantization draws from one
+//! shared RNG stream, which does not shard without changing semantics).
+//! [`Sgdm::sequential`] is the off-engine reference for the parity
+//! suite.
 
 use super::{Hyper, Optimizer, Param};
+use crate::engine::{dense, StepEngine};
 use crate::quant::{QuantMap, QuantizedTensor, Quantizer};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
@@ -20,6 +30,9 @@ pub struct Sgdm {
     map: Option<QuantMap>,
     state: Vec<Momentum>,
     rng: Pcg64,
+    /// Shard-parallel step engine for the dense-momentum variant; `None`
+    /// keeps the sequential loop (the off-engine reference).
+    engine: Option<StepEngine>,
 }
 
 impl Sgdm {
@@ -32,7 +45,41 @@ impl Sgdm {
             map,
             state: Vec::new(),
             rng: Pcg64::seeded(0x5D6D),
+            engine: Some(StepEngine::new()),
         }
+    }
+
+    /// Off-engine reference: the plain sequential per-tensor loop.
+    pub fn sequential(hp: Hyper, quantizer: Option<Quantizer>) -> Sgdm {
+        Sgdm {
+            engine: None,
+            ..Sgdm::new(hp, quantizer)
+        }
+    }
+
+    /// Set the engine worker count (0 = auto). Purely a throughput knob:
+    /// the elementwise update is bit-identical at every setting.
+    pub fn with_threads(mut self, threads: usize) -> Sgdm {
+        self.engine = Some(self.engine.unwrap_or_default().with_threads(threads));
+        self
+    }
+
+    /// Set the engine shard size in elements.
+    pub fn with_shard_elems(mut self, shard_elems: usize) -> Sgdm {
+        self.engine = Some(self.engine.unwrap_or_default().with_shard_elems(shard_elems));
+        self
+    }
+
+    /// Decompressed view of the momentum of parameter `idx` (tests /
+    /// analysis only).
+    pub fn momentum(&self, idx: usize) -> Option<Tensor> {
+        Some(match self.state.get(idx)? {
+            Momentum::Full(t) => t.clone(),
+            Momentum::Quant(q) => match &self.map {
+                Some(m) => q.dequantize_with(m),
+                None => q.dequantize(),
+            },
+        })
     }
 }
 
@@ -47,6 +94,21 @@ impl Optimizer for Sgdm {
         }
         self.t += 1;
         let beta = self.hp.beta1;
+        if self.quantizer.is_none() {
+            if let Some(eng) = &self.engine {
+                // Dense momentum: shard-parallel elementwise update.
+                let mut ms: Vec<&mut Tensor> = self
+                    .state
+                    .iter_mut()
+                    .map(|s| match s {
+                        Momentum::Full(t) => t,
+                        Momentum::Quant(_) => unreachable!("dense Sgdm holds full momentum"),
+                    })
+                    .collect();
+                dense::sgdm_step(eng, &self.hp, lr, params, grads, &mut ms);
+                return;
+            }
+        }
         for (i, p) in params.iter_mut().enumerate() {
             // Decompress (Alg. 2 line 3).
             let mut m = match &self.state[i] {

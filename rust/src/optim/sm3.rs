@@ -7,11 +7,21 @@
 //!   μ_row[i] = max_j ν_ij ;  μ_col[j] = max_i ν_ij
 //!   w -= lr * m, with m the β1-momentum of g / sqrt(ν)
 //! 1-D parameters degenerate to full AdaGrad accumulators.
+//!
+//! By default the step runs on the shard-parallel [`crate::engine`]:
+//! the per-element update reads only the previous step's accumulators,
+//! and the fresh accumulators are a max-reduction (exact under any
+//! grouping), so the sharded schedule is bit-identical to the
+//! sequential loop at every thread count. [`Sm3::sequential`] keeps the
+//! plain loop as the off-engine reference.
 
 use super::{Hyper, Optimizer, Param};
+use crate::engine::{dense, StepEngine};
 use crate::tensor::Tensor;
 
-enum Accum {
+/// SM3 accumulator state for one parameter tensor (shared with the
+/// engine's dense executor).
+pub enum Accum {
     /// Per-axis max accumulators (2-D folded shape).
     Cover {
         rows: usize,
@@ -28,6 +38,9 @@ pub struct Sm3 {
     t: usize,
     acc: Vec<Accum>,
     m: Vec<Tensor>,
+    /// Shard-parallel step engine; `None` keeps the sequential loop
+    /// (the off-engine reference).
+    engine: Option<StepEngine>,
 }
 
 impl Sm3 {
@@ -37,7 +50,43 @@ impl Sm3 {
             t: 0,
             acc: Vec::new(),
             m: Vec::new(),
+            engine: Some(StepEngine::new()),
         }
+    }
+
+    /// Off-engine reference: the plain sequential per-tensor loop.
+    pub fn sequential(hp: Hyper) -> Sm3 {
+        Sm3 {
+            engine: None,
+            ..Sm3::new(hp)
+        }
+    }
+
+    /// Set the engine worker count (0 = auto). Purely a throughput knob:
+    /// results are bit-identical at every setting.
+    pub fn with_threads(mut self, threads: usize) -> Sm3 {
+        self.engine = Some(self.engine.unwrap_or_default().with_threads(threads));
+        self
+    }
+
+    /// Set the engine shard size in elements.
+    pub fn with_shard_elems(mut self, shard_elems: usize) -> Sm3 {
+        self.engine = Some(self.engine.unwrap_or_default().with_shard_elems(shard_elems));
+        self
+    }
+
+    /// Momentum buffer of parameter `idx` (tests / analysis only).
+    pub fn momentum(&self, idx: usize) -> Option<&Tensor> {
+        self.m.get(idx)
+    }
+
+    /// Accumulator state of parameter `idx` as `(row-ish, col)` vectors:
+    /// cover accumulators for ≥2-D parameters, `(dense, [])` for 1-D.
+    pub fn accumulators(&self, idx: usize) -> Option<(Vec<f32>, Vec<f32>)> {
+        Some(match self.acc.get(idx)? {
+            Accum::Cover { mu_row, mu_col, .. } => (mu_row.clone(), mu_col.clone()),
+            Accum::Dense(t) => (t.data.clone(), Vec::new()),
+        })
     }
 
     fn lazy_init(&mut self, params: &[Param]) {
@@ -68,6 +117,10 @@ impl Optimizer for Sm3 {
         assert_eq!(params.len(), grads.len());
         self.lazy_init(params);
         self.t += 1;
+        if let Some(eng) = &self.engine {
+            dense::sm3_step(eng, &self.hp, lr, params, grads, &mut self.acc, &mut self.m);
+            return;
+        }
         let b1 = self.hp.beta1;
         for (i, p) in params.iter_mut().enumerate() {
             let g = &grads[i];

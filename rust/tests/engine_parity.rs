@@ -1,16 +1,31 @@
-//! Determinism parity suite for the shard-parallel step engine: a
-//! `CompressedAdamW` stepped at thread counts 1 (the sequential
-//! schedule), 2 and 7 must produce **bit-identical** weights and
-//! optimizer states — for every quantization policy, with stochastic
-//! rounding ON and OFF, factored and quantized second moments, and both
-//! 1-D and 2-D parameters.
+//! Determinism parity suite for the shard-parallel step engine, covering
+//! **every engine-backed optimizer** (dense and compressed) on the
+//! persistent worker pool:
+//!
+//! * `CompressedAdamW` stepped at thread counts 1 (the sequential
+//!   schedule), 2 and 7 must produce **bit-identical** weights and
+//!   optimizer states — for every quantization policy, with stochastic
+//!   rounding ON and OFF, factored and quantized second moments, and
+//!   both 1-D and 2-D parameters.
+//! * The dense baselines (fp32 AdamW, SGDM, SM3) must be bit-identical
+//!   to their **off-engine sequential reference loops** at every thread
+//!   count (elementwise updates and max-reductions are exact under any
+//!   sharding).
+//! * Adafactor must be bit-identical across thread counts (its float-sum
+//!   reductions associate per shard, fixed by the plan), bit-identical
+//!   to the sequential reference when every tensor is a single shard,
+//!   and within float rounding of it otherwise.
 //!
 //! Shard size is forced down to 512 elements so even these small test
 //! tensors split into many shards (the 2-D weight into ~5, the 1-D
 //! vector into ~12), making the parity check exercise real multi-shard
 //! plans rather than trivially passing on single-shard tensors.
 
+use lowbit_opt::optim::adafactor::Adafactor;
+use lowbit_opt::optim::adamw::AdamW;
 use lowbit_opt::optim::lowbit::{CompressedAdamW, QuantPolicy};
+use lowbit_opt::optim::sgdm::Sgdm;
+use lowbit_opt::optim::sm3::Sm3;
 use lowbit_opt::optim::{Hyper, Optimizer, Param, ParamKind};
 use lowbit_opt::quant::{MapKind, NormKind, Quantizer};
 use lowbit_opt::tensor::Tensor;
@@ -210,6 +225,200 @@ fn parity_fp32_states_match_dense_adamw() {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Dense baselines on the engine.
+// ---------------------------------------------------------------------
+
+/// Everything observable about a dense-optimizer run: final weights plus
+/// one flattened state vector per parameter.
+#[derive(PartialEq, Debug)]
+struct DenseOut {
+    weights: Vec<Vec<f32>>,
+    states: Vec<Vec<f32>>,
+}
+
+fn run_dense<O: Optimizer>(
+    mut opt: O,
+    mk: fn() -> Vec<Param>,
+    extract: impl Fn(&O, usize) -> Vec<f32>,
+) -> DenseOut {
+    let mut params = mk();
+    let init: Vec<Vec<f32>> = params.iter().map(|p| p.tensor.data.clone()).collect();
+    for s in 0..STEPS {
+        let mut grng = Pcg64::seeded(1000 + s as u64);
+        let grads: Vec<Tensor> = params
+            .iter()
+            .map(|p| Tensor::randn(&p.tensor.shape, 0.1, &mut grng))
+            .collect();
+        opt.step(&mut params, &grads, 1e-2);
+    }
+    for (p, w0) in params.iter().zip(init.iter()) {
+        assert_ne!(&p.tensor.data, w0, "{} never updated", p.name);
+    }
+    DenseOut {
+        weights: params.iter().map(|p| p.tensor.data.clone()).collect(),
+        states: (0..params.len()).map(|i| extract(&opt, i)).collect(),
+    }
+}
+
+fn adamw_state(o: &AdamW, i: usize) -> Vec<f32> {
+    let (m, v) = o.moments(i).expect("moments");
+    m.data.iter().chain(v.data.iter()).copied().collect()
+}
+
+fn sgdm_state(o: &Sgdm, i: usize) -> Vec<f32> {
+    o.momentum(i).expect("momentum").data
+}
+
+fn sm3_state(o: &Sm3, i: usize) -> Vec<f32> {
+    let (a, b) = o.accumulators(i).expect("accumulators");
+    let mut s = o.momentum(i).expect("momentum").data.clone();
+    s.extend(a);
+    s.extend(b);
+    s
+}
+
+fn adafactor_state(o: &Adafactor, i: usize) -> Vec<f32> {
+    let (r, c) = o.second(i).expect("second moment");
+    let mut s = r;
+    s.extend(c);
+    if let Some(m) = o.momentum(i) {
+        s.extend(m.data.iter());
+    }
+    s
+}
+
+#[test]
+fn parity_dense_adamw32_on_vs_off_engine() {
+    let hp = Hyper::default();
+    let reference = run_dense(AdamW::sequential(hp), mixed_params, adamw_state);
+    for &t in &THREADS {
+        let opt = AdamW::new(hp).with_threads(t).with_shard_elems(SHARD_ELEMS);
+        let out = run_dense(opt, mixed_params, adamw_state);
+        assert_eq!(
+            reference, out,
+            "adamw32: engine at {t} threads != sequential reference"
+        );
+    }
+}
+
+#[test]
+fn parity_dense_sgdm_on_vs_off_engine() {
+    let hp = Hyper::default();
+    let reference = run_dense(Sgdm::sequential(hp, None), mixed_params, sgdm_state);
+    for &t in &THREADS {
+        let opt = Sgdm::new(hp, None)
+            .with_threads(t)
+            .with_shard_elems(SHARD_ELEMS);
+        let out = run_dense(opt, mixed_params, sgdm_state);
+        assert_eq!(
+            reference, out,
+            "sgdm: engine at {t} threads != sequential reference"
+        );
+    }
+}
+
+#[test]
+fn parity_dense_sm3_on_vs_off_engine() {
+    let hp = Hyper::default();
+    let reference = run_dense(Sm3::sequential(hp), mixed_params, sm3_state);
+    for &t in &THREADS {
+        let opt = Sm3::new(hp).with_threads(t).with_shard_elems(SHARD_ELEMS);
+        let out = run_dense(opt, mixed_params, sm3_state);
+        assert_eq!(
+            reference, out,
+            "sm3: engine at {t} threads != sequential reference"
+        );
+    }
+}
+
+#[test]
+fn parity_adafactor_bit_identical_across_threads() {
+    for momentum in [true, false] {
+        let hp = Hyper::default();
+        let mk = |t: usize| {
+            Adafactor::new(hp, momentum)
+                .with_threads(t)
+                .with_shard_elems(SHARD_ELEMS)
+        };
+        let baseline = run_dense(mk(THREADS[0]), mixed_params, adafactor_state);
+        for &t in &THREADS[1..] {
+            let out = run_dense(mk(t), mixed_params, adafactor_state);
+            assert_eq!(
+                baseline, out,
+                "adafactor(momentum={momentum}): threads={t} diverged from the \
+                 1-thread schedule"
+            );
+        }
+    }
+}
+
+#[test]
+fn adafactor_single_shard_matches_sequential_reference_bitwise() {
+    // With the default shard size every mixed_params tensor is a single
+    // piece, so the per-shard sums have exactly one partial each and the
+    // engine must reproduce the sequential reference bit-for-bit.
+    let hp = Hyper::default();
+    let reference = run_dense(Adafactor::sequential(hp, true), mixed_params, adafactor_state);
+    let engine = run_dense(Adafactor::new(hp, true).with_threads(4), mixed_params, adafactor_state);
+    assert_eq!(reference, engine, "adafactor single-shard engine != sequential");
+}
+
+#[test]
+fn adafactor_multi_shard_tracks_sequential_reference() {
+    // Multi-shard plans regroup the row/col and RMS float sums, so the
+    // engine is not bit-equal to the sequential loop — but it must stay
+    // within tight float-rounding distance of it.
+    let hp = Hyper::default();
+    let reference = run_dense(Adafactor::sequential(hp, true), mixed_params, adafactor_state);
+    let engine = run_dense(
+        Adafactor::new(hp, true)
+            .with_threads(4)
+            .with_shard_elems(SHARD_ELEMS),
+        mixed_params,
+        adafactor_state,
+    );
+    for (i, (wr, we)) in reference.weights.iter().zip(engine.weights.iter()).enumerate() {
+        for (k, (a, b)) in wr.iter().zip(we.iter()).enumerate() {
+            let tol = 1e-5f32.max(a.abs() * 1e-4);
+            assert!(
+                (a - b).abs() <= tol,
+                "adafactor tensor {i} elem {k}: sequential {a} vs engine {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn parity_dense_auto_threads_equals_explicit() {
+    // Auto mode on a workload big enough to clear the sequential
+    // shortcut must match the explicit 1-thread schedule for every dense
+    // optimizer (exactness does not depend on the chosen worker count).
+    let hp = Hyper::default();
+    let a = run_dense(
+        AdamW::new(hp).with_threads(0).with_shard_elems(SHARD_ELEMS),
+        big_mixed_params,
+        adamw_state,
+    );
+    let b = run_dense(
+        AdamW::new(hp).with_threads(1).with_shard_elems(SHARD_ELEMS),
+        big_mixed_params,
+        adamw_state,
+    );
+    assert_eq!(a, b, "adamw32 auto thread count diverged");
+    let a = run_dense(
+        Sm3::new(hp).with_threads(0).with_shard_elems(SHARD_ELEMS),
+        big_mixed_params,
+        sm3_state,
+    );
+    let b = run_dense(
+        Sm3::new(hp).with_threads(1).with_shard_elems(SHARD_ELEMS),
+        big_mixed_params,
+        sm3_state,
+    );
+    assert_eq!(a, b, "sm3 auto thread count diverged");
 }
 
 #[test]

@@ -1,0 +1,291 @@
+//! Property tests (via `util/propcheck`) for the shard planner's
+//! invariants. The whole engine-safety story rests on these: every
+//! `unsafe` range access in the executors cites a plan invariant, so the
+//! invariants get hammered here across arbitrary tensor-shape mixes,
+//! state-layout mixes and shard sizes:
+//!
+//! * pieces of each tensor are disjoint, in order, and cover every
+//!   element exactly once;
+//! * piece boundaries respect the tensor's alignment (blocks, rows,
+//!   nibble bytes);
+//! * stat slots exist exactly for Global-m / Global-or-Factored-v
+//!   pieces, are never shared, and carry the declared lengths;
+//! * the plan is a pure function of (metas, shard_elems) — thread count
+//!   never enters, and rebuilding reproduces it exactly;
+//! * splitting actually splits (big tensors get ≥ 2 pieces when their
+//!   alignment allows) and coalescing keeps small tensors whole.
+
+use lowbit_opt::engine::plan::{alignment, build_plan, Plan, StateLayout, TensorMeta};
+use lowbit_opt::util::propcheck::{check, Gen};
+
+fn gen_shape(g: &mut Gen) -> Vec<usize> {
+    match g.rng.below(10) {
+        // Occasional empty tensor: the planner must skip it cleanly.
+        0 => vec![0],
+        1..=4 => vec![1 + g.rng.below(6000)],
+        5..=8 => vec![1 + g.rng.below(48), 1 + g.rng.below(96)],
+        _ => vec![1 + g.rng.below(12), 1 + g.rng.below(8), 1 + g.rng.below(10)],
+    }
+}
+
+fn gen_meta(g: &mut Gen) -> TensorMeta {
+    let shape = gen_shape(g);
+    let numel: usize = shape.iter().product();
+    let blocks = [64usize, 128, 2048];
+    let m = match g.rng.below(3) {
+        0 => StateLayout::F32,
+        1 => StateLayout::Block(*g.choose(&blocks)),
+        _ => StateLayout::Global,
+    };
+    let v = match g.rng.below(4) {
+        0 => StateLayout::F32,
+        1 => StateLayout::Block(*g.choose(&blocks)),
+        2 => StateLayout::Global,
+        // Factorization needs >= 2 dims; 1-D falls back to Block.
+        _ if shape.len() >= 2 => StateLayout::Factored,
+        _ => StateLayout::Block(128),
+    };
+    let axis_sum: usize = shape.iter().sum();
+    let m_stat_len = match m {
+        StateLayout::Global => {
+            if shape.len() >= 2 {
+                axis_sum
+            } else {
+                1
+            }
+        }
+        _ => 0,
+    };
+    let v_stat_len = match v {
+        StateLayout::Global => {
+            if shape.len() >= 2 {
+                axis_sum
+            } else {
+                1
+            }
+        }
+        StateLayout::Factored => shape[0] + numel / shape[0],
+        _ => 0,
+    };
+    TensorMeta {
+        numel,
+        shape,
+        m,
+        v,
+        m_stat_len,
+        v_stat_len,
+    }
+}
+
+fn gen_metas(g: &mut Gen) -> Vec<TensorMeta> {
+    let n = 1 + g.rng.below(8);
+    (0..n).map(|_| gen_meta(g)).collect()
+}
+
+fn gen_shard_elems(g: &mut Gen) -> usize {
+    *g.choose(&[2usize, 64, 512, 4096, 1 << 16])
+}
+
+/// Pieces of tensor `ti` in plan traversal order.
+fn pieces_of(plan: &Plan, ti: usize) -> Vec<(usize, usize, Option<usize>, Option<usize>)> {
+    let mut out = Vec::new();
+    for task in &plan.tasks {
+        for p in task.pieces.iter().filter(|p| p.tensor == ti) {
+            out.push((p.lo, p.hi, p.m_slot, p.v_slot));
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_pieces_cover_each_tensor_disjointly_and_aligned() {
+    check("plan coverage + alignment", 300, |g| {
+        let metas = gen_metas(g);
+        let shard = gen_shard_elems(g);
+        let plan = build_plan(&metas, shard);
+        let want_total: usize = metas.iter().map(|m| m.numel).sum();
+        if plan.total_elems != want_total {
+            return Err(format!(
+                "total_elems {} != sum of numels {want_total}",
+                plan.total_elems
+            ));
+        }
+        for (ti, meta) in metas.iter().enumerate() {
+            let align = alignment(meta);
+            let mut cursor = 0usize;
+            for (lo, hi, _, _) in pieces_of(&plan, ti) {
+                if lo != cursor {
+                    return Err(format!("tensor {ti}: gap/overlap at {lo} (cursor {cursor})"));
+                }
+                if hi <= lo || hi > meta.numel {
+                    return Err(format!("tensor {ti}: bad piece [{lo}, {hi})"));
+                }
+                if lo % align != 0 {
+                    return Err(format!("tensor {ti}: lo {lo} not {align}-aligned"));
+                }
+                if hi != meta.numel && hi % align != 0 {
+                    return Err(format!("tensor {ti}: hi {hi} not {align}-aligned"));
+                }
+                cursor = hi;
+            }
+            if cursor != meta.numel {
+                return Err(format!(
+                    "tensor {ti}: covered only {cursor} of {} elements",
+                    meta.numel
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_is_pure_in_its_inputs() {
+    check("plan purity", 200, |g| {
+        let metas = gen_metas(g);
+        let shard = gen_shard_elems(g);
+        let a = build_plan(&metas, shard);
+        let b = build_plan(&metas, shard);
+        if a.tasks.len() != b.tasks.len() || a.slot_lens != b.slot_lens {
+            return Err("rebuild changed task/slot structure".into());
+        }
+        for (x, y) in a.tasks.iter().zip(b.tasks.iter()) {
+            if x.pieces.len() != y.pieces.len() {
+                return Err("rebuild changed piece count".into());
+            }
+            for (p, q) in x.pieces.iter().zip(y.pieces.iter()) {
+                if (p.tensor, p.lo, p.hi, p.m_slot, p.v_slot)
+                    != (q.tensor, q.lo, q.hi, q.m_slot, q.v_slot)
+                {
+                    return Err(format!(
+                        "rebuild changed a piece of tensor {} at {}",
+                        p.tensor, p.lo
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stat_slots_unique_and_correctly_sized() {
+    check("stat slots", 300, |g| {
+        let metas = gen_metas(g);
+        let shard = gen_shard_elems(g);
+        let plan = build_plan(&metas, shard);
+        let mut seen = std::collections::BTreeSet::new();
+        for task in &plan.tasks {
+            for p in &task.pieces {
+                let meta = &metas[p.tensor];
+                match (meta.m == StateLayout::Global, p.m_slot) {
+                    (true, None) => return Err(format!("tensor {}: global m, no slot", p.tensor)),
+                    (false, Some(_)) => {
+                        return Err(format!("tensor {}: non-global m got a slot", p.tensor))
+                    }
+                    (true, Some(s)) => {
+                        if !seen.insert(s) {
+                            return Err(format!("m slot {s} reused"));
+                        }
+                        if plan.slot_lens[s] != meta.m_stat_len {
+                            return Err(format!(
+                                "m slot {s} len {} != declared {}",
+                                plan.slot_lens[s], meta.m_stat_len
+                            ));
+                        }
+                    }
+                    (false, None) => {}
+                }
+                let v_wants_slot =
+                    matches!(meta.v, StateLayout::Global | StateLayout::Factored);
+                match (v_wants_slot, p.v_slot) {
+                    (true, None) => return Err(format!("tensor {}: stat v, no slot", p.tensor)),
+                    (false, Some(_)) => {
+                        return Err(format!("tensor {}: plain v got a slot", p.tensor))
+                    }
+                    (true, Some(s)) => {
+                        if !seen.insert(s) {
+                            return Err(format!("v slot {s} reused"));
+                        }
+                        if plan.slot_lens[s] != meta.v_stat_len {
+                            return Err(format!(
+                                "v slot {s} len {} != declared {}",
+                                plan.slot_lens[s], meta.v_stat_len
+                            ));
+                        }
+                    }
+                    (false, None) => {}
+                }
+            }
+        }
+        if seen.len() != plan.slot_lens.len() {
+            return Err(format!(
+                "{} slots allocated but {} referenced",
+                plan.slot_lens.len(),
+                seen.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_split_and_coalesce_behaviour() {
+    check("split/coalesce", 300, |g| {
+        let metas = gen_metas(g);
+        let shard = gen_shard_elems(g);
+        let plan = build_plan(&metas, shard);
+        let target = shard.max(2);
+        for (ti, meta) in metas.iter().enumerate() {
+            let pieces = pieces_of(&plan, ti);
+            let align = alignment(meta);
+            if meta.numel > target && align < meta.numel {
+                if pieces.len() < 2 {
+                    return Err(format!(
+                        "tensor {ti} ({} elems, target {target}, align {align}) \
+                         was not split: {} piece(s)",
+                        meta.numel,
+                        pieces.len()
+                    ));
+                }
+            } else if meta.numel > 0 && pieces.len() != 1 {
+                // Small (coalesced) and unsplittable tensors stay whole.
+                return Err(format!(
+                    "tensor {ti} ({} elems) expected 1 piece, got {}",
+                    meta.numel,
+                    pieces.len()
+                ));
+            }
+            if meta.numel == 0 && !pieces.is_empty() {
+                return Err(format!("empty tensor {ti} got pieces"));
+            }
+        }
+        for (i, task) in plan.tasks.iter().enumerate() {
+            if task.pieces.is_empty() {
+                return Err(format!("task {i} is empty"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_independent_of_thread_count_by_construction() {
+    // `build_plan` has no thread parameter at all — this test documents
+    // the API-level guarantee and checks the plan shape only depends on
+    // shard_elems by comparing two different engines' worth of inputs.
+    check("plan thread-blindness", 100, |g| {
+        let metas = gen_metas(g);
+        let shard = gen_shard_elems(g);
+        // Simulate "different thread counts" by just building repeatedly
+        // interleaved with unrelated allocations; the plan must be
+        // byte-for-byte stable.
+        let a = build_plan(&metas, shard);
+        let _noise: Vec<u8> = vec![0; 1 + g.rng.below(4096)];
+        let b = build_plan(&metas, shard);
+        if a.tasks.len() != b.tasks.len() {
+            return Err("plan not stable across rebuilds".into());
+        }
+        Ok(())
+    });
+}
