@@ -14,14 +14,19 @@
 //! * **Phase C** — globally-normalized (rank-1 / per-tensor) states:
 //!   after the scale reduction, re-derive the updated state values from
 //!   the *old* codes + gradient (bit-identical to what phase A computed)
-//!   and encode them against the new global scales into fresh packed
-//!   buffers, which are committed into the state vector at the end.
+//!   and encode them against the new global scales into the context's
+//!   double-buffered packed arenas, which are swapped into the state
+//!   vector at the end (the displaced buffers become next step's
+//!   arenas).
 //!
 //! All cross-thread mutation goes through [`SharedSlice`] views over
 //! disjoint shard ranges; every `unsafe` block names the plan invariant
-//! (block / row / byte alignment) it relies on.
+//! (block / row / byte alignment) it relies on. The plan, metadata and
+//! every reusable buffer live in the caller's [`StepContext`]; the
+//! steady-state step is allocation-free (see `ctx.rs`).
 
-use super::plan::{build_plan, Piece, StateLayout, TensorMeta};
+use super::ctx::{GlobalSlot, StepContext, StepScratch};
+use super::plan::{MetaSpec, Piece, StateLayout};
 use super::shared::SharedSlice;
 use super::{step_seed, StepEngine, PHASE_C_STREAM_BASE};
 use crate::optim::factor::FactoredSecond;
@@ -45,14 +50,6 @@ pub struct StepParams<'a> {
     pub m_map: Option<&'a QuantMap>,
     pub v_map: Option<&'a QuantMap>,
     pub v1_map: Option<&'a QuantMap>,
-}
-
-/// Per-worker scratch: decompressed state slices, reused across every
-/// task the worker runs (grown once to the largest shard).
-#[derive(Default)]
-pub struct Scratch {
-    m: Vec<f32>,
-    v: Vec<f32>,
 }
 
 /// How a shard reaches one tensor's first-moment state.
@@ -112,14 +109,6 @@ struct TensorCtx<'a> {
     v: VRoute<'a>,
 }
 
-/// A globally-normalized state scheduled for the phase-C re-encode.
-struct GlobalState {
-    tensor: usize,
-    is_m: bool,
-    q: Quantizer,
-    buf: usize,
-}
-
 /// Byte range of the packed code buffer holding elements `[lo, hi)`.
 #[inline]
 fn packed_range(bits: u8, lo: usize, hi: usize) -> (usize, usize) {
@@ -141,9 +130,13 @@ fn layout_of(q: &Quantizer, shape: &[usize]) -> (StateLayout, usize) {
 }
 
 /// One optimizer step, shard-parallel. `m_states` / `v_states` must be
-/// initialized (one entry per parameter, as after `lazy_init`).
+/// initialized (one entry per parameter, as after `lazy_init`). The
+/// plan, metadata, stat slots, per-worker scratch and the re-encode
+/// double buffers all live in `ctx` and are reused across steps; a
+/// layout or shard-size change rebuilds them (see `ctx.rs`).
 pub fn compressed_step(
     eng: &StepEngine,
+    ctx: &mut StepContext,
     sp: &StepParams,
     params: &mut [Param],
     grads: &[Tensor],
@@ -155,50 +148,109 @@ pub fn compressed_step(
     debug_assert_eq!(m_states.len(), n);
     debug_assert_eq!(v_states.len(), n);
 
-    let metas: Vec<TensorMeta> = (0..n)
-        .map(|i| {
-            let shape = params[i].tensor.shape.clone();
-            let (m, m_stat_len) = match &m_states[i] {
-                MomentState::F32(_) => (StateLayout::F32, 0),
-                MomentState::Quant(q) => layout_of(&q.quantizer, &shape),
-            };
-            let (v, v_stat_len) = match &v_states[i] {
-                SecondState::F32(_) => (StateLayout::F32, 0),
-                SecondState::Quant(q) => layout_of(&q.quantizer, &shape),
-                SecondState::Factored(f) => (StateLayout::Factored, f.rows() + f.cols()),
-            };
-            TensorMeta {
-                numel: params[i].tensor.numel(),
-                shape,
-                m,
-                v,
-                m_stat_len,
-                v_stat_len,
+    let params_ref: &[Param] = &*params;
+    let ms_ref: &[MomentState] = &*m_states;
+    let vs_ref: &[SecondState] = &*v_states;
+    let rebuilt = ctx.ensure(eng.shard_elems(), n, |i| {
+        let shape: &[usize] = &params_ref[i].tensor.shape;
+        let (m, m_stat_len) = match &ms_ref[i] {
+            MomentState::F32(_) => (StateLayout::F32, 0),
+            MomentState::Quant(q) => layout_of(&q.quantizer, shape),
+        };
+        let (v, v_stat_len) = match &vs_ref[i] {
+            SecondState::F32(_) => (StateLayout::F32, 0),
+            SecondState::Quant(q) => layout_of(&q.quantizer, shape),
+            SecondState::Factored(f) => (StateLayout::Factored, f.rows() + f.cols()),
+        };
+        MetaSpec {
+            numel: params_ref[i].tensor.numel(),
+            shape,
+            m,
+            v,
+            m_stat_len,
+            v_stat_len,
+        }
+    });
+    if rebuilt {
+        // Re-derive the globally-normalized state bookkeeping: buffer
+        // maps and zeroed double-buffer arenas (the per-step encode
+        // overwrites every byte its pieces cover, so arena contents
+        // never leak between steps).
+        ctx.m_buf_of.resize(n, usize::MAX);
+        ctx.v_buf_of.resize(n, usize::MAX);
+        for i in 0..n {
+            for is_m in [true, false] {
+                let layout = if is_m { ctx.metas[i].m } else { ctx.metas[i].v };
+                if layout != StateLayout::Global {
+                    continue;
+                }
+                let q = if is_m {
+                    match &m_states[i] {
+                        MomentState::Quant(qt) => qt.quantizer,
+                        _ => unreachable!("meta says quantized m"),
+                    }
+                } else {
+                    match &v_states[i] {
+                        SecondState::Quant(qt) => qt.quantizer,
+                        _ => unreachable!("meta says quantized v"),
+                    }
+                };
+                let buf = ctx.new_bufs.len();
+                if is_m {
+                    ctx.m_buf_of[i] = buf;
+                } else {
+                    ctx.v_buf_of[i] = buf;
+                }
+                ctx.globals.push(GlobalSlot {
+                    tensor: i,
+                    is_m,
+                    q,
+                    buf,
+                });
+                ctx.new_bufs
+                    .push(vec![0u8; packing::packed_len(ctx.metas[i].numel, q.bits)]);
+                ctx.new_scales.push(None);
             }
-        })
-        .collect();
-
-    let plan = build_plan(&metas, eng.shard_elems());
-    if plan.tasks.is_empty() {
+        }
+    }
+    if ctx.plan.tasks.is_empty() {
         return;
     }
-    let threads = eng.resolve_threads(plan.tasks.len(), plan.total_elems);
+    ctx.begin_step();
+    let threads = eng.resolve_threads(ctx.plan.tasks.len(), ctx.plan.total_elems);
+    ctx.ensure_scratch(threads);
+
+    // Split the context into disjoint field borrows for the phases.
+    let StepContext {
+        metas,
+        plan,
+        slots,
+        scratch,
+        red,
+        globals,
+        new_bufs,
+        new_scales,
+        m_buf_of,
+        v_buf_of,
+        arena,
+        ..
+    } = ctx;
+    let plan = &*plan;
+    let metas = &*metas;
+    let globals = &*globals;
+    let (m_buf_of, v_buf_of) = (&*m_buf_of, &*v_buf_of);
+
     let seed = step_seed(sp.base_seed, sp.t as u64);
     let hp = sp.hp;
 
-    let mut slots: Vec<Vec<f32>> = plan.slot_lens.iter().map(|&l| vec![0.0f32; l]).collect();
-
     // ---------------- Phase F: factored-v statistics -----------------
-    let mut rowmeans = vec![0.0f32; n];
     if metas.iter().any(|m| m.v == StateLayout::Factored) {
         {
-            let slot_views: Vec<SharedSlice<f32>> = slots
-                .iter_mut()
-                .map(|s| SharedSlice::new(s.as_mut_slice()))
-                .collect();
-            let slot_views = &slot_views;
-            let plan_ref = &plan;
-            let metas_ref = &metas;
+            let mut slot_views = arena.lease::<SharedSlice<f32>>();
+            slot_views.extend(slots.iter_mut().map(|s| SharedSlice::new(s.as_mut_slice())));
+            let slot_views = slot_views.as_slice();
+            let plan_ref = plan;
+            let metas_ref = metas;
             eng.run_tasks::<(), _>(threads, plan.tasks.len(), |ti, _| {
                 for piece in &plan_ref.tasks[ti].pieces {
                     let meta = &metas_ref[piece.tensor];
@@ -228,7 +280,8 @@ pub fn compressed_step(
             });
         }
         // Sequential reduce in shard order + Adafactor EMA (mirrors
-        // FactoredSecond::update with eps2 = 0).
+        // FactoredSecond::update with eps2 = 0), accumulated in the
+        // context's reusable reduction scratch.
         for i in 0..n {
             if metas[i].v != StateLayout::Factored {
                 continue;
@@ -239,8 +292,9 @@ pub fn compressed_step(
             };
             let rows = f.rows();
             let cols = f.cols();
-            let mut rsum = vec![0.0f32; rows];
-            let mut csum = vec![0.0f32; cols];
+            let (rsum, csum) = red[..rows + cols].split_at_mut(rows);
+            rsum.fill(0.0);
+            csum.fill(0.0);
             for task in &plan.tasks {
                 for p in task.pieces.iter().filter(|p| p.tensor == i) {
                     let s = &slots[p.v_slot.expect("factored slot")];
@@ -258,61 +312,20 @@ pub fn compressed_step(
             for (cj, c) in f.col.iter_mut().enumerate() {
                 *c = hp.beta2 * *c + (1.0 - hp.beta2) * (csum[cj] / rows as f32);
             }
-            rowmeans[i] = f.row_mean();
         }
     }
-
-    // -------- Globally-normalized states: fresh code buffers ---------
-    let mut globals: Vec<GlobalState> = Vec::new();
-    let mut new_bufs: Vec<Vec<u8>> = Vec::new();
-    for i in 0..n {
-        if metas[i].m == StateLayout::Global {
-            let q = match &m_states[i] {
-                MomentState::Quant(qt) => qt.quantizer,
-                _ => unreachable!("meta says quantized m"),
-            };
-            globals.push(GlobalState {
-                tensor: i,
-                is_m: true,
-                q,
-                buf: new_bufs.len(),
-            });
-            new_bufs.push(vec![0u8; packing::packed_len(metas[i].numel, q.bits)]);
-        }
-        if metas[i].v == StateLayout::Global {
-            let q = match &v_states[i] {
-                SecondState::Quant(qt) => qt.quantizer,
-                _ => unreachable!("meta says quantized v"),
-            };
-            globals.push(GlobalState {
-                tensor: i,
-                is_m: false,
-                q,
-                buf: new_bufs.len(),
-            });
-            new_bufs.push(vec![0u8; packing::packed_len(metas[i].numel, q.bits)]);
-        }
-    }
-    let mut new_scales: Vec<Option<Scales>> = vec![None; new_bufs.len()];
 
     {
-        let buf_views: Vec<SharedSlice<u8>> = new_bufs
-            .iter_mut()
-            .map(|b| SharedSlice::new(b.as_mut_slice()))
-            .collect();
-        let mut m_buf_of = vec![usize::MAX; n];
-        let mut v_buf_of = vec![usize::MAX; n];
-        for gs in &globals {
-            if gs.is_m {
-                m_buf_of[gs.tensor] = gs.buf;
-            } else {
-                v_buf_of[gs.tensor] = gs.buf;
-            }
-        }
+        let mut buf_views = arena.lease::<SharedSlice<u8>>();
+        buf_views.extend(new_bufs.iter_mut().map(|b| SharedSlice::new(b.as_mut_slice())));
+        let buf_views = buf_views.as_slice();
 
         // Per-tensor contexts: disjoint &mut borrows of weights and
-        // states, wrapped in shared views for the task closures.
-        let mut ctxs: Vec<TensorCtx> = Vec::with_capacity(n);
+        // states, wrapped in shared views for the task closures. These
+        // borrow the step's params/states, so only their heap capacity
+        // is reused (leased from the context's arena).
+        let mut ctxs = arena.lease::<TensorCtx>();
+        ctxs.reserve(n);
         for (i, ((p, ms), vs)) in params
             .iter_mut()
             .zip(m_states.iter_mut())
@@ -356,10 +369,12 @@ pub fn compressed_step(
             };
             let v_route = match vs {
                 SecondState::F32(tns) => VRoute::F32(SharedSlice::new(tns.data.as_mut_slice())),
-                SecondState::Factored(f) => VRoute::Factored {
-                    f: &*f,
-                    row_mean: rowmeans[i],
-                },
+                SecondState::Factored(f) => {
+                    // Phase F has already applied the EMA, so this is the
+                    // post-update row mean (as the update formula needs).
+                    let row_mean = f.row_mean();
+                    VRoute::Factored { f: &*f, row_mean }
+                }
                 SecondState::Quant(qt) => {
                     let q = qt.quantizer;
                     let map = if shape.len() >= 2 { sp.v_map } else { sp.v1_map }
@@ -397,17 +412,15 @@ pub fn compressed_step(
                 v: v_route,
             });
         }
-        let ctxs = &ctxs;
+        let ctxs = ctxs.as_slice();
 
         // -------------------- Phase A: the update --------------------
         {
-            let slot_views: Vec<SharedSlice<f32>> = slots
-                .iter_mut()
-                .map(|s| SharedSlice::new(s.as_mut_slice()))
-                .collect();
-            let slot_views = &slot_views;
-            let plan_ref = &plan;
-            eng.run_tasks::<Scratch, _>(threads, plan.tasks.len(), |ti, scratch| {
+            let mut slot_views = arena.lease::<SharedSlice<f32>>();
+            slot_views.extend(slots.iter_mut().map(|s| SharedSlice::new(s.as_mut_slice())));
+            let slot_views = slot_views.as_slice();
+            let plan_ref = plan;
+            eng.run_tasks_with(threads, plan.tasks.len(), &mut scratch[..], |ti, scratch| {
                 let mut rng = Pcg64::new(seed, ti as u64);
                 for piece in &plan_ref.tasks[ti].pieces {
                     phase_a_piece(piece, ctxs, slot_views, &hp, sp.t, sp.lr, scratch, &mut rng);
@@ -416,14 +429,18 @@ pub fn compressed_step(
         }
 
         // ---------- Reduce A→C: combine scale statistics -------------
-        for gs in &globals {
+        // The reduced scales overwrite the *recycled* `Scales` storage
+        // swapped out of the states by the previous step's commit, so
+        // the steady state builds no fresh scale vectors.
+        for gs in globals {
             let meta = &metas[gs.tensor];
             let stat_len = if gs.is_m {
                 meta.m_stat_len
             } else {
                 meta.v_stat_len
             };
-            let mut acc = vec![0.0f32; stat_len];
+            let acc = &mut red[..stat_len];
+            acc.fill(0.0);
             for task in &plan.tasks {
                 for p in task.pieces.iter().filter(|p| p.tensor == gs.tensor) {
                     let slot_id = if gs.is_m { p.m_slot } else { p.v_slot };
@@ -435,25 +452,14 @@ pub fn compressed_step(
                     }
                 }
             }
-            let scales = if acc.len() == 1 {
-                Scales::PerTensor(acc[0])
-            } else {
-                let mut per_axis = Vec::with_capacity(meta.shape.len());
-                let mut off = 0;
-                for &d in &meta.shape {
-                    per_axis.push(acc[off..off + d].to_vec());
-                    off += d;
-                }
-                Scales::Rank1 { per_axis }
-            };
-            new_scales[gs.buf] = Some(scales);
+            write_scales(&mut new_scales[gs.buf], acc, &meta.shape);
         }
 
         // --------------- Phase C: global re-encode -------------------
         if !globals.is_empty() {
-            let plan_ref = &plan;
-            let new_scales_ref = &new_scales;
-            eng.run_tasks::<Scratch, _>(threads, plan.tasks.len(), |ti, scratch| {
+            let plan_ref = plan;
+            let new_scales_ref: &[Option<Scales>] = &new_scales[..];
+            eng.run_tasks_with(threads, plan.tasks.len(), &mut scratch[..], |ti, scratch| {
                 let mut rng = Pcg64::new(seed, PHASE_C_STREAM_BASE + ti as u64);
                 for piece in &plan_ref.tasks[ti].pieces {
                     phase_c_piece(piece, ctxs, new_scales_ref, &hp, scratch, &mut rng);
@@ -463,21 +469,58 @@ pub fn compressed_step(
     }
 
     // ------------------ Commit re-encoded states ---------------------
+    // Double-buffer swap: the freshly encoded packed bytes and reduced
+    // scales move into the state, and the state's previous buffers move
+    // back into the context to be overwritten next step. No allocation,
+    // no copy.
     for gs in globals {
-        let meta = &metas[gs.tensor];
-        let qt = QuantizedTensor {
-            shape: meta.shape.clone(),
-            bits: gs.q.bits,
-            packed: std::mem::take(&mut new_bufs[gs.buf]),
-            scales: new_scales[gs.buf].take().expect("reduced scales"),
-            quantizer: gs.q,
-        };
-        if gs.is_m {
-            m_states[gs.tensor] = MomentState::Quant(qt);
+        let qt = if gs.is_m {
+            match &mut m_states[gs.tensor] {
+                MomentState::Quant(qt) => qt,
+                _ => unreachable!("meta says quantized m"),
+            }
         } else {
-            v_states[gs.tensor] = SecondState::Quant(qt);
+            match &mut v_states[gs.tensor] {
+                SecondState::Quant(qt) => qt,
+                _ => unreachable!("meta says quantized v"),
+            }
+        };
+        std::mem::swap(&mut qt.packed, &mut new_bufs[gs.buf]);
+        let ns = new_scales[gs.buf].as_mut().expect("reduced scales");
+        std::mem::swap(&mut qt.scales, ns);
+    }
+}
+
+/// Write the reduced scale statistics into a (possibly recycled)
+/// `Scales` value: reuse the previous step's storage when its layout
+/// matches, build it fresh otherwise (first step after a rebuild).
+fn write_scales(dst: &mut Option<Scales>, acc: &[f32], shape: &[usize]) {
+    if acc.len() == 1 {
+        match dst {
+            Some(Scales::PerTensor(x)) => *x = acc[0],
+            _ => *dst = Some(Scales::PerTensor(acc[0])),
+        }
+        return;
+    }
+    if let Some(Scales::Rank1 { per_axis }) = dst {
+        if per_axis.len() == shape.len()
+            && per_axis.iter().zip(shape.iter()).all(|(v, &d)| v.len() == d)
+        {
+            let mut off = 0;
+            for (v, &d) in per_axis.iter_mut().zip(shape.iter()) {
+                v.copy_from_slice(&acc[off..off + d]);
+                off += d;
+            }
+            return;
         }
     }
+    let mut per_axis = Vec::with_capacity(shape.len());
+    let mut off = 0;
+    for &d in shape {
+        per_axis.push(acc[off..off + d].to_vec());
+        off += d;
+    }
+    *dst = Some(Scales::Rank1 { per_axis });
 }
 
 /// Decompress block-quantized elements `[lo, lo + out.len())` from local
@@ -573,7 +616,7 @@ fn phase_a_piece(
     hp: &Hyper,
     t: usize,
     lr: f32,
-    scratch: &mut Scratch,
+    scratch: &mut StepScratch,
     rng: &mut Pcg64,
 ) {
     let tc = &ctxs[piece.tensor];
@@ -583,7 +626,7 @@ fn phase_a_piece(
     // SAFETY: pieces partition each tensor disjointly (plan invariant),
     // so this shard is the only writer of w[lo..hi].
     let w = unsafe { tc.w.range_mut(lo, hi) };
-    let Scratch { m: sm, v: sv } = scratch;
+    let StepScratch { m: sm, v: sv } = scratch;
 
     // ---- load the first moment ----
     let m_vals: &mut [f32] = match &tc.m {
@@ -732,14 +775,14 @@ fn phase_c_piece(
     ctxs: &[TensorCtx<'_>],
     new_scales: &[Option<Scales>],
     hp: &Hyper,
-    scratch: &mut Scratch,
+    scratch: &mut StepScratch,
     rng: &mut Pcg64,
 ) {
     let tc = &ctxs[piece.tensor];
     let (lo, hi) = (piece.lo, piece.hi);
     let len = hi - lo;
     let g = &tc.g[lo..hi];
-    let Scratch { m: sm, v: sv } = scratch;
+    let StepScratch { m: sm, v: sv } = scratch;
 
     if let MRoute::Global {
         q,

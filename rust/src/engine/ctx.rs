@@ -1,0 +1,474 @@
+//! Cached step contexts: amortize plan/meta/scratch construction.
+//!
+//! Every executor's shard plan, tensor metadata, stat-slot buffers and
+//! scratch arenas are pure functions of (param shapes, state layouts,
+//! shard size) — all fixed after the optimizer's lazy init. Rebuilding
+//! them on every `step()` was a fixed per-step allocation tax that
+//! dominates in the small-model high-step-rate regime, the same fixed
+//! cost the 8-bit optimizers of Dettmers et al. pay once at setup rather
+//! than per step. [`StepContext`] owns all of it, keyed by an
+//! allocation-free fingerprint check against the live layout
+//! ([`TensorMeta::matches`] per tensor): steady-state steps reuse
+//! everything, while a shape/layout/shard-size change — or an explicit
+//! [`StepContext::invalidate`], wired to the optimizer builder setters —
+//! rebuilds from scratch.
+//!
+//! Ownership map (who touches which field):
+//!
+//! * every executor — `metas`, `plan`, `slots`, `red`, `arena`;
+//! * the compressed executor (`adamw4.rs`) — `scratch` (per-worker
+//!   decompress buffers), `globals`/`new_bufs`/`new_scales`/
+//!   `m_buf_of`/`v_buf_of` (double-buffered re-encode arenas);
+//! * the dense Adafactor executor — `aux`/`red64` (compensated f64
+//!   column/RMS partials), `invs` (per-tensor clip factors).
+//!
+//! The per-step *borrowed* view vectors (`SharedSlice` lists, per-tensor
+//! routes) cannot live in the context — they borrow the step's params and
+//! states — so their raw `Vec` capacity is recycled instead through
+//! [`VecArena`], which hands out empty `Vec`s of any element type and
+//! takes the capacity back when the lease drops. Net effect, pinned by
+//! `rust/tests/ctx_cache.rs`: a warmed-up step performs **zero**
+//! allocations at one thread.
+
+use super::plan::{build_plan, MetaSpec, Plan, TensorMeta};
+use crate::quant::{Quantizer, Scales};
+use std::alloc::Layout;
+use std::cell::RefCell;
+use std::mem::{align_of, size_of, ManuallyDrop};
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+
+/// Per-worker scratch buffers for the compressed executor: decompressed
+/// moment slices, grown once to the largest shard and reused across every
+/// task (and step) the worker runs.
+#[derive(Default)]
+pub struct StepScratch {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// A globally-normalized (rank-1 / per-tensor) quantized state scheduled
+/// for the phase-C re-encode, with its double-buffer index.
+#[derive(Clone, Copy, Debug)]
+pub struct GlobalSlot {
+    pub tensor: usize,
+    pub is_m: bool,
+    pub q: Quantizer,
+    pub buf: usize,
+}
+
+// ---------------------------------------------------------------------
+// Recycled Vec capacity.
+// ---------------------------------------------------------------------
+
+/// One free-list of raw buffers for a single element layout.
+struct LayoutPool {
+    size: usize,
+    align: usize,
+    /// (allocation, capacity in elements) of returned buffers.
+    bufs: Vec<(NonNull<u8>, usize)>,
+}
+
+/// Recycled `Vec` capacity for the per-step borrowed view vectors.
+///
+/// The vectors of `SharedSlice` views and per-tensor routes built each
+/// step borrow that step's params and states, so they cannot be cached
+/// in [`StepContext`] directly — but their *heap capacity* can.
+/// [`VecArena::lease`] hands out an empty `Vec<T>` backed by a recycled
+/// buffer of matching layout (size + align) when one is free; dropping
+/// the [`ArenaVec`] clears it and returns the capacity to the free list.
+/// After one warm-up step every lease is allocation-free.
+pub struct VecArena {
+    pools: RefCell<Vec<LayoutPool>>,
+}
+
+// SAFETY: the arena owns raw, unaliased heap buffers (no element ever
+// outlives a lease), so moving it between threads moves plain memory.
+// It is deliberately not `Sync`: leases are confined to the coordinating
+// thread that owns the optimizer.
+unsafe impl Send for VecArena {}
+
+impl Default for VecArena {
+    fn default() -> VecArena {
+        VecArena::new()
+    }
+}
+
+impl VecArena {
+    pub fn new() -> VecArena {
+        VecArena {
+            pools: RefCell::new(Vec::new()),
+        }
+    }
+
+    /// Lease an empty `Vec<T>`, reusing recycled capacity of the same
+    /// element layout when available. `T` may freely borrow step-local
+    /// data: only raw capacity is recycled, never elements.
+    pub fn lease<T>(&self) -> ArenaVec<'_, T> {
+        let (size, align) = (size_of::<T>(), align_of::<T>());
+        let vec = if size == 0 {
+            Vec::new()
+        } else {
+            let mut pools = self.pools.borrow_mut();
+            match pools.iter_mut().find(|p| p.size == size && p.align == align) {
+                Some(pool) => match pool.bufs.pop() {
+                    // SAFETY: the buffer came from a `Vec<U>` with U's
+                    // layout equal to T's (pool key), was left empty, and
+                    // has a unique owner (popped off the free list), so
+                    // rebuilding a Vec over it is the inverse of the
+                    // decomposition in `ArenaVec::drop`.
+                    Some((ptr, cap)) => unsafe {
+                        Vec::from_raw_parts(ptr.as_ptr() as *mut T, 0, cap)
+                    },
+                    None => Vec::new(),
+                },
+                None => {
+                    pools.push(LayoutPool {
+                        size,
+                        align,
+                        bufs: Vec::new(),
+                    });
+                    Vec::new()
+                }
+            }
+        };
+        ArenaVec {
+            vec: ManuallyDrop::new(vec),
+            arena: self,
+        }
+    }
+}
+
+impl Drop for VecArena {
+    fn drop(&mut self) {
+        let pools = self.pools.get_mut();
+        for pool in pools.iter_mut() {
+            for (ptr, cap) in pool.bufs.drain(..) {
+                // SAFETY: each stashed buffer was allocated by a Vec with
+                // array layout (size * cap, align) and has not been freed
+                // (the free list is its sole owner).
+                unsafe {
+                    std::alloc::dealloc(
+                        ptr.as_ptr(),
+                        Layout::from_size_align_unchecked(pool.size * cap, pool.align),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// A leased `Vec<T>` whose capacity returns to the [`VecArena`] on drop.
+pub struct ArenaVec<'a, T> {
+    vec: ManuallyDrop<Vec<T>>,
+    arena: &'a VecArena,
+}
+
+impl<T> ArenaVec<'_, T> {
+    /// Plain slice view — what task closures capture. Unlike the lease
+    /// itself (which holds the arena's `RefCell`), a `&[T]` is `Sync`
+    /// whenever `T` is, so it can cross into the worker pool.
+    pub fn as_slice(&self) -> &[T] {
+        &self.vec
+    }
+}
+
+impl<T> Deref for ArenaVec<'_, T> {
+    type Target = Vec<T>;
+    fn deref(&self) -> &Vec<T> {
+        &self.vec
+    }
+}
+
+impl<T> DerefMut for ArenaVec<'_, T> {
+    fn deref_mut(&mut self) -> &mut Vec<T> {
+        &mut self.vec
+    }
+}
+
+impl<T> Drop for ArenaVec<'_, T> {
+    fn drop(&mut self) {
+        // Drop the elements now — they may borrow step-local data — and
+        // keep only the raw capacity.
+        self.vec.clear();
+        let cap = self.vec.capacity();
+        if size_of::<T>() == 0 || cap == 0 {
+            // Nothing on the heap; let the (empty) Vec fall away.
+            // SAFETY: dropped exactly once, here.
+            unsafe { ManuallyDrop::drop(&mut self.vec) };
+            return;
+        }
+        let ptr = self.vec.as_mut_ptr() as *mut u8;
+        // SAFETY: a Vec's data pointer is non-null once capacity > 0.
+        let ptr = unsafe { NonNull::new_unchecked(ptr) };
+        let (size, align) = (size_of::<T>(), align_of::<T>());
+        let mut pools = self.arena.pools.borrow_mut();
+        let pool = pools
+            .iter_mut()
+            .find(|p| p.size == size && p.align == align)
+            .expect("lease registered this layout");
+        pool.bufs.push((ptr, cap));
+        // The Vec's buffer now belongs to the pool: forget the Vec (the
+        // ManuallyDrop is simply not dropped) so it is not freed twice.
+    }
+}
+
+// ---------------------------------------------------------------------
+// The cached step context.
+// ---------------------------------------------------------------------
+
+/// Cached per-optimizer step state: the tensor metadata, the shard plan,
+/// and every reusable buffer the executors need, so a steady-state
+/// `step()` is construction- and allocation-free. One context per
+/// optimizer; executors take `&mut StepContext` alongside the engine.
+///
+/// The cache key is (per-tensor layout spec, shard size): [`Self::ensure`]
+/// revalidates it each step without allocating and rebuilds on any
+/// change. [`Self::invalidate`] forces the next step to rebuild — the
+/// optimizer builder setters (`with_threads` / `with_shard_elems`) call
+/// it so a reconfigured optimizer never steps on a stale plan.
+pub struct StepContext {
+    /// Shard size the cached plan was built with.
+    shard_elems: usize,
+    /// False until the first build and after `invalidate`.
+    valid: bool,
+    /// Bumped on every rebuild (observable for tests / diagnostics).
+    generation: u64,
+    pub(super) metas: Vec<TensorMeta>,
+    pub(super) plan: Plan,
+    /// f32 stat-slot buffers (`plan.slot_lens`), zeroed by `begin_step`.
+    pub(super) slots: Vec<Vec<f32>>,
+    /// f64 auxiliary slots (same slot-id space as `slots`), sized by the
+    /// executor on rebuild; zeroed by `begin_step`. Used by the dense
+    /// Adafactor executor for compensated column/RMS partials.
+    pub(super) aux: Vec<Vec<f64>>,
+    /// Per-worker scratch for the compressed executor, grown to the
+    /// resolved worker count.
+    pub(super) scratch: Vec<StepScratch>,
+    /// f32 reduction scratch, sized to the largest stat slot.
+    pub(super) red: Vec<f32>,
+    /// f64 reduction scratch, sized by the executor on rebuild.
+    pub(super) red64: Vec<f64>,
+    /// Per-tensor update-clip factors (dense Adafactor), length n.
+    pub(super) invs: Vec<Option<f32>>,
+    /// Globally-normalized quantized states (compressed executor).
+    pub(super) globals: Vec<GlobalSlot>,
+    /// Double-buffered packed code arenas, one per entry in `globals`:
+    /// phase C encodes into these, and the commit *swaps* them with the
+    /// state's packed buffer instead of reallocating.
+    pub(super) new_bufs: Vec<Vec<u8>>,
+    /// Reduced scales per buffer; the commit swaps them with the state's
+    /// scales so the previous step's `Scales` storage is recycled.
+    pub(super) new_scales: Vec<Option<Scales>>,
+    /// Tensor index -> buffer index (or `usize::MAX`) for m / v.
+    pub(super) m_buf_of: Vec<usize>,
+    pub(super) v_buf_of: Vec<usize>,
+    /// Recycled capacity for the per-step borrowed view vectors.
+    pub(super) arena: VecArena,
+}
+
+impl Default for StepContext {
+    fn default() -> StepContext {
+        StepContext::new()
+    }
+}
+
+impl StepContext {
+    pub fn new() -> StepContext {
+        StepContext {
+            shard_elems: 0,
+            valid: false,
+            generation: 0,
+            metas: Vec::new(),
+            plan: Plan::default(),
+            slots: Vec::new(),
+            aux: Vec::new(),
+            scratch: Vec::new(),
+            red: Vec::new(),
+            red64: Vec::new(),
+            invs: Vec::new(),
+            globals: Vec::new(),
+            new_bufs: Vec::new(),
+            new_scales: Vec::new(),
+            m_buf_of: Vec::new(),
+            v_buf_of: Vec::new(),
+            arena: VecArena::new(),
+        }
+    }
+
+    /// Force the next `ensure` to rebuild (called by the optimizer
+    /// builder setters and the cold-step benchmarks).
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+    }
+
+    /// Rebuild count — bumped once per (re)build, so tests can pin both
+    /// "steady state reuses the cache" and "layout changes rebuild it".
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Validate the cached plan/metas against the live layout and
+    /// rebuild them if anything changed. Returns `true` when a rebuild
+    /// happened, so executors can re-derive their own cached extras
+    /// (`aux`, `globals`, ...). On the steady-state path this performs
+    /// no allocation: each tensor's spec is compared in place.
+    pub fn ensure<'s>(
+        &mut self,
+        shard_elems: usize,
+        n: usize,
+        spec: impl Fn(usize) -> MetaSpec<'s>,
+    ) -> bool {
+        if self.valid
+            && self.shard_elems == shard_elems
+            && self.metas.len() == n
+            && (0..n).all(|i| self.metas[i].matches(&spec(i)))
+        {
+            return false;
+        }
+        self.metas.clear();
+        self.metas.extend((0..n).map(|i| spec(i).to_meta()));
+        self.plan = build_plan(&self.metas, shard_elems);
+        self.slots = self
+            .plan
+            .slot_lens
+            .iter()
+            .map(|&l| vec![0.0f32; l])
+            .collect();
+        self.red = vec![0.0f32; self.plan.slot_lens.iter().copied().max().unwrap_or(0)];
+        // Executor-owned extras are cleared; whoever needs them re-sizes
+        // them while handling the `true` return.
+        self.aux.clear();
+        self.red64.clear();
+        self.invs.clear();
+        self.invs.resize(n, None);
+        self.globals.clear();
+        self.new_bufs.clear();
+        self.new_scales.clear();
+        self.m_buf_of.clear();
+        self.v_buf_of.clear();
+        self.shard_elems = shard_elems;
+        self.valid = true;
+        self.generation += 1;
+        true
+    }
+
+    /// Zero the per-step accumulation buffers (stat slots and f64 aux
+    /// slots). Allocation-free.
+    pub fn begin_step(&mut self) {
+        for s in &mut self.slots {
+            s.fill(0.0);
+        }
+        for a in &mut self.aux {
+            a.fill(0.0);
+        }
+    }
+
+    /// Grow the per-worker scratch pool to `workers` entries.
+    pub(super) fn ensure_scratch(&mut self, workers: usize) {
+        let want = workers.max(1);
+        if self.scratch.len() < want {
+            self.scratch.resize_with(want, StepScratch::default);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::plan::StateLayout;
+
+    fn spec_of(shapes: &[Vec<usize>]) -> impl Fn(usize) -> MetaSpec<'_> {
+        move |i| MetaSpec::elementwise(shapes[i].iter().product(), &shapes[i])
+    }
+
+    #[test]
+    fn ensure_caches_until_layout_changes() {
+        let shapes_a = vec![vec![8usize, 16], vec![100usize]];
+        let shapes_b = vec![vec![8usize, 16], vec![101usize]];
+        let mut ctx = StepContext::new();
+        assert!(ctx.ensure(64, 2, spec_of(&shapes_a)), "first build");
+        let g1 = ctx.generation();
+        assert!(!ctx.ensure(64, 2, spec_of(&shapes_a)), "steady state");
+        assert_eq!(ctx.generation(), g1);
+        assert!(ctx.ensure(32, 2, spec_of(&shapes_a)), "shard size change");
+        assert!(ctx.ensure(32, 2, spec_of(&shapes_b)), "shape change");
+        assert!(ctx.ensure(32, 1, spec_of(&shapes_b)), "tensor count change");
+        ctx.invalidate();
+        assert!(ctx.ensure(32, 1, spec_of(&shapes_b)), "explicit invalidate");
+    }
+
+    #[test]
+    fn ensure_detects_layout_not_just_shape() {
+        let shape = vec![256usize, 2];
+        let mut ctx = StepContext::new();
+        let f32_spec = |_: usize| MetaSpec::elementwise(512, &shape);
+        let global_spec = |_: usize| MetaSpec {
+            numel: 512,
+            shape: &shape,
+            m: StateLayout::F32,
+            v: StateLayout::Global,
+            m_stat_len: 0,
+            v_stat_len: 258,
+        };
+        assert!(ctx.ensure(64, 1, f32_spec));
+        assert!(ctx.ensure(64, 1, global_spec), "state layout change");
+        assert!(!ctx.ensure(64, 1, global_spec));
+        // The rebuilt plan carries the global state's slots.
+        assert!(!ctx.plan.slot_lens.is_empty());
+        assert_eq!(ctx.slots.len(), ctx.plan.slot_lens.len());
+        assert_eq!(ctx.red.len(), 258);
+    }
+
+    #[test]
+    fn arena_recycles_capacity_across_leases() {
+        let arena = VecArena::new();
+        {
+            let mut v = arena.lease::<u64>();
+            v.extend(0..100u64);
+            assert_eq!(v.len(), 100);
+        }
+        {
+            let v = arena.lease::<u64>();
+            assert!(v.capacity() >= 100, "capacity recycled, got {}", v.capacity());
+            assert!(v.is_empty());
+        }
+        // Same layout, different type: i64 shares u64's free list.
+        {
+            let v = arena.lease::<i64>();
+            assert!(v.capacity() >= 100, "layout-equal type reuses capacity");
+        }
+    }
+
+    #[test]
+    fn arena_handles_simultaneous_leases_and_drop_types() {
+        let arena = VecArena::new();
+        let mut a = arena.lease::<String>();
+        let mut b = arena.lease::<String>();
+        a.push("left".to_string());
+        b.push("right".to_string());
+        assert_eq!(a[0], "left");
+        drop(a);
+        drop(b);
+        // Both buffers returned; two fresh leases reuse them.
+        let c = arena.lease::<String>();
+        let d = arena.lease::<String>();
+        assert!(c.capacity() >= 1 && d.capacity() >= 1);
+        // Zero-sized elements never hit the pool.
+        let mut z = arena.lease::<()>();
+        z.push(());
+        drop(z);
+    }
+
+    #[test]
+    fn arena_leases_can_borrow_locals() {
+        let arena = VecArena::new();
+        let data = vec![1u32, 2, 3];
+        {
+            let mut v = arena.lease::<&u32>();
+            v.extend(data.iter());
+            assert_eq!(*v[2], 3);
+        }
+        assert_eq!(data[0], 1);
+    }
+}

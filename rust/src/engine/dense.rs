@@ -13,6 +13,10 @@
 //!   per-shard stream rule is trivially satisfied;
 //! * all cross-shard statistics reduce sequentially in shard order.
 //!
+//! Every executor takes a cached [`StepContext`]: the metadata, plan and
+//! stat slots are built once and revalidated allocation-free per step
+//! (see `ctx.rs`), so the steady-state step is construction-free.
+//!
 //! Exactness notes, relied on by `rust/tests/engine_parity.rs`:
 //!
 //! * **AdamW / SGDM** are purely elementwise — the sharded update is
@@ -20,53 +24,36 @@
 //!   and any shard size.
 //! * **SM3**'s cross-shard statistic is a max-reduction, which is exact
 //!   under any grouping — also bit-identical to the sequential loop.
-//! * **Adafactor** reduces float *sums* (factored row/col statistics and
-//!   the update-RMS for clipping). Summation order is fixed by the plan,
-//!   not the thread count, so results are bit-identical across thread
-//!   counts; versus the sequential reference they are bit-identical
-//!   exactly when each tensor fits in one shard (one partial per sum)
-//!   and agree to float-rounding otherwise.
+//! * **Adafactor** reduces float *sums* (factored column statistics and
+//!   the update-RMS for clipping; row sums are shard-local because
+//!   shards are row-aligned). Both this executor and the sequential
+//!   reference ([`crate::optim::factor::FactoredSecond::update`],
+//!   `Adafactor`'s RMS loop) accumulate them with compensated
+//!   Kahan–Babuška–Neumaier f64 summation, each shard carrying a
+//!   `(sum, comp)` partial merged in shard order. Single-shard tensors
+//!   reproduce the sequential element-order sum *exactly* (the merge of
+//!   one `(sum, comp)` pair is the identity up to correct rounding);
+//!   multi-shard groupings agree with it to the last f64 rounding of a
+//!   compensated sum — second-order in the f64 epsilon, far below the
+//!   f32 state granularity — so the parity suite checks bitwise
+//!   equality at every shard size.
 
-use super::plan::{build_plan, StateLayout, TensorMeta};
+use super::ctx::StepContext;
+use super::plan::{MetaSpec, StateLayout};
 use super::shared::SharedSlice;
 use super::StepEngine;
 use crate::optim::adafactor::Second;
 use crate::optim::sm3::Accum;
 use crate::optim::{Hyper, Param};
 use crate::tensor::Tensor;
-
-fn elementwise_metas(params: &[Param]) -> Vec<TensorMeta> {
-    params
-        .iter()
-        .map(|p| TensorMeta {
-            numel: p.tensor.numel(),
-            shape: p.tensor.shape.clone(),
-            m: StateLayout::F32,
-            v: StateLayout::F32,
-            m_stat_len: 0,
-            v_stat_len: 0,
-        })
-        .collect()
-}
-
-fn weight_views(params: &mut [Param]) -> Vec<SharedSlice<'_, f32>> {
-    params
-        .iter_mut()
-        .map(|p| SharedSlice::new(p.tensor.data.as_mut_slice()))
-        .collect()
-}
-
-fn tensor_views(ts: &mut [Tensor]) -> Vec<SharedSlice<'_, f32>> {
-    ts.iter_mut()
-        .map(|t| SharedSlice::new(t.data.as_mut_slice()))
-        .collect()
-}
+use crate::util::stats::neumaier_add;
 
 /// One fp32 AdamW step on the shard plan. Mirrors
 /// [`crate::optim::adamw::adamw_update_tensor`] exactly per element.
 #[allow(clippy::too_many_arguments)]
 pub fn adamw32_step(
     eng: &StepEngine,
+    ctx: &mut StepContext,
     hp: &Hyper,
     t: usize,
     lr: f32,
@@ -79,11 +66,17 @@ pub fn adamw32_step(
     debug_assert_eq!(grads.len(), n);
     debug_assert_eq!(m.len(), n);
     debug_assert_eq!(v.len(), n);
-    let metas = elementwise_metas(params);
-    let plan = build_plan(&metas, eng.shard_elems());
-    if plan.tasks.is_empty() {
+    {
+        let params_ref: &[Param] = &*params;
+        ctx.ensure(eng.shard_elems(), n, |i| {
+            MetaSpec::elementwise(params_ref[i].tensor.numel(), &params_ref[i].tensor.shape)
+        });
+    }
+    if ctx.plan.tasks.is_empty() {
         return;
     }
+    let plan = &ctx.plan;
+    let arena = &ctx.arena;
     let threads = eng.resolve_threads(plan.tasks.len(), plan.total_elems);
     let b1 = hp.beta1;
     let b2 = hp.beta2;
@@ -92,11 +85,14 @@ pub fn adamw32_step(
     let eps = hp.eps;
     let wd = hp.weight_decay;
 
-    let ws = weight_views(params);
-    let ms = tensor_views(m);
-    let vs = tensor_views(v);
-    let (ws, ms, vs) = (&ws, &ms, &vs);
-    let plan_ref = &plan;
+    let mut ws = arena.lease();
+    ws.extend(params.iter_mut().map(|p| SharedSlice::new(p.tensor.data.as_mut_slice())));
+    let mut ms = arena.lease();
+    ms.extend(m.iter_mut().map(|t| SharedSlice::new(t.data.as_mut_slice())));
+    let mut vs = arena.lease();
+    vs.extend(v.iter_mut().map(|t| SharedSlice::new(t.data.as_mut_slice())));
+    let (ws, ms, vs) = (ws.as_slice(), ms.as_slice(), vs.as_slice());
+    let plan_ref = plan;
     eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
         for piece in &plan_ref.tasks[ti].pieces {
             let (lo, hi) = (piece.lo, piece.hi);
@@ -125,6 +121,7 @@ pub fn adamw32_step(
 /// [`crate::optim::sgdm::Sgdm`] exactly per element.
 pub fn sgdm_step(
     eng: &StepEngine,
+    ctx: &mut StepContext,
     hp: &Hyper,
     lr: f32,
     params: &mut [Param],
@@ -134,22 +131,27 @@ pub fn sgdm_step(
     let n = params.len();
     debug_assert_eq!(grads.len(), n);
     debug_assert_eq!(m.len(), n);
-    let metas = elementwise_metas(params);
-    let plan = build_plan(&metas, eng.shard_elems());
-    if plan.tasks.is_empty() {
+    {
+        let params_ref: &[Param] = &*params;
+        ctx.ensure(eng.shard_elems(), n, |i| {
+            MetaSpec::elementwise(params_ref[i].tensor.numel(), &params_ref[i].tensor.shape)
+        });
+    }
+    if ctx.plan.tasks.is_empty() {
         return;
     }
+    let plan = &ctx.plan;
+    let arena = &ctx.arena;
     let threads = eng.resolve_threads(plan.tasks.len(), plan.total_elems);
     let beta = hp.beta1;
     let wd = hp.weight_decay;
 
-    let ws = weight_views(params);
-    let ms: Vec<SharedSlice<f32>> = m
-        .iter_mut()
-        .map(|t| SharedSlice::new(t.data.as_mut_slice()))
-        .collect();
-    let (ws, ms) = (&ws, &ms);
-    let plan_ref = &plan;
+    let mut ws = arena.lease();
+    ws.extend(params.iter_mut().map(|p| SharedSlice::new(p.tensor.data.as_mut_slice())));
+    let mut ms = arena.lease();
+    ms.extend(m.iter_mut().map(|t| SharedSlice::new(t.data.as_mut_slice())));
+    let (ws, ms) = (ws.as_slice(), ms.as_slice());
+    let plan_ref = plan;
     eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
         for piece in &plan_ref.tasks[ti].pieces {
             let (lo, hi) = (piece.lo, piece.hi);
@@ -187,6 +189,7 @@ enum Sm3Route<'a> {
 #[allow(clippy::too_many_arguments)]
 pub fn sm3_step(
     eng: &StepEngine,
+    ctx: &mut StepContext,
     hp: &Hyper,
     lr: f32,
     params: &mut [Param],
@@ -198,68 +201,62 @@ pub fn sm3_step(
     debug_assert_eq!(grads.len(), n);
     debug_assert_eq!(acc.len(), n);
     debug_assert_eq!(m.len(), n);
-    let metas: Vec<TensorMeta> = (0..n)
-        .map(|i| {
-            let shape = params[i].tensor.shape.clone();
-            let numel = params[i].tensor.numel();
-            match &acc[i] {
+    {
+        let params_ref: &[Param] = &*params;
+        let acc_ref: &[Accum] = &*acc;
+        ctx.ensure(eng.shard_elems(), n, |i| {
+            let p = &params_ref[i].tensor;
+            match &acc_ref[i] {
                 // Factored layout buys exactly what the cover needs: row
                 // (slab) aligned shards + one rows+cols stat slot per piece.
-                Accum::Cover { rows, cols, .. } => TensorMeta {
-                    numel,
-                    shape,
+                Accum::Cover { rows, cols, .. } => MetaSpec {
+                    numel: p.numel(),
+                    shape: &p.shape,
                     m: StateLayout::F32,
                     v: StateLayout::Factored,
                     m_stat_len: 0,
                     v_stat_len: rows + cols,
                 },
-                Accum::Dense(_) => TensorMeta {
-                    numel,
-                    shape,
-                    m: StateLayout::F32,
-                    v: StateLayout::F32,
-                    m_stat_len: 0,
-                    v_stat_len: 0,
-                },
+                Accum::Dense(_) => MetaSpec::elementwise(p.numel(), &p.shape),
             }
-        })
-        .collect();
-    let plan = build_plan(&metas, eng.shard_elems());
-    if plan.tasks.is_empty() {
+        });
+    }
+    if ctx.plan.tasks.is_empty() {
         return;
     }
+    ctx.begin_step();
+    let plan = &ctx.plan;
+    let arena = &ctx.arena;
     let threads = eng.resolve_threads(plan.tasks.len(), plan.total_elems);
     let b1 = hp.beta1;
     let eps = hp.eps;
     let wd = hp.weight_decay;
-    let mut slots: Vec<Vec<f32>> = plan.slot_lens.iter().map(|&l| vec![0.0f32; l]).collect();
 
     {
-        let routes: Vec<Sm3Route> = acc
-            .iter_mut()
-            .map(|a| match a {
-                Accum::Cover {
-                    rows,
-                    cols,
-                    mu_row,
-                    mu_col,
-                } => Sm3Route::Cover {
-                    rows: *rows,
-                    cols: *cols,
-                    mu_row: mu_row.as_slice(),
-                    mu_col: mu_col.as_slice(),
-                },
-                Accum::Dense(t) => Sm3Route::Dense(SharedSlice::new(t.data.as_mut_slice())),
-            })
-            .collect();
-        let ws = weight_views(params);
-        let ms = tensor_views(m);
-        let slot_views: Vec<SharedSlice<f32>> = slots
-            .iter_mut()
-            .map(|s| SharedSlice::new(s.as_mut_slice()))
-            .collect();
-        let (routes, ws, ms, slot_views) = (&routes, &ws, &ms, &slot_views);
-        let plan_ref = &plan;
+        let mut routes = arena.lease();
+        routes.extend(acc.iter_mut().map(|a| match a {
+            Accum::Cover {
+                rows,
+                cols,
+                mu_row,
+                mu_col,
+            } => Sm3Route::Cover {
+                rows: *rows,
+                cols: *cols,
+                mu_row: mu_row.as_slice(),
+                mu_col: mu_col.as_slice(),
+            },
+            Accum::Dense(t) => Sm3Route::Dense(SharedSlice::new(t.data.as_mut_slice())),
+        }));
+        let mut ws = arena.lease();
+        ws.extend(params.iter_mut().map(|p| SharedSlice::new(p.tensor.data.as_mut_slice())));
+        let mut ms = arena.lease();
+        ms.extend(m.iter_mut().map(|t| SharedSlice::new(t.data.as_mut_slice())));
+        let mut slot_views = arena.lease();
+        slot_views.extend(ctx.slots.iter_mut().map(|s| SharedSlice::new(s.as_mut_slice())));
+        let (routes, ws, ms) = (routes.as_slice(), ws.as_slice(), ms.as_slice());
+        let slot_views = slot_views.as_slice();
+        let plan_ref = plan;
         eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
             for piece in &plan_ref.tasks[ti].pieces {
                 let (lo, hi) = (piece.lo, piece.hi);
@@ -314,7 +311,9 @@ pub fn sm3_step(
         });
     }
 
-    // Sequential max-reduce in shard order: fresh cover accumulators.
+    // Sequential max-reduce in shard order into the context's reduction
+    // scratch, then committed in place: fresh cover accumulators.
+    let red = &mut ctx.red;
     for i in 0..n {
         if let Accum::Cover {
             rows,
@@ -324,25 +323,21 @@ pub fn sm3_step(
         } = &mut acc[i]
         {
             let rows = *rows;
-            let mut new_row = vec![0.0f32; mu_row.len()];
-            let mut new_col = vec![0.0f32; mu_col.len()];
+            let cols = mu_col.len();
+            let maxes = &mut red[..rows + cols];
+            maxes.fill(0.0);
             for task in &plan.tasks {
                 for p in task.pieces.iter().filter(|p| p.tensor == i) {
-                    let s = &slots[p.v_slot.expect("cover slot")];
-                    for (a, b) in new_row.iter_mut().zip(&s[..rows]) {
-                        if *b > *a {
-                            *a = *b;
-                        }
-                    }
-                    for (a, b) in new_col.iter_mut().zip(&s[rows..]) {
+                    let s = &ctx.slots[p.v_slot.expect("cover slot")];
+                    for (a, b) in maxes.iter_mut().zip(s.iter()) {
                         if *b > *a {
                             *a = *b;
                         }
                     }
                 }
             }
-            *mu_row = new_row;
-            *mu_col = new_col;
+            mu_row.copy_from_slice(&maxes[..rows]);
+            mu_col.copy_from_slice(&maxes[rows..]);
         }
     }
 }
@@ -361,17 +356,21 @@ enum AfRoute<'a> {
 
 /// One Adafactor step on the shard plan, as three phases:
 ///
-/// * **F** (factored tensors): per-shard row/col partial sums of
-///   `g² + eps2`, reduced in shard order into the factored EMA.
+/// * **F** (factored tensors): per-shard row sums of `g² + eps2` into
+///   f32 stat slots (rows are shard-local) and compensated per-column
+///   `(sum, comp)` f64 partials into the context's aux slots, reduced
+///   in shard order into the factored EMA.
 /// * **U**: per shard — update dense accumulators, form the
 ///   preconditioned update `u = g / (sqrt(v̂) + eps)` and accumulate the
-///   per-shard `Σu²` partial (f64, matching [`Tensor::rms`]).
+///   per-shard `Σu²` partial as a compensated f64 pair (matching the
+///   sequential reference's compensated RMS).
 /// * **W**: after the RMS reduce fixes the per-tensor clip factor,
 ///   re-derive `u` (bit-identical — same inputs, same expression), clip,
 ///   apply optional momentum and write the weights.
 #[allow(clippy::too_many_arguments)]
 pub fn adafactor_step(
     eng: &StepEngine,
+    ctx: &mut StepContext,
     hp: &Hyper,
     t: usize,
     lr: f32,
@@ -392,65 +391,90 @@ pub fn adafactor_step(
     let eps = hp.eps;
     let wd = hp.weight_decay;
 
-    let metas: Vec<TensorMeta> = (0..n)
-        .map(|i| {
-            let shape = params[i].tensor.shape.clone();
-            let numel = params[i].tensor.numel();
+    let rebuilt = {
+        let params_ref: &[Param] = &*params;
+        let v_ref: &[Second] = &*v;
+        ctx.ensure(eng.shard_elems(), n, |i| {
+            let p = &params_ref[i].tensor;
             // `m: Global` is planner shorthand for "one stat slot per
-            // piece" — it carries the f64 Σu² partial for the RMS clip.
-            match &v[i] {
-                Second::Factored(f) => TensorMeta {
-                    numel,
-                    shape,
+            // piece" — its aux pair carries the Σu² partial for the RMS
+            // clip (the f32 slot itself is zero-length).
+            match &v_ref[i] {
+                Second::Factored(f) => MetaSpec {
+                    numel: p.numel(),
+                    shape: &p.shape,
                     m: StateLayout::Global,
                     v: StateLayout::Factored,
-                    m_stat_len: 1,
-                    v_stat_len: f.rows() + f.cols(),
+                    m_stat_len: 0,
+                    v_stat_len: f.rows(),
                 },
-                Second::Dense(_) => TensorMeta {
-                    numel,
-                    shape,
+                Second::Dense(_) => MetaSpec {
+                    numel: p.numel(),
+                    shape: &p.shape,
                     m: StateLayout::Global,
                     v: StateLayout::F32,
-                    m_stat_len: 1,
+                    m_stat_len: 0,
                     v_stat_len: 0,
                 },
             }
         })
-        .collect();
-    let plan = build_plan(&metas, eng.shard_elems());
-    if plan.tasks.is_empty() {
+    };
+    if rebuilt {
+        // Size the f64 aux slots: a compensated (sum, comp) pair per
+        // piece for the RMS partial, and per-column pair vectors for
+        // factored tensors.
+        let mut lens = vec![0usize; ctx.plan.slot_lens.len()];
+        let mut max_cols2 = 0usize;
+        for task in &ctx.plan.tasks {
+            for p in &task.pieces {
+                if let Some(s) = p.m_slot {
+                    lens[s] = 2;
+                }
+                if let Some(s) = p.v_slot {
+                    let meta = &ctx.metas[p.tensor];
+                    if meta.v == StateLayout::Factored {
+                        let cols = meta.numel / meta.shape[0];
+                        lens[s] = 2 * cols;
+                        max_cols2 = max_cols2.max(2 * cols);
+                    }
+                }
+            }
+        }
+        ctx.aux = lens.iter().map(|&l| vec![0.0f64; l]).collect();
+        ctx.red64 = vec![0.0f64; max_cols2];
+    }
+    if ctx.plan.tasks.is_empty() {
         return;
     }
-    let threads = eng.resolve_threads(plan.tasks.len(), plan.total_elems);
-    let mut slots: Vec<Vec<f32>> = plan.slot_lens.iter().map(|&l| vec![0.0f32; l]).collect();
-    // Σu² partials, one per piece, indexed by `m_slot` (f64 to mirror
-    // the sequential `Tensor::rms` accumulation exactly).
-    let mut rms_partials: Vec<f64> = vec![0.0; plan.slot_lens.len()];
+    ctx.begin_step();
+    let threads = eng.resolve_threads(ctx.plan.tasks.len(), ctx.plan.total_elems);
 
     // ---------------- Phase F: factored statistics -------------------
-    if metas.iter().any(|mt| mt.v == StateLayout::Factored) {
+    if ctx.metas.iter().any(|mt| mt.v == StateLayout::Factored) {
         {
-            let slot_views: Vec<SharedSlice<f32>> = slots
-                .iter_mut()
-                .map(|s| SharedSlice::new(s.as_mut_slice()))
-                .collect();
-            let slot_views = &slot_views;
-            let plan_ref = &plan;
-            let metas_ref = &metas;
+            let plan = &ctx.plan;
+            let metas = &ctx.metas;
+            let arena = &ctx.arena;
+            let mut slot_views = arena.lease();
+            slot_views.extend(ctx.slots.iter_mut().map(|s| SharedSlice::new(s.as_mut_slice())));
+            let mut aux_views = arena.lease();
+            aux_views.extend(ctx.aux.iter_mut().map(|a| SharedSlice::new(a.as_mut_slice())));
+            let slot_views = slot_views.as_slice();
+            let aux_views = aux_views.as_slice();
             eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
-                for piece in &plan_ref.tasks[ti].pieces {
-                    let meta = &metas_ref[piece.tensor];
+                for piece in &plan.tasks[ti].pieces {
+                    let meta = &metas[piece.tensor];
                     if meta.v != StateLayout::Factored {
                         continue;
                     }
                     let rows_total = meta.shape[0];
                     let cols = meta.numel / rows_total;
                     let slot_id = piece.v_slot.expect("factored piece has a stat slot");
-                    // SAFETY: one stat slot per piece (plan invariant).
-                    let slot =
-                        unsafe { slot_views[slot_id].range_mut(0, plan_ref.slot_lens[slot_id]) };
-                    let (rsum, csum) = slot.split_at_mut(rows_total);
+                    // SAFETY: each piece owns its stat + aux slots
+                    // exclusively (plan assigns one slot per piece).
+                    let rsum = unsafe { slot_views[slot_id].range_mut(0, rows_total) };
+                    let aux = unsafe { aux_views[slot_id].range_mut(0, 2 * cols) };
+                    let (cs, cc) = aux.split_at_mut(cols);
                     let g = &grads[piece.tensor].data[piece.lo..piece.hi];
                     let row0 = piece.lo / cols;
                     for (ri, grow) in g.chunks(cols).enumerate() {
@@ -458,15 +482,20 @@ pub fn adafactor_step(
                         for (j, &gv) in grow.iter().enumerate() {
                             let sq = gv * gv + eps2;
                             acc += sq;
-                            csum[j] += sq;
+                            neumaier_add(&mut cs[j], &mut cc[j], sq as f64);
                         }
                         rsum[row0 + ri] = acc;
                     }
                 }
             });
         }
-        // Sequential reduce in shard order + EMA (mirrors
-        // FactoredSecond::update).
+        // Sequential reduce in shard order + EMA (matches
+        // FactoredSecond::update bit-for-bit when a tensor is a single
+        // shard; see the module docs for the multi-shard contract).
+        let plan = &ctx.plan;
+        let metas = &ctx.metas;
+        let red = &mut ctx.red;
+        let red64 = &mut ctx.red64;
         for i in 0..n {
             if metas[i].v != StateLayout::Factored {
                 continue;
@@ -477,16 +506,22 @@ pub fn adafactor_step(
             };
             let rows = f.rows();
             let cols = f.cols();
-            let mut rsum = vec![0.0f32; rows];
-            let mut csum = vec![0.0f32; cols];
+            let rsum = &mut red[..rows];
+            rsum.fill(0.0);
+            let (cs, cc) = red64[..2 * cols].split_at_mut(cols);
+            cs.fill(0.0);
+            cc.fill(0.0);
             for task in &plan.tasks {
                 for p in task.pieces.iter().filter(|p| p.tensor == i) {
-                    let s = &slots[p.v_slot.expect("factored slot")];
-                    for (a, b) in rsum.iter_mut().zip(&s[..rows]) {
+                    let slot = p.v_slot.expect("factored slot");
+                    let s = &ctx.slots[slot];
+                    for (a, b) in rsum.iter_mut().zip(s.iter()) {
                         *a += *b;
                     }
-                    for (a, b) in csum.iter_mut().zip(&s[rows..]) {
-                        *a += *b;
+                    let aux = &ctx.aux[slot];
+                    for j in 0..cols {
+                        neumaier_add(&mut cs[j], &mut cc[j], aux[j]);
+                        neumaier_add(&mut cs[j], &mut cc[j], aux[cols + j]);
                     }
                 }
             }
@@ -494,56 +529,60 @@ pub fn adafactor_step(
                 *r = beta2 * *r + (1.0 - beta2) * (rsum[ri] / cols as f32);
             }
             for (cj, c) in f.col.iter_mut().enumerate() {
-                *c = beta2 * *c + (1.0 - beta2) * (csum[cj] / rows as f32);
+                let total = cs[cj] + cc[cj];
+                *c = beta2 * *c + (1.0 - beta2) * ((total / rows as f64) as f32);
             }
         }
     }
-    let rowmeans: Vec<f32> = v
-        .iter()
-        .map(|s| match s {
-            Second::Factored(f) => f.row_mean(),
-            Second::Dense(_) => 0.0,
-        })
-        .collect();
 
     {
-        let ws = weight_views(params);
-        let ms: Vec<Option<SharedSlice<f32>>> = m
-            .iter_mut()
-            .map(|o| o.as_mut().map(|t| SharedSlice::new(t.data.as_mut_slice())))
-            .collect();
-        let routes: Vec<AfRoute> = v
-            .iter_mut()
-            .enumerate()
-            .map(|(i, s)| match s {
-                Second::Factored(f) => AfRoute::Factored {
+        let plan = &ctx.plan;
+        let metas = &ctx.metas;
+        let arena = &ctx.arena;
+        let mut ws = arena.lease();
+        ws.extend(params.iter_mut().map(|p| SharedSlice::new(p.tensor.data.as_mut_slice())));
+        let mut ms = arena.lease();
+        ms.extend(
+            m.iter_mut()
+                .map(|o| o.as_mut().map(|t| SharedSlice::new(t.data.as_mut_slice()))),
+        );
+        let mut routes = arena.lease();
+        routes.extend(v.iter_mut().map(|s| match s {
+            Second::Factored(f) => {
+                // Phase F has already applied the EMA: this is the
+                // post-update row mean, as the update formula needs.
+                let row_mean = f.row_mean();
+                AfRoute::Factored {
                     cols: f.cols(),
-                    row_mean: rowmeans[i],
+                    row_mean,
                     f: &*f,
-                },
-                Second::Dense(t) => AfRoute::Dense(SharedSlice::new(t.data.as_mut_slice())),
-            })
-            .collect();
-        let (ws, ms, routes) = (&ws, &ms, &routes);
-        let plan_ref = &plan;
+                }
+            }
+            Second::Dense(t) => AfRoute::Dense(SharedSlice::new(t.data.as_mut_slice())),
+        }));
+        let ws = ws.as_slice();
+        let ms = ms.as_slice();
+        let routes = routes.as_slice();
+        let plan_ref = plan;
 
         // ------------- Phase U: update v, accumulate Σu² -------------
         {
-            let rms_view = SharedSlice::new(rms_partials.as_mut_slice());
-            let rms_view = &rms_view;
+            let mut aux_views = arena.lease();
+            aux_views.extend(ctx.aux.iter_mut().map(|a| SharedSlice::new(a.as_mut_slice())));
+            let aux_views = aux_views.as_slice();
             eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
                 for piece in &plan_ref.tasks[ti].pieces {
                     let (lo, hi) = (piece.lo, piece.hi);
                     let g = &grads[piece.tensor].data[lo..hi];
                     let slot_id = piece.m_slot.expect("adafactor piece has an rms slot");
-                    let mut partial = 0.0f64;
+                    let (mut ps, mut pc) = (0.0f64, 0.0f64);
                     match &routes[piece.tensor] {
                         AfRoute::Factored { f, row_mean, cols } => {
                             for (k, &gv) in g.iter().enumerate() {
                                 let idx = lo + k;
                                 let vhat = f.reconstruct_at(idx / cols, idx % cols, *row_mean);
                                 let u = gv / (vhat.sqrt() + eps);
-                                partial += (u as f64) * (u as f64);
+                                neumaier_add(&mut ps, &mut pc, (u as f64) * (u as f64));
                             }
                         }
                         AfRoute::Dense(vv) => {
@@ -553,36 +592,42 @@ pub fn adafactor_step(
                                 let vi = beta2 * vs[k] + (1.0 - beta2) * (gv * gv + eps2);
                                 vs[k] = vi;
                                 let u = gv / (vi.sqrt() + eps);
-                                partial += (u as f64) * (u as f64);
+                                neumaier_add(&mut ps, &mut pc, (u as f64) * (u as f64));
                             }
                         }
                     }
-                    // SAFETY: one rms slot per piece (plan invariant).
-                    unsafe { rms_view.range_mut(slot_id, slot_id + 1) }[0] = partial;
+                    // SAFETY: one aux slot per piece (plan invariant).
+                    let out = unsafe { aux_views[slot_id].range_mut(0, 2) };
+                    out[0] = ps;
+                    out[1] = pc;
                 }
             });
         }
 
         // ------- Reduce: per-tensor RMS → clip factor (Alg. 4) -------
-        let mut invs: Vec<Option<f32>> = vec![None; n];
+        let invs = &mut ctx.invs;
+        invs.fill(None);
         for (i, inv) in invs.iter_mut().enumerate() {
             let numel = metas[i].numel;
             if numel == 0 {
                 continue;
             }
-            let mut total = 0.0f64;
+            let (mut s, mut c) = (0.0f64, 0.0f64);
             for task in &plan.tasks {
                 for p in task.pieces.iter().filter(|p| p.tensor == i) {
-                    total += rms_partials[p.m_slot.expect("rms slot")];
+                    let aux = &ctx.aux[p.m_slot.expect("rms slot")];
+                    neumaier_add(&mut s, &mut c, aux[0]);
+                    neumaier_add(&mut s, &mut c, aux[1]);
                 }
             }
+            let total = s + c;
             let rms = (total / numel as f64).sqrt() as f32;
             let denom = (rms / clip_threshold).max(1.0);
             if denom > 1.0 {
                 *inv = Some(1.0 / denom);
             }
         }
-        let invs = &invs;
+        let invs: &[Option<f32>] = invs;
 
         // ---------- Phase W: clip, momentum, weight update -----------
         eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
@@ -681,7 +726,10 @@ mod tests {
         }
         // Small shards + multiple workers: a genuinely parallel schedule.
         let eng = StepEngine::new().with_threads(3).with_shard_elems(64);
-        adamw32_step(&eng, &hp, 3, 1e-2, &mut p_eng, &grads, &mut m_eng, &mut v_eng);
+        let mut ctx = StepContext::new();
+        adamw32_step(
+            &eng, &mut ctx, &hp, 3, 1e-2, &mut p_eng, &grads, &mut m_eng, &mut v_eng,
+        );
 
         for i in 0..shapes.len() {
             assert_eq!(p_ref[i].tensor.data, p_eng[i].tensor.data, "w[{i}]");

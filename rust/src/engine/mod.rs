@@ -60,6 +60,25 @@
 //! [`StepEngine::run_tasks`], so all of them share the pool and the
 //! determinism contract above.
 //!
+//! # Plan and context lifecycle
+//!
+//! Planning is expensive relative to a small step, so it is **cached**,
+//! not repeated: each optimizer owns a [`ctx::StepContext`] holding the
+//! `TensorMeta`s, the shard [`plan::Plan`], the stat-slot buffers and
+//! every reusable scratch/re-encode arena. On each step the executor
+//! calls [`StepContext::ensure`], which revalidates the cache against the
+//! live layout (an allocation-free per-tensor comparison) and rebuilds
+//! only when the param set, a state layout, or the shard size actually
+//! changed; the optimizer builder setters (`with_threads` /
+//! `with_shard_elems`) additionally invalidate it outright. Both the
+//! compressed and the dense executors derive their metadata through the
+//! same [`plan::MetaSpec`] path, so there is exactly one meta/plan
+//! construction route in the engine. A warmed-up step is therefore
+//! construction-free and (at one thread) allocation-free — pinned by the
+//! counting-allocator test in `rust/tests/ctx_cache.rs`. Caching never
+//! affects results: a rebuilt context replays the identical pure plan,
+//! so warm and cold steps are bit-identical.
+//!
 //! # Pool lifecycle
 //!
 //! Worker threads are **persistent**, not spawned per phase: the first
@@ -68,18 +87,27 @@
 //! reuses it (the pool is grown — recreated larger — if a step ever
 //! resolves to more workers). The pool is shared by clones of the engine
 //! and is shut down (workers joined) when the owning optimizer drops.
-//! Call sites keep the borrow-friendly scoped API: `run_tasks` blocks
-//! until the phase has drained, so task closures may borrow the step's
-//! plan and tensor views exactly as they could with scoped spawns.
+//! Call sites keep the borrow-friendly scoped API: `run_tasks` /
+//! `run_tasks_with` block until the phase has drained, so task closures
+//! may borrow the step's plan and tensor views exactly as they could
+//! with scoped spawns.
+//!
+//! The auto-thread override `LOWBIT_ENGINE_THREADS` is read **once per
+//! process** (cached in a `OnceLock`) and consulted on the hot path from
+//! that cache; `ci.sh`'s two-count test runs keep working by
+//! construction because each `cargo test` invocation is its own process
+//! with its own environment.
 
 pub mod adamw4;
+pub mod ctx;
 pub mod dense;
 pub mod plan;
 pub mod pool;
 pub mod shared;
 
 pub use adamw4::{compressed_step, StepParams};
-pub use plan::{build_plan, Plan, StateLayout, TensorMeta};
+pub use ctx::{ArenaVec, StepContext, StepScratch, VecArena};
+pub use plan::{build_plan, MetaSpec, Plan, StateLayout, TensorMeta};
 pub use shared::SharedSlice;
 
 use pool::WorkerPool;
@@ -239,22 +267,77 @@ impl StepEngine {
         };
         self.pool.ensure(threads).broadcast(threads, &body);
     }
+
+    /// [`Self::run_tasks`] with caller-owned per-worker scratch: worker
+    /// slot `w` exclusively uses `scratch[w]`, so the buffers persist
+    /// across phases and steps (the compressed executor keeps them in
+    /// its [`StepContext`], making the steady-state step allocation-
+    /// free). `scratch` must hold at least `threads` entries.
+    pub fn run_tasks_with<S, F>(&self, threads: usize, n_tasks: usize, scratch: &mut [S], f: F)
+    where
+        S: Send,
+        F: Fn(usize, &mut S) + Sync,
+    {
+        if n_tasks == 0 {
+            return;
+        }
+        if threads <= 1 {
+            let s = &mut scratch[0];
+            for i in 0..n_tasks {
+                f(i, &mut *s);
+            }
+            return;
+        }
+        assert!(
+            scratch.len() >= threads,
+            "scratch pool ({}) smaller than the worker count ({threads})",
+            scratch.len()
+        );
+        let next = AtomicUsize::new(0);
+        let next = &next;
+        let f = &f;
+        let scratch_view = SharedSlice::new(scratch);
+        let scratch_view = &scratch_view;
+        let body = move |slot: usize| {
+            // SAFETY: the pool hands each broadcast participant a
+            // distinct slot in 0..threads, so scratch entries have a
+            // single owner.
+            let slot_scratch = unsafe { scratch_view.range_mut(slot, slot + 1) };
+            let s = &mut slot_scratch[0];
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_tasks {
+                    break;
+                }
+                f(i, &mut *s);
+            }
+        };
+        self.pool.ensure(threads).broadcast(threads, &body);
+    }
 }
 
 /// Auto worker count: `LOWBIT_ENGINE_THREADS` when set (CI pins it to run
 /// the whole test suite at a fixed count — see `ci.sh`), else the
-/// machine's available parallelism. Only consulted for workloads above
-/// [`MIN_PARALLEL_ELEMS`]; explicit `with_threads` counts bypass it.
+/// machine's available parallelism. The override is read **once per
+/// process** and cached — re-reading the environment on every
+/// `resolve_threads` call put a syscall + allocation on the hot path.
+/// Per-process semantics are exactly what `ci.sh` needs: each of its two
+/// test runs is a separate process with its own environment. Only
+/// consulted for workloads above [`MIN_PARALLEL_ELEMS`]; explicit
+/// `with_threads` counts bypass it.
 fn auto_threads() -> usize {
-    std::env::var("LOWBIT_ENGINE_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
-        })
+    static AUTO: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *AUTO.get_or_init(|| {
+        std::env::var("LOWBIT_ENGINE_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+    })
 }
 
 /// Per-step seed mixing: derives the seed for step `t` from the
@@ -320,6 +403,28 @@ mod tests {
         }
         let workers = eng.pool.inner.lock().unwrap().as_ref().map(|p| p.workers());
         assert_eq!(workers, Some(4), "pool created once with 4 workers");
+    }
+
+    #[test]
+    fn run_tasks_with_gives_each_worker_its_own_scratch() {
+        // Every task bumps its worker's scratch counter; the per-slot
+        // totals must add up to the task count with no cross-talk, and
+        // the caller keeps the scratch (persistent across phases).
+        for threads in [1usize, 2, 5] {
+            let eng = StepEngine::new().with_threads(threads);
+            let mut scratch = vec![0usize; threads];
+            let hits: Vec<AtomicU64> = (0..83).map(|_| AtomicU64::new(0)).collect();
+            for _phase in 0..3 {
+                eng.run_tasks_with(threads, 83, &mut scratch, |i, s: &mut usize| {
+                    *s += 1;
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            assert_eq!(scratch.iter().sum::<usize>(), 3 * 83, "{threads} threads");
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 3, "task {i} at {threads} threads");
+            }
+        }
     }
 
     #[test]

@@ -51,8 +51,65 @@ pub struct TensorMeta {
     /// (0 unless `m` is `Global`).
     pub m_stat_len: usize,
     /// Length of the stat slot for the second moment (`Global`: scale
-    /// stats; `Factored`: rows + cols partial sums; else 0).
+    /// stats; `Factored`: executor-chosen partial-sum length; else 0).
     pub v_stat_len: usize,
+}
+
+/// A borrowed, allocation-free view of one tensor's planner layout —
+/// what an executor derives from its live params/states each step. This
+/// is the single meta-construction path shared by the compressed and
+/// dense executors: [`crate::engine::StepContext::ensure`] compares
+/// specs against its cached [`TensorMeta`]s to detect layout changes
+/// without allocating, and materializes them (shape cloned) only on a
+/// rebuild.
+#[derive(Clone, Copy, Debug)]
+pub struct MetaSpec<'a> {
+    pub numel: usize,
+    pub shape: &'a [usize],
+    pub m: StateLayout,
+    pub v: StateLayout,
+    pub m_stat_len: usize,
+    pub v_stat_len: usize,
+}
+
+impl<'a> MetaSpec<'a> {
+    /// Layout of a purely elementwise optimizer (dense f32 states, no
+    /// stat slots) — AdamW-32 and SGDM.
+    pub fn elementwise(numel: usize, shape: &'a [usize]) -> MetaSpec<'a> {
+        MetaSpec {
+            numel,
+            shape,
+            m: StateLayout::F32,
+            v: StateLayout::F32,
+            m_stat_len: 0,
+            v_stat_len: 0,
+        }
+    }
+
+    /// Materialize the borrowed spec into an owned cache entry.
+    pub fn to_meta(self) -> TensorMeta {
+        TensorMeta {
+            numel: self.numel,
+            shape: self.shape.to_vec(),
+            m: self.m,
+            v: self.v,
+            m_stat_len: self.m_stat_len,
+            v_stat_len: self.v_stat_len,
+        }
+    }
+}
+
+impl TensorMeta {
+    /// Allocation-free equality against a live layout spec (the cache
+    /// validity check on the steady-state step path).
+    pub fn matches(&self, s: &MetaSpec<'_>) -> bool {
+        self.numel == s.numel
+            && self.m == s.m
+            && self.v == s.v
+            && self.m_stat_len == s.m_stat_len
+            && self.v_stat_len == s.v_stat_len
+            && self.shape == s.shape
+    }
 }
 
 /// A contiguous element range of one tensor, owned by exactly one task.
@@ -302,6 +359,37 @@ mod tests {
                 assert_eq!((p.tensor, p.lo, p.hi), (q.tensor, q.lo, q.hi));
             }
         }
+    }
+
+    #[test]
+    fn meta_spec_roundtrip_and_match() {
+        let shape = vec![16usize, 8];
+        let spec = MetaSpec {
+            numel: 128,
+            shape: &shape,
+            m: StateLayout::Block(128),
+            v: StateLayout::Global,
+            m_stat_len: 0,
+            v_stat_len: 24,
+        };
+        let meta = spec.to_meta();
+        assert!(meta.matches(&spec), "roundtrip must match");
+        let other_shape = vec![8usize, 16];
+        assert!(!meta.matches(&MetaSpec {
+            shape: &other_shape,
+            ..spec
+        }));
+        assert!(!meta.matches(&MetaSpec {
+            v: StateLayout::F32,
+            ..spec
+        }));
+        assert!(!meta.matches(&MetaSpec {
+            v_stat_len: 25,
+            ..spec
+        }));
+        let ew = MetaSpec::elementwise(100, &shape[..1]);
+        assert_eq!(ew.m, StateLayout::F32);
+        assert_eq!(ew.v_stat_len, 0);
     }
 
     #[test]

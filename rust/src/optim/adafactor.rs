@@ -17,8 +17,9 @@
 
 use super::factor::FactoredSecond;
 use super::{Hyper, Optimizer, Param};
-use crate::engine::{dense, StepEngine};
+use crate::engine::{dense, StepContext, StepEngine};
 use crate::tensor::Tensor;
+use crate::util::stats::neumaier_add;
 
 /// Second-moment state for one parameter tensor (shared with the
 /// engine's dense executor).
@@ -40,6 +41,9 @@ pub struct Adafactor {
     /// Shard-parallel step engine; `None` keeps the sequential loop
     /// (the off-engine reference).
     engine: Option<StepEngine>,
+    /// Cached step context (plan + metadata + f64 aux slots), reused
+    /// across steps.
+    ctx: StepContext,
 }
 
 impl Adafactor {
@@ -53,6 +57,7 @@ impl Adafactor {
             clip_threshold: 1.0,
             eps2: 1e-30,
             engine: Some(StepEngine::new()),
+            ctx: StepContext::new(),
         }
     }
 
@@ -64,15 +69,19 @@ impl Adafactor {
         }
     }
 
-    /// Set the engine worker count (0 = auto).
+    /// Set the engine worker count (0 = auto). Invalidates the cached
+    /// step context.
     pub fn with_threads(mut self, threads: usize) -> Adafactor {
         self.engine = Some(self.engine.unwrap_or_default().with_threads(threads));
+        self.ctx.invalidate();
         self
     }
 
-    /// Set the engine shard size in elements.
+    /// Set the engine shard size in elements. Invalidates the cached
+    /// step context.
     pub fn with_shard_elems(mut self, shard_elems: usize) -> Adafactor {
         self.engine = Some(self.engine.unwrap_or_default().with_shard_elems(shard_elems));
+        self.ctx.invalidate();
         self
     }
 
@@ -119,6 +128,7 @@ impl Optimizer for Adafactor {
         if let Some(eng) = &self.engine {
             dense::adafactor_step(
                 eng,
+                &mut self.ctx,
                 &self.hp,
                 self.t,
                 lr,
@@ -155,8 +165,19 @@ impl Optimizer for Adafactor {
                     }
                 }
             }
-            // Update clipping: u /= max(1, RMS(u)/d).
-            let rms = u.rms() as f32;
+            // Update clipping: u /= max(1, RMS(u)/d), with the RMS sum
+            // accumulated compensated (Kahan-Babuska-Neumaier) in f64 --
+            // the exact summation the engine's per-shard partials merge
+            // back into, so on-engine and sequential stay bit-equal.
+            let (mut s, mut c) = (0.0f64, 0.0f64);
+            for &uv in &u.data {
+                neumaier_add(&mut s, &mut c, (uv as f64) * (uv as f64));
+            }
+            let rms = if u.data.is_empty() {
+                0.0f32
+            } else {
+                (((s + c) / u.data.len() as f64).sqrt()) as f32
+            };
             let denom = (rms / self.clip_threshold).max(1.0);
             if denom > 1.0 {
                 let inv = 1.0 / denom;
@@ -206,6 +227,10 @@ impl Optimizer for Adafactor {
 
     fn t(&self) -> usize {
         self.t
+    }
+
+    fn invalidate_step_cache(&mut self) {
+        self.ctx.invalidate();
     }
 }
 

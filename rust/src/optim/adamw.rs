@@ -10,7 +10,7 @@
 //! off-engine reference for the parity suite.
 
 use super::{Hyper, Optimizer, Param};
-use crate::engine::{dense, StepEngine};
+use crate::engine::{dense, StepContext, StepEngine};
 use crate::tensor::Tensor;
 
 /// In-place AdamW update of one parameter tensor given its decompressed
@@ -53,6 +53,8 @@ pub struct AdamW {
     /// Shard-parallel step engine; `None` keeps the sequential
     /// per-tensor loop (the off-engine reference).
     engine: Option<StepEngine>,
+    /// Cached step context (plan + metadata), reused across steps.
+    ctx: StepContext,
 }
 
 impl AdamW {
@@ -63,6 +65,7 @@ impl AdamW {
             m: Vec::new(),
             v: Vec::new(),
             engine: Some(StepEngine::new()),
+            ctx: StepContext::new(),
         }
     }
 
@@ -76,15 +79,19 @@ impl AdamW {
 
     /// Set the engine worker count (0 = auto). Purely a throughput knob:
     /// the elementwise update is bit-identical at every setting.
+    /// Invalidates the cached step context.
     pub fn with_threads(mut self, threads: usize) -> AdamW {
         self.engine = Some(self.engine.unwrap_or_default().with_threads(threads));
+        self.ctx.invalidate();
         self
     }
 
     /// Set the engine shard size in elements (tests use small values to
-    /// force multi-shard plans on small tensors).
+    /// force multi-shard plans on small tensors). Invalidates the cached
+    /// step context.
     pub fn with_shard_elems(mut self, shard_elems: usize) -> AdamW {
         self.engine = Some(self.engine.unwrap_or_default().with_shard_elems(shard_elems));
+        self.ctx.invalidate();
         self
     }
 
@@ -109,7 +116,15 @@ impl Optimizer for AdamW {
         self.t += 1;
         if let Some(eng) = &self.engine {
             dense::adamw32_step(
-                eng, &self.hp, self.t, lr, params, grads, &mut self.m, &mut self.v,
+                eng,
+                &mut self.ctx,
+                &self.hp,
+                self.t,
+                lr,
+                params,
+                grads,
+                &mut self.m,
+                &mut self.v,
             );
             return;
         }
@@ -140,6 +155,10 @@ impl Optimizer for AdamW {
 
     fn t(&self) -> usize {
         self.t
+    }
+
+    fn invalidate_step_cache(&mut self) {
+        self.ctx.invalidate();
     }
 }
 

@@ -7,6 +7,7 @@
 //! factorizable (callers quantize them instead).
 
 use crate::tensor::Tensor;
+use crate::util::stats::neumaier_add;
 
 /// Factored second-moment statistics for one ≥2-D tensor.
 #[derive(Clone, Debug)]
@@ -46,19 +47,27 @@ impl FactoredSecond {
     /// EMA update with the squared gradient:
     /// `R ← β2 R + (1-β2) rowmean(G²+eps)`, likewise for `C`
     /// (Adafactor Alg. 1; we use means so R and C share the scale of V).
+    ///
+    /// Column sums accumulate with compensated (Kahan–Babuška–Neumaier)
+    /// f64 summation. This is the sequential reference the shard-
+    /// parallel executor (`engine/dense.rs`) must reproduce: with
+    /// compensated partials merged in shard order the engine matches
+    /// this loop bit-for-bit at any shard size (row sums are plain f32 —
+    /// they never cross a shard boundary, so they match trivially).
     pub fn update(&mut self, g: &Tensor, beta2: f32, eps2: f32) {
         let rows = self.rows();
         let cols = self.cols();
         debug_assert_eq!(g.numel(), rows * cols);
         let mut rsum = vec![0.0f32; rows];
-        let mut csum = vec![0.0f32; cols];
+        let mut csum = vec![0.0f64; cols];
+        let mut ccomp = vec![0.0f64; cols];
         for i in 0..rows {
             let grow = &g.data[i * cols..(i + 1) * cols];
             let mut acc = 0.0f32;
             for (j, &gv) in grow.iter().enumerate() {
                 let sq = gv * gv + eps2;
                 acc += sq;
-                csum[j] += sq;
+                neumaier_add(&mut csum[j], &mut ccomp[j], sq as f64);
             }
             rsum[i] = acc;
         }
@@ -66,7 +75,8 @@ impl FactoredSecond {
             self.row[i] = beta2 * self.row[i] + (1.0 - beta2) * (rsum[i] / cols as f32);
         }
         for j in 0..cols {
-            self.col[j] = beta2 * self.col[j] + (1.0 - beta2) * (csum[j] / rows as f32);
+            let total = csum[j] + ccomp[j];
+            self.col[j] = beta2 * self.col[j] + (1.0 - beta2) * ((total / rows as f64) as f32);
         }
     }
 

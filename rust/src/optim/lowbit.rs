@@ -15,7 +15,7 @@
 use super::factor::FactoredSecond;
 use super::state::{MomentState, SecondState};
 use super::{Hyper, Optimizer, Param, ParamKind};
-use crate::engine::{compressed_step, StepEngine, StepParams};
+use crate::engine::{compressed_step, StepContext, StepEngine, StepParams};
 use crate::quant::{MapKind, NormKind, QuantMap, Quantizer};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
@@ -138,6 +138,10 @@ pub struct CompressedAdamW {
     /// from deterministic per-shard streams instead).
     rng: Pcg64,
     engine: StepEngine,
+    /// Cached step context: plan, metadata, stat slots and re-encode
+    /// arenas, reused across steps (rebuilt on layout change or builder
+    /// reconfiguration).
+    ctx: StepContext,
 }
 
 impl CompressedAdamW {
@@ -154,20 +158,25 @@ impl CompressedAdamW {
             seed: 0x10B1,
             rng: Pcg64::seeded(0x10B1),
             engine: StepEngine::new(),
+            ctx: StepContext::new(),
         }
     }
 
     /// Set the engine worker count (0 = auto). Results are bit-identical
-    /// at every setting; this is purely a throughput knob.
+    /// at every setting; this is purely a throughput knob. Invalidates
+    /// the cached step context.
     pub fn with_threads(mut self, threads: usize) -> CompressedAdamW {
         self.engine = self.engine.clone().with_threads(threads);
+        self.ctx.invalidate();
         self
     }
 
     /// Set the engine shard size in elements (tests use small values to
-    /// force multi-shard plans on small tensors).
+    /// force multi-shard plans on small tensors). Invalidates the cached
+    /// step context.
     pub fn with_shard_elems(mut self, shard_elems: usize) -> CompressedAdamW {
         self.engine = self.engine.clone().with_shard_elems(shard_elems);
+        self.ctx.invalidate();
         self
     }
 
@@ -265,6 +274,7 @@ impl Optimizer for CompressedAdamW {
         };
         compressed_step(
             &self.engine,
+            &mut self.ctx,
             &sp,
             params,
             grads,
@@ -294,6 +304,10 @@ impl Optimizer for CompressedAdamW {
 
     fn t(&self) -> usize {
         self.t
+    }
+
+    fn invalidate_step_cache(&mut self) {
+        self.ctx.invalidate();
     }
 }
 

@@ -79,6 +79,13 @@ pub trait Optimizer {
 
     /// Steps taken so far (for bias correction and schedules).
     fn t(&self) -> usize;
+
+    /// Drop any cached step context (plan, metadata, scratch arenas) so
+    /// the next step rebuilds it from scratch. Results are unaffected —
+    /// a rebuilt context replays the identical plan — so this exists for
+    /// cold-vs-warm benchmarking and cache tests. No-op for optimizers
+    /// without an engine-backed cache.
+    fn invalidate_step_cache(&mut self) {}
 }
 
 /// Construct an optimizer by preset name (the names used across the

@@ -13,7 +13,7 @@
 //! suite.
 
 use super::{Hyper, Optimizer, Param};
-use crate::engine::{dense, StepEngine};
+use crate::engine::{dense, StepContext, StepEngine};
 use crate::quant::{QuantMap, QuantizedTensor, Quantizer};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
@@ -33,6 +33,8 @@ pub struct Sgdm {
     /// Shard-parallel step engine for the dense-momentum variant; `None`
     /// keeps the sequential loop (the off-engine reference).
     engine: Option<StepEngine>,
+    /// Cached step context (plan + metadata), reused across steps.
+    ctx: StepContext,
 }
 
 impl Sgdm {
@@ -46,6 +48,7 @@ impl Sgdm {
             state: Vec::new(),
             rng: Pcg64::seeded(0x5D6D),
             engine: Some(StepEngine::new()),
+            ctx: StepContext::new(),
         }
     }
 
@@ -59,14 +62,18 @@ impl Sgdm {
 
     /// Set the engine worker count (0 = auto). Purely a throughput knob:
     /// the elementwise update is bit-identical at every setting.
+    /// Invalidates the cached step context.
     pub fn with_threads(mut self, threads: usize) -> Sgdm {
         self.engine = Some(self.engine.unwrap_or_default().with_threads(threads));
+        self.ctx.invalidate();
         self
     }
 
-    /// Set the engine shard size in elements.
+    /// Set the engine shard size in elements. Invalidates the cached
+    /// step context.
     pub fn with_shard_elems(mut self, shard_elems: usize) -> Sgdm {
         self.engine = Some(self.engine.unwrap_or_default().with_shard_elems(shard_elems));
+        self.ctx.invalidate();
         self
     }
 
@@ -105,7 +112,7 @@ impl Optimizer for Sgdm {
                         Momentum::Quant(_) => unreachable!("dense Sgdm holds full momentum"),
                     })
                     .collect();
-                dense::sgdm_step(eng, &self.hp, lr, params, grads, &mut ms);
+                dense::sgdm_step(eng, &mut self.ctx, &self.hp, lr, params, grads, &mut ms);
                 return;
             }
         }
@@ -150,6 +157,10 @@ impl Optimizer for Sgdm {
 
     fn t(&self) -> usize {
         self.t
+    }
+
+    fn invalidate_step_cache(&mut self) {
+        self.ctx.invalidate();
     }
 }
 

@@ -16,7 +16,7 @@
 //! plain loop as the off-engine reference.
 
 use super::{Hyper, Optimizer, Param};
-use crate::engine::{dense, StepEngine};
+use crate::engine::{dense, StepContext, StepEngine};
 use crate::tensor::Tensor;
 
 /// SM3 accumulator state for one parameter tensor (shared with the
@@ -41,6 +41,8 @@ pub struct Sm3 {
     /// Shard-parallel step engine; `None` keeps the sequential loop
     /// (the off-engine reference).
     engine: Option<StepEngine>,
+    /// Cached step context (plan + metadata), reused across steps.
+    ctx: StepContext,
 }
 
 impl Sm3 {
@@ -51,6 +53,7 @@ impl Sm3 {
             acc: Vec::new(),
             m: Vec::new(),
             engine: Some(StepEngine::new()),
+            ctx: StepContext::new(),
         }
     }
 
@@ -63,15 +66,19 @@ impl Sm3 {
     }
 
     /// Set the engine worker count (0 = auto). Purely a throughput knob:
-    /// results are bit-identical at every setting.
+    /// results are bit-identical at every setting. Invalidates the
+    /// cached step context.
     pub fn with_threads(mut self, threads: usize) -> Sm3 {
         self.engine = Some(self.engine.unwrap_or_default().with_threads(threads));
+        self.ctx.invalidate();
         self
     }
 
-    /// Set the engine shard size in elements.
+    /// Set the engine shard size in elements. Invalidates the cached
+    /// step context.
     pub fn with_shard_elems(mut self, shard_elems: usize) -> Sm3 {
         self.engine = Some(self.engine.unwrap_or_default().with_shard_elems(shard_elems));
+        self.ctx.invalidate();
         self
     }
 
@@ -118,7 +125,16 @@ impl Optimizer for Sm3 {
         self.lazy_init(params);
         self.t += 1;
         if let Some(eng) = &self.engine {
-            dense::sm3_step(eng, &self.hp, lr, params, grads, &mut self.acc, &mut self.m);
+            dense::sm3_step(
+                eng,
+                &mut self.ctx,
+                &self.hp,
+                lr,
+                params,
+                grads,
+                &mut self.acc,
+                &mut self.m,
+            );
             return;
         }
         let b1 = self.hp.beta1;
@@ -193,6 +209,10 @@ impl Optimizer for Sm3 {
 
     fn t(&self) -> usize {
         self.t
+    }
+
+    fn invalidate_step_cache(&mut self) {
+        self.ctx.invalidate();
     }
 }
 

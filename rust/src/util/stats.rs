@@ -204,9 +204,50 @@ pub fn fmt_bytes(b: u64) -> String {
     }
 }
 
+/// One step of Kahan–Babuška–Neumaier compensated summation:
+/// accumulate `x` into the running `(sum, comp)` pair. The final value
+/// is `sum + comp`. Unlike plain Kahan, the Neumaier branch keeps the
+/// exact rounding error of each addition regardless of which operand is
+/// larger, so the compensated total carries only second-order (O(u²))
+/// error. The engine uses it for Adafactor's column and RMS reductions:
+/// per-shard `(sum, comp)` partials merged in shard order agree with the
+/// element-order sequential sum exactly in the single-shard case and to
+/// the last f64 rounding everywhere else (see `engine/dense.rs`).
+#[inline]
+pub fn neumaier_add(sum: &mut f64, comp: &mut f64, x: f64) {
+    let t = *sum + x;
+    *comp += if sum.abs() >= x.abs() {
+        (*sum - t) + x
+    } else {
+        (x - t) + *sum
+    };
+    *sum = t;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn neumaier_recovers_cancelled_terms() {
+        // Naive summation of [1, 1e100, 1, -1e100] gives 0; the
+        // compensated total recovers the exact 2.
+        let (mut s, mut c) = (0.0f64, 0.0f64);
+        for x in [1.0, 1e100, 1.0, -1e100] {
+            neumaier_add(&mut s, &mut c, x);
+        }
+        assert_eq!(s + c, 2.0);
+        // Plain accumulation of many small positives drifts; the
+        // compensated sum stays exact while the total fits in ~2 f64s.
+        let (mut s, mut c) = (0.0f64, 0.0f64);
+        let naive: f64 = (0..1_000_000).map(|_| 0.1f64).sum();
+        for _ in 0..1_000_000 {
+            neumaier_add(&mut s, &mut c, 0.1);
+        }
+        let exact = 100_000.0f64;
+        assert!((s + c - exact).abs() < (naive - exact).abs());
+        assert!((s + c - exact).abs() < 1e-9);
+    }
 
     #[test]
     fn summary_mean_std() {

@@ -1,0 +1,291 @@
+//! Step-context cache tests: correctness of cache reuse/invalidation and
+//! the zero-allocation guarantee of the steady-state step.
+//!
+//! * Warm vs cold: an optimizer whose context is invalidated before
+//!   every step (cold) must produce bit-identical results to one that
+//!   reuses its cache (warm) — caching is a pure optimization.
+//! * Rebuild on layout change: driving an executor through one context
+//!   with two different models must rebuild the plan (generation bump)
+//!   and produce the same bits as a fresh context.
+//! * Allocation-free steady state: after warm-up, `step()` performs
+//!   **zero** heap allocations for both `adamw32` and `adamw4` at one
+//!   thread — the plan, metadata, stat slots, scratch and re-encode
+//!   arenas are all cached, and the per-step view vectors recycle their
+//!   capacity through the context's `VecArena`.
+//!
+//! A counting global allocator tallies every allocation in the process,
+//! so the tests serialize on one mutex: only the measuring test may run
+//! while a measurement is in flight. All optimizers here run with
+//! explicit `threads = 1` (the sequential schedule of the same plan) so
+//! no pool workers allocate concurrently.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use lowbit_opt::engine::{dense, StepContext, StepEngine};
+use lowbit_opt::optim::adamw::AdamW;
+use lowbit_opt::optim::lowbit::{CompressedAdamW, QuantPolicy};
+use lowbit_opt::optim::{Hyper, Optimizer, Param, ParamKind};
+use lowbit_opt::tensor::Tensor;
+use lowbit_opt::util::rng::Pcg64;
+
+/// Counts every allocation (alloc, alloc_zeroed, realloc) in the
+/// process; frees are not counted — the tests pin "no new allocations",
+/// which is the cost that scales with plan size.
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(p, l, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Serializes the tests in this binary so allocation counts are
+/// attributable to exactly one test body.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+const SHARD: usize = 1 << 12;
+const STEPS: usize = 4;
+
+/// 1-D and 2-D tensors, several shards each at `SHARD`, plus a tiny
+/// coalesced bias.
+fn model() -> (Vec<Param>, Vec<Tensor>) {
+    let mut rng = Pcg64::seeded(91);
+    let params = vec![
+        Param::new("w2d", ParamKind::Weight, Tensor::randn(&[96, 128], 0.5, &mut rng)),
+        Param::new("w1d", ParamKind::Weight, Tensor::randn(&[9000], 0.5, &mut rng)),
+        Param::new("bias", ParamKind::Bias, Tensor::randn(&[64], 0.5, &mut rng)),
+    ];
+    let mut grng = Pcg64::seeded(17);
+    let grads = params
+        .iter()
+        .map(|p| Tensor::randn(&p.tensor.shape, 0.1, &mut grng))
+        .collect();
+    (params, grads)
+}
+
+fn quantize_everything(mut policy: QuantPolicy) -> QuantPolicy {
+    policy.min_quant_size = 0;
+    policy
+}
+
+// ---------------------------------------------------------------------
+// (a) Warm vs cold caches are bit-identical.
+// ---------------------------------------------------------------------
+
+#[test]
+fn warm_and_cold_caches_step_bit_identically_adamw32() {
+    let _g = LOCK.lock().unwrap();
+    let hp = Hyper::default();
+    let (mut p_warm, grads) = model();
+    let (mut p_cold, _) = model();
+
+    let mut warm = AdamW::new(hp).with_threads(1).with_shard_elems(SHARD);
+    let mut cold = AdamW::new(hp).with_threads(1).with_shard_elems(SHARD);
+    for _ in 0..STEPS {
+        warm.step(&mut p_warm, &grads, 1e-2);
+        // Invalidate before every cold step: the context is rebuilt from
+        // scratch each time and must replay the identical plan.
+        cold.invalidate_step_cache();
+        cold.step(&mut p_cold, &grads, 1e-2);
+    }
+    for (a, b) in p_warm.iter().zip(p_cold.iter()) {
+        assert_eq!(a.tensor.data, b.tensor.data, "warm vs cold diverged: {}", a.name);
+    }
+    let (ma, va) = warm.moments(0).expect("moments");
+    let (mb, vb) = cold.moments(0).expect("moments");
+    assert_eq!(ma.data, mb.data);
+    assert_eq!(va.data, vb.data);
+}
+
+#[test]
+fn warm_and_cold_caches_step_bit_identically_adamw4() {
+    let _g = LOCK.lock().unwrap();
+    let hp = Hyper::default();
+    let policy = quantize_everything(QuantPolicy::bit4());
+    let (mut p_warm, grads) = model();
+    let (mut p_cold, _) = model();
+
+    let mut warm = CompressedAdamW::new(hp, policy)
+        .with_threads(1)
+        .with_shard_elems(SHARD);
+    let mut cold = CompressedAdamW::new(hp, policy)
+        .with_threads(1)
+        .with_shard_elems(SHARD);
+    for _ in 0..STEPS {
+        warm.step(&mut p_warm, &grads, 1e-2);
+        cold.invalidate_step_cache();
+        cold.step(&mut p_cold, &grads, 1e-2);
+    }
+    for (a, b) in p_warm.iter().zip(p_cold.iter()) {
+        assert_eq!(a.tensor.data, b.tensor.data, "warm vs cold diverged: {}", a.name);
+    }
+    assert_eq!(warm.state_bytes(), cold.state_bytes());
+    for i in 0..p_warm.len() {
+        let (ma, va) = warm.moments(i).expect("moments");
+        let (mb, vb) = cold.moments(i).expect("moments");
+        assert_eq!(ma.data, mb.data, "m[{i}]");
+        assert_eq!(va.data, vb.data, "v[{i}]");
+    }
+}
+
+// ---------------------------------------------------------------------
+// (b) Layout changes rebuild instead of stepping on a stale plan.
+// ---------------------------------------------------------------------
+
+fn dense_states(shapes: &[Vec<usize>]) -> (Vec<Param>, Vec<Tensor>, Vec<Tensor>, Vec<Tensor>) {
+    let mut rng = Pcg64::seeded(5);
+    let params: Vec<Param> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| Param::new(&format!("p{i}"), ParamKind::Weight, Tensor::randn(s, 0.5, &mut rng)))
+        .collect();
+    let grads = shapes.iter().map(|s| Tensor::randn(s, 0.1, &mut rng)).collect();
+    let m = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+    let v = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+    (params, grads, m, v)
+}
+
+#[test]
+fn shape_and_shard_changes_rebuild_the_context() {
+    let _g = LOCK.lock().unwrap();
+    let hp = Hyper::default();
+    let eng = StepEngine::new().with_threads(1).with_shard_elems(256);
+
+    let shapes_a: Vec<Vec<usize>> = vec![vec![12, 48], vec![700]];
+    let shapes_b: Vec<Vec<usize>> = vec![vec![12, 48], vec![700], vec![33, 8]];
+
+    // One long-lived context driven across two different models.
+    let mut ctx = StepContext::new();
+    assert_eq!(ctx.generation(), 0);
+    let (mut pa, ga, mut ma, mut va) = dense_states(&shapes_a);
+    dense::adamw32_step(&eng, &mut ctx, &hp, 1, 1e-2, &mut pa, &ga, &mut ma, &mut va);
+    assert_eq!(ctx.generation(), 1, "first step builds the cache");
+    dense::adamw32_step(&eng, &mut ctx, &hp, 2, 1e-2, &mut pa, &ga, &mut ma, &mut va);
+    assert_eq!(ctx.generation(), 1, "steady state reuses the cache");
+
+    // Different tensor count/shapes through the same context: must
+    // rebuild, and match a fresh-context run bit-for-bit.
+    let (mut pb, gb, mut mb, mut vb) = dense_states(&shapes_b);
+    dense::adamw32_step(&eng, &mut ctx, &hp, 1, 1e-2, &mut pb, &gb, &mut mb, &mut vb);
+    assert_eq!(ctx.generation(), 2, "layout change rebuilds");
+
+    let mut fresh = StepContext::new();
+    let (mut pf, gf, mut mf, mut vf) = dense_states(&shapes_b);
+    dense::adamw32_step(&eng, &mut fresh, &hp, 1, 1e-2, &mut pf, &gf, &mut mf, &mut vf);
+    for (a, b) in pb.iter().zip(pf.iter()) {
+        assert_eq!(a.tensor.data, b.tensor.data, "stale-plan corruption on {}", a.name);
+    }
+    for (a, b) in mb.iter().zip(mf.iter()).chain(vb.iter().zip(vf.iter())) {
+        assert_eq!(a.data, b.data);
+    }
+
+    // A different shard size through the same context also rebuilds;
+    // the elementwise update is exact under any sharding, so results
+    // stay identical.
+    let eng_small = StepEngine::new().with_threads(1).with_shard_elems(128);
+    let (mut pc, gc, mut mc, mut vc) = dense_states(&shapes_b);
+    dense::adamw32_step(&eng_small, &mut ctx, &hp, 1, 1e-2, &mut pc, &gc, &mut mc, &mut vc);
+    assert_eq!(ctx.generation(), 3, "shard-size change rebuilds");
+    for (a, b) in pc.iter().zip(pf.iter()) {
+        assert_eq!(a.tensor.data, b.tensor.data, "shard-size dependence on {}", a.name);
+    }
+}
+
+// ---------------------------------------------------------------------
+// (c) The steady-state step allocates nothing.
+// ---------------------------------------------------------------------
+
+#[test]
+fn steady_state_adamw32_step_is_allocation_free() {
+    let _g = LOCK.lock().unwrap();
+    let hp = Hyper::default();
+    let (mut params, grads) = model();
+    let mut opt = AdamW::new(hp).with_threads(1).with_shard_elems(SHARD);
+    // Warm up: lazy state init, context build, arena capacity growth.
+    for _ in 0..3 {
+        opt.step(&mut params, &grads, 1e-3);
+    }
+    let before = allocs();
+    for _ in 0..5 {
+        opt.step(&mut params, &grads, 1e-3);
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "adamw32 steady-state step allocated {} times over 5 steps",
+        after - before
+    );
+}
+
+#[test]
+fn steady_state_adamw4_step_is_allocation_free() {
+    let _g = LOCK.lock().unwrap();
+    let hp = Hyper::default();
+    // bit4 exercises every cached route at once: block-quantized m,
+    // rank-1 global v (phase C re-encode + scales recycling) on 2-D
+    // tensors, block-quantized 1-D v, and the fp32 small-tensor path.
+    let policy = QuantPolicy::bit4();
+    let (mut params, grads) = model();
+    let mut opt = CompressedAdamW::new(hp, policy)
+        .with_threads(1)
+        .with_shard_elems(SHARD);
+    for _ in 0..3 {
+        opt.step(&mut params, &grads, 1e-3);
+    }
+    let before = allocs();
+    for _ in 0..5 {
+        opt.step(&mut params, &grads, 1e-3);
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "adamw4 steady-state step allocated {} times over 5 steps",
+        after - before
+    );
+}
+
+#[test]
+fn invalidation_spends_allocations_only_on_the_cold_step() {
+    let _g = LOCK.lock().unwrap();
+    let hp = Hyper::default();
+    let (mut params, grads) = model();
+    let mut opt = AdamW::new(hp).with_threads(1).with_shard_elems(SHARD);
+    for _ in 0..3 {
+        opt.step(&mut params, &grads, 1e-3);
+    }
+    // A cold step after invalidation rebuilds (allocates)...
+    opt.invalidate_step_cache();
+    let before_cold = allocs();
+    opt.step(&mut params, &grads, 1e-3);
+    let cold_allocs = allocs() - before_cold;
+    assert!(cold_allocs > 0, "cold step must rebuild the context");
+    // ...and the very next step is allocation-free again.
+    let before_warm = allocs();
+    opt.step(&mut params, &grads, 1e-3);
+    assert_eq!(allocs() - before_warm, 0, "re-warmed step allocated");
+}

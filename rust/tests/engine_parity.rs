@@ -12,9 +12,12 @@
 //!   count (elementwise updates and max-reductions are exact under any
 //!   sharding).
 //! * Adafactor must be bit-identical across thread counts (its float-sum
-//!   reductions associate per shard, fixed by the plan), bit-identical
-//!   to the sequential reference when every tensor is a single shard,
-//!   and within float rounding of it otherwise.
+//!   reductions associate per shard, fixed by the plan) and bit-identical
+//!   to the sequential reference at every shard size: both sides
+//!   accumulate the column/RMS sums with compensated
+//!   (Kahan-Babuska-Neumaier) f64 summation, whose per-shard partials
+//!   merge back to the element-order sum (exactly for single-shard
+//!   tensors, to far below f32 granularity for multi-shard ones).
 //!
 //! Shard size is forced down to 512 elements so even these small test
 //! tensors split into many shards (the 2-D weight into ~5, the 1-D
@@ -367,27 +370,32 @@ fn adafactor_single_shard_matches_sequential_reference_bitwise() {
 }
 
 #[test]
-fn adafactor_multi_shard_tracks_sequential_reference() {
-    // Multi-shard plans regroup the row/col and RMS float sums, so the
-    // engine is not bit-equal to the sequential loop — but it must stay
-    // within tight float-rounding distance of it.
-    let hp = Hyper::default();
-    let reference = run_dense(Adafactor::sequential(hp, true), mixed_params, adafactor_state);
-    let engine = run_dense(
-        Adafactor::new(hp, true)
-            .with_threads(4)
-            .with_shard_elems(SHARD_ELEMS),
-        mixed_params,
-        adafactor_state,
-    );
-    for (i, (wr, we)) in reference.weights.iter().zip(engine.weights.iter()).enumerate() {
-        for (k, (a, b)) in wr.iter().zip(we.iter()).enumerate() {
-            let tol = 1e-5f32.max(a.abs() * 1e-4);
-            assert!(
-                (a - b).abs() <= tol,
-                "adafactor tensor {i} elem {k}: sequential {a} vs engine {b}"
-            );
-        }
+fn adafactor_multi_shard_matches_sequential_reference_bitwise() {
+    // Multi-shard plans regroup the column and RMS sums per shard, but
+    // both the engine and the sequential reference accumulate them with
+    // compensated (Kahan-Babuska-Neumaier) f64 summation: the shard-
+    // order merge of compensated partials reproduces the element-order
+    // sum to second order in the f64 epsilon, far below the f32 state
+    // granularity — so the weights and states must match bit-for-bit
+    // (row sums are shard-local and match trivially).
+    for momentum in [true, false] {
+        let hp = Hyper::default();
+        let reference = run_dense(
+            Adafactor::sequential(hp, momentum),
+            mixed_params,
+            adafactor_state,
+        );
+        let engine = run_dense(
+            Adafactor::new(hp, momentum)
+                .with_threads(4)
+                .with_shard_elems(SHARD_ELEMS),
+            mixed_params,
+            adafactor_state,
+        );
+        assert_eq!(
+            reference, engine,
+            "adafactor(momentum={momentum}) multi-shard engine != sequential"
+        );
     }
 }
 
