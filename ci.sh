@@ -8,9 +8,10 @@
 # engine path (dense + compressed) is exercised at a second worker count
 # on top of the explicit 1/2/7 parity matrix.
 #
-# BENCH_engine.json is *appended to*, one run object per CI invocation
-# (dense + compressed thread scaling), so perf regressions stay visible
-# across PRs.
+# BENCH_engine.json and BENCH_offload.json are *appended to*, one run
+# object per CI invocation (dense + compressed thread scaling; offload
+# pipeline threads × prefetch depth with measured overlap fraction and
+# virtual step time), so perf regressions stay visible across PRs.
 #
 # Usage: ./ci.sh
 set -euo pipefail
@@ -36,5 +37,8 @@ cargo bench --bench quant_throughput -- --smoke
 
 echo "== bench smoke: optim_step (appends to BENCH_engine.json)"
 cargo bench --bench optim_step -- --smoke --json BENCH_engine.json
+
+echo "== bench smoke: offload_pipeline (appends to BENCH_offload.json)"
+cargo bench --bench offload_pipeline -- --smoke --json BENCH_offload.json
 
 echo "CI OK"

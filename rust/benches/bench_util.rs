@@ -6,7 +6,35 @@
 //! and a minimum iteration count are reached; report mean / p50 / p95 per
 //! iteration and derived throughput.
 
+use lowbit_opt::util::json::Json;
 use std::time::Instant;
+
+/// Append one run object to a JSON file holding an array of runs — the
+/// shared convention of the BENCH_*.json perf trajectories: a legacy
+/// single-object file is wrapped into an array, and an unparseable file
+/// (e.g. truncated by a killed bench run) is preserved under
+/// `<path>.bak` before starting a fresh array.
+///
+/// (`allow(dead_code)`: each bench binary compiles its own copy of this
+/// module, and only the JSON-emitting benches call this.)
+#[allow(dead_code)]
+pub fn append_bench_run(path: &str, run: Json) {
+    let mut runs = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Arr(v)) => v,
+            Ok(obj @ Json::Obj(_)) => vec![obj],
+            _ => {
+                let bak = format!("{path}.bak");
+                eprintln!("warning: {path} is not valid JSON; saving it to {bak}");
+                let _ = std::fs::rename(path, &bak);
+                Vec::new()
+            }
+        },
+        Err(_) => Vec::new(),
+    };
+    runs.push(run);
+    lowbit_opt::util::write_file(path, &Json::Arr(runs).pretty()).expect("write bench json");
+}
 
 pub struct BenchResult {
     pub name: String,

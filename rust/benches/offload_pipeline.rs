@@ -1,0 +1,164 @@
+//! Bench: the executable offload pipeline on a ≥16M-parameter synthetic
+//! model — wall time of the staged schedule (real memcpy + compute on
+//! the worker pool) next to the *virtual* step time and overlap fraction
+//! the ThrottledLink accounts, across threads 1/2/4/8 × prefetch depth
+//! 1/2/4 for the adamw32 and adamw4 presets.
+//!
+//! Flags:
+//!   --smoke        short measurement windows (CI)
+//!   --json PATH    append the run to PATH (BENCH_offload.json keeps one
+//!                  entry per CI run, so the offload perf trajectory
+//!                  stays visible across PRs)
+
+mod bench_util;
+
+use bench_util::{append_bench_run, bench, section};
+use lowbit_opt::offload::{LinkModel, OffloadConfig, OffloadReport};
+use lowbit_opt::optim::adamw::AdamW;
+use lowbit_opt::optim::lowbit::{CompressedAdamW, QuantPolicy};
+use lowbit_opt::optim::{Hyper, Optimizer, Param, ParamKind};
+use lowbit_opt::tensor::Tensor;
+use lowbit_opt::util::json::Json;
+use lowbit_opt::util::rng::Pcg64;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let min_secs = if smoke { 0.2 } else { 0.75 };
+
+    let shapes: Vec<Vec<usize>> = vec![vec![2048, 2048]; 4]
+        .into_iter()
+        .chain(std::iter::once(vec![8192]))
+        .collect();
+    let n: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+    let mut grng = Pcg64::seeded(11);
+    let grads: Vec<Tensor> = shapes
+        .iter()
+        .map(|s| Tensor::randn(s, 0.01, &mut grng))
+        .collect();
+    let compute = 4.0 * n as f64 / 6.9e9;
+    let link = LinkModel::pcie_offload(compute);
+    println!(
+        "synthetic model: {n} params ({} tensors); PCIe profile, modeled compute {:.2} ms/step",
+        shapes.len(),
+        compute * 1e3
+    );
+
+    let presets = ["adamw32", "adamw4"];
+    let thread_cases = [1usize, 2, 4, 8];
+    let depth_cases = [1usize, 2, 4];
+    // (preset, threads, depth, wall mean ns, report)
+    let mut results: Vec<(&str, usize, usize, f64, OffloadReport)> = Vec::new();
+
+    section("offload pipeline: wall time + virtual step time (threads x depth)");
+    for preset in presets {
+        for &threads in &thread_cases {
+            for &depth in &depth_cases {
+                let mut prng = Pcg64::seeded(13);
+                let mut params: Vec<Param> = shapes
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| {
+                        Param::new(
+                            &format!("p{i}"),
+                            ParamKind::Weight,
+                            Tensor::randn(s, 0.1, &mut prng),
+                        )
+                    })
+                    .collect();
+                let hp = Hyper::default();
+                let ocfg = OffloadConfig::new(link, depth);
+                let label = format!("{preset} t{threads} d{depth}");
+                let (res, report) = match preset {
+                    "adamw32" => {
+                        let mut opt = AdamW::new(hp).with_threads(threads).offloaded(ocfg);
+                        opt.step(&mut params, &grads, 1e-3); // lazy init + tier build
+                        let res = bench(&label, min_secs, || {
+                            opt.step(&mut params, &grads, 1e-3);
+                        });
+                        (res, *opt.offload_report().expect("offloaded"))
+                    }
+                    _ => {
+                        let mut opt = CompressedAdamW::new(hp, QuantPolicy::bit4())
+                            .with_threads(threads)
+                            .offloaded(ocfg);
+                        opt.step(&mut params, &grads, 1e-3);
+                        let res = bench(&label, min_secs, || {
+                            opt.step(&mut params, &grads, 1e-3);
+                        });
+                        (res, *opt.offload_report().expect("offloaded"))
+                    }
+                };
+                println!(
+                    "{}  virtual {:>8.2} ms/step  overlap {:>5.1}%  \
+                     ({:.1} MB down, {:.1} MB up per step)",
+                    res.throughput_line(None),
+                    report.step_seconds() * 1e3,
+                    100.0 * report.overlap_fraction(),
+                    report.bytes_down as f64 / report.steps.max(1) as f64 / 1e6,
+                    report.bytes_up as f64 / report.steps.max(1) as f64 / 1e6,
+                );
+                results.push((preset, threads, depth, res.mean_ns, report));
+            }
+        }
+    }
+
+    let virt = |p: &str, t: usize, d: usize| {
+        results
+            .iter()
+            .find(|(pr, th, de, _, _)| *pr == p && *th == t && *de == d)
+            .map(|(_, _, _, _, r)| r.step_seconds())
+    };
+    if let (Some(v32), Some(v4)) = (virt("adamw32", 4, 2), virt("adamw4", 4, 2)) {
+        println!(
+            "\nvirtual 4-bit-vs-32-bit speedup on PCIe (t4 d2): {:.2}x",
+            v32 / v4
+        );
+    }
+
+    if let Some(path) = json_path {
+        let mut run = Json::obj();
+        run.set("bench", Json::Str("offload_pipeline/threads-depth".to_string()));
+        run.set("model_params", Json::Num(n as f64));
+        run.set("smoke", Json::Bool(smoke));
+        let mut jl = Json::obj();
+        jl.set("bandwidth", Json::Num(link.bandwidth))
+            .set("latency", Json::Num(link.latency))
+            .set("compute_per_step", Json::Num(link.compute_per_step))
+            .set("overlap", Json::Num(link.overlap));
+        run.set("link", jl);
+        let mut by_opt = Json::obj();
+        for preset in presets {
+            let mut by_threads = Json::obj();
+            for &t in &thread_cases {
+                let mut by_depth = Json::obj();
+                for &d in &depth_cases {
+                    if let Some((_, _, _, wall_ns, r)) = results
+                        .iter()
+                        .find(|(pr, th, de, _, _)| *pr == preset && *th == t && *de == d)
+                    {
+                        let mut jr = Json::obj();
+                        jr.set("wall_mean_us", Json::Num(wall_ns / 1e3));
+                        jr.set("virtual_step_us", Json::Num(r.step_seconds() * 1e6));
+                        jr.set("overlap_fraction", Json::Num(r.overlap_fraction()));
+                        jr.set(
+                            "down_mb_per_step",
+                            Json::Num(r.bytes_down as f64 / r.steps.max(1) as f64 / 1e6),
+                        );
+                        by_depth.set(&d.to_string(), jr);
+                    }
+                }
+                by_threads.set(&t.to_string(), by_depth);
+            }
+            by_opt.set(preset, by_threads);
+        }
+        run.set("optimizers", by_opt);
+        append_bench_run(&path, run);
+        println!("appended run to {path}");
+    }
+}

@@ -13,36 +13,12 @@
 
 mod bench_util;
 
-use bench_util::{bench, section, BenchResult};
+use bench_util::{append_bench_run, bench, section, BenchResult};
 use lowbit_opt::model::TransformerConfig;
 use lowbit_opt::optim::{build, build_threaded, Hyper, Optimizer, Param, ParamKind};
 use lowbit_opt::tensor::Tensor;
 use lowbit_opt::util::json::Json;
 use lowbit_opt::util::rng::Pcg64;
-
-/// Append one run object to a JSON file holding an array of runs. An
-/// existing single-object file (the pre-append format) is wrapped into
-/// an array, so the perf trajectory accumulates instead of being
-/// overwritten each CI run. An unparseable file (e.g. truncated by a
-/// killed bench run) is preserved under `<path>.bak` before starting a
-/// fresh array, so the accumulated trajectory stays recoverable.
-fn append_bench_run(path: &str, run: Json) {
-    let mut runs = match std::fs::read_to_string(path) {
-        Ok(text) => match Json::parse(&text) {
-            Ok(Json::Arr(v)) => v,
-            Ok(obj @ Json::Obj(_)) => vec![obj],
-            _ => {
-                let bak = format!("{path}.bak");
-                eprintln!("warning: {path} is not valid JSON; saving it to {bak}");
-                let _ = std::fs::rename(path, &bak);
-                Vec::new()
-            }
-        },
-        Err(_) => Vec::new(),
-    };
-    runs.push(run);
-    lowbit_opt::util::write_file(path, &Json::Arr(runs).pretty()).expect("write bench json");
-}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();

@@ -19,20 +19,32 @@
 //!   vector at the end (the displaced buffers become next step's
 //!   arenas).
 //!
+//! The per-piece math lives in **shard-local kernels** ([`update_piece`],
+//! [`decode_ema_piece`]) that take plain slices covering exactly one
+//! piece's data. The in-memory executor derives those slices from
+//! absolute [`SharedSlice`] views over the resident state buffers; the
+//! offload pipeline ([`crate::offload::pipeline`]) derives them from
+//! *staged* device-scratch copies of host-resident state. Because both
+//! paths run the same kernels with the same per-task RNG streams,
+//! offloaded execution is bit-identical to in-memory execution by
+//! construction.
+//!
 //! All cross-thread mutation goes through [`SharedSlice`] views over
 //! disjoint shard ranges; every `unsafe` block names the plan invariant
 //! (block / row / byte alignment) it relies on. The plan, metadata and
 //! every reusable buffer live in the caller's [`StepContext`]; the
 //! steady-state step is allocation-free (see `ctx.rs`).
 
-use super::ctx::{GlobalSlot, StepContext, StepScratch};
-use super::plan::{MetaSpec, Piece, StateLayout};
+use super::ctx::{GlobalSlot, StepContext, StepScratch, VecArena};
+use super::plan::{MetaSpec, Piece, Plan, StateLayout, TensorMeta};
 use super::shared::SharedSlice;
 use super::{step_seed, StepEngine, PHASE_C_STREAM_BASE};
 use crate::optim::factor::FactoredSecond;
 use crate::optim::state::{MomentState, SecondState};
 use crate::optim::{Hyper, Param};
-use crate::quant::{packing, NormKind, QuantMap, QuantizedTensor, Quantizer, Scales};
+use crate::quant::{
+    dequantize_packed_range_into, packing, NormKind, QuantMap, QuantizedTensor, Quantizer, Scales,
+};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 
@@ -111,7 +123,7 @@ struct TensorCtx<'a> {
 
 /// Byte range of the packed code buffer holding elements `[lo, hi)`.
 #[inline]
-fn packed_range(bits: u8, lo: usize, hi: usize) -> (usize, usize) {
+pub(crate) fn packed_range(bits: u8, lo: usize, hi: usize) -> (usize, usize) {
     if bits == 4 {
         (lo / 2, hi.div_ceil(2))
     } else {
@@ -129,41 +141,348 @@ fn layout_of(q: &Quantizer, shape: &[usize]) -> (StateLayout, usize) {
     }
 }
 
-/// One optimizer step, shard-parallel. `m_states` / `v_states` must be
-/// initialized (one entry per parameter, as after `lazy_init`). The
-/// plan, metadata, stat slots, per-worker scratch and the re-encode
-/// double buffers all live in `ctx` and are reused across steps; a
-/// layout or shard-size change rebuilds them (see `ctx.rs`).
-pub fn compressed_step(
-    eng: &StepEngine,
-    ctx: &mut StepContext,
-    sp: &StepParams,
-    params: &mut [Param],
-    grads: &[Tensor],
-    m_states: &mut [MomentState],
-    v_states: &mut [SecondState],
-) {
-    let n = params.len();
-    debug_assert_eq!(grads.len(), n);
-    debug_assert_eq!(m_states.len(), n);
-    debug_assert_eq!(v_states.len(), n);
+// ---------------------------------------------------------------------
+// Shard-local piece kernels (shared with the offload pipeline).
+// ---------------------------------------------------------------------
 
-    let params_ref: &[Param] = &*params;
-    let ms_ref: &[MomentState] = &*m_states;
-    let vs_ref: &[SecondState] = &*v_states;
-    let rebuilt = ctx.ensure(eng.shard_elems(), n, |i| {
-        let shape: &[usize] = &params_ref[i].tensor.shape;
-        let (m, m_stat_len) = match &ms_ref[i] {
+/// Shard-local view of one piece's first-moment storage, consumed by
+/// [`update_piece`]. Every slice covers exactly the piece's own elements
+/// (codes start at the piece's first element, scales at its first
+/// block); only `stat` and the global `scales` are tensor-wide.
+pub(crate) enum MSrc<'a> {
+    F32(&'a mut [f32]),
+    Block {
+        q: Quantizer,
+        map: &'a QuantMap,
+        block: usize,
+        /// Packed codes of exactly this piece's elements.
+        packed: &'a mut [u8],
+        /// Block scales of exactly this piece's blocks.
+        scales: &'a mut [f32],
+    },
+    Global {
+        q: Quantizer,
+        map: &'a QuantMap,
+        /// Old codes of exactly this piece's elements (read-only; the
+        /// re-encode happens in phase C).
+        packed: &'a [u8],
+        /// The tensor's resident global scales.
+        scales: &'a Scales,
+        /// This piece's scale-statistics slot.
+        stat: &'a mut [f32],
+    },
+}
+
+/// Shard-local view of one piece's second-moment storage (adds the
+/// factored arm to [`MSrc`]).
+pub(crate) enum VSrc<'a> {
+    F32(&'a mut [f32]),
+    Block {
+        q: Quantizer,
+        map: &'a QuantMap,
+        block: usize,
+        packed: &'a mut [u8],
+        scales: &'a mut [f32],
+    },
+    Global {
+        q: Quantizer,
+        map: &'a QuantMap,
+        packed: &'a [u8],
+        scales: &'a Scales,
+        stat: &'a mut [f32],
+    },
+    Factored {
+        f: &'a FactoredSecond,
+        row_mean: f32,
+    },
+}
+
+/// Post-update bookkeeping for one moment source: what [`update_piece`]
+/// must do with the freshly updated values.
+enum Requant<'a> {
+    /// Dense f32 state was updated in place — nothing left to do.
+    None,
+    /// Block-normalized: requantize the piece in place.
+    Block {
+        q: Quantizer,
+        map: &'a QuantMap,
+        block: usize,
+        packed: &'a mut [u8],
+        scales: &'a mut [f32],
+    },
+    /// Globally-normalized: accumulate scale statistics; phase C encodes.
+    Stats(&'a mut [f32]),
+}
+
+/// Phase-A update for one piece on shard-local data: decompress m (and
+/// v), run the exact AdamW update on `w`, requantize block-normalized
+/// states in place and accumulate scale statistics for the
+/// globally-normalized ones. `lo` is the piece's flat element offset in
+/// its tensor — the rank-1 statistics and factored reconstruction need
+/// absolute coordinates even though every data slice is local.
+///
+/// RNG consumption order is fixed (v encode, then m encode), so the
+/// in-memory executor and the offload pipeline draw identical
+/// stochastic-rounding streams — the foundation of the offloaded
+/// bit-identity guarantee.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn update_piece(
+    lo: usize,
+    shape: &[usize],
+    cols: usize,
+    w: &mut [f32],
+    g: &[f32],
+    m: MSrc<'_>,
+    v: VSrc<'_>,
+    hp: &Hyper,
+    t: usize,
+    lr: f32,
+    scratch: &mut StepScratch,
+    rng: &mut Pcg64,
+) {
+    let len = g.len();
+    debug_assert_eq!(w.len(), len);
+    let hi = lo + len;
+    let StepScratch { m: sm, v: sv } = scratch;
+
+    // ---- load the first moment ----
+    let (m_vals, m_re): (&mut [f32], Requant<'_>) = match m {
+        MSrc::F32(s) => (s, Requant::None),
+        MSrc::Block {
+            q,
+            map,
+            block,
+            packed,
+            scales,
+        } => {
+            sm.resize(len, 0.0);
+            dequant_block_slice(map, q.bits, block, packed, scales, &mut sm[..len]);
+            (
+                &mut sm[..len],
+                Requant::Block {
+                    q,
+                    map,
+                    block,
+                    packed,
+                    scales,
+                },
+            )
+        }
+        MSrc::Global {
+            q,
+            map,
+            packed,
+            scales,
+            stat,
+        } => {
+            sm.resize(len, 0.0);
+            dequantize_packed_range_into(
+                map,
+                q.bits,
+                packed,
+                lo,
+                scales,
+                shape,
+                lo,
+                hi,
+                &mut sm[..len],
+            );
+            (&mut sm[..len], Requant::Stats(stat))
+        }
+    };
+
+    let b1 = hp.beta1;
+    let b2 = hp.beta2;
+    let bc1 = 1.0 - b1.powi(t as i32);
+    let bc2 = 1.0 - b2.powi(t as i32);
+
+    // ---- update (exact AdamW; mirrors adamw_update_tensor) ----
+    match v {
+        VSrc::Factored { f, row_mean } => {
+            for k in 0..len {
+                let gi = g[k];
+                let mi = b1 * m_vals[k] + (1.0 - b1) * gi;
+                m_vals[k] = mi;
+                let idx = lo + k;
+                let vhat = f.reconstruct_at(idx / cols, idx % cols, row_mean) / bc2;
+                let wi = w[k];
+                let upd = (mi / bc1) / (vhat.sqrt() + hp.eps) + hp.weight_decay * wi;
+                w[k] = wi - lr * upd;
+            }
+        }
+        v_src => {
+            let (v_vals, v_re): (&mut [f32], Requant<'_>) = match v_src {
+                VSrc::F32(s) => (s, Requant::None),
+                VSrc::Block {
+                    q,
+                    map,
+                    block,
+                    packed,
+                    scales,
+                } => {
+                    sv.resize(len, 0.0);
+                    dequant_block_slice(map, q.bits, block, packed, scales, &mut sv[..len]);
+                    (
+                        &mut sv[..len],
+                        Requant::Block {
+                            q,
+                            map,
+                            block,
+                            packed,
+                            scales,
+                        },
+                    )
+                }
+                VSrc::Global {
+                    q,
+                    map,
+                    packed,
+                    scales,
+                    stat,
+                } => {
+                    sv.resize(len, 0.0);
+                    dequantize_packed_range_into(
+                        map,
+                        q.bits,
+                        packed,
+                        lo,
+                        scales,
+                        shape,
+                        lo,
+                        hi,
+                        &mut sv[..len],
+                    );
+                    (&mut sv[..len], Requant::Stats(stat))
+                }
+                VSrc::Factored { .. } => unreachable!(),
+            };
+            for k in 0..len {
+                let gi = g[k];
+                let mi = b1 * m_vals[k] + (1.0 - b1) * gi;
+                let vi = b2 * v_vals[k] + (1.0 - b2) * gi * gi;
+                m_vals[k] = mi;
+                v_vals[k] = vi;
+                let mhat = mi / bc1;
+                let vhat = vi / bc2;
+                let wi = w[k];
+                w[k] = wi - lr * (mhat / (vhat.sqrt() + hp.eps) + hp.weight_decay * wi);
+            }
+            // ---- requantize / accumulate v ----
+            match v_re {
+                Requant::None => {}
+                Requant::Block {
+                    q,
+                    map,
+                    block,
+                    packed,
+                    scales,
+                } => {
+                    q.encode_block_range(map, v_vals, block, scales, packed, rng);
+                }
+                Requant::Stats(stat) => {
+                    accumulate_scale_stats(v_vals, lo, shape, stat);
+                }
+            }
+        }
+    }
+
+    // ---- requantize / accumulate m ----
+    match m_re {
+        Requant::None => {}
+        Requant::Block {
+            q,
+            map,
+            block,
+            packed,
+            scales,
+        } => {
+            q.encode_block_range(map, m_vals, block, scales, packed, rng);
+        }
+        Requant::Stats(stat) => {
+            accumulate_scale_stats(m_vals, lo, shape, stat);
+        }
+    }
+}
+
+/// Phase-C value re-derivation for one globally-normalized state piece:
+/// decode the *old* codes of elements `[lo, lo + g.len())` from a
+/// shard-local slice and apply the moment EMA with the gradient —
+/// bit-identical to the value phase A computed from the same inputs.
+/// `second` selects the `g²` (second-moment) form. The caller encodes
+/// `out` against the reduced global scales afterwards
+/// ([`Quantizer::encode_range_with_scales`]); splitting decode from
+/// encode lets the offload pipeline re-encode *in place* over the staged
+/// slot that held the old codes.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn decode_ema_piece(
+    bits: u8,
+    map: &QuantMap,
+    old_packed: &[u8],
+    old_scales: &Scales,
+    lo: usize,
+    shape: &[usize],
+    g: &[f32],
+    beta: f32,
+    second: bool,
+    out: &mut Vec<f32>,
+) {
+    let len = g.len();
+    out.resize(len, 0.0);
+    dequantize_packed_range_into(
+        map,
+        bits,
+        old_packed,
+        lo,
+        old_scales,
+        shape,
+        lo,
+        lo + len,
+        &mut out[..len],
+    );
+    if second {
+        for (vv, &gv) in out[..len].iter_mut().zip(g.iter()) {
+            *vv = beta * *vv + (1.0 - beta) * gv * gv;
+        }
+    } else {
+        for (mv, &gv) in out[..len].iter_mut().zip(g.iter()) {
+            *mv = beta * *mv + (1.0 - beta) * gv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared context construction, phase F, reductions and commit.
+// ---------------------------------------------------------------------
+
+/// Validate/rebuild the cached step context against the live compressed
+/// states — the single meta/plan construction route shared by the
+/// in-memory executor and the offload pipeline — including the
+/// globally-normalized state bookkeeping on a rebuild. With
+/// `alloc_reencode_bufs` the phase-C double-buffer arenas are allocated
+/// too (the in-memory executor swap-commits through them; the offload
+/// pipeline re-encodes in place at the host tier and leaves them empty).
+pub(crate) fn ensure_compressed_ctx(
+    ctx: &mut StepContext,
+    shard_elems: usize,
+    params: &[Param],
+    m_states: &[MomentState],
+    v_states: &[SecondState],
+    alloc_reencode_bufs: bool,
+) -> bool {
+    let n = params.len();
+    let rebuilt = ctx.ensure(shard_elems, n, |i| {
+        let shape: &[usize] = &params[i].tensor.shape;
+        let (m, m_stat_len) = match &m_states[i] {
             MomentState::F32(_) => (StateLayout::F32, 0),
             MomentState::Quant(q) => layout_of(&q.quantizer, shape),
         };
-        let (v, v_stat_len) = match &vs_ref[i] {
+        let (v, v_stat_len) = match &v_states[i] {
             SecondState::F32(_) => (StateLayout::F32, 0),
             SecondState::Quant(q) => layout_of(&q.quantizer, shape),
             SecondState::Factored(f) => (StateLayout::Factored, f.rows() + f.cols()),
         };
         MetaSpec {
-            numel: params_ref[i].tensor.numel(),
+            numel: params[i].tensor.numel(),
             shape,
             m,
             v,
@@ -207,12 +526,194 @@ pub fn compressed_step(
                     q,
                     buf,
                 });
-                ctx.new_bufs
-                    .push(vec![0u8; packing::packed_len(ctx.metas[i].numel, q.bits)]);
+                ctx.new_bufs.push(if alloc_reencode_bufs {
+                    vec![0u8; packing::packed_len(ctx.metas[i].numel, q.bits)]
+                } else {
+                    Vec::new()
+                });
                 ctx.new_scales.push(None);
             }
         }
     }
+    rebuilt
+}
+
+/// Phase F: factored-v statistics. Parallel per-shard row/col partial
+/// sums of `g²` into stat slots, then the sequential shard-order reduce
+/// + Adafactor EMA (mirrors `FactoredSecond::update` with eps2 = 0).
+/// Shared by the in-memory executor and the offload pipeline — factored
+/// statistics are sublinear in the tensor size, so they stay
+/// device-resident under offload.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn phase_f(
+    eng: &StepEngine,
+    threads: usize,
+    plan: &Plan,
+    metas: &[TensorMeta],
+    slots: &mut [Vec<f32>],
+    red: &mut [f32],
+    arena: &VecArena,
+    grads: &[Tensor],
+    hp: &Hyper,
+    v_states: &mut [SecondState],
+) {
+    {
+        let mut slot_views = arena.lease::<SharedSlice<f32>>();
+        slot_views.extend(slots.iter_mut().map(|s| SharedSlice::new(s.as_mut_slice())));
+        let slot_views = slot_views.as_slice();
+        let plan_ref = plan;
+        let metas_ref = metas;
+        eng.run_tasks::<(), _>(threads, plan.tasks.len(), |ti, _| {
+            for piece in &plan_ref.tasks[ti].pieces {
+                let meta = &metas_ref[piece.tensor];
+                if meta.v != StateLayout::Factored {
+                    continue;
+                }
+                let rows_total = meta.shape[0];
+                let cols = meta.numel / rows_total;
+                let slot_id = piece.v_slot.expect("factored piece has a stat slot");
+                // SAFETY: each piece owns its stat slot exclusively
+                // (plan assigns one slot per piece).
+                let slot = unsafe { slot_views[slot_id].range_mut(0, plan_ref.slot_lens[slot_id]) };
+                let (rsum, csum) = slot.split_at_mut(rows_total);
+                let g = &grads[piece.tensor].data[piece.lo..piece.hi];
+                let row0 = piece.lo / cols;
+                for (ri, grow) in g.chunks(cols).enumerate() {
+                    let mut acc = 0.0f32;
+                    for (j, &gv) in grow.iter().enumerate() {
+                        let sq = gv * gv;
+                        acc += sq;
+                        csum[j] += sq;
+                    }
+                    rsum[row0 + ri] = acc;
+                }
+            }
+        });
+    }
+    // Sequential reduce in shard order + Adafactor EMA, accumulated in
+    // the context's reusable reduction scratch.
+    for i in 0..metas.len() {
+        if metas[i].v != StateLayout::Factored {
+            continue;
+        }
+        let f = match &mut v_states[i] {
+            SecondState::Factored(f) => f,
+            _ => unreachable!("meta says factored"),
+        };
+        let rows = f.rows();
+        let cols = f.cols();
+        let (rsum, csum) = red[..rows + cols].split_at_mut(rows);
+        rsum.fill(0.0);
+        csum.fill(0.0);
+        for task in &plan.tasks {
+            for p in task.pieces.iter().filter(|p| p.tensor == i) {
+                let s = &slots[p.v_slot.expect("factored slot")];
+                for (a, b) in rsum.iter_mut().zip(&s[..rows]) {
+                    *a += *b;
+                }
+                for (a, b) in csum.iter_mut().zip(&s[rows..]) {
+                    *a += *b;
+                }
+            }
+        }
+        for (ri, r) in f.row.iter_mut().enumerate() {
+            *r = hp.beta2 * *r + (1.0 - hp.beta2) * (rsum[ri] / cols as f32);
+        }
+        for (cj, c) in f.col.iter_mut().enumerate() {
+            *c = hp.beta2 * *c + (1.0 - hp.beta2) * (csum[cj] / rows as f32);
+        }
+    }
+}
+
+/// Reduce phase-A scale statistics across shards (sequentially, in shard
+/// order) into recycled `Scales` values for every globally-normalized
+/// state. The reduced scales overwrite the *recycled* storage swapped
+/// out of the states by the previous step's commit, so the steady state
+/// builds no fresh scale vectors.
+pub(crate) fn reduce_global_scales(
+    plan: &Plan,
+    metas: &[TensorMeta],
+    globals: &[GlobalSlot],
+    slots: &[Vec<f32>],
+    red: &mut [f32],
+    new_scales: &mut [Option<Scales>],
+) {
+    for gs in globals {
+        let meta = &metas[gs.tensor];
+        let stat_len = if gs.is_m {
+            meta.m_stat_len
+        } else {
+            meta.v_stat_len
+        };
+        let acc = &mut red[..stat_len];
+        acc.fill(0.0);
+        for task in &plan.tasks {
+            for p in task.pieces.iter().filter(|p| p.tensor == gs.tensor) {
+                let slot_id = if gs.is_m { p.m_slot } else { p.v_slot };
+                let s = &slots[slot_id.expect("global state has a slot")];
+                for (a, b) in acc.iter_mut().zip(s.iter()) {
+                    if *b > *a {
+                        *a = *b;
+                    }
+                }
+            }
+        }
+        write_scales(&mut new_scales[gs.buf], acc, &meta.shape);
+    }
+}
+
+/// Commit the reduced scales (and, when `new_bufs` is given, the
+/// freshly encoded packed double buffers) into the quantized states by
+/// swapping — the displaced storage returns to the context to be
+/// overwritten next step. The offload pipeline passes `None`: it has
+/// already written the fresh codes back to the host buffers in place.
+pub(crate) fn commit_globals(
+    globals: &[GlobalSlot],
+    mut new_bufs: Option<&mut [Vec<u8>]>,
+    new_scales: &mut [Option<Scales>],
+    m_states: &mut [MomentState],
+    v_states: &mut [SecondState],
+) {
+    for gs in globals {
+        let qt = if gs.is_m {
+            match &mut m_states[gs.tensor] {
+                MomentState::Quant(qt) => qt,
+                _ => unreachable!("meta says quantized m"),
+            }
+        } else {
+            match &mut v_states[gs.tensor] {
+                SecondState::Quant(qt) => qt,
+                _ => unreachable!("meta says quantized v"),
+            }
+        };
+        if let Some(bufs) = new_bufs.as_mut() {
+            std::mem::swap(&mut qt.packed, &mut bufs[gs.buf]);
+        }
+        let ns = new_scales[gs.buf].as_mut().expect("reduced scales");
+        std::mem::swap(&mut qt.scales, ns);
+    }
+}
+
+/// One optimizer step, shard-parallel. `m_states` / `v_states` must be
+/// initialized (one entry per parameter, as after `lazy_init`). The
+/// plan, metadata, stat slots, per-worker scratch and the re-encode
+/// double buffers all live in `ctx` and are reused across steps; a
+/// layout or shard-size change rebuilds them (see `ctx.rs`).
+pub fn compressed_step(
+    eng: &StepEngine,
+    ctx: &mut StepContext,
+    sp: &StepParams,
+    params: &mut [Param],
+    grads: &[Tensor],
+    m_states: &mut [MomentState],
+    v_states: &mut [SecondState],
+) {
+    let n = params.len();
+    debug_assert_eq!(grads.len(), n);
+    debug_assert_eq!(m_states.len(), n);
+    debug_assert_eq!(v_states.len(), n);
+
+    ensure_compressed_ctx(ctx, eng.shard_elems(), params, m_states, v_states, true);
     if ctx.plan.tasks.is_empty() {
         return;
     }
@@ -245,74 +746,7 @@ pub fn compressed_step(
 
     // ---------------- Phase F: factored-v statistics -----------------
     if metas.iter().any(|m| m.v == StateLayout::Factored) {
-        {
-            let mut slot_views = arena.lease::<SharedSlice<f32>>();
-            slot_views.extend(slots.iter_mut().map(|s| SharedSlice::new(s.as_mut_slice())));
-            let slot_views = slot_views.as_slice();
-            let plan_ref = plan;
-            let metas_ref = metas;
-            eng.run_tasks::<(), _>(threads, plan.tasks.len(), |ti, _| {
-                for piece in &plan_ref.tasks[ti].pieces {
-                    let meta = &metas_ref[piece.tensor];
-                    if meta.v != StateLayout::Factored {
-                        continue;
-                    }
-                    let rows_total = meta.shape[0];
-                    let cols = meta.numel / rows_total;
-                    let slot_id = piece.v_slot.expect("factored piece has a stat slot");
-                    // SAFETY: each piece owns its stat slot exclusively
-                    // (plan assigns one slot per piece).
-                    let slot =
-                        unsafe { slot_views[slot_id].range_mut(0, plan_ref.slot_lens[slot_id]) };
-                    let (rsum, csum) = slot.split_at_mut(rows_total);
-                    let g = &grads[piece.tensor].data[piece.lo..piece.hi];
-                    let row0 = piece.lo / cols;
-                    for (ri, grow) in g.chunks(cols).enumerate() {
-                        let mut acc = 0.0f32;
-                        for (j, &gv) in grow.iter().enumerate() {
-                            let sq = gv * gv;
-                            acc += sq;
-                            csum[j] += sq;
-                        }
-                        rsum[row0 + ri] = acc;
-                    }
-                }
-            });
-        }
-        // Sequential reduce in shard order + Adafactor EMA (mirrors
-        // FactoredSecond::update with eps2 = 0), accumulated in the
-        // context's reusable reduction scratch.
-        for i in 0..n {
-            if metas[i].v != StateLayout::Factored {
-                continue;
-            }
-            let f = match &mut v_states[i] {
-                SecondState::Factored(f) => f,
-                _ => unreachable!("meta says factored"),
-            };
-            let rows = f.rows();
-            let cols = f.cols();
-            let (rsum, csum) = red[..rows + cols].split_at_mut(rows);
-            rsum.fill(0.0);
-            csum.fill(0.0);
-            for task in &plan.tasks {
-                for p in task.pieces.iter().filter(|p| p.tensor == i) {
-                    let s = &slots[p.v_slot.expect("factored slot")];
-                    for (a, b) in rsum.iter_mut().zip(&s[..rows]) {
-                        *a += *b;
-                    }
-                    for (a, b) in csum.iter_mut().zip(&s[rows..]) {
-                        *a += *b;
-                    }
-                }
-            }
-            for (ri, r) in f.row.iter_mut().enumerate() {
-                *r = hp.beta2 * *r + (1.0 - hp.beta2) * (rsum[ri] / cols as f32);
-            }
-            for (cj, c) in f.col.iter_mut().enumerate() {
-                *c = hp.beta2 * *c + (1.0 - hp.beta2) * (csum[cj] / rows as f32);
-            }
-        }
+        phase_f(eng, threads, plan, metas, slots, red, arena, grads, &hp, v_states);
     }
 
     {
@@ -429,31 +863,7 @@ pub fn compressed_step(
         }
 
         // ---------- Reduce A→C: combine scale statistics -------------
-        // The reduced scales overwrite the *recycled* `Scales` storage
-        // swapped out of the states by the previous step's commit, so
-        // the steady state builds no fresh scale vectors.
-        for gs in globals {
-            let meta = &metas[gs.tensor];
-            let stat_len = if gs.is_m {
-                meta.m_stat_len
-            } else {
-                meta.v_stat_len
-            };
-            let acc = &mut red[..stat_len];
-            acc.fill(0.0);
-            for task in &plan.tasks {
-                for p in task.pieces.iter().filter(|p| p.tensor == gs.tensor) {
-                    let slot_id = if gs.is_m { p.m_slot } else { p.v_slot };
-                    let s = &slots[slot_id.expect("global state has a slot")];
-                    for (a, b) in acc.iter_mut().zip(s.iter()) {
-                        if *b > *a {
-                            *a = *b;
-                        }
-                    }
-                }
-            }
-            write_scales(&mut new_scales[gs.buf], acc, &meta.shape);
-        }
+        reduce_global_scales(plan, metas, globals, slots, red, new_scales);
 
         // --------------- Phase C: global re-encode -------------------
         if !globals.is_empty() {
@@ -473,22 +883,7 @@ pub fn compressed_step(
     // scales move into the state, and the state's previous buffers move
     // back into the context to be overwritten next step. No allocation,
     // no copy.
-    for gs in globals {
-        let qt = if gs.is_m {
-            match &mut m_states[gs.tensor] {
-                MomentState::Quant(qt) => qt,
-                _ => unreachable!("meta says quantized m"),
-            }
-        } else {
-            match &mut v_states[gs.tensor] {
-                SecondState::Quant(qt) => qt,
-                _ => unreachable!("meta says quantized v"),
-            }
-        };
-        std::mem::swap(&mut qt.packed, &mut new_bufs[gs.buf]);
-        let ns = new_scales[gs.buf].as_mut().expect("reduced scales");
-        std::mem::swap(&mut qt.scales, ns);
-    }
+    commit_globals(globals, Some(&mut new_bufs[..]), new_scales, m_states, v_states);
 }
 
 /// Write the reduced scale statistics into a (possibly recycled)
@@ -607,7 +1002,8 @@ fn accumulate_scale_stats(vals: &[f32], lo: usize, shape: &[usize], slot: &mut [
     }
 }
 
-/// Phase A for one piece: decompress → AdamW → requantize/accumulate.
+/// Phase A for one piece: derive the shard-local slices from the
+/// absolute views and run the shared [`update_piece`] kernel.
 #[allow(clippy::too_many_arguments)]
 fn phase_a_piece(
     piece: &Piece,
@@ -621,17 +1017,14 @@ fn phase_a_piece(
 ) {
     let tc = &ctxs[piece.tensor];
     let (lo, hi) = (piece.lo, piece.hi);
-    let len = hi - lo;
     let g = &tc.g[lo..hi];
     // SAFETY: pieces partition each tensor disjointly (plan invariant),
-    // so this shard is the only writer of w[lo..hi].
+    // so this shard is the only writer of w[lo..hi).
     let w = unsafe { tc.w.range_mut(lo, hi) };
-    let StepScratch { m: sm, v: sv } = scratch;
 
-    // ---- load the first moment ----
-    let m_vals: &mut [f32] = match &tc.m {
+    let m_src = match &tc.m {
         // SAFETY: disjoint shard ranges (plan invariant).
-        MRoute::F32(s) => unsafe { s.range_mut(lo, hi) },
+        MRoute::F32(s) => MSrc::F32(unsafe { s.range_mut(lo, hi) }),
         MRoute::Block {
             q,
             map,
@@ -639,137 +1032,76 @@ fn phase_a_piece(
             packed,
             scales,
         } => {
-            sm.resize(len, 0.0);
             let (b0, b1) = packed_range(q.bits, lo, hi);
             // SAFETY: shard boundaries are block- and byte-aligned, so
             // the packed bytes and block scales of [lo, hi) have a
-            // single owner (this task). Read-only here.
-            let pk = unsafe { packed.range_mut(b0, b1) };
-            let sc = unsafe { scales.range_mut(lo / block, hi.div_ceil(*block)) };
-            dequant_block_slice(map, q.bits, *block, pk, sc, &mut sm[..len]);
-            &mut sm[..len]
+            // single owner (this task).
+            MSrc::Block {
+                q: *q,
+                map: *map,
+                block: *block,
+                packed: unsafe { packed.range_mut(b0, b1) },
+                scales: unsafe { scales.range_mut(lo / block, hi.div_ceil(*block)) },
+            }
         }
-        MRoute::Global { map, old, .. } => {
-            sm.resize(len, 0.0);
-            old.dequantize_range_into(map, lo, hi, &mut sm[..len]);
-            &mut sm[..len]
+        MRoute::Global { q, map, old, .. } => {
+            let (b0, b1) = packed_range(q.bits, lo, hi);
+            let slot_id = piece.m_slot.expect("global m has a slot");
+            // SAFETY: one stat slot per piece (plan invariant).
+            let stat = unsafe { slot_views[slot_id].range_mut(0, slot_views[slot_id].len()) };
+            MSrc::Global {
+                q: *q,
+                map: *map,
+                packed: &old.packed[b0..b1],
+                scales: &old.scales,
+                stat,
+            }
         }
     };
-
-    let b1 = hp.beta1;
-    let b2 = hp.beta2;
-    let bc1 = 1.0 - b1.powi(t as i32);
-    let bc2 = 1.0 - b2.powi(t as i32);
-
-    // ---- update (exact AdamW; mirrors adamw_update_tensor) ----
-    match &tc.v {
-        VRoute::Factored { f, row_mean } => {
-            let cols = tc.cols;
-            for k in 0..len {
-                let gi = g[k];
-                let mi = b1 * m_vals[k] + (1.0 - b1) * gi;
-                m_vals[k] = mi;
-                let idx = lo + k;
-                let vhat = f.reconstruct_at(idx / cols, idx % cols, *row_mean) / bc2;
-                let wi = w[k];
-                let upd = (mi / bc1) / (vhat.sqrt() + hp.eps) + hp.weight_decay * wi;
-                w[k] = wi - lr * upd;
-            }
-        }
-        v_route => {
-            let v_vals: &mut [f32] = match v_route {
-                // SAFETY: disjoint shard ranges (plan invariant).
-                VRoute::F32(s) => unsafe { s.range_mut(lo, hi) },
-                VRoute::Block {
-                    q,
-                    map,
-                    block,
-                    packed,
-                    scales,
-                } => {
-                    sv.resize(len, 0.0);
-                    let (b0, b1_) = packed_range(q.bits, lo, hi);
-                    // SAFETY: block- and byte-aligned shard boundaries.
-                    let pk = unsafe { packed.range_mut(b0, b1_) };
-                    let sc = unsafe { scales.range_mut(lo / block, hi.div_ceil(*block)) };
-                    dequant_block_slice(map, q.bits, *block, pk, sc, &mut sv[..len]);
-                    &mut sv[..len]
-                }
-                VRoute::Global { map, old, .. } => {
-                    sv.resize(len, 0.0);
-                    old.dequantize_range_into(map, lo, hi, &mut sv[..len]);
-                    &mut sv[..len]
-                }
-                VRoute::Factored { .. } => unreachable!(),
-            };
-            for k in 0..len {
-                let gi = g[k];
-                let mi = b1 * m_vals[k] + (1.0 - b1) * gi;
-                let vi = b2 * v_vals[k] + (1.0 - b2) * gi * gi;
-                m_vals[k] = mi;
-                v_vals[k] = vi;
-                let mhat = mi / bc1;
-                let vhat = vi / bc2;
-                let wi = w[k];
-                w[k] = wi - lr * (mhat / (vhat.sqrt() + hp.eps) + hp.weight_decay * wi);
-            }
-            // ---- requantize / accumulate v ----
-            match v_route {
-                VRoute::F32(_) => {}
-                VRoute::Block {
-                    q,
-                    map,
-                    block,
-                    packed,
-                    scales,
-                } => {
-                    let (b0, b1_) = packed_range(q.bits, lo, hi);
-                    // SAFETY: same single-owner ranges as the read above.
-                    let pk = unsafe { packed.range_mut(b0, b1_) };
-                    let sc = unsafe { scales.range_mut(lo / block, hi.div_ceil(*block)) };
-                    q.encode_block_range(map, v_vals, *block, sc, pk, rng);
-                }
-                VRoute::Global { .. } => {
-                    let slot_id = piece.v_slot.expect("global v has a slot");
-                    // SAFETY: one stat slot per piece (plan invariant).
-                    let slot = unsafe {
-                        slot_views[slot_id].range_mut(0, slot_views[slot_id].len())
-                    };
-                    accumulate_scale_stats(v_vals, lo, tc.shape, slot);
-                }
-                VRoute::Factored { .. } => unreachable!(),
-            }
-        }
-    }
-
-    // ---- requantize / accumulate m ----
-    match &tc.m {
-        MRoute::F32(_) => {}
-        MRoute::Block {
+    let v_src = match &tc.v {
+        // SAFETY: disjoint shard ranges (plan invariant).
+        VRoute::F32(s) => VSrc::F32(unsafe { s.range_mut(lo, hi) }),
+        VRoute::Block {
             q,
             map,
             block,
             packed,
             scales,
         } => {
-            let (b0, b1_) = packed_range(q.bits, lo, hi);
-            // SAFETY: same single-owner ranges as the read above.
-            let pk = unsafe { packed.range_mut(b0, b1_) };
-            let sc = unsafe { scales.range_mut(lo / block, hi.div_ceil(*block)) };
-            q.encode_block_range(map, m_vals, *block, sc, pk, rng);
+            let (b0, b1) = packed_range(q.bits, lo, hi);
+            // SAFETY: block- and byte-aligned shard boundaries.
+            VSrc::Block {
+                q: *q,
+                map: *map,
+                block: *block,
+                packed: unsafe { packed.range_mut(b0, b1) },
+                scales: unsafe { scales.range_mut(lo / block, hi.div_ceil(*block)) },
+            }
         }
-        MRoute::Global { .. } => {
-            let slot_id = piece.m_slot.expect("global m has a slot");
+        VRoute::Global { q, map, old, .. } => {
+            let (b0, b1) = packed_range(q.bits, lo, hi);
+            let slot_id = piece.v_slot.expect("global v has a slot");
             // SAFETY: one stat slot per piece (plan invariant).
-            let slot = unsafe { slot_views[slot_id].range_mut(0, slot_views[slot_id].len()) };
-            accumulate_scale_stats(m_vals, lo, tc.shape, slot);
+            let stat = unsafe { slot_views[slot_id].range_mut(0, slot_views[slot_id].len()) };
+            VSrc::Global {
+                q: *q,
+                map: *map,
+                packed: &old.packed[b0..b1],
+                scales: &old.scales,
+                stat,
+            }
         }
-    }
+        VRoute::Factored { f, row_mean } => VSrc::Factored {
+            f,
+            row_mean: *row_mean,
+        },
+    };
+    update_piece(lo, tc.shape, tc.cols, w, g, m_src, v_src, hp, t, lr, scratch, rng);
 }
 
 /// Phase C for one piece: re-derive updated state values from the old
-/// codes + gradient (bit-identical to phase A's computation) and encode
-/// against the reduced global scales.
+/// codes + gradient via the shared [`decode_ema_piece`] kernel and
+/// encode against the reduced global scales into the double buffers.
 fn phase_c_piece(
     piece: &Piece,
     ctxs: &[TensorCtx<'_>],
@@ -792,13 +1124,20 @@ fn phase_c_piece(
         buf,
     } = &tc.m
     {
-        sm.resize(len, 0.0);
-        old.dequantize_range_into(map, lo, hi, &mut sm[..len]);
-        for (mv, &gv) in sm[..len].iter_mut().zip(g.iter()) {
-            *mv = hp.beta1 * *mv + (1.0 - hp.beta1) * gv;
-        }
-        let scales = new_scales[*buf].as_ref().expect("reduced m scales");
         let (b0, b1) = packed_range(q.bits, lo, hi);
+        decode_ema_piece(
+            q.bits,
+            map,
+            &old.packed[b0..b1],
+            &old.scales,
+            lo,
+            tc.shape,
+            g,
+            hp.beta1,
+            false,
+            sm,
+        );
+        let scales = new_scales[*buf].as_ref().expect("reduced m scales");
         // SAFETY: byte-aligned disjoint shard ranges of the fresh buffer.
         let dst = unsafe { new_packed.range_mut(b0, b1) };
         q.encode_range_with_scales(map, &sm[..len], lo, tc.shape, scales, dst, rng);
@@ -812,13 +1151,20 @@ fn phase_c_piece(
         buf,
     } = &tc.v
     {
-        sv.resize(len, 0.0);
-        old.dequantize_range_into(map, lo, hi, &mut sv[..len]);
-        for (vv, &gv) in sv[..len].iter_mut().zip(g.iter()) {
-            *vv = hp.beta2 * *vv + (1.0 - hp.beta2) * gv * gv;
-        }
-        let scales = new_scales[*buf].as_ref().expect("reduced v scales");
         let (b0, b1) = packed_range(q.bits, lo, hi);
+        decode_ema_piece(
+            q.bits,
+            map,
+            &old.packed[b0..b1],
+            &old.scales,
+            lo,
+            tc.shape,
+            g,
+            hp.beta2,
+            true,
+            sv,
+        );
+        let scales = new_scales[*buf].as_ref().expect("reduced v scales");
         // SAFETY: byte-aligned disjoint shard ranges of the fresh buffer.
         let dst = unsafe { new_packed.range_mut(b0, b1) };
         q.encode_range_with_scales(map, &sv[..len], lo, tc.shape, scales, dst, rng);

@@ -20,7 +20,10 @@
 //!   decompress buffers), `globals`/`new_bufs`/`new_scales`/
 //!   `m_buf_of`/`v_buf_of` (double-buffered re-encode arenas);
 //! * the dense Adafactor executor — `aux`/`red64` (compensated f64
-//!   column/RMS partials), `invs` (per-tensor clip factors).
+//!   column/RMS partials), `invs` (per-tensor clip factors);
+//! * the offload pipeline (`crate::offload::pipeline`) —
+//!   `stage_bytes`/`stage_vals`, the bounded device-scratch slots that
+//!   double-buffer each task's host-resident state through the link.
 //!
 //! The per-step *borrowed* view vectors (`SharedSlice` lists, per-tensor
 //! routes) cannot live in the context — they borrow the step's params and
@@ -234,37 +237,45 @@ pub struct StepContext {
     valid: bool,
     /// Bumped on every rebuild (observable for tests / diagnostics).
     generation: u64,
-    pub(super) metas: Vec<TensorMeta>,
-    pub(super) plan: Plan,
+    pub(crate) metas: Vec<TensorMeta>,
+    pub(crate) plan: Plan,
     /// f32 stat-slot buffers (`plan.slot_lens`), zeroed by `begin_step`.
-    pub(super) slots: Vec<Vec<f32>>,
+    pub(crate) slots: Vec<Vec<f32>>,
     /// f64 auxiliary slots (same slot-id space as `slots`), sized by the
     /// executor on rebuild; zeroed by `begin_step`. Used by the dense
     /// Adafactor executor for compensated column/RMS partials.
-    pub(super) aux: Vec<Vec<f64>>,
+    pub(crate) aux: Vec<Vec<f64>>,
     /// Per-worker scratch for the compressed executor, grown to the
     /// resolved worker count.
-    pub(super) scratch: Vec<StepScratch>,
+    pub(crate) scratch: Vec<StepScratch>,
     /// f32 reduction scratch, sized to the largest stat slot.
-    pub(super) red: Vec<f32>,
+    pub(crate) red: Vec<f32>,
     /// f64 reduction scratch, sized by the executor on rebuild.
-    pub(super) red64: Vec<f64>,
+    pub(crate) red64: Vec<f64>,
     /// Per-tensor update-clip factors (dense Adafactor), length n.
-    pub(super) invs: Vec<Option<f32>>,
+    pub(crate) invs: Vec<Option<f32>>,
     /// Globally-normalized quantized states (compressed executor).
-    pub(super) globals: Vec<GlobalSlot>,
+    pub(crate) globals: Vec<GlobalSlot>,
     /// Double-buffered packed code arenas, one per entry in `globals`:
     /// phase C encodes into these, and the commit *swaps* them with the
     /// state's packed buffer instead of reallocating.
-    pub(super) new_bufs: Vec<Vec<u8>>,
+    pub(crate) new_bufs: Vec<Vec<u8>>,
     /// Reduced scales per buffer; the commit swaps them with the state's
     /// scales so the previous step's `Scales` storage is recycled.
-    pub(super) new_scales: Vec<Option<Scales>>,
+    pub(crate) new_scales: Vec<Option<Scales>>,
     /// Tensor index -> buffer index (or `usize::MAX`) for m / v.
-    pub(super) m_buf_of: Vec<usize>,
-    pub(super) v_buf_of: Vec<usize>,
+    pub(crate) m_buf_of: Vec<usize>,
+    pub(crate) v_buf_of: Vec<usize>,
     /// Recycled capacity for the per-step borrowed view vectors.
-    pub(super) arena: VecArena,
+    pub(crate) arena: VecArena,
+    /// Offload-pipeline staging slots (the bounded device-scratch
+    /// budget): slot `k mod depth` double-buffers task `k`'s state
+    /// through the host link. Byte arenas hold staged packed codes, f32
+    /// arenas hold staged block scales and f32 states. Grown by
+    /// [`Self::ensure_stage`]; contents are fully overwritten by each
+    /// stage-in before any read.
+    pub(crate) stage_bytes: Vec<Vec<u8>>,
+    pub(crate) stage_vals: Vec<Vec<f32>>,
 }
 
 impl Default for StepContext {
@@ -293,6 +304,8 @@ impl StepContext {
             m_buf_of: Vec::new(),
             v_buf_of: Vec::new(),
             arena: VecArena::new(),
+            stage_bytes: Vec::new(),
+            stage_vals: Vec::new(),
         }
     }
 
@@ -364,8 +377,32 @@ impl StepContext {
         }
     }
 
+    /// Grow the offload staging slots to `depth` entries of at least
+    /// `bytes_len` staged code bytes and `vals_len` staged f32s each —
+    /// the pipeline's bounded device-scratch budget. Idempotent and
+    /// allocation-free once sized.
+    pub(crate) fn ensure_stage(&mut self, depth: usize, bytes_len: usize, vals_len: usize) {
+        let depth = depth.max(1);
+        if self.stage_bytes.len() < depth {
+            self.stage_bytes.resize_with(depth, Vec::new);
+        }
+        if self.stage_vals.len() < depth {
+            self.stage_vals.resize_with(depth, Vec::new);
+        }
+        for b in &mut self.stage_bytes[..depth] {
+            if b.len() < bytes_len {
+                b.resize(bytes_len, 0);
+            }
+        }
+        for v in &mut self.stage_vals[..depth] {
+            if v.len() < vals_len {
+                v.resize(vals_len, 0.0);
+            }
+        }
+    }
+
     /// Grow the per-worker scratch pool to `workers` entries.
-    pub(super) fn ensure_scratch(&mut self, workers: usize) {
+    pub(crate) fn ensure_scratch(&mut self, workers: usize) {
         let want = workers.max(1);
         if self.scratch.len() < want {
             self.scratch.resize_with(want, StepScratch::default);

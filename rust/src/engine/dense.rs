@@ -48,6 +48,39 @@ use crate::optim::{Hyper, Param};
 use crate::tensor::Tensor;
 use crate::util::stats::neumaier_add;
 
+/// The fp32 AdamW elementwise update for one piece's shard-local slices
+/// — shared verbatim by the in-memory executor below and the offload
+/// pipeline (which runs it against staged copies of host-resident
+/// moments), so both mirror
+/// [`crate::optim::adamw::adamw_update_tensor`] bit-exactly per element.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn adamw32_piece(
+    w: &mut [f32],
+    mm: &mut [f32],
+    vv: &mut [f32],
+    g: &[f32],
+    hp: &Hyper,
+    bc1: f32,
+    bc2: f32,
+    lr: f32,
+) {
+    let b1 = hp.beta1;
+    let b2 = hp.beta2;
+    let eps = hp.eps;
+    let wd = hp.weight_decay;
+    for k in 0..g.len() {
+        let gi = g[k];
+        let mi = b1 * mm[k] + (1.0 - b1) * gi;
+        let vi = b2 * vv[k] + (1.0 - b2) * gi * gi;
+        mm[k] = mi;
+        vv[k] = vi;
+        let mhat = mi / bc1;
+        let vhat = vi / bc2;
+        w[k] -= lr * (mhat / (vhat.sqrt() + eps) + wd * w[k]);
+    }
+}
+
 /// One fp32 AdamW step on the shard plan. Mirrors
 /// [`crate::optim::adamw::adamw_update_tensor`] exactly per element.
 #[allow(clippy::too_many_arguments)]
@@ -78,12 +111,8 @@ pub fn adamw32_step(
     let plan = &ctx.plan;
     let arena = &ctx.arena;
     let threads = eng.resolve_threads(plan.tasks.len(), plan.total_elems);
-    let b1 = hp.beta1;
-    let b2 = hp.beta2;
-    let bc1 = 1.0 - b1.powi(t as i32);
-    let bc2 = 1.0 - b2.powi(t as i32);
-    let eps = hp.eps;
-    let wd = hp.weight_decay;
+    let bc1 = 1.0 - hp.beta1.powi(t as i32);
+    let bc2 = 1.0 - hp.beta2.powi(t as i32);
 
     let mut ws = arena.lease();
     ws.extend(params.iter_mut().map(|p| SharedSlice::new(p.tensor.data.as_mut_slice())));
@@ -102,16 +131,7 @@ pub fn adamw32_step(
             let mm = unsafe { ms[piece.tensor].range_mut(lo, hi) };
             let vv = unsafe { vs[piece.tensor].range_mut(lo, hi) };
             let g = &grads[piece.tensor].data[lo..hi];
-            for k in 0..g.len() {
-                let gi = g[k];
-                let mi = b1 * mm[k] + (1.0 - b1) * gi;
-                let vi = b2 * vv[k] + (1.0 - b2) * gi * gi;
-                mm[k] = mi;
-                vv[k] = vi;
-                let mhat = mi / bc1;
-                let vhat = vi / bc2;
-                w[k] -= lr * (mhat / (vhat.sqrt() + eps) + wd * w[k]);
-            }
+            adamw32_piece(w, mm, vv, g, hp, bc1, bc2, lr);
         }
     });
 }

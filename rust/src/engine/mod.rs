@@ -79,6 +79,33 @@
 //! affects results: a rebuilt context replays the identical pure plan,
 //! so warm and cold steps are bit-identical.
 //!
+//! # Transfer tasks and the dependency contract
+//!
+//! The offload pipeline ([`crate::offload::pipeline`]) interleaves
+//! *heterogeneous* task kinds — stage-in transfers, shard computes and
+//! writeback transfers — into one queue executed by
+//! [`StepEngine::run_tasks_dep`] on the same worker pool. The contract:
+//!
+//! 1. **Single backward dependency.** Each queue entry names at most one
+//!    predecessor entry (`deps[i] < i`) that must complete before it
+//!    runs: a compute depends on its shard's stage-in, a writeback on
+//!    its compute, and a stage-in on the writeback that frees its
+//!    scratch slot. Because every dependency points strictly backwards
+//!    and workers claim entries in queue order, the smallest unfinished
+//!    entry is always runnable — no deadlock at any worker count.
+//! 2. **Queue order is a schedule.** The caller emits entries in a
+//!    topologically valid order (prefetch prologue, then
+//!    compute/writeback/next-prefetch per shard), so one thread simply
+//!    runs the queue front to back — the 1-thread schedule stays the
+//!    determinism baseline exactly as for homogeneous phases.
+//! 3. **Determinism is data-level, not schedule-level.** Transfers copy
+//!    between disjoint host ranges and exclusive scratch slots; computes
+//!    use the same per-plan-task RNG streams as in-memory execution.
+//!    Which worker runs what, and when, never affects the bytes
+//!    produced — offloaded steps are bit-identical to in-memory steps at
+//!    every thread count and every prefetch depth
+//!    (`rust/tests/offload_pipeline.rs`).
+//!
 //! # Pool lifecycle
 //!
 //! Worker threads are **persistent**, not spawned per phase: the first
@@ -111,7 +138,7 @@ pub use plan::{build_plan, MetaSpec, Plan, StateLayout, TensorMeta};
 pub use shared::SharedSlice;
 
 use pool::WorkerPool;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Default shard size in elements (~256 KB of f32 values per shard).
@@ -263,6 +290,87 @@ impl StepEngine {
                     break;
                 }
                 f(i, &mut scratch);
+            }
+        };
+        self.pool.ensure(threads).broadcast(threads, &body);
+    }
+
+    /// Execute an *interleaved* task queue with single-predecessor
+    /// dependencies — the offload pipeline's transfer/compute discipline
+    /// (see the module docs' "Transfer tasks and the dependency
+    /// contract"). `deps[i]` names the queue entry that must complete
+    /// before entry `i` may run; it must be `< i`, so the queue order is
+    /// itself a valid sequential schedule (`threads <= 1` just runs the
+    /// loop). On the pool, workers claim indices in order and spin-wait
+    /// (with yields) on an unfinished dependency; because every
+    /// dependency points at an earlier — hence already claimed — entry,
+    /// the smallest unfinished entry is always runnable and the queue
+    /// cannot deadlock at any worker count.
+    ///
+    /// Worker slot `w` exclusively uses `scratch[w]`, exactly as in
+    /// [`Self::run_tasks_with`].
+    pub fn run_tasks_dep<S, F>(
+        &self,
+        threads: usize,
+        deps: &[Option<usize>],
+        scratch: &mut [S],
+        f: F,
+    ) where
+        S: Send,
+        F: Fn(usize, &mut S) + Sync,
+    {
+        let n_tasks = deps.len();
+        if n_tasks == 0 {
+            return;
+        }
+        for (i, d) in deps.iter().enumerate() {
+            if let Some(d) = *d {
+                assert!(d < i, "dependency {d} of queue entry {i} must precede it");
+            }
+        }
+        if threads <= 1 {
+            let s = &mut scratch[0];
+            for i in 0..n_tasks {
+                f(i, &mut *s);
+            }
+            return;
+        }
+        assert!(
+            scratch.len() >= threads,
+            "scratch pool ({}) smaller than the worker count ({threads})",
+            scratch.len()
+        );
+        let done: Vec<AtomicBool> = (0..n_tasks).map(|_| AtomicBool::new(false)).collect();
+        let done = &done[..];
+        let next = AtomicUsize::new(0);
+        let next = &next;
+        let f = &f;
+        let deps = &deps[..];
+        let scratch_view = SharedSlice::new(scratch);
+        let scratch_view = &scratch_view;
+        let body = move |slot: usize| {
+            // SAFETY: the pool hands each broadcast participant a
+            // distinct slot in 0..threads, so scratch entries have a
+            // single owner.
+            let slot_scratch = unsafe { scratch_view.range_mut(slot, slot + 1) };
+            let s = &mut slot_scratch[0];
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_tasks {
+                    break;
+                }
+                if let Some(d) = deps[i] {
+                    // The dependency was claimed before `i` (in-order
+                    // claiming); its worker makes progress because the
+                    // smallest unfinished entry never waits (deps point
+                    // strictly backwards), so this spin terminates.
+                    while !done[d].load(Ordering::Acquire) {
+                        std::hint::spin_loop();
+                        std::thread::yield_now();
+                    }
+                }
+                f(i, &mut *s);
+                done[i].store(true, Ordering::Release);
             }
         };
         self.pool.ensure(threads).broadcast(threads, &body);
@@ -425,6 +533,42 @@ mod tests {
                 assert_eq!(h.load(Ordering::Relaxed), 3, "task {i} at {threads} threads");
             }
         }
+    }
+
+    #[test]
+    fn run_tasks_dep_honors_dependencies() {
+        // Chain i -> i-3 (a depth-3 slot-reuse pattern): when a task
+        // runs, its dependency must already have run, at every thread
+        // count, and every entry runs exactly once.
+        for threads in [1usize, 2, 7] {
+            let n = 40;
+            let deps: Vec<Option<usize>> =
+                (0..n).map(|i| if i >= 3 { Some(i - 3) } else { None }).collect();
+            let done: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            let violations = AtomicU64::new(0);
+            let eng = StepEngine::new().with_threads(threads);
+            let mut scratch = vec![(); threads];
+            eng.run_tasks_dep(threads, &deps, &mut scratch, |i, _: &mut ()| {
+                if let Some(d) = deps[i] {
+                    if done[d].load(Ordering::Acquire) == 0 {
+                        violations.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                done[i].fetch_add(1, Ordering::Release);
+            });
+            assert_eq!(violations.load(Ordering::Relaxed), 0, "{threads} threads");
+            for (i, d) in done.iter().enumerate() {
+                assert_eq!(d.load(Ordering::Relaxed), 1, "entry {i} at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must precede it")]
+    fn run_tasks_dep_rejects_forward_dependency() {
+        let eng = StepEngine::new().with_threads(2);
+        let mut scratch = vec![(); 2];
+        eng.run_tasks_dep(2, &[Some(1), None], &mut scratch, |_i, _: &mut ()| {});
     }
 
     #[test]

@@ -124,6 +124,18 @@ pub struct Piece {
     pub v_slot: Option<usize>,
 }
 
+impl Piece {
+    /// Elements covered by this piece (used by the offload tier when
+    /// laying out fp32 staging segments).
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hi == self.lo
+    }
+}
+
 /// One unit of work: a few pieces executed back-to-back by one worker,
 /// with one RNG stream.
 #[derive(Clone, Debug, Default)]

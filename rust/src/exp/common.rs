@@ -21,6 +21,10 @@ use crate::util::table::Table;
 pub struct ExpContext {
     /// Quick mode: fewer steps/seeds; used by tests and smoke runs.
     pub quick: bool,
+    /// Measured-offload mode (`lowbit exp table4 --measured`): run the
+    /// executable offload pipeline and report its virtual-time speedups
+    /// next to the analytic ones.
+    pub measured: bool,
     pub out_dir: String,
 }
 
@@ -28,8 +32,15 @@ impl ExpContext {
     pub fn new(quick: bool) -> ExpContext {
         ExpContext {
             quick,
+            measured: false,
             out_dir: crate::util::results_dir(),
         }
+    }
+
+    /// Enable the measured-offload sub-table of table 4.
+    pub fn with_measured(mut self, measured: bool) -> ExpContext {
+        self.measured = measured;
+        self
     }
 
     pub fn seeds(&self) -> usize {

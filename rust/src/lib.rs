@@ -9,8 +9,9 @@
 //!   shard-parallel optimizer step engine ([`engine`]), optimizer zoo
 //!   ([`optim`]), builtin training engines ([`train`]), synthetic data
 //!   ([`data`]), the PJRT runtime ([`runtime`]) that executes the AOT
-//!   artifacts, memory accounting ([`memory`]), the offload simulator
-//!   ([`offload`]), and the paper-experiment harness ([`exp`]).
+//!   artifacts, memory accounting ([`memory`]), the offload tier —
+//!   analytic oracle + executable host-state pipeline ([`offload`]) —
+//!   and the paper-experiment harness ([`exp`]).
 
 pub mod util;
 pub mod tensor;

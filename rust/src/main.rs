@@ -211,7 +211,12 @@ fn run_training(cfg: &RunConfig) -> anyhow::Result<()> {
 fn cmd_exp(argv: &[String]) -> i32 {
     let cmd = Command::new("exp", "regenerate a paper table/figure")
         .opt("id", "experiment id (table1..table6, fig1..fig4, all)", Some("all"))
-        .flag("full", "full scale (more steps/seeds; default is quick)");
+        .flag("full", "full scale (more steps/seeds; default is quick)")
+        .flag(
+            "measured",
+            "table4: also run the executable offload pipeline and report \
+             measured virtual-time speedups next to the analytic ones",
+        );
     let args = match cmd.parse(argv) {
         Ok(a) => a,
         Err(msg) => {
@@ -225,7 +230,7 @@ fn cmd_exp(argv: &[String]) -> i32 {
         .map(|s| s.as_str())
         .unwrap_or_else(|| args.get_or("id", "all"))
         .to_string();
-    let ctx = ExpContext::new(!args.has_flag("full"));
+    let ctx = ExpContext::new(!args.has_flag("full")).with_measured(args.has_flag("measured"));
     let ids: Vec<&str> = if id == "all" { exp::ids() } else { vec![id.as_str()] };
     for id in ids {
         eprintln!(

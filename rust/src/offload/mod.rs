@@ -1,14 +1,46 @@
-//! Offload / sharding communication simulator.
+//! Offload: the host-resident state tier — an analytic oracle *and* an
+//! executable pipeline.
 //!
 //! The paper's Tab. 4 shows 4-bit states *speeding up* LLaMA fine-tuning
-//! under FSDP because optimizer-state traffic shrinks. We cannot measure
-//! two A100s here, so this module models the communication arithmetic:
-//! per training step the optimizer states cross a link (PCIe for
-//! ZeRO-Offload-style CPU offload, NVLink/IB for sharded updates), and the
-//! step time is `max(compute, comm)` for the overlapped fraction plus the
-//! serial remainder. The *relative* speedups between 32/8/4-bit states —
-//! what the paper claims — fall out of the byte counts, which we take from
-//! the exact accounting in [`crate::memory`].
+//! under FSDP because optimizer-state traffic shrinks ~8×. This module
+//! reproduces that claim at two levels of fidelity:
+//!
+//! 1. **The analytic model** (this file): per training step the
+//!    optimizer states cross a link (PCIe for ZeRO-Offload-style CPU
+//!    offload, NVLink/IB for sharded updates) once down and once up;
+//!    the step time is the compute plus the communication that could
+//!    not hide under the overlappable fraction of it. Byte counts come
+//!    from the exact accounting in [`crate::memory`]. Cheap, closed
+//!    form — and nothing moves.
+//! 2. **The executable pipeline** ([`tier`], [`link`], [`pipeline`]):
+//!    real optimizer steps run with their states *actually resident in
+//!    a host tier*. Every shard task's state segments are staged
+//!    through a bounded device-scratch budget (prefetch depth × slot
+//!    size), the exact in-memory update kernels run against the staged
+//!    copies, and mutated segments are written back — all interleaved
+//!    with compute on the step engine's worker pool under a dependency
+//!    discipline (see `engine/mod.rs`, "Transfer tasks and the
+//!    dependency contract"). Results are **bit-identical** to in-memory
+//!    execution at every thread count and prefetch depth. Time is
+//!    *virtual*: each transfer is charged `latency + bytes/bandwidth`
+//!    and folded into deterministic overlapped/serial totals — no
+//!    wall-clock sleeps, so the timing tests are fast and exact.
+//!
+//! The analytic model is the **convergence oracle** for the pipeline:
+//! as the shard count grows (edge effects vanish) and the per-transfer
+//! latency term stays negligible, the pipeline's virtual step time
+//! approaches `simulate_step`'s estimate — pinned, preset by preset, in
+//! `rust/tests/offload_pipeline.rs`. Two accounted divergences: the
+//! pipeline charges latency per transfer (the oracle once per step),
+//! and globally-normalized 4-bit states cross the link a third time for
+//! the phase-C re-encode (see the [`pipeline`] docs).
+
+pub mod link;
+pub mod pipeline;
+pub mod tier;
+
+pub use link::{LinkTotals, ThrottledLink};
+pub use pipeline::{OffloadConfig, OffloadReport, OffloadState};
 
 use crate::memory::{model_state_bytes, StatePreset};
 use crate::model::TransformerConfig;
@@ -59,7 +91,11 @@ pub struct StepEstimate {
 
 /// Per-step time when optimizer states of `cfg` under `preset` must cross
 /// the link once per step (down + up = 2x for offload round trip).
-pub fn simulate_step(cfg: &TransformerConfig, preset: StatePreset, link: &LinkModel) -> StepEstimate {
+pub fn simulate_step(
+    cfg: &TransformerConfig,
+    preset: StatePreset,
+    link: &LinkModel,
+) -> StepEstimate {
     let state_bytes = model_state_bytes(cfg, preset);
     let comm = link.latency + (2 * state_bytes) as f64 / link.bandwidth;
     let hidden = comm.min(link.compute_per_step * link.overlap);

@@ -1,0 +1,762 @@
+//! The executable offload pipeline: real optimizer steps against the
+//! host-resident state tier, with prefetch/compute/writeback overlap.
+//!
+//! Each shard task of the engine's plan becomes a three-entry chain in
+//! one interleaved queue — **stage-in** (copy the task's state segments
+//! from the host tier into a device-scratch slot), **compute** (run the
+//! exact same per-piece kernels as in-memory execution, against the
+//! staged copies), **writeback** (copy the mutated segments home). A
+//! prefetch depth of `D` gives `D` scratch slots, so up to `D` tasks'
+//! state is in flight while earlier tasks compute; stage-in of task
+//! `k + D` waits only for the writeback of task `k` (its slot's previous
+//! tenant). The whole queue runs on the engine's persistent worker pool
+//! through [`StepEngine::run_tasks_dep`] — see the "Transfer tasks and
+//! the dependency contract" section of the engine docs.
+//!
+//! **Bit-identity.** Compute entries call the kernels shared with the
+//! in-memory executor (`engine::adamw4::update_piece` /
+//! `decode_ema_piece`, `engine::dense::adamw32_piece`) with the same
+//! per-plan-task RNG streams, the cross-shard reductions are the same
+//! sequential shard-order code, and staging is byte-exact copying — so
+//! offloaded steps equal in-memory steps bit-for-bit at every thread
+//! count and every prefetch depth (pinned by
+//! `rust/tests/offload_pipeline.rs`).
+//!
+//! **Virtual time.** Transfers move real bytes but are *charged*, not
+//! timed: the per-task byte counts from the tier plan are folded by
+//! [`ThrottledLink::step_totals`] into deterministic overlapped/serial
+//! totals (no wall-clock sleeps, no schedule dependence). The analytic
+//! model in [`super`] is the convergence oracle for these totals.
+//!
+//! **Traffic shape.** fp32 and block-normalized states cross the link
+//! exactly twice per step (down + up). Globally-normalized states cross
+//! **three** times: phase A stages their codes down for the update and
+//! scale statistics, and phase C stages them down again to re-encode
+//! against the reduced scales, writing the fresh codes back. That extra
+//! down-pass is the honest price of global normalization under offload;
+//! it is fully accounted in the link totals (and is hidden under
+//! compute in every realistic profile). Phase C re-encodes *in place* in
+//! the scratch slot, so no double-buffer arenas are allocated for
+//! offloaded execution.
+
+use super::link::{LinkTotals, ThrottledLink};
+use super::tier::{self, TierPlan};
+use super::LinkModel;
+use crate::engine::adamw4::{
+    commit_globals, decode_ema_piece, ensure_compressed_ctx, phase_f, reduce_global_scales,
+    update_piece, MSrc, StepParams, VSrc,
+};
+use crate::engine::ctx::{StepContext, StepScratch};
+use crate::engine::plan::{MetaSpec, StateLayout};
+use crate::engine::{dense, step_seed, SharedSlice, StepEngine, PHASE_C_STREAM_BASE};
+use crate::optim::state::{MomentState, SecondState};
+use crate::optim::{Hyper, Param};
+use crate::quant::{QuantMap, Scales};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Offload-execution configuration: the link profile to charge and the
+/// prefetch depth (number of device-scratch slots).
+#[derive(Clone, Copy, Debug)]
+pub struct OffloadConfig {
+    pub link: LinkModel,
+    /// 1 = strictly serial stage-in → compute → writeback per task;
+    /// ≥ 2 prefetches ahead, overlapping transfers with compute.
+    pub depth: usize,
+}
+
+impl OffloadConfig {
+    pub fn new(link: LinkModel, depth: usize) -> OffloadConfig {
+        assert!(depth >= 1, "prefetch depth must be at least 1");
+        OffloadConfig { link, depth }
+    }
+}
+
+/// Accumulated virtual-time measurements of offloaded steps.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OffloadReport {
+    pub steps: u64,
+    pub bytes_down: u64,
+    pub bytes_up: u64,
+    pub transfers: u64,
+    pub comm_seconds: f64,
+    pub hidden_seconds: f64,
+    pub compute_seconds: f64,
+    /// Σ per-step virtual wall time (compute + serial communication).
+    pub virtual_seconds: f64,
+}
+
+impl OffloadReport {
+    /// Mean virtual step time.
+    pub fn step_seconds(&self) -> f64 {
+        self.virtual_seconds / self.steps.max(1) as f64
+    }
+
+    /// Fraction of link time hidden behind compute.
+    pub fn overlap_fraction(&self) -> f64 {
+        if self.comm_seconds > 0.0 {
+            self.hidden_seconds / self.comm_seconds
+        } else {
+            0.0
+        }
+    }
+
+    fn absorb(&mut self, t: &LinkTotals, compute: f64) {
+        self.steps += 1;
+        self.bytes_down += t.bytes_down;
+        self.bytes_up += t.bytes_up;
+        self.transfers += t.transfers;
+        self.comm_seconds += t.comm_seconds;
+        self.hidden_seconds += t.hidden_seconds;
+        self.compute_seconds += compute;
+        self.virtual_seconds += t.step_seconds;
+    }
+}
+
+/// One entry of the interleaved queue; the payload indexes the phase's
+/// staging list.
+#[derive(Clone, Copy, Debug)]
+enum Entry {
+    In(usize),
+    Compute(usize),
+    Out(usize),
+}
+
+type Queue = (Vec<Entry>, Vec<Option<usize>>);
+
+/// Emit the interleaved queue for `n` staged tasks at prefetch depth
+/// `d`: a prologue of `min(d, n)` stage-ins, then per task its compute,
+/// its writeback, and the stage-in of the task that reuses its slot.
+/// The order is a valid sequential schedule and every dependency points
+/// backwards (the engine asserts both).
+fn build_queue(n: usize, depth: usize) -> Queue {
+    let d = depth.max(1);
+    let mut entries = Vec::with_capacity(3 * n);
+    let mut deps = Vec::with_capacity(3 * n);
+    let mut idx_in = vec![usize::MAX; n];
+    for p in 0..d.min(n) {
+        idx_in[p] = entries.len();
+        entries.push(Entry::In(p));
+        deps.push(None);
+    }
+    for p in 0..n {
+        let compute_idx = entries.len();
+        entries.push(Entry::Compute(p));
+        deps.push(Some(idx_in[p]));
+        let out_idx = entries.len();
+        entries.push(Entry::Out(p));
+        deps.push(Some(compute_idx));
+        let q = p + d;
+        if q < n {
+            // Task q reuses task p's slot (q ≡ p mod d): prefetch as
+            // soon as the slot drains.
+            idx_in[q] = entries.len();
+            entries.push(Entry::In(q));
+            deps.push(Some(out_idx));
+        }
+    }
+    (entries, deps)
+}
+
+/// Per-optimizer offload execution state: the configuration, the
+/// accumulated report, and the cached tier plan + queues (rebuilt when
+/// the step context's generation changes — i.e. exactly when the shard
+/// plan itself was rebuilt).
+pub struct OffloadState {
+    pub cfg: OffloadConfig,
+    pub report: OffloadReport,
+    tier: Option<TierPlan>,
+    queue_a: Queue,
+    queue_c: Queue,
+    generation: u64,
+}
+
+impl OffloadState {
+    pub fn new(cfg: OffloadConfig) -> OffloadState {
+        OffloadState {
+            cfg,
+            report: OffloadReport::default(),
+            tier: None,
+            queue_a: (Vec::new(), Vec::new()),
+            queue_c: (Vec::new(), Vec::new()),
+            generation: 0,
+        }
+    }
+}
+
+/// Run one interleaved queue on the engine: transfers and computes drain
+/// from the same worker pool under the dependency discipline.
+fn run_queue<T, C>(
+    eng: &StepEngine,
+    threads: usize,
+    queue: &Queue,
+    scratch: &mut [StepScratch],
+    transfer: &T,
+    compute: &C,
+) where
+    T: Fn(usize, bool) + Sync,
+    C: Fn(usize, &mut StepScratch) + Sync,
+{
+    let (entries, deps) = queue;
+    let entries = &entries[..];
+    eng.run_tasks_dep(threads, deps, scratch, |qi, s: &mut StepScratch| match entries[qi] {
+        Entry::In(p) => transfer(p, true),
+        Entry::Out(p) => transfer(p, false),
+        Entry::Compute(p) => compute(p, s),
+    });
+}
+
+/// Per-tensor device-resident context (weights and gradients are not
+/// offloaded; only optimizer state is).
+struct OffTensor<'a> {
+    shape: &'a [usize],
+    cols: usize,
+    w: SharedSlice<'a, f32>,
+    g: &'a [f32],
+}
+
+fn v_map_of<'a>(sp: &StepParams<'a>, ndim: usize) -> &'a QuantMap {
+    if ndim >= 2 { sp.v_map } else { sp.v1_map }.expect("cached v map exists for quantized v")
+}
+
+/// One offloaded step of the compressed optimizer — the staged
+/// counterpart of [`crate::engine::compressed_step`], bit-identical to
+/// it at every thread count and prefetch depth.
+#[allow(clippy::too_many_arguments)]
+pub fn compressed_offloaded_step(
+    eng: &StepEngine,
+    ctx: &mut StepContext,
+    os: &mut OffloadState,
+    sp: &StepParams,
+    params: &mut [Param],
+    grads: &[Tensor],
+    m_states: &mut [MomentState],
+    v_states: &mut [SecondState],
+) {
+    let n = params.len();
+    debug_assert_eq!(grads.len(), n);
+    debug_assert_eq!(m_states.len(), n);
+    debug_assert_eq!(v_states.len(), n);
+
+    ensure_compressed_ctx(ctx, eng.shard_elems(), params, m_states, v_states, false);
+    if ctx.plan.tasks.is_empty() {
+        return;
+    }
+    if os.tier.is_none() || os.generation != ctx.generation() {
+        let tp = tier::build_tier_plan(&ctx.plan, &ctx.metas, m_states, v_states);
+        os.queue_a = build_queue(tp.a.len(), os.cfg.depth);
+        os.queue_c = build_queue(tp.c.len(), os.cfg.depth);
+        os.tier = Some(tp);
+        os.generation = ctx.generation();
+    }
+    ctx.begin_step();
+    let threads = eng.resolve_threads(ctx.plan.tasks.len(), ctx.plan.total_elems);
+    ctx.ensure_scratch(threads);
+    let depth = os.cfg.depth.max(1);
+    {
+        let tp = os.tier.as_ref().expect("tier plan built above");
+        ctx.ensure_stage(depth, tp.slot_bytes, tp.slot_vals);
+    }
+    let tp = os.tier.as_ref().expect("tier plan built above");
+
+    let StepContext {
+        metas,
+        plan,
+        slots,
+        scratch,
+        red,
+        globals,
+        new_scales,
+        m_buf_of,
+        v_buf_of,
+        arena,
+        stage_bytes,
+        stage_vals,
+        ..
+    } = ctx;
+    let plan = &*plan;
+    let metas = &*metas;
+    let globals = &*globals;
+    let (m_buf_of, v_buf_of) = (&*m_buf_of, &*v_buf_of);
+
+    let seed = step_seed(sp.base_seed, sp.t as u64);
+    let hp = sp.hp;
+
+    // ---------------- Phase F: factored-v statistics -----------------
+    // Gradients are device-resident and factored stats stay resident,
+    // so phase F runs exactly as in memory — no staging involved.
+    if metas.iter().any(|m| m.v == StateLayout::Factored) {
+        phase_f(eng, threads, plan, metas, slots, red, arena, grads, &hp, v_states);
+    }
+
+    {
+        // Host views over the optimizer's state buffers (the tier) and
+        // device views over params/grads and the scratch slots.
+        let mut m_hosts = arena.lease::<tier::HostMoment>();
+        m_hosts.extend(m_states.iter_mut().map(tier::host_m));
+        let mut v_hosts = arena.lease::<tier::HostMoment>();
+        v_hosts.extend(v_states.iter_mut().map(tier::host_v));
+        let (m_hosts, v_hosts) = (m_hosts.as_slice(), v_hosts.as_slice());
+        let mut tens = arena.lease::<OffTensor>();
+        tens.extend(params.iter_mut().zip(grads.iter()).enumerate().map(|(i, (p, g))| {
+            let shape: &[usize] = &metas[i].shape;
+            let cols = if shape.len() >= 2 {
+                metas[i].numel / shape[0]
+            } else {
+                metas[i].numel
+            };
+            OffTensor {
+                shape,
+                cols,
+                w: SharedSlice::new(p.tensor.data.as_mut_slice()),
+                g: &g.data,
+            }
+        }));
+        let tens = tens.as_slice();
+        let mut sb_views = arena.lease::<SharedSlice<u8>>();
+        sb_views.extend(
+            stage_bytes[..depth].iter_mut().map(|b| SharedSlice::new(b.as_mut_slice())),
+        );
+        let sb_views = sb_views.as_slice();
+        let mut sv_views = arena.lease::<SharedSlice<f32>>();
+        sv_views.extend(stage_vals[..depth].iter_mut().map(|v| SharedSlice::new(v.as_mut_slice())));
+        let sv_views = sv_views.as_slice();
+
+        // ------- Phase A: staged prefetch / update / writeback -------
+        {
+            let mut slot_views = arena.lease::<SharedSlice<f32>>();
+            slot_views.extend(slots.iter_mut().map(|s| SharedSlice::new(s.as_mut_slice())));
+            let slot_views = slot_views.as_slice();
+            let stagings = &tp.a[..];
+            let transfer = |pos: usize, to_device: bool| {
+                let ts = &stagings[pos];
+                tier::copy_task_segments(
+                    ts,
+                    &plan.tasks[ts.task].pieces,
+                    m_hosts,
+                    v_hosts,
+                    sb_views[pos % depth],
+                    sv_views[pos % depth],
+                    to_device,
+                    !to_device,
+                );
+            };
+            let compute = |pos: usize, scratch: &mut StepScratch| {
+                let ts = &stagings[pos];
+                let sb = sb_views[pos % depth];
+                let sv = sv_views[pos % depth];
+                let pieces = &plan.tasks[ts.task].pieces;
+                let mut rng = Pcg64::new(seed, ts.task as u64);
+                for (ps, piece) in ts.pieces.iter().zip(pieces.iter()) {
+                    let (lo, hi) = (piece.lo, piece.hi);
+                    let tc = &tens[piece.tensor];
+                    // SAFETY: pieces partition each tensor disjointly
+                    // (plan invariant), so this task is the sole writer
+                    // of w[lo..hi).
+                    let w = unsafe { tc.w.range_mut(lo, hi) };
+                    let g = &tc.g[lo..hi];
+                    let m_src = match (&m_hosts[piece.tensor], &ps.m) {
+                        (tier::HostMoment::F32(_), Some(seg)) => {
+                            // SAFETY: the slot is exclusive to this task
+                            // between its stage-in and writeback
+                            // (dependency discipline).
+                            MSrc::F32(unsafe {
+                                sv.range_mut(seg.vals_off, seg.vals_off + seg.vals_len)
+                            })
+                        }
+                        (tier::HostMoment::Block { q, block, .. }, Some(seg)) => MSrc::Block {
+                            q: *q,
+                            map: sp.m_map.expect("cached m map exists for quantized m"),
+                            block: *block,
+                            // SAFETY: exclusive slot (dependency
+                            // discipline).
+                            packed: unsafe {
+                                sb.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len)
+                            },
+                            scales: unsafe {
+                                sv.range_mut(seg.vals_off, seg.vals_off + seg.vals_len)
+                            },
+                        },
+                        (tier::HostMoment::Global { q, scales, .. }, Some(seg)) => {
+                            let slot_id = piece.m_slot.expect("global m has a slot");
+                            // SAFETY: one stat slot per piece (plan
+                            // invariant); exclusive scratch slot.
+                            let stat = unsafe {
+                                slot_views[slot_id].range_mut(0, slot_views[slot_id].len())
+                            };
+                            let pk: &[u8] = unsafe {
+                                sb.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len)
+                            };
+                            MSrc::Global {
+                                q: *q,
+                                map: sp.m_map.expect("cached m map exists for quantized m"),
+                                packed: pk,
+                                scales: *scales,
+                                stat,
+                            }
+                        }
+                        _ => unreachable!("first moment is always staged in phase A"),
+                    };
+                    let v_src = match (&v_hosts[piece.tensor], &ps.v) {
+                        (tier::HostMoment::F32(_), Some(seg)) => {
+                            // SAFETY: exclusive slot (dependency
+                            // discipline).
+                            VSrc::F32(unsafe {
+                                sv.range_mut(seg.vals_off, seg.vals_off + seg.vals_len)
+                            })
+                        }
+                        (tier::HostMoment::Block { q, block, .. }, Some(seg)) => VSrc::Block {
+                            q: *q,
+                            map: v_map_of(sp, tc.shape.len()),
+                            block: *block,
+                            // SAFETY: exclusive slot (dependency
+                            // discipline).
+                            packed: unsafe {
+                                sb.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len)
+                            },
+                            scales: unsafe {
+                                sv.range_mut(seg.vals_off, seg.vals_off + seg.vals_len)
+                            },
+                        },
+                        (tier::HostMoment::Global { q, scales, .. }, Some(seg)) => {
+                            let slot_id = piece.v_slot.expect("global v has a slot");
+                            // SAFETY: one stat slot per piece (plan
+                            // invariant); exclusive scratch slot.
+                            let stat = unsafe {
+                                slot_views[slot_id].range_mut(0, slot_views[slot_id].len())
+                            };
+                            let pk: &[u8] = unsafe {
+                                sb.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len)
+                            };
+                            VSrc::Global {
+                                q: *q,
+                                map: v_map_of(sp, tc.shape.len()),
+                                packed: pk,
+                                scales: *scales,
+                                stat,
+                            }
+                        }
+                        (tier::HostMoment::Factored { f, row_mean }, None) => VSrc::Factored {
+                            f: *f,
+                            row_mean: *row_mean,
+                        },
+                        _ => unreachable!("v staging matches its storage form"),
+                    };
+                    update_piece(
+                        lo, tc.shape, tc.cols, w, g, m_src, v_src, &hp, sp.t, sp.lr, scratch,
+                        &mut rng,
+                    );
+                }
+            };
+            run_queue(eng, threads, &os.queue_a, &mut scratch[..], &transfer, &compute);
+        }
+
+        // ---------- Reduce A→C: combine scale statistics -------------
+        reduce_global_scales(plan, metas, globals, slots, red, new_scales);
+
+        // --------------- Phase C: global re-encode -------------------
+        if !tp.c.is_empty() {
+            let stagings = &tp.c[..];
+            let new_scales_ref: &[Option<Scales>] = &new_scales[..];
+            let transfer = |pos: usize, to_device: bool| {
+                let ts = &stagings[pos];
+                tier::copy_task_segments(
+                    ts,
+                    &plan.tasks[ts.task].pieces,
+                    m_hosts,
+                    v_hosts,
+                    sb_views[pos % depth],
+                    sv_views[pos % depth],
+                    to_device,
+                    !to_device,
+                );
+            };
+            let compute = |pos: usize, scratch: &mut StepScratch| {
+                let ts = &stagings[pos];
+                let sb = sb_views[pos % depth];
+                let pieces = &plan.tasks[ts.task].pieces;
+                let mut rng = Pcg64::new(seed, PHASE_C_STREAM_BASE + ts.task as u64);
+                for (ps, piece) in ts.pieces.iter().zip(pieces.iter()) {
+                    let (lo, hi) = (piece.lo, piece.hi);
+                    let tc = &tens[piece.tensor];
+                    let g = &tc.g[lo..hi];
+                    if let (tier::HostMoment::Global { q, scales, .. }, Some(seg)) =
+                        (&m_hosts[piece.tensor], &ps.m)
+                    {
+                        let map = sp.m_map.expect("cached m map exists for quantized m");
+                        {
+                            // SAFETY: exclusive slot; this shared view
+                            // dies before the re-encode view below.
+                            let old: &[u8] = unsafe {
+                                sb.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len)
+                            };
+                            decode_ema_piece(
+                                q.bits, map, old, scales, lo, tc.shape, g, hp.beta1, false,
+                                &mut scratch.m,
+                            );
+                        }
+                        let new_sc = new_scales_ref[m_buf_of[piece.tensor]]
+                            .as_ref()
+                            .expect("reduced m scales");
+                        // SAFETY: exclusive slot; in-place re-encode
+                        // strictly after the decode completed.
+                        let dst =
+                            unsafe { sb.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len) };
+                        q.encode_range_with_scales(
+                            map,
+                            &scratch.m[..hi - lo],
+                            lo,
+                            tc.shape,
+                            new_sc,
+                            dst,
+                            &mut rng,
+                        );
+                    }
+                    if let (tier::HostMoment::Global { q, scales, .. }, Some(seg)) =
+                        (&v_hosts[piece.tensor], &ps.v)
+                    {
+                        let map = v_map_of(sp, tc.shape.len());
+                        {
+                            // SAFETY: exclusive slot; shared view dies
+                            // before the re-encode view below.
+                            let old: &[u8] = unsafe {
+                                sb.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len)
+                            };
+                            decode_ema_piece(
+                                q.bits, map, old, scales, lo, tc.shape, g, hp.beta2, true,
+                                &mut scratch.v,
+                            );
+                        }
+                        let new_sc = new_scales_ref[v_buf_of[piece.tensor]]
+                            .as_ref()
+                            .expect("reduced v scales");
+                        // SAFETY: exclusive slot; in-place re-encode
+                        // strictly after the decode completed.
+                        let dst =
+                            unsafe { sb.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len) };
+                        q.encode_range_with_scales(
+                            map,
+                            &scratch.v[..hi - lo],
+                            lo,
+                            tc.shape,
+                            new_sc,
+                            dst,
+                            &mut rng,
+                        );
+                    }
+                }
+            };
+            run_queue(eng, threads, &os.queue_c, &mut scratch[..], &transfer, &compute);
+        }
+    }
+
+    // Commit: the fresh codes are already home (phase C wrote back in
+    // place); only the reduced scales swap in.
+    commit_globals(globals, None, new_scales, m_states, v_states);
+
+    // ------------------- Virtual-time accounting ---------------------
+    let totals = {
+        let mut pairs_a = arena.lease::<(u64, u64)>();
+        pairs_a.extend(tp.a.iter().map(|ts| (ts.down_bytes, ts.up_bytes)));
+        let mut pairs_c = arena.lease::<(u64, u64)>();
+        pairs_c.extend(tp.c.iter().map(|ts| (ts.down_bytes, ts.up_bytes)));
+        ThrottledLink::new(os.cfg.link)
+            .step_totals(depth, &[pairs_a.as_slice(), pairs_c.as_slice()])
+    };
+    os.report.absorb(&totals, os.cfg.link.compute_per_step);
+}
+
+/// One offloaded fp32-AdamW step — the staged counterpart of
+/// [`crate::engine::dense::adamw32_step`], bit-identical to it (and to
+/// the sequential reference loop) at every thread count and depth. Both
+/// moments stage as fp32 segments, so the per-step traffic is exactly
+/// `2 × state_bytes` — the analytic model's assumption, which makes this
+/// the cleanest convergence check against the oracle.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_offloaded_step(
+    eng: &StepEngine,
+    ctx: &mut StepContext,
+    os: &mut OffloadState,
+    hp: &Hyper,
+    t: usize,
+    lr: f32,
+    params: &mut [Param],
+    grads: &[Tensor],
+    m: &mut [Tensor],
+    v: &mut [Tensor],
+) {
+    let n = params.len();
+    debug_assert_eq!(grads.len(), n);
+    debug_assert_eq!(m.len(), n);
+    debug_assert_eq!(v.len(), n);
+    {
+        let params_ref: &[Param] = &*params;
+        ctx.ensure(eng.shard_elems(), n, |i| {
+            MetaSpec::elementwise(params_ref[i].tensor.numel(), &params_ref[i].tensor.shape)
+        });
+    }
+    if ctx.plan.tasks.is_empty() {
+        return;
+    }
+    if os.tier.is_none() || os.generation != ctx.generation() {
+        let tp = tier::build_dense_tier_plan(&ctx.plan);
+        os.queue_a = build_queue(tp.a.len(), os.cfg.depth);
+        os.queue_c = build_queue(0, os.cfg.depth);
+        os.tier = Some(tp);
+        os.generation = ctx.generation();
+    }
+    let threads = eng.resolve_threads(ctx.plan.tasks.len(), ctx.plan.total_elems);
+    ctx.ensure_scratch(threads);
+    let depth = os.cfg.depth.max(1);
+    {
+        let tp = os.tier.as_ref().expect("tier plan built above");
+        ctx.ensure_stage(depth, tp.slot_bytes, tp.slot_vals);
+    }
+    let tp = os.tier.as_ref().expect("tier plan built above");
+
+    let StepContext {
+        plan,
+        scratch,
+        arena,
+        stage_bytes,
+        stage_vals,
+        ..
+    } = ctx;
+    let plan = &*plan;
+    let bc1 = 1.0 - hp.beta1.powi(t as i32);
+    let bc2 = 1.0 - hp.beta2.powi(t as i32);
+
+    {
+        let mut m_hosts = arena.lease::<tier::HostMoment>();
+        m_hosts.extend(
+            m.iter_mut()
+                .map(|t| tier::HostMoment::F32(SharedSlice::new(t.data.as_mut_slice()))),
+        );
+        let mut v_hosts = arena.lease::<tier::HostMoment>();
+        v_hosts.extend(
+            v.iter_mut()
+                .map(|t| tier::HostMoment::F32(SharedSlice::new(t.data.as_mut_slice()))),
+        );
+        let (m_hosts, v_hosts) = (m_hosts.as_slice(), v_hosts.as_slice());
+        let mut ws = arena.lease::<SharedSlice<f32>>();
+        ws.extend(params.iter_mut().map(|p| SharedSlice::new(p.tensor.data.as_mut_slice())));
+        let ws = ws.as_slice();
+        let mut sv_views = arena.lease::<SharedSlice<f32>>();
+        sv_views.extend(stage_vals[..depth].iter_mut().map(|s| SharedSlice::new(s.as_mut_slice())));
+        let sv_views = sv_views.as_slice();
+        let mut sb_views = arena.lease::<SharedSlice<u8>>();
+        sb_views.extend(
+            stage_bytes[..depth].iter_mut().map(|b| SharedSlice::new(b.as_mut_slice())),
+        );
+        let sb_views = sb_views.as_slice();
+
+        let stagings = &tp.a[..];
+        let transfer = |pos: usize, to_device: bool| {
+            let ts = &stagings[pos];
+            tier::copy_task_segments(
+                ts,
+                &plan.tasks[ts.task].pieces,
+                m_hosts,
+                v_hosts,
+                sb_views[pos % depth],
+                sv_views[pos % depth],
+                to_device,
+                !to_device,
+            );
+        };
+        let compute = |pos: usize, _s: &mut StepScratch| {
+            let ts = &stagings[pos];
+            let sv = sv_views[pos % depth];
+            for (ps, piece) in ts.pieces.iter().zip(plan.tasks[ts.task].pieces.iter()) {
+                let (lo, hi) = (piece.lo, piece.hi);
+                // SAFETY: disjoint piece ranges (plan invariant).
+                let w = unsafe { ws[piece.tensor].range_mut(lo, hi) };
+                let g = &grads[piece.tensor].data[lo..hi];
+                let (Some(msg), Some(vsg)) = (&ps.m, &ps.v) else {
+                    unreachable!("dense states always stage")
+                };
+                // SAFETY: exclusive slot between stage-in and writeback
+                // (dependency discipline); the two segments are disjoint
+                // sub-ranges of the slot.
+                let mm = unsafe { sv.range_mut(msg.vals_off, msg.vals_off + msg.vals_len) };
+                let vv = unsafe { sv.range_mut(vsg.vals_off, vsg.vals_off + vsg.vals_len) };
+                dense::adamw32_piece(w, mm, vv, g, hp, bc1, bc2, lr);
+            }
+        };
+        run_queue(eng, threads, &os.queue_a, &mut scratch[..], &transfer, &compute);
+    }
+
+    let totals = {
+        let mut pairs = arena.lease::<(u64, u64)>();
+        pairs.extend(tp.a.iter().map(|ts| (ts.down_bytes, ts.up_bytes)));
+        ThrottledLink::new(os.cfg.link).step_totals(depth, &[pairs.as_slice()])
+    };
+    os.report.absorb(&totals, os.cfg.link.compute_per_step);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_shape_and_dependencies() {
+        for (n, d) in [(0usize, 1usize), (1, 1), (5, 1), (5, 2), (7, 4), (3, 8)] {
+            let (entries, deps) = build_queue(n, d);
+            assert_eq!(entries.len(), 3 * n, "n={n} d={d}");
+            assert_eq!(deps.len(), entries.len());
+            let mut seen_in = vec![false; n];
+            let mut seen_comp = vec![false; n];
+            let mut seen_out = vec![false; n];
+            for (i, e) in entries.iter().enumerate() {
+                if let Some(dep) = deps[i] {
+                    assert!(dep < i, "dep {dep} of entry {i} (n={n} d={d})");
+                }
+                // Queue order must be sequentially valid.
+                match *e {
+                    Entry::In(p) => {
+                        assert!(!seen_in[p]);
+                        seen_in[p] = true;
+                    }
+                    Entry::Compute(p) => {
+                        assert!(seen_in[p], "compute {p} before stage-in (n={n} d={d})");
+                        seen_comp[p] = true;
+                    }
+                    Entry::Out(p) => {
+                        assert!(seen_comp[p], "writeback {p} before compute (n={n} d={d})");
+                        seen_out[p] = true;
+                    }
+                }
+            }
+            assert!(seen_out.iter().all(|&x| x), "n={n} d={d}");
+            // At most d stage-ins may precede the first compute.
+            let first_comp = entries
+                .iter()
+                .position(|e| matches!(e, Entry::Compute(_)))
+                .unwrap_or(0);
+            assert!(first_comp <= d.min(n.max(1)), "n={n} d={d}");
+        }
+    }
+
+    #[test]
+    fn queue_slot_exclusivity() {
+        // Between task p's stage-in and writeback, no other task q with
+        // q ≡ p (mod d) may stage in — slot reuse is serialized by the
+        // dependency chain in queue order.
+        let (n, d) = (9usize, 3usize);
+        let (entries, _deps) = build_queue(n, d);
+        let mut active: Vec<Option<usize>> = vec![None; d];
+        for e in &entries {
+            match *e {
+                Entry::In(p) => {
+                    assert_eq!(active[p % d], None, "slot {} busy at stage-in of {p}", p % d);
+                    active[p % d] = Some(p);
+                }
+                Entry::Out(p) => {
+                    assert_eq!(active[p % d], Some(p));
+                    active[p % d] = None;
+                }
+                Entry::Compute(p) => assert_eq!(active[p % d], Some(p)),
+            }
+        }
+    }
+}

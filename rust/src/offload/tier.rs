@@ -1,0 +1,612 @@
+//! The host-resident optimizer-state tier.
+//!
+//! Under ZeRO-Offload-style training the optimizer states do not live in
+//! device memory: they sit in host RAM and cross the PCIe link twice per
+//! step. This module makes that arrangement *executable* for the step
+//! engine: the optimizer's own state allocations (packed 4-bit/8-bit
+//! codes, block scales, fp32 moments) are treated as the **host
+//! buffers**, and every shard task's slice of them is staged through a
+//! bounded device-scratch budget — the [`crate::engine::StepContext`]
+//! staging slots — before compute touches it, then written back after.
+//! Compute kernels never read or write host state directly; only the
+//! transfer tasks do.
+//!
+//! What stays device-resident (documented, deliberate):
+//!
+//! * rank-1 / per-tensor quantization scales — a few f32 per axis, read
+//!   by every shard's decode and rebuilt by the global reduction;
+//! * factored second moments — sublinear row/col statistics;
+//! * the parameters and gradients themselves (the tier offloads
+//!   *optimizer state*, the paper's Tab. 4 setting).
+//!
+//! [`build_tier_plan`] derives, purely from the shard plan and the state
+//! layouts, where each piece's staged bytes land inside a scratch slot,
+//! which segments must be written back per phase, and the exact link
+//! traffic each task generates — the byte counts the virtual-time
+//! accounting ([`super::link`]) folds into step totals.
+
+use crate::engine::adamw4::packed_range as packed_span;
+use crate::engine::plan::{Piece, Plan, StateLayout, TensorMeta};
+use crate::engine::SharedSlice;
+use crate::optim::factor::FactoredSecond;
+use crate::optim::state::{MomentState, SecondState};
+use crate::quant::{NormKind, QuantizedTensor, Quantizer, Scales};
+
+/// Host-side view of one tensor's moment state: where its bytes live in
+/// the optimizer's host-resident storage, plus the decode metadata the
+/// compute kernels need. One enum serves both moments (a first moment is
+/// never `Factored`).
+pub(crate) enum HostMoment<'a> {
+    F32(SharedSlice<'a, f32>),
+    Block {
+        q: Quantizer,
+        block: usize,
+        packed: SharedSlice<'a, u8>,
+        scales: SharedSlice<'a, f32>,
+    },
+    Global {
+        q: Quantizer,
+        packed: SharedSlice<'a, u8>,
+        /// Device-resident global scales (tiny; see the module docs).
+        scales: &'a Scales,
+    },
+    Factored {
+        f: &'a FactoredSecond,
+        row_mean: f32,
+    },
+}
+
+/// Split a quantized state into its host views.
+fn quant_views(qt: &mut QuantizedTensor) -> HostMoment<'_> {
+    let q = qt.quantizer;
+    if let NormKind::Block(b) = q.norm {
+        let QuantizedTensor { packed, scales, .. } = qt;
+        let sc = match scales {
+            Scales::Block { scales, .. } => scales,
+            _ => unreachable!("block-normed state carries block scales"),
+        };
+        HostMoment::Block {
+            q,
+            block: b,
+            packed: SharedSlice::new(packed.as_mut_slice()),
+            scales: SharedSlice::new(sc.as_mut_slice()),
+        }
+    } else {
+        let QuantizedTensor { packed, scales, .. } = qt;
+        HostMoment::Global {
+            q,
+            packed: SharedSlice::new(packed.as_mut_slice()),
+            scales: &*scales,
+        }
+    }
+}
+
+/// Host view of one first-moment state.
+pub(crate) fn host_m(ms: &mut MomentState) -> HostMoment<'_> {
+    match ms {
+        MomentState::F32(t) => HostMoment::F32(SharedSlice::new(t.data.as_mut_slice())),
+        MomentState::Quant(qt) => quant_views(qt),
+    }
+}
+
+/// Host view of one second-moment state. Call *after* phase F so the
+/// factored row mean is the post-EMA value the update formula needs.
+pub(crate) fn host_v(vs: &mut SecondState) -> HostMoment<'_> {
+    match vs {
+        SecondState::F32(t) => HostMoment::F32(SharedSlice::new(t.data.as_mut_slice())),
+        SecondState::Quant(qt) => quant_views(qt),
+        SecondState::Factored(f) => {
+            let row_mean = f.row_mean();
+            HostMoment::Factored { f: &*f, row_mean }
+        }
+    }
+}
+
+/// Where one piece's one state lands inside its task's scratch slot.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct StagedState {
+    /// Offset/length in the slot's byte arena (staged packed codes).
+    pub bytes_off: usize,
+    pub bytes_len: usize,
+    /// Offset/length in the slot's f32 arena (staged block scales or
+    /// staged fp32 state values).
+    pub vals_off: usize,
+    pub vals_len: usize,
+    /// Whether this phase mutates the staged copy (and must copy it
+    /// back to the host buffer). Phase A mutates block/fp32 states in
+    /// place but only *reads* globally-normalized codes; phase C
+    /// re-encodes global codes in place and always writes back.
+    pub writeback: bool,
+}
+
+/// Staging of one piece: first and second moment (either may be absent —
+/// factored states stay resident, and phase C stages only globals).
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct PieceStaging {
+    pub m: Option<StagedState>,
+    pub v: Option<StagedState>,
+}
+
+/// Staging of one plan task for one phase.
+#[derive(Clone, Debug)]
+pub(crate) struct TaskStaging {
+    /// Plan task index (also the task's RNG stream id).
+    pub task: usize,
+    /// Parallel to the plan task's pieces.
+    pub pieces: Vec<PieceStaging>,
+    /// Slot arena footprint of this task.
+    pub bytes_len: usize,
+    pub vals_len: usize,
+    /// Link traffic: stage-in / writeback bytes.
+    pub down_bytes: u64,
+    pub up_bytes: u64,
+}
+
+/// The tier's per-step staging layout: phase-A stagings for every plan
+/// task, phase-C stagings for the tasks that touch globally-normalized
+/// states, and the scratch-slot budget that fits the largest task.
+pub(crate) struct TierPlan {
+    pub a: Vec<TaskStaging>,
+    pub c: Vec<TaskStaging>,
+    /// Per-slot arena sizes (the bounded device-scratch budget is
+    /// `depth × (slot_bytes + 4·slot_vals)` bytes).
+    pub slot_bytes: usize,
+    pub slot_vals: usize,
+}
+
+impl TierPlan {
+    /// Total staged link traffic of one step (both directions).
+    pub fn step_traffic(&self) -> (u64, u64) {
+        let mut down = 0;
+        let mut up = 0;
+        for ts in self.a.iter().chain(self.c.iter()) {
+            down += ts.down_bytes;
+            up += ts.up_bytes;
+        }
+        (down, up)
+    }
+}
+
+/// How one state of one piece stages, derived from its storage form.
+enum SegKind {
+    F32,
+    Block { bits: u8, block: usize },
+    Global { bits: u8 },
+    Resident,
+}
+
+fn m_kind(ms: &MomentState) -> SegKind {
+    match ms {
+        MomentState::F32(_) => SegKind::F32,
+        MomentState::Quant(qt) => match qt.quantizer.norm {
+            NormKind::Block(b) => SegKind::Block {
+                bits: qt.quantizer.bits,
+                block: b,
+            },
+            _ => SegKind::Global {
+                bits: qt.quantizer.bits,
+            },
+        },
+    }
+}
+
+fn v_kind(vs: &SecondState) -> SegKind {
+    match vs {
+        SecondState::F32(_) => SegKind::F32,
+        SecondState::Quant(qt) => match qt.quantizer.norm {
+            NormKind::Block(b) => SegKind::Block {
+                bits: qt.quantizer.bits,
+                block: b,
+            },
+            _ => SegKind::Global {
+                bits: qt.quantizer.bits,
+            },
+        },
+        SecondState::Factored(_) => SegKind::Resident,
+    }
+}
+
+/// Lay out one piece's one state for one phase. Returns `None` when the
+/// state is not staged in that phase.
+fn seg_for(
+    kind: &SegKind,
+    piece: &Piece,
+    phase_c: bool,
+    bytes_cursor: &mut usize,
+    vals_cursor: &mut usize,
+    down: &mut u64,
+    up: &mut u64,
+) -> Option<StagedState> {
+    let (lo, hi) = (piece.lo, piece.hi);
+    match kind {
+        SegKind::Resident => None,
+        SegKind::F32 => {
+            if phase_c {
+                return None;
+            }
+            let vals_len = piece.len();
+            let seg = StagedState {
+                bytes_off: 0,
+                bytes_len: 0,
+                vals_off: *vals_cursor,
+                vals_len,
+                writeback: true,
+            };
+            *vals_cursor += vals_len;
+            *down += 4 * vals_len as u64;
+            *up += 4 * vals_len as u64;
+            Some(seg)
+        }
+        SegKind::Block { bits, block } => {
+            if phase_c {
+                return None;
+            }
+            let (b0, b1) = packed_span(*bits, lo, hi);
+            let bytes_len = b1 - b0;
+            let vals_len = hi.div_ceil(*block) - lo / block;
+            let seg = StagedState {
+                bytes_off: *bytes_cursor,
+                bytes_len,
+                vals_off: *vals_cursor,
+                vals_len,
+                writeback: true,
+            };
+            *bytes_cursor += bytes_len;
+            *vals_cursor += vals_len;
+            let traffic = bytes_len as u64 + 4 * vals_len as u64;
+            *down += traffic;
+            *up += traffic;
+            Some(seg)
+        }
+        SegKind::Global { bits } => {
+            let (b0, b1) = packed_span(*bits, lo, hi);
+            let bytes_len = b1 - b0;
+            let seg = StagedState {
+                bytes_off: *bytes_cursor,
+                bytes_len,
+                vals_off: 0,
+                vals_len: 0,
+                // Phase A only reads global codes (the re-encode is
+                // phase C's); phase C writes the fresh codes back.
+                writeback: phase_c,
+            };
+            *bytes_cursor += bytes_len;
+            *down += bytes_len as u64;
+            if phase_c {
+                *up += bytes_len as u64;
+            }
+            Some(seg)
+        }
+    }
+}
+
+/// Build the tier's staging layout for one step — a pure function of
+/// (plan, state layouts), like the plan itself.
+pub(crate) fn build_tier_plan(
+    plan: &Plan,
+    metas: &[TensorMeta],
+    m_states: &[MomentState],
+    v_states: &[SecondState],
+) -> TierPlan {
+    let m_kinds: Vec<SegKind> = m_states.iter().map(m_kind).collect();
+    let v_kinds: Vec<SegKind> = v_states.iter().map(v_kind).collect();
+    let mut a = Vec::with_capacity(plan.tasks.len());
+    let mut c = Vec::new();
+    let mut slot_bytes = 0usize;
+    let mut slot_vals = 0usize;
+    for (ti, task) in plan.tasks.iter().enumerate() {
+        for phase_c in [false, true] {
+            if phase_c {
+                let any_global = task.pieces.iter().any(|p| {
+                    metas[p.tensor].m == StateLayout::Global
+                        || metas[p.tensor].v == StateLayout::Global
+                });
+                if !any_global {
+                    continue;
+                }
+            }
+            let mut bytes_cursor = 0usize;
+            let mut vals_cursor = 0usize;
+            let mut down = 0u64;
+            let mut up = 0u64;
+            let mut pieces = Vec::with_capacity(task.pieces.len());
+            for piece in &task.pieces {
+                let m = seg_for(
+                    &m_kinds[piece.tensor],
+                    piece,
+                    phase_c,
+                    &mut bytes_cursor,
+                    &mut vals_cursor,
+                    &mut down,
+                    &mut up,
+                );
+                let v = seg_for(
+                    &v_kinds[piece.tensor],
+                    piece,
+                    phase_c,
+                    &mut bytes_cursor,
+                    &mut vals_cursor,
+                    &mut down,
+                    &mut up,
+                );
+                pieces.push(PieceStaging { m, v });
+            }
+            slot_bytes = slot_bytes.max(bytes_cursor);
+            slot_vals = slot_vals.max(vals_cursor);
+            let ts = TaskStaging {
+                task: ti,
+                pieces,
+                bytes_len: bytes_cursor,
+                vals_len: vals_cursor,
+                down_bytes: down,
+                up_bytes: up,
+            };
+            if phase_c {
+                c.push(ts);
+            } else {
+                a.push(ts);
+            }
+        }
+    }
+    TierPlan {
+        a,
+        c,
+        slot_bytes,
+        slot_vals,
+    }
+}
+
+/// Staging layout for the dense fp32 optimizers: both moments stage as
+/// plain f32 segments (no codes, no phase C), so per-step traffic is
+/// exactly `2 × state_bytes` — the analytic model's assumption.
+pub(crate) fn build_dense_tier_plan(plan: &Plan) -> TierPlan {
+    let mut a = Vec::with_capacity(plan.tasks.len());
+    let mut slot_vals = 0usize;
+    for (ti, task) in plan.tasks.iter().enumerate() {
+        let mut bytes_cursor = 0usize;
+        let mut vals_cursor = 0usize;
+        let mut down = 0u64;
+        let mut up = 0u64;
+        let mut pieces = Vec::with_capacity(task.pieces.len());
+        for piece in &task.pieces {
+            let m = seg_for(
+                &SegKind::F32,
+                piece,
+                false,
+                &mut bytes_cursor,
+                &mut vals_cursor,
+                &mut down,
+                &mut up,
+            );
+            let v = seg_for(
+                &SegKind::F32,
+                piece,
+                false,
+                &mut bytes_cursor,
+                &mut vals_cursor,
+                &mut down,
+                &mut up,
+            );
+            pieces.push(PieceStaging { m, v });
+        }
+        slot_vals = slot_vals.max(vals_cursor);
+        a.push(TaskStaging {
+            task: ti,
+            pieces,
+            bytes_len: 0,
+            vals_len: vals_cursor,
+            down_bytes: down,
+            up_bytes: up,
+        });
+    }
+    TierPlan {
+        a,
+        c: Vec::new(),
+        slot_bytes: 0,
+        slot_vals,
+    }
+}
+
+/// Copy one task's staged segments between host state and a scratch
+/// slot. `to_device` selects direction; with `writeback_only` the pass
+/// touches only segments the phase mutates (the writeback set).
+///
+/// # Safety-by-plan
+/// All range materialization goes through [`SharedSlice::range_mut`].
+/// The host ranges are disjoint across tasks (plan invariant: pieces
+/// partition each tensor, and shard boundaries are block/byte aligned);
+/// the slot is exclusive to this task while its transfer/compute chain
+/// runs (the pipeline's dependency discipline — see `engine/mod.rs`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn copy_task_segments(
+    ts: &TaskStaging,
+    pieces: &[Piece],
+    m_hosts: &[HostMoment<'_>],
+    v_hosts: &[HostMoment<'_>],
+    slot_bytes: SharedSlice<'_, u8>,
+    slot_vals: SharedSlice<'_, f32>,
+    to_device: bool,
+    writeback_only: bool,
+) {
+    debug_assert_eq!(ts.pieces.len(), pieces.len());
+    for (ps, piece) in ts.pieces.iter().zip(pieces.iter()) {
+        for (seg, host) in [
+            (ps.m.as_ref(), &m_hosts[piece.tensor]),
+            (ps.v.as_ref(), &v_hosts[piece.tensor]),
+        ] {
+            let Some(seg) = seg else { continue };
+            if writeback_only && !seg.writeback {
+                continue;
+            }
+            copy_segment(seg, piece, host, slot_bytes, slot_vals, to_device);
+        }
+    }
+}
+
+fn copy_segment(
+    seg: &StagedState,
+    piece: &Piece,
+    host: &HostMoment<'_>,
+    slot_bytes: SharedSlice<'_, u8>,
+    slot_vals: SharedSlice<'_, f32>,
+    to_device: bool,
+) {
+    let (lo, hi) = (piece.lo, piece.hi);
+    match host {
+        HostMoment::F32(data) => {
+            // SAFETY: disjoint host piece ranges; exclusive slot (see
+            // copy_task_segments).
+            let h = unsafe { data.range_mut(lo, hi) };
+            let d = unsafe { slot_vals.range_mut(seg.vals_off, seg.vals_off + seg.vals_len) };
+            if to_device {
+                d.copy_from_slice(h);
+            } else {
+                h.copy_from_slice(d);
+            }
+        }
+        HostMoment::Block {
+            q,
+            block,
+            packed,
+            scales,
+        } => {
+            let (b0, b1) = packed_span(q.bits, lo, hi);
+            // SAFETY: block/byte-aligned disjoint piece ranges;
+            // exclusive slot.
+            let hb = unsafe { packed.range_mut(b0, b1) };
+            let db = unsafe { slot_bytes.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len) };
+            let hs = unsafe { scales.range_mut(lo / block, hi.div_ceil(*block)) };
+            let ds = unsafe { slot_vals.range_mut(seg.vals_off, seg.vals_off + seg.vals_len) };
+            if to_device {
+                db.copy_from_slice(hb);
+                ds.copy_from_slice(hs);
+            } else {
+                hb.copy_from_slice(db);
+                hs.copy_from_slice(ds);
+            }
+        }
+        HostMoment::Global { q, packed, .. } => {
+            let (b0, b1) = packed_span(q.bits, lo, hi);
+            // SAFETY: byte-aligned disjoint piece ranges; exclusive slot.
+            let hb = unsafe { packed.range_mut(b0, b1) };
+            let db = unsafe { slot_bytes.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len) };
+            if to_device {
+                db.copy_from_slice(hb);
+            } else {
+                hb.copy_from_slice(db);
+            }
+        }
+        HostMoment::Factored { .. } => unreachable!("factored states are never staged"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::plan::build_plan;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg64;
+
+    fn meta(numel: usize, shape: &[usize], m: StateLayout, v: StateLayout) -> TensorMeta {
+        TensorMeta {
+            numel,
+            shape: shape.to_vec(),
+            m,
+            v,
+            m_stat_len: 0,
+            v_stat_len: match v {
+                StateLayout::Global => shape.iter().sum(),
+                _ => 0,
+            },
+        }
+    }
+
+    #[test]
+    fn tier_plan_accounts_exact_traffic() {
+        // One 2-D tensor: m B128 4-bit, v rank-1 4-bit — the adamw4
+        // layout. Phase A: m codes+scales down+up, v codes down only.
+        // Phase C: v codes down+up.
+        let mut rng = Pcg64::seeded(1);
+        let t = Tensor::randn(&[8, 128], 0.1, &mut rng);
+        let q_m = Quantizer::first_moment_4bit();
+        let q_v = Quantizer::second_moment_4bit();
+        let m_states = vec![MomentState::Quant(q_m.quantize(&t, &mut rng))];
+        let v_states = vec![SecondState::Quant(q_v.quantize(&t, &mut rng))];
+        let metas = vec![meta(1024, &[8, 128], StateLayout::Block(128), StateLayout::Global)];
+        let plan = build_plan(&metas, 256);
+        assert!(plan.tasks.len() > 1, "want a multi-shard plan");
+        let tp = build_tier_plan(&plan, &metas, &m_states, &v_states);
+        assert_eq!(tp.a.len(), plan.tasks.len());
+        assert_eq!(tp.c.len(), plan.tasks.len(), "every task has a global v");
+        let (down, up) = tp.step_traffic();
+        let m_codes = 1024 / 2;
+        let m_scales = 4 * (1024 / 128);
+        let v_codes = 1024 / 2;
+        // A: (m_codes + m_scales) down+up, v_codes down. C: v_codes down+up.
+        assert_eq!(down as usize, m_codes + m_scales + v_codes + v_codes);
+        assert_eq!(up as usize, m_codes + m_scales + v_codes);
+        // The slot budget bounds every task's staging.
+        for ts in tp.a.iter().chain(tp.c.iter()) {
+            assert!(ts.bytes_len <= tp.slot_bytes);
+            assert!(ts.vals_len <= tp.slot_vals);
+        }
+    }
+
+    #[test]
+    fn factored_and_f32_states_stage_as_documented() {
+        let mut rng = Pcg64::seeded(2);
+        let t2 = Tensor::randn(&[4, 64], 0.1, &mut rng);
+        let m_states = vec![MomentState::F32(t2.clone())];
+        let v_states = vec![SecondState::Factored(FactoredSecond::zeros(&[4, 64]))];
+        let metas = vec![meta(256, &[4, 64], StateLayout::F32, StateLayout::Factored)];
+        let plan = build_plan(&metas, 128);
+        let tp = build_tier_plan(&plan, &metas, &m_states, &v_states);
+        assert!(tp.c.is_empty(), "no global states, no phase C staging");
+        let (down, up) = tp.step_traffic();
+        // Only the fp32 m moves: 4 bytes/elem each way.
+        assert_eq!(down, 4 * 256);
+        assert_eq!(up, 4 * 256);
+        for ts in &tp.a {
+            for ps in &ts.pieces {
+                assert!(ps.v.is_none(), "factored v never staged");
+            }
+        }
+    }
+
+    #[test]
+    fn copy_roundtrip_restores_host_bytes() {
+        let mut rng = Pcg64::seeded(3);
+        let t = Tensor::randn(&[4, 128], 0.3, &mut rng);
+        let q_m = Quantizer::first_moment_4bit();
+        let mut m_states = vec![MomentState::Quant(q_m.quantize(&t, &mut rng))];
+        let mut v_states = vec![SecondState::F32(t.clone())];
+        let metas = vec![meta(512, &[4, 128], StateLayout::Block(128), StateLayout::F32)];
+        let plan = build_plan(&metas, 256);
+        let tp = build_tier_plan(&plan, &metas, &m_states, &v_states);
+        let before_packed = match &m_states[0] {
+            MomentState::Quant(qt) => qt.packed.clone(),
+            _ => unreachable!(),
+        };
+        let mut bytes = vec![0u8; tp.slot_bytes];
+        let mut vals = vec![0.0f32; tp.slot_vals];
+        {
+            let m_hosts = vec![host_m(&mut m_states[0])];
+            let v_hosts = vec![host_v(&mut v_states[0])];
+            let sb = SharedSlice::new(bytes.as_mut_slice());
+            let sv = SharedSlice::new(vals.as_mut_slice());
+            for ts in &tp.a {
+                let pieces = &plan.tasks[ts.task].pieces;
+                copy_task_segments(ts, pieces, &m_hosts, &v_hosts, sb, sv, true, false);
+                copy_task_segments(ts, pieces, &m_hosts, &v_hosts, sb, sv, false, true);
+            }
+        }
+        match &m_states[0] {
+            MomentState::Quant(qt) => assert_eq!(qt.packed, before_packed),
+            _ => unreachable!(),
+        }
+        match &v_states[0] {
+            SecondState::F32(tt) => assert_eq!(tt.data, t.data),
+            _ => unreachable!(),
+        }
+    }
+}

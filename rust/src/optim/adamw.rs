@@ -11,6 +11,7 @@
 
 use super::{Hyper, Optimizer, Param};
 use crate::engine::{dense, StepContext, StepEngine};
+use crate::offload::{pipeline, OffloadConfig, OffloadReport, OffloadState};
 use crate::tensor::Tensor;
 
 /// In-place AdamW update of one parameter tensor given its decompressed
@@ -55,6 +56,10 @@ pub struct AdamW {
     engine: Option<StepEngine>,
     /// Cached step context (plan + metadata), reused across steps.
     ctx: StepContext,
+    /// When set, the fp32 moments live in the host tier and every step
+    /// stages them through the offload pipeline (bit-identical to the
+    /// in-memory engine; virtual time lands in the report).
+    offload: Option<OffloadState>,
 }
 
 impl AdamW {
@@ -66,7 +71,26 @@ impl AdamW {
             v: Vec::new(),
             engine: Some(StepEngine::new()),
             ctx: StepContext::new(),
+            offload: None,
         }
+    }
+
+    /// Route the fp32 optimizer states through the simulated host tier:
+    /// steps run on the offload pipeline with a bounded device-scratch
+    /// budget (see [`crate::offload::pipeline`]), bit-identical to the
+    /// in-memory engine at any thread count and prefetch depth.
+    /// Invalidates the cached step context.
+    pub fn offloaded(mut self, cfg: OffloadConfig) -> AdamW {
+        self.offload = Some(OffloadState::new(cfg));
+        self.engine = Some(self.engine.unwrap_or_default());
+        self.ctx.invalidate();
+        self
+    }
+
+    /// Accumulated virtual-time measurements of the offloaded steps
+    /// (`None` until [`Self::offloaded`] configures the pipeline).
+    pub fn offload_report(&self) -> Option<&OffloadReport> {
+        self.offload.as_ref().map(|os| &os.report)
     }
 
     /// Off-engine reference: the plain sequential per-tensor loop.
@@ -115,17 +139,32 @@ impl Optimizer for AdamW {
         self.lazy_init(params);
         self.t += 1;
         if let Some(eng) = &self.engine {
-            dense::adamw32_step(
-                eng,
-                &mut self.ctx,
-                &self.hp,
-                self.t,
-                lr,
-                params,
-                grads,
-                &mut self.m,
-                &mut self.v,
-            );
+            if let Some(os) = &mut self.offload {
+                pipeline::dense_offloaded_step(
+                    eng,
+                    &mut self.ctx,
+                    os,
+                    &self.hp,
+                    self.t,
+                    lr,
+                    params,
+                    grads,
+                    &mut self.m,
+                    &mut self.v,
+                );
+            } else {
+                dense::adamw32_step(
+                    eng,
+                    &mut self.ctx,
+                    &self.hp,
+                    self.t,
+                    lr,
+                    params,
+                    grads,
+                    &mut self.m,
+                    &mut self.v,
+                );
+            }
             return;
         }
         for (i, p) in params.iter_mut().enumerate() {

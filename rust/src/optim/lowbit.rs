@@ -16,6 +16,7 @@ use super::factor::FactoredSecond;
 use super::state::{MomentState, SecondState};
 use super::{Hyper, Optimizer, Param, ParamKind};
 use crate::engine::{compressed_step, StepContext, StepEngine, StepParams};
+use crate::offload::{pipeline, OffloadConfig, OffloadReport, OffloadState};
 use crate::quant::{MapKind, NormKind, QuantMap, Quantizer};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
@@ -142,6 +143,11 @@ pub struct CompressedAdamW {
     /// arenas, reused across steps (rebuilt on layout change or builder
     /// reconfiguration).
     ctx: StepContext,
+    /// When set, steps run on the offload pipeline: states live in the
+    /// host tier and are staged through the device-scratch budget.
+    /// Bit-identical to in-memory execution — this trades simulated
+    /// link traffic (tracked in the report) for device state memory.
+    offload: Option<OffloadState>,
 }
 
 impl CompressedAdamW {
@@ -159,7 +165,27 @@ impl CompressedAdamW {
             rng: Pcg64::seeded(0x10B1),
             engine: StepEngine::new(),
             ctx: StepContext::new(),
+            offload: None,
         }
+    }
+
+    /// Route the optimizer states through the simulated host tier: every
+    /// step runs on the offload pipeline (prefetch / compute / writeback
+    /// through a bounded device-scratch budget, see
+    /// [`crate::offload::pipeline`]). Results are bit-identical to
+    /// in-memory execution at any thread count and prefetch depth; the
+    /// virtual-time cost shows up in [`Self::offload_report`].
+    /// Invalidates the cached step context.
+    pub fn offloaded(mut self, cfg: OffloadConfig) -> CompressedAdamW {
+        self.offload = Some(OffloadState::new(cfg));
+        self.ctx.invalidate();
+        self
+    }
+
+    /// Accumulated virtual-time measurements of the offloaded steps
+    /// (`None` until [`Self::offloaded`] configures the pipeline).
+    pub fn offload_report(&self) -> Option<&OffloadReport> {
+        self.offload.as_ref().map(|os| &os.report)
     }
 
     /// Set the engine worker count (0 = auto). Results are bit-identical
@@ -238,6 +264,84 @@ impl CompressedAdamW {
         }
     }
 
+    /// Step counter + state storage, for checkpointing
+    /// ([`crate::train::checkpoint::save_opt_state`]) — the compressed
+    /// forms are exposed as-is, so a checkpoint preserves the packed
+    /// codes and scales byte-exactly.
+    pub fn export_states(&self) -> (usize, &[MomentState], &[SecondState]) {
+        (self.t, &self.m, &self.v)
+    }
+
+    /// Restore checkpointed states. The optimizer must have been built
+    /// with the same policy the states were saved under (decode tables
+    /// are rebuilt from the live policy, not persisted) — every
+    /// quantized state's scheme is validated against the live policy, so
+    /// a checkpoint saved under a different policy is rejected here
+    /// instead of decoding garbage (or indexing a wrong-width map) on
+    /// the next step. Invalidates the cached step context; the next step
+    /// continues bit-identically to the uninterrupted run.
+    pub fn import_states(
+        &mut self,
+        t: usize,
+        m: Vec<MomentState>,
+        v: Vec<SecondState>,
+    ) -> Result<(), String> {
+        if m.len() != v.len() {
+            return Err("moment lists must pair up".to_string());
+        }
+        for (i, ms) in m.iter().enumerate() {
+            if let MomentState::Quant(qt) = ms {
+                match self.policy.m_quant {
+                    Some(q) if q == qt.quantizer => {}
+                    _ => {
+                        return Err(format!(
+                            "state {i}: first-moment scheme {} does not match the live policy",
+                            qt.quantizer.name()
+                        ))
+                    }
+                }
+            }
+        }
+        for (i, vs) in v.iter().enumerate() {
+            match vs {
+                SecondState::F32(_) => {}
+                SecondState::Factored(_) => {
+                    if !self.policy.factor_v {
+                        return Err(format!(
+                            "state {i}: factored second moment under a non-factored policy"
+                        ));
+                    }
+                }
+                SecondState::Quant(qt) => {
+                    if self.policy.factor_v && qt.shape.len() >= 2 {
+                        return Err(format!(
+                            "state {i}: quantized 2-D second moment under a factored policy"
+                        ));
+                    }
+                    let expect = if qt.shape.len() >= 2 {
+                        self.policy.v_quant
+                    } else {
+                        self.policy.v_quant_1d
+                    };
+                    match expect {
+                        Some(q) if q == qt.quantizer => {}
+                        _ => {
+                            return Err(format!(
+                                "state {i}: second-moment scheme {} does not match the live policy",
+                                qt.quantizer.name()
+                            ))
+                        }
+                    }
+                }
+            }
+        }
+        self.t = t;
+        self.m = m;
+        self.v = v;
+        self.ctx.invalidate();
+        Ok(())
+    }
+
     /// Decompressed view of the moments of parameter `idx` (analysis /
     /// figures only; the step path streams per tensor).
     pub fn moments(&self, idx: usize) -> Option<(Tensor, Tensor)> {
@@ -272,15 +376,28 @@ impl Optimizer for CompressedAdamW {
             v_map: self.v_map.as_ref(),
             v1_map: self.v1_map.as_ref(),
         };
-        compressed_step(
-            &self.engine,
-            &mut self.ctx,
-            &sp,
-            params,
-            grads,
-            &mut self.m,
-            &mut self.v,
-        );
+        if let Some(os) = &mut self.offload {
+            pipeline::compressed_offloaded_step(
+                &self.engine,
+                &mut self.ctx,
+                os,
+                &sp,
+                params,
+                grads,
+                &mut self.m,
+                &mut self.v,
+            );
+        } else {
+            compressed_step(
+                &self.engine,
+                &mut self.ctx,
+                &sp,
+                params,
+                grads,
+                &mut self.m,
+                &mut self.v,
+            );
+        }
     }
 
     fn state_bytes(&self) -> usize {

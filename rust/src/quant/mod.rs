@@ -17,4 +17,4 @@ pub mod stochastic;
 
 pub use mapping::{MapKind, QuantMap};
 pub use normalize::{NormKind, Scales};
-pub use quantizer::{QuantizedTensor, Quantizer};
+pub use quantizer::{dequantize_packed_range_into, QuantizedTensor, Quantizer};

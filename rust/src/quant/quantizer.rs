@@ -384,40 +384,76 @@ impl QuantizedTensor {
     /// into `out` (`out.len() == hi - lo`), no allocation. Bit-identical
     /// to the corresponding slice of [`Self::dequantize_with`].
     pub fn dequantize_range_into(&self, map: &QuantMap, lo: usize, hi: usize, out: &mut [f32]) {
-        debug_assert_eq!(map.kind, self.quantizer.map);
         debug_assert!(lo <= hi && hi <= self.numel());
-        debug_assert_eq!(out.len(), hi - lo);
-        match &self.scales {
-            Scales::Block { block, scales } => {
-                for (o, i) in out.iter_mut().zip(lo..hi) {
-                    let code = packing::get(&self.packed, i, self.bits);
-                    *o = map.decode(code) * scales[i / block];
-                }
+        dequantize_packed_range_into(
+            map,
+            self.bits,
+            &self.packed,
+            0,
+            &self.scales,
+            &self.shape,
+            lo,
+            hi,
+            out,
+        );
+    }
+}
+
+/// Decompress the element range `[lo, hi)` of a tensor with `shape` from
+/// a caller-provided packed-code slice: `packed` holds the codes of
+/// elements starting at flat offset `base` (`base == 0` for a
+/// whole-tensor buffer; for 4-bit codes `base` must be even so element
+/// `e` sits at nibble `e - base`). This is
+/// [`QuantizedTensor::dequantize_range_into`] generalized to *detached*
+/// code storage — the offload pipeline decodes staged shard-local copies
+/// of host-resident codes through it — and is bit-identical to the
+/// corresponding slice of [`QuantizedTensor::dequantize_with`].
+#[allow(clippy::too_many_arguments)]
+pub fn dequantize_packed_range_into(
+    map: &QuantMap,
+    bits: u8,
+    packed: &[u8],
+    base: usize,
+    scales: &Scales,
+    shape: &[usize],
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(map.bits, bits);
+    debug_assert!(base <= lo);
+    debug_assert!(bits != 4 || base % 2 == 0, "4-bit base must be byte-aligned");
+    debug_assert_eq!(out.len(), hi - lo);
+    match scales {
+        Scales::Block { block, scales } => {
+            for (o, i) in out.iter_mut().zip(lo..hi) {
+                let code = packing::get(packed, i - base, bits);
+                *o = map.decode(code) * scales[i / block];
             }
-            Scales::Rank1 { per_axis } if self.shape.len() == 2 => {
-                let cols = self.shape[1];
-                let r = &per_axis[0];
-                let c = &per_axis[1];
-                let mut i = lo;
-                while i < hi {
-                    let row = i / cols;
-                    let row_start = row * cols;
-                    let row_end = (row_start + cols).min(hi);
-                    let ri = r[row];
-                    for j in i..row_end {
-                        let code = packing::get(&self.packed, j, self.bits);
-                        let cj = c[j - row_start];
-                        let s = if ri < cj { ri } else { cj };
-                        out[j - lo] = map.decode(code) * s;
-                    }
-                    i = row_end;
+        }
+        Scales::Rank1 { per_axis } if shape.len() == 2 => {
+            let cols = shape[1];
+            let r = &per_axis[0];
+            let c = &per_axis[1];
+            let mut i = lo;
+            while i < hi {
+                let row = i / cols;
+                let row_start = row * cols;
+                let row_end = (row_start + cols).min(hi);
+                let ri = r[row];
+                for j in i..row_end {
+                    let code = packing::get(packed, j - base, bits);
+                    let cj = c[j - row_start];
+                    let s = if ri < cj { ri } else { cj };
+                    out[j - lo] = map.decode(code) * s;
                 }
+                i = row_end;
             }
-            scales => {
-                for (o, i) in out.iter_mut().zip(lo..hi) {
-                    let code = packing::get(&self.packed, i, self.bits);
-                    *o = map.decode(code) * scales.scale_at(i, &self.shape);
-                }
+        }
+        scales => {
+            for (o, i) in out.iter_mut().zip(lo..hi) {
+                let code = packing::get(packed, i - base, bits);
+                *o = map.decode(code) * scales.scale_at(i, shape);
             }
         }
     }
@@ -654,6 +690,40 @@ mod tests {
                 whole.dequantize_range_into(&map, lo, hi, &mut out[lo..hi]);
             }
             assert_eq!(out, full.data, "{} range dequant differs", q.name());
+        }
+    }
+
+    #[test]
+    fn detached_range_dequant_matches_method() {
+        // The offload pipeline decodes staged shard-local byte slices;
+        // the detached path must be bit-identical to the in-place one.
+        let mut data_rng = Pcg64::seeded(3);
+        let x = Tensor::randn(&[32, 40], 0.5, &mut data_rng);
+        for q in [
+            Quantizer::second_moment_4bit(),
+            Quantizer::new(NormKind::PerTensor, MapKind::Linear, 4, false),
+            Quantizer::moment_8bit(true),
+        ] {
+            let map = q.build_map();
+            let mut r = Pcg64::seeded(0);
+            let qt = q.quantize_with(&x, &map, &mut r);
+            let (lo, hi) = (240usize, 720usize);
+            let mut a = vec![0.0f32; hi - lo];
+            qt.dequantize_range_into(&map, lo, hi, &mut a);
+            let (b0, b1) = if q.bits == 4 { (lo / 2, hi.div_ceil(2)) } else { (lo, hi) };
+            let mut b = vec![0.0f32; hi - lo];
+            dequantize_packed_range_into(
+                &map,
+                q.bits,
+                &qt.packed[b0..b1],
+                lo,
+                &qt.scales,
+                &qt.shape,
+                lo,
+                hi,
+                &mut b,
+            );
+            assert_eq!(a, b, "{} detached range dequant differs", q.name());
         }
     }
 

@@ -1,25 +1,87 @@
-//! Checkpointing: parameters (and a manifest) serialized to a compact
+//! Checkpointing: parameters and optimizer state serialized to a compact
 //! binary format. Optimizer states are serialized *compressed* — a 4-bit
 //! checkpoint is ~8× smaller than an fp32 one, which is the on-disk
-//! mirror of the paper's in-memory claim.
+//! mirror of the paper's in-memory claim — and a reloaded run continues
+//! bit-identically to an uninterrupted one (the packed codes, scales and
+//! step counter round-trip exactly).
 //!
 //! Format: a JSON manifest (`<path>.json`) describing tensors + a raw
-//! little-endian blob (`<path>.bin`) holding f32 data (params) and packed
-//! u8 data (quantized states).
+//! little-endian blob (`<path>.bin`) holding f32 data (params, scales,
+//! factored stats) and packed u8 data (quantized state codes). The blob
+//! is pre-sized and filled with bulk per-tensor copies — no per-element
+//! `Vec` growth — and loaders validate every manifest extent against the
+//! blob length (checked arithmetic, `InvalidData` on any disagreement)
+//! instead of trusting offsets.
 
+use crate::optim::factor::FactoredSecond;
+use crate::optim::lowbit::CompressedAdamW;
+use crate::optim::state::{MomentState, SecondState};
 use crate::optim::{Param, ParamKind};
+use crate::quant::{packing, MapKind, NormKind, QuantizedTensor, Quantizer, Scales};
+use crate::tensor::Tensor;
 use crate::util::json::Json;
-use std::io::{Read, Write};
+use std::io::{BufWriter, Read, Write};
+
+/// Append a f32 slice's little-endian bytes in one bulk copy per tensor.
+fn push_f32s(blob: &mut Vec<u8>, vals: &[f32]) {
+    if cfg!(target_endian = "little") {
+        // SAFETY: any f32 bit pattern is valid to view as bytes, and on
+        // little-endian targets the in-memory bytes are exactly the
+        // serialized little-endian form.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(vals.as_ptr() as *const u8, vals.len() * 4) };
+        blob.extend_from_slice(bytes);
+    } else {
+        blob.reserve(vals.len() * 4);
+        for &v in vals {
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Read `len` f32s starting at byte `offset`, validating the extent.
+fn read_f32s(blob: &[u8], offset: usize, len: usize) -> std::io::Result<Vec<f32>> {
+    let end = len
+        .checked_mul(4)
+        .and_then(|b| b.checked_add(offset))
+        .ok_or_else(|| bad("tensor extent overflows"))?;
+    if end > blob.len() {
+        return Err(bad("blob too short for manifest extents"));
+    }
+    Ok(blob[offset..end]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read `len` raw bytes starting at `offset`, validating the extent.
+fn read_bytes(blob: &[u8], offset: usize, len: usize) -> std::io::Result<Vec<u8>> {
+    let end = offset
+        .checked_add(len)
+        .ok_or_else(|| bad("byte extent overflows"))?;
+    if end > blob.len() {
+        return Err(bad("blob too short for manifest extents"));
+    }
+    Ok(blob[offset..end].to_vec())
+}
+
+fn write_blob(path: &str, blob: &[u8]) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(format!("{path}.bin"))?);
+    w.write_all(blob)?;
+    w.flush()
+}
 
 /// Save parameters to `<path>.json` + `<path>.bin`.
 pub fn save_params(path: &str, params: &[Param], step: usize) -> std::io::Result<()> {
-    let mut blob: Vec<u8> = Vec::new();
+    let total: usize = params.iter().map(|p| 4 * p.tensor.numel()).sum();
+    let mut blob: Vec<u8> = Vec::with_capacity(total);
     let mut entries = Vec::new();
     for p in params {
         let offset = blob.len();
-        for &v in &p.tensor.data {
-            blob.extend_from_slice(&v.to_le_bytes());
-        }
+        push_f32s(&mut blob, &p.tensor.data);
         let mut e = Json::obj();
         e.set("name", Json::Str(p.name.clone()))
             .set("kind", Json::Str(kind_str(p.kind).to_string()))
@@ -28,6 +90,7 @@ pub fn save_params(path: &str, params: &[Param], step: usize) -> std::io::Result
             .set("len", Json::Num(p.tensor.numel() as f64));
         entries.push(e);
     }
+    debug_assert_eq!(blob.len(), total);
     let mut manifest = Json::obj();
     manifest
         .set("version", Json::Num(1.0))
@@ -37,12 +100,13 @@ pub fn save_params(path: &str, params: &[Param], step: usize) -> std::io::Result
         std::fs::create_dir_all(parent)?;
     }
     std::fs::write(format!("{path}.json"), manifest.pretty())?;
-    let mut f = std::fs::File::create(format!("{path}.bin"))?;
-    f.write_all(&blob)?;
-    Ok(())
+    write_blob(path, &blob)
 }
 
 /// Load parameters saved by [`save_params`]. Returns (params, step).
+/// Every manifest extent is validated against the blob (including the
+/// total length — a truncated or padded `.bin` is `InvalidData`, never a
+/// panic).
 pub fn load_params(path: &str) -> std::io::Result<(Vec<Param>, usize)> {
     let manifest_text = std::fs::read_to_string(format!("{path}.json"))?;
     let manifest = Json::parse(&manifest_text)
@@ -58,6 +122,7 @@ pub fn load_params(path: &str) -> std::io::Result<(Vec<Param>, usize)> {
         .and_then(|t| t.as_arr())
         .ok_or_else(|| bad("missing tensors"))?;
     let mut params = Vec::with_capacity(tensors.len());
+    let mut covered = 0usize;
     for e in tensors {
         let name = e.get("name").and_then(|x| x.as_str()).ok_or_else(|| bad("name"))?;
         let kind = parse_kind(
@@ -69,22 +134,334 @@ pub fn load_params(path: &str) -> std::io::Result<(Vec<Param>, usize)> {
             .ok_or_else(|| bad("shape"))?;
         let offset = e.get("offset").and_then(|x| x.as_usize()).ok_or_else(|| bad("offset"))?;
         let len = e.get("len").and_then(|x| x.as_usize()).ok_or_else(|| bad("len"))?;
-        if offset + 4 * len > blob.len() {
-            return Err(bad("blob too short"));
+        if shape.iter().product::<usize>() != len {
+            return Err(bad("shape disagrees with len"));
         }
-        let data: Vec<f32> = (0..len)
-            .map(|i| {
-                let o = offset + 4 * i;
-                f32::from_le_bytes([blob[o], blob[o + 1], blob[o + 2], blob[o + 3]])
-            })
-            .collect();
+        let data = read_f32s(&blob, offset, len)?;
+        covered = covered.max(offset + 4 * len);
         params.push(Param::new(
             name,
             kind,
             crate::tensor::Tensor::from_vec(&shape, data),
         ));
     }
+    if covered != blob.len() {
+        return Err(bad("blob length disagrees with manifest extents"));
+    }
     Ok((params, step))
+}
+
+// ---------------------------------------------------------------------
+// Compressed optimizer state.
+// ---------------------------------------------------------------------
+
+fn scales_entry(e: &mut Json, blob: &mut Vec<u8>, scales: &Scales) {
+    match scales {
+        Scales::PerTensor(s) => {
+            e.set("scale_kind", Json::Str("per-tensor".into()))
+                .set("scale", Json::Num(*s as f64));
+        }
+        Scales::Block { block, scales } => {
+            e.set("scale_kind", Json::Str("block".into()))
+                .set("block", Json::Num(*block as f64))
+                .set("scale_offset", Json::Num(blob.len() as f64))
+                .set("scale_count", Json::Num(scales.len() as f64));
+            push_f32s(blob, scales);
+        }
+        Scales::Rank1 { per_axis } => {
+            e.set("scale_kind", Json::Str("rank1".into()))
+                .set("scale_offset", Json::Num(blob.len() as f64))
+                .set(
+                    "axis_lens",
+                    Json::from_usizes(&per_axis.iter().map(|a| a.len()).collect::<Vec<_>>()),
+                );
+            for axis in per_axis {
+                push_f32s(blob, axis);
+            }
+        }
+    }
+}
+
+fn quant_entry(e: &mut Json, blob: &mut Vec<u8>, qt: &QuantizedTensor) {
+    let q = qt.quantizer;
+    e.set("form", Json::Str("quant".into()))
+        .set("shape", Json::from_usizes(&qt.shape))
+        .set("bits", Json::Num(q.bits as f64))
+        .set("signed", Json::Bool(q.signed))
+        .set("stochastic", Json::Bool(q.stochastic))
+        .set("norm", Json::Str(q.norm.name()))
+        .set("map", Json::Str(q.map.name().to_string()))
+        .set("code_offset", Json::Num(blob.len() as f64))
+        .set("code_len", Json::Num(qt.packed.len() as f64));
+    blob.extend_from_slice(&qt.packed);
+    scales_entry(e, blob, &qt.scales);
+}
+
+fn state_entry(
+    which: &str,
+    idx: usize,
+    blob: &mut Vec<u8>,
+    body: impl FnOnce(&mut Json, &mut Vec<u8>),
+) -> Json {
+    let mut e = Json::obj();
+    e.set("which", Json::Str(which.to_string()))
+        .set("idx", Json::Num(idx as f64));
+    body(&mut e, blob);
+    e
+}
+
+/// Save a compressed optimizer's state — packed codes, scales, factored
+/// statistics and the step counter — to `<path>.json` + `<path>.bin`.
+/// The compressed forms are persisted as-is (a 4-bit state checkpoint is
+/// ~8× smaller than an fp32 one), and [`load_opt_state`] restores them
+/// byte-exactly, so a resumed run continues bit-identically.
+pub fn save_opt_state(path: &str, opt: &CompressedAdamW) -> std::io::Result<()> {
+    let (t, ms, vs) = opt.export_states();
+    let mut blob: Vec<u8> = Vec::new();
+    let mut entries = Vec::new();
+    for (i, m) in ms.iter().enumerate() {
+        entries.push(state_entry("m", i, &mut blob, |e, blob| match m {
+            MomentState::F32(tn) => {
+                e.set("form", Json::Str("f32".into()))
+                    .set("shape", Json::from_usizes(&tn.shape))
+                    .set("offset", Json::Num(blob.len() as f64))
+                    .set("len", Json::Num(tn.numel() as f64));
+                push_f32s(blob, &tn.data);
+            }
+            MomentState::Quant(qt) => quant_entry(e, blob, qt),
+        }));
+    }
+    for (i, v) in vs.iter().enumerate() {
+        entries.push(state_entry("v", i, &mut blob, |e, blob| match v {
+            SecondState::F32(tn) => {
+                e.set("form", Json::Str("f32".into()))
+                    .set("shape", Json::from_usizes(&tn.shape))
+                    .set("offset", Json::Num(blob.len() as f64))
+                    .set("len", Json::Num(tn.numel() as f64));
+                push_f32s(blob, &tn.data);
+            }
+            SecondState::Quant(qt) => quant_entry(e, blob, qt),
+            SecondState::Factored(f) => {
+                e.set("form", Json::Str("factored".into()))
+                    .set("shape", Json::from_usizes(&f.shape))
+                    .set("row_offset", Json::Num(blob.len() as f64))
+                    .set("rows", Json::Num(f.rows() as f64));
+                push_f32s(blob, &f.row);
+                e.set("col_offset", Json::Num(blob.len() as f64))
+                    .set("cols", Json::Num(f.cols() as f64));
+                push_f32s(blob, &f.col);
+            }
+        }));
+    }
+    let mut manifest = Json::obj();
+    manifest
+        .set("version", Json::Num(1.0))
+        .set("t", Json::Num(t as f64))
+        .set("count", Json::Num(ms.len() as f64))
+        .set("states", Json::Arr(entries));
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(format!("{path}.json"), manifest.pretty())?;
+    write_blob(path, &blob)
+}
+
+fn parse_quant(e: &Json, blob: &[u8], covered: &mut usize) -> std::io::Result<QuantizedTensor> {
+    let shape = e
+        .get("shape")
+        .and_then(|x| x.as_usize_vec())
+        .ok_or_else(|| bad("state shape"))?;
+    let numel: usize = shape.iter().product();
+    let bits = e.get("bits").and_then(|x| x.as_usize()).ok_or_else(|| bad("bits"))? as u8;
+    let signed = e.get("signed").and_then(|x| x.as_bool()).ok_or_else(|| bad("signed"))?;
+    let stochastic = e
+        .get("stochastic")
+        .and_then(|x| x.as_bool())
+        .ok_or_else(|| bad("stochastic"))?;
+    let norm = e
+        .get("norm")
+        .and_then(|x| x.as_str())
+        .and_then(NormKind::parse)
+        .ok_or_else(|| bad("norm kind"))?;
+    let map = e
+        .get("map")
+        .and_then(|x| x.as_str())
+        .and_then(MapKind::parse)
+        .ok_or_else(|| bad("map kind"))?;
+    let code_offset = e
+        .get("code_offset")
+        .and_then(|x| x.as_usize())
+        .ok_or_else(|| bad("code_offset"))?;
+    let code_len = e
+        .get("code_len")
+        .and_then(|x| x.as_usize())
+        .ok_or_else(|| bad("code_len"))?;
+    if code_len != packing::packed_len(numel, bits) {
+        return Err(bad("code_len disagrees with shape/bits"));
+    }
+    let packed = read_bytes(blob, code_offset, code_len)?;
+    *covered = (*covered).max(code_offset + code_len);
+    let scales = match e.get("scale_kind").and_then(|x| x.as_str()) {
+        Some("per-tensor") => Scales::PerTensor(
+            e.get("scale").and_then(|x| x.as_f64()).ok_or_else(|| bad("scale"))? as f32,
+        ),
+        Some("block") => {
+            let block = e.get("block").and_then(|x| x.as_usize()).ok_or_else(|| bad("block"))?;
+            let off = e
+                .get("scale_offset")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| bad("scale_offset"))?;
+            let count = e
+                .get("scale_count")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| bad("scale_count"))?;
+            if block == 0 || count != numel.div_ceil(block) {
+                return Err(bad("block scales disagree with shape"));
+            }
+            let scales = read_f32s(blob, off, count)?;
+            *covered = (*covered).max(off + 4 * count);
+            Scales::Block { block, scales }
+        }
+        Some("rank1") => {
+            let mut off = e
+                .get("scale_offset")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| bad("scale_offset"))?;
+            let lens = e
+                .get("axis_lens")
+                .and_then(|x| x.as_usize_vec())
+                .ok_or_else(|| bad("axis_lens"))?;
+            if lens.len() != shape.len() || lens.iter().zip(shape.iter()).any(|(a, b)| a != b) {
+                return Err(bad("rank1 axis lens disagree with shape"));
+            }
+            let mut per_axis = Vec::with_capacity(lens.len());
+            for len in lens {
+                per_axis.push(read_f32s(blob, off, len)?);
+                off += 4 * len;
+            }
+            *covered = (*covered).max(off);
+            Scales::Rank1 { per_axis }
+        }
+        _ => return Err(bad("scale_kind")),
+    };
+    let mut q = Quantizer::new(norm, map, bits, signed);
+    q = q.with_stochastic(stochastic);
+    Ok(QuantizedTensor {
+        shape,
+        bits,
+        packed,
+        scales,
+        quantizer: q,
+    })
+}
+
+fn parse_f32_tensor(e: &Json, blob: &[u8], covered: &mut usize) -> std::io::Result<Tensor> {
+    let shape = e
+        .get("shape")
+        .and_then(|x| x.as_usize_vec())
+        .ok_or_else(|| bad("state shape"))?;
+    let offset = e.get("offset").and_then(|x| x.as_usize()).ok_or_else(|| bad("offset"))?;
+    let len = e.get("len").and_then(|x| x.as_usize()).ok_or_else(|| bad("len"))?;
+    if shape.iter().product::<usize>() != len {
+        return Err(bad("shape disagrees with len"));
+    }
+    let data = read_f32s(blob, offset, len)?;
+    *covered = (*covered).max(offset + 4 * len);
+    Ok(Tensor::from_vec(&shape, data))
+}
+
+/// Restore a compressed optimizer's state saved by [`save_opt_state`].
+/// The optimizer must be configured with the same policy the state was
+/// saved under; continuation after restore is bit-identical to the
+/// uninterrupted run (pinned by the roundtrip test below).
+pub fn load_opt_state(path: &str, opt: &mut CompressedAdamW) -> std::io::Result<()> {
+    let manifest_text = std::fs::read_to_string(format!("{path}.json"))?;
+    let manifest = Json::parse(&manifest_text)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+    let mut blob = Vec::new();
+    std::fs::File::open(format!("{path}.bin"))?.read_to_end(&mut blob)?;
+    let t = manifest.get("t").and_then(|x| x.as_usize()).ok_or_else(|| bad("t"))?;
+    let count = manifest.get("count").and_then(|x| x.as_usize()).ok_or_else(|| bad("count"))?;
+    let states = manifest
+        .get("states")
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| bad("missing states"))?;
+    let mut ms: Vec<Option<MomentState>> = (0..count).map(|_| None).collect();
+    let mut vs: Vec<Option<SecondState>> = (0..count).map(|_| None).collect();
+    let mut covered = 0usize;
+    for e in states {
+        let which = e.get("which").and_then(|x| x.as_str()).ok_or_else(|| bad("which"))?;
+        let idx = e.get("idx").and_then(|x| x.as_usize()).ok_or_else(|| bad("idx"))?;
+        if idx >= count {
+            return Err(bad("state idx out of range"));
+        }
+        let form = e.get("form").and_then(|x| x.as_str()).ok_or_else(|| bad("form"))?;
+        match which {
+            "m" => {
+                let state = match form {
+                    "f32" => MomentState::F32(parse_f32_tensor(e, &blob, &mut covered)?),
+                    "quant" => MomentState::Quant(parse_quant(e, &blob, &mut covered)?),
+                    _ => return Err(bad("m form")),
+                };
+                if ms[idx].is_some() {
+                    return Err(bad("duplicate m state entry"));
+                }
+                ms[idx] = Some(state);
+            }
+            "v" => {
+                let state = match form {
+                    "f32" => SecondState::F32(parse_f32_tensor(e, &blob, &mut covered)?),
+                    "quant" => SecondState::Quant(parse_quant(e, &blob, &mut covered)?),
+                    "factored" => {
+                        let shape = e
+                            .get("shape")
+                            .and_then(|x| x.as_usize_vec())
+                            .ok_or_else(|| bad("state shape"))?;
+                        let rows =
+                            e.get("rows").and_then(|x| x.as_usize()).ok_or_else(|| bad("rows"))?;
+                        let cols =
+                            e.get("cols").and_then(|x| x.as_usize()).ok_or_else(|| bad("cols"))?;
+                        let ro = e
+                            .get("row_offset")
+                            .and_then(|x| x.as_usize())
+                            .ok_or_else(|| bad("row_offset"))?;
+                        let co = e
+                            .get("col_offset")
+                            .and_then(|x| x.as_usize())
+                            .ok_or_else(|| bad("col_offset"))?;
+                        if shape.len() < 2
+                            || shape[0] != rows
+                            || shape[1..].iter().product::<usize>() != cols
+                        {
+                            return Err(bad("factored dims disagree with shape"));
+                        }
+                        let row = read_f32s(&blob, ro, rows)?;
+                        let col = read_f32s(&blob, co, cols)?;
+                        covered = covered.max(ro + 4 * rows).max(co + 4 * cols);
+                        SecondState::Factored(FactoredSecond { shape, row, col })
+                    }
+                    _ => return Err(bad("v form")),
+                };
+                if vs[idx].is_some() {
+                    return Err(bad("duplicate v state entry"));
+                }
+                vs[idx] = Some(state);
+            }
+            _ => return Err(bad("which")),
+        }
+    }
+    let ms: Vec<MomentState> = ms
+        .into_iter()
+        .map(|s| s.ok_or_else(|| bad("missing m state")))
+        .collect::<Result<_, _>>()?;
+    let vs: Vec<SecondState> = vs
+        .into_iter()
+        .map(|s| s.ok_or_else(|| bad("missing v state")))
+        .collect::<Result<_, _>>()?;
+    if covered != blob.len() {
+        return Err(bad("blob length disagrees with manifest extents"));
+    }
+    opt.import_states(t, ms, vs).map_err(|e| bad(&e))
 }
 
 fn bad(msg: &str) -> std::io::Error {
@@ -113,15 +490,22 @@ fn parse_kind(s: &str) -> ParamKind {
 mod tests {
     use super::*;
     use crate::model::TransformerConfig;
+    use crate::optim::lowbit::QuantPolicy;
+    use crate::optim::{Hyper, Optimizer};
     use crate::util::rng::Pcg64;
+
+    fn tmp_base(tag: &str) -> (std::path::PathBuf, String) {
+        let dir = std::env::temp_dir().join(format!("lowbit_ckpt_{tag}_{}", std::process::id()));
+        let path = dir.join("ckpt").to_str().unwrap().to_string();
+        (dir, path)
+    }
 
     #[test]
     fn roundtrip_exact() {
         let cfg = TransformerConfig::tiny();
         let mut rng = Pcg64::seeded(17);
         let params = cfg.init_params(&mut rng);
-        let dir = std::env::temp_dir().join(format!("lowbit_ckpt_{}", std::process::id()));
-        let path = dir.join("ckpt").to_str().unwrap().to_string();
+        let (dir, path) = tmp_base("params");
         save_params(&path, &params, 42).unwrap();
         let (loaded, step) = load_params(&path).unwrap();
         assert_eq!(step, 42);
@@ -138,5 +522,155 @@ mod tests {
     #[test]
     fn load_missing_fails_cleanly() {
         assert!(load_params("/nonexistent/path/ckpt").is_err());
+    }
+
+    #[test]
+    fn load_rejects_blob_extent_mismatch() {
+        // A .bin whose length disagrees with the manifest must be
+        // InvalidData — truncated, padded, or overflowing offsets alike.
+        let mut rng = Pcg64::seeded(23);
+        let params = vec![Param::new(
+            "w",
+            ParamKind::Weight,
+            Tensor::randn(&[8, 8], 0.5, &mut rng),
+        )];
+        let (dir, path) = tmp_base("badblob");
+        save_params(&path, &params, 1).unwrap();
+
+        let bin = format!("{path}.bin");
+        let good = std::fs::read(&bin).unwrap();
+        // Truncated blob.
+        std::fs::write(&bin, &good[..good.len() - 5]).unwrap();
+        let err = load_params(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        // Padded blob (trailing garbage the manifest does not cover).
+        let mut padded = good.clone();
+        padded.extend_from_slice(&[0u8; 16]);
+        std::fs::write(&bin, &padded).unwrap();
+        let err = load_params(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        std::fs::write(&bin, &good).unwrap();
+
+        // Manifest with an extent far past the blob (the overflow-prone
+        // `offset + 4*len` path) must also be InvalidData, not a panic.
+        let manifest = std::fs::read_to_string(format!("{path}.json")).unwrap();
+        let huge = manifest.replace("\"offset\": 0", &format!("\"offset\": {}", usize::MAX / 2));
+        std::fs::write(format!("{path}.json"), huge).unwrap();
+        let err = load_params(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn grads_at(shapes: &[Vec<usize>], s: usize) -> Vec<Tensor> {
+        let mut g = Pcg64::seeded(500 + s as u64);
+        shapes.iter().map(|sh| Tensor::randn(sh, 0.1, &mut g)).collect()
+    }
+
+    fn mk_params(shapes: &[Vec<usize>]) -> Vec<Param> {
+        let mut rng = Pcg64::seeded(9);
+        shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                Param::new(&format!("p{i}"), ParamKind::Weight, Tensor::randn(s, 0.5, &mut rng))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn compressed_state_checkpoint_resumes_bit_identical() {
+        // Save mid-run, reload into a fresh optimizer, continue: the
+        // resumed run must be bit-identical to the uninterrupted one —
+        // weights AND decompressed states.
+        let hp = Hyper::default();
+        let mut policy = QuantPolicy::bit4();
+        policy.min_quant_size = 0;
+        let shapes: Vec<Vec<usize>> = vec![vec![12, 64], vec![600]];
+
+        let mut opt_a = CompressedAdamW::new(hp, policy);
+        let mut pa = mk_params(&shapes);
+        for s in 0..6 {
+            opt_a.step(&mut pa, &grads_at(&shapes, s), 1e-2);
+        }
+
+        let mut opt_b = CompressedAdamW::new(hp, policy);
+        let mut pb = mk_params(&shapes);
+        for s in 0..3 {
+            opt_b.step(&mut pb, &grads_at(&shapes, s), 1e-2);
+        }
+        let (dir, path) = tmp_base("resume");
+        save_params(&path, &pb, 3).unwrap();
+        save_opt_state(&format!("{path}_opt"), &opt_b).unwrap();
+
+        let (mut pc, step) = load_params(&path).unwrap();
+        assert_eq!(step, 3);
+        let mut opt_c = CompressedAdamW::new(hp, policy);
+        load_opt_state(&format!("{path}_opt"), &mut opt_c).unwrap();
+        assert_eq!(opt_c.t(), 3);
+        for s in 3..6 {
+            opt_c.step(&mut pc, &grads_at(&shapes, s), 1e-2);
+        }
+
+        for (a, c) in pa.iter().zip(pc.iter()) {
+            assert_eq!(a.tensor.data, c.tensor.data, "{} diverged after resume", a.name);
+        }
+        for i in 0..shapes.len() {
+            let (m1, v1) = opt_a.moments(i).unwrap();
+            let (m2, v2) = opt_c.moments(i).unwrap();
+            assert_eq!(m1.data, m2.data, "m[{i}]");
+            assert_eq!(v1.data, v2.data, "v[{i}]");
+        }
+        assert_eq!(opt_a.state_bytes(), opt_c.state_bytes());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_opt_state_rejects_policy_mismatch() {
+        // A checkpoint saved under one quantization policy must not load
+        // into an optimizer built with another — decoding 4-bit codes
+        // with an 8-bit policy's tables would corrupt the moments.
+        let hp = Hyper::default();
+        let mut policy = QuantPolicy::bit4();
+        policy.min_quant_size = 0;
+        let shapes: Vec<Vec<usize>> = vec![vec![12, 64]];
+        let mut opt = CompressedAdamW::new(hp, policy);
+        let mut params = mk_params(&shapes);
+        opt.step(&mut params, &grads_at(&shapes, 0), 1e-2);
+        let (dir, path) = tmp_base("mismatch");
+        save_opt_state(&path, &opt).unwrap();
+        let mut policy8 = QuantPolicy::bit8();
+        policy8.min_quant_size = 0;
+        let mut opt8 = CompressedAdamW::new(hp, policy8);
+        let err = load_opt_state(&path, &mut opt8).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn opt_state_roundtrips_every_form() {
+        // f32 (below min_quant_size), quantized (block + rank-1 + the
+        // 1-D fallback) and factored states all round-trip exactly.
+        let hp = Hyper::default();
+        let mut policy = QuantPolicy::bit4().factored();
+        policy.min_quant_size = 1000;
+        let shapes: Vec<Vec<usize>> = vec![vec![12, 64], vec![40, 64], vec![3000]];
+        let mut opt = CompressedAdamW::new(hp, policy);
+        let mut params = mk_params(&shapes);
+        for s in 0..2 {
+            opt.step(&mut params, &grads_at(&shapes, s), 1e-2);
+        }
+        let (dir, path) = tmp_base("forms");
+        save_opt_state(&path, &opt).unwrap();
+        let mut opt2 = CompressedAdamW::new(hp, policy);
+        load_opt_state(&path, &mut opt2).unwrap();
+        assert_eq!(opt2.t(), 2);
+        assert_eq!(opt.state_bytes(), opt2.state_bytes());
+        for i in 0..shapes.len() {
+            let (m1, v1) = opt.moments(i).unwrap();
+            let (m2, v2) = opt2.moments(i).unwrap();
+            assert_eq!(m1.data, m2.data, "m[{i}]");
+            assert_eq!(v1.data, v2.data, "v[{i}]");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }
