@@ -8,10 +8,12 @@
 # engine path (dense + compressed) is exercised at a second worker count
 # on top of the explicit 1/2/7 parity matrix.
 #
-# BENCH_engine.json and BENCH_offload.json are *appended to*, one run
-# object per CI invocation (dense + compressed thread scaling; offload
-# pipeline threads × prefetch depth with measured overlap fraction and
-# virtual step time), so perf regressions stay visible across PRs.
+# BENCH_engine.json, BENCH_offload.json and BENCH_quant.json are
+# *appended to*, one run object per CI invocation (dense + compressed
+# thread scaling; offload pipeline threads × prefetch depth with
+# measured overlap fraction and virtual step time; quant kernel
+# encode/decode/roundtrip throughput), so perf regressions stay visible
+# across PRs.
 #
 # Usage: ./ci.sh
 set -euo pipefail
@@ -34,6 +36,9 @@ cargo clippy --all-targets -- -D warnings
 
 echo "== bench smoke: quant_throughput"
 cargo bench --bench quant_throughput -- --smoke
+
+echo "== bench smoke: quant_kernels (appends to BENCH_quant.json)"
+cargo bench --bench quant_kernels -- --smoke --json BENCH_quant.json
 
 echo "== bench smoke: optim_step (appends to BENCH_engine.json)"
 cargo bench --bench optim_step -- --smoke --json BENCH_engine.json

@@ -1,0 +1,102 @@
+//! Bench: nibble-granular quant kernel throughput (PR 5) — fused
+//! normalize→encode→pack, pair-LUT decode, and the full roundtrip, in
+//! Melem/s per paper preset. This is the layer every optimizer step's
+//! inner loops run on (`quant/kernels.rs`), so its trajectory is tracked
+//! in BENCH_quant.json the way the step engine's is in
+//! BENCH_engine.json.
+//!
+//! Flags:
+//!   --smoke        short measurement windows (CI)
+//!   --json PATH    append a run object to PATH (BENCH_quant.json)
+
+mod bench_util;
+
+use bench_util::{append_bench_run, bench, section};
+use lowbit_opt::quant::{MapKind, NormKind, Quantizer};
+use lowbit_opt::tensor::Tensor;
+use lowbit_opt::util::json::Json;
+use lowbit_opt::util::rng::Pcg64;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let min_secs = if smoke { 0.1 } else { 0.5 };
+
+    let n: usize = 1 << 20; // 1M elements
+    let mut rng = Pcg64::seeded(7);
+    let x2d = Tensor::randn(&[1024, 1024], 0.02, &mut rng);
+    let x1d = Tensor::randn(&[n], 0.02, &mut rng);
+    let melem = |mean_ns: f64| n as f64 * 1e3 / mean_ns;
+
+    // The paper presets the optimizer hot paths actually run, plus the
+    // per-tensor arm (rank-1's 1-D fallback in phase A/C).
+    let cases: Vec<(&str, Quantizer, bool)> = vec![
+        ("B128/DE 4-bit (m)", Quantizer::first_moment_4bit(), false),
+        ("Rank-1/Linear 4-bit (v)", Quantizer::second_moment_4bit(), false),
+        (
+            "B128/Linear 4-bit (v 1-D)",
+            Quantizer::new(NormKind::Block(128), MapKind::Linear, 4, false),
+            true,
+        ),
+        ("B2048/DE 8-bit (Dettmers m)", Quantizer::moment_8bit(true), false),
+        (
+            "per-tensor/Linear 4-bit",
+            Quantizer::new(NormKind::PerTensor, MapKind::Linear, 4, false),
+            false,
+        ),
+    ];
+
+    let mut results: Vec<(String, f64, f64, f64)> = Vec::new();
+    section("fused encode / pair-LUT decode / roundtrip (1M elements)");
+    for (name, q, use_1d) in &cases {
+        let x = if *use_1d { &x1d } else { &x2d };
+        let map = q.build_map();
+        let mut r = Pcg64::seeded(1);
+        let enc = bench(&format!("{name} encode"), min_secs, || {
+            let qt = q.quantize_with(x, &map, &mut r);
+            std::hint::black_box(&qt);
+        });
+        println!("{}  {:>8.1} Melem/s", enc.throughput_line(None), melem(enc.mean_ns));
+        let qt = q.quantize_with(x, &map, &mut r);
+        let dec = bench(&format!("{name} decode"), min_secs, || {
+            let t = qt.dequantize_with(&map);
+            std::hint::black_box(&t);
+        });
+        println!("{}  {:>8.1} Melem/s", dec.throughput_line(None), melem(dec.mean_ns));
+        let rt = bench(&format!("{name} roundtrip"), min_secs, || {
+            let qt = q.quantize_with(x, &map, &mut r);
+            let t = qt.dequantize_with(&map);
+            std::hint::black_box(&t);
+        });
+        println!("{}  {:>8.1} Melem/s", rt.throughput_line(None), melem(rt.mean_ns));
+        results.push((
+            name.to_string(),
+            melem(enc.mean_ns),
+            melem(dec.mean_ns),
+            melem(rt.mean_ns),
+        ));
+    }
+
+    if let Some(path) = json_path {
+        let mut run = Json::obj();
+        run.set("bench", Json::Str("quant_kernels".to_string()));
+        run.set("elems", Json::Num(n as f64));
+        run.set("smoke", Json::Bool(smoke));
+        let mut by_case = Json::obj();
+        for (name, enc, dec, rt) in &results {
+            let mut jr = Json::obj();
+            jr.set("encode_melem_s", Json::Num(*enc));
+            jr.set("decode_melem_s", Json::Num(*dec));
+            jr.set("roundtrip_melem_s", Json::Num(*rt));
+            by_case.set(name, jr);
+        }
+        run.set("cases", by_case);
+        append_bench_run(&path, run);
+        println!("appended run to {path}");
+    }
+}

@@ -21,7 +21,11 @@
 //!
 //! The per-piece math lives in **shard-local kernels** ([`update_piece`],
 //! [`decode_ema_piece`]) that take plain slices covering exactly one
-//! piece's data. The in-memory executor derives those slices from
+//! piece's data; their quantizer inner loops (decode, normalize, encode,
+//! pack) run on the nibble-granular kernel layer of
+//! [`crate::quant::kernels`] — pair-LUT decode, LUT/closed-form encode,
+//! fused byte-at-a-time packing — which is bit-exact to the scalar
+//! reference paths by the differential tests pinning that layer. The in-memory executor derives those slices from
 //! absolute [`SharedSlice`] views over the resident state buffers; the
 //! offload pipeline ([`crate::offload::pipeline`]) derives them from
 //! *staged* device-scratch copies of host-resident state. Because both
@@ -43,7 +47,8 @@ use crate::optim::factor::FactoredSecond;
 use crate::optim::state::{MomentState, SecondState};
 use crate::optim::{Hyper, Param};
 use crate::quant::{
-    dequantize_packed_range_into, packing, NormKind, QuantMap, QuantizedTensor, Quantizer, Scales,
+    dequantize_packed_range_into, kernels, packing, NormKind, QuantMap, QuantizedTensor,
+    Quantizer, Scales,
 };
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
@@ -919,7 +924,10 @@ fn write_scales(dst: &mut Option<Scales>, acc: &[f32], shape: &[usize]) {
 }
 
 /// Decompress block-quantized elements `[lo, lo + out.len())` from local
-/// packed/scale slices (both starting at the shard boundary).
+/// packed/scale slices (both starting at the shard boundary). Shard
+/// boundaries are block-aligned (plan invariant), so every chunk is one
+/// constant-scale fused pair-LUT run (§Perf, `quant::kernels`) — no
+/// per-element unpack, parity branch, or `k / block`.
 fn dequant_block_slice(
     map: &QuantMap,
     bits: u8,
@@ -928,9 +936,8 @@ fn dequant_block_slice(
     scales: &[f32],
     out: &mut [f32],
 ) {
-    for (k, o) in out.iter_mut().enumerate() {
-        let code = packing::get(packed, k, bits);
-        *o = map.decode(code) * scales[k / block];
+    for (bi, chunk) in out.chunks_mut(block).enumerate() {
+        kernels::decode_run_scaled(map, bits, packed, bi * block, scales[bi], chunk);
     }
 }
 

@@ -25,6 +25,12 @@
 //!   `stage_bytes`/`stage_vals`, the bounded device-scratch slots that
 //!   double-buffer each task's host-resident state through the link.
 //!
+//! The quantizer decode/encode LUTs (`crate::quant::kernels`) are *not*
+//! context state: they ride inside the optimizer's cached `QuantMap`s,
+//! which executors borrow through `StepParams` every step — so the warm
+//! step builds no tables and the zero-allocation guarantee below covers
+//! the entire kernel layer too.
+//!
 //! The per-step *borrowed* view vectors (`SharedSlice` lists, per-tensor
 //! routes) cannot live in the context — they borrow the step's params and
 //! states — so their raw `Vec` capacity is recycled instead through

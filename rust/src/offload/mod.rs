@@ -17,7 +17,11 @@
 //!    a host tier*. Every shard task's state segments are staged
 //!    through a bounded device-scratch budget (prefetch depth × slot
 //!    size), the exact in-memory update kernels run against the staged
-//!    copies, and mutated segments are written back — all interleaved
+//!    copies (their decode/encode inner loops ride the nibble-granular
+//!    kernel layer of `crate::quant::kernels` — pair-LUT decode and
+//!    fused encode→pack — identically to the in-memory executor, so the
+//!    staged path inherits both the speedup and the bit-exactness
+//!    contract), and mutated segments are written back — all interleaved
 //!    with compute on the step engine's worker pool under a dependency
 //!    discipline (see `engine/mod.rs`, "Transfer tasks and the
 //!    dependency contract"). Results are **bit-identical** to in-memory

@@ -1,0 +1,749 @@
+//! §Perf kernel layer: nibble-granular decode/encode kernels for the
+//! quantizer hot paths (the inner loops every optimizer step spends its
+//! time in — see `engine/adamw4.rs` and the offload staged path).
+//!
+//! Three kernel families, all **bit-exact** to the scalar reference
+//! paths they replace (`packing::get`/`set` + [`QuantMap::decode`] /
+//! [`QuantMap::encode`]) — the contract the differential tests below and
+//! the golden-parity suite pin:
+//!
+//! * **Pair-LUT decode** — a 256-entry `[f32; 2]` table decodes both
+//!   nibbles of a packed byte in one load (Dettmers'22-style fused LUT
+//!   dequant), so 4-bit decode loops do no per-element `i / 2` index
+//!   arithmetic, parity branch, or shift; 8-bit (and every
+//!   one-code-per-byte width) goes through a clamped 256-entry direct
+//!   table that a `u8` index can never bounds-check.
+//! * **Fast encode** — closed-form arithmetic for Linear maps (their
+//!   midpoints are exact dyadic rationals, so the strict-compare count
+//!   `#{mid < n}` reduces to a scaled ceil/floor) and a bits-keyed LUT
+//!   for DE / DE-0: the top [`LUT_KEY_BITS`] bits of the monotone `u32`
+//!   image of `n` select the narrow `[c_lo, c_hi]` band of possible
+//!   codes, and at most `c_hi - c_lo` midpoint compares (usually zero)
+//!   finish the job — replacing 15 compares (4-bit) or an 8-step binary
+//!   search (8-bit) per element.
+//! * **Fused normalize→encode→pack writers** — single-pass kernels that
+//!   divide by the scale, encode, and emit whole output bytes (two codes
+//!   packed per store). Only a byte the run enters or leaves mid-nibble
+//!   is read-modified-written, so the `packing::set` load-store
+//!   dependency chain that serialized every encode loop is gone.
+//!
+//! The LUTs live inside [`QuantMap`] itself ([`QuantKernels`], built
+//! once in `QuantMap::new`): the optimizer's cached maps — borrowed by
+//! the step engine through `StepParams` and by the offload pipeline's
+//! staged kernels — carry them for free, so the warm step builds nothing
+//! and stays zero-allocation (pinned by `rust/tests/ctx_cache.rs`).
+//!
+//! Stochastic rounding is *not* routed through this layer: the SR
+//! bracket draw is inherently per element and keeps the existing
+//! `encode_stochastic` + `packing::set` path.
+
+use super::mapping::{MapKind, QuantMap};
+
+/// Top bits of the monotone `u32` float image keying the encode LUT:
+/// 12 bits = sign + 8 exponent bits + 3 mantissa bits (4096 buckets, 8
+/// sub-buckets per binade — enough that even the 8-bit DE map averages
+/// only a few fix-up compares per element).
+const LUT_KEY_BITS: u32 = 12;
+const LUT_LEN: usize = 1 << LUT_KEY_BITS;
+
+/// Order-preserving `u32` image of a non-NaN `f32`: negative floats flip
+/// all bits, non-negative floats set the sign bit, so integer comparison
+/// of images matches float comparison of values. (`-0.0` sorts just
+/// below `+0.0`; that never flips a strict `mid < n` outcome because
+/// the midpoint averaging in `QuantMap::new` can only produce `+0.0`.)
+#[inline(always)]
+fn monotone(n: f32) -> u32 {
+    let b = n.to_bits();
+    b ^ ((((b as i32) >> 31) as u32) | 0x8000_0000)
+}
+
+/// Write `code` into the low nibble, preserving the high one (the same
+/// read-modify-write `packing::set` performs for even positions).
+#[inline(always)]
+fn set_lo(slot: &mut u8, code: u8) {
+    *slot = (*slot & 0xF0) | (code & 0x0F);
+}
+
+/// Write `code` into the high nibble, preserving the low one.
+#[inline(always)]
+fn set_hi(slot: &mut u8, code: u8) {
+    *slot = (*slot & 0x0F) | ((code & 0x0F) << 4);
+}
+
+/// The rank-1 scale combiner (Alg. 4 line 7) — kept as the exact
+/// comparison form the scalar paths use, not `f32::min`.
+#[inline(always)]
+fn smin(a: f32, b: f32) -> f32 {
+    if a < b {
+        a
+    } else {
+        b
+    }
+}
+
+/// The fast encoder variants (see the module docs). Every variant is
+/// bit-exact to the midpoint partition `#{mid < n}` with ties to the
+/// smaller index; NaN input encodes to 0, exactly like the all-`false`
+/// partition.
+#[derive(Clone, Debug)]
+enum FastEncode {
+    /// Unsigned Linear `T(i) = (i+1)/2^b`: the midpoints are the exact
+    /// dyadic rationals `(2i+3)/2^(b+1)`, so with `y = n * 2^(b+1)`
+    /// (power-of-two scaling, exact) the count is
+    /// `clamp(ceil((y - 3)/2), 0, 2^b - 1)`; the subtraction is exact
+    /// wherever the outcome is sensitive to it.
+    LinearU { y_scale: f32, top: u8 },
+    /// Signed Linear `T = ±(i+1)/2^(b-1)`: midpoints scaled by `2^b` are
+    /// `{-(2k+1), 0, +(2k+1) : k in [1, half-1]}` with `half = 2^(b-1)`,
+    /// counted closed-form per sign.
+    LinearS { y_scale: f32, half: u8 },
+    /// Bits-keyed LUT for the DE / DE-0 maps: bucket → `[c_lo, c_hi]`,
+    /// the min/max midpoint count over the bucket's value range; at most
+    /// `c_hi - c_lo` direct midpoint compares resolve the exact code.
+    Lut {
+        lut: Box<[[u8; 2]; LUT_LEN]>,
+        /// Copy of the map's midpoints for the fix-up compares.
+        mid: Box<[f32]>,
+    },
+}
+
+fn build_lut(mid: &[f32]) -> Box<[[u8; 2]; LUT_LEN]> {
+    debug_assert!(mid.len() < 256, "counts must fit a u8");
+    let mu: Vec<u32> = mid.iter().map(|&m| monotone(m)).collect();
+    debug_assert!(
+        mu.windows(2).all(|w| w[0] < w[1]),
+        "midpoints must be strictly increasing"
+    );
+    let shift = 32 - LUT_KEY_BITS;
+    let mut lut = vec![[0u8; 2]; LUT_LEN];
+    for (t, entry) in lut.iter_mut().enumerate() {
+        let lo_u = (t as u32) << shift;
+        let hi_u = lo_u | ((1u32 << shift) - 1);
+        // For any n in the bucket, #{mid < n} is at least the count
+        // below the bucket's first image and at most the count at-or-
+        // below its last; midpoints inside that band get compared
+        // directly at encode time.
+        let lo = mu.partition_point(|&m| m < lo_u) as u8;
+        let hi = mu.partition_point(|&m| m <= hi_u) as u8;
+        *entry = [lo, hi];
+    }
+    lut.into_boxed_slice().try_into().expect("LUT_LEN entries")
+}
+
+/// Decode/encode LUT bundle riding inside every [`QuantMap`] (built once
+/// with the map, borrowed by every hot path).
+#[derive(Clone, Debug)]
+pub struct QuantKernels {
+    /// 4-bit maps: `pair[b] = [T(b & 0xF), T(b >> 4)]`. Table indices
+    /// are clamped for maps with fewer than 16 codes (DE-0); valid data
+    /// never stores an out-of-table code, so clamping is unreachable on
+    /// anything the scalar path would accept.
+    pair: Option<Box<[[f32; 2]; 256]>>,
+    /// Direct code → value table, clamp-padded to 256 entries so a `u8`
+    /// index never bounds-checks.
+    byte: Box<[f32; 256]>,
+    enc: FastEncode,
+    /// `encode(0.0)` — the code every element of a zero-scale block
+    /// takes.
+    zero_code: u8,
+}
+
+impl QuantKernels {
+    pub(crate) fn build(
+        kind: MapKind,
+        bits: u8,
+        signed: bool,
+        values: &[f32],
+        mid: &[f32],
+    ) -> QuantKernels {
+        let clamp = |i: usize| values[i.min(values.len() - 1)];
+        let byte: Box<[f32; 256]> = (0..256)
+            .map(clamp)
+            .collect::<Vec<f32>>()
+            .into_boxed_slice()
+            .try_into()
+            .expect("256 entries");
+        let pair = if bits == 4 {
+            let v: Vec<[f32; 2]> = (0..256).map(|b| [clamp(b & 0x0F), clamp(b >> 4)]).collect();
+            Some(v.into_boxed_slice().try_into().expect("256 entries"))
+        } else {
+            None
+        };
+        let enc = match (kind, signed) {
+            (MapKind::Linear, false) => FastEncode::LinearU {
+                y_scale: (1u32 << (bits as u32 + 1)) as f32,
+                top: ((1u32 << bits) - 1) as u8,
+            },
+            (MapKind::Linear, true) => FastEncode::LinearS {
+                y_scale: (1u32 << bits) as f32,
+                half: (1u32 << (bits as u32 - 1)) as u8,
+            },
+            _ => FastEncode::Lut {
+                lut: build_lut(mid),
+                mid: mid.to_vec().into_boxed_slice(),
+            },
+        };
+        let zero_code = mid.partition_point(|&m| m < 0.0) as u8;
+        QuantKernels {
+            pair,
+            byte,
+            enc,
+            zero_code,
+        }
+    }
+
+    /// LUT / closed-form nearest-code encode — bit-exact to
+    /// [`QuantMap::encode`] for every input (NaN included), pinned by
+    /// the exhaustive differential tests below.
+    #[inline]
+    pub fn encode(&self, n: f32) -> u8 {
+        if n.is_nan() {
+            // The midpoint partition sees all-false compares.
+            return 0;
+        }
+        match &self.enc {
+            FastEncode::LinearU { y_scale, top } => {
+                let k = ((n * y_scale - 3.0) * 0.5).ceil();
+                if k >= *top as f32 {
+                    *top
+                } else if k >= 1.0 {
+                    k as u8
+                } else {
+                    0
+                }
+            }
+            FastEncode::LinearS { y_scale, half } => {
+                let half = *half as u32;
+                let y = n * y_scale;
+                if y > 0.0 {
+                    // half-1 negative midpoints and the zero midpoint
+                    // are below, plus the positives strictly below y.
+                    let k = ((y - 3.0) * 0.5).ceil();
+                    let c = if k >= (half - 1) as f32 {
+                        half - 1
+                    } else if k >= 1.0 {
+                        k as u32
+                    } else {
+                        0
+                    };
+                    (half + c) as u8
+                } else {
+                    // Negative midpoints -(2k+1) above y drop out.
+                    let k = ((-y - 1.0) * 0.5).floor();
+                    let c = if k >= (half - 1) as f32 {
+                        half - 1
+                    } else if k >= 1.0 {
+                        k as u32
+                    } else {
+                        0
+                    };
+                    (half - 1 - c) as u8
+                }
+            }
+            FastEncode::Lut { lut, mid } => {
+                let u = monotone(n);
+                let [lo, hi] = lut[(u >> (32 - LUT_KEY_BITS)) as usize];
+                let mut c = lo;
+                for &m in &mid[lo as usize..hi as usize] {
+                    c += (m < n) as u8;
+                }
+                c
+            }
+        }
+    }
+
+    /// Both nibble values of a packed byte (4-bit maps only).
+    #[inline]
+    pub fn decode_pair(&self, byte: u8) -> [f32; 2] {
+        self.pair4()[byte as usize]
+    }
+
+    /// Code → value through the clamp-padded direct table.
+    #[inline]
+    pub fn decode_byte(&self, code: u8) -> f32 {
+        self.byte[code as usize]
+    }
+
+    /// The code `encode(0.0)` produces.
+    #[inline]
+    pub fn zero_code(&self) -> u8 {
+        self.zero_code
+    }
+
+    #[inline]
+    fn pair4(&self) -> &[[f32; 2]; 256] {
+        self.pair.as_deref().expect("pair LUT exists for 4-bit maps")
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fused run kernels. Position convention: element `k` of the run sits at
+// nibble (4-bit) or byte (otherwise) position `pos0 + k` of the packed
+// buffer, i.e. the buffer's coverage starts at position 0. Runs may
+// start and end mid-byte; boundary nibbles are handled with the scalar
+// `set`/`get` semantics so neighboring runs compose exactly.
+// ---------------------------------------------------------------------
+
+/// Fused constant-scale run decode: `out[k] = T(code(pos0 + k)) * s`.
+/// Bit-identical to a `packing::get` + `QuantMap::decode` + multiply
+/// loop.
+pub fn decode_run_scaled(
+    map: &QuantMap,
+    bits: u8,
+    packed: &[u8],
+    pos0: usize,
+    s: f32,
+    out: &mut [f32],
+) {
+    if out.is_empty() {
+        return;
+    }
+    let k = map.kernels();
+    if bits == 4 {
+        let pair = k.pair4();
+        let mut pos = pos0;
+        let mut o = 0usize;
+        if pos % 2 == 1 {
+            out[0] = k.decode_byte(packed[pos / 2] >> 4) * s;
+            pos += 1;
+            o = 1;
+        }
+        let pairs = (out.len() - o) / 2;
+        let byte0 = pos / 2;
+        for (ob, &b) in out[o..o + 2 * pairs]
+            .chunks_exact_mut(2)
+            .zip(packed[byte0..byte0 + pairs].iter())
+        {
+            let pv = pair[b as usize];
+            ob[0] = pv[0] * s;
+            ob[1] = pv[1] * s;
+        }
+        if o + 2 * pairs < out.len() {
+            let last = out.len() - 1;
+            out[last] = k.decode_byte(packed[(pos0 + last) / 2] & 0x0F) * s;
+        }
+    } else {
+        for (ob, &b) in out.iter_mut().zip(packed[pos0..pos0 + out.len()].iter()) {
+            *ob = k.decode_byte(b) * s;
+        }
+    }
+}
+
+/// Fused rank-1 row-segment decode: element `j` scales by
+/// `min(r_i, cseg[j])` — the row statistic is hoisted by the caller,
+/// `cseg` holds the column statistics of exactly this segment's columns.
+pub fn decode_rank1_row(
+    map: &QuantMap,
+    bits: u8,
+    packed: &[u8],
+    pos0: usize,
+    ri: f32,
+    cseg: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(cseg.len(), out.len());
+    if out.is_empty() {
+        return;
+    }
+    let k = map.kernels();
+    if bits == 4 {
+        let pair = k.pair4();
+        let mut pos = pos0;
+        let mut o = 0usize;
+        if pos % 2 == 1 {
+            out[0] = k.decode_byte(packed[pos / 2] >> 4) * smin(ri, cseg[0]);
+            pos += 1;
+            o = 1;
+        }
+        let pairs = (out.len() - o) / 2;
+        let byte0 = pos / 2;
+        for ((ob, cs), &b) in out[o..o + 2 * pairs]
+            .chunks_exact_mut(2)
+            .zip(cseg[o..o + 2 * pairs].chunks_exact(2))
+            .zip(packed[byte0..byte0 + pairs].iter())
+        {
+            let pv = pair[b as usize];
+            ob[0] = pv[0] * smin(ri, cs[0]);
+            ob[1] = pv[1] * smin(ri, cs[1]);
+        }
+        if o + 2 * pairs < out.len() {
+            let last = out.len() - 1;
+            out[last] = k.decode_byte(packed[(pos0 + last) / 2] & 0x0F) * smin(ri, cseg[last]);
+        }
+    } else {
+        for ((ob, &cj), &b) in out
+            .iter_mut()
+            .zip(cseg.iter())
+            .zip(packed[pos0..pos0 + out.len()].iter())
+        {
+            *ob = k.decode_byte(b) * smin(ri, cj);
+        }
+    }
+}
+
+/// Fused normalize→encode→pack of a constant-scale run (`s > 0`):
+/// position `pos0 + k` of `dst` receives `encode(vals[k] / s)`. Whole
+/// output bytes are built in registers and stored once.
+pub fn encode_run_scaled(
+    map: &QuantMap,
+    bits: u8,
+    vals: &[f32],
+    s: f32,
+    pos0: usize,
+    dst: &mut [u8],
+) {
+    debug_assert!(s > 0.0, "zero-scale runs take encode_run_zero");
+    if vals.is_empty() {
+        return;
+    }
+    let k = map.kernels();
+    if bits == 4 {
+        let mut pos = pos0;
+        let mut i = 0usize;
+        if pos % 2 == 1 {
+            set_hi(&mut dst[pos / 2], k.encode(vals[0] / s));
+            pos += 1;
+            i = 1;
+        }
+        let pairs = (vals.len() - i) / 2;
+        let byte0 = pos / 2;
+        for (b, pv) in dst[byte0..byte0 + pairs]
+            .iter_mut()
+            .zip(vals[i..i + 2 * pairs].chunks_exact(2))
+        {
+            let c0 = k.encode(pv[0] / s);
+            let c1 = k.encode(pv[1] / s);
+            *b = c0 | (c1 << 4);
+        }
+        if i + 2 * pairs < vals.len() {
+            let last = vals.len() - 1;
+            set_lo(&mut dst[(pos0 + last) / 2], k.encode(vals[last] / s));
+        }
+    } else {
+        for (d, &v) in dst[pos0..pos0 + vals.len()].iter_mut().zip(vals.iter()) {
+            *d = k.encode(v / s);
+        }
+    }
+}
+
+/// Fused rank-1 row-segment encode: element `j` normalizes by
+/// `min(r_i, cseg[j])` (zero scales encode a normalized 0, exactly like
+/// the scalar path).
+pub fn encode_rank1_row(
+    map: &QuantMap,
+    bits: u8,
+    vals: &[f32],
+    ri: f32,
+    cseg: &[f32],
+    pos0: usize,
+    dst: &mut [u8],
+) {
+    debug_assert_eq!(cseg.len(), vals.len());
+    if vals.is_empty() {
+        return;
+    }
+    #[inline(always)]
+    fn norm(v: f32, ri: f32, cj: f32) -> f32 {
+        let s = smin(ri, cj);
+        if s > 0.0 {
+            v / s
+        } else {
+            0.0
+        }
+    }
+    let k = map.kernels();
+    if bits == 4 {
+        let mut pos = pos0;
+        let mut i = 0usize;
+        if pos % 2 == 1 {
+            set_hi(&mut dst[pos / 2], k.encode(norm(vals[0], ri, cseg[0])));
+            pos += 1;
+            i = 1;
+        }
+        let pairs = (vals.len() - i) / 2;
+        let byte0 = pos / 2;
+        for ((b, pv), cs) in dst[byte0..byte0 + pairs]
+            .iter_mut()
+            .zip(vals[i..i + 2 * pairs].chunks_exact(2))
+            .zip(cseg[i..i + 2 * pairs].chunks_exact(2))
+        {
+            let c0 = k.encode(norm(pv[0], ri, cs[0]));
+            let c1 = k.encode(norm(pv[1], ri, cs[1]));
+            *b = c0 | (c1 << 4);
+        }
+        if i + 2 * pairs < vals.len() {
+            let last = vals.len() - 1;
+            set_lo(
+                &mut dst[(pos0 + last) / 2],
+                k.encode(norm(vals[last], ri, cseg[last])),
+            );
+        }
+    } else {
+        for ((d, &v), &cj) in dst[pos0..pos0 + vals.len()]
+            .iter_mut()
+            .zip(vals.iter())
+            .zip(cseg.iter())
+        {
+            *d = k.encode(norm(v, ri, cj));
+        }
+    }
+}
+
+/// Zero-scale run fill: every element takes `encode(0.0)`, and the RNG
+/// is (deliberately) untouched, matching the scalar zero-block arm.
+pub fn encode_run_zero(map: &QuantMap, bits: u8, len: usize, pos0: usize, dst: &mut [u8]) {
+    if len == 0 {
+        return;
+    }
+    let zc = map.kernels().zero_code();
+    if bits == 4 {
+        let mut pos = pos0;
+        let mut i = 0usize;
+        if pos % 2 == 1 {
+            set_hi(&mut dst[pos / 2], zc);
+            pos += 1;
+            i = 1;
+        }
+        let pairs = (len - i) / 2;
+        let byte0 = pos / 2;
+        dst[byte0..byte0 + pairs].fill(zc | (zc << 4));
+        if i + 2 * pairs < len {
+            set_lo(&mut dst[(pos0 + len - 1) / 2], zc);
+        }
+    } else {
+        dst[pos0..pos0 + len].fill(zc);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::packing;
+    use crate::util::propcheck;
+    use crate::util::rng::Pcg64;
+
+    fn all_maps(bit_choices: &[u8]) -> Vec<QuantMap> {
+        let mut maps = Vec::new();
+        for kind in [MapKind::Linear, MapKind::DynExp, MapKind::DynExpNoZero] {
+            for signed in [false, true] {
+                for &b in bit_choices {
+                    if kind != MapKind::Linear && signed && b < 3 {
+                        continue; // signed DE needs >= 3 bits
+                    }
+                    maps.push(QuantMap::new(kind, b, signed));
+                }
+            }
+        }
+        maps
+    }
+
+    /// IEEE next float up/down via bit manipulation (`f32::next_up` is
+    /// too recent for the pinned toolchain).
+    fn next_after(x: f32, up: bool) -> f32 {
+        let b = x.to_bits();
+        let nb = if up {
+            if b == 0x8000_0000 {
+                1 // -0.0 -> smallest positive subnormal
+            } else if b & 0x8000_0000 != 0 {
+                b - 1
+            } else {
+                b + 1
+            }
+        } else if b == 0 {
+            0x8000_0001 // +0.0 -> smallest negative subnormal
+        } else if b & 0x8000_0000 != 0 {
+            b + 1
+        } else {
+            b - 1
+        };
+        f32::from_bits(nb)
+    }
+
+    #[test]
+    fn pair_lut_matches_decode_all_256_bytes() {
+        // Exhaustive: every (map kind, signedness, 4/8-bit) combo, every
+        // possible packed byte, both nibbles — the pair LUT must agree
+        // with the scalar decode (index-clamped for DE-0's missing top
+        // code, which valid data never stores).
+        for map in all_maps(&[4, 8]) {
+            let top = (map.len() - 1) as u8;
+            for byte in 0..=255u8 {
+                if map.bits == 4 {
+                    let [lo, hi] = map.kernels().decode_pair(byte);
+                    let exp_lo = map.decode((byte & 0x0F).min(top));
+                    let exp_hi = map.decode((byte >> 4).min(top));
+                    assert_eq!(
+                        [lo.to_bits(), hi.to_bits()],
+                        [exp_lo.to_bits(), exp_hi.to_bits()],
+                        "{:?} b{} signed={} byte {byte:#04x}",
+                        map.kind,
+                        map.bits,
+                        map.signed
+                    );
+                }
+                let d = map.kernels().decode_byte(byte);
+                assert_eq!(d.to_bits(), map.decode(byte.min(top)).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn run_decode_matches_scalar_all_offsets() {
+        // The fused run kernels vs the packing::get + decode + multiply
+        // loop, across start parities and run lengths (lead/pair/tail
+        // arms all exercised).
+        let mut rng = Pcg64::seeded(9);
+        for map in all_maps(&[4, 8]) {
+            let n = 33;
+            let codes: Vec<u8> = (0..n)
+                .map(|_| (rng.next_u32() as usize % map.len()) as u8)
+                .collect();
+            let packed = packing::pack(&codes, map.bits);
+            let s = 0.37f32;
+            for lo in 0..n {
+                for hi in [lo, lo + 1, lo + 2, n].into_iter().filter(|&h| h <= n) {
+                    let mut out = vec![0.0f32; hi - lo];
+                    decode_run_scaled(&map, map.bits, &packed, lo, s, &mut out);
+                    for (k, &o) in out.iter().enumerate() {
+                        let exp = map.decode(packing::get(&packed, lo + k, map.bits)) * s;
+                        assert_eq!(o.to_bits(), exp.to_bits(), "run [{lo},{hi}) elem {k}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_encode_matches_oracle_dense_grid_and_edges() {
+        // Dense grid + targeted edges (every representable value, every
+        // midpoint and its two float neighbors — ties included — plus
+        // ±0.0, subnormals, out-of-range and non-finite inputs) across
+        // bitwidths: the LUT / closed-form encode must equal the
+        // midpoint-partition oracle bit-for-bit.
+        for map in all_maps(&[2, 3, 4, 5, 8]) {
+            let mut pts: Vec<f32> = vec![
+                0.0,
+                -0.0,
+                f32::INFINITY,
+                f32::NEG_INFINITY,
+                f32::NAN,
+                f32::MIN_POSITIVE,
+                -f32::MIN_POSITIVE,
+                f32::from_bits(1),         // smallest subnormal
+                f32::from_bits(0x007F_FFFF), // largest subnormal
+                -f32::from_bits(1),
+                5.0,
+                -5.0,
+                1e30,
+                -1e30,
+                1e-30,
+                -1e-30,
+            ];
+            for w in map.values.windows(2) {
+                let m = 0.5 * (w[0] + w[1]); // recomputes the stored midpoint
+                for x in [w[0], w[1], m, next_after(m, true), next_after(m, false)] {
+                    pts.push(x);
+                    pts.push(-x);
+                }
+            }
+            for i in 0..=24_000 {
+                pts.push(-1.2 + i as f32 * 1e-4);
+            }
+            for n in pts {
+                let fast = map.encode_fast(n);
+                let oracle = map.encode(n);
+                assert_eq!(
+                    fast, oracle,
+                    "{:?} b{} signed={} n={n:?} ({:#010x})",
+                    map.kind,
+                    map.bits,
+                    map.signed,
+                    n.to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fast_encode_matches_oracle_random_bits_property() {
+        // Random float bit patterns (NaNs included — both paths must
+        // treat them as the all-false partition).
+        let maps = all_maps(&[3, 4, 8]);
+        propcheck::check("fast-encode-differential", 200, |g| {
+            let map = g.choose(&maps);
+            for _ in 0..64 {
+                let n = f32::from_bits(g.rng.next_u32());
+                let fast = map.encode_fast(n);
+                let oracle = map.encode(n);
+                if fast != oracle {
+                    return Err(format!(
+                        "{:?} b{} signed={}: n bits {:#010x} fast={fast} oracle={oracle}",
+                        map.kind,
+                        map.bits,
+                        map.signed,
+                        n.to_bits()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_encode_writers_match_scalar_set_paths() {
+        // encode_run_scaled / encode_rank1_row / encode_run_zero vs the
+        // scalar normalize + encode + packing::set loop, at every start
+        // parity (boundary RMW nibbles must compose exactly).
+        let mut rng = Pcg64::seeded(4);
+        for map in all_maps(&[4, 8]) {
+            let n = 21;
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal() * 0.8).collect();
+            let cseg: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let ri = 0.6f32;
+            let s = 0.9f32;
+            for pos0 in [0usize, 1, 2, 3] {
+                let blen = packing::packed_len(pos0 + n, map.bits);
+                for mode in 0..3 {
+                    let mut fused = vec![0xA5u8; blen];
+                    let mut scalar = vec![0xA5u8; blen];
+                    match mode {
+                        0 => {
+                            encode_run_scaled(&map, map.bits, &vals, s, pos0, &mut fused);
+                            for (j, &v) in vals.iter().enumerate() {
+                                packing::set(&mut scalar, pos0 + j, map.encode(v / s), map.bits);
+                            }
+                        }
+                        1 => {
+                            encode_rank1_row(&map, map.bits, &vals, ri, &cseg, pos0, &mut fused);
+                            for (j, &v) in vals.iter().enumerate() {
+                                let sc = if ri < cseg[j] { ri } else { cseg[j] };
+                                let nrm = if sc > 0.0 { v / sc } else { 0.0 };
+                                packing::set(&mut scalar, pos0 + j, map.encode(nrm), map.bits);
+                            }
+                        }
+                        _ => {
+                            encode_run_zero(&map, map.bits, n, pos0, &mut fused);
+                            let zc = map.encode(0.0);
+                            for j in 0..n {
+                                packing::set(&mut scalar, pos0 + j, zc, map.bits);
+                            }
+                        }
+                    }
+                    assert_eq!(
+                        fused, scalar,
+                        "{:?} b{} signed={} pos0={pos0} mode={mode}",
+                        map.kind, map.bits, map.signed
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_code_matches_reference() {
+        for map in all_maps(&[2, 3, 4, 5, 8]) {
+            assert_eq!(map.kernels().zero_code(), map.encode(0.0));
+            assert_eq!(map.encode_fast(0.0), map.encode(0.0));
+        }
+    }
+}

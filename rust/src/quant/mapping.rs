@@ -16,6 +16,8 @@
 //! * **DE-0** — DE with the zero point removed (one code wasted), the
 //!   paper's intermediate fix for the zero-point problem.
 
+use super::kernels::QuantKernels;
+
 /// Which mapping to build.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum MapKind {
@@ -57,6 +59,10 @@ pub struct QuantMap {
     /// §Perf: midpoints padded with +inf to a fixed 15-lane array so the
     /// 4-bit encode is a fully unrolled, branch-free compare-count.
     mid15: [f32; 15],
+    /// §Perf: pair/byte decode LUTs + the LUT/closed-form fast encoder
+    /// ([`super::kernels`]), built once with the map so every hot path
+    /// holding a cached `&QuantMap` gets them allocation-free.
+    kernels: QuantKernels,
 }
 
 /// Fraction table for `F` fraction bits: midpoints of a uniform grid over
@@ -161,6 +167,7 @@ impl QuantMap {
         for (dst, &m) in mid15.iter_mut().zip(mid.iter()) {
             *dst = m;
         }
+        let kernels = QuantKernels::build(kind, bits, signed, &values, &mid);
         QuantMap {
             kind,
             bits,
@@ -168,6 +175,7 @@ impl QuantMap {
             values,
             mid,
             mid15,
+            kernels,
         }
     }
 
@@ -179,7 +187,7 @@ impl QuantMap {
 
     #[inline]
     pub fn is_empty(&self) -> bool {
-        false
+        self.values.is_empty()
     }
 
     /// Smallest representable magnitude > 0 (the paper quotes 0.0033 for
@@ -218,6 +226,21 @@ impl QuantMap {
     #[inline]
     pub fn decode(&self, q: u8) -> f32 {
         self.values[q as usize]
+    }
+
+    /// §Perf: the kernel-layer encode ([`super::kernels`]) — closed-form
+    /// for Linear maps, bits-keyed LUT for DE/DE-0 — bit-exact to
+    /// [`Self::encode`], which stays the oracle-pinned reference the
+    /// differential tests compare against.
+    #[inline]
+    pub fn encode_fast(&self, n: f32) -> u8 {
+        self.kernels.encode(n)
+    }
+
+    /// The decode/encode LUT bundle for the kernel layer.
+    #[inline]
+    pub fn kernels(&self) -> &QuantKernels {
+        &self.kernels
     }
 
     /// Bracketing codes for stochastic rounding: returns `(lo, hi)` such
@@ -330,6 +353,15 @@ mod tests {
         assert_eq!(m.bracket(-5.0), (0, 0));
         let top = (m.len() - 1) as u8;
         assert_eq!(m.bracket(5.0), (top, top));
+    }
+
+    #[test]
+    fn is_empty_reflects_values() {
+        // Regression: this used to hardcode `false`.
+        let m = QuantMap::new(MapKind::Linear, 4, false);
+        assert!(!m.is_empty());
+        assert_eq!(m.is_empty(), m.values.is_empty());
+        assert_eq!(m.len(), m.values.len());
     }
 
     #[test]

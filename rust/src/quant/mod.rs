@@ -3,18 +3,43 @@
 //! * [`mapping`] — quantization mappings **T** (Linear, DE, DE-0);
 //! * [`normalize`] — normalization **N** (per-tensor, block-wise, rank-1);
 //! * [`packing`] — nibble/byte packing of codes;
+//! * [`kernels`] — nibble-granular hot-path kernels (pair-LUT decode,
+//!   LUT/closed-form encode, fused normalize→encode→pack writers);
 //! * [`stochastic`] — stochastic rounding;
 //! * [`quantizer`] — the composed quantizer `M ∘ N` and
 //!   [`quantizer::QuantizedTensor`], the persisted state form;
 //! * [`error`] — reconstruction metrics incl. the zero-point diagnostic.
+//!
+//! # Kernel layer and the bit-exactness contract
+//!
+//! Every hot arm of [`quantizer`] (whole-tensor and range encode/decode,
+//! which the step engine's phases A/C and the offload pipeline's staged
+//! kernels ride) is implemented on the [`kernels`] layer: a 256-entry
+//! pair LUT decodes both nibbles of a packed 4-bit byte per load, a
+//! closed-form (Linear) or bits-keyed-LUT (DE/DE-0) encoder replaces the
+//! per-element midpoint compare loop, and fused writers normalize,
+//! encode and emit whole packed bytes in one pass.
+//!
+//! **Contract:** the kernel paths must match the oracle-pinned scalar
+//! paths *bit for bit* — [`mapping::QuantMap::encode`] (the midpoint
+//! partition that reproduces the python oracle's `argmin`, ties to the
+//! smaller code) and `packing::get`/`set` + [`mapping::QuantMap::decode`]
+//! remain the reference semantics, and the kernels are pinned to them by
+//! exhaustive/dense differential tests in `kernels.rs` plus the
+//! golden-parity, engine-parity, offload-pipeline and range-API suites.
+//! Any new kernel must preserve this equivalence exactly (same f32
+//! operations in the same order per element); perf work that would
+//! change results belongs behind a new quantizer scheme, not here.
 
 pub mod error;
+pub mod kernels;
 pub mod mapping;
 pub mod normalize;
 pub mod packing;
 pub mod quantizer;
 pub mod stochastic;
 
+pub use kernels::QuantKernels;
 pub use mapping::{MapKind, QuantMap};
 pub use normalize::{NormKind, Scales};
 pub use quantizer::{dequantize_packed_range_into, QuantizedTensor, Quantizer};

@@ -3,6 +3,7 @@
 //! Alg. 1: the optimizer's working state exists in f32 only transiently;
 //! what lives in memory between steps is a `QuantizedTensor`.
 
+use super::kernels;
 use super::mapping::{MapKind, QuantMap};
 use super::normalize::{compute_scales, denormalize, NormKind, Scales};
 use super::packing;
@@ -77,22 +78,35 @@ impl Quantizer {
         debug_assert_eq!(map.bits, self.bits);
         let scales = compute_scales(x, self.norm);
         let n = x.numel();
+        // §Perf fused arms ([`super::kernels`]): normalize → encode →
+        // pack in one pass, whole output bytes per store, no code or
+        // norm buffers. True division (not reciprocal multiply) keeps
+        // the codes bit-identical to the python oracle, which the golden
+        // parity tests require. Stochastic rounding keeps the
+        // element-wise path below — the SR bracket draw is inherently
+        // per element.
+        if !self.stochastic {
+            if let Some(packed) = self.quantize_fused(x, map, &scales) {
+                return QuantizedTensor {
+                    shape: x.shape.clone(),
+                    bits: self.bits,
+                    packed,
+                    scales,
+                    quantizer: *self,
+                };
+            }
+        }
         let mut codes = vec![0u8; n];
         match &scales {
-            // Fast path for block scales: iterate block-wise, avoiding the
-            // per-element scale lookup.
+            // Stochastic block path: per-block normalize + SR encode.
             Scales::Block { block, scales: sc } => {
-                // §Perf: two passes per block — a tight division loop the
-                // compiler vectorizes, then the branch-free encode. True
-                // division (not reciprocal multiply) keeps the codes
-                // bit-identical to the python oracle, which the golden
-                // parity tests require.
                 let mut norm = vec![0.0f32; (*block).min(x.data.len())];
                 for (bi, chunk) in x.data.chunks(*block).enumerate() {
                     let s = sc[bi];
                     let base = bi * *block;
                     if s <= 0.0 {
-                        // All-zero block: every code encodes normalized 0.
+                        // All-zero block: every code encodes normalized 0
+                        // and the RNG is deliberately not consumed.
                         let zero_code = map.encode(0.0);
                         for j in 0..chunk.len() {
                             codes[base + j] = zero_code;
@@ -115,25 +129,6 @@ impl Quantizer {
                     }
                 }
             }
-            // Fast path for rank-1 scales on 2-D tensors (§Perf): avoid
-            // the generic per-element div/mod coordinate decomposition.
-            Scales::Rank1 { per_axis } if x.ndim() == 2 && !self.stochastic => {
-                let (rows, cols) = x.dims2();
-                let r = &per_axis[0];
-                let c = &per_axis[1];
-                for i in 0..rows {
-                    let ri = r[i];
-                    let xrow = &x.data[i * cols..(i + 1) * cols];
-                    let crow = &mut codes[i * cols..(i + 1) * cols];
-                    for ((&v, code), &cj) in
-                        xrow.iter().zip(crow.iter_mut()).zip(c.iter())
-                    {
-                        let s = if ri < cj { ri } else { cj };
-                        let nrm = if s > 0.0 { v / s } else { 0.0 };
-                        *code = map.encode(nrm);
-                    }
-                }
-            }
             _ => {
                 for (i, &v) in x.data.iter().enumerate() {
                     let s = scales.scale_at(i, &x.shape);
@@ -153,6 +148,56 @@ impl Quantizer {
             scales,
             quantizer: *self,
         }
+    }
+
+    /// The fused (non-stochastic) whole-tensor encode arms: block-scaled,
+    /// rank-1 on 2-D, and per-tensor runs go straight to packed bytes
+    /// through the kernel layer. Returns `None` for the layouts that stay
+    /// on the element-wise path (rank-1 on N-D tensors).
+    fn quantize_fused(&self, x: &Tensor, map: &QuantMap, scales: &Scales) -> Option<Vec<u8>> {
+        if matches!(scales, Scales::Rank1 { .. }) && x.ndim() != 2 {
+            return None; // rank-1 on N-D stays on the element-wise path
+        }
+        let n = x.numel();
+        let mut packed = vec![0u8; packing::packed_len(n, self.bits)];
+        match scales {
+            Scales::Block { block, scales: sc } => {
+                for (bi, chunk) in x.data.chunks(*block).enumerate() {
+                    let base = bi * *block;
+                    let s = sc[bi];
+                    if s > 0.0 {
+                        kernels::encode_run_scaled(map, self.bits, chunk, s, base, &mut packed);
+                    } else {
+                        kernels::encode_run_zero(map, self.bits, chunk.len(), base, &mut packed);
+                    }
+                }
+            }
+            Scales::Rank1 { per_axis } if x.ndim() == 2 => {
+                let (rows, cols) = x.dims2();
+                let r = &per_axis[0];
+                let c = &per_axis[1];
+                for i in 0..rows {
+                    kernels::encode_rank1_row(
+                        map,
+                        self.bits,
+                        &x.data[i * cols..(i + 1) * cols],
+                        r[i],
+                        c,
+                        i * cols,
+                        &mut packed,
+                    );
+                }
+            }
+            Scales::PerTensor(s) => {
+                if *s > 0.0 {
+                    kernels::encode_run_scaled(map, self.bits, &x.data, *s, 0, &mut packed);
+                } else {
+                    kernels::encode_run_zero(map, self.bits, n, 0, &mut packed);
+                }
+            }
+            _ => return None,
+        }
+        Some(packed)
     }
 
     // ------------------------------------------------------------------
@@ -196,10 +241,7 @@ impl Quantizer {
             if s <= 0.0 {
                 // All-zero block: every code encodes normalized 0, and the
                 // RNG is deliberately NOT consumed (matches quantize_with).
-                let zero_code = map.encode(0.0);
-                for j in 0..chunk.len() {
-                    packing::set(dst, base + j, zero_code, self.bits);
-                }
+                kernels::encode_run_zero(map, self.bits, chunk.len(), base, dst);
                 continue;
             }
             if self.stochastic {
@@ -208,9 +250,10 @@ impl Quantizer {
                     packing::set(dst, base + j, code, self.bits);
                 }
             } else {
-                for (j, &v) in chunk.iter().enumerate() {
-                    packing::set(dst, base + j, map.encode(v / s), self.bits);
-                }
+                // §Perf fused normalize→encode→pack (kernels.rs): whole
+                // output bytes per store; odd block sizes enter/leave
+                // bytes mid-nibble and compose via boundary RMW.
+                kernels::encode_run_scaled(map, self.bits, chunk, s, base, dst);
             }
         }
         // A trailing partial byte (odd tensor length) keeps its stale high
@@ -247,7 +290,9 @@ impl Quantizer {
         );
         debug_assert_eq!(dst.len(), packing::packed_len(vals.len(), self.bits));
         match scales {
-            // Row-segment fast path for rank-1 scales on 2-D tensors.
+            // Row-segment fast path for rank-1 scales on 2-D tensors:
+            // the row statistic is hoisted per segment and the fused
+            // kernel packs whole bytes (§Perf, kernels.rs).
             Scales::Rank1 { per_axis } if shape.len() == 2 => {
                 let cols = shape[1];
                 let r = &per_axis[0];
@@ -259,19 +304,35 @@ impl Quantizer {
                     let row_start = row * cols;
                     let row_end = (row_start + cols).min(hi);
                     let ri = r[row];
-                    for j in i..row_end {
-                        let cj = c[j - row_start];
-                        let s = if ri < cj { ri } else { cj };
-                        let v = vals[j - elem_lo];
-                        let nrm = if s > 0.0 { v / s } else { 0.0 };
-                        let code = if self.stochastic {
-                            encode_stochastic(map, nrm, rng)
-                        } else {
-                            map.encode(nrm)
-                        };
-                        packing::set(dst, j - elem_lo, code, self.bits);
+                    if self.stochastic {
+                        for j in i..row_end {
+                            let cj = c[j - row_start];
+                            let s = if ri < cj { ri } else { cj };
+                            let v = vals[j - elem_lo];
+                            let nrm = if s > 0.0 { v / s } else { 0.0 };
+                            let code = encode_stochastic(map, nrm, rng);
+                            packing::set(dst, j - elem_lo, code, self.bits);
+                        }
+                    } else {
+                        kernels::encode_rank1_row(
+                            map,
+                            self.bits,
+                            &vals[i - elem_lo..row_end - elem_lo],
+                            ri,
+                            &c[i - row_start..row_end - row_start],
+                            i - elem_lo,
+                            dst,
+                        );
                     }
                     i = row_end;
+                }
+            }
+            // Per-tensor scales: one fused constant-scale run.
+            Scales::PerTensor(s) if !self.stochastic => {
+                if *s > 0.0 {
+                    kernels::encode_run_scaled(map, self.bits, vals, *s, 0, dst);
+                } else {
+                    kernels::encode_run_zero(map, self.bits, vals.len(), 0, dst);
                 }
             }
             _ => {
@@ -322,37 +383,24 @@ impl QuantizedTensor {
         self.dequantize_with(&map)
     }
 
-    /// Decompress with a prebuilt map (hot path).
+    /// Decompress with a prebuilt map (hot path). Every arm runs on the
+    /// pair-LUT kernel layer (§Perf, [`super::kernels`]): 4-bit codes
+    /// decode two nibbles per byte load with no per-element index
+    /// arithmetic, at any block size / row-segment parity.
     pub fn dequantize_with(&self, map: &QuantMap) -> Tensor {
         let n = self.numel();
-        let mut out = Vec::with_capacity(n);
+        let mut out = vec![0.0f32; n];
         match &self.scales {
             Scales::Block { block, scales } => {
-                // §Perf: decode two nibbles per byte, per block, without
-                // the per-element packed-index arithmetic. Requires even
-                // block size so blocks start on byte boundaries.
-                if self.bits == 4 && *block % 2 == 0 {
-                    out.resize(n, 0.0);
-                    for (bi, chunk) in out.chunks_mut(*block).enumerate() {
-                        let s = scales[bi];
-                        let base = bi * *block;
-                        let mut i = 0;
-                        while i + 1 < chunk.len() {
-                            let byte = self.packed[(base + i) / 2];
-                            chunk[i] = map.decode(byte & 0x0F) * s;
-                            chunk[i + 1] = map.decode(byte >> 4) * s;
-                            i += 2;
-                        }
-                        if i < chunk.len() {
-                            let code = packing::get(&self.packed, base + i, 4);
-                            chunk[i] = map.decode(code) * s;
-                        }
-                    }
-                    return Tensor::from_vec(&self.shape, out);
-                }
-                for i in 0..n {
-                    let code = packing::get(&self.packed, i, self.bits);
-                    out.push(map.decode(code) * scales[i / block]);
+                for (bi, chunk) in out.chunks_mut(*block).enumerate() {
+                    kernels::decode_run_scaled(
+                        map,
+                        self.bits,
+                        &self.packed,
+                        bi * *block,
+                        scales[bi],
+                        chunk,
+                    );
                 }
             }
             Scales::Rank1 { per_axis } if self.shape.len() == 2 => {
@@ -361,20 +409,25 @@ impl QuantizedTensor {
                 let r = &per_axis[0];
                 let c = &per_axis[1];
                 for i in 0..rows {
-                    let ri = r[i];
-                    for (j, &cj) in c.iter().enumerate().take(cols) {
-                        let code = packing::get(&self.packed, i * cols + j, self.bits);
-                        let s = if ri < cj { ri } else { cj };
-                        out.push(map.decode(code) * s);
-                    }
+                    kernels::decode_rank1_row(
+                        map,
+                        self.bits,
+                        &self.packed,
+                        i * cols,
+                        r[i],
+                        c,
+                        &mut out[i * cols..(i + 1) * cols],
+                    );
                 }
             }
-            _ => {
-                for i in 0..n {
-                    let code = packing::get(&self.packed, i, self.bits);
-                    out.push(map.decode(code));
-                }
-                denormalize(&mut out, &self.scales, &self.shape);
+            Scales::PerTensor(s) => {
+                kernels::decode_run_scaled(map, self.bits, &self.packed, 0, *s, &mut out);
+            }
+            scales => {
+                // Rank-1 on N-D tensors: raw LUT decode (×1.0 is exact),
+                // then the per-element coordinate walk of denormalize.
+                kernels::decode_run_scaled(map, self.bits, &self.packed, 0, 1.0, &mut out);
+                denormalize(&mut out, scales, &self.shape);
             }
         }
         Tensor::from_vec(&self.shape, out)
@@ -426,9 +479,22 @@ pub fn dequantize_packed_range_into(
     debug_assert_eq!(out.len(), hi - lo);
     match scales {
         Scales::Block { block, scales } => {
-            for (o, i) in out.iter_mut().zip(lo..hi) {
-                let code = packing::get(packed, i - base, bits);
-                *o = map.decode(code) * scales[i / block];
+            // §Perf: segment the range at block boundaries — each
+            // segment is one constant-scale fused pair-LUT run, with no
+            // per-element `i / block` or packed-index arithmetic.
+            let mut i = lo;
+            while i < hi {
+                let seg_end = ((i / block) + 1) * block;
+                let seg_end = seg_end.min(hi);
+                kernels::decode_run_scaled(
+                    map,
+                    bits,
+                    packed,
+                    i - base,
+                    scales[i / block],
+                    &mut out[i - lo..seg_end - lo],
+                );
+                i = seg_end;
             }
         }
         Scales::Rank1 { per_axis } if shape.len() == 2 => {
@@ -440,15 +506,20 @@ pub fn dequantize_packed_range_into(
                 let row = i / cols;
                 let row_start = row * cols;
                 let row_end = (row_start + cols).min(hi);
-                let ri = r[row];
-                for j in i..row_end {
-                    let code = packing::get(packed, j - base, bits);
-                    let cj = c[j - row_start];
-                    let s = if ri < cj { ri } else { cj };
-                    out[j - lo] = map.decode(code) * s;
-                }
+                kernels::decode_rank1_row(
+                    map,
+                    bits,
+                    packed,
+                    i - base,
+                    r[row],
+                    &c[i - row_start..row_end - row_start],
+                    &mut out[i - lo..row_end - lo],
+                );
                 i = row_end;
             }
+        }
+        Scales::PerTensor(s) => {
+            kernels::decode_run_scaled(map, bits, packed, lo - base, *s, out);
         }
         scales => {
             for (o, i) in out.iter_mut().zip(lo..hi) {
@@ -724,6 +795,91 @@ mod tests {
                 &mut b,
             );
             assert_eq!(a, b, "{} detached range dequant differs", q.name());
+        }
+    }
+
+    #[test]
+    fn fused_paths_match_scalar_reference_property() {
+        // The kernel-layer arms of quantize_with / dequantize_with vs a
+        // scalar reimplementation (scale_at + QuantMap::encode/decode +
+        // packing::set/get), across odd/even block sizes, odd column
+        // counts (row segments entering bytes mid-nibble), odd lengths,
+        // zero blocks and 4/8-bit codes.
+        propcheck::check("fused-matches-scalar", 80, |g| {
+            let rows = 1 + g.rng.below(9);
+            let cols = 1 + g.rng.below(21);
+            let mut data = g.vec_f32(rows * cols);
+            if g.bool() {
+                // Force some all-zero blocks.
+                for v in data.iter_mut().take(cols) {
+                    *v = 0.0;
+                }
+            }
+            let x = Tensor::from_vec(&[rows, cols], data);
+            let q = *g.choose(&[
+                Quantizer::new(NormKind::Block(3), MapKind::DynExp, 4, true),
+                Quantizer::new(NormKind::Block(4), MapKind::Linear, 4, false),
+                Quantizer::new(NormKind::Block(128), MapKind::DynExpNoZero, 4, false),
+                Quantizer::new(NormKind::Rank1, MapKind::Linear, 4, false),
+                Quantizer::new(NormKind::Rank1, MapKind::DynExp, 4, true),
+                Quantizer::new(NormKind::PerTensor, MapKind::Linear, 4, false),
+                Quantizer::new(NormKind::Block(5), MapKind::DynExp, 8, true),
+                Quantizer::new(NormKind::Rank1, MapKind::DynExp, 8, false),
+            ]);
+            let map = q.build_map();
+            let mut rng = Pcg64::seeded(g.case as u64);
+            let qt = q.quantize_with(&x, &map, &mut rng);
+
+            // Scalar encode reference.
+            let scales = compute_scales(&x, q.norm);
+            let mut ref_packed = vec![0u8; packing::packed_len(x.numel(), q.bits)];
+            for (i, &v) in x.data.iter().enumerate() {
+                let s = scales.scale_at(i, &x.shape);
+                let nrm = if s > 0.0 { v / s } else { 0.0 };
+                packing::set(&mut ref_packed, i, map.encode(nrm), q.bits);
+            }
+            if qt.packed != ref_packed {
+                return Err(format!("{}: fused encode differs from scalar", q.name()));
+            }
+
+            // Scalar decode reference.
+            let y = qt.dequantize_with(&map);
+            for (i, &o) in y.data.iter().enumerate() {
+                let code = packing::get(&qt.packed, i, q.bits);
+                let exp = map.decode(code) * qt.scales.scale_at(i, &x.shape);
+                if o.to_bits() != exp.to_bits() {
+                    return Err(format!(
+                        "{}: fused decode differs from scalar at {i}: {o} vs {exp}",
+                        q.name()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn range_decode_handles_odd_row_segments() {
+        // Odd column count => row segments inside a range start and end
+        // mid-byte; the fused rank-1 kernels must still match the
+        // whole-tensor decode bit-for-bit on every even-aligned range.
+        let mut data_rng = Pcg64::seeded(21);
+        let x = Tensor::randn(&[9, 7], 0.5, &mut data_rng).map(|v| v.abs());
+        let q = Quantizer::second_moment_4bit();
+        let map = q.build_map();
+        let mut r = Pcg64::seeded(0);
+        let qt = q.quantize_with(&x, &map, &mut r);
+        let full = qt.dequantize_with(&map);
+        let n = x.numel();
+        for lo in (0..n).step_by(2) {
+            for hi in [lo + 1, lo + 2, (lo + 9).min(n), n] {
+                if hi > n {
+                    continue;
+                }
+                let mut out = vec![0.0f32; hi - lo];
+                qt.dequantize_range_into(&map, lo, hi, &mut out);
+                assert_eq!(out, full.data[lo..hi], "range [{lo},{hi})");
+            }
         }
     }
 
