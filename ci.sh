@@ -28,6 +28,15 @@ cargo test -q
 echo "== cargo test -q (engine threads pinned to 7)"
 LOWBIT_ENGINE_THREADS=7 cargo test -q
 
+echo "== cargo test -q --features audit (aliasing auditor on)"
+cargo test -q --features audit
+
+echo "== cargo test -q --features audit (engine threads pinned to 7)"
+LOWBIT_ENGINE_THREADS=7 cargo test -q --features audit
+
+echo "== unsafe-boundary lint"
+cargo run --release --bin lint
+
 echo "== cargo fmt --check"
 cargo fmt --check
 

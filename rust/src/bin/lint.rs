@@ -1,0 +1,496 @@
+#![forbid(unsafe_code)]
+//! Unsafe-boundary lint: a self-contained, comment/string-aware token
+//! scanner over `rust/src` that mechanically enforces the crate's
+//! unsafe policy (see lib.rs, "The unsafe boundary"):
+//!
+//! * `unsafe` (blocks, fns, impls) is allowed only in the explicit
+//!   [`ALLOWLIST`] of modules — the engine executors, the offload
+//!   staging layer and checkpoint byte packing;
+//! * every `unsafe` token in an allowlisted file must carry an adjacent
+//!   `// SAFETY:` comment (or a `# Safety` doc section for `unsafe fn`
+//!   declarations) on the same line or the directly preceding
+//!   comment/attribute run — a blank line breaks adjacency;
+//! * every non-allowlisted module must be stamped
+//!   `#![forbid(unsafe_code)]` (except the [`PARENT_EXEMPT`] module
+//!   roots, where the stamp would forbid their allowlisted children;
+//!   those must simply contain no `unsafe` at all);
+//! * `static mut` and `transmute` are forbidden outside the allowlist
+//!   even where the compiler would accept them;
+//! * lib.rs must carry `#![deny(unsafe_op_in_unsafe_fn)]`.
+//!
+//! The scanner masks out comments, strings (incl. raw/byte strings) and
+//! char literals before tokenizing, so `"unsafe"` in a string or a doc
+//! comment never trips it. No dependencies; the same code runs as the
+//! `lint` binary (CI) and inside the `unsafe_lint` tier-1 test, which
+//! also locks the lint's own behavior against seeded violations.
+//!
+//! Run manually: `cargo run --release --bin lint` (or pass an explicit
+//! source root as the first argument).
+
+use std::env;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Files (relative to the source root) that may contain `unsafe`.
+pub const ALLOWLIST: &[&str] = &[
+    "engine/adamw4.rs",
+    "engine/ctx.rs",
+    "engine/dense.rs",
+    "engine/mod.rs",
+    "engine/pool.rs",
+    "engine/shared.rs",
+    "offload/pipeline.rs",
+    "offload/tier.rs",
+    "train/checkpoint.rs",
+];
+
+/// Module roots whose children include allowlisted files: the
+/// `#![forbid(unsafe_code)]` stamp would propagate down and break the
+/// children, so these are exempt from the stamp — but must themselves
+/// contain zero `unsafe`.
+pub const PARENT_EXEMPT: &[&str] = &["lib.rs", "offload/mod.rs", "train/mod.rs"];
+
+pub const FORBID_STAMP: &str = "#![forbid(unsafe_code)]";
+pub const LIB_DENY: &str = "#![deny(unsafe_op_in_unsafe_fn)]";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// `unsafe` in an allowlisted file without an adjacent SAFETY comment.
+    UndocumentedUnsafe,
+    /// `unsafe` token in a file outside the allowlist.
+    UnsafeOutsideAllowlist,
+    /// `static mut` outside the allowlist.
+    StaticMut,
+    /// `transmute` outside the allowlist.
+    Transmute,
+    /// Non-allowlisted module without the `#![forbid(unsafe_code)]` stamp.
+    MissingForbidStamp,
+    /// lib.rs without `#![deny(unsafe_op_in_unsafe_fn)]`.
+    MissingLibDeny,
+}
+
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Path relative to the source root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub kind: Kind,
+    pub msg: String,
+}
+
+/// One source line after masking: executable code with comment/string
+/// interiors blanked, plus the concatenated comment text.
+#[derive(Default)]
+struct ScannedLine {
+    code: String,
+    comment: String,
+}
+
+impl ScannedLine {
+    fn has_code(&self) -> bool {
+        !self.code.trim().is_empty()
+    }
+}
+
+/// Mask comments, strings and char literals. Line comments, nested
+/// block comments, plain/raw/byte strings with escapes, and the
+/// char-literal-vs-lifetime ambiguity are handled; the masked code
+/// stream preserves line structure so token positions stay meaningful.
+fn scan(src: &str) -> Vec<ScannedLine> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+        CharLit,
+    }
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines: Vec<ScannedLine> = vec![ScannedLine::default()];
+    let mut st = St::Code;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            lines.push(ScannedLine::default());
+            i += 1;
+            continue;
+        }
+        let cur = lines.last_mut().expect("at least one line");
+        match st {
+            St::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    cur.code.push(' ');
+                    i += 1;
+                } else if (c == 'r' || c == 'b')
+                    && !prev_is_ident(&chars, i)
+                    && raw_or_byte_prefix(&chars, i).is_some()
+                {
+                    let (hashes, skip, is_char) = raw_or_byte_prefix(&chars, i).expect("checked");
+                    st = if is_char {
+                        St::CharLit
+                    } else if hashes == u32::MAX {
+                        St::Str
+                    } else {
+                        St::RawStr(hashes)
+                    };
+                    cur.code.push(' ');
+                    i += skip;
+                } else if c == '\'' {
+                    match classify_quote(&chars, i) {
+                        Quote::CharStart(skip) => {
+                            st = St::CharLit;
+                            cur.code.push(' ');
+                            i += skip;
+                        }
+                        Quote::CharWhole(skip) => {
+                            cur.code.push(' ');
+                            i += skip;
+                        }
+                        Quote::Lifetime => {
+                            cur.code.push(c);
+                            i += 1;
+                        }
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    st = St::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    st = if depth == 1 {
+                        St::Code
+                    } else {
+                        St::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    st = St::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+            St::CharLit => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// At `chars[i] ∈ {r, b}`: detect `r"`, `r#"`, `b"`, `br"`, `br#"`,
+/// `b'`. Returns `(hashes, chars_to_skip, is_char_literal)`; `hashes ==
+/// u32::MAX` means a non-raw (escaped) string body.
+fn raw_or_byte_prefix(chars: &[char], i: usize) -> Option<(u32, usize, bool)> {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+        match chars.get(j) {
+            Some('\'') => return Some((0, j - i + 1, true)),
+            Some('"') => return Some((u32::MAX, j - i + 1, false)),
+            Some('r') => {}
+            _ => return None,
+        }
+    }
+    if chars.get(j) == Some(&'r') {
+        j += 1;
+        let mut hashes = 0u32;
+        while chars.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if chars.get(j) == Some(&'"') {
+            return Some((hashes, j - i + 1, false));
+        }
+    }
+    None
+}
+
+fn closes_raw(chars: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+enum Quote {
+    /// `'` opens a char literal; skip past the opener (and possibly the
+    /// escape intro) and continue in `CharLit` state.
+    CharStart(usize),
+    /// A complete `'x'` literal; skip the whole thing.
+    CharWhole(usize),
+    /// A lifetime (or loop label) tick: plain code.
+    Lifetime,
+}
+
+fn classify_quote(chars: &[char], i: usize) -> Quote {
+    match chars.get(i + 1) {
+        Some('\\') => Quote::CharStart(2),
+        Some(&c2) if !(c2.is_alphanumeric() || c2 == '_') => Quote::CharStart(1),
+        Some(_) => {
+            // Identifier-ish after the tick: `'a'` is a char literal,
+            // `'a` / `'static` is a lifetime.
+            if chars.get(i + 2) == Some(&'\'') {
+                Quote::CharWhole(3)
+            } else {
+                Quote::Lifetime
+            }
+        }
+        None => Quote::Lifetime,
+    }
+}
+
+/// 0-based line indices of occurrences of the identifier `word` in the
+/// masked code.
+fn token_lines(lines: &[ScannedLine], word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (ln, l) in lines.iter().enumerate() {
+        if find_token(&l.code, word) {
+            out.push(ln);
+        }
+    }
+    out
+}
+
+fn find_token(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let end = at + word.len();
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len().max(1);
+    }
+    false
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// `static` immediately followed by `mut` in the masked code of one line.
+fn has_static_mut(code: &str) -> bool {
+    let tokens: Vec<&str> = code
+        .split(|c: char| !(c.is_alphanumeric() || c == '_'))
+        .filter(|t| !t.is_empty())
+        .collect();
+    tokens.windows(2).any(|w| w == ["static", "mut"])
+}
+
+/// Is the `unsafe` token at 0-based line `ln` documented? Accepts a
+/// `SAFETY:` comment (or a `# Safety` doc section) on the same line or
+/// in the comment/attribute run directly above; a blank or plain-code
+/// line breaks the run.
+fn has_safety_comment(lines: &[ScannedLine], ln: usize) -> bool {
+    let documented = |c: &str| c.contains("SAFETY:") || c.contains("# Safety");
+    if documented(&lines[ln].comment) {
+        return true;
+    }
+    let mut i = ln;
+    while i > 0 {
+        i -= 1;
+        let l = &lines[i];
+        if l.has_code() {
+            // Attribute lines (e.g. `#[inline]`) don't break the run:
+            // the doc comment of an `unsafe fn` sits above them.
+            if l.code.trim_start().starts_with("#[") || l.code.trim_start().starts_with("#![") {
+                if documented(&l.comment) {
+                    return true;
+                }
+                continue;
+            }
+            return false;
+        }
+        if documented(&l.comment) {
+            return true;
+        }
+        if l.comment.is_empty() {
+            // Blank line: adjacency broken.
+            return false;
+        }
+    }
+    false
+}
+
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(root, &path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Run every rule over the `.rs` files under `root`. Returns all
+/// violations, sorted by file then line.
+pub fn run_lint(root: &Path) -> Vec<Violation> {
+    let mut files = Vec::new();
+    collect_rs_files(root, root, &mut files);
+    files.sort();
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel: String = path
+            .strip_prefix(root)
+            .expect("collected under root")
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = match fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                violations.push(Violation {
+                    file: rel,
+                    line: 1,
+                    kind: Kind::MissingForbidStamp,
+                    msg: format!("unreadable source file: {e}"),
+                });
+                continue;
+            }
+        };
+        let lines = scan(&src);
+        let allowlisted = ALLOWLIST.contains(&rel.as_str());
+        let parent_exempt = PARENT_EXEMPT.contains(&rel.as_str());
+        let unsafe_lines = token_lines(&lines, "unsafe");
+        if allowlisted {
+            for &ln in &unsafe_lines {
+                if !has_safety_comment(&lines, ln) {
+                    violations.push(Violation {
+                        file: rel.clone(),
+                        line: ln + 1,
+                        kind: Kind::UndocumentedUnsafe,
+                        msg: "`unsafe` without an adjacent `// SAFETY:` comment".into(),
+                    });
+                }
+            }
+        } else {
+            for &ln in &unsafe_lines {
+                violations.push(Violation {
+                    file: rel.clone(),
+                    line: ln + 1,
+                    kind: Kind::UnsafeOutsideAllowlist,
+                    msg: "`unsafe` outside the allowlist (see rust/src/bin/lint.rs)".into(),
+                });
+            }
+            for (ln, l) in lines.iter().enumerate() {
+                if has_static_mut(&l.code) {
+                    violations.push(Violation {
+                        file: rel.clone(),
+                        line: ln + 1,
+                        kind: Kind::StaticMut,
+                        msg: "`static mut` outside the allowlist".into(),
+                    });
+                }
+                if find_token(&l.code, "transmute") {
+                    violations.push(Violation {
+                        file: rel.clone(),
+                        line: ln + 1,
+                        kind: Kind::Transmute,
+                        msg: "`transmute` outside the allowlist".into(),
+                    });
+                }
+            }
+            if !parent_exempt && !lines.iter().any(|l| l.code.trim() == FORBID_STAMP) {
+                violations.push(Violation {
+                    file: rel.clone(),
+                    line: 1,
+                    kind: Kind::MissingForbidStamp,
+                    msg: format!("missing `{FORBID_STAMP}` stamp"),
+                });
+            }
+        }
+        if rel == "lib.rs" && !lines.iter().any(|l| l.code.trim() == LIB_DENY) {
+            violations.push(Violation {
+                file: rel.clone(),
+                line: 1,
+                kind: Kind::MissingLibDeny,
+                msg: format!("lib.rs must carry `{LIB_DENY}`"),
+            });
+        }
+    }
+    violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    violations
+}
+
+/// Default source root: `$CARGO_MANIFEST_DIR/rust/src` (the layout this
+/// crate uses), falling back to `./rust/src`.
+pub fn default_root() -> PathBuf {
+    let manifest = env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    Path::new(&manifest).join("rust").join("src")
+}
+
+#[allow(dead_code)]
+fn main() {
+    let root = env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(default_root);
+    let violations = run_lint(&root);
+    if violations.is_empty() {
+        println!("unsafe-boundary lint: clean ({})", root.display());
+        return;
+    }
+    for v in &violations {
+        eprintln!("{}:{}: [{:?}] {}", v.file, v.line, v.kind, v.msg);
+    }
+    eprintln!("unsafe-boundary lint: {} violation(s)", violations.len());
+    std::process::exit(1);
+}

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! The configuration system for the `lowbit` launcher: a TOML-subset
 //! parser (sections, `key = value` with strings / numbers / booleans),
 //! typed run configs with validation, and `--set section.key=value` CLI

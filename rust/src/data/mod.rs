@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Seeded synthetic workloads standing in for the paper's datasets (see
 //! DESIGN.md §3 for the substitution rationale). Three generators:
 //!

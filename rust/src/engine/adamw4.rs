@@ -1047,7 +1047,11 @@ fn phase_a_piece(
                 q: *q,
                 map: *map,
                 block: *block,
+                // SAFETY: byte-aligned disjoint packed span (alignment
+                // keeps shard boundaries on even nibble pairs).
                 packed: unsafe { packed.range_mut(b0, b1) },
+                // SAFETY: block-aligned shard boundaries give each task
+                // a disjoint scale range.
                 scales: unsafe { scales.range_mut(lo / block, hi.div_ceil(*block)) },
             }
         }
@@ -1076,12 +1080,15 @@ fn phase_a_piece(
             scales,
         } => {
             let (b0, b1) = packed_range(q.bits, lo, hi);
-            // SAFETY: block- and byte-aligned shard boundaries.
             VSrc::Block {
                 q: *q,
                 map: *map,
                 block: *block,
+                // SAFETY: byte-aligned disjoint packed span (alignment
+                // keeps shard boundaries on even nibble pairs).
                 packed: unsafe { packed.range_mut(b0, b1) },
+                // SAFETY: block-aligned shard boundaries give each task
+                // a disjoint scale range.
                 scales: unsafe { scales.range_mut(lo / block, hi.div_ceil(*block)) },
             }
         }

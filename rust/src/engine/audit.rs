@@ -1,0 +1,439 @@
+#![forbid(unsafe_code)]
+//! Dynamic aliasing auditor for the engine's unsafe boundary
+//! (`--features audit`).
+//!
+//! The whole shard-parallel story rests on one contract: every
+//! [`SharedSlice::range_mut`](super::SharedSlice::range_mut) view handed
+//! out during a phase is disjoint from every other live view of the
+//! same allocation, unless the two views belong to the same task or to
+//! tasks ordered by the phase's dependency edges. The planner proves
+//! this on paper (`rust/tests/plan_props.rs` hammers the invariants);
+//! this module checks it *at runtime*, on the real schedules the worker
+//! pool produces.
+//!
+//! # How it works
+//!
+//! Each [`StepEngine`](super::StepEngine) owns one [`Registry`] — a
+//! fixed-capacity, lock-free interval tracker. The engine brackets every
+//! `run_tasks{,_with,_dep}` call in a [`phase_scope`]: entering a phase
+//! advances the registry's epoch and retires all previously registered
+//! intervals; leaving it (after the pool has drained) advances the
+//! epoch again. Within a phase, every task body runs under a
+//! [`task_scope`] that pins `(registry, task id, epoch)` in a
+//! thread-local stack. `range_mut` then reports each materialized view
+//! to [`check_range`], which:
+//!
+//! * panics on any out-of-bounds range (even in release builds);
+//! * panics if the calling task's epoch snapshot is stale — the view is
+//!   being materialized *after* its phase barrier, i.e. a worker ran
+//!   past the pool drain;
+//! * publishes the view's absolute byte interval into the registry and
+//!   scans all intervals live in the current epoch: an overlap with a
+//!   different task that is not an ancestor/descendant along the
+//!   phase's dependency edges aborts with a report naming **both**
+//!   call sites (via `#[track_caller]`).
+//!
+//! Liveness is phase-scoped on purpose: a view registered by task A
+//! stays "live" until the phase barrier, even if the `&mut` was long
+//! dropped. That is exactly the discipline the executors promise (no
+//! two tasks of one phase may touch the same range at all), and it
+//! makes the check schedule-independent — a racy overlap is caught even
+//! when this particular run never interleaved the two accesses.
+//!
+//! Accesses from outside any engine phase (unit tests poking
+//! `range_mut` directly, single-threaded setup code) are bounds-checked
+//! but not tracked: with no task scope there is no disjointness claim
+//! to verify.
+//!
+//! The registry is per-engine, reached through the thread-local task
+//! scope, so concurrently running tests (or engines) never see each
+//! other's intervals. All of this module is safe code — the auditor
+//! watches the unsafe boundary without being part of it.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::panic::Location;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Max tracked intervals per phase. A phase registers a handful of
+/// views per task; the biggest test plans run a few thousand tasks, so
+/// this leaves two orders of magnitude of headroom. Overflow panics
+/// (never silently drops a check).
+pub const SLOT_CAPACITY: usize = 1 << 16;
+
+/// Task-id namespace for per-worker-slot scopes (scratch claimed by
+/// worker slot, not by task). Distinct from every queue index.
+pub const SLOT_TASK_BASE: u64 = 1 << 62;
+
+/// Sentinel in the dependency table: "no predecessor".
+const NO_DEP: usize = usize::MAX;
+
+/// One published interval: the absolute byte range a `range_mut` call
+/// materialized, tagged with its task, epoch and interned call site.
+/// `epoch` is written last (SeqCst) to publish the record.
+struct Slot {
+    epoch: AtomicU64,
+    lo: AtomicUsize,
+    hi: AtomicUsize,
+    task: AtomicU64,
+    site: AtomicU32,
+}
+
+impl Default for Slot {
+    fn default() -> Slot {
+        Slot {
+            epoch: AtomicU64::new(0),
+            lo: AtomicUsize::new(0),
+            hi: AtomicUsize::new(0),
+            task: AtomicU64::new(0),
+            site: AtomicU32::new(0),
+        }
+    }
+}
+
+/// Per-engine interval tracker. Epoch 0 is "no phase ever ran" — slots
+/// also start at epoch 0, which is why [`phase_scope`] advances the
+/// epoch *before* the phase body runs.
+pub struct Registry {
+    epoch: AtomicU64,
+    cursor: AtomicUsize,
+    slots: OnceLock<Box<[Slot]>>,
+    /// Predecessor edge per task id for the current phase
+    /// (`run_tasks_dep`); empty for unordered phases.
+    deps: Mutex<Vec<usize>>,
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "audit::Registry {{ epoch: {}, live: {} }}",
+            self.epoch.load(Ordering::Relaxed),
+            self.cursor.load(Ordering::Relaxed)
+        )
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            epoch: AtomicU64::new(0),
+            cursor: AtomicUsize::new(0),
+            slots: OnceLock::new(),
+            deps: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Retire every live interval and open a fresh epoch.
+    fn advance(&self) {
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        self.cursor.store(0, Ordering::SeqCst);
+    }
+
+    /// Publish one interval and scan for conflicting live ones.
+    #[allow(clippy::too_many_arguments)]
+    fn register(
+        &self,
+        abs_lo: usize,
+        abs_hi: usize,
+        lo: usize,
+        hi: usize,
+        task: u64,
+        task_epoch: u64,
+        site: &'static Location<'static>,
+    ) {
+        let now = self.epoch.load(Ordering::SeqCst);
+        if task_epoch != now {
+            panic!(
+                "[audit] range_mut at {site}: {} materialized a view in phase \
+                 epoch {now}, but its task scope was opened in epoch {task_epoch} \
+                 — the view outlives its phase barrier (a worker ran past the \
+                 pool drain)",
+                task_label(task)
+            );
+        }
+        let site_id = intern_site(site);
+        let slots = self
+            .slots
+            .get_or_init(|| (0..SLOT_CAPACITY).map(|_| Slot::default()).collect());
+        let idx = self.cursor.fetch_add(1, Ordering::SeqCst);
+        assert!(
+            idx < slots.len(),
+            "[audit] interval tracker overflow: more than {SLOT_CAPACITY} \
+             range_mut views in one phase"
+        );
+        let slot = &slots[idx];
+        slot.lo.store(abs_lo, Ordering::Relaxed);
+        slot.hi.store(abs_hi, Ordering::Relaxed);
+        slot.task.store(task, Ordering::Relaxed);
+        slot.site.store(site_id, Ordering::Relaxed);
+        // SeqCst publish + SeqCst scan loads: of two concurrent
+        // overlapping registrations, whichever epoch store is later in
+        // the single total order is guaranteed to observe the other —
+        // an overlap can never be missed both ways.
+        slot.epoch.store(now, Ordering::SeqCst);
+
+        let live = self.cursor.load(Ordering::SeqCst).min(slots.len());
+        let deps = self.deps.lock().unwrap_or_else(|e| e.into_inner());
+        for (j, other) in slots.iter().enumerate().take(live) {
+            if j == idx || other.epoch.load(Ordering::SeqCst) != now {
+                continue;
+            }
+            let (olo, ohi) = (
+                other.lo.load(Ordering::Relaxed),
+                other.hi.load(Ordering::Relaxed),
+            );
+            if ohi <= abs_lo || abs_hi <= olo {
+                continue;
+            }
+            let other_task = other.task.load(Ordering::Relaxed);
+            if other_task == task || deps_related(&deps, other_task, task) {
+                continue;
+            }
+            let other_site = site_name(other.site.load(Ordering::Relaxed));
+            panic!(
+                "[audit] overlapping live range_mut views in phase epoch {now}: \
+                 {} at {site} took elements {lo}..{hi} \
+                 (bytes {abs_lo:#x}..{abs_hi:#x}), overlapping {} at {other_site} \
+                 (bytes {olo:#x}..{ohi:#x}); the tasks are unrelated under the \
+                 phase's dependency edges — the planner's disjointness contract \
+                 is broken",
+                task_label(task),
+                task_label(other_task),
+            );
+        }
+    }
+}
+
+fn task_label(task: u64) -> String {
+    if task >= SLOT_TASK_BASE {
+        format!("worker-slot scratch scope {}", task - SLOT_TASK_BASE)
+    } else {
+        format!("task {task}")
+    }
+}
+
+/// True when `a` and `b` are ordered by the phase's dependency chain
+/// (either is an ancestor of the other). Worker-slot scopes and ids
+/// outside the queue have no edges.
+fn deps_related(deps: &[usize], a: u64, b: u64) -> bool {
+    ancestor_of(deps, a, b) || ancestor_of(deps, b, a)
+}
+
+fn ancestor_of(deps: &[usize], anc: u64, desc: u64) -> bool {
+    let (anc, mut cur) = (anc as usize, desc as usize);
+    if anc >= deps.len() || cur >= deps.len() {
+        return false;
+    }
+    // Each task has at most one predecessor and `deps[i] < i`, so the
+    // walk strictly decreases and terminates.
+    loop {
+        let p = deps[cur];
+        if p == NO_DEP {
+            return false;
+        }
+        if p == anc {
+            return true;
+        }
+        cur = p;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Call-site interning. The table is process-global (slot records hold a
+// u32, and ids must survive any one registry) with a thread-local cache
+// keyed by the `Location`'s address so the warm path takes no lock.
+
+fn global_sites() -> &'static Mutex<Vec<&'static Location<'static>>> {
+    static SITES: OnceLock<Mutex<Vec<&'static Location<'static>>>> = OnceLock::new();
+    SITES.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static SITE_CACHE: RefCell<HashMap<usize, u32>> = RefCell::new(HashMap::new());
+}
+
+fn intern_site(site: &'static Location<'static>) -> u32 {
+    let key = site as *const Location<'static> as usize;
+    SITE_CACHE.with(|cache| {
+        if let Some(&id) = cache.borrow().get(&key) {
+            return id;
+        }
+        let mut table = global_sites().lock().unwrap_or_else(|e| e.into_inner());
+        let id = match table.iter().position(|s| std::ptr::eq(*s, site)) {
+            Some(i) => i as u32,
+            None => {
+                table.push(site);
+                (table.len() - 1) as u32
+            }
+        };
+        drop(table);
+        cache.borrow_mut().insert(key, id);
+        id
+    })
+}
+
+fn site_name(id: u32) -> String {
+    let table = global_sites().lock().unwrap_or_else(|e| e.into_inner());
+    match table.get(id as usize) {
+        Some(loc) => loc.to_string(),
+        None => format!("<unknown site {id}>"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Thread-local task context. A stack, because scopes nest: a worker
+// holds its slot-scratch scope for the whole broadcast while each
+// claimed task pushes its own scope on top.
+
+struct TaskCtx {
+    reg: Arc<Registry>,
+    task: u64,
+    epoch: u64,
+}
+
+thread_local! {
+    static TASKS: RefCell<Vec<TaskCtx>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Open a phase: install this phase's dependency edges (if any), retire
+/// all intervals of the previous phase, and hand back a guard that
+/// retires this phase's intervals when dropped (i.e. once the pool has
+/// drained and the `run_tasks*` call returns).
+pub fn phase_scope(reg: &Arc<Registry>, deps: Option<&[Option<usize>]>) -> PhaseGuard {
+    {
+        let mut d = reg.deps.lock().unwrap_or_else(|e| e.into_inner());
+        d.clear();
+        if let Some(deps) = deps {
+            d.extend(deps.iter().map(|o| o.unwrap_or(NO_DEP)));
+        }
+    }
+    reg.advance();
+    PhaseGuard {
+        reg: Arc::clone(reg),
+    }
+}
+
+pub struct PhaseGuard {
+    reg: Arc<Registry>,
+}
+
+impl Drop for PhaseGuard {
+    fn drop(&mut self) {
+        self.reg.advance();
+        self.reg
+            .deps
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clear();
+    }
+}
+
+/// Enter a task (or worker-slot) scope on the current thread: every
+/// `range_mut` until the guard drops is attributed to `task` in `reg`'s
+/// current epoch.
+pub fn task_scope(reg: &Arc<Registry>, task: u64) -> TaskGuard {
+    let epoch = reg.epoch.load(Ordering::SeqCst);
+    TASKS.with(|t| {
+        t.borrow_mut().push(TaskCtx {
+            reg: Arc::clone(reg),
+            task,
+            epoch,
+        })
+    });
+    TaskGuard { _priv: () }
+}
+
+pub struct TaskGuard {
+    _priv: (),
+}
+
+impl Drop for TaskGuard {
+    fn drop(&mut self) {
+        TASKS.with(|t| {
+            t.borrow_mut().pop();
+        });
+    }
+}
+
+/// The hook `SharedSlice::range_mut` calls under `--features audit`.
+/// `base` is the view's base address, `elem_size` the element size in
+/// bytes, `len` the full view length in elements, `lo..hi` the
+/// requested element range.
+#[track_caller]
+pub fn check_range(base: usize, elem_size: usize, len: usize, lo: usize, hi: usize) {
+    let site = Location::caller();
+    if lo > hi || hi > len {
+        panic!("[audit] out-of-bounds range_mut at {site}: {lo}..{hi} of a {len}-element view");
+    }
+    if lo == hi || elem_size == 0 {
+        // Empty byte intervals (including all views of zero-sized
+        // types) cannot alias anything.
+        return;
+    }
+    TASKS.with(|t| {
+        let stack = t.borrow();
+        // No task scope on this thread: an ambient access with no
+        // disjointness claim to check. Bounds were verified above.
+        let Some(ctx) = stack.last() else { return };
+        let abs_lo = base + lo * elem_size;
+        let abs_hi = base + hi * elem_size;
+        ctx.reg
+            .register(abs_lo, abs_hi, lo, hi, ctx.task, ctx.epoch, site);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ancestor_walks_the_chain() {
+        // 0 <- 1 <- 2, 3 isolated.
+        let deps = vec![NO_DEP, 0, 1, NO_DEP];
+        assert!(ancestor_of(&deps, 0, 2));
+        assert!(ancestor_of(&deps, 1, 2));
+        assert!(!ancestor_of(&deps, 2, 0));
+        assert!(deps_related(&deps, 2, 0));
+        assert!(!deps_related(&deps, 3, 2));
+        assert!(!deps_related(&deps, SLOT_TASK_BASE, 1));
+    }
+
+    #[test]
+    fn epoch_retires_intervals() {
+        let reg = Arc::new(Registry::new());
+        let base = 0x1000usize;
+        {
+            let _p = phase_scope(&reg, None);
+            let _t = task_scope(&reg, 0);
+            check_range(base, 4, 16, 0, 16);
+        }
+        // Same bytes, new phase, different task: no conflict.
+        let _p = phase_scope(&reg, None);
+        let _t = task_scope(&reg, 1);
+        check_range(base, 4, 16, 0, 16);
+    }
+
+    #[test]
+    fn overlap_within_a_phase_panics() {
+        let reg = Arc::new(Registry::new());
+        let _p = phase_scope(&reg, None);
+        let base = 0x2000usize;
+        {
+            let _t = task_scope(&reg, 0);
+            check_range(base, 4, 16, 0, 8);
+        }
+        let _t = task_scope(&reg, 1);
+        let err = std::panic::catch_unwind(|| check_range(base, 4, 16, 4, 12))
+            .expect_err("overlap must panic");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("overlapping live range_mut"), "{msg}");
+    }
+}

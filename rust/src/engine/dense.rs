@@ -128,7 +128,9 @@ pub fn adamw32_step(
             // SAFETY: pieces partition each tensor disjointly (plan
             // invariant), so this task is the sole writer of [lo, hi).
             let w = unsafe { ws[piece.tensor].range_mut(lo, hi) };
+            // SAFETY: same disjoint piece range, moment buffer.
             let mm = unsafe { ms[piece.tensor].range_mut(lo, hi) };
+            // SAFETY: same disjoint piece range, second-moment buffer.
             let vv = unsafe { vs[piece.tensor].range_mut(lo, hi) };
             let g = &grads[piece.tensor].data[lo..hi];
             adamw32_piece(w, mm, vv, g, hp, bc1, bc2, lr);
@@ -177,6 +179,7 @@ pub fn sgdm_step(
             let (lo, hi) = (piece.lo, piece.hi);
             // SAFETY: disjoint shard ranges (plan invariant).
             let w = unsafe { ws[piece.tensor].range_mut(lo, hi) };
+            // SAFETY: same disjoint piece range, momentum buffer.
             let mm = unsafe { ms[piece.tensor].range_mut(lo, hi) };
             let g = &grads[piece.tensor].data[lo..hi];
             for k in 0..g.len() {
@@ -282,6 +285,7 @@ pub fn sm3_step(
                 let (lo, hi) = (piece.lo, piece.hi);
                 // SAFETY: disjoint shard ranges (plan invariant).
                 let w = unsafe { ws[piece.tensor].range_mut(lo, hi) };
+                // SAFETY: same disjoint piece range, accumulator buffer.
                 let mv = unsafe { ms[piece.tensor].range_mut(lo, hi) };
                 let g = &grads[piece.tensor].data[lo..hi];
                 match &routes[piece.tensor] {
@@ -493,6 +497,7 @@ pub fn adafactor_step(
                     // SAFETY: each piece owns its stat + aux slots
                     // exclusively (plan assigns one slot per piece).
                     let rsum = unsafe { slot_views[slot_id].range_mut(0, rows_total) };
+                    // SAFETY: same exclusive slot id, aux arena.
                     let aux = unsafe { aux_views[slot_id].range_mut(0, 2 * cols) };
                     let (cs, cc) = aux.split_at_mut(cols);
                     let g = &grads[piece.tensor].data[piece.lo..piece.hi];

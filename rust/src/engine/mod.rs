@@ -124,8 +124,50 @@
 //! that cache; `ci.sh`'s two-count test runs keep working by
 //! construction because each `cargo test` invocation is its own process
 //! with its own environment.
+//!
+//! # The audited unsafe boundary
+//!
+//! Every `unsafe` in the engine is a [`SharedSlice::range_mut`] call (or
+//! supports one), and the disjointness those calls rely on is
+//! **machine-checked**, not merely asserted, on two axes:
+//!
+//! * **Statically**: `rust/src/bin/lint.rs` (tier-1 test `unsafe_lint`)
+//!   confines `unsafe` to the engine/offload/checkpoint allowlist,
+//!   requires an adjacent `// SAFETY:` comment at every site, and keeps
+//!   `#![forbid(unsafe_code)]` stamped on everything else.
+//! * **Dynamically** (`--features audit`): each engine owns an
+//!   [`audit::Registry`]; every `run_tasks{,_with,_dep}` call is one
+//!   *phase* that advances the registry's epoch on entry and again
+//!   after the pool drains, and every task body runs inside a task
+//!   scope. `range_mut` then registers each materialized view's byte
+//!   interval, and the auditor aborts — naming both call sites — on any
+//!   overlap between views of *different* tasks in one phase that the
+//!   phase's dependency edges (`run_tasks_dep`) do not order, on any
+//!   out-of-bounds range, and on any view materialized after its
+//!   phase's barrier (epoch mismatch — i.e. a worker escaped the pool
+//!   drain). Worker-slot scratch (`run_tasks_with` / `run_tasks_dep`)
+//!   registers under a per-slot scope in a disjoint id namespace, so
+//!   slot exclusivity is audited by the same overlap rule.
+//!
+//! Epoch/phase rules, in short: *a view is live from its `range_mut`
+//! until its phase's barrier*, and two live views may overlap only if
+//! they belong to one task or to dependency-ordered tasks. Accesses
+//! outside any phase (setup code, direct unit tests) are bounds-checked
+//! but make no disjointness claim. When adding a new unsafe site: route
+//! it through `range_mut` inside a task body of one of the `run_tasks*`
+//! entry points, keep the touched range inside the task's plan pieces
+//! (or its exclusive scratch slot), put a `// SAFETY:` comment on the
+//! line above citing the plan invariant relied upon, and keep the file
+//! inside the lint's allowlist — then `cargo test --features audit`
+//! checks the claim on every schedule the suite runs.
+//!
+//! Audit-mode registries are engine-wide but reached through a
+//! thread-local task scope, so concurrently running engines (e.g. the
+//! test harness's parallel tests) never cross-talk.
 
 pub mod adamw4;
+#[cfg(feature = "audit")]
+pub mod audit;
 pub mod ctx;
 pub mod dense;
 pub mod plan;
@@ -199,6 +241,10 @@ pub struct StepEngine {
     shard_elems: usize,
     /// Persistent worker pool, shared by clones of this engine.
     pool: Arc<PoolCell>,
+    /// Aliasing-auditor interval tracker, shared by clones of this
+    /// engine (clones share the pool, so they share phases too).
+    #[cfg(feature = "audit")]
+    audit: Arc<audit::Registry>,
 }
 
 impl Default for StepEngine {
@@ -215,6 +261,8 @@ impl StepEngine {
             pool: Arc::new(PoolCell {
                 inner: Mutex::new(None),
             }),
+            #[cfg(feature = "audit")]
+            audit: Arc::new(audit::Registry::new()),
         }
     }
 
@@ -272,9 +320,17 @@ impl StepEngine {
         if n_tasks == 0 {
             return;
         }
+        // One `run_tasks*` call = one auditor phase: the guard opens a
+        // fresh epoch now and retires every interval at return (i.e.
+        // after the pool drained). See the module docs, "The audited
+        // unsafe boundary".
+        #[cfg(feature = "audit")]
+        let _phase = audit::phase_scope(&self.audit, None);
         if threads <= 1 {
             let mut scratch = S::default();
             for i in 0..n_tasks {
+                #[cfg(feature = "audit")]
+                let _task = audit::task_scope(&self.audit, i as u64);
                 f(i, &mut scratch);
             }
             return;
@@ -282,6 +338,8 @@ impl StepEngine {
         let next = AtomicUsize::new(0);
         let next = &next;
         let f = &f;
+        #[cfg(feature = "audit")]
+        let audit_reg = &self.audit;
         let body = move |_slot: usize| {
             let mut scratch = S::default();
             loop {
@@ -289,6 +347,8 @@ impl StepEngine {
                 if i >= n_tasks {
                     break;
                 }
+                #[cfg(feature = "audit")]
+                let _task = audit::task_scope(audit_reg, i as u64);
                 f(i, &mut scratch);
             }
         };
@@ -328,9 +388,15 @@ impl StepEngine {
                 assert!(d < i, "dependency {d} of queue entry {i} must precede it");
             }
         }
+        // Dependency-ordered phase: the auditor receives the edges so
+        // that ordered entries may legally reuse a scratch range.
+        #[cfg(feature = "audit")]
+        let _phase = audit::phase_scope(&self.audit, Some(deps));
         if threads <= 1 {
             let s = &mut scratch[0];
             for i in 0..n_tasks {
+                #[cfg(feature = "audit")]
+                let _task = audit::task_scope(&self.audit, i as u64);
                 f(i, &mut *s);
             }
             return;
@@ -348,7 +414,11 @@ impl StepEngine {
         let deps = &deps[..];
         let scratch_view = SharedSlice::new(scratch);
         let scratch_view = &scratch_view;
+        #[cfg(feature = "audit")]
+        let audit_reg = &self.audit;
         let body = move |slot: usize| {
+            #[cfg(feature = "audit")]
+            let _worker = audit::task_scope(audit_reg, audit::SLOT_TASK_BASE + slot as u64);
             // SAFETY: the pool hands each broadcast participant a
             // distinct slot in 0..threads, so scratch entries have a
             // single owner.
@@ -369,7 +439,11 @@ impl StepEngine {
                         std::thread::yield_now();
                     }
                 }
+                #[cfg(feature = "audit")]
+                let _task = audit::task_scope(audit_reg, i as u64);
                 f(i, &mut *s);
+                #[cfg(feature = "audit")]
+                drop(_task);
                 done[i].store(true, Ordering::Release);
             }
         };
@@ -389,9 +463,13 @@ impl StepEngine {
         if n_tasks == 0 {
             return;
         }
+        #[cfg(feature = "audit")]
+        let _phase = audit::phase_scope(&self.audit, None);
         if threads <= 1 {
             let s = &mut scratch[0];
             for i in 0..n_tasks {
+                #[cfg(feature = "audit")]
+                let _task = audit::task_scope(&self.audit, i as u64);
                 f(i, &mut *s);
             }
             return;
@@ -406,7 +484,11 @@ impl StepEngine {
         let f = &f;
         let scratch_view = SharedSlice::new(scratch);
         let scratch_view = &scratch_view;
+        #[cfg(feature = "audit")]
+        let audit_reg = &self.audit;
         let body = move |slot: usize| {
+            #[cfg(feature = "audit")]
+            let _worker = audit::task_scope(audit_reg, audit::SLOT_TASK_BASE + slot as u64);
             // SAFETY: the pool hands each broadcast participant a
             // distinct slot in 0..threads, so scratch entries have a
             // single owner.
@@ -417,6 +499,8 @@ impl StepEngine {
                 if i >= n_tasks {
                     break;
                 }
+                #[cfg(feature = "audit")]
+                let _task = audit::task_scope(audit_reg, i as u64);
                 f(i, &mut *s);
             }
         };

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Shard planning: cut the parameter set into block-aligned pieces and
 //! group them into balanced tasks.
 //!

@@ -8,6 +8,28 @@
 //! disjointness proof to the *planner*: shard ranges are constructed
 //! non-overlapping and byte-aligned (see `plan.rs`), and every unsafe
 //! access site states which plan invariant it relies on.
+//!
+//! # The machine-checked contract
+//!
+//! The contract is no longer assumption-only; it is verified on two
+//! independent axes:
+//!
+//! * **Statically**, `rust/src/bin/lint.rs` (tier-1 test `unsafe_lint`)
+//!   confines `unsafe` to an explicit module allowlist and requires a
+//!   `// SAFETY:` comment at every site — a new call site of
+//!   [`SharedSlice::range_mut`] outside the audited modules does not
+//!   compile past CI.
+//! * **Dynamically**, under `--features audit` every `range_mut` call
+//!   reports its `(base, byte range, task, phase epoch)` to the
+//!   engine's aliasing auditor ([`crate::engine::audit`]). Out-of-bounds
+//!   ranges always abort; ranges materialized after their phase's
+//!   barrier abort; and two overlapping ranges from different tasks of
+//!   one phase abort with both call sites named, unless the phase's
+//!   dependency edges order the tasks. The epoch/phase rules are
+//!   documented in `engine/mod.rs` ("The audited unsafe boundary").
+//!
+//! With the feature disabled the hook compiles away and `range_mut` is
+//! exactly the one-line pointer arithmetic it always was.
 
 use std::marker::PhantomData;
 
@@ -26,9 +48,13 @@ pub struct SharedSlice<'a, T> {
 
 // SAFETY: the wrapper only hands out raw-derived references through
 // `range_mut`, whose contract requires disjoint ranges per concurrent
-// task; with disjoint ranges, sending/sharing the view across threads is
+// task; with disjoint ranges, sending the view to another thread is
 // equivalent to sending disjoint `&mut [T]` sub-slices.
 unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+// SAFETY: a shared `&SharedSlice` yields nothing beyond further
+// `range_mut` views under the same per-task disjointness contract, so
+// sharing across threads adds no aliasing that `Send` did not already
+// permit.
 unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
 
 impl<'a, T> SharedSlice<'a, T> {
@@ -53,14 +79,30 @@ impl<'a, T> SharedSlice<'a, T> {
     /// Mutable view of elements `[lo, hi)`.
     ///
     /// # Safety
-    /// Ranges obtained from concurrently running tasks must be disjoint,
-    /// and no range may be re-materialized while an earlier one for an
-    /// overlapping region is still alive in the same task.
+    /// `lo <= hi <= len`, and ranges obtained from different tasks of
+    /// one engine phase must be pairwise disjoint unless the phase's
+    /// dependency edges order the tasks (`run_tasks_dep`). Within one
+    /// task, no range may be re-materialized while an earlier `&mut`
+    /// for an overlapping region is still alive. Under
+    /// `--features audit` this exact contract is checked at runtime
+    /// and any violation aborts with both call sites named.
     #[inline]
     #[allow(clippy::mut_from_ref)]
+    #[cfg_attr(feature = "audit", track_caller)]
     pub unsafe fn range_mut(&self, lo: usize, hi: usize) -> &mut [T] {
+        #[cfg(feature = "audit")]
+        crate::engine::audit::check_range(
+            self.ptr as usize,
+            std::mem::size_of::<T>(),
+            self.len,
+            lo,
+            hi,
+        );
         debug_assert!(lo <= hi && hi <= self.len, "range {lo}..{hi} of {}", self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+        // SAFETY: in bounds by the debug_assert (and, under the audit
+        // feature, by the auditor's unconditional bounds check);
+        // aliasing is the caller's contract, restated above.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo) }
     }
 }
 

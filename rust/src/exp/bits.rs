@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Extension experiment (paper §7 future-work direction): how low can the
 //! bitwidth go? Sweeps 2..8 bits for both moments with the paper's final
 //! scheme (m: B128/DE, v: Rank-1-or-B128/Linear) on the standard LM

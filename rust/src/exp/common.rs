@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Shared experiment infrastructure: standard workloads (LM, CLS,
 //! copy-translation), metric extraction, and result persistence.
 //!

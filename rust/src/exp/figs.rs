@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Figure reproductions (1, 2, 3, 4). Figures are emitted as tables of
 //! the underlying series plus ASCII histograms; full series go to
 //! `results/*.json` for plotting.

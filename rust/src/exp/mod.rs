@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! The paper-experiment harness: one module per table/figure of the
 //! evaluation section (see DESIGN.md §5 for the index). Each experiment
 //! prints the paper's rows and writes `results/<id>.json`.

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Tab. 1 reproduction: ablation of second-moment quantization schemes.
 //!
 //! Paper setting: GPT-2 Medium on E2E-NLG, BLEU + Unstable%. Ours: the

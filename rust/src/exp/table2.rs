@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Tab. 2 reproduction: seven optimizers × five tasks.
 //!
 //! Task surrogates (DESIGN.md §3): NLU/CLS → two classification datasets

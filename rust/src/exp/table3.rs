@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Tab. 3 reproduction: "instruction tuning" across model scales.
 //!
 //! Paper: LLaMA-7/13/33B fine-tuned on Alpaca, evaluated on MMLU +

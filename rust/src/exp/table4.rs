@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Tab. 4 reproduction: memory and time per optimizer.
 //!
 //! Two sub-tables:

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Tab. 5 reproduction: largest trainable model under a memory budget
 //! (batch 1, max length 512 — the paper's setup), via the exact state
 //! accounting + activation model. Expected shape: 4-bit AdamW unlocks

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Tab. 6 reproduction: which-moment ablation (paper: Swin-T pretraining
 //! on ImageNet; ours: the MLP classification surrogate, accuracy %).
 //! Rows: no quantization → first moment only (B2048 vs B128) → both

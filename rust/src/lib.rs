@@ -12,6 +12,19 @@
 //!   artifacts, memory accounting ([`memory`]), the offload tier —
 //!   analytic oracle + executable host-state pipeline ([`offload`]) —
 //!   and the paper-experiment harness ([`exp`]).
+//!
+//! # The unsafe boundary
+//!
+//! `unsafe` is confined to an explicit allowlist of modules (the engine
+//! executors, the offload staging layer, checkpoint byte packing) and
+//! every other module carries `#![forbid(unsafe_code)]`. The allowlist,
+//! SAFETY-comment coverage and the stamps are enforced mechanically by
+//! `rust/src/bin/lint.rs` (tier-1 test `unsafe_lint`), and the
+//! engine's disjointness contract is checked at runtime by the
+//! aliasing auditor (`--features audit`, see `engine::audit`).
+
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
 
 pub mod util;
 pub mod tensor;

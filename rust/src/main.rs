@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! `lowbit` — the launcher CLI for the 4-bit-optimizer training framework.
 //!
 //! Subcommands:

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Memory accounting: exact optimizer-state sizes per preset (the basis of
 //! the paper's Tab. 4 "Saved Mem.") and a whole-training-footprint
 //! estimator powering the Tab. 5 "largest trainable model" search.

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Model *specifications*: named, classified parameter inventories.
 //!
 //! A spec is enough to (a) allocate and initialize parameters for the

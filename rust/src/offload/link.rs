@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Deterministic virtual-time accounting for the offload pipeline's
 //! host↔device link.
 //!

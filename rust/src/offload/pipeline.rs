@@ -373,6 +373,8 @@ pub fn compressed_offloaded_step(
                             packed: unsafe {
                                 sb.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len)
                             },
+                            // SAFETY: same exclusive slot, disjoint
+                            // f32 sub-range of the vals arena.
                             scales: unsafe {
                                 sv.range_mut(seg.vals_off, seg.vals_off + seg.vals_len)
                             },
@@ -384,6 +386,8 @@ pub fn compressed_offloaded_step(
                             let stat = unsafe {
                                 slot_views[slot_id].range_mut(0, slot_views[slot_id].len())
                             };
+                            // SAFETY: exclusive slot (dependency
+                            // discipline); read-only staged codes.
                             let pk: &[u8] = unsafe {
                                 sb.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len)
                             };
@@ -414,6 +418,8 @@ pub fn compressed_offloaded_step(
                             packed: unsafe {
                                 sb.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len)
                             },
+                            // SAFETY: same exclusive slot, disjoint
+                            // f32 sub-range of the vals arena.
                             scales: unsafe {
                                 sv.range_mut(seg.vals_off, seg.vals_off + seg.vals_len)
                             },
@@ -425,6 +431,8 @@ pub fn compressed_offloaded_step(
                             let stat = unsafe {
                                 slot_views[slot_id].range_mut(0, slot_views[slot_id].len())
                             };
+                            // SAFETY: exclusive slot (dependency
+                            // discipline); read-only staged codes.
                             let pk: &[u8] = unsafe {
                                 sb.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len)
                             };
@@ -498,10 +506,10 @@ pub fn compressed_offloaded_step(
                         let new_sc = new_scales_ref[m_buf_of[piece.tensor]]
                             .as_ref()
                             .expect("reduced m scales");
+                        let (d0, d1) = (seg.bytes_off, seg.bytes_off + seg.bytes_len);
                         // SAFETY: exclusive slot; in-place re-encode
                         // strictly after the decode completed.
-                        let dst =
-                            unsafe { sb.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len) };
+                        let dst = unsafe { sb.range_mut(d0, d1) };
                         q.encode_range_with_scales(
                             map,
                             &scratch.m[..hi - lo],
@@ -530,10 +538,10 @@ pub fn compressed_offloaded_step(
                         let new_sc = new_scales_ref[v_buf_of[piece.tensor]]
                             .as_ref()
                             .expect("reduced v scales");
+                        let (d0, d1) = (seg.bytes_off, seg.bytes_off + seg.bytes_len);
                         // SAFETY: exclusive slot; in-place re-encode
                         // strictly after the decode completed.
-                        let dst =
-                            unsafe { sb.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len) };
+                        let dst = unsafe { sb.range_mut(d0, d1) };
                         q.encode_range_with_scales(
                             map,
                             &scratch.v[..hi - lo],
@@ -679,6 +687,8 @@ pub fn dense_offloaded_step(
                 // (dependency discipline); the two segments are disjoint
                 // sub-ranges of the slot.
                 let mm = unsafe { sv.range_mut(msg.vals_off, msg.vals_off + msg.vals_len) };
+                // SAFETY: the second disjoint sub-range of the same
+                // exclusive slot (see above).
                 let vv = unsafe { sv.range_mut(vsg.vals_off, vsg.vals_off + vsg.vals_len) };
                 dense::adamw32_piece(w, mm, vv, g, hp, bc1, bc2, lr);
             }

@@ -104,7 +104,7 @@ pub(crate) fn host_v(vs: &mut SecondState) -> HostMoment<'_> {
 
 /// Where one piece's one state lands inside its task's scratch slot.
 #[derive(Clone, Copy, Debug)]
-pub(crate) struct StagedState {
+pub struct StagedState {
     /// Offset/length in the slot's byte arena (staged packed codes).
     pub bytes_off: usize,
     pub bytes_len: usize,
@@ -122,14 +122,14 @@ pub(crate) struct StagedState {
 /// Staging of one piece: first and second moment (either may be absent —
 /// factored states stay resident, and phase C stages only globals).
 #[derive(Clone, Copy, Debug, Default)]
-pub(crate) struct PieceStaging {
+pub struct PieceStaging {
     pub m: Option<StagedState>,
     pub v: Option<StagedState>,
 }
 
 /// Staging of one plan task for one phase.
 #[derive(Clone, Debug)]
-pub(crate) struct TaskStaging {
+pub struct TaskStaging {
     /// Plan task index (also the task's RNG stream id).
     pub task: usize,
     /// Parallel to the plan task's pieces.
@@ -145,7 +145,7 @@ pub(crate) struct TaskStaging {
 /// The tier's per-step staging layout: phase-A stagings for every plan
 /// task, phase-C stagings for the tasks that touch globally-normalized
 /// states, and the scratch-slot budget that fits the largest task.
-pub(crate) struct TierPlan {
+pub struct TierPlan {
     pub a: Vec<TaskStaging>,
     pub c: Vec<TaskStaging>,
     /// Per-slot arena sizes (the bounded device-scratch budget is
@@ -282,7 +282,7 @@ fn seg_for(
 
 /// Build the tier's staging layout for one step — a pure function of
 /// (plan, state layouts), like the plan itself.
-pub(crate) fn build_tier_plan(
+pub fn build_tier_plan(
     plan: &Plan,
     metas: &[TensorMeta],
     m_states: &[MomentState],
@@ -359,7 +359,7 @@ pub(crate) fn build_tier_plan(
 /// Staging layout for the dense fp32 optimizers: both moments stage as
 /// plain f32 segments (no codes, no phase C), so per-step traffic is
 /// exactly `2 × state_bytes` — the analytic model's assumption.
-pub(crate) fn build_dense_tier_plan(plan: &Plan) -> TierPlan {
+pub fn build_dense_tier_plan(plan: &Plan) -> TierPlan {
     let mut a = Vec::with_capacity(plan.tasks.len());
     let mut slot_vals = 0usize;
     for (ti, task) in plan.tasks.iter().enumerate() {
@@ -457,6 +457,7 @@ fn copy_segment(
             // SAFETY: disjoint host piece ranges; exclusive slot (see
             // copy_task_segments).
             let h = unsafe { data.range_mut(lo, hi) };
+            // SAFETY: this segment's exclusive sub-range of the slot.
             let d = unsafe { slot_vals.range_mut(seg.vals_off, seg.vals_off + seg.vals_len) };
             if to_device {
                 d.copy_from_slice(h);
@@ -474,8 +475,12 @@ fn copy_segment(
             // SAFETY: block/byte-aligned disjoint piece ranges;
             // exclusive slot.
             let hb = unsafe { packed.range_mut(b0, b1) };
+            // SAFETY: this segment's exclusive byte sub-range of the slot.
             let db = unsafe { slot_bytes.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len) };
+            // SAFETY: block-aligned piece boundaries make scale ranges
+            // disjoint across tasks.
             let hs = unsafe { scales.range_mut(lo / block, hi.div_ceil(*block)) };
+            // SAFETY: this segment's exclusive f32 sub-range of the slot.
             let ds = unsafe { slot_vals.range_mut(seg.vals_off, seg.vals_off + seg.vals_len) };
             if to_device {
                 db.copy_from_slice(hb);
@@ -489,6 +494,7 @@ fn copy_segment(
             let (b0, b1) = packed_span(q.bits, lo, hi);
             // SAFETY: byte-aligned disjoint piece ranges; exclusive slot.
             let hb = unsafe { packed.range_mut(b0, b1) };
+            // SAFETY: this segment's exclusive byte sub-range of the slot.
             let db = unsafe { slot_bytes.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len) };
             if to_device {
                 db.copy_from_slice(hb);

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Adafactor (Shazeer & Stern '18) — the sublinear-memory baseline of the
 //! paper's Tab. 2. Second moment is factored for ≥2-D parameters and kept
 //! dense for 1-D; the first moment is optional (`β1 = 0` is the

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Full-precision AdamW (Loshchilov & Hutter) — the paper's Eq. 1 with
 //! decoupled weight decay. This is both the 32-bit baseline and the inner
 //! update `A` shared by every compressed variant (they call

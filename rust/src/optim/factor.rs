@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Rank-1 (outer-product) factorization of the second moment, following
 //! Adafactor (Shazeer & Stern '18). For a non-negative matrix `V`, store
 //! row sums `R` and column sums `C`; reconstruct `V̂ = R Cᵀ / sum(R)`.

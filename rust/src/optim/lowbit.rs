@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! The paper's optimizer: AdamW with compressed states (Alg. 1 + Alg. 3).
 //!
 //! Per parameter shard and step: decompress m̄, v̄ → run the exact AdamW

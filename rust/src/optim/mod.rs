@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! The optimizer zoo: full-precision baselines (AdamW, SGDM, Adafactor,
 //! SM3) and the paper's compressed optimizers (8-bit AdamW, 4-bit AdamW,
 //! 4-bit Factor) built on the Alg. 1 compress/decompress wrapper.

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! SGD with momentum, in both full-precision and compressed form
 //! (paper Alg. 2: the quantized state is the momentum buffer). The
 //! compressed variant is the optimizer analyzed by the paper's

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! SM3 (Anil et al. '19) — the second sublinear baseline in the paper's
 //! Tab. 2. The cover is the experimentally-standard choice of co-dimension
 //! 1 slices (rows and columns for matrices); one accumulator per slice.

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Persistent storage forms of one optimizer-state tensor (paper Alg. 1's
 //! `s̄`): full precision, quantized, or factored. The trainer only ever
 //! holds one decompressed copy at a time (per-layer decompression).

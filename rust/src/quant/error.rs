@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Quantization-error metrics, including the paper's zero-point
 //! diagnostic: the deviation of the *inverse square root* of the second
 //! moment (Fig. 3), which is the quantity the Adam update actually

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! §Perf kernel layer: nibble-granular decode/encode kernels for the
 //! quantizer hot paths (the inner loops every optimizer step spends its
 //! time in — see `engine/adamw4.rs` and the offload staged path).

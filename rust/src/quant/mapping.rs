@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Quantization mappings **T** : code → value (paper §2.2, App. E.2).
 //!
 //! A mapping is a sorted table of `2^b` (or `2^b - 1` for DE-0)

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! The paper's core contribution: 4-bit quantization of optimizer states.
 //!
 //! * [`mapping`] — quantization mappings **T** (Linear, DE, DE-0);

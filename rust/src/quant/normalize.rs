@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Normalization operators **N** (paper §2.2, §4.2, App. G).
 //!
 //! A normalization assigns every tensor element a positive *quantization

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Bit-packing of quantization codes. 4-bit codes are packed two per byte
 //! (low nibble first), 8-bit codes are stored as-is; other bitwidths are
 //! stored one code per byte (sub-byte packing beyond 4-bit is not worth

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! The quantizer `Q = M ∘ N` (paper §2.2) and its persisted form,
 //! [`QuantizedTensor`]. This is the compression/decompression pair used by
 //! Alg. 1: the optimizer's working state exists in f32 only transiently;

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Stochastic rounding (paper App. E.3): instead of nearest-value
 //! rounding, a normalized value between two representable points is
 //! rounded up with probability proportional to its distance from the

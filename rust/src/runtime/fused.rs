@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! The fused 4-bit AdamW optimizer backed by the AOT Pallas kernel
 //! (`fused_adamw4_<chunk>.hlo.txt`) — the paper's "(fused)" rows in
 //! Tab. 4 and its FSDP-packed mode (App. D: FSDP packs parameters into

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! The artifact manifest (`artifacts/manifest.json`, written by aot.py)
 //! and the PJRT-backed gradient engine built from it.
 

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! The PJRT runtime: loads the AOT HLO-text artifacts produced by
 //! `python/compile/aot.py` and executes them from the rust hot path.
 //! Python is never invoked here — the artifacts directory is the entire

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! In-tree stand-in for the `xla` crate (PJRT bindings).
 //!
 //! The offline crate set this repo builds against ships no `xla` /

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! A small dense f32 tensor used throughout the native (rust) compute and
 //! quantization paths. It deliberately stays simple: contiguous row-major
 //! storage, explicit shapes, and exactly the operations the builtin

@@ -25,11 +25,11 @@ use std::io::{BufWriter, Read, Write};
 /// Append a f32 slice's little-endian bytes in one bulk copy per tensor.
 fn push_f32s(blob: &mut Vec<u8>, vals: &[f32]) {
     if cfg!(target_endian = "little") {
+        let ptr = vals.as_ptr() as *const u8;
         // SAFETY: any f32 bit pattern is valid to view as bytes, and on
         // little-endian targets the in-memory bytes are exactly the
         // serialized little-endian form.
-        let bytes =
-            unsafe { std::slice::from_raw_parts(vals.as_ptr() as *const u8, vals.len() * 4) };
+        let bytes = unsafe { std::slice::from_raw_parts(ptr, vals.len() * 4) };
         blob.extend_from_slice(bytes);
     } else {
         blob.reserve(vals.len() * 4);

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Builtin MLP classifier engine (manual backprop). The CLS-task
 //! surrogate: ReLU MLP + softmax cross-entropy over [`ClsBatch`]es.
 

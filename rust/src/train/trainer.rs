@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! The training loop: gradient engine + optimizer + schedule + divergence
 //! detection. All paper experiments (tables 1/2/3/6, figure 4) run through
 //! [`Trainer::run`]; the "Unstable %" column of Tab. 1 is exactly the

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Builtin decoder-only transformer LM with full manual backprop.
 //!
 //! This is the native (no-PJRT) gradient engine: it produces *real* Adam

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! A small command-line argument parser (the offline crate set has no
 //! `clap`). Supports subcommands, `--key value`, `--key=value`, `--flag`,
 //! and positional arguments, with generated `--help` text.

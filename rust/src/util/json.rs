@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Minimal JSON value model, parser, and pretty-printer.
 //!
 //! The offline crate set has no `serde`/`serde_json`, so the framework

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Shared substrate: RNG, JSON, CLI parsing, stats, tables, property
 //! testing, and a tiny logger. Everything here exists because the offline
 //! crate set ships no `rand`/`serde`/`clap`/`proptest`/`criterion`.

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! A miniature property-based testing driver (offline substitute for
 //! `proptest`). A property is a closure over a [`Gen`]; the driver runs it
 //! for `cases` seeded iterations and, on failure, retries with the failing

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Deterministic, splittable pseudo-random number generation.
 //!
 //! Every stochastic component of the framework (data synthesis, parameter

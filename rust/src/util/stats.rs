@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Timing and summary-statistics helpers shared by the trainer, the bench
 //! harness, and the experiment modules.
 

@@ -1,3 +1,4 @@
+#![forbid(unsafe_code)]
 //! Markdown-style table rendering for the experiment harness. Every paper
 //! table reproduction builds a [`Table`] and prints it; the same structure
 //! is serialized to `results/*.json`.

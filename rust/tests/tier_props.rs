@@ -1,0 +1,436 @@
+//! Property tests (via `util/propcheck`) for the offload tier's staging
+//! layout, `offload::tier::build_tier_plan`. The tier's transfer tasks
+//! cite these invariants at their `unsafe` slot accesses, and the link
+//! accounting (`offload::link`) trusts the recorded byte counts, so both
+//! get hammered here across arbitrary mixes of state storage forms:
+//!
+//! * staged segments of one task are pairwise disjoint within the slot's
+//!   byte arena and within its f32 arena, and every extent fits the
+//!   task's recorded footprint, which in turn fits the slot budget;
+//! * the recorded link traffic is exactly the sum over staged segments
+//!   (down: all segments; up: writeback segments only);
+//! * phase-C stagings exist precisely for tasks touching a
+//!   globally-normalized state, stage only those states, and carry no
+//!   scale values (global scales stay device-resident);
+//! * the layout is a pure function of (plan, state forms);
+//! * the dense-fp32 layout (`build_dense_tier_plan`) stages both moments
+//!   as plain f32 — per-step traffic exactly `2 × 4 bytes × numel` each
+//!   way, the analytic model's assumption.
+
+use lowbit_opt::engine::plan::{build_plan, StateLayout, TensorMeta};
+use lowbit_opt::offload::tier::{build_dense_tier_plan, build_tier_plan, StagedState, TaskStaging};
+use lowbit_opt::optim::factor::FactoredSecond;
+use lowbit_opt::optim::state::{MomentState, SecondState};
+use lowbit_opt::quant::{MapKind, NormKind, Quantizer};
+use lowbit_opt::tensor::Tensor;
+use lowbit_opt::util::propcheck::{check, Gen};
+
+fn gen_shape(g: &mut Gen) -> Vec<usize> {
+    match g.rng.below(8) {
+        0..=3 => vec![1 + g.rng.below(5000)],
+        4..=6 => vec![1 + g.rng.below(40), 1 + g.rng.below(90)],
+        _ => vec![1 + g.rng.below(10), 1 + g.rng.below(8), 1 + g.rng.below(9)],
+    }
+}
+
+/// Deterministic strictly-positive payload: positivity sidesteps the
+/// quantizers' zero-scale special cases (not under test here) and keeps
+/// unsigned second-moment forms in range.
+fn test_tensor(shape: &[usize], salt: u64) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = (0..n as u64)
+        .map(|i| 0.25 + ((i * 7 + salt) % 13) as f32)
+        .collect();
+    Tensor::from_vec(shape, data)
+}
+
+fn gen_m(g: &mut Gen, shape: &[usize]) -> MomentState {
+    let t = test_tensor(shape, 1);
+    match g.rng.below(4) {
+        0 => MomentState::F32(t),
+        1 => {
+            let q = Quantizer::first_moment_4bit().quantize(&t, &mut g.rng);
+            MomentState::Quant(q)
+        }
+        2 => {
+            let q = Quantizer::moment_8bit(true).quantize(&t, &mut g.rng);
+            MomentState::Quant(q)
+        }
+        _ => {
+            // Globally-normalized m: rank-1 on matrices, per-tensor else.
+            let norm = if shape.len() == 2 && g.rng.below(2) == 0 {
+                NormKind::Rank1
+            } else {
+                NormKind::PerTensor
+            };
+            let q = Quantizer::new(norm, MapKind::DynExp, 4, true).quantize(&t, &mut g.rng);
+            MomentState::Quant(q)
+        }
+    }
+}
+
+fn gen_v(g: &mut Gen, shape: &[usize]) -> SecondState {
+    let t = test_tensor(shape, 2);
+    match g.rng.below(5) {
+        0 => SecondState::F32(t),
+        1 if shape.len() == 2 => {
+            let q = Quantizer::second_moment_4bit().quantize(&t, &mut g.rng);
+            SecondState::Quant(q)
+        }
+        2 => {
+            let q = Quantizer::moment_8bit(false).quantize(&t, &mut g.rng);
+            SecondState::Quant(q)
+        }
+        3 if shape.len() >= 2 => SecondState::Factored(FactoredSecond::zeros(shape)),
+        _ => {
+            let q = Quantizer::new(NormKind::Block(64), MapKind::Linear, 4, false)
+                .quantize(&t, &mut g.rng);
+            SecondState::Quant(q)
+        }
+    }
+}
+
+/// Planner layout + stat-slot length for a quantized state — mirrors the
+/// derivation the compressed executor feeds the planner (`engine/adamw4`),
+/// so the generated metas are exactly what a real step would use.
+fn layout_for(q: &Quantizer, shape: &[usize]) -> (StateLayout, usize) {
+    match q.norm {
+        NormKind::Block(b) => (StateLayout::Block(b), 0),
+        NormKind::Rank1 if shape.len() >= 2 => (StateLayout::Global, shape.iter().sum()),
+        _ => (StateLayout::Global, 1),
+    }
+}
+
+struct Inputs {
+    metas: Vec<TensorMeta>,
+    m_states: Vec<MomentState>,
+    v_states: Vec<SecondState>,
+    shard: usize,
+}
+
+fn gen_inputs(g: &mut Gen) -> Inputs {
+    let n = 1 + g.rng.below(6);
+    let mut metas = Vec::with_capacity(n);
+    let mut m_states = Vec::with_capacity(n);
+    let mut v_states = Vec::with_capacity(n);
+    for _ in 0..n {
+        let shape = gen_shape(g);
+        let numel: usize = shape.iter().product();
+        let ms = gen_m(g, &shape);
+        let vs = gen_v(g, &shape);
+        let (m, m_stat_len) = match &ms {
+            MomentState::F32(_) => (StateLayout::F32, 0),
+            MomentState::Quant(q) => layout_for(&q.quantizer, &shape),
+        };
+        let (v, v_stat_len) = match &vs {
+            SecondState::F32(_) => (StateLayout::F32, 0),
+            SecondState::Quant(q) => layout_for(&q.quantizer, &shape),
+            SecondState::Factored(f) => (StateLayout::Factored, f.rows() + f.cols()),
+        };
+        metas.push(TensorMeta {
+            numel,
+            shape,
+            m,
+            v,
+            m_stat_len,
+            v_stat_len,
+        });
+        m_states.push(ms);
+        v_states.push(vs);
+    }
+    let shard = *g.choose(&[2usize, 64, 512, 4096]);
+    Inputs {
+        metas,
+        m_states,
+        v_states,
+        shard,
+    }
+}
+
+/// All staged segments of one task staging, in layout order.
+fn segs(ts: &TaskStaging) -> Vec<StagedState> {
+    ts.pieces
+        .iter()
+        .flat_map(|p| [p.m, p.v])
+        .flatten()
+        .collect()
+}
+
+/// Non-empty intervals must be pairwise disjoint and lie in `[0, len)`.
+fn check_disjoint(
+    mut iv: Vec<(usize, usize)>,
+    len: usize,
+    what: &str,
+    task: usize,
+) -> Result<(), String> {
+    iv.retain(|&(a, b)| a != b);
+    iv.sort_unstable();
+    let mut prev = 0usize;
+    for &(a, b) in &iv {
+        if b > len {
+            return Err(format!(
+                "task {task}: {what} segment [{a}, {b}) exceeds the arena length {len}"
+            ));
+        }
+        if a < prev {
+            return Err(format!(
+                "task {task}: {what} segment [{a}, {b}) overlaps the previous one (ends {prev})"
+            ));
+        }
+        prev = b;
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_staged_segments_disjoint_and_within_budget() {
+    check("tier segment disjointness + slot budget", 200, |g| {
+        let inp = gen_inputs(g);
+        let plan = build_plan(&inp.metas, inp.shard);
+        let tp = build_tier_plan(&plan, &inp.metas, &inp.m_states, &inp.v_states);
+        for ts in tp.a.iter().chain(tp.c.iter()) {
+            if ts.pieces.len() != plan.tasks[ts.task].pieces.len() {
+                return Err(format!(
+                    "task {}: {} piece stagings for {} plan pieces",
+                    ts.task,
+                    ts.pieces.len(),
+                    plan.tasks[ts.task].pieces.len()
+                ));
+            }
+            let ss = segs(ts);
+            let bytes: Vec<_> = ss
+                .iter()
+                .map(|s| (s.bytes_off, s.bytes_off + s.bytes_len))
+                .collect();
+            let vals: Vec<_> = ss
+                .iter()
+                .map(|s| (s.vals_off, s.vals_off + s.vals_len))
+                .collect();
+            check_disjoint(bytes, ts.bytes_len, "byte-arena", ts.task)?;
+            check_disjoint(vals, ts.vals_len, "f32-arena", ts.task)?;
+            if ts.bytes_len > tp.slot_bytes || ts.vals_len > tp.slot_vals {
+                return Err(format!(
+                    "task {}: footprint ({}, {}) exceeds slot budget ({}, {})",
+                    ts.task, ts.bytes_len, ts.vals_len, tp.slot_bytes, tp.slot_vals
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_recorded_traffic_matches_staged_segments() {
+    check("tier traffic accounting", 200, |g| {
+        let inp = gen_inputs(g);
+        let plan = build_plan(&inp.metas, inp.shard);
+        let tp = build_tier_plan(&plan, &inp.metas, &inp.m_states, &inp.v_states);
+        let (mut down_total, mut up_total) = (0u64, 0u64);
+        for ts in tp.a.iter().chain(tp.c.iter()) {
+            let (mut down, mut up) = (0u64, 0u64);
+            for s in segs(ts) {
+                let bytes = s.bytes_len as u64 + 4 * s.vals_len as u64;
+                down += bytes;
+                if s.writeback {
+                    up += bytes;
+                }
+            }
+            if (down, up) != (ts.down_bytes, ts.up_bytes) {
+                return Err(format!(
+                    "task {}: recorded traffic ({}, {}) != segment sum ({down}, {up})",
+                    ts.task, ts.down_bytes, ts.up_bytes
+                ));
+            }
+            down_total += down;
+            up_total += up;
+        }
+        if tp.step_traffic() != (down_total, up_total) {
+            return Err(format!(
+                "step_traffic {:?} != per-task sums ({down_total}, {up_total})",
+                tp.step_traffic()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_phase_c_stages_exactly_the_global_states() {
+    check("tier phase-C structure", 200, |g| {
+        let inp = gen_inputs(g);
+        let plan = build_plan(&inp.metas, inp.shard);
+        let tp = build_tier_plan(&plan, &inp.metas, &inp.m_states, &inp.v_states);
+        // Phase A: one staging per plan task, in order; m always staged,
+        // v staged unless factored (resident).
+        if tp.a.len() != plan.tasks.len() {
+            return Err(format!(
+                "{} phase-A stagings for {} plan tasks",
+                tp.a.len(),
+                plan.tasks.len()
+            ));
+        }
+        for (i, ts) in tp.a.iter().enumerate() {
+            if ts.task != i {
+                return Err(format!("phase-A staging {i} names task {}", ts.task));
+            }
+            for (ps, p) in ts.pieces.iter().zip(&plan.tasks[i].pieces) {
+                let meta = &inp.metas[p.tensor];
+                if ps.m.is_none() {
+                    return Err(format!("task {i}: phase A left m of tensor {} out", p.tensor));
+                }
+                if ps.v.is_some() == (meta.v == StateLayout::Factored) {
+                    return Err(format!(
+                        "task {i}: phase A v staging mismatch for tensor {} ({:?})",
+                        p.tensor, meta.v
+                    ));
+                }
+            }
+        }
+        // Phase C: stagings exactly for tasks with a Global state; only
+        // the Global states are staged, codes only, always written back.
+        let want: Vec<usize> = plan
+            .tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| {
+                t.pieces.iter().any(|p| {
+                    inp.metas[p.tensor].m == StateLayout::Global
+                        || inp.metas[p.tensor].v == StateLayout::Global
+                })
+            })
+            .map(|(i, _)| i)
+            .collect();
+        let got: Vec<usize> = tp.c.iter().map(|ts| ts.task).collect();
+        if got != want {
+            return Err(format!("phase-C tasks {got:?} != tasks with globals {want:?}"));
+        }
+        for ts in &tp.c {
+            for (ps, p) in ts.pieces.iter().zip(&plan.tasks[ts.task].pieces) {
+                let meta = &inp.metas[p.tensor];
+                if ps.m.is_some() != (meta.m == StateLayout::Global)
+                    || ps.v.is_some() != (meta.v == StateLayout::Global)
+                {
+                    return Err(format!(
+                        "task {}: phase C staged a non-global state of tensor {}",
+                        ts.task, p.tensor
+                    ));
+                }
+                for s in [ps.m, ps.v].into_iter().flatten() {
+                    if s.vals_len != 0 || !s.writeback {
+                        return Err(format!(
+                            "task {}: phase C segment must be codes-only writeback \
+                             (vals_len {}, writeback {})",
+                            ts.task, s.vals_len, s.writeback
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tier_plan_is_pure_in_its_inputs() {
+    check("tier plan purity", 100, |g| {
+        let inp = gen_inputs(g);
+        let plan = build_plan(&inp.metas, inp.shard);
+        let a = build_tier_plan(&plan, &inp.metas, &inp.m_states, &inp.v_states);
+        let b = build_tier_plan(&plan, &inp.metas, &inp.m_states, &inp.v_states);
+        if (a.slot_bytes, a.slot_vals) != (b.slot_bytes, b.slot_vals)
+            || a.step_traffic() != b.step_traffic()
+            || a.a.len() != b.a.len()
+            || a.c.len() != b.c.len()
+        {
+            return Err("rebuild changed the staging layout".into());
+        }
+        for (x, y) in a.a.iter().chain(a.c.iter()).zip(b.a.iter().chain(b.c.iter())) {
+            if (x.task, x.bytes_len, x.vals_len) != (y.task, y.bytes_len, y.vals_len) {
+                return Err(format!("rebuild changed task {} staging", x.task));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dense_tier_plan_is_pure_f32_staging() {
+    check("dense tier staging", 100, |g| {
+        let inp = gen_inputs(g);
+        let plan = build_plan(&inp.metas, inp.shard);
+        let tp = build_dense_tier_plan(&plan);
+        if !tp.c.is_empty() || tp.slot_bytes != 0 {
+            return Err(format!(
+                "dense staging grew codes or a phase C ({} bytes, {} stagings)",
+                tp.slot_bytes,
+                tp.c.len()
+            ));
+        }
+        let total: u64 = plan.total_elems as u64;
+        if tp.step_traffic() != (8 * total, 8 * total) {
+            return Err(format!(
+                "dense step traffic {:?} != 8 bytes × {total} each way",
+                tp.step_traffic()
+            ));
+        }
+        for (i, ts) in tp.a.iter().enumerate() {
+            if ts.bytes_len != 0 {
+                return Err(format!("dense task {i} staged {} code bytes", ts.bytes_len));
+            }
+            for (ps, p) in ts.pieces.iter().zip(&plan.tasks[i].pieces) {
+                for s in [ps.m, ps.v] {
+                    let Some(s) = s else {
+                        return Err(format!("dense task {i} skipped a moment"));
+                    };
+                    if s.vals_len != p.len() || !s.writeback {
+                        return Err(format!(
+                            "dense task {i}: segment stages {} of {} elements",
+                            s.vals_len,
+                            p.len()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The staging layout is consistent with the *plan* invariants the
+/// executors rely on: a task's staged element count never exceeds its
+/// plan pieces' element count (staging introduces no duplication).
+#[test]
+fn prop_staged_vals_bounded_by_piece_elems() {
+    check("tier staging vs piece extents", 200, |g| {
+        let inp = gen_inputs(g);
+        let plan = build_plan(&inp.metas, inp.shard);
+        let tp = build_tier_plan(&plan, &inp.metas, &inp.m_states, &inp.v_states);
+        for ts in &tp.a {
+            for (ps, p) in ts.pieces.iter().zip(&plan.tasks[ts.task].pieces) {
+                for s in [ps.m, ps.v].into_iter().flatten() {
+                    // A staged f32 run is either a full per-element copy
+                    // (fp32 state) or a per-block scale run — never more
+                    // values than the piece has elements.
+                    if s.vals_len > p.len() {
+                        return Err(format!(
+                            "task {}: segment stages {} f32 values for a {}-element piece",
+                            ts.task,
+                            s.vals_len,
+                            p.len()
+                        ));
+                    }
+                    // Codes never exceed one byte per element.
+                    if s.bytes_len > p.len() {
+                        return Err(format!(
+                            "task {}: segment stages {} code bytes for a {}-element piece",
+                            ts.task,
+                            s.bytes_len,
+                            p.len()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,258 @@
+//! Tier-1 lock on the unsafe-boundary lint (`rust/src/bin/lint.rs`).
+//!
+//! Two jobs: (1) the shipped tree must be clean — this is the test that
+//! makes the lint a merge gate; (2) the lint's own behavior is locked
+//! against seeded violation trees, so a regression in the scanner (a
+//! string-masking bug, a loosened adjacency rule) fails here rather
+//! than silently letting real violations through.
+//!
+//! The lint source is included directly (same code as the `lint`
+//! binary), so the rules under test are exactly the rules CI runs.
+
+#[path = "../src/bin/lint.rs"]
+#[allow(dead_code)]
+mod lint;
+
+use lint::{run_lint, Kind, Violation, ALLOWLIST, PARENT_EXEMPT};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn shipped_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src")
+}
+
+/// Compact (file, line, kind) view for assertions.
+fn found(violations: &[Violation]) -> Vec<(String, usize, Kind)> {
+    violations
+        .iter()
+        .map(|v| (v.file.clone(), v.line, v.kind))
+        .collect()
+}
+
+/// A scratch source tree under the system temp dir, removed on drop.
+struct TempTree {
+    root: PathBuf,
+}
+
+impl TempTree {
+    fn new(name: &str) -> TempTree {
+        let root = std::env::temp_dir().join(format!("lowbit_lint_{}_{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(&root).expect("create temp tree");
+        TempTree { root }
+    }
+
+    fn write(&self, rel: &str, contents: &str) -> &TempTree {
+        let path = self.root.join(rel);
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir).expect("create module dir");
+        }
+        fs::write(path, contents).expect("write seeded file");
+        self
+    }
+}
+
+impl Drop for TempTree {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.root);
+    }
+}
+
+// ---------------------------------------------------------------------
+// The merge gate: the shipped tree passes every rule.
+
+#[test]
+fn shipped_tree_is_clean() {
+    let violations = run_lint(&shipped_root());
+    assert!(
+        violations.is_empty(),
+        "unsafe-boundary lint found violations in the shipped tree:\n{}",
+        violations
+            .iter()
+            .map(|v| format!("  {}:{}: [{:?}] {}", v.file, v.line, v.kind, v.msg))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn allowlist_and_exemptions_name_real_files() {
+    let root = shipped_root();
+    for rel in ALLOWLIST.iter().chain(PARENT_EXEMPT.iter()) {
+        assert!(
+            root.join(rel).is_file(),
+            "lint allowlist names a file that no longer exists: {rel}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Seeded violations: each rule fires where it should and only there.
+
+#[test]
+fn undocumented_unsafe_in_allowlisted_file_is_flagged() {
+    let t = TempTree::new("undoc");
+    t.write(
+        "engine/shared.rs",
+        "pub fn read(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n",
+    );
+    assert_eq!(
+        found(&run_lint(&t.root)),
+        vec![("engine/shared.rs".to_string(), 2, Kind::UndocumentedUnsafe)]
+    );
+}
+
+#[test]
+fn documented_unsafe_in_allowlisted_file_is_clean() {
+    let t = TempTree::new("doc");
+    t.write(
+        "engine/shared.rs",
+        "pub fn read(p: *const u8) -> u8 {\n    \
+         // SAFETY: caller keeps p valid.\n    unsafe { *p }\n}\n",
+    );
+    let got = run_lint(&t.root);
+    assert!(got.is_empty(), "{:?}", found(&got));
+}
+
+#[test]
+fn unsafe_outside_allowlist_is_flagged_along_with_missing_stamp() {
+    let t = TempTree::new("outside");
+    t.write(
+        "quant/extra.rs",
+        "pub fn read(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n",
+    );
+    assert_eq!(
+        found(&run_lint(&t.root)),
+        vec![
+            ("quant/extra.rs".to_string(), 1, Kind::MissingForbidStamp),
+            ("quant/extra.rs".to_string(), 2, Kind::UnsafeOutsideAllowlist),
+        ]
+    );
+}
+
+#[test]
+fn masked_tokens_never_trip_the_scanner() {
+    let t = TempTree::new("masked");
+    t.write(
+        "util/masked.rs",
+        concat!(
+            "#![forbid(unsafe_code)]\n",
+            "//! unsafe in docs is fine; so is `static mut` prose.\n",
+            "/* block comment: unsafe { transmute } static mut */\n",
+            "pub const A: &str = \"unsafe { boom }\";\n",
+            "pub const B: &str = r#\"static mut X: transmute\"#;\n",
+            "pub const C: &[u8] = b\"unsafe bytes\";\n",
+            "pub const D: char = 'u';\n",
+            "pub const E: u8 = b'x';\n",
+            "pub fn lifetimes<'a>(x: &'a str) -> &'a str { x }\n",
+            "pub fn unsafe_code_adjacent_ident() {}\n",
+        ),
+    );
+    let got = run_lint(&t.root);
+    assert!(got.is_empty(), "{:?}", found(&got));
+}
+
+#[test]
+fn static_mut_and_transmute_outside_allowlist_are_flagged() {
+    let t = TempTree::new("staticmut");
+    t.write(
+        "util/bad.rs",
+        concat!(
+            "#![forbid(unsafe_code)]\n",
+            "static mut COUNTER: u32 = 0;\n",
+            "pub fn f(x: u32) -> u32 { core::mem::transmute(x) }\n",
+        ),
+    );
+    assert_eq!(
+        found(&run_lint(&t.root)),
+        vec![
+            ("util/bad.rs".to_string(), 2, Kind::StaticMut),
+            ("util/bad.rs".to_string(), 3, Kind::Transmute),
+        ]
+    );
+}
+
+#[test]
+fn lib_rs_without_the_unsafe_op_deny_is_flagged() {
+    let t = TempTree::new("libdeny");
+    t.write("lib.rs", "pub mod util;\n");
+    assert_eq!(
+        found(&run_lint(&t.root)),
+        vec![("lib.rs".to_string(), 1, Kind::MissingLibDeny)]
+    );
+    t.write(
+        "lib.rs",
+        "#![deny(unsafe_op_in_unsafe_fn)]\npub mod util;\n",
+    );
+    let got = run_lint(&t.root);
+    assert!(got.is_empty(), "{:?}", found(&got));
+}
+
+#[test]
+fn blank_line_breaks_safety_adjacency() {
+    let t = TempTree::new("blank");
+    t.write(
+        "engine/shared.rs",
+        "pub fn read(p: *const u8) -> u8 {\n    \
+         // SAFETY: stale, no longer adjacent.\n\n    unsafe { *p }\n}\n",
+    );
+    assert_eq!(
+        found(&run_lint(&t.root)),
+        vec![("engine/shared.rs".to_string(), 4, Kind::UndocumentedUnsafe)]
+    );
+}
+
+#[test]
+fn attribute_lines_do_not_break_safety_adjacency() {
+    let t = TempTree::new("attrs");
+    t.write(
+        "engine/pool.rs",
+        concat!(
+            "/// Reads a byte.\n",
+            "///\n",
+            "/// # Safety\n",
+            "/// `p` must be valid for reads.\n",
+            "#[inline]\n",
+            "pub unsafe fn read(p: *const u8) -> u8 {\n",
+            "    // SAFETY: contract forwarded to the caller above.\n",
+            "    unsafe { *p }\n",
+            "}\n",
+        ),
+    );
+    let got = run_lint(&t.root);
+    assert!(got.is_empty(), "{:?}", found(&got));
+}
+
+#[test]
+fn missing_forbid_stamp_is_flagged_and_the_stamp_fixes_it() {
+    let t = TempTree::new("stamp");
+    t.write("exp/new_tool.rs", "pub fn f() -> u32 {\n    7\n}\n");
+    assert_eq!(
+        found(&run_lint(&t.root)),
+        vec![("exp/new_tool.rs".to_string(), 1, Kind::MissingForbidStamp)]
+    );
+    t.write(
+        "exp/new_tool.rs",
+        "#![forbid(unsafe_code)]\npub fn f() -> u32 {\n    7\n}\n",
+    );
+    let got = run_lint(&t.root);
+    assert!(got.is_empty(), "{:?}", found(&got));
+}
+
+#[test]
+fn parent_exempt_modules_skip_the_stamp_but_not_the_unsafe_ban() {
+    let t = TempTree::new("parent");
+    // No stamp required on a parent-exempt module root...
+    t.write("offload/mod.rs", "pub mod tier;\n");
+    let got = run_lint(&t.root);
+    assert!(got.is_empty(), "{:?}", found(&got));
+    // ...but unsafe inside it is still banned.
+    t.write(
+        "offload/mod.rs",
+        "pub mod tier;\npub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n",
+    );
+    assert_eq!(
+        found(&run_lint(&t.root)),
+        vec![("offload/mod.rs".to_string(), 3, Kind::UnsafeOutsideAllowlist)]
+    );
+}
