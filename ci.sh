@@ -3,10 +3,13 @@
 # bench smoke run that records the step-engine perf trajectory in
 # BENCH_engine.json.
 #
-# The test suite runs twice: once with the default engine auto-threading
-# and once with LOWBIT_ENGINE_THREADS pinned, so every auto-threaded
-# engine path (dense + compressed) is exercised at a second worker count
-# on top of the explicit 1/2/7 parity matrix.
+# The test suite runs under the default engine auto-threading, with
+# LOWBIT_ENGINE_THREADS pinned (so every auto-threaded engine path —
+# dense + compressed — is exercised at a second worker count on top of
+# the explicit 1/2/7 parity matrix), and with LOWBIT_KERNEL_TIER forced
+# to scalar (so the scalar quant-kernel tier stays covered end to end on
+# hosts where auto-dispatch resolves to AVX2 — the differential suites
+# require every tier to be bit-identical).
 #
 # BENCH_engine.json, BENCH_offload.json and BENCH_quant.json are
 # *appended to*, one run object per CI invocation (dense + compressed
@@ -27,6 +30,9 @@ cargo test -q
 
 echo "== cargo test -q (engine threads pinned to 7)"
 LOWBIT_ENGINE_THREADS=7 cargo test -q
+
+echo "== cargo test -q (kernel tier forced to scalar)"
+LOWBIT_KERNEL_TIER=scalar cargo test -q
 
 echo "== cargo test -q --features audit (aliasing auditor on)"
 cargo test -q --features audit

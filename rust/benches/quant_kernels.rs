@@ -1,9 +1,11 @@
 //! Bench: nibble-granular quant kernel throughput (PR 5) — fused
 //! normalize→encode→pack, pair-LUT decode, and the full roundtrip, in
 //! Melem/s per paper preset. This is the layer every optimizer step's
-//! inner loops run on (`quant/kernels.rs`), so its trajectory is tracked
-//! in BENCH_quant.json the way the step engine's is in
-//! BENCH_engine.json.
+//! inner loops run on (the `quant/kernels` tier), so its trajectory is
+//! tracked in BENCH_quant.json the way the step engine's is in
+//! BENCH_engine.json. Each run records the resolved kernel tier
+//! (scalar/avx2) — numbers are only comparable within a tier; force one
+//! with `LOWBIT_KERNEL_TIER=scalar|avx2`.
 //!
 //! Flags:
 //!   --smoke        short measurement windows (CI)
@@ -12,7 +14,7 @@
 mod bench_util;
 
 use bench_util::{append_bench_run, bench, section};
-use lowbit_opt::quant::{MapKind, NormKind, Quantizer};
+use lowbit_opt::quant::{active_tier, MapKind, NormKind, Quantizer};
 use lowbit_opt::tensor::Tensor;
 use lowbit_opt::util::json::Json;
 use lowbit_opt::util::rng::Pcg64;
@@ -52,7 +54,10 @@ fn main() {
     ];
 
     let mut results: Vec<(String, f64, f64, f64)> = Vec::new();
-    section("fused encode / pair-LUT decode / roundtrip (1M elements)");
+    section(&format!(
+        "fused encode / pair-LUT decode / roundtrip (1M elements, {} tier)",
+        active_tier().name()
+    ));
     for (name, q, use_1d) in &cases {
         let x = if *use_1d { &x1d } else { &x2d };
         let map = q.build_map();
@@ -85,6 +90,7 @@ fn main() {
     if let Some(path) = json_path {
         let mut run = Json::obj();
         run.set("bench", Json::Str("quant_kernels".to_string()));
+        run.set("tier", Json::Str(active_tier().name().to_string()));
         run.set("elems", Json::Num(n as f64));
         run.set("smoke", Json::Bool(smoke));
         let mut by_case = Json::obj();

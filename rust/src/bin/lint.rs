@@ -5,7 +5,8 @@
 //!
 //! * `unsafe` (blocks, fns, impls) is allowed only in the explicit
 //!   [`ALLOWLIST`] of modules — the engine executors, the offload
-//!   staging layer and checkpoint byte packing;
+//!   staging layer, checkpoint byte packing and the SIMD quant-kernel
+//!   tier;
 //! * every `unsafe` token in an allowlisted file must carry an adjacent
 //!   `// SAFETY:` comment (or a `# Safety` doc section for `unsafe fn`
 //!   declarations) on the same line or the directly preceding
@@ -41,6 +42,7 @@ pub const ALLOWLIST: &[&str] = &[
     "engine/shared.rs",
     "offload/pipeline.rs",
     "offload/tier.rs",
+    "quant/kernels/avx2.rs",
     "train/checkpoint.rs",
 ];
 
@@ -48,7 +50,13 @@ pub const ALLOWLIST: &[&str] = &[
 /// `#![forbid(unsafe_code)]` stamp would propagate down and break the
 /// children, so these are exempt from the stamp — but must themselves
 /// contain zero `unsafe`.
-pub const PARENT_EXEMPT: &[&str] = &["lib.rs", "offload/mod.rs", "train/mod.rs"];
+pub const PARENT_EXEMPT: &[&str] = &[
+    "lib.rs",
+    "offload/mod.rs",
+    "quant/kernels/mod.rs",
+    "quant/mod.rs",
+    "train/mod.rs",
+];
 
 pub const FORBID_STAMP: &str = "#![forbid(unsafe_code)]";
 pub const LIB_DENY: &str = "#![deny(unsafe_op_in_unsafe_fn)]";

@@ -1114,8 +1114,13 @@ fn phase_a_piece(
 }
 
 /// Phase C for one piece: re-derive updated state values from the old
-/// codes + gradient via the shared [`decode_ema_piece`] kernel and
-/// encode against the reduced global scales into the double buffers.
+/// codes + gradient and encode against the reduced global scales into
+/// the double buffers. The hot arm is the fused in-place
+/// [`Quantizer::ema_reencode_range`] pass (§Perf: old bytes are copied
+/// into the fresh buffer and decoded → EMA'd → re-encoded byte-by-byte
+/// through the kernel tier, no f32 staging); layouts it rejects fall
+/// back to the unfused [`decode_ema_piece`] + range-encode pair, which
+/// it matches bit for bit — packed bytes and RNG draws alike.
 fn phase_c_piece(
     piece: &Piece,
     ctxs: &[TensorCtx<'_>],
@@ -1139,22 +1144,27 @@ fn phase_c_piece(
     } = &tc.m
     {
         let (b0, b1) = packed_range(q.bits, lo, hi);
-        decode_ema_piece(
-            q.bits,
-            map,
-            &old.packed[b0..b1],
-            &old.scales,
-            lo,
-            tc.shape,
-            g,
-            hp.beta1,
-            false,
-            sm,
-        );
         let scales = new_scales[*buf].as_ref().expect("reduced m scales");
         // SAFETY: byte-aligned disjoint shard ranges of the fresh buffer.
         let dst = unsafe { new_packed.range_mut(b0, b1) };
-        q.encode_range_with_scales(map, &sm[..len], lo, tc.shape, scales, dst, rng);
+        dst.copy_from_slice(&old.packed[b0..b1]);
+        if !q.ema_reencode_range(
+            map, dst, lo, tc.shape, &old.scales, scales, g, hp.beta1, false, rng,
+        ) {
+            decode_ema_piece(
+                q.bits,
+                map,
+                &old.packed[b0..b1],
+                &old.scales,
+                lo,
+                tc.shape,
+                g,
+                hp.beta1,
+                false,
+                sm,
+            );
+            q.encode_range_with_scales(map, &sm[..len], lo, tc.shape, scales, dst, rng);
+        }
     }
 
     if let VRoute::Global {
@@ -1166,21 +1176,26 @@ fn phase_c_piece(
     } = &tc.v
     {
         let (b0, b1) = packed_range(q.bits, lo, hi);
-        decode_ema_piece(
-            q.bits,
-            map,
-            &old.packed[b0..b1],
-            &old.scales,
-            lo,
-            tc.shape,
-            g,
-            hp.beta2,
-            true,
-            sv,
-        );
         let scales = new_scales[*buf].as_ref().expect("reduced v scales");
         // SAFETY: byte-aligned disjoint shard ranges of the fresh buffer.
         let dst = unsafe { new_packed.range_mut(b0, b1) };
-        q.encode_range_with_scales(map, &sv[..len], lo, tc.shape, scales, dst, rng);
+        dst.copy_from_slice(&old.packed[b0..b1]);
+        if !q.ema_reencode_range(
+            map, dst, lo, tc.shape, &old.scales, scales, g, hp.beta2, true, rng,
+        ) {
+            decode_ema_piece(
+                q.bits,
+                map,
+                &old.packed[b0..b1],
+                &old.scales,
+                lo,
+                tc.shape,
+                g,
+                hp.beta2,
+                true,
+                sv,
+            );
+            q.encode_range_with_scales(map, &sv[..len], lo, tc.shape, scales, dst, rng);
+        }
     }
 }

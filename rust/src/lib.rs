@@ -16,10 +16,12 @@
 //! # The unsafe boundary
 //!
 //! `unsafe` is confined to an explicit allowlist of modules (the engine
-//! executors, the offload staging layer, checkpoint byte packing) and
-//! every other module carries `#![forbid(unsafe_code)]`. The allowlist,
-//! SAFETY-comment coverage and the stamps are enforced mechanically by
-//! `rust/src/bin/lint.rs` (tier-1 test `unsafe_lint`), and the
+//! executors, the offload staging layer, checkpoint byte packing, and
+//! the AVX2 quant-kernel tier `quant/kernels/avx2.rs` — SIMD intrinsics
+//! behind safe wrappers, runtime-dispatched and bit-identical to the
+//! scalar tier); every other module carries `#![forbid(unsafe_code)]`.
+//! The allowlist, SAFETY-comment coverage and the stamps are enforced
+//! mechanically by `rust/src/bin/lint.rs` (tier-1 test `unsafe_lint`), and the
 //! engine's disjointness contract is checked at runtime by the
 //! aliasing auditor (`--features audit`, see `engine::audit`).
 

@@ -492,65 +492,59 @@ pub fn compressed_offloaded_step(
                         (&m_hosts[piece.tensor], &ps.m)
                     {
                         let map = sp.m_map.expect("cached m map exists for quantized m");
-                        {
-                            // SAFETY: exclusive slot; this shared view
-                            // dies before the re-encode view below.
-                            let old: &[u8] = unsafe {
-                                sb.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len)
-                            };
-                            decode_ema_piece(
-                                q.bits, map, old, scales, lo, tc.shape, g, hp.beta1, false,
-                                &mut scratch.m,
-                            );
-                        }
                         let new_sc = new_scales_ref[m_buf_of[piece.tensor]]
                             .as_ref()
                             .expect("reduced m scales");
                         let (d0, d1) = (seg.bytes_off, seg.bytes_off + seg.bytes_len);
-                        // SAFETY: exclusive slot; in-place re-encode
-                        // strictly after the decode completed.
+                        // SAFETY: exclusive slot (dependency discipline);
+                        // the staged old codes are re-encoded in place.
                         let dst = unsafe { sb.range_mut(d0, d1) };
-                        q.encode_range_with_scales(
-                            map,
-                            &scratch.m[..hi - lo],
-                            lo,
-                            tc.shape,
-                            new_sc,
-                            dst,
-                            &mut rng,
-                        );
+                        if !q.ema_reencode_range(
+                            map, dst, lo, tc.shape, scales, new_sc, g, hp.beta1, false, &mut rng,
+                        ) {
+                            decode_ema_piece(
+                                q.bits, map, dst, scales, lo, tc.shape, g, hp.beta1, false,
+                                &mut scratch.m,
+                            );
+                            q.encode_range_with_scales(
+                                map,
+                                &scratch.m[..hi - lo],
+                                lo,
+                                tc.shape,
+                                new_sc,
+                                dst,
+                                &mut rng,
+                            );
+                        }
                     }
                     if let (tier::HostMoment::Global { q, scales, .. }, Some(seg)) =
                         (&v_hosts[piece.tensor], &ps.v)
                     {
                         let map = v_map_of(sp, tc.shape.len());
-                        {
-                            // SAFETY: exclusive slot; shared view dies
-                            // before the re-encode view below.
-                            let old: &[u8] = unsafe {
-                                sb.range_mut(seg.bytes_off, seg.bytes_off + seg.bytes_len)
-                            };
-                            decode_ema_piece(
-                                q.bits, map, old, scales, lo, tc.shape, g, hp.beta2, true,
-                                &mut scratch.v,
-                            );
-                        }
                         let new_sc = new_scales_ref[v_buf_of[piece.tensor]]
                             .as_ref()
                             .expect("reduced v scales");
                         let (d0, d1) = (seg.bytes_off, seg.bytes_off + seg.bytes_len);
-                        // SAFETY: exclusive slot; in-place re-encode
-                        // strictly after the decode completed.
+                        // SAFETY: exclusive slot (dependency discipline);
+                        // the staged old codes are re-encoded in place.
                         let dst = unsafe { sb.range_mut(d0, d1) };
-                        q.encode_range_with_scales(
-                            map,
-                            &scratch.v[..hi - lo],
-                            lo,
-                            tc.shape,
-                            new_sc,
-                            dst,
-                            &mut rng,
-                        );
+                        if !q.ema_reencode_range(
+                            map, dst, lo, tc.shape, scales, new_sc, g, hp.beta2, true, &mut rng,
+                        ) {
+                            decode_ema_piece(
+                                q.bits, map, dst, scales, lo, tc.shape, g, hp.beta2, true,
+                                &mut scratch.v,
+                            );
+                            q.encode_range_with_scales(
+                                map,
+                                &scratch.v[..hi - lo],
+                                lo,
+                                tc.shape,
+                                new_sc,
+                                dst,
+                                &mut rng,
+                            );
+                        }
                     }
                 }
             };

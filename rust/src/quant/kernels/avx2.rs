@@ -1,0 +1,902 @@
+//! AVX2 kernel tier: 256-bit SIMD implementations of the 4-bit run
+//! kernels, bit-identical to the [`scalar`] tier (the dispatch tests and
+//! `rust/tests/quant_tiers.rs` pin every arm, adversarial floats
+//! included).
+//!
+//! Exactness is structural, not approximate: every lane operation here
+//! is IEEE-identical to the scalar expression it replaces — table
+//! lookups (`vpermps` nibble shuffle ≡ the pair LUT), `vdivps`/`vmulps`/
+//! `vaddps` (correctly rounded, same association as the scalar code,
+//! never contracted into FMA), ordered-quiet compares (≡ Rust `f32`
+//! `<`/`==`/`>`), and `vminps` (returns the second operand when the
+//! compare fails, exactly the `if a < b { a } else { b }` combiner).
+//! Encode is the same `#{mid < n}` midpoint partition the oracle runs,
+//! evaluated as 15 broadcast compares over the `+inf`-padded `mid16`
+//! table; stochastic rounding evaluates the bracket `(#{v < n}, #{v ==
+//! n})` counts in lanes and then draws per element *in element order*,
+//! so the RNG stream is draw-for-draw the scalar one.
+//!
+//! Non-4-bit widths, short runs, and the stochastic fused-EMA arm
+//! delegate to the scalar tier — same contract, nothing to prove.
+
+// Older toolchains require explicit `unsafe {}` blocks inside these
+// `unsafe fn` bodies under `deny(unsafe_op_in_unsafe_fn)`; newer ones
+// consider some of those blocks redundant once `target_feature` makes
+// the intrinsics callable. Tolerate both so the pinned toolchain can
+// move without touching this file.
+#![allow(unused_unsafe)]
+
+use std::arch::x86_64::*;
+
+use super::super::mapping::QuantMap;
+use super::{ema, scalar, set_hi, set_lo, smin, QuantKernels};
+use crate::util::rng::Pcg64;
+
+/// Below this many elements the vector setup (table broadcasts, edge
+/// handling) costs more than it saves; the scalar tier takes the run.
+const VEC_MIN: usize = 32;
+
+// ---------------------------------------------------------------------
+// Safe wrappers — the tier's public surface, signature-compatible with
+// `scalar` so the dispatcher and the non-x86 module alias line up.
+// ---------------------------------------------------------------------
+
+/// AVX2 [`super::decode_run_scaled`].
+pub fn decode_run_scaled(
+    map: &QuantMap,
+    bits: u8,
+    packed: &[u8],
+    pos0: usize,
+    s: f32,
+    out: &mut [f32],
+) {
+    if bits != 4 || out.len() < VEC_MIN {
+        return scalar::decode_run_scaled(map, bits, packed, pos0, s, out);
+    }
+    // SAFETY: this tier is only dispatched (or directly invoked by the
+    // differential tests) when `is_x86_feature_detected!("avx2")` holds,
+    // satisfying the inner fn's target-feature contract.
+    unsafe { decode_run_scaled_v(map.kernels(), packed, pos0, s, out) }
+}
+
+/// AVX2 [`super::decode_rank1_row`].
+pub fn decode_rank1_row(
+    map: &QuantMap,
+    bits: u8,
+    packed: &[u8],
+    pos0: usize,
+    ri: f32,
+    cseg: &[f32],
+    out: &mut [f32],
+) {
+    if bits != 4 || out.len() < VEC_MIN {
+        return scalar::decode_rank1_row(map, bits, packed, pos0, ri, cseg, out);
+    }
+    // SAFETY: AVX2 verified by the dispatcher (see decode_run_scaled).
+    unsafe { decode_rank1_row_v(map.kernels(), packed, pos0, ri, cseg, out) }
+}
+
+/// AVX2 [`super::encode_run_scaled`].
+pub fn encode_run_scaled(
+    map: &QuantMap,
+    bits: u8,
+    vals: &[f32],
+    s: f32,
+    pos0: usize,
+    dst: &mut [u8],
+) {
+    if bits != 4 || vals.len() < VEC_MIN {
+        return scalar::encode_run_scaled(map, bits, vals, s, pos0, dst);
+    }
+    // SAFETY: AVX2 verified by the dispatcher (see decode_run_scaled).
+    unsafe { encode_run_scaled_v(map.kernels(), vals, s, pos0, dst) }
+}
+
+/// AVX2 [`super::encode_rank1_row`].
+pub fn encode_rank1_row(
+    map: &QuantMap,
+    bits: u8,
+    vals: &[f32],
+    ri: f32,
+    cseg: &[f32],
+    pos0: usize,
+    dst: &mut [u8],
+) {
+    if bits != 4 || vals.len() < VEC_MIN {
+        return scalar::encode_rank1_row(map, bits, vals, ri, cseg, pos0, dst);
+    }
+    // SAFETY: AVX2 verified by the dispatcher (see decode_run_scaled).
+    unsafe { encode_rank1_row_v(map.kernels(), vals, ri, cseg, pos0, dst) }
+}
+
+/// AVX2 [`super::encode_sr_run_scaled`].
+#[allow(clippy::too_many_arguments)]
+pub fn encode_sr_run_scaled(
+    map: &QuantMap,
+    bits: u8,
+    vals: &[f32],
+    s: f32,
+    pos0: usize,
+    dst: &mut [u8],
+    rng: &mut Pcg64,
+) {
+    if bits != 4 || vals.len() < VEC_MIN {
+        return scalar::encode_sr_run_scaled(map, bits, vals, s, pos0, dst, rng);
+    }
+    // SAFETY: AVX2 verified by the dispatcher (see decode_run_scaled).
+    unsafe { encode_sr_run_scaled_v(map, vals, s, pos0, dst, rng) }
+}
+
+/// AVX2 [`super::encode_sr_rank1_row`].
+#[allow(clippy::too_many_arguments)]
+pub fn encode_sr_rank1_row(
+    map: &QuantMap,
+    bits: u8,
+    vals: &[f32],
+    ri: f32,
+    cseg: &[f32],
+    pos0: usize,
+    dst: &mut [u8],
+    rng: &mut Pcg64,
+) {
+    if bits != 4 || vals.len() < VEC_MIN {
+        return scalar::encode_sr_rank1_row(map, bits, vals, ri, cseg, pos0, dst, rng);
+    }
+    // SAFETY: AVX2 verified by the dispatcher (see decode_run_scaled).
+    unsafe { encode_sr_rank1_row_v(map, vals, ri, cseg, pos0, dst, rng) }
+}
+
+/// AVX2 [`super::ema_reencode_run_scaled`]. The stochastic arm delegates
+/// to the scalar tier (the draw serializes the loop anyway).
+#[allow(clippy::too_many_arguments)]
+pub fn ema_reencode_run_scaled(
+    map: &QuantMap,
+    bits: u8,
+    packed: &mut [u8],
+    pos0: usize,
+    old_s: f32,
+    new_s: f32,
+    g: &[f32],
+    beta: f32,
+    second: bool,
+    stochastic: bool,
+    rng: &mut Pcg64,
+) {
+    if bits != 4 || stochastic || g.len() < VEC_MIN {
+        return scalar::ema_reencode_run_scaled(
+            map, bits, packed, pos0, old_s, new_s, g, beta, second, stochastic, rng,
+        );
+    }
+    // SAFETY: AVX2 verified by the dispatcher (see decode_run_scaled).
+    unsafe { ema_run_v(map.kernels(), packed, pos0, old_s, new_s, g, beta, second) }
+}
+
+/// AVX2 [`super::ema_reencode_rank1_row`]. The stochastic arm delegates
+/// to the scalar tier.
+#[allow(clippy::too_many_arguments)]
+pub fn ema_reencode_rank1_row(
+    map: &QuantMap,
+    bits: u8,
+    packed: &mut [u8],
+    pos0: usize,
+    old_ri: f32,
+    old_cseg: &[f32],
+    new_ri: f32,
+    new_cseg: &[f32],
+    g: &[f32],
+    beta: f32,
+    second: bool,
+    stochastic: bool,
+    rng: &mut Pcg64,
+) {
+    if bits != 4 || stochastic || g.len() < VEC_MIN {
+        return scalar::ema_reencode_rank1_row(
+            map, bits, packed, pos0, old_ri, old_cseg, new_ri, new_cseg, g, beta, second,
+            stochastic, rng,
+        );
+    }
+    // SAFETY: AVX2 verified by the dispatcher (see decode_run_scaled).
+    unsafe {
+        ema_rank1_v(
+            map.kernels(),
+            packed,
+            pos0,
+            old_ri,
+            old_cseg,
+            new_ri,
+            new_cseg,
+            g,
+            beta,
+            second,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Register helpers.
+// ---------------------------------------------------------------------
+
+/// Unpack 8 packed bytes into their 16 nibble codes, in element order:
+/// the first returned register holds elements 0..8 as `u32` lanes, the
+/// second elements 8..16.
+///
+/// # Safety
+/// AVX2 must be available and `ptr` must point at 8 readable bytes.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn unpack16(ptr: *const u8) -> (__m256i, __m256i) {
+    // SAFETY: caller contract — AVX2 enabled, 8 bytes readable at `ptr`;
+    // everything else is register-only.
+    unsafe {
+        let w = _mm256_cvtepu8_epi32(_mm_loadl_epi64(ptr as *const __m128i));
+        let lo = _mm256_and_si256(w, _mm256_set1_epi32(0x0F));
+        let hi = _mm256_srli_epi32::<4>(w);
+        // Interleave low/high nibbles back into element order: byte k
+        // holds elements 2k (low nibble) and 2k+1 (high nibble).
+        let a = _mm256_unpacklo_epi32(lo, hi);
+        let c = _mm256_unpackhi_epi32(lo, hi);
+        (
+            _mm256_permute2x128_si256::<0x20>(a, c),
+            _mm256_permute2x128_si256::<0x31>(a, c),
+        )
+    }
+}
+
+/// 16-entry f32 table lookup: two 8-lane `vpermps` gathers selected by
+/// bit 3 of each index (moved to the lane sign for `vblendvps`).
+///
+/// # Safety
+/// AVX2 must be available. Index lanes must be in `0..16`.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn lookup16(tbl_lo: __m256, tbl_hi: __m256, idx: __m256i) -> __m256 {
+    // SAFETY: caller contract — AVX2 enabled; register-only ops.
+    unsafe {
+        let t0 = _mm256_permutevar8x32_ps(tbl_lo, idx);
+        let t1 = _mm256_permutevar8x32_ps(tbl_hi, idx);
+        let sel = _mm256_castsi256_ps(_mm256_slli_epi32::<28>(idx));
+        _mm256_blendv_ps(t0, t1, sel)
+    }
+}
+
+/// 8-lane nearest-code encode: the oracle's `#{mid < n}` partition as 15
+/// broadcast compares over the `+inf`-padded midpoint table (`+inf`
+/// lanes never count; NaN input counts nothing and encodes to 0, exactly
+/// like the scalar oracle).
+///
+/// # Safety
+/// AVX2 must be available.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn encode8(mid16: &[f32; 16], n: __m256) -> __m256i {
+    // SAFETY: caller contract — AVX2 enabled; register-only ops.
+    unsafe {
+        let mut cnt = _mm256_setzero_si256();
+        for &m in mid16.iter().take(15) {
+            let lt = _mm256_cmp_ps::<_CMP_LT_OQ>(_mm256_set1_ps(m), n);
+            cnt = _mm256_sub_epi32(cnt, _mm256_castps_si256(lt));
+        }
+        cnt
+    }
+}
+
+/// Pack 16 code lanes (two 8-lane registers, element order) into 8
+/// bytes, low nibble first.
+///
+/// # Safety
+/// AVX2 must be available and `dst` must point at 8 writable bytes.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn pack16(c0: __m256i, c1: __m256i, dst: *mut u8) {
+    // SAFETY: caller contract — AVX2 enabled, 8 bytes writable at `dst`;
+    // the spills land in local arrays of exactly 8 lanes.
+    unsafe {
+        let mut a = [0u32; 8];
+        let mut b = [0u32; 8];
+        _mm256_storeu_si256(a.as_mut_ptr() as *mut __m256i, c0);
+        _mm256_storeu_si256(b.as_mut_ptr() as *mut __m256i, c1);
+        for j in 0..4 {
+            *dst.add(j) = (a[2 * j] as u8) | ((a[2 * j + 1] as u8) << 4);
+            *dst.add(4 + j) = (b[2 * j] as u8) | ((b[2 * j + 1] as u8) << 4);
+        }
+    }
+}
+
+/// The stochastic-rounding per-lane decision, fed by the vector bracket
+/// counts `c = #{values < n}` and `e = #{values == n}`: reproduces
+/// `QuantMap::bracket` + the `encode_stochastic` draw exactly —
+/// degenerate brackets (NaN or `n` at/beyond an end: `c == 0` or
+/// `c >= len`; exact hits: `e > 0`) consume no draw.
+#[inline]
+fn sr_pick(k: &QuantKernels, n: f32, c: u32, e: u32, rng: &mut Pcg64) -> u8 {
+    let len = k.n_codes as u32;
+    if c == 0 {
+        0
+    } else if c >= len {
+        (len - 1) as u8
+    } else if e > 0 {
+        c as u8
+    } else {
+        let lo = (c - 1) as usize;
+        let hi = c as usize;
+        let a = k.val16[lo];
+        let b = k.val16[hi];
+        let p_hi = (n - a) / (b - a);
+        if rng.next_f32() < p_hi {
+            hi as u8
+        } else {
+            lo as u8
+        }
+    }
+}
+
+/// 8-lane bracket counts over the `+inf`-padded value table. For
+/// `n = +inf` the pad lanes' `+inf == +inf` overcount of `e` is
+/// harmless: `c >= len` already decides that lane in [`sr_pick`].
+///
+/// # Safety
+/// AVX2 must be available.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn sr_counts(vlt16: &[f32; 16], n: __m256) -> (__m256i, __m256i) {
+    // SAFETY: caller contract — AVX2 enabled; register-only ops.
+    unsafe {
+        let mut c = _mm256_setzero_si256();
+        let mut e = _mm256_setzero_si256();
+        for &v in vlt16.iter() {
+            let vv = _mm256_set1_ps(v);
+            c = _mm256_sub_epi32(c, _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(vv, n)));
+            e = _mm256_sub_epi32(e, _mm256_castps_si256(_mm256_cmp_ps::<_CMP_EQ_OQ>(vv, n)));
+        }
+        (c, e)
+    }
+}
+
+// ---------------------------------------------------------------------
+// 4-bit vector kernels. Shape shared by all of them: a (possibly odd)
+// lead nibble and tail nibble handled with the exact scalar-tier
+// expressions, whole-byte groups of 8 (16 elements) in vector registers,
+// and a scalar-tier remainder of fewer than 8 bytes in between.
+// ---------------------------------------------------------------------
+
+/// # Safety
+/// AVX2 must be available; slice geometry as in the scalar tier (packed
+/// covers positions `0..pos0 + out.len()`).
+#[target_feature(enable = "avx2")]
+unsafe fn decode_run_scaled_v(
+    k: &QuantKernels,
+    packed: &[u8],
+    pos0: usize,
+    s: f32,
+    out: &mut [f32],
+) {
+    // SAFETY: target feature per caller contract; all pointer arithmetic
+    // stays inside `packed` / `out` — the group loop runs while
+    // `p + 8 <= pairs`, and `byte0 + pairs` bytes / `o + 2*pairs` floats
+    // are in bounds by the run geometry.
+    unsafe {
+        let mut pos = pos0;
+        let mut o = 0usize;
+        if pos % 2 == 1 {
+            out[0] = k.decode_byte(packed[pos / 2] >> 4) * s;
+            pos += 1;
+            o = 1;
+        }
+        let pairs = (out.len() - o) / 2;
+        let byte0 = pos / 2;
+        let tbl_lo = _mm256_loadu_ps(k.val16.as_ptr());
+        let tbl_hi = _mm256_loadu_ps(k.val16.as_ptr().add(8));
+        let vs = _mm256_set1_ps(s);
+        let mut p = 0usize;
+        while p + 8 <= pairs {
+            let (i0, i1) = unpack16(packed.as_ptr().add(byte0 + p));
+            let v0 = _mm256_mul_ps(lookup16(tbl_lo, tbl_hi, i0), vs);
+            let v1 = _mm256_mul_ps(lookup16(tbl_lo, tbl_hi, i1), vs);
+            _mm256_storeu_ps(out.as_mut_ptr().add(o + 2 * p), v0);
+            _mm256_storeu_ps(out.as_mut_ptr().add(o + 2 * p + 8), v1);
+            p += 8;
+        }
+        for q in p..pairs {
+            let pv = k.decode_pair(packed[byte0 + q]);
+            out[o + 2 * q] = pv[0] * s;
+            out[o + 2 * q + 1] = pv[1] * s;
+        }
+        if o + 2 * pairs < out.len() {
+            let last = out.len() - 1;
+            out[last] = k.decode_byte(packed[(pos0 + last) / 2] & 0x0F) * s;
+        }
+    }
+}
+
+/// # Safety
+/// AVX2 must be available; `cseg.len() == out.len()`.
+#[target_feature(enable = "avx2")]
+unsafe fn decode_rank1_row_v(
+    k: &QuantKernels,
+    packed: &[u8],
+    pos0: usize,
+    ri: f32,
+    cseg: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(cseg.len(), out.len());
+    // SAFETY: target feature per caller contract; pointer arithmetic
+    // bounded exactly as in decode_run_scaled_v (cseg walks in lockstep
+    // with out).
+    unsafe {
+        let mut pos = pos0;
+        let mut o = 0usize;
+        if pos % 2 == 1 {
+            out[0] = k.decode_byte(packed[pos / 2] >> 4) * smin(ri, cseg[0]);
+            pos += 1;
+            o = 1;
+        }
+        let pairs = (out.len() - o) / 2;
+        let byte0 = pos / 2;
+        let tbl_lo = _mm256_loadu_ps(k.val16.as_ptr());
+        let tbl_hi = _mm256_loadu_ps(k.val16.as_ptr().add(8));
+        let vri = _mm256_set1_ps(ri);
+        let mut p = 0usize;
+        while p + 8 <= pairs {
+            let (i0, i1) = unpack16(packed.as_ptr().add(byte0 + p));
+            // vminps(a, b) = if a < b { a } else { b } — the scalar smin.
+            let s0 = _mm256_min_ps(vri, _mm256_loadu_ps(cseg.as_ptr().add(o + 2 * p)));
+            let s1 = _mm256_min_ps(vri, _mm256_loadu_ps(cseg.as_ptr().add(o + 2 * p + 8)));
+            let v0 = _mm256_mul_ps(lookup16(tbl_lo, tbl_hi, i0), s0);
+            let v1 = _mm256_mul_ps(lookup16(tbl_lo, tbl_hi, i1), s1);
+            _mm256_storeu_ps(out.as_mut_ptr().add(o + 2 * p), v0);
+            _mm256_storeu_ps(out.as_mut_ptr().add(o + 2 * p + 8), v1);
+            p += 8;
+        }
+        for q in p..pairs {
+            let pv = k.decode_pair(packed[byte0 + q]);
+            out[o + 2 * q] = pv[0] * smin(ri, cseg[o + 2 * q]);
+            out[o + 2 * q + 1] = pv[1] * smin(ri, cseg[o + 2 * q + 1]);
+        }
+        if o + 2 * pairs < out.len() {
+            let last = out.len() - 1;
+            out[last] = k.decode_byte(packed[(pos0 + last) / 2] & 0x0F) * smin(ri, cseg[last]);
+        }
+    }
+}
+
+/// # Safety
+/// AVX2 must be available; `dst` covers positions `0..pos0 + vals.len()`.
+#[target_feature(enable = "avx2")]
+unsafe fn encode_run_scaled_v(
+    k: &QuantKernels,
+    vals: &[f32],
+    s: f32,
+    pos0: usize,
+    dst: &mut [u8],
+) {
+    debug_assert!(s > 0.0, "zero-scale runs take encode_run_zero");
+    // SAFETY: target feature per caller contract; loads read 8 floats at
+    // `i + 2p (+8)` with `p + 8 <= pairs`, stores write the 8 bytes at
+    // `byte0 + p` — all inside the slices by the run geometry.
+    unsafe {
+        let mut pos = pos0;
+        let mut i = 0usize;
+        if pos % 2 == 1 {
+            set_hi(&mut dst[pos / 2], k.encode(vals[0] / s));
+            pos += 1;
+            i = 1;
+        }
+        let pairs = (vals.len() - i) / 2;
+        let byte0 = pos / 2;
+        let vs = _mm256_set1_ps(s);
+        let mut p = 0usize;
+        while p + 8 <= pairs {
+            let n0 = _mm256_div_ps(_mm256_loadu_ps(vals.as_ptr().add(i + 2 * p)), vs);
+            let n1 = _mm256_div_ps(_mm256_loadu_ps(vals.as_ptr().add(i + 2 * p + 8)), vs);
+            let c0 = encode8(&k.mid16, n0);
+            let c1 = encode8(&k.mid16, n1);
+            pack16(c0, c1, dst.as_mut_ptr().add(byte0 + p));
+            p += 8;
+        }
+        for q in p..pairs {
+            let c0 = k.encode(vals[i + 2 * q] / s);
+            let c1 = k.encode(vals[i + 2 * q + 1] / s);
+            dst[byte0 + q] = c0 | (c1 << 4);
+        }
+        if i + 2 * pairs < vals.len() {
+            let last = vals.len() - 1;
+            set_lo(&mut dst[(pos0 + last) / 2], k.encode(vals[last] / s));
+        }
+    }
+}
+
+/// 8-lane rank-1 normalize: `v / min(ri, c)` where the combined scale is
+/// positive, else a literal 0.0 (the masked-out division lanes may
+/// produce inf/NaN and are discarded by the blend).
+///
+/// # Safety
+/// AVX2 must be available.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn norm8(v: __m256, vri: __m256, c: __m256) -> __m256 {
+    // SAFETY: caller contract — AVX2 enabled; register-only ops.
+    unsafe {
+        let sv = _mm256_min_ps(vri, c);
+        let zero = _mm256_setzero_ps();
+        let mask = _mm256_cmp_ps::<_CMP_GT_OQ>(sv, zero);
+        _mm256_blendv_ps(zero, _mm256_div_ps(v, sv), mask)
+    }
+}
+
+/// # Safety
+/// AVX2 must be available; `cseg.len() == vals.len()`; `dst` covers
+/// positions `0..pos0 + vals.len()`.
+#[target_feature(enable = "avx2")]
+unsafe fn encode_rank1_row_v(
+    k: &QuantKernels,
+    vals: &[f32],
+    ri: f32,
+    cseg: &[f32],
+    pos0: usize,
+    dst: &mut [u8],
+) {
+    debug_assert_eq!(cseg.len(), vals.len());
+    // SAFETY: target feature per caller contract; bounds as in
+    // encode_run_scaled_v, with cseg walking in lockstep with vals.
+    unsafe {
+        let mut pos = pos0;
+        let mut i = 0usize;
+        if pos % 2 == 1 {
+            set_hi(&mut dst[pos / 2], k.encode(norm1(vals[0], ri, cseg[0])));
+            pos += 1;
+            i = 1;
+        }
+        let pairs = (vals.len() - i) / 2;
+        let byte0 = pos / 2;
+        let vri = _mm256_set1_ps(ri);
+        let mut p = 0usize;
+        while p + 8 <= pairs {
+            let n0 = norm8(
+                _mm256_loadu_ps(vals.as_ptr().add(i + 2 * p)),
+                vri,
+                _mm256_loadu_ps(cseg.as_ptr().add(i + 2 * p)),
+            );
+            let n1 = norm8(
+                _mm256_loadu_ps(vals.as_ptr().add(i + 2 * p + 8)),
+                vri,
+                _mm256_loadu_ps(cseg.as_ptr().add(i + 2 * p + 8)),
+            );
+            let c0 = encode8(&k.mid16, n0);
+            let c1 = encode8(&k.mid16, n1);
+            pack16(c0, c1, dst.as_mut_ptr().add(byte0 + p));
+            p += 8;
+        }
+        for q in p..pairs {
+            let c0 = k.encode(norm1(vals[i + 2 * q], ri, cseg[i + 2 * q]));
+            let c1 = k.encode(norm1(vals[i + 2 * q + 1], ri, cseg[i + 2 * q + 1]));
+            dst[byte0 + q] = c0 | (c1 << 4);
+        }
+        if i + 2 * pairs < vals.len() {
+            let last = vals.len() - 1;
+            set_lo(&mut dst[(pos0 + last) / 2], k.encode(norm1(vals[last], ri, cseg[last])));
+        }
+    }
+}
+
+/// Scalar rank-1 normalize for the edge elements (mirrors the scalar
+/// tier's `norm`).
+#[inline(always)]
+fn norm1(v: f32, ri: f32, cj: f32) -> f32 {
+    let s = smin(ri, cj);
+    if s > 0.0 {
+        v / s
+    } else {
+        0.0
+    }
+}
+
+/// # Safety
+/// AVX2 must be available; `dst` covers positions `0..pos0 + vals.len()`.
+#[target_feature(enable = "avx2")]
+unsafe fn encode_sr_run_scaled_v(
+    map: &QuantMap,
+    vals: &[f32],
+    s: f32,
+    pos0: usize,
+    dst: &mut [u8],
+    rng: &mut Pcg64,
+) {
+    use super::super::stochastic::encode_stochastic;
+    debug_assert!(s > 0.0, "zero-scale runs take encode_run_zero");
+    let k = map.kernels();
+    // SAFETY: target feature per caller contract; vector loads bounded
+    // as in encode_run_scaled_v; the per-lane draws spill through local
+    // 8-lane arrays and index dst through checked slice ops.
+    unsafe {
+        let mut pos = pos0;
+        let mut i = 0usize;
+        if pos % 2 == 1 {
+            set_hi(&mut dst[pos / 2], encode_stochastic(map, vals[0] / s, rng));
+            pos += 1;
+            i = 1;
+        }
+        let pairs = (vals.len() - i) / 2;
+        let byte0 = pos / 2;
+        let vs = _mm256_set1_ps(s);
+        let mut p = 0usize;
+        while p + 8 <= pairs {
+            let n0 = _mm256_div_ps(_mm256_loadu_ps(vals.as_ptr().add(i + 2 * p)), vs);
+            let n1 = _mm256_div_ps(_mm256_loadu_ps(vals.as_ptr().add(i + 2 * p + 8)), vs);
+            sr_group(k, n0, n1, dst.as_mut_ptr().add(byte0 + p), rng);
+            p += 8;
+        }
+        for q in p..pairs {
+            let c0 = encode_stochastic(map, vals[i + 2 * q] / s, rng);
+            let c1 = encode_stochastic(map, vals[i + 2 * q + 1] / s, rng);
+            dst[byte0 + q] = c0 | (c1 << 4);
+        }
+        if i + 2 * pairs < vals.len() {
+            let last = vals.len() - 1;
+            set_lo(&mut dst[(pos0 + last) / 2], encode_stochastic(map, vals[last] / s, rng));
+        }
+    }
+}
+
+/// # Safety
+/// AVX2 must be available; `cseg.len() == vals.len()`; `dst` covers
+/// positions `0..pos0 + vals.len()`.
+#[target_feature(enable = "avx2")]
+unsafe fn encode_sr_rank1_row_v(
+    map: &QuantMap,
+    vals: &[f32],
+    ri: f32,
+    cseg: &[f32],
+    pos0: usize,
+    dst: &mut [u8],
+    rng: &mut Pcg64,
+) {
+    use super::super::stochastic::encode_stochastic;
+    debug_assert_eq!(cseg.len(), vals.len());
+    let k = map.kernels();
+    // SAFETY: target feature per caller contract; bounds as in
+    // encode_sr_run_scaled_v, with cseg walking in lockstep with vals.
+    unsafe {
+        let mut pos = pos0;
+        let mut i = 0usize;
+        if pos % 2 == 1 {
+            let code = encode_stochastic(map, norm1(vals[0], ri, cseg[0]), rng);
+            set_hi(&mut dst[pos / 2], code);
+            pos += 1;
+            i = 1;
+        }
+        let pairs = (vals.len() - i) / 2;
+        let byte0 = pos / 2;
+        let vri = _mm256_set1_ps(ri);
+        let mut p = 0usize;
+        while p + 8 <= pairs {
+            let n0 = norm8(
+                _mm256_loadu_ps(vals.as_ptr().add(i + 2 * p)),
+                vri,
+                _mm256_loadu_ps(cseg.as_ptr().add(i + 2 * p)),
+            );
+            let n1 = norm8(
+                _mm256_loadu_ps(vals.as_ptr().add(i + 2 * p + 8)),
+                vri,
+                _mm256_loadu_ps(cseg.as_ptr().add(i + 2 * p + 8)),
+            );
+            sr_group(k, n0, n1, dst.as_mut_ptr().add(byte0 + p), rng);
+            p += 8;
+        }
+        for q in p..pairs {
+            let c0 = encode_stochastic(map, norm1(vals[i + 2 * q], ri, cseg[i + 2 * q]), rng);
+            let c1 =
+                encode_stochastic(map, norm1(vals[i + 2 * q + 1], ri, cseg[i + 2 * q + 1]), rng);
+            dst[byte0 + q] = c0 | (c1 << 4);
+        }
+        if i + 2 * pairs < vals.len() {
+            let last = vals.len() - 1;
+            let code = encode_stochastic(map, norm1(vals[last], ri, cseg[last]), rng);
+            set_lo(&mut dst[(pos0 + last) / 2], code);
+        }
+    }
+}
+
+/// One SR group: bracket counts for 16 normalized lanes in registers,
+/// then per-element draws in element order, packed into 8 output bytes.
+///
+/// # Safety
+/// AVX2 must be available and `dst` must point at 8 writable bytes.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn sr_group(k: &QuantKernels, n0: __m256, n1: __m256, dst: *mut u8, rng: &mut Pcg64) {
+    // SAFETY: caller contract — AVX2 enabled, 8 bytes writable at `dst`;
+    // spills land in local 8-lane arrays.
+    unsafe {
+        let (c0, e0) = sr_counts(&k.vlt16, n0);
+        let (c1, e1) = sr_counts(&k.vlt16, n1);
+        let mut na = [0f32; 8];
+        let mut nb = [0f32; 8];
+        let mut ca = [0u32; 8];
+        let mut cb = [0u32; 8];
+        let mut ea = [0u32; 8];
+        let mut eb = [0u32; 8];
+        _mm256_storeu_ps(na.as_mut_ptr(), n0);
+        _mm256_storeu_ps(nb.as_mut_ptr(), n1);
+        _mm256_storeu_si256(ca.as_mut_ptr() as *mut __m256i, c0);
+        _mm256_storeu_si256(cb.as_mut_ptr() as *mut __m256i, c1);
+        _mm256_storeu_si256(ea.as_mut_ptr() as *mut __m256i, e0);
+        _mm256_storeu_si256(eb.as_mut_ptr() as *mut __m256i, e1);
+        let mut codes = [0u8; 16];
+        for lane in 0..8 {
+            codes[lane] = sr_pick(k, na[lane], ca[lane], ea[lane], rng);
+        }
+        for lane in 0..8 {
+            codes[8 + lane] = sr_pick(k, nb[lane], cb[lane], eb[lane], rng);
+        }
+        for j in 0..8 {
+            *dst.add(j) = codes[2 * j] | (codes[2 * j + 1] << 4);
+        }
+    }
+}
+
+/// # Safety
+/// AVX2 must be available; `packed` covers positions `0..pos0 + g.len()`.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn ema_run_v(
+    k: &QuantKernels,
+    packed: &mut [u8],
+    pos0: usize,
+    old_s: f32,
+    new_s: f32,
+    g: &[f32],
+    beta: f32,
+    second: bool,
+) {
+    debug_assert!(new_s > 0.0, "zero new scales take the unfused fallback");
+    // SAFETY: target feature per caller contract; each group reads its 8
+    // bytes before pack16 overwrites them (in-place safe), and all
+    // offsets are bounded by the run geometry as in the decode kernels.
+    unsafe {
+        let mut pos = pos0;
+        let mut i = 0usize;
+        if pos % 2 == 1 {
+            let slot = &mut packed[pos / 2];
+            let x = k.decode_byte(*slot >> 4) * old_s;
+            set_hi(slot, k.encode(ema(beta, x, g[0], second) / new_s));
+            pos += 1;
+            i = 1;
+        }
+        let pairs = (g.len() - i) / 2;
+        let byte0 = pos / 2;
+        let tbl_lo = _mm256_loadu_ps(k.val16.as_ptr());
+        let tbl_hi = _mm256_loadu_ps(k.val16.as_ptr().add(8));
+        let vos = _mm256_set1_ps(old_s);
+        let vns = _mm256_set1_ps(new_s);
+        let vbeta = _mm256_set1_ps(beta);
+        let vomb = _mm256_set1_ps(1.0 - beta);
+        let mut p = 0usize;
+        while p + 8 <= pairs {
+            let (i0, i1) = unpack16(packed.as_ptr().add(byte0 + p));
+            let x0 = _mm256_mul_ps(lookup16(tbl_lo, tbl_hi, i0), vos);
+            let x1 = _mm256_mul_ps(lookup16(tbl_lo, tbl_hi, i1), vos);
+            let g0 = _mm256_loadu_ps(g.as_ptr().add(i + 2 * p));
+            let g1 = _mm256_loadu_ps(g.as_ptr().add(i + 2 * p + 8));
+            let y0 = ema8(vbeta, vomb, x0, g0, second);
+            let y1 = ema8(vbeta, vomb, x1, g1, second);
+            let c0 = encode8(&k.mid16, _mm256_div_ps(y0, vns));
+            let c1 = encode8(&k.mid16, _mm256_div_ps(y1, vns));
+            pack16(c0, c1, packed.as_mut_ptr().add(byte0 + p));
+            p += 8;
+        }
+        for q in p..pairs {
+            let b = packed[byte0 + q];
+            let pv = k.decode_pair(b);
+            let c0 = k.encode(ema(beta, pv[0] * old_s, g[i + 2 * q], second) / new_s);
+            let c1 = k.encode(ema(beta, pv[1] * old_s, g[i + 2 * q + 1], second) / new_s);
+            packed[byte0 + q] = c0 | (c1 << 4);
+        }
+        if i + 2 * pairs < g.len() {
+            let last = g.len() - 1;
+            let slot = &mut packed[(pos0 + last) / 2];
+            let x = k.decode_byte(*slot & 0x0F) * old_s;
+            set_lo(slot, k.encode(ema(beta, x, g[last], second) / new_s));
+        }
+    }
+}
+
+/// 8-lane phase-C EMA, same expression and association as the scalar
+/// `ema` (`beta*x + ((1-beta)*g)*g` for the second moment) — separate
+/// mul/add, never FMA, so lanes equal the scalar results bit for bit.
+///
+/// # Safety
+/// AVX2 must be available.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn ema8(vbeta: __m256, vomb: __m256, x: __m256, g: __m256, second: bool) -> __m256 {
+    // SAFETY: caller contract — AVX2 enabled; register-only ops.
+    unsafe {
+        let lhs = _mm256_mul_ps(vbeta, x);
+        let rhs = if second {
+            _mm256_mul_ps(_mm256_mul_ps(vomb, g), g)
+        } else {
+            _mm256_mul_ps(vomb, g)
+        };
+        _mm256_add_ps(lhs, rhs)
+    }
+}
+
+/// # Safety
+/// AVX2 must be available; `old_cseg`/`new_cseg` have `g.len()` entries;
+/// `packed` covers positions `0..pos0 + g.len()`.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn ema_rank1_v(
+    k: &QuantKernels,
+    packed: &mut [u8],
+    pos0: usize,
+    old_ri: f32,
+    old_cseg: &[f32],
+    new_ri: f32,
+    new_cseg: &[f32],
+    g: &[f32],
+    beta: f32,
+    second: bool,
+) {
+    debug_assert_eq!(old_cseg.len(), g.len());
+    debug_assert_eq!(new_cseg.len(), g.len());
+    // SAFETY: target feature per caller contract; bounds and in-place
+    // ordering as in ema_run_v, with the scale segments walking in
+    // lockstep with g.
+    unsafe {
+        let mut pos = pos0;
+        let mut i = 0usize;
+        if pos % 2 == 1 {
+            let slot = &mut packed[pos / 2];
+            let x = k.decode_byte(*slot >> 4) * smin(old_ri, old_cseg[0]);
+            let val = ema(beta, x, g[0], second);
+            set_hi(slot, k.encode(norm1(val, new_ri, new_cseg[0])));
+            pos += 1;
+            i = 1;
+        }
+        let pairs = (g.len() - i) / 2;
+        let byte0 = pos / 2;
+        let tbl_lo = _mm256_loadu_ps(k.val16.as_ptr());
+        let tbl_hi = _mm256_loadu_ps(k.val16.as_ptr().add(8));
+        let vori = _mm256_set1_ps(old_ri);
+        let vnri = _mm256_set1_ps(new_ri);
+        let vbeta = _mm256_set1_ps(beta);
+        let vomb = _mm256_set1_ps(1.0 - beta);
+        let mut p = 0usize;
+        while p + 8 <= pairs {
+            let (i0, i1) = unpack16(packed.as_ptr().add(byte0 + p));
+            let os0 = _mm256_min_ps(vori, _mm256_loadu_ps(old_cseg.as_ptr().add(i + 2 * p)));
+            let os1 = _mm256_min_ps(vori, _mm256_loadu_ps(old_cseg.as_ptr().add(i + 2 * p + 8)));
+            let x0 = _mm256_mul_ps(lookup16(tbl_lo, tbl_hi, i0), os0);
+            let x1 = _mm256_mul_ps(lookup16(tbl_lo, tbl_hi, i1), os1);
+            let g0 = _mm256_loadu_ps(g.as_ptr().add(i + 2 * p));
+            let g1 = _mm256_loadu_ps(g.as_ptr().add(i + 2 * p + 8));
+            let y0 = ema8(vbeta, vomb, x0, g0, second);
+            let y1 = ema8(vbeta, vomb, x1, g1, second);
+            let n0 = norm8(y0, vnri, _mm256_loadu_ps(new_cseg.as_ptr().add(i + 2 * p)));
+            let n1 = norm8(y1, vnri, _mm256_loadu_ps(new_cseg.as_ptr().add(i + 2 * p + 8)));
+            let c0 = encode8(&k.mid16, n0);
+            let c1 = encode8(&k.mid16, n1);
+            pack16(c0, c1, packed.as_mut_ptr().add(byte0 + p));
+            p += 8;
+        }
+        for q in p..pairs {
+            let b = packed[byte0 + q];
+            let pv = k.decode_pair(b);
+            let (j0, j1) = (i + 2 * q, i + 2 * q + 1);
+            let v0 = ema(beta, pv[0] * smin(old_ri, old_cseg[j0]), g[j0], second);
+            let v1 = ema(beta, pv[1] * smin(old_ri, old_cseg[j1]), g[j1], second);
+            let c0 = k.encode(norm1(v0, new_ri, new_cseg[j0]));
+            let c1 = k.encode(norm1(v1, new_ri, new_cseg[j1]));
+            packed[byte0 + q] = c0 | (c1 << 4);
+        }
+        if i + 2 * pairs < g.len() {
+            let last = g.len() - 1;
+            let slot = &mut packed[(pos0 + last) / 2];
+            let x = k.decode_byte(*slot & 0x0F) * smin(old_ri, old_cseg[last]);
+            let val = ema(beta, x, g[last], second);
+            set_lo(slot, k.encode(norm1(val, new_ri, new_cseg[last])));
+        }
+    }
+}

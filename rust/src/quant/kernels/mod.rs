@@ -1,4 +1,3 @@
-#![forbid(unsafe_code)]
 //! §Perf kernel layer: nibble-granular decode/encode kernels for the
 //! quantizer hot paths (the inner loops every optimizer step spends its
 //! time in — see `engine/adamw4.rs` and the offload staged path).
@@ -22,23 +21,139 @@
 //!   codes, and at most `c_hi - c_lo` midpoint compares (usually zero)
 //!   finish the job — replacing 15 compares (4-bit) or an 8-step binary
 //!   search (8-bit) per element.
-//! * **Fused normalize→encode→pack writers** — single-pass kernels that
-//!   divide by the scale, encode, and emit whole output bytes (two codes
-//!   packed per store). Only a byte the run enters or leaves mid-nibble
-//!   is read-modified-written, so the `packing::set` load-store
-//!   dependency chain that serialized every encode loop is gone.
+//! * **Fused run writers** — single-pass kernels that divide by the
+//!   scale, encode, and emit whole output bytes (two codes packed per
+//!   store). Only a byte the run enters or leaves mid-nibble is
+//!   read-modified-written, so the `packing::set` load-store dependency
+//!   chain that serialized every encode loop is gone. The family covers
+//!   nearest-rounding encode, **stochastic-rounding** encode (the
+//!   bracket draw rides the same fused packing; per-element RNG
+//!   consumption order is part of the contract), and the **fused
+//!   decode→EMA→re-encode** pass the engine's phase C runs in place
+//!   over a packed state buffer.
+//!
+//! # Kernel tiers and runtime dispatch
+//!
+//! Every run kernel exists in two implementations: [`scalar`] (the
+//! portable reference tier) and [`avx2`] (256-bit SIMD for the 4-bit
+//! hot arms — shuffle-based 16-entry nibble lookup for decode, vector
+//! midpoint compare-count for encode, vectorized normalize + bracket
+//! counts for stochastic rounding). The free functions in this module
+//! dispatch on [`active_tier`], resolved **once per process** from the
+//! `LOWBIT_KERNEL_TIER` env override (`scalar` | `avx2` | `auto`) or,
+//! by default, from `is_x86_feature_detected!("avx2")` — the same
+//! read-once pattern as the engine's `LOWBIT_ENGINE_THREADS`.
+//!
+//! The tiers are **bit-identical** by contract: `QuantMap::encode` (the
+//! oracle midpoint partition) and the scalar tier remain the reference,
+//! and the SIMD tier is pinned against both by the differential suites
+//! here and in `rust/tests/quant_tiers.rs` (adversarial floats — NaN,
+//! ±inf, subnormals, `-0.0`, midpoint ties — across bitwidths and start
+//! parities). SIMD lanes use only IEEE-exact operations in the scalar
+//! order (`div`, `mul`, `add`, compares, table lookups; never FMA), so
+//! equality is structural, not approximate.
 //!
 //! The LUTs live inside [`QuantMap`] itself ([`QuantKernels`], built
 //! once in `QuantMap::new`): the optimizer's cached maps — borrowed by
 //! the step engine through `StepParams` and by the offload pipeline's
 //! staged kernels — carry them for free, so the warm step builds nothing
 //! and stays zero-allocation (pinned by `rust/tests/ctx_cache.rs`).
-//!
-//! Stochastic rounding is *not* routed through this layer: the SR
-//! bracket draw is inherently per element and keeps the existing
-//! `encode_stochastic` + `packing::set` path.
 
 use super::mapping::{MapKind, QuantMap};
+use crate::util::rng::Pcg64;
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+// Off x86-64 the AVX2 tier can never be resolved (detection is false and
+// forcing it panics), so alias the module to keep dispatch arms portable.
+#[cfg(not(target_arch = "x86_64"))]
+pub use self::scalar as avx2;
+
+// ---------------------------------------------------------------------
+// Tier selection.
+// ---------------------------------------------------------------------
+
+/// A kernel implementation tier. Selected once per process (see
+/// [`active_tier`]); every tier is bit-identical to every other.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Portable scalar reference kernels.
+    Scalar,
+    /// 256-bit AVX2 kernels (x86-64 with AVX2 only).
+    Avx2,
+}
+
+impl KernelTier {
+    /// Stable lowercase name (benches record it per run).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Pure tier-resolution rule, split from the env/cpuid read so tests can
+/// pin it: `over` is the raw `LOWBIT_KERNEL_TIER` value (if set),
+/// `avx2_detected` the runtime CPU feature check. Forcing `avx2` on a
+/// CPU without it is a hard error (silently falling back would make
+/// "forced-tier" CI runs meaningless); so is an unrecognized value.
+pub fn resolve_tier(over: Option<&str>, avx2_detected: bool) -> KernelTier {
+    let auto = || {
+        if avx2_detected {
+            KernelTier::Avx2
+        } else {
+            KernelTier::Scalar
+        }
+    };
+    match over {
+        None => auto(),
+        Some(raw) => match raw.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => auto(),
+            "scalar" => KernelTier::Scalar,
+            "avx2" => {
+                assert!(
+                    avx2_detected,
+                    "LOWBIT_KERNEL_TIER=avx2 forced, but this CPU does not report AVX2"
+                );
+                KernelTier::Avx2
+            }
+            other => panic!(
+                "unrecognized LOWBIT_KERNEL_TIER value {other:?} (expected scalar|avx2|auto)"
+            ),
+        },
+    }
+}
+
+fn detect_avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The process-wide kernel tier: `LOWBIT_KERNEL_TIER` when set, else CPU
+/// feature detection. Read **once** and cached — the dispatchers below
+/// sit on every quantizer hot path, so re-reading the environment per
+/// call would put a syscall on the inner loop (same rationale and
+/// semantics as the engine's `LOWBIT_ENGINE_THREADS`).
+pub fn active_tier() -> KernelTier {
+    static TIER: std::sync::OnceLock<KernelTier> = std::sync::OnceLock::new();
+    *TIER.get_or_init(|| {
+        let over = std::env::var("LOWBIT_KERNEL_TIER").ok();
+        resolve_tier(over.as_deref(), detect_avx2())
+    })
+}
+
+// ---------------------------------------------------------------------
+// Shared table infrastructure.
+// ---------------------------------------------------------------------
 
 /// Top bits of the monotone `u32` float image keying the encode LUT:
 /// 12 bits = sign + 8 exponent bits + 3 mantissa bits (4096 buckets, 8
@@ -79,6 +194,18 @@ fn smin(a: f32, b: f32) -> f32 {
         a
     } else {
         b
+    }
+}
+
+/// The phase-C moment EMA, in exactly the expression form (and operator
+/// association) `engine::adamw4::decode_ema_piece` uses — the fused
+/// decode→EMA→re-encode kernels must reproduce it bit for bit.
+#[inline(always)]
+fn ema(beta: f32, x: f32, gv: f32, second: bool) -> f32 {
+    if second {
+        beta * x + (1.0 - beta) * gv * gv
+    } else {
+        beta * x + (1.0 - beta) * gv
     }
 }
 
@@ -143,6 +270,18 @@ pub struct QuantKernels {
     /// Direct code → value table, clamp-padded to 256 entries so a `u8`
     /// index never bounds-checks.
     byte: Box<[f32; 256]>,
+    /// Clamp-padded 16-lane value table (same clamp as `pair`/`byte`):
+    /// the AVX2 nibble-lookup decode and the SR bracket endpoint reads
+    /// index it with codes, so it must decode exactly like `byte`.
+    val16: [f32; 16],
+    /// `+inf`-padded 16-lane value table for the vector SR bracket
+    /// counts (`+inf` never counts as `< n` or `== n` for finite `n`).
+    vlt16: [f32; 16],
+    /// `+inf`-padded 16-lane midpoint table: `#{mid16 < n}` over the
+    /// first 15 lanes is exactly the 4-bit `QuantMap::encode` partition.
+    mid16: [f32; 16],
+    /// Number of real codes (15 for 4-bit DE-0, not 16).
+    n_codes: u8,
     enc: FastEncode,
     /// `encode(0.0)` — the code every element of a zero-scale block
     /// takes.
@@ -170,6 +309,18 @@ impl QuantKernels {
         } else {
             None
         };
+        let mut val16 = [0.0f32; 16];
+        for (i, dst) in val16.iter_mut().enumerate() {
+            *dst = clamp(i);
+        }
+        let mut vlt16 = [f32::INFINITY; 16];
+        for (dst, &v) in vlt16.iter_mut().zip(values.iter()) {
+            *dst = v;
+        }
+        let mut mid16 = [f32::INFINITY; 16];
+        for (dst, &m) in mid16.iter_mut().zip(mid.iter()) {
+            *dst = m;
+        }
         let enc = match (kind, signed) {
             (MapKind::Linear, false) => FastEncode::LinearU {
                 y_scale: (1u32 << (bits as u32 + 1)) as f32,
@@ -188,6 +339,10 @@ impl QuantKernels {
         QuantKernels {
             pair,
             byte,
+            val16,
+            vlt16,
+            mid16,
+            n_codes: values.len() as u8,
             enc,
             zero_code,
         }
@@ -278,11 +433,11 @@ impl QuantKernels {
 }
 
 // ---------------------------------------------------------------------
-// Fused run kernels. Position convention: element `k` of the run sits at
-// nibble (4-bit) or byte (otherwise) position `pos0 + k` of the packed
-// buffer, i.e. the buffer's coverage starts at position 0. Runs may
-// start and end mid-byte; boundary nibbles are handled with the scalar
-// `set`/`get` semantics so neighboring runs compose exactly.
+// Tier-dispatched fused run kernels. Position convention: element `k` of
+// the run sits at nibble (4-bit) or byte (otherwise) position `pos0 + k`
+// of the packed buffer, i.e. the buffer's coverage starts at position 0.
+// Runs may start and end mid-byte; boundary nibbles are handled with the
+// scalar `set`/`get` semantics so neighboring runs compose exactly.
 // ---------------------------------------------------------------------
 
 /// Fused constant-scale run decode: `out[k] = T(code(pos0 + k)) * s`.
@@ -296,37 +451,9 @@ pub fn decode_run_scaled(
     s: f32,
     out: &mut [f32],
 ) {
-    if out.is_empty() {
-        return;
-    }
-    let k = map.kernels();
-    if bits == 4 {
-        let pair = k.pair4();
-        let mut pos = pos0;
-        let mut o = 0usize;
-        if pos % 2 == 1 {
-            out[0] = k.decode_byte(packed[pos / 2] >> 4) * s;
-            pos += 1;
-            o = 1;
-        }
-        let pairs = (out.len() - o) / 2;
-        let byte0 = pos / 2;
-        for (ob, &b) in out[o..o + 2 * pairs]
-            .chunks_exact_mut(2)
-            .zip(packed[byte0..byte0 + pairs].iter())
-        {
-            let pv = pair[b as usize];
-            ob[0] = pv[0] * s;
-            ob[1] = pv[1] * s;
-        }
-        if o + 2 * pairs < out.len() {
-            let last = out.len() - 1;
-            out[last] = k.decode_byte(packed[(pos0 + last) / 2] & 0x0F) * s;
-        }
-    } else {
-        for (ob, &b) in out.iter_mut().zip(packed[pos0..pos0 + out.len()].iter()) {
-            *ob = k.decode_byte(b) * s;
-        }
+    match active_tier() {
+        KernelTier::Scalar => scalar::decode_run_scaled(map, bits, packed, pos0, s, out),
+        KernelTier::Avx2 => avx2::decode_run_scaled(map, bits, packed, pos0, s, out),
     }
 }
 
@@ -342,43 +469,9 @@ pub fn decode_rank1_row(
     cseg: &[f32],
     out: &mut [f32],
 ) {
-    debug_assert_eq!(cseg.len(), out.len());
-    if out.is_empty() {
-        return;
-    }
-    let k = map.kernels();
-    if bits == 4 {
-        let pair = k.pair4();
-        let mut pos = pos0;
-        let mut o = 0usize;
-        if pos % 2 == 1 {
-            out[0] = k.decode_byte(packed[pos / 2] >> 4) * smin(ri, cseg[0]);
-            pos += 1;
-            o = 1;
-        }
-        let pairs = (out.len() - o) / 2;
-        let byte0 = pos / 2;
-        for ((ob, cs), &b) in out[o..o + 2 * pairs]
-            .chunks_exact_mut(2)
-            .zip(cseg[o..o + 2 * pairs].chunks_exact(2))
-            .zip(packed[byte0..byte0 + pairs].iter())
-        {
-            let pv = pair[b as usize];
-            ob[0] = pv[0] * smin(ri, cs[0]);
-            ob[1] = pv[1] * smin(ri, cs[1]);
-        }
-        if o + 2 * pairs < out.len() {
-            let last = out.len() - 1;
-            out[last] = k.decode_byte(packed[(pos0 + last) / 2] & 0x0F) * smin(ri, cseg[last]);
-        }
-    } else {
-        for ((ob, &cj), &b) in out
-            .iter_mut()
-            .zip(cseg.iter())
-            .zip(packed[pos0..pos0 + out.len()].iter())
-        {
-            *ob = k.decode_byte(b) * smin(ri, cj);
-        }
+    match active_tier() {
+        KernelTier::Scalar => scalar::decode_rank1_row(map, bits, packed, pos0, ri, cseg, out),
+        KernelTier::Avx2 => avx2::decode_rank1_row(map, bits, packed, pos0, ri, cseg, out),
     }
 }
 
@@ -393,37 +486,9 @@ pub fn encode_run_scaled(
     pos0: usize,
     dst: &mut [u8],
 ) {
-    debug_assert!(s > 0.0, "zero-scale runs take encode_run_zero");
-    if vals.is_empty() {
-        return;
-    }
-    let k = map.kernels();
-    if bits == 4 {
-        let mut pos = pos0;
-        let mut i = 0usize;
-        if pos % 2 == 1 {
-            set_hi(&mut dst[pos / 2], k.encode(vals[0] / s));
-            pos += 1;
-            i = 1;
-        }
-        let pairs = (vals.len() - i) / 2;
-        let byte0 = pos / 2;
-        for (b, pv) in dst[byte0..byte0 + pairs]
-            .iter_mut()
-            .zip(vals[i..i + 2 * pairs].chunks_exact(2))
-        {
-            let c0 = k.encode(pv[0] / s);
-            let c1 = k.encode(pv[1] / s);
-            *b = c0 | (c1 << 4);
-        }
-        if i + 2 * pairs < vals.len() {
-            let last = vals.len() - 1;
-            set_lo(&mut dst[(pos0 + last) / 2], k.encode(vals[last] / s));
-        }
-    } else {
-        for (d, &v) in dst[pos0..pos0 + vals.len()].iter_mut().zip(vals.iter()) {
-            *d = k.encode(v / s);
-        }
+    match active_tier() {
+        KernelTier::Scalar => scalar::encode_run_scaled(map, bits, vals, s, pos0, dst),
+        KernelTier::Avx2 => avx2::encode_run_scaled(map, bits, vals, s, pos0, dst),
     }
 }
 
@@ -439,59 +504,121 @@ pub fn encode_rank1_row(
     pos0: usize,
     dst: &mut [u8],
 ) {
-    debug_assert_eq!(cseg.len(), vals.len());
-    if vals.is_empty() {
-        return;
+    match active_tier() {
+        KernelTier::Scalar => scalar::encode_rank1_row(map, bits, vals, ri, cseg, pos0, dst),
+        KernelTier::Avx2 => avx2::encode_rank1_row(map, bits, vals, ri, cseg, pos0, dst),
     }
-    #[inline(always)]
-    fn norm(v: f32, ri: f32, cj: f32) -> f32 {
-        let s = smin(ri, cj);
-        if s > 0.0 {
-            v / s
-        } else {
-            0.0
-        }
+}
+
+/// Stochastic-rounding constant-scale run encode (`s > 0`): position
+/// `pos0 + k` receives the SR code of `vals[k] / s`, drawing from `rng`
+/// in element order exactly like an `encode_stochastic` + `packing::set`
+/// loop (degenerate brackets — NaN, exact values, out-of-range — consume
+/// no draw).
+#[allow(clippy::too_many_arguments)]
+pub fn encode_sr_run_scaled(
+    map: &QuantMap,
+    bits: u8,
+    vals: &[f32],
+    s: f32,
+    pos0: usize,
+    dst: &mut [u8],
+    rng: &mut Pcg64,
+) {
+    match active_tier() {
+        KernelTier::Scalar => scalar::encode_sr_run_scaled(map, bits, vals, s, pos0, dst, rng),
+        KernelTier::Avx2 => avx2::encode_sr_run_scaled(map, bits, vals, s, pos0, dst, rng),
     }
-    let k = map.kernels();
-    if bits == 4 {
-        let mut pos = pos0;
-        let mut i = 0usize;
-        if pos % 2 == 1 {
-            set_hi(&mut dst[pos / 2], k.encode(norm(vals[0], ri, cseg[0])));
-            pos += 1;
-            i = 1;
+}
+
+/// Stochastic-rounding rank-1 row-segment encode: element `j` normalizes
+/// by `min(r_i, cseg[j])` (a zero per-element scale encodes a normalized
+/// 0, which for maps without a representable 0 still draws — identical
+/// to the scalar `encode_stochastic` path).
+#[allow(clippy::too_many_arguments)]
+pub fn encode_sr_rank1_row(
+    map: &QuantMap,
+    bits: u8,
+    vals: &[f32],
+    ri: f32,
+    cseg: &[f32],
+    pos0: usize,
+    dst: &mut [u8],
+    rng: &mut Pcg64,
+) {
+    match active_tier() {
+        KernelTier::Scalar => {
+            scalar::encode_sr_rank1_row(map, bits, vals, ri, cseg, pos0, dst, rng)
         }
-        let pairs = (vals.len() - i) / 2;
-        let byte0 = pos / 2;
-        for ((b, pv), cs) in dst[byte0..byte0 + pairs]
-            .iter_mut()
-            .zip(vals[i..i + 2 * pairs].chunks_exact(2))
-            .zip(cseg[i..i + 2 * pairs].chunks_exact(2))
-        {
-            let c0 = k.encode(norm(pv[0], ri, cs[0]));
-            let c1 = k.encode(norm(pv[1], ri, cs[1]));
-            *b = c0 | (c1 << 4);
-        }
-        if i + 2 * pairs < vals.len() {
-            let last = vals.len() - 1;
-            set_lo(
-                &mut dst[(pos0 + last) / 2],
-                k.encode(norm(vals[last], ri, cseg[last])),
-            );
-        }
-    } else {
-        for ((d, &v), &cj) in dst[pos0..pos0 + vals.len()]
-            .iter_mut()
-            .zip(vals.iter())
-            .zip(cseg.iter())
-        {
-            *d = k.encode(norm(v, ri, cj));
-        }
+        KernelTier::Avx2 => avx2::encode_sr_rank1_row(map, bits, vals, ri, cseg, pos0, dst, rng),
+    }
+}
+
+/// Fused phase-C pass over a constant-scale run, **in place**: decode
+/// the old code at position `pos0 + k` (× `old_s`), apply the moment EMA
+/// with `g[k]`, and re-encode against `new_s` (> 0) into the same
+/// position. Bit-identical to decode-all → EMA → encode-all over the
+/// same elements (same f32 ops per element, same RNG draw order under
+/// `stochastic`).
+#[allow(clippy::too_many_arguments)]
+pub fn ema_reencode_run_scaled(
+    map: &QuantMap,
+    bits: u8,
+    packed: &mut [u8],
+    pos0: usize,
+    old_s: f32,
+    new_s: f32,
+    g: &[f32],
+    beta: f32,
+    second: bool,
+    stochastic: bool,
+    rng: &mut Pcg64,
+) {
+    match active_tier() {
+        KernelTier::Scalar => scalar::ema_reencode_run_scaled(
+            map, bits, packed, pos0, old_s, new_s, g, beta, second, stochastic, rng,
+        ),
+        KernelTier::Avx2 => avx2::ema_reencode_run_scaled(
+            map, bits, packed, pos0, old_s, new_s, g, beta, second, stochastic, rng,
+        ),
+    }
+}
+
+/// Fused phase-C pass over a rank-1 row segment, **in place**: decode
+/// with the old `min(r_i, c_j)` scales, apply the EMA, re-encode against
+/// the new ones (zero new scales encode a normalized 0, like the scalar
+/// path).
+#[allow(clippy::too_many_arguments)]
+pub fn ema_reencode_rank1_row(
+    map: &QuantMap,
+    bits: u8,
+    packed: &mut [u8],
+    pos0: usize,
+    old_ri: f32,
+    old_cseg: &[f32],
+    new_ri: f32,
+    new_cseg: &[f32],
+    g: &[f32],
+    beta: f32,
+    second: bool,
+    stochastic: bool,
+    rng: &mut Pcg64,
+) {
+    match active_tier() {
+        KernelTier::Scalar => scalar::ema_reencode_rank1_row(
+            map, bits, packed, pos0, old_ri, old_cseg, new_ri, new_cseg, g, beta, second,
+            stochastic, rng,
+        ),
+        KernelTier::Avx2 => avx2::ema_reencode_rank1_row(
+            map, bits, packed, pos0, old_ri, old_cseg, new_ri, new_cseg, g, beta, second,
+            stochastic, rng,
+        ),
     }
 }
 
 /// Zero-scale run fill: every element takes `encode(0.0)`, and the RNG
 /// is (deliberately) untouched, matching the scalar zero-block arm.
+/// Tier-independent — a fill has nothing to vectorize by hand.
 pub fn encode_run_zero(map: &QuantMap, bits: u8, len: usize, pos0: usize, dst: &mut [u8]) {
     if len == 0 {
         return;
@@ -520,6 +647,7 @@ pub fn encode_run_zero(map: &QuantMap, bits: u8, len: usize, pos0: usize, dst: &
 mod tests {
     use super::*;
     use crate::quant::packing;
+    use crate::quant::stochastic::encode_stochastic;
     use crate::util::propcheck;
     use crate::util::rng::Pcg64;
 
@@ -561,6 +689,41 @@ mod tests {
     }
 
     #[test]
+    fn resolve_tier_rules() {
+        use KernelTier::*;
+        assert_eq!(resolve_tier(None, true), Avx2);
+        assert_eq!(resolve_tier(None, false), Scalar);
+        assert_eq!(resolve_tier(Some("auto"), true), Avx2);
+        assert_eq!(resolve_tier(Some("auto"), false), Scalar);
+        assert_eq!(resolve_tier(Some(""), true), Avx2);
+        assert_eq!(resolve_tier(Some("scalar"), true), Scalar);
+        assert_eq!(resolve_tier(Some("scalar"), false), Scalar);
+        assert_eq!(resolve_tier(Some("AVX2"), true), Avx2);
+        assert_eq!(resolve_tier(Some(" avx2 "), true), Avx2);
+    }
+
+    #[test]
+    fn resolve_tier_rejects_unsupported_force() {
+        let r = std::panic::catch_unwind(|| resolve_tier(Some("avx2"), false));
+        assert!(r.is_err(), "forcing avx2 without CPU support must panic");
+    }
+
+    #[test]
+    fn resolve_tier_rejects_unknown_value() {
+        let r = std::panic::catch_unwind(|| resolve_tier(Some("neon"), true));
+        assert!(r.is_err(), "unknown tier names must panic, not fall back");
+    }
+
+    #[test]
+    fn active_tier_matches_environment() {
+        // The process-wide tier must be exactly what resolve_tier says
+        // for this process's environment (CI runs the suite once with
+        // LOWBIT_KERNEL_TIER=scalar to pin the forced path end to end).
+        let over = std::env::var("LOWBIT_KERNEL_TIER").ok();
+        assert_eq!(active_tier(), resolve_tier(over.as_deref(), detect_avx2()));
+    }
+
+    #[test]
     fn pair_lut_matches_decode_all_256_bytes() {
         // Exhaustive: every (map kind, signedness, 4/8-bit) combo, every
         // possible packed byte, both nibbles — the pair LUT must agree
@@ -584,6 +747,16 @@ mod tests {
                 }
                 let d = map.kernels().decode_byte(byte);
                 assert_eq!(d.to_bits(), map.decode(byte.min(top)).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn val16_table_matches_byte_table() {
+        for map in all_maps(&[4]) {
+            let k = map.kernels();
+            for c in 0..16u8 {
+                assert_eq!(k.val16[c as usize].to_bits(), k.decode_byte(c).to_bits());
             }
         }
     }
@@ -735,6 +908,143 @@ mod tests {
                         "{:?} b{} signed={} pos0={pos0} mode={mode}",
                         map.kind, map.bits, map.signed
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sr_writers_match_scalar_set_paths_and_rng_stream() {
+        // The fused SR writers vs the encode_stochastic + packing::set
+        // loop: same packed bytes AND the same post-call RNG state (the
+        // engine's cross-thread bit-identity rests on draw-for-draw
+        // equivalence), at every start parity and for long runs that
+        // exercise the vector middle of the AVX2 tier.
+        let mut drng = Pcg64::seeded(31);
+        for map in all_maps(&[4, 8]) {
+            for n in [3usize, 21, 70] {
+                let vals: Vec<f32> = (0..n).map(|_| drng.normal() * 0.8).collect();
+                let mut cseg: Vec<f32> = (0..n).map(|_| drng.next_f32()).collect();
+                cseg[n / 2] = 0.0; // zero per-element scale arm
+                let ri = 0.6f32;
+                let s = 0.9f32;
+                for pos0 in [0usize, 1, 2, 3] {
+                    let blen = packing::packed_len(pos0 + n, map.bits);
+                    for mode in 0..2 {
+                        let mut fused = vec![0xA5u8; blen];
+                        let mut reference = vec![0xA5u8; blen];
+                        let mut r_f = Pcg64::seeded(7 + mode as u64);
+                        let mut r_s = Pcg64::seeded(7 + mode as u64);
+                        if mode == 0 {
+                            encode_sr_run_scaled(
+                                &map, map.bits, &vals, s, pos0, &mut fused, &mut r_f,
+                            );
+                            for (j, &v) in vals.iter().enumerate() {
+                                let code = encode_stochastic(&map, v / s, &mut r_s);
+                                packing::set(&mut reference, pos0 + j, code, map.bits);
+                            }
+                        } else {
+                            encode_sr_rank1_row(
+                                &map, map.bits, &vals, ri, &cseg, pos0, &mut fused, &mut r_f,
+                            );
+                            for (j, &v) in vals.iter().enumerate() {
+                                let sc = if ri < cseg[j] { ri } else { cseg[j] };
+                                let nrm = if sc > 0.0 { v / sc } else { 0.0 };
+                                let code = encode_stochastic(&map, nrm, &mut r_s);
+                                packing::set(&mut reference, pos0 + j, code, map.bits);
+                            }
+                        }
+                        assert_eq!(
+                            fused, reference,
+                            "{:?} b{} signed={} n={n} pos0={pos0} mode={mode}",
+                            map.kind, map.bits, map.signed
+                        );
+                        assert_eq!(
+                            r_f.next_u64(),
+                            r_s.next_u64(),
+                            "{:?} b{} signed={} n={n} pos0={pos0} mode={mode}: RNG diverged",
+                            map.kind,
+                            map.bits,
+                            map.signed
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ema_reencode_matches_decode_then_encode() {
+        // The fused in-place phase-C kernels vs the unfused reference:
+        // decode every element (old scales), EMA with the gradient,
+        // nearest/SR encode (new scales) through packing::set — same
+        // final bytes, same RNG stream, at every start parity, for both
+        // moment forms, zero new scales included.
+        let mut drng = Pcg64::seeded(52);
+        for map in all_maps(&[4, 8]) {
+            for n in [5usize, 37] {
+                let codes: Vec<u8> = (0..n)
+                    .map(|_| (drng.next_u32() as usize % map.len()) as u8)
+                    .collect();
+                let g: Vec<f32> = (0..n).map(|_| drng.normal() * 0.3).collect();
+                let old_s = 0.8f32;
+                let new_s = 0.55f32;
+                let old_c: Vec<f32> = (0..n).map(|_| 0.2 + drng.next_f32()).collect();
+                let mut new_c = old_c.clone();
+                new_c[n / 3] = 0.0; // zero new per-element scale arm
+                let (old_ri, new_ri) = (0.7f32, 0.9f32);
+                let beta = 0.9f32;
+                for pos0 in [0usize, 1, 2, 3] {
+                    for second in [false, true] {
+                        for stochastic in [false, true] {
+                            for mode in 0..2 {
+                                let mut base = vec![0u8; packing::packed_len(pos0 + n, map.bits)];
+                                for (j, &c) in codes.iter().enumerate() {
+                                    packing::set(&mut base, pos0 + j, c, map.bits);
+                                }
+                                let mut fused = base.clone();
+                                let mut reference = base.clone();
+                                let mut r_f = Pcg64::seeded(11);
+                                let mut r_s = Pcg64::seeded(11);
+                                // Reference: unfused decode → EMA → encode.
+                                for j in 0..n {
+                                    let c = packing::get(&reference, pos0 + j, map.bits);
+                                    let (os, ns) = if mode == 0 {
+                                        (old_s, new_s)
+                                    } else {
+                                        (smin(old_ri, old_c[j]), smin(new_ri, new_c[j]))
+                                    };
+                                    let x = map.decode(c) * os;
+                                    let val = ema(beta, x, g[j], second);
+                                    let nrm = if ns > 0.0 { val / ns } else { 0.0 };
+                                    let code = if stochastic {
+                                        encode_stochastic(&map, nrm, &mut r_s)
+                                    } else {
+                                        map.encode(nrm)
+                                    };
+                                    packing::set(&mut reference, pos0 + j, code, map.bits);
+                                }
+                                if mode == 0 {
+                                    ema_reencode_run_scaled(
+                                        &map, map.bits, &mut fused, pos0, old_s, new_s, &g, beta,
+                                        second, stochastic, &mut r_f,
+                                    );
+                                } else {
+                                    ema_reencode_rank1_row(
+                                        &map, map.bits, &mut fused, pos0, old_ri, &old_c, new_ri,
+                                        &new_c, &g, beta, second, stochastic, &mut r_f,
+                                    );
+                                }
+                                assert_eq!(
+                                    fused, reference,
+                                    "{:?} b{} signed={} n={n} pos0={pos0} second={second} \
+                                     sr={stochastic} mode={mode}",
+                                    map.kind, map.bits, map.signed
+                                );
+                                assert_eq!(r_f.next_u64(), r_s.next_u64(), "RNG diverged");
+                            }
+                        }
+                    }
                 }
             }
         }

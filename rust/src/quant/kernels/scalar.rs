@@ -1,0 +1,527 @@
+#![forbid(unsafe_code)]
+//! Portable scalar kernel tier — the reference implementation every
+//! SIMD tier is pinned against (and the only tier off x86-64).
+//!
+//! The run kernels here are the PR-5 nibble-granular loops, moved
+//! verbatim; the stochastic-rounding and fused EMA kernels wrap the same
+//! per-element reference operations (`encode_stochastic`, the phase-C
+//! EMA expression) in the run-structured lead/pairs/tail walk, so the
+//! packed bytes *and* the RNG draw order are exactly what the unfused
+//! `packing::set` loops produce.
+
+use super::super::mapping::QuantMap;
+use super::super::stochastic::encode_stochastic;
+use super::{ema, set_hi, set_lo, smin};
+use crate::util::rng::Pcg64;
+
+/// Fused constant-scale run decode: `out[k] = T(code(pos0 + k)) * s`.
+pub fn decode_run_scaled(
+    map: &QuantMap,
+    bits: u8,
+    packed: &[u8],
+    pos0: usize,
+    s: f32,
+    out: &mut [f32],
+) {
+    if out.is_empty() {
+        return;
+    }
+    let k = map.kernels();
+    if bits == 4 {
+        let pair = k.pair4();
+        let mut pos = pos0;
+        let mut o = 0usize;
+        if pos % 2 == 1 {
+            out[0] = k.decode_byte(packed[pos / 2] >> 4) * s;
+            pos += 1;
+            o = 1;
+        }
+        let pairs = (out.len() - o) / 2;
+        let byte0 = pos / 2;
+        for (ob, &b) in out[o..o + 2 * pairs]
+            .chunks_exact_mut(2)
+            .zip(packed[byte0..byte0 + pairs].iter())
+        {
+            let pv = pair[b as usize];
+            ob[0] = pv[0] * s;
+            ob[1] = pv[1] * s;
+        }
+        if o + 2 * pairs < out.len() {
+            let last = out.len() - 1;
+            out[last] = k.decode_byte(packed[(pos0 + last) / 2] & 0x0F) * s;
+        }
+    } else {
+        for (ob, &b) in out.iter_mut().zip(packed[pos0..pos0 + out.len()].iter()) {
+            *ob = k.decode_byte(b) * s;
+        }
+    }
+}
+
+/// Fused rank-1 row-segment decode: element `j` scales by
+/// `min(r_i, cseg[j])`.
+pub fn decode_rank1_row(
+    map: &QuantMap,
+    bits: u8,
+    packed: &[u8],
+    pos0: usize,
+    ri: f32,
+    cseg: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(cseg.len(), out.len());
+    if out.is_empty() {
+        return;
+    }
+    let k = map.kernels();
+    if bits == 4 {
+        let pair = k.pair4();
+        let mut pos = pos0;
+        let mut o = 0usize;
+        if pos % 2 == 1 {
+            out[0] = k.decode_byte(packed[pos / 2] >> 4) * smin(ri, cseg[0]);
+            pos += 1;
+            o = 1;
+        }
+        let pairs = (out.len() - o) / 2;
+        let byte0 = pos / 2;
+        for ((ob, cs), &b) in out[o..o + 2 * pairs]
+            .chunks_exact_mut(2)
+            .zip(cseg[o..o + 2 * pairs].chunks_exact(2))
+            .zip(packed[byte0..byte0 + pairs].iter())
+        {
+            let pv = pair[b as usize];
+            ob[0] = pv[0] * smin(ri, cs[0]);
+            ob[1] = pv[1] * smin(ri, cs[1]);
+        }
+        if o + 2 * pairs < out.len() {
+            let last = out.len() - 1;
+            out[last] = k.decode_byte(packed[(pos0 + last) / 2] & 0x0F) * smin(ri, cseg[last]);
+        }
+    } else {
+        for ((ob, &cj), &b) in out
+            .iter_mut()
+            .zip(cseg.iter())
+            .zip(packed[pos0..pos0 + out.len()].iter())
+        {
+            *ob = k.decode_byte(b) * smin(ri, cj);
+        }
+    }
+}
+
+/// Fused normalize→encode→pack of a constant-scale run (`s > 0`).
+pub fn encode_run_scaled(
+    map: &QuantMap,
+    bits: u8,
+    vals: &[f32],
+    s: f32,
+    pos0: usize,
+    dst: &mut [u8],
+) {
+    debug_assert!(s > 0.0, "zero-scale runs take encode_run_zero");
+    if vals.is_empty() {
+        return;
+    }
+    let k = map.kernels();
+    if bits == 4 {
+        let mut pos = pos0;
+        let mut i = 0usize;
+        if pos % 2 == 1 {
+            set_hi(&mut dst[pos / 2], k.encode(vals[0] / s));
+            pos += 1;
+            i = 1;
+        }
+        let pairs = (vals.len() - i) / 2;
+        let byte0 = pos / 2;
+        for (b, pv) in dst[byte0..byte0 + pairs]
+            .iter_mut()
+            .zip(vals[i..i + 2 * pairs].chunks_exact(2))
+        {
+            let c0 = k.encode(pv[0] / s);
+            let c1 = k.encode(pv[1] / s);
+            *b = c0 | (c1 << 4);
+        }
+        if i + 2 * pairs < vals.len() {
+            let last = vals.len() - 1;
+            set_lo(&mut dst[(pos0 + last) / 2], k.encode(vals[last] / s));
+        }
+    } else {
+        for (d, &v) in dst[pos0..pos0 + vals.len()].iter_mut().zip(vals.iter()) {
+            *d = k.encode(v / s);
+        }
+    }
+}
+
+/// The rank-1 per-element normalize: divide by `min(ri, cj)` when
+/// positive, else emit a normalized 0 (the scalar paths' zero-lane
+/// convention).
+#[inline(always)]
+fn norm(v: f32, ri: f32, cj: f32) -> f32 {
+    let s = smin(ri, cj);
+    if s > 0.0 {
+        v / s
+    } else {
+        0.0
+    }
+}
+
+/// Fused rank-1 row-segment encode: element `j` normalizes by
+/// `min(r_i, cseg[j])` (zero scales encode a normalized 0).
+pub fn encode_rank1_row(
+    map: &QuantMap,
+    bits: u8,
+    vals: &[f32],
+    ri: f32,
+    cseg: &[f32],
+    pos0: usize,
+    dst: &mut [u8],
+) {
+    debug_assert_eq!(cseg.len(), vals.len());
+    if vals.is_empty() {
+        return;
+    }
+    let k = map.kernels();
+    if bits == 4 {
+        let mut pos = pos0;
+        let mut i = 0usize;
+        if pos % 2 == 1 {
+            set_hi(&mut dst[pos / 2], k.encode(norm(vals[0], ri, cseg[0])));
+            pos += 1;
+            i = 1;
+        }
+        let pairs = (vals.len() - i) / 2;
+        let byte0 = pos / 2;
+        for ((b, pv), cs) in dst[byte0..byte0 + pairs]
+            .iter_mut()
+            .zip(vals[i..i + 2 * pairs].chunks_exact(2))
+            .zip(cseg[i..i + 2 * pairs].chunks_exact(2))
+        {
+            let c0 = k.encode(norm(pv[0], ri, cs[0]));
+            let c1 = k.encode(norm(pv[1], ri, cs[1]));
+            *b = c0 | (c1 << 4);
+        }
+        if i + 2 * pairs < vals.len() {
+            let last = vals.len() - 1;
+            set_lo(
+                &mut dst[(pos0 + last) / 2],
+                k.encode(norm(vals[last], ri, cseg[last])),
+            );
+        }
+    } else {
+        for ((d, &v), &cj) in dst[pos0..pos0 + vals.len()]
+            .iter_mut()
+            .zip(vals.iter())
+            .zip(cseg.iter())
+        {
+            *d = k.encode(norm(v, ri, cj));
+        }
+    }
+}
+
+/// Stochastic-rounding constant-scale run encode (`s > 0`): the
+/// `encode_stochastic` + `packing::set` loop restructured into the
+/// lead/pairs/tail walk. Draws happen in element order; degenerate
+/// brackets consume none.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_sr_run_scaled(
+    map: &QuantMap,
+    bits: u8,
+    vals: &[f32],
+    s: f32,
+    pos0: usize,
+    dst: &mut [u8],
+    rng: &mut Pcg64,
+) {
+    debug_assert!(s > 0.0, "zero-scale runs take encode_run_zero");
+    if vals.is_empty() {
+        return;
+    }
+    if bits == 4 {
+        let mut pos = pos0;
+        let mut i = 0usize;
+        if pos % 2 == 1 {
+            set_hi(&mut dst[pos / 2], encode_stochastic(map, vals[0] / s, rng));
+            pos += 1;
+            i = 1;
+        }
+        let pairs = (vals.len() - i) / 2;
+        let byte0 = pos / 2;
+        for (b, pv) in dst[byte0..byte0 + pairs]
+            .iter_mut()
+            .zip(vals[i..i + 2 * pairs].chunks_exact(2))
+        {
+            let c0 = encode_stochastic(map, pv[0] / s, rng);
+            let c1 = encode_stochastic(map, pv[1] / s, rng);
+            *b = c0 | (c1 << 4);
+        }
+        if i + 2 * pairs < vals.len() {
+            let last = vals.len() - 1;
+            set_lo(
+                &mut dst[(pos0 + last) / 2],
+                encode_stochastic(map, vals[last] / s, rng),
+            );
+        }
+    } else {
+        for (d, &v) in dst[pos0..pos0 + vals.len()].iter_mut().zip(vals.iter()) {
+            *d = encode_stochastic(map, v / s, rng);
+        }
+    }
+}
+
+/// Stochastic-rounding rank-1 row-segment encode: element `j` normalizes
+/// by `min(r_i, cseg[j])`; a zero per-element scale feeds a normalized 0
+/// to the SR draw (which for maps without a representable 0 still draws,
+/// exactly like the unfused path).
+#[allow(clippy::too_many_arguments)]
+pub fn encode_sr_rank1_row(
+    map: &QuantMap,
+    bits: u8,
+    vals: &[f32],
+    ri: f32,
+    cseg: &[f32],
+    pos0: usize,
+    dst: &mut [u8],
+    rng: &mut Pcg64,
+) {
+    debug_assert_eq!(cseg.len(), vals.len());
+    if vals.is_empty() {
+        return;
+    }
+    if bits == 4 {
+        let mut pos = pos0;
+        let mut i = 0usize;
+        if pos % 2 == 1 {
+            let code = encode_stochastic(map, norm(vals[0], ri, cseg[0]), rng);
+            set_hi(&mut dst[pos / 2], code);
+            pos += 1;
+            i = 1;
+        }
+        let pairs = (vals.len() - i) / 2;
+        let byte0 = pos / 2;
+        for ((b, pv), cs) in dst[byte0..byte0 + pairs]
+            .iter_mut()
+            .zip(vals[i..i + 2 * pairs].chunks_exact(2))
+            .zip(cseg[i..i + 2 * pairs].chunks_exact(2))
+        {
+            let c0 = encode_stochastic(map, norm(pv[0], ri, cs[0]), rng);
+            let c1 = encode_stochastic(map, norm(pv[1], ri, cs[1]), rng);
+            *b = c0 | (c1 << 4);
+        }
+        if i + 2 * pairs < vals.len() {
+            let last = vals.len() - 1;
+            let code = encode_stochastic(map, norm(vals[last], ri, cseg[last]), rng);
+            set_lo(&mut dst[(pos0 + last) / 2], code);
+        }
+    } else {
+        for ((d, &v), &cj) in dst[pos0..pos0 + vals.len()]
+            .iter_mut()
+            .zip(vals.iter())
+            .zip(cseg.iter())
+        {
+            *d = encode_stochastic(map, norm(v, ri, cj), rng);
+        }
+    }
+}
+
+/// Fused in-place phase-C pass over a constant-scale run: decode the old
+/// code (× `old_s`), EMA with `g[k]`, re-encode against `new_s` (> 0)
+/// into the same position. The 4-bit walk is in-place safe by
+/// construction: the lead's `set_hi` leaves the previous segment's
+/// already-final low nibble, whole bytes are read before being written,
+/// and the tail's `set_lo` leaves the next segment's untouched high
+/// nibble.
+#[allow(clippy::too_many_arguments)]
+pub fn ema_reencode_run_scaled(
+    map: &QuantMap,
+    bits: u8,
+    packed: &mut [u8],
+    pos0: usize,
+    old_s: f32,
+    new_s: f32,
+    g: &[f32],
+    beta: f32,
+    second: bool,
+    stochastic: bool,
+    rng: &mut Pcg64,
+) {
+    debug_assert!(new_s > 0.0, "zero new scales take the unfused fallback");
+    if stochastic {
+        ema_run_inner(map, bits, packed, pos0, old_s, new_s, g, beta, second, &mut |n| {
+            encode_stochastic(map, n, rng)
+        });
+    } else {
+        let k = map.kernels();
+        ema_run_inner(map, bits, packed, pos0, old_s, new_s, g, beta, second, &mut |n| k.encode(n));
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ema_run_inner(
+    map: &QuantMap,
+    bits: u8,
+    packed: &mut [u8],
+    pos0: usize,
+    old_s: f32,
+    new_s: f32,
+    g: &[f32],
+    beta: f32,
+    second: bool,
+    enc: &mut dyn FnMut(f32) -> u8,
+) {
+    if g.is_empty() {
+        return;
+    }
+    let k = map.kernels();
+    if bits == 4 {
+        let mut pos = pos0;
+        let mut i = 0usize;
+        if pos % 2 == 1 {
+            let slot = &mut packed[pos / 2];
+            let x = k.decode_byte(*slot >> 4) * old_s;
+            set_hi(slot, enc(ema(beta, x, g[0], second) / new_s));
+            pos += 1;
+            i = 1;
+        }
+        let pairs = (g.len() - i) / 2;
+        let byte0 = pos / 2;
+        for (b, gp) in packed[byte0..byte0 + pairs]
+            .iter_mut()
+            .zip(g[i..i + 2 * pairs].chunks_exact(2))
+        {
+            let pv = k.pair4()[*b as usize];
+            let c0 = enc(ema(beta, pv[0] * old_s, gp[0], second) / new_s);
+            let c1 = enc(ema(beta, pv[1] * old_s, gp[1], second) / new_s);
+            *b = c0 | (c1 << 4);
+        }
+        if i + 2 * pairs < g.len() {
+            let last = g.len() - 1;
+            let slot = &mut packed[(pos0 + last) / 2];
+            let x = k.decode_byte(*slot & 0x0F) * old_s;
+            set_lo(slot, enc(ema(beta, x, g[last], second) / new_s));
+        }
+    } else {
+        for (b, &gv) in packed[pos0..pos0 + g.len()].iter_mut().zip(g.iter()) {
+            let x = k.decode_byte(*b) * old_s;
+            *b = enc(ema(beta, x, gv, second) / new_s);
+        }
+    }
+}
+
+/// Fused in-place phase-C pass over a rank-1 row segment: decode with
+/// the old `min(r_i, c_j)` scales, EMA, re-encode against the new ones
+/// (a zero new scale encodes a normalized 0).
+#[allow(clippy::too_many_arguments)]
+pub fn ema_reencode_rank1_row(
+    map: &QuantMap,
+    bits: u8,
+    packed: &mut [u8],
+    pos0: usize,
+    old_ri: f32,
+    old_cseg: &[f32],
+    new_ri: f32,
+    new_cseg: &[f32],
+    g: &[f32],
+    beta: f32,
+    second: bool,
+    stochastic: bool,
+    rng: &mut Pcg64,
+) {
+    if stochastic {
+        ema_rank1_inner(
+            map,
+            bits,
+            packed,
+            pos0,
+            old_ri,
+            old_cseg,
+            new_ri,
+            new_cseg,
+            g,
+            beta,
+            second,
+            &mut |n| encode_stochastic(map, n, rng),
+        );
+    } else {
+        let k = map.kernels();
+        ema_rank1_inner(
+            map,
+            bits,
+            packed,
+            pos0,
+            old_ri,
+            old_cseg,
+            new_ri,
+            new_cseg,
+            g,
+            beta,
+            second,
+            &mut |n| k.encode(n),
+        );
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ema_rank1_inner(
+    map: &QuantMap,
+    bits: u8,
+    packed: &mut [u8],
+    pos0: usize,
+    old_ri: f32,
+    old_cseg: &[f32],
+    new_ri: f32,
+    new_cseg: &[f32],
+    g: &[f32],
+    beta: f32,
+    second: bool,
+    enc: &mut dyn FnMut(f32) -> u8,
+) {
+    debug_assert_eq!(old_cseg.len(), g.len());
+    debug_assert_eq!(new_cseg.len(), g.len());
+    if g.is_empty() {
+        return;
+    }
+    let k = map.kernels();
+    if bits == 4 {
+        let mut pos = pos0;
+        let mut i = 0usize;
+        if pos % 2 == 1 {
+            let slot = &mut packed[pos / 2];
+            let x = k.decode_byte(*slot >> 4) * smin(old_ri, old_cseg[0]);
+            let val = ema(beta, x, g[0], second);
+            set_hi(slot, enc(norm(val, new_ri, new_cseg[0])));
+            pos += 1;
+            i = 1;
+        }
+        let pairs = (g.len() - i) / 2;
+        let byte0 = pos / 2;
+        for (((b, gp), ocs), ncs) in packed[byte0..byte0 + pairs]
+            .iter_mut()
+            .zip(g[i..i + 2 * pairs].chunks_exact(2))
+            .zip(old_cseg[i..i + 2 * pairs].chunks_exact(2))
+            .zip(new_cseg[i..i + 2 * pairs].chunks_exact(2))
+        {
+            let pv = k.pair4()[*b as usize];
+            let v0 = ema(beta, pv[0] * smin(old_ri, ocs[0]), gp[0], second);
+            let v1 = ema(beta, pv[1] * smin(old_ri, ocs[1]), gp[1], second);
+            let c0 = enc(norm(v0, new_ri, ncs[0]));
+            let c1 = enc(norm(v1, new_ri, ncs[1]));
+            *b = c0 | (c1 << 4);
+        }
+        if i + 2 * pairs < g.len() {
+            let last = g.len() - 1;
+            let slot = &mut packed[(pos0 + last) / 2];
+            let x = k.decode_byte(*slot & 0x0F) * smin(old_ri, old_cseg[last]);
+            let val = ema(beta, x, g[last], second);
+            set_lo(slot, enc(norm(val, new_ri, new_cseg[last])));
+        }
+    } else {
+        for ((b, &gv), (&ocj, &ncj)) in packed[pos0..pos0 + g.len()]
+            .iter_mut()
+            .zip(g.iter())
+            .zip(old_cseg.iter().zip(new_cseg.iter()))
+        {
+            let x = k.decode_byte(*b) * smin(old_ri, ocj);
+            let val = ema(beta, x, gv, second);
+            *b = enc(norm(val, new_ri, ncj));
+        }
+    }
+}

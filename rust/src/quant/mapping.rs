@@ -249,6 +249,15 @@ impl QuantMap {
     /// between them; `lo == hi` when `n` is outside the table or exactly
     /// representable.
     pub fn bracket(&self, n: f32) -> (u8, u8) {
+        // NaN compares false against everything: `partition_point` would
+        // return 0 and `hi - 1` below would underflow (debug panic; in
+        // release a wrapped (255, 0) bracket indexes `values` out of
+        // bounds in `encode_stochastic`). Degenerate bracket at code 0
+        // matches the deterministic `encode(NaN) == 0` and, being
+        // degenerate, consumes no RNG draw on the SR path.
+        if n.is_nan() {
+            return (0, 0);
+        }
         let first = &self.values[0];
         let last = &self.values[self.len() - 1];
         if n <= *first {
@@ -354,6 +363,21 @@ mod tests {
         assert_eq!(m.bracket(-5.0), (0, 0));
         let top = (m.len() - 1) as u8;
         assert_eq!(m.bracket(5.0), (top, top));
+    }
+
+    #[test]
+    fn bracket_nan_is_degenerate_at_zero_code() {
+        // Regression: NaN used to underflow `hi - 1` (debug panic, OOB
+        // bracket in release). It must match encode's NaN clamp to code 0.
+        for kind in [MapKind::Linear, MapKind::DynExp, MapKind::DynExpNoZero] {
+            for signed in [false, true] {
+                for bits in [4u8, 8u8] {
+                    let m = QuantMap::new(kind, bits, signed);
+                    assert_eq!(m.bracket(f32::NAN), (0, 0));
+                    assert_eq!(m.encode(f32::NAN), 0);
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,11 +1,12 @@
-#![forbid(unsafe_code)]
 //! The paper's core contribution: 4-bit quantization of optimizer states.
 //!
 //! * [`mapping`] — quantization mappings **T** (Linear, DE, DE-0);
 //! * [`normalize`] — normalization **N** (per-tensor, block-wise, rank-1);
 //! * [`packing`] — nibble/byte packing of codes;
-//! * [`kernels`] — nibble-granular hot-path kernels (pair-LUT decode,
-//!   LUT/closed-form encode, fused normalize→encode→pack writers);
+//! * [`kernels`] — tiered hot-path kernels (pair-LUT decode,
+//!   LUT/closed-form encode, fused normalize→encode→pack, stochastic
+//!   rounding and fused EMA re-encode writers), with a runtime-dispatched
+//!   scalar/AVX2 implementation tier per kernel;
 //! * [`stochastic`] — stochastic rounding;
 //! * [`quantizer`] — the composed quantizer `M ∘ N` and
 //!   [`quantizer::QuantizedTensor`], the persisted state form;
@@ -19,18 +20,32 @@
 //! pair LUT decodes both nibbles of a packed 4-bit byte per load, a
 //! closed-form (Linear) or bits-keyed-LUT (DE/DE-0) encoder replaces the
 //! per-element midpoint compare loop, and fused writers normalize,
-//! encode and emit whole packed bytes in one pass.
+//! encode and emit whole packed bytes in one pass — including the
+//! stochastic-rounding bracket draw and the engine's phase-C
+//! decode→EMA→re-encode loop, which runs in place over the packed state.
 //!
-//! **Contract:** the kernel paths must match the oracle-pinned scalar
-//! paths *bit for bit* — [`mapping::QuantMap::encode`] (the midpoint
-//! partition that reproduces the python oracle's `argmin`, ties to the
-//! smaller code) and `packing::get`/`set` + [`mapping::QuantMap::decode`]
-//! remain the reference semantics, and the kernels are pinned to them by
-//! exhaustive/dense differential tests in `kernels.rs` plus the
-//! golden-parity, engine-parity, offload-pipeline and range-API suites.
-//! Any new kernel must preserve this equivalence exactly (same f32
-//! operations in the same order per element); perf work that would
-//! change results belongs behind a new quantizer scheme, not here.
+//! Each kernel exists as an implementation **tier**: `kernels::scalar`
+//! (the portable reference) and `kernels::avx2` (256-bit SIMD), selected
+//! once per process by [`kernels::active_tier`] from CPU feature
+//! detection, with the `LOWBIT_KERNEL_TIER=scalar|avx2|auto` environment
+//! override for forced-tier CI runs.
+//!
+//! **Contract:** every tier must match the oracle-pinned scalar paths
+//! *bit for bit* — [`mapping::QuantMap::encode`] (the midpoint partition
+//! that reproduces the python oracle's `argmin`, ties to the smaller
+//! code) and `packing::get`/`set` + [`mapping::QuantMap::decode`] remain
+//! the reference semantics; the scalar tier is pinned to them by
+//! exhaustive/dense differential tests in `kernels/`, and the SIMD tier
+//! is pinned to the scalar tier (adversarial floats — NaN, ±inf,
+//! subnormals, `-0.0`, midpoint ties — included) by the same suites plus
+//! `rust/tests/quant_tiers.rs`, the golden-parity, engine-parity,
+//! offload-pipeline and range-API suites. Stochastic kernels must also
+//! consume RNG draws element-for-element like the unfused
+//! `stochastic::encode_stochastic` loop, so engine results stay
+//! bit-identical across thread counts and tiers. Any new kernel or tier
+//! must preserve this equivalence exactly (same f32 operations in the
+//! same order per element); perf work that would change results belongs
+//! behind a new quantizer scheme, not here.
 
 pub mod error;
 pub mod kernels;
@@ -40,7 +55,7 @@ pub mod packing;
 pub mod quantizer;
 pub mod stochastic;
 
-pub use kernels::QuantKernels;
+pub use kernels::{active_tier, resolve_tier, KernelTier, QuantKernels};
 pub use mapping::{MapKind, QuantMap};
 pub use normalize::{NormKind, Scales};
 pub use quantizer::{dequantize_packed_range_into, QuantizedTensor, Quantizer};

@@ -83,64 +83,30 @@ impl Quantizer {
         // pack in one pass, whole output bytes per store, no code or
         // norm buffers. True division (not reciprocal multiply) keeps
         // the codes bit-identical to the python oracle, which the golden
-        // parity tests require. Stochastic rounding keeps the
-        // element-wise path below — the SR bracket draw is inherently
-        // per element.
-        if !self.stochastic {
-            if let Some(packed) = self.quantize_fused(x, map, &scales) {
-                return QuantizedTensor {
-                    shape: x.shape.clone(),
-                    bits: self.bits,
-                    packed,
-                    scales,
-                    quantizer: *self,
-                };
-            }
+        // parity tests require. Stochastic rounding rides the same fused
+        // writers — the SR kernels draw from `rng` in element order,
+        // exactly like the unfused `encode_stochastic` loop.
+        if let Some(packed) = self.quantize_fused(x, map, &scales, rng) {
+            return QuantizedTensor {
+                shape: x.shape.clone(),
+                bits: self.bits,
+                packed,
+                scales,
+                quantizer: *self,
+            };
         }
+        // Layouts without a fused arm (rank-1 on N-D tensors; stochastic
+        // per-tensor with a zero scale, where every element still takes
+        // its SR draw on a normalized 0): element-wise reference path.
         let mut codes = vec![0u8; n];
-        match &scales {
-            // Stochastic block path: per-block normalize + SR encode.
-            Scales::Block { block, scales: sc } => {
-                let mut norm = vec![0.0f32; (*block).min(x.data.len())];
-                for (bi, chunk) in x.data.chunks(*block).enumerate() {
-                    let s = sc[bi];
-                    let base = bi * *block;
-                    if s <= 0.0 {
-                        // All-zero block: every code encodes normalized 0
-                        // and the RNG is deliberately not consumed.
-                        let zero_code = map.encode(0.0);
-                        for j in 0..chunk.len() {
-                            codes[base + j] = zero_code;
-                        }
-                        continue;
-                    }
-                    let nb = &mut norm[..chunk.len()];
-                    for (o, &v) in nb.iter_mut().zip(chunk.iter()) {
-                        *o = v / s;
-                    }
-                    let cb = &mut codes[base..base + chunk.len()];
-                    if self.stochastic {
-                        for (code, &nv) in cb.iter_mut().zip(nb.iter()) {
-                            *code = encode_stochastic(map, nv, rng);
-                        }
-                    } else {
-                        for (code, &nv) in cb.iter_mut().zip(nb.iter()) {
-                            *code = map.encode(nv);
-                        }
-                    }
-                }
-            }
-            _ => {
-                for (i, &v) in x.data.iter().enumerate() {
-                    let s = scales.scale_at(i, &x.shape);
-                    let nrm = if s > 0.0 { v / s } else { 0.0 };
-                    codes[i] = if self.stochastic {
-                        encode_stochastic(map, nrm, rng)
-                    } else {
-                        map.encode(nrm)
-                    };
-                }
-            }
+        for (i, &v) in x.data.iter().enumerate() {
+            let s = scales.scale_at(i, &x.shape);
+            let nrm = if s > 0.0 { v / s } else { 0.0 };
+            codes[i] = if self.stochastic {
+                encode_stochastic(map, nrm, rng)
+            } else {
+                map.encode(nrm)
+            };
         }
         QuantizedTensor {
             shape: x.shape.clone(),
@@ -151,13 +117,29 @@ impl Quantizer {
         }
     }
 
-    /// The fused (non-stochastic) whole-tensor encode arms: block-scaled,
-    /// rank-1 on 2-D, and per-tensor runs go straight to packed bytes
-    /// through the kernel layer. Returns `None` for the layouts that stay
-    /// on the element-wise path (rank-1 on N-D tensors).
-    fn quantize_fused(&self, x: &Tensor, map: &QuantMap, scales: &Scales) -> Option<Vec<u8>> {
+    /// The fused whole-tensor encode arms: block-scaled, rank-1 on 2-D,
+    /// and per-tensor runs go straight to packed bytes through the kernel
+    /// layer; stochastic rounding takes the SR kernel variants, which
+    /// consume `rng` element-for-element like the unfused loop. Returns
+    /// `None` for the layouts that stay on the element-wise path (rank-1
+    /// on N-D tensors; stochastic per-tensor with a zero scale, where
+    /// every element still draws on a normalized 0).
+    fn quantize_fused(
+        &self,
+        x: &Tensor,
+        map: &QuantMap,
+        scales: &Scales,
+        rng: &mut Pcg64,
+    ) -> Option<Vec<u8>> {
         if matches!(scales, Scales::Rank1 { .. }) && x.ndim() != 2 {
             return None; // rank-1 on N-D stays on the element-wise path
+        }
+        if self.stochastic {
+            if let Scales::PerTensor(s) = scales {
+                if *s <= 0.0 {
+                    return None; // SR on a zero scale still draws per element
+                }
+            }
         }
         let n = x.numel();
         let mut packed = vec![0u8; packing::packed_len(n, self.bits)];
@@ -167,8 +149,22 @@ impl Quantizer {
                     let base = bi * *block;
                     let s = sc[bi];
                     if s > 0.0 {
-                        kernels::encode_run_scaled(map, self.bits, chunk, s, base, &mut packed);
+                        if self.stochastic {
+                            kernels::encode_sr_run_scaled(
+                                map,
+                                self.bits,
+                                chunk,
+                                s,
+                                base,
+                                &mut packed,
+                                rng,
+                            );
+                        } else {
+                            kernels::encode_run_scaled(map, self.bits, chunk, s, base, &mut packed);
+                        }
                     } else {
+                        // All-zero block: every code encodes normalized 0
+                        // and the RNG is deliberately not consumed.
                         kernels::encode_run_zero(map, self.bits, chunk.len(), base, &mut packed);
                     }
                 }
@@ -178,20 +174,46 @@ impl Quantizer {
                 let r = &per_axis[0];
                 let c = &per_axis[1];
                 for i in 0..rows {
-                    kernels::encode_rank1_row(
-                        map,
-                        self.bits,
-                        &x.data[i * cols..(i + 1) * cols],
-                        r[i],
-                        c,
-                        i * cols,
-                        &mut packed,
-                    );
+                    let row_vals = &x.data[i * cols..(i + 1) * cols];
+                    if self.stochastic {
+                        kernels::encode_sr_rank1_row(
+                            map,
+                            self.bits,
+                            row_vals,
+                            r[i],
+                            c,
+                            i * cols,
+                            &mut packed,
+                            rng,
+                        );
+                    } else {
+                        kernels::encode_rank1_row(
+                            map,
+                            self.bits,
+                            row_vals,
+                            r[i],
+                            c,
+                            i * cols,
+                            &mut packed,
+                        );
+                    }
                 }
             }
             Scales::PerTensor(s) => {
                 if *s > 0.0 {
-                    kernels::encode_run_scaled(map, self.bits, &x.data, *s, 0, &mut packed);
+                    if self.stochastic {
+                        kernels::encode_sr_run_scaled(
+                            map,
+                            self.bits,
+                            &x.data,
+                            *s,
+                            0,
+                            &mut packed,
+                            rng,
+                        );
+                    } else {
+                        kernels::encode_run_scaled(map, self.bits, &x.data, *s, 0, &mut packed);
+                    }
                 } else {
                     kernels::encode_run_zero(map, self.bits, n, 0, &mut packed);
                 }
@@ -245,15 +267,13 @@ impl Quantizer {
                 kernels::encode_run_zero(map, self.bits, chunk.len(), base, dst);
                 continue;
             }
+            // §Perf fused normalize→encode→pack (the kernel layer): whole
+            // output bytes per store; odd block sizes enter/leave bytes
+            // mid-nibble and compose via boundary RMW. The SR variant
+            // draws from `rng` in element order like the unfused loop.
             if self.stochastic {
-                for (j, &v) in chunk.iter().enumerate() {
-                    let code = encode_stochastic(map, v / s, rng);
-                    packing::set(dst, base + j, code, self.bits);
-                }
+                kernels::encode_sr_run_scaled(map, self.bits, chunk, s, base, dst, rng);
             } else {
-                // §Perf fused normalize→encode→pack (kernels.rs): whole
-                // output bytes per store; odd block sizes enter/leave
-                // bytes mid-nibble and compose via boundary RMW.
                 kernels::encode_run_scaled(map, self.bits, chunk, s, base, dst);
             }
         }
@@ -293,7 +313,7 @@ impl Quantizer {
         match scales {
             // Row-segment fast path for rank-1 scales on 2-D tensors:
             // the row statistic is hoisted per segment and the fused
-            // kernel packs whole bytes (§Perf, kernels.rs).
+            // kernel packs whole bytes (§Perf, the kernel layer).
             Scales::Rank1 { per_axis } if shape.len() == 2 => {
                 let cols = shape[1];
                 let r = &per_axis[0];
@@ -306,14 +326,16 @@ impl Quantizer {
                     let row_end = (row_start + cols).min(hi);
                     let ri = r[row];
                     if self.stochastic {
-                        for j in i..row_end {
-                            let cj = c[j - row_start];
-                            let s = if ri < cj { ri } else { cj };
-                            let v = vals[j - elem_lo];
-                            let nrm = if s > 0.0 { v / s } else { 0.0 };
-                            let code = encode_stochastic(map, nrm, rng);
-                            packing::set(dst, j - elem_lo, code, self.bits);
-                        }
+                        kernels::encode_sr_rank1_row(
+                            map,
+                            self.bits,
+                            &vals[i - elem_lo..row_end - elem_lo],
+                            ri,
+                            &c[i - row_start..row_end - row_start],
+                            i - elem_lo,
+                            dst,
+                            rng,
+                        );
                     } else {
                         kernels::encode_rank1_row(
                             map,
@@ -328,12 +350,16 @@ impl Quantizer {
                     i = row_end;
                 }
             }
-            // Per-tensor scales: one fused constant-scale run.
-            Scales::PerTensor(s) if !self.stochastic => {
-                if *s > 0.0 {
-                    kernels::encode_run_scaled(map, self.bits, vals, *s, 0, dst);
-                } else {
+            // Per-tensor scales: one fused constant-scale run. SR with a
+            // zero scale stays on the element-wise arm below — every
+            // element still takes its draw on a normalized 0.
+            Scales::PerTensor(s) if !self.stochastic || *s > 0.0 => {
+                if *s <= 0.0 {
                     kernels::encode_run_zero(map, self.bits, vals.len(), 0, dst);
+                } else if self.stochastic {
+                    kernels::encode_sr_run_scaled(map, self.bits, vals, *s, 0, dst, rng);
+                } else {
+                    kernels::encode_run_scaled(map, self.bits, vals, *s, 0, dst);
                 }
             }
             _ => {
@@ -353,6 +379,99 @@ impl Quantizer {
             let last = dst.len() - 1;
             dst[last] &= 0x0F;
         }
+    }
+
+    /// §Perf fused phase-C path: decode the packed element range in
+    /// place with `old_scales`, fold the gradient segment `g` into the
+    /// moment EMA (`second` selects the squared form), and re-encode
+    /// against `new_scales` — one pass over the packed bytes through the
+    /// kernel layer, no f32 staging buffer.
+    ///
+    /// `dst` holds the packed codes of elements `[elem_lo, elem_lo +
+    /// g.len())` of a tensor with `shape` (element `k` of the range at
+    /// packed position `k`; `elem_lo` must be even for 4-bit codes).
+    /// Returns `false` — before touching `dst` — for layout combinations
+    /// without a fused arm (mismatched scale kinds, rank-1 on N-D
+    /// tensors, non-positive new per-tensor scales under SR); the caller
+    /// falls back to the unfused decode → EMA → encode path, which this
+    /// method matches bit for bit (packed bytes *and* RNG draw order)
+    /// for every layout it does handle.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ema_reencode_range(
+        &self,
+        map: &QuantMap,
+        dst: &mut [u8],
+        elem_lo: usize,
+        shape: &[usize],
+        old_scales: &Scales,
+        new_scales: &Scales,
+        g: &[f32],
+        beta: f32,
+        second: bool,
+        rng: &mut Pcg64,
+    ) -> bool {
+        debug_assert_eq!(map.kind, self.map);
+        debug_assert_eq!(map.bits, self.bits);
+        debug_assert_eq!(dst.len(), packing::packed_len(g.len(), self.bits));
+        match (old_scales, new_scales) {
+            (Scales::PerTensor(os), Scales::PerTensor(ns)) if !self.stochastic || *ns > 0.0 => {
+                if *ns <= 0.0 {
+                    kernels::encode_run_zero(map, self.bits, g.len(), 0, dst);
+                } else {
+                    kernels::ema_reencode_run_scaled(
+                        map,
+                        self.bits,
+                        dst,
+                        0,
+                        *os,
+                        *ns,
+                        g,
+                        beta,
+                        second,
+                        self.stochastic,
+                        rng,
+                    );
+                }
+            }
+            (Scales::Rank1 { per_axis: oa }, Scales::Rank1 { per_axis: na })
+                if shape.len() == 2 =>
+            {
+                let cols = shape[1];
+                let (or, oc) = (&oa[0], &oa[1]);
+                let (nr, nc) = (&na[0], &na[1]);
+                let hi = elem_lo + g.len();
+                let mut i = elem_lo;
+                while i < hi {
+                    let row = i / cols;
+                    let row_start = row * cols;
+                    let row_end = (row_start + cols).min(hi);
+                    kernels::ema_reencode_rank1_row(
+                        map,
+                        self.bits,
+                        dst,
+                        i - elem_lo,
+                        or[row],
+                        &oc[i - row_start..row_end - row_start],
+                        nr[row],
+                        &nc[i - row_start..row_end - row_start],
+                        &g[i - elem_lo..row_end - elem_lo],
+                        beta,
+                        second,
+                        self.stochastic,
+                        rng,
+                    );
+                    i = row_end;
+                }
+            }
+            _ => return false,
+        }
+        // Match a fresh encode of the same range: the high nibble of a
+        // trailing half byte is cleared (the in-place walk preserves it).
+        if self.bits == 4 && g.len() % 2 == 1 {
+            let last = dst.len() - 1;
+            dst[last] &= 0x0F;
+        }
+        true
     }
 }
 
@@ -901,5 +1020,146 @@ mod tests {
             Scales::Block { scales, .. } => assert_eq!(&sc, scales),
             _ => unreachable!(),
         }
+    }
+
+    #[test]
+    fn ema_reencode_range_matches_unfused() {
+        // The fused in-place decode→EMA→encode path must reproduce the
+        // unfused reference (range decode, scalar EMA, range encode)
+        // bit-for-bit — packed bytes AND the RNG draw stream — for both
+        // moment forms, per-tensor and rank-1 scales, SR on and off,
+        // odd column counts and an odd trailing range.
+        let mut data_rng = Pcg64::seeded(17);
+        let x = Tensor::randn(&[9, 13], 0.5, &mut data_rng).map(|v| v.abs());
+        let gt = Tensor::randn(&[9, 13], 0.3, &mut data_rng);
+        let n = x.numel();
+        let ranges = [(0usize, 60usize), (60, n)]; // second range has odd length
+        let cases = [
+            Quantizer::new(NormKind::PerTensor, MapKind::Linear, 4, false),
+            Quantizer::new(NormKind::PerTensor, MapKind::DynExp, 4, true).with_stochastic(true),
+            Quantizer::second_moment_4bit(),
+            Quantizer::new(NormKind::Rank1, MapKind::DynExp, 4, true).with_stochastic(true),
+            Quantizer::new(NormKind::Rank1, MapKind::DynExp, 8, true).with_stochastic(true),
+        ];
+        for q in cases {
+            for second in [false, true] {
+                let beta = if second { 0.99 } else { 0.9 };
+                let map = q.build_map();
+                let mut r0 = Pcg64::seeded(0);
+                let qt = q.quantize_with(&x, &map, &mut r0);
+
+                // New scales, the way the engine's phase B derives them:
+                // reduced from the EMA-updated decoded values.
+                let old_full = qt.dequantize_with(&map);
+                let ema_vals: Vec<f32> = old_full
+                    .data
+                    .iter()
+                    .zip(gt.data.iter())
+                    .map(|(&xv, &gv)| {
+                        if second {
+                            beta * xv + (1.0 - beta) * gv * gv
+                        } else {
+                            beta * xv + (1.0 - beta) * gv
+                        }
+                    })
+                    .collect();
+                let new_scales =
+                    compute_scales(&Tensor::from_vec(&[9, 13], ema_vals.clone()), q.norm);
+
+                // Unfused reference: range decode → scalar EMA → range
+                // encode into a copy of the old packed image.
+                let mut ref_packed = qt.packed.clone();
+                let mut rng_a = Pcg64::seeded(5);
+                for &(lo, hi) in &ranges {
+                    let (b0, b1) = if q.bits == 4 {
+                        (lo / 2, hi.div_ceil(2))
+                    } else {
+                        (lo, hi)
+                    };
+                    let mut buf = vec![0.0f32; hi - lo];
+                    qt.dequantize_range_into(&map, lo, hi, &mut buf);
+                    for (k, v) in buf.iter_mut().enumerate() {
+                        let gv = gt.data[lo + k];
+                        *v = if second {
+                            beta * *v + (1.0 - beta) * gv * gv
+                        } else {
+                            beta * *v + (1.0 - beta) * gv
+                        };
+                    }
+                    q.encode_range_with_scales(
+                        &map,
+                        &buf,
+                        lo,
+                        &x.shape,
+                        &new_scales,
+                        &mut ref_packed[b0..b1],
+                        &mut rng_a,
+                    );
+                }
+
+                // Fused path over the same ranges.
+                let mut fused = qt.packed.clone();
+                let mut rng_b = Pcg64::seeded(5);
+                for &(lo, hi) in &ranges {
+                    let (b0, b1) = if q.bits == 4 {
+                        (lo / 2, hi.div_ceil(2))
+                    } else {
+                        (lo, hi)
+                    };
+                    let ok = q.ema_reencode_range(
+                        &map,
+                        &mut fused[b0..b1],
+                        lo,
+                        &x.shape,
+                        &qt.scales,
+                        &new_scales,
+                        &gt.data[lo..hi],
+                        beta,
+                        second,
+                        &mut rng_b,
+                    );
+                    assert!(ok, "{} should take the fused arm", q.name());
+                }
+                assert_eq!(fused, ref_packed, "{} second={second}", q.name());
+                assert_eq!(
+                    rng_a.next_f32().to_bits(),
+                    rng_b.next_f32().to_bits(),
+                    "{} second={second}: RNG streams diverged",
+                    q.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ema_reencode_range_rejects_unhandled_layouts_untouched() {
+        // Block scales have no fused EMA arm: the method must return
+        // false before mutating the buffer or consuming the RNG.
+        let mut data_rng = Pcg64::seeded(23);
+        let x = Tensor::randn(&[7, 11], 0.5, &mut data_rng);
+        let g = Tensor::randn(&[7, 11], 0.3, &mut data_rng);
+        let q = Quantizer::first_moment_4bit();
+        let map = q.build_map();
+        let mut r0 = Pcg64::seeded(0);
+        let qt = q.quantize_with(&x, &map, &mut r0);
+        let mut dst = qt.packed.clone();
+        let before = dst.clone();
+        let mut rng = Pcg64::seeded(9);
+        let ok = q.ema_reencode_range(
+            &map,
+            &mut dst,
+            0,
+            &x.shape,
+            &qt.scales,
+            &qt.scales,
+            &g.data,
+            0.9,
+            false,
+            &mut rng,
+        );
+        assert!(!ok);
+        assert_eq!(dst, before, "rejected call must leave bytes untouched");
+        let mut fresh = Pcg64::seeded(9);
+        assert_eq!(rng.next_f32().to_bits(), fresh.next_f32().to_bits());
     }
 }

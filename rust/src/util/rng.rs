@@ -70,9 +70,19 @@ impl Pcg64 {
     }
 
     /// Uniform in `[lo, hi)`.
+    ///
+    /// `lo + (hi - lo) * u` with `u < 1` can still round up to exactly
+    /// `hi` (e.g. `lo = 0.0, hi = 1e-45`: the product rounds to `hi`),
+    /// which would violate the documented half-open interval; clamp such
+    /// results to the largest float strictly below `hi`.
     #[inline]
     pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
-        lo + (hi - lo) * self.next_f32()
+        let x = lo + (hi - lo) * self.next_f32();
+        if x >= hi {
+            next_below(hi).max(lo)
+        } else {
+            x
+        }
     }
 
     /// Uniform integer in `[0, n)` via Lemire's multiply-shift (unbiased
@@ -137,6 +147,21 @@ impl Pcg64 {
     }
 }
 
+/// Largest f32 strictly below a finite `x` (bit-decrement toward -inf).
+#[inline]
+fn next_below(x: f32) -> f32 {
+    if x == 0.0 {
+        // Covers +0.0 and -0.0: the next value down is -MIN_SUBNORMAL.
+        return -f32::from_bits(1);
+    }
+    let bits = x.to_bits();
+    if x > 0.0 {
+        f32::from_bits(bits - 1)
+    } else {
+        f32::from_bits(bits + 1)
+    }
+}
+
 /// Hash arbitrary labels into a seed; lets experiments derive stable seeds
 /// from human-readable names (`seed_from("table1/rank1-linear/run3")`).
 pub fn seed_from(label: &str) -> u64 {
@@ -177,6 +202,37 @@ mod tests {
             let x = r.next_f32();
             assert!((0.0..1.0).contains(&x));
         }
+    }
+
+    #[test]
+    fn uniform_stays_below_hi() {
+        // Regression: with a tiny [lo, hi) span, `lo + (hi - lo) * u`
+        // rounds up to exactly `hi` for large `u`, breaking the documented
+        // half-open interval.
+        let tiny = f32::from_bits(1); // smallest positive subnormal
+        let mut r = Pcg64::seeded(13);
+        let mut saw_below = false;
+        for _ in 0..10_000 {
+            let x = r.uniform(0.0, tiny);
+            assert!((0.0..tiny).contains(&x), "x = {x:e} not in [0, {tiny:e})");
+            saw_below = saw_below || x < tiny;
+        }
+        assert!(saw_below);
+        // Degenerate span returns lo.
+        assert_eq!(r.uniform(0.25, 0.25), 0.25);
+        // Wide spans are unaffected.
+        for _ in 0..10_000 {
+            let x = r.uniform(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_is_adjacent() {
+        assert!(next_below(1.0) < 1.0);
+        assert_eq!(next_below(1.0), f32::from_bits(1.0f32.to_bits() - 1));
+        assert!(next_below(0.0) < 0.0);
+        assert!(next_below(-1.0) < -1.0);
     }
 
     #[test]

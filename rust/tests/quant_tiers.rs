@@ -1,0 +1,533 @@
+//! Differential kernel-tier suite: every quant kernel tier must be
+//! bit-identical to the oracle semantics (`QuantMap::encode`/`decode` +
+//! `packing::set`/`get`, and `encode_stochastic` draw-for-draw on the SR
+//! paths) on *adversarial* floats — NaN, ±inf, subnormals, `-0.0`,
+//! midpoint ties and their ±1-ulp neighbours — across bitwidths, scales
+//! and start parities. The scalar tier is pinned against the oracle
+//! here; the AVX2 tier is pinned against the scalar tier (on hosts that
+//! report AVX2), and the runtime dispatchers against the scalar tier
+//! under whatever tier this process resolved.
+
+use lowbit_opt::quant::kernels::{self, scalar};
+use lowbit_opt::quant::packing;
+use lowbit_opt::quant::stochastic::encode_stochastic;
+use lowbit_opt::quant::{MapKind, QuantMap};
+use lowbit_opt::util::rng::Pcg64;
+
+fn all_maps() -> Vec<QuantMap> {
+    vec![
+        QuantMap::new(MapKind::Linear, 4, true),
+        QuantMap::new(MapKind::Linear, 4, false),
+        QuantMap::new(MapKind::DynExp, 4, true),
+        QuantMap::new(MapKind::DynExpNoZero, 4, false),
+        QuantMap::new(MapKind::Linear, 8, false),
+        QuantMap::new(MapKind::DynExp, 8, true),
+    ]
+}
+
+fn next_up(x: f32) -> f32 {
+    if x.is_nan() || x == f32::INFINITY {
+        return x;
+    }
+    if x == 0.0 {
+        return f32::from_bits(1);
+    }
+    let b = x.to_bits();
+    f32::from_bits(if x > 0.0 { b + 1 } else { b - 1 })
+}
+
+fn next_down(x: f32) -> f32 {
+    -next_up(-x)
+}
+
+/// Adversarial normalized inputs for `map`: IEEE edge cases plus every
+/// representable value, every adjacent-pair midpoint (the encode tie
+/// point) and their ±1-ulp neighbours.
+fn adversarial_vals(map: &QuantMap) -> Vec<f32> {
+    let mut v = vec![
+        f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        0.0,
+        -0.0,
+        f32::from_bits(1),
+        -f32::from_bits(1),
+        f32::from_bits(0x007F_FFFF), // largest subnormal
+        f32::MIN_POSITIVE,
+        f32::MAX,
+        f32::MIN,
+        1.0,
+        -1.0,
+        0.5,
+        -0.5,
+        1e-30,
+        -1e-30,
+        1e30,
+        -1e30,
+    ];
+    // encode(+inf) counts every midpoint below it: the top code.
+    let top = map.encode(f32::INFINITY);
+    for c in 0..=top {
+        let a = map.decode(c);
+        v.extend([a, next_up(a), next_down(a)]);
+        if c < top {
+            let b = map.decode(c + 1);
+            let mid = ((a as f64 + b as f64) / 2.0) as f32;
+            v.extend([mid, next_up(mid), next_down(mid)]);
+        }
+    }
+    v
+}
+
+fn rng_streams_synced(a: &mut Pcg64, b: &mut Pcg64) -> bool {
+    (0..4).all(|_| a.next_f32().to_bits() == b.next_f32().to_bits())
+}
+
+#[test]
+fn scalar_run_kernels_match_oracle_on_adversarial_floats() {
+    for map in all_maps() {
+        let bits = map.bits;
+        let vals = adversarial_vals(&map);
+        let n = vals.len();
+        for s in [1.0f32, 0.25, 3.7] {
+            for pos0 in [0usize, 1, 2, 3] {
+                let plen = packing::packed_len(pos0 + n, bits);
+                let mut dst = vec![0u8; plen];
+                scalar::encode_run_scaled(&map, bits, &vals, s, pos0, &mut dst);
+                let mut refd = vec![0u8; plen];
+                for (k, &v) in vals.iter().enumerate() {
+                    packing::set(&mut refd, pos0 + k, map.encode(v / s), bits);
+                }
+                assert_eq!(dst, refd, "{:?}/{bits} encode s={s} pos0={pos0}", map.kind);
+
+                let mut out = vec![0.0f32; n];
+                scalar::decode_run_scaled(&map, bits, &dst, pos0, s, &mut out);
+                for (k, &o) in out.iter().enumerate() {
+                    let exp = map.decode(packing::get(&dst, pos0 + k, bits)) * s;
+                    assert_eq!(
+                        o.to_bits(),
+                        exp.to_bits(),
+                        "{:?}/{bits} decode s={s} pos0={pos0} elem {k}",
+                        map.kind
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn scalar_rank1_kernels_match_oracle_on_adversarial_floats() {
+    // Column scales cycle through degenerate lanes: zero (normalized-0
+    // semantics, SR still draws there if the map draws on 0), subnormal,
+    // huge, infinite.
+    let lanes = [0.0f32, 1.0, f32::MIN_POSITIVE, f32::from_bits(1), 1e30, f32::INFINITY, 0.5];
+    for map in all_maps() {
+        let bits = map.bits;
+        let vals = adversarial_vals(&map);
+        let n = vals.len();
+        let cseg: Vec<f32> = (0..n).map(|k| lanes[k % lanes.len()]).collect();
+        for ri in [1.0f32, 0.0, 2.5, f32::INFINITY] {
+            for pos0 in [0usize, 1, 3] {
+                let plen = packing::packed_len(pos0 + n, bits);
+                let mut dst = vec![0u8; plen];
+                scalar::encode_rank1_row(&map, bits, &vals, ri, &cseg, pos0, &mut dst);
+                let mut refd = vec![0u8; plen];
+                for (k, &v) in vals.iter().enumerate() {
+                    let cj = cseg[k];
+                    let s = if ri < cj { ri } else { cj };
+                    let nrm = if s > 0.0 { v / s } else { 0.0 };
+                    packing::set(&mut refd, pos0 + k, map.encode(nrm), bits);
+                }
+                assert_eq!(dst, refd, "{:?}/{bits} rank1 ri={ri} pos0={pos0}", map.kind);
+
+                let mut out = vec![0.0f32; n];
+                scalar::decode_rank1_row(&map, bits, &dst, pos0, ri, &cseg, &mut out);
+                for (k, &o) in out.iter().enumerate() {
+                    let cj = cseg[k];
+                    let s = if ri < cj { ri } else { cj };
+                    let exp = map.decode(packing::get(&dst, pos0 + k, bits)) * s;
+                    assert_eq!(
+                        o.to_bits(),
+                        exp.to_bits(),
+                        "{:?}/{bits} rank1 decode ri={ri} pos0={pos0} elem {k}",
+                        map.kind
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn scalar_sr_kernels_match_unfused_loop_bytes_and_draws() {
+    for map in all_maps() {
+        let bits = map.bits;
+        let vals = adversarial_vals(&map);
+        let n = vals.len();
+        for pos0 in [0usize, 1, 2, 3] {
+            let plen = packing::packed_len(pos0 + n, bits);
+            let s = 0.75f32;
+
+            let mut dst = vec![0u8; plen];
+            let mut rng_a = Pcg64::seeded(42);
+            scalar::encode_sr_run_scaled(&map, bits, &vals, s, pos0, &mut dst, &mut rng_a);
+            let mut refd = vec![0u8; plen];
+            let mut rng_b = Pcg64::seeded(42);
+            for (k, &v) in vals.iter().enumerate() {
+                let code = encode_stochastic(&map, v / s, &mut rng_b);
+                packing::set(&mut refd, pos0 + k, code, bits);
+            }
+            assert_eq!(dst, refd, "{:?}/{bits} SR run pos0={pos0}", map.kind);
+            assert!(
+                rng_streams_synced(&mut rng_a, &mut rng_b),
+                "{:?}/{bits} SR run pos0={pos0}: RNG stream diverged",
+                map.kind
+            );
+
+            let cseg: Vec<f32> = (0..n).map(|k| [1.0f32, 0.0, 0.5, 2.0][k % 4]).collect();
+            let ri = 1.5f32;
+            let mut dst = vec![0u8; plen];
+            let mut rng_a = Pcg64::seeded(7);
+            scalar::encode_sr_rank1_row(&map, bits, &vals, ri, &cseg, pos0, &mut dst, &mut rng_a);
+            let mut refd = vec![0u8; plen];
+            let mut rng_b = Pcg64::seeded(7);
+            for (k, &v) in vals.iter().enumerate() {
+                let cj = cseg[k];
+                let sc = if ri < cj { ri } else { cj };
+                let nrm = if sc > 0.0 { v / sc } else { 0.0 };
+                packing::set(&mut refd, pos0 + k, encode_stochastic(&map, nrm, &mut rng_b), bits);
+            }
+            assert_eq!(dst, refd, "{:?}/{bits} SR rank1 pos0={pos0}", map.kind);
+            assert!(
+                rng_streams_synced(&mut rng_a, &mut rng_b),
+                "{:?}/{bits} SR rank1 pos0={pos0}: RNG stream diverged",
+                map.kind
+            );
+        }
+    }
+}
+
+#[test]
+fn sr_nan_matches_nearest_and_consumes_no_draw() {
+    // The crash-regression pin: NaN under SR must behave exactly like
+    // deterministic encode — code 0 via the degenerate bracket — and
+    // must not consume an RNG draw (thread-count invariance depends on
+    // the draw schedule being value-independent only through brackets).
+    for map in all_maps() {
+        assert_eq!(map.bracket(f32::NAN), (0, 0), "{:?}/{}", map.kind, map.bits);
+        let mut rng = Pcg64::seeded(3);
+        let before = rng.next_f32().to_bits();
+        let mut rng = Pcg64::seeded(3);
+        let code = encode_stochastic(&map, f32::NAN, &mut rng);
+        assert_eq!(code, map.encode(f32::NAN), "{:?}/{}", map.kind, map.bits);
+        assert_eq!(code, 0);
+        assert_eq!(
+            rng.next_f32().to_bits(),
+            before,
+            "{:?}/{}: NaN consumed an RNG draw",
+            map.kind,
+            map.bits
+        );
+    }
+}
+
+#[test]
+fn scalar_ema_kernels_match_unfused_reference() {
+    // Fused in-place decode→EMA→re-encode vs the unfused reference
+    // (oracle decode, scalar EMA expression, oracle encode), with
+    // adversarial gradients (NaN, ±inf, subnormals) folded in.
+    for map in all_maps() {
+        let bits = map.bits;
+        let base = adversarial_vals(&map);
+        let n = base.len();
+        let g: Vec<f32> = (0..n).map(|k| base[(k * 7 + 3) % n]).collect();
+        let (old_s, new_s) = (1.5f32, 0.8f32);
+        for pos0 in [0usize, 1, 2, 3] {
+            for second in [false, true] {
+                for stochastic in [false, true] {
+                    let beta = 0.9f32;
+                    let plen = packing::packed_len(pos0 + n, bits);
+                    let mut img = vec![0u8; plen];
+                    scalar::encode_run_scaled(&map, bits, &base, old_s, pos0, &mut img);
+
+                    let mut fused = img.clone();
+                    let mut rng_a = Pcg64::seeded(11);
+                    scalar::ema_reencode_run_scaled(
+                        &map, bits, &mut fused, pos0, old_s, new_s, &g, beta, second, stochastic,
+                        &mut rng_a,
+                    );
+
+                    let mut refd = img.clone();
+                    let mut rng_b = Pcg64::seeded(11);
+                    for (k, &gv) in g.iter().enumerate() {
+                        let x = map.decode(packing::get(&img, pos0 + k, bits)) * old_s;
+                        let e = if second {
+                            beta * x + (1.0 - beta) * gv * gv
+                        } else {
+                            beta * x + (1.0 - beta) * gv
+                        };
+                        let code = if stochastic {
+                            encode_stochastic(&map, e / new_s, &mut rng_b)
+                        } else {
+                            map.encode(e / new_s)
+                        };
+                        packing::set(&mut refd, pos0 + k, code, bits);
+                    }
+                    assert_eq!(
+                        fused, refd,
+                        "{:?}/{bits} EMA run pos0={pos0} second={second} sr={stochastic}",
+                        map.kind
+                    );
+                    assert!(
+                        rng_streams_synced(&mut rng_a, &mut rng_b),
+                        "{:?}/{bits} EMA run pos0={pos0}: RNG stream diverged",
+                        map.kind
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dispatched_kernels_match_scalar_tier() {
+    // Whatever tier this process resolved (auto unless the environment
+    // forces one), the public dispatchers must agree with the scalar
+    // tier bit-for-bit — this is the end-to-end dispatch pin.
+    for map in all_maps() {
+        let bits = map.bits;
+        let vals = adversarial_vals(&map);
+        let n = vals.len();
+        let s = 1.25f32;
+        for pos0 in [0usize, 1, 3] {
+            let plen = packing::packed_len(pos0 + n, bits);
+
+            let mut a = vec![0u8; plen];
+            kernels::encode_run_scaled(&map, bits, &vals, s, pos0, &mut a);
+            let mut b = vec![0u8; plen];
+            scalar::encode_run_scaled(&map, bits, &vals, s, pos0, &mut b);
+            assert_eq!(a, b, "{:?}/{bits} dispatched encode pos0={pos0}", map.kind);
+
+            let mut oa = vec![0.0f32; n];
+            kernels::decode_run_scaled(&map, bits, &a, pos0, s, &mut oa);
+            let mut ob = vec![0.0f32; n];
+            scalar::decode_run_scaled(&map, bits, &b, pos0, s, &mut ob);
+            let same = oa
+                .iter()
+                .zip(ob.iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "{:?}/{bits} dispatched decode pos0={pos0}", map.kind);
+
+            let mut a = vec![0u8; plen];
+            let mut rng_a = Pcg64::seeded(5);
+            kernels::encode_sr_run_scaled(&map, bits, &vals, s, pos0, &mut a, &mut rng_a);
+            let mut b = vec![0u8; plen];
+            let mut rng_b = Pcg64::seeded(5);
+            scalar::encode_sr_run_scaled(&map, bits, &vals, s, pos0, &mut b, &mut rng_b);
+            assert_eq!(a, b, "{:?}/{bits} dispatched SR pos0={pos0}", map.kind);
+            assert!(rng_streams_synced(&mut rng_a, &mut rng_b));
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2_vs_scalar {
+    use super::*;
+    use lowbit_opt::quant::kernels::avx2;
+
+    /// Runs `f` only when the host actually reports AVX2; the wrappers
+    /// in `kernels::avx2` would otherwise be undefined to vector-path.
+    fn with_avx2(f: impl FnOnce()) {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            f();
+        } else {
+            eprintln!("host lacks AVX2; skipping SIMD-vs-scalar differential");
+        }
+    }
+
+    #[test]
+    fn avx2_run_kernels_match_scalar_on_adversarial_floats() {
+        with_avx2(|| {
+            for map in all_maps() {
+                let bits = map.bits;
+                let vals = adversarial_vals(&map);
+                let n = vals.len();
+                for s in [1.0f32, 0.33] {
+                    for pos0 in [0usize, 1, 2, 3] {
+                        let plen = packing::packed_len(pos0 + n, bits);
+                        let mut a = vec![0u8; plen];
+                        avx2::encode_run_scaled(&map, bits, &vals, s, pos0, &mut a);
+                        let mut b = vec![0u8; plen];
+                        scalar::encode_run_scaled(&map, bits, &vals, s, pos0, &mut b);
+                        assert_eq!(a, b, "{:?}/{bits} avx2 encode s={s} pos0={pos0}", map.kind);
+
+                        let mut oa = vec![0.0f32; n];
+                        avx2::decode_run_scaled(&map, bits, &a, pos0, s, &mut oa);
+                        let mut ob = vec![0.0f32; n];
+                        scalar::decode_run_scaled(&map, bits, &b, pos0, s, &mut ob);
+                        for (k, (x, y)) in oa.iter().zip(ob.iter()).enumerate() {
+                            assert_eq!(
+                                x.to_bits(),
+                                y.to_bits(),
+                                "{:?}/{bits} avx2 decode s={s} pos0={pos0} elem {k}",
+                                map.kind
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn avx2_rank1_kernels_match_scalar_on_adversarial_floats() {
+        with_avx2(|| {
+            let lanes = [0.0f32, 1.0, f32::MIN_POSITIVE, 1e30, f32::INFINITY, 0.5];
+            for map in all_maps() {
+                let bits = map.bits;
+                let vals = adversarial_vals(&map);
+                let n = vals.len();
+                let cseg: Vec<f32> = (0..n).map(|k| lanes[k % lanes.len()]).collect();
+                for ri in [1.0f32, 0.0, f32::INFINITY] {
+                    for pos0 in [0usize, 1, 3] {
+                        let plen = packing::packed_len(pos0 + n, bits);
+                        let mut a = vec![0u8; plen];
+                        avx2::encode_rank1_row(&map, bits, &vals, ri, &cseg, pos0, &mut a);
+                        let mut b = vec![0u8; plen];
+                        scalar::encode_rank1_row(&map, bits, &vals, ri, &cseg, pos0, &mut b);
+                        assert_eq!(a, b, "{:?}/{bits} avx2 rank1 ri={ri} pos0={pos0}", map.kind);
+
+                        let mut oa = vec![0.0f32; n];
+                        avx2::decode_rank1_row(&map, bits, &a, pos0, ri, &cseg, &mut oa);
+                        let mut ob = vec![0.0f32; n];
+                        scalar::decode_rank1_row(&map, bits, &b, pos0, ri, &cseg, &mut ob);
+                        for (k, (x, y)) in oa.iter().zip(ob.iter()).enumerate() {
+                            assert_eq!(
+                                x.to_bits(),
+                                y.to_bits(),
+                                "{:?}/{bits} avx2 rank1 decode ri={ri} pos0={pos0} elem {k}",
+                                map.kind
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn avx2_sr_kernels_match_scalar_bytes_and_draws() {
+        with_avx2(|| {
+            for map in all_maps() {
+                let bits = map.bits;
+                let vals = adversarial_vals(&map);
+                let n = vals.len();
+                let cseg: Vec<f32> = (0..n).map(|k| [1.0f32, 0.0, 0.5, 2.0][k % 4]).collect();
+                for pos0 in [0usize, 1, 2, 3] {
+                    let plen = packing::packed_len(pos0 + n, bits);
+                    let s = 0.6f32;
+
+                    let mut a = vec![0u8; plen];
+                    let mut rng_a = Pcg64::seeded(13);
+                    avx2::encode_sr_run_scaled(&map, bits, &vals, s, pos0, &mut a, &mut rng_a);
+                    let mut b = vec![0u8; plen];
+                    let mut rng_b = Pcg64::seeded(13);
+                    scalar::encode_sr_run_scaled(&map, bits, &vals, s, pos0, &mut b, &mut rng_b);
+                    assert_eq!(a, b, "{:?}/{bits} avx2 SR run pos0={pos0}", map.kind);
+                    assert!(
+                        rng_streams_synced(&mut rng_a, &mut rng_b),
+                        "{:?}/{bits} avx2 SR run pos0={pos0}: RNG diverged",
+                        map.kind
+                    );
+
+                    let mut a = vec![0u8; plen];
+                    let mut rng_a = Pcg64::seeded(17);
+                    avx2::encode_sr_rank1_row(
+                        &map, bits, &vals, 1.5, &cseg, pos0, &mut a, &mut rng_a,
+                    );
+                    let mut b = vec![0u8; plen];
+                    let mut rng_b = Pcg64::seeded(17);
+                    scalar::encode_sr_rank1_row(
+                        &map, bits, &vals, 1.5, &cseg, pos0, &mut b, &mut rng_b,
+                    );
+                    assert_eq!(a, b, "{:?}/{bits} avx2 SR rank1 pos0={pos0}", map.kind);
+                    assert!(
+                        rng_streams_synced(&mut rng_a, &mut rng_b),
+                        "{:?}/{bits} avx2 SR rank1 pos0={pos0}: RNG diverged",
+                        map.kind
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn avx2_ema_kernels_match_scalar_bytes_and_draws() {
+        with_avx2(|| {
+            let lanes = [0.0f32, 1.0, 0.25, 4.0, 1e-20, 1e20];
+            for map in all_maps() {
+                let bits = map.bits;
+                let base = adversarial_vals(&map);
+                let n = base.len();
+                let g: Vec<f32> = (0..n).map(|k| base[(k * 11 + 5) % n]).collect();
+                let (old_s, new_s) = (2.0f32, 0.7f32);
+                for pos0 in [0usize, 1, 2, 3] {
+                    for second in [false, true] {
+                        for stochastic in [false, true] {
+                            let beta = if second { 0.99f32 } else { 0.9 };
+                            let plen = packing::packed_len(pos0 + n, bits);
+                            let mut img = vec![0u8; plen];
+                            scalar::encode_run_scaled(&map, bits, &base, old_s, pos0, &mut img);
+
+                            let mut a = img.clone();
+                            let mut rng_a = Pcg64::seeded(19);
+                            avx2::ema_reencode_run_scaled(
+                                &map, bits, &mut a, pos0, old_s, new_s, &g, beta, second,
+                                stochastic, &mut rng_a,
+                            );
+                            let mut b = img.clone();
+                            let mut rng_b = Pcg64::seeded(19);
+                            scalar::ema_reencode_run_scaled(
+                                &map, bits, &mut b, pos0, old_s, new_s, &g, beta, second,
+                                stochastic, &mut rng_b,
+                            );
+                            assert_eq!(
+                                a, b,
+                                "{:?}/{bits} avx2 EMA run pos0={pos0} second={second} \
+                                 sr={stochastic}",
+                                map.kind
+                            );
+                            assert!(rng_streams_synced(&mut rng_a, &mut rng_b));
+
+                            // Rank-1 form over the same image.
+                            let ocseg: Vec<f32> =
+                                (0..n).map(|k| lanes[k % lanes.len()]).collect();
+                            let ncseg: Vec<f32> =
+                                (0..n).map(|k| lanes[(k + 2) % lanes.len()]).collect();
+                            let mut a = img.clone();
+                            let mut rng_a = Pcg64::seeded(23);
+                            avx2::ema_reencode_rank1_row(
+                                &map, bits, &mut a, pos0, 1.2, &ocseg, 0.9, &ncseg, &g, beta,
+                                second, stochastic, &mut rng_a,
+                            );
+                            let mut b = img.clone();
+                            let mut rng_b = Pcg64::seeded(23);
+                            scalar::ema_reencode_rank1_row(
+                                &map, bits, &mut b, pos0, 1.2, &ocseg, 0.9, &ncseg, &g, beta,
+                                second, stochastic, &mut rng_b,
+                            );
+                            assert_eq!(
+                                a, b,
+                                "{:?}/{bits} avx2 EMA rank1 pos0={pos0} second={second} \
+                                 sr={stochastic}",
+                                map.kind
+                            );
+                            assert!(rng_streams_synced(&mut rng_a, &mut rng_b));
+                        }
+                    }
+                }
+            }
+        });
+    }
+}

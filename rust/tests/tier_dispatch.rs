@@ -1,0 +1,50 @@
+//! End-to-end pin of the kernel-tier dispatch: `LOWBIT_KERNEL_TIER` is
+//! read once per process by `active_tier`, so this test binary — which
+//! sets the variable before anything touches the quant layer — locks
+//! both the forced-scalar override and the read-once caching. The pure
+//! resolution rule is covered alongside, plus its two hard-error arms.
+//!
+//! Kept separate from `quant_tiers.rs` on purpose: that binary resolves
+//! the tier naturally (auto), this one forces `scalar`; a process can
+//! only ever observe one resolution.
+
+use lowbit_opt::quant::{active_tier, resolve_tier, KernelTier};
+
+#[test]
+fn forced_scalar_tier_is_resolved_and_cached() {
+    // Runs before any kernel dispatch in this process: the integration
+    // binary only touches `active_tier` here.
+    std::env::set_var("LOWBIT_KERNEL_TIER", "scalar");
+    assert_eq!(active_tier(), KernelTier::Scalar);
+    // Read-once semantics: later changes to the environment must not
+    // re-resolve the tier (no env syscall on the kernel hot path).
+    std::env::set_var("LOWBIT_KERNEL_TIER", "auto");
+    assert_eq!(active_tier(), KernelTier::Scalar);
+    std::env::remove_var("LOWBIT_KERNEL_TIER");
+    assert_eq!(active_tier(), KernelTier::Scalar);
+}
+
+#[test]
+fn resolve_tier_pure_rules() {
+    assert_eq!(resolve_tier(None, false), KernelTier::Scalar);
+    assert_eq!(resolve_tier(None, true), KernelTier::Avx2);
+    assert_eq!(resolve_tier(Some(""), true), KernelTier::Avx2);
+    assert_eq!(resolve_tier(Some("auto"), false), KernelTier::Scalar);
+    assert_eq!(resolve_tier(Some("AUTO"), true), KernelTier::Avx2);
+    assert_eq!(resolve_tier(Some(" scalar "), true), KernelTier::Scalar);
+    assert_eq!(resolve_tier(Some("Scalar"), false), KernelTier::Scalar);
+    assert_eq!(resolve_tier(Some("avx2"), true), KernelTier::Avx2);
+    assert_eq!(resolve_tier(Some("AVX2"), true), KernelTier::Avx2);
+}
+
+#[test]
+fn forcing_avx2_without_cpu_support_is_a_hard_error() {
+    let r = std::panic::catch_unwind(|| resolve_tier(Some("avx2"), false));
+    assert!(r.is_err(), "forcing avx2 on a non-AVX2 CPU must panic");
+}
+
+#[test]
+fn unknown_tier_value_is_a_hard_error() {
+    let r = std::panic::catch_unwind(|| resolve_tier(Some("sse9"), true));
+    assert!(r.is_err(), "unknown tier values must panic, not fall back");
+}
