@@ -6,10 +6,13 @@
 # The test suite runs under the default engine auto-threading, with
 # LOWBIT_ENGINE_THREADS pinned (so every auto-threaded engine path —
 # dense + compressed — is exercised at a second worker count on top of
-# the explicit 1/2/7 parity matrix), and with LOWBIT_KERNEL_TIER forced
-# to scalar (so the scalar quant-kernel tier stays covered end to end on
+# the explicit 1/2/7 parity matrix), with LOWBIT_KERNEL_TIER forced to
+# scalar (so the scalar quant-kernel tier stays covered end to end on
 # hosts where auto-dispatch resolves to AVX2 — the differential suites
-# require every tier to be bit-identical).
+# require every tier to be bit-identical), and with LOWBIT_ENGINE_SCHED
+# forced to queue (the default run resolves to the sticky affinity
+# scheduler, so this pass keeps the shared-queue reference scheduler
+# covered end to end — results must be bit-identical either way).
 #
 # BENCH_engine.json, BENCH_offload.json and BENCH_quant.json are
 # *appended to*, one run object per CI invocation (dense + compressed
@@ -34,6 +37,9 @@ LOWBIT_ENGINE_THREADS=7 cargo test -q
 echo "== cargo test -q (kernel tier forced to scalar)"
 LOWBIT_KERNEL_TIER=scalar cargo test -q
 
+echo "== cargo test -q (engine scheduler forced to queue)"
+LOWBIT_ENGINE_SCHED=queue cargo test -q
+
 echo "== cargo test -q --features audit (aliasing auditor on)"
 cargo test -q --features audit
 
@@ -54,11 +60,14 @@ cargo bench --bench quant_throughput -- --smoke
 
 echo "== bench smoke: quant_kernels (appends to BENCH_quant.json)"
 cargo bench --bench quant_kernels -- --smoke --json BENCH_quant.json
+test -s BENCH_quant.json || { echo "FAIL: quant_kernels did not append to BENCH_quant.json"; exit 1; }
 
 echo "== bench smoke: optim_step (appends to BENCH_engine.json)"
 cargo bench --bench optim_step -- --smoke --json BENCH_engine.json
+test -s BENCH_engine.json || { echo "FAIL: optim_step did not append to BENCH_engine.json"; exit 1; }
 
 echo "== bench smoke: offload_pipeline (appends to BENCH_offload.json)"
 cargo bench --bench offload_pipeline -- --smoke --json BENCH_offload.json
+test -s BENCH_offload.json || { echo "FAIL: offload_pipeline did not append to BENCH_offload.json"; exit 1; }
 
 echo "CI OK"

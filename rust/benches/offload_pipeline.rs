@@ -13,7 +13,9 @@
 mod bench_util;
 
 use bench_util::{append_bench_run, bench, section};
+use lowbit_opt::engine::{active_sched, SchedStats};
 use lowbit_opt::offload::{LinkModel, OffloadConfig, OffloadReport};
+use lowbit_opt::quant::active_tier;
 use lowbit_opt::optim::adamw::AdamW;
 use lowbit_opt::optim::lowbit::{CompressedAdamW, QuantPolicy};
 use lowbit_opt::optim::{Hyper, Optimizer, Param, ParamKind};
@@ -52,8 +54,10 @@ fn main() {
     let presets = ["adamw32", "adamw4"];
     let thread_cases = [1usize, 2, 4, 8];
     let depth_cases = [1usize, 2, 4];
-    // (preset, threads, depth, wall mean ns, report)
-    let mut results: Vec<(&str, usize, usize, f64, OffloadReport)> = Vec::new();
+    // (preset, threads, depth, wall mean ns, report, scheduler telemetry
+    // — cumulative over the whole run, warmup included)
+    let mut results: Vec<(&str, usize, usize, f64, OffloadReport, Option<SchedStats>)> =
+        Vec::new();
 
     section("offload pipeline: wall time + virtual step time (threads x depth)");
     for preset in presets {
@@ -74,14 +78,14 @@ fn main() {
                 let hp = Hyper::default();
                 let ocfg = OffloadConfig::new(link, depth);
                 let label = format!("{preset} t{threads} d{depth}");
-                let (res, report) = match preset {
+                let (res, report, stats) = match preset {
                     "adamw32" => {
                         let mut opt = AdamW::new(hp).with_threads(threads).offloaded(ocfg);
                         opt.step(&mut params, &grads, 1e-3); // lazy init + tier build
                         let res = bench(&label, min_secs, || {
                             opt.step(&mut params, &grads, 1e-3);
                         });
-                        (res, *opt.offload_report().expect("offloaded"))
+                        (res, *opt.offload_report().expect("offloaded"), opt.sched_stats())
                     }
                     _ => {
                         let mut opt = CompressedAdamW::new(hp, QuantPolicy::bit4())
@@ -91,7 +95,7 @@ fn main() {
                         let res = bench(&label, min_secs, || {
                             opt.step(&mut params, &grads, 1e-3);
                         });
-                        (res, *opt.offload_report().expect("offloaded"))
+                        (res, *opt.offload_report().expect("offloaded"), opt.sched_stats())
                     }
                 };
                 println!(
@@ -103,7 +107,7 @@ fn main() {
                     report.bytes_down as f64 / report.steps.max(1) as f64 / 1e6,
                     report.bytes_up as f64 / report.steps.max(1) as f64 / 1e6,
                 );
-                results.push((preset, threads, depth, res.mean_ns, report));
+                results.push((preset, threads, depth, res.mean_ns, report, stats));
             }
         }
     }
@@ -111,8 +115,8 @@ fn main() {
     let virt = |p: &str, t: usize, d: usize| {
         results
             .iter()
-            .find(|(pr, th, de, _, _)| *pr == p && *th == t && *de == d)
-            .map(|(_, _, _, _, r)| r.step_seconds())
+            .find(|(pr, th, de, _, _, _)| *pr == p && *th == t && *de == d)
+            .map(|(_, _, _, _, r, _)| r.step_seconds())
     };
     if let (Some(v32), Some(v4)) = (virt("adamw32", 4, 2), virt("adamw4", 4, 2)) {
         println!(
@@ -126,6 +130,10 @@ fn main() {
         run.set("bench", Json::Str("offload_pipeline/threads-depth".to_string()));
         run.set("model_params", Json::Num(n as f64));
         run.set("smoke", Json::Bool(smoke));
+        // Numbers are only comparable within a kernel tier × scheduler
+        // mode; tag the run with both resolved settings.
+        run.set("tier", Json::Str(active_tier().name().to_string()));
+        run.set("sched", Json::Str(active_sched().name().to_string()));
         let mut jl = Json::obj();
         jl.set("bandwidth", Json::Num(link.bandwidth))
             .set("latency", Json::Num(link.latency))
@@ -138,9 +146,9 @@ fn main() {
             for &t in &thread_cases {
                 let mut by_depth = Json::obj();
                 for &d in &depth_cases {
-                    if let Some((_, _, _, wall_ns, r)) = results
+                    if let Some((_, _, _, wall_ns, r, stats)) = results
                         .iter()
-                        .find(|(pr, th, de, _, _)| *pr == preset && *th == t && *de == d)
+                        .find(|(pr, th, de, _, _, _)| *pr == preset && *th == t && *de == d)
                     {
                         let mut jr = Json::obj();
                         jr.set("wall_mean_us", Json::Num(wall_ns / 1e3));
@@ -150,6 +158,11 @@ fn main() {
                             "down_mb_per_step",
                             Json::Num(r.bytes_down as f64 / r.steps.max(1) as f64 / 1e6),
                         );
+                        if let Some(st) = stats {
+                            jr.set("claims", Json::Num(st.claims as f64));
+                            jr.set("steals", Json::Num(st.steals as f64));
+                            jr.set("affinity_hits", Json::Num(st.affinity_hits as f64));
+                        }
                         by_depth.set(&d.to_string(), jr);
                     }
                 }

@@ -14,8 +14,11 @@
 mod bench_util;
 
 use bench_util::{append_bench_run, bench, section, BenchResult};
+use lowbit_opt::engine::{active_sched, SchedMode, SchedStats};
 use lowbit_opt::model::TransformerConfig;
+use lowbit_opt::optim::lowbit::{CompressedAdamW, QuantPolicy};
 use lowbit_opt::optim::{build, build_threaded, Hyper, Optimizer, Param, ParamKind};
+use lowbit_opt::quant::active_tier;
 use lowbit_opt::tensor::Tensor;
 use lowbit_opt::util::json::Json;
 use lowbit_opt::util::rng::Pcg64;
@@ -89,13 +92,14 @@ fn main() {
 
     let scaling_presets = ["adamw32", "sgdm", "sm3", "adamw4"];
     let thread_cases = [1usize, 2, 4, 8];
-    // (preset, threads, cold-step ns, warm steady-state result). The
-    // cold step re-pays the full plan/meta/arena construction (the
-    // caches are invalidated right before it); the warm numbers are the
-    // steady state that reuses the step context. Keeping both in the
-    // bench JSON makes the cache win — and any regression of either
-    // path — visible across PRs.
-    let mut results: Vec<(&str, usize, f64, BenchResult)> = Vec::new();
+    // (preset, threads, cold-step ns, warm steady-state result,
+    // scheduler telemetry). The cold step re-pays the full
+    // plan/meta/arena construction (the caches are invalidated right
+    // before it); the warm numbers are the steady state that reuses the
+    // step context. Keeping both in the bench JSON makes the cache win —
+    // and any regression of either path — visible across PRs. The
+    // telemetry is cumulative over the whole run (warmup included).
+    let mut results: Vec<(&str, usize, f64, BenchResult, Option<SchedStats>)> = Vec::new();
     for preset in scaling_presets {
         for &threads in &thread_cases {
             let mut opt = build_threaded(preset, Hyper::default(), threads).unwrap();
@@ -133,14 +137,14 @@ fn main() {
                 res.mean_ns / big_n as f64,
                 cold_ns / 1e3
             );
-            results.push((preset, threads, cold_ns, res));
+            results.push((preset, threads, cold_ns, res, opt.sched_stats()));
         }
     }
     let mean_of = |p: &str, t: usize| {
         results
             .iter()
-            .find(|(pr, th, _, _)| *pr == p && *th == t)
-            .map(|(_, _, _, r)| r.mean_ns)
+            .find(|(pr, th, _, _, _)| *pr == p && *th == t)
+            .map(|(_, _, _, r, _)| r.mean_ns)
     };
     for preset in scaling_presets {
         if let (Some(t1), Some(t4)) = (mean_of(preset, 1), mean_of(preset, 4)) {
@@ -155,18 +159,73 @@ fn main() {
         );
     }
 
+    // --------------------------------------------------------------
+    // Scheduler comparison: the same adamw4 workload at 8 threads under
+    // the shared-queue reference vs the sticky affinity scheduler (both
+    // pinned per-engine, so one process measures both). Warm sticky must
+    // be no slower than queue — the BENCH_engine.json record below is
+    // the acceptance gate — and the telemetry shows why: warm sticky
+    // steps re-claim their learned shards instead of racing one atomic.
+    // --------------------------------------------------------------
+    section("scheduler modes: queue vs sticky (adamw4, 8 threads)");
+    let mut sched_results: Vec<(&'static str, BenchResult, SchedStats)> = Vec::new();
+    for mode in [SchedMode::Queue, SchedMode::Sticky] {
+        let mut opt = CompressedAdamW::new(Hyper::default(), QuantPolicy::bit4())
+            .with_threads(8)
+            .with_sched(mode);
+        let mut prng = Pcg64::seeded(13);
+        let mut params: Vec<Param> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                Param::new(
+                    &format!("p{i}"),
+                    ParamKind::Weight,
+                    Tensor::randn(s, 0.1, &mut prng),
+                )
+            })
+            .collect();
+        opt.step(&mut params, &big_grads, 1e-3); // lazy init + context build
+        let res = bench(
+            &format!("adamw4 engine, 8 threads, {} sched", mode.name()),
+            min_secs.max(0.25),
+            || {
+                opt.step(&mut params, &big_grads, 1e-3);
+            },
+        );
+        let stats = opt.sched_stats().expect("engine-backed optimizer");
+        println!(
+            "{}  claims {}  steals {}  affinity hits {}",
+            res.throughput_line(None),
+            stats.claims,
+            stats.steals,
+            stats.affinity_hits
+        );
+        sched_results.push((mode.name(), res, stats));
+    }
+    if let [(_, q, _), (_, s, _)] = &sched_results[..] {
+        println!(
+            "sticky warm mean is {:.3}x the queue warm mean (<= 1 is the win)",
+            s.mean_ns / q.mean_ns
+        );
+    }
+
     if let Some(path) = json_path {
         let mut run = Json::obj();
         run.set("bench", Json::Str("optim_step/engine-scaling".to_string()));
         run.set("model_params", Json::Num(big_n as f64));
         run.set("smoke", Json::Bool(smoke));
+        // Numbers are only comparable within a kernel tier × scheduler
+        // mode; tag the run with both resolved settings.
+        run.set("tier", Json::Str(active_tier().name().to_string()));
+        run.set("sched", Json::Str(active_sched().name().to_string()));
         let mut by_opt = Json::obj();
         for preset in scaling_presets {
             let mut entry = Json::obj();
             let mut by_threads = Json::obj();
             for &t in &thread_cases {
-                if let Some((_, _, cold_ns, r)) =
-                    results.iter().find(|(pr, th, _, _)| *pr == preset && *th == t)
+                if let Some((_, _, cold_ns, r, stats)) =
+                    results.iter().find(|(pr, th, _, _, _)| *pr == preset && *th == t)
                 {
                     let mut jr = Json::obj();
                     // mean/p50/p95 are the warm steady state (cache hit);
@@ -177,6 +236,11 @@ fn main() {
                     jr.set("p95_us", Json::Num(r.p95_ns / 1e3));
                     jr.set("cold_step_us", Json::Num(cold_ns / 1e3));
                     jr.set("iters", Json::Num(r.iters as f64));
+                    if let Some(st) = stats {
+                        jr.set("claims", Json::Num(st.claims as f64));
+                        jr.set("steals", Json::Num(st.steals as f64));
+                        jr.set("affinity_hits", Json::Num(st.affinity_hits as f64));
+                    }
                     by_threads.set(&t.to_string(), jr);
                 }
             }
@@ -189,6 +253,19 @@ fn main() {
             by_opt.set(preset, entry);
         }
         run.set("optimizers", by_opt);
+        let mut by_sched = Json::obj();
+        for (name, r, stats) in &sched_results {
+            let mut jr = Json::obj();
+            jr.set("mean_us", Json::Num(r.mean_ns / 1e3));
+            jr.set("p50_us", Json::Num(r.p50_ns / 1e3));
+            jr.set("p95_us", Json::Num(r.p95_ns / 1e3));
+            jr.set("iters", Json::Num(r.iters as f64));
+            jr.set("claims", Json::Num(stats.claims as f64));
+            jr.set("steals", Json::Num(stats.steals as f64));
+            jr.set("affinity_hits", Json::Num(stats.affinity_hits as f64));
+            by_sched.set(name, jr);
+        }
+        run.set("sched_compare_8t", by_sched);
         append_bench_run(&path, run);
         println!("appended run to {path}");
     }

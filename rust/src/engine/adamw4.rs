@@ -42,7 +42,7 @@
 use super::ctx::{GlobalSlot, StepContext, StepScratch, VecArena};
 use super::plan::{MetaSpec, Piece, Plan, StateLayout, TensorMeta};
 use super::shared::SharedSlice;
-use super::{step_seed, StepEngine, PHASE_C_STREAM_BASE};
+use super::{step_seed, Affinity, StepEngine, PHASE_C_STREAM_BASE};
 use crate::optim::factor::FactoredSecond;
 use crate::optim::state::{MomentState, SecondState};
 use crate::optim::{Hyper, Param};
@@ -561,6 +561,7 @@ pub(crate) fn phase_f(
     grads: &[Tensor],
     hp: &Hyper,
     v_states: &mut [SecondState],
+    aff: &mut Affinity,
 ) {
     {
         let mut slot_views = arena.lease::<SharedSlice<f32>>();
@@ -568,7 +569,7 @@ pub(crate) fn phase_f(
         let slot_views = slot_views.as_slice();
         let plan_ref = plan;
         let metas_ref = metas;
-        eng.run_tasks::<(), _>(threads, plan.tasks.len(), |ti, _| {
+        eng.run_tasks_in::<(), _>(threads, plan.tasks.len(), aff, |ti, _| {
             for piece in &plan_ref.tasks[ti].pieces {
                 let meta = &metas_ref[piece.tensor];
                 if meta.v != StateLayout::Factored {
@@ -739,6 +740,7 @@ pub fn compressed_step(
         m_buf_of,
         v_buf_of,
         arena,
+        affinity,
         ..
     } = ctx;
     let plan = &*plan;
@@ -751,7 +753,7 @@ pub fn compressed_step(
 
     // ---------------- Phase F: factored-v statistics -----------------
     if metas.iter().any(|m| m.v == StateLayout::Factored) {
-        phase_f(eng, threads, plan, metas, slots, red, arena, grads, &hp, v_states);
+        phase_f(eng, threads, plan, metas, slots, red, arena, grads, &hp, v_states, affinity);
     }
 
     {
@@ -859,12 +861,18 @@ pub fn compressed_step(
             slot_views.extend(slots.iter_mut().map(|s| SharedSlice::new(s.as_mut_slice())));
             let slot_views = slot_views.as_slice();
             let plan_ref = plan;
-            eng.run_tasks_with(threads, plan.tasks.len(), &mut scratch[..], |ti, scratch| {
-                let mut rng = Pcg64::new(seed, ti as u64);
-                for piece in &plan_ref.tasks[ti].pieces {
-                    phase_a_piece(piece, ctxs, slot_views, &hp, sp.t, sp.lr, scratch, &mut rng);
-                }
-            });
+            eng.run_tasks_with_in(
+                threads,
+                plan.tasks.len(),
+                affinity,
+                &mut scratch[..],
+                |ti, scratch| {
+                    let mut rng = Pcg64::new(seed, ti as u64);
+                    for piece in &plan_ref.tasks[ti].pieces {
+                        phase_a_piece(piece, ctxs, slot_views, &hp, sp.t, sp.lr, scratch, &mut rng);
+                    }
+                },
+            );
         }
 
         // ---------- Reduce A→C: combine scale statistics -------------
@@ -874,12 +882,18 @@ pub fn compressed_step(
         if !globals.is_empty() {
             let plan_ref = plan;
             let new_scales_ref: &[Option<Scales>] = &new_scales[..];
-            eng.run_tasks_with(threads, plan.tasks.len(), &mut scratch[..], |ti, scratch| {
-                let mut rng = Pcg64::new(seed, PHASE_C_STREAM_BASE + ti as u64);
-                for piece in &plan_ref.tasks[ti].pieces {
-                    phase_c_piece(piece, ctxs, new_scales_ref, &hp, scratch, &mut rng);
-                }
-            });
+            eng.run_tasks_with_in(
+                threads,
+                plan.tasks.len(),
+                affinity,
+                &mut scratch[..],
+                |ti, scratch| {
+                    let mut rng = Pcg64::new(seed, PHASE_C_STREAM_BASE + ti as u64);
+                    for piece in &plan_ref.tasks[ti].pieces {
+                        phase_c_piece(piece, ctxs, new_scales_ref, &hp, scratch, &mut rng);
+                    }
+                },
+            );
         }
     }
 

@@ -40,6 +40,13 @@
 //! makes the check schedule-independent — a racy overlap is caught even
 //! when this particular run never interleaved the two accesses.
 //!
+//! Scopes key on the *task id*, never on the worker that ran it, so the
+//! auditor is scheduler-blind: a task claimed from a worker's local
+//! queue, taken over the shared atomic queue, or stolen from another
+//! worker's block registers identical intervals. The forced-steal
+//! schedules in `rust/tests/audit_stress.rs` pin this down — stolen
+//! schedules must be as false-alarm-free as natural ones.
+//!
 //! Accesses from outside any engine phase (unit tests poking
 //! `range_mut` directly, single-threaded setup code) are bounds-checked
 //! but not tracked: with no task scope there is no disjointness claim

@@ -40,6 +40,7 @@
 //! allocations at one thread.
 
 use super::plan::{build_plan, MetaSpec, Plan, TensorMeta};
+use super::Affinity;
 use crate::quant::{Quantizer, Scales};
 use std::alloc::Layout;
 use std::cell::RefCell;
@@ -282,6 +283,13 @@ pub struct StepContext {
     /// stage-in before any read.
     pub(crate) stage_bytes: Vec<Vec<u8>>,
     pub(crate) stage_vals: Vec<Vec<f32>>,
+    /// The sticky scheduler's persistent task→worker affinity table
+    /// (`super::Affinity`): executors thread it into every
+    /// `run_tasks*_in` phase so a warmed-up step re-claims the same
+    /// shards on the same workers. Grow-only (the zero-allocation
+    /// warm-step pins cover it); reset on rebuild since task ids
+    /// renumber with the plan.
+    pub(crate) affinity: Affinity,
 }
 
 impl Default for StepContext {
@@ -312,6 +320,7 @@ impl StepContext {
             arena: VecArena::new(),
             stage_bytes: Vec::new(),
             stage_vals: Vec::new(),
+            affinity: Affinity::new(),
         }
     }
 
@@ -366,6 +375,9 @@ impl StepContext {
         self.new_scales.clear();
         self.m_buf_of.clear();
         self.v_buf_of.clear();
+        // Task ids renumber with the plan, so the learned task→worker
+        // map is meaningless now (it could only cost mis-seeded steals).
+        self.affinity.reset();
         self.shard_elems = shard_elems;
         self.valid = true;
         self.generation += 1;

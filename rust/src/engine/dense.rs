@@ -122,7 +122,7 @@ pub fn adamw32_step(
     vs.extend(v.iter_mut().map(|t| SharedSlice::new(t.data.as_mut_slice())));
     let (ws, ms, vs) = (ws.as_slice(), ms.as_slice(), vs.as_slice());
     let plan_ref = plan;
-    eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
+    eng.run_tasks_in::<(), _>(threads, plan.tasks.len(), &mut ctx.affinity, move |ti, _| {
         for piece in &plan_ref.tasks[ti].pieces {
             let (lo, hi) = (piece.lo, piece.hi);
             // SAFETY: pieces partition each tensor disjointly (plan
@@ -174,7 +174,7 @@ pub fn sgdm_step(
     ms.extend(m.iter_mut().map(|t| SharedSlice::new(t.data.as_mut_slice())));
     let (ws, ms) = (ws.as_slice(), ms.as_slice());
     let plan_ref = plan;
-    eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
+    eng.run_tasks_in::<(), _>(threads, plan.tasks.len(), &mut ctx.affinity, move |ti, _| {
         for piece in &plan_ref.tasks[ti].pieces {
             let (lo, hi) = (piece.lo, piece.hi);
             // SAFETY: disjoint shard ranges (plan invariant).
@@ -280,7 +280,7 @@ pub fn sm3_step(
         let (routes, ws, ms) = (routes.as_slice(), ws.as_slice(), ms.as_slice());
         let slot_views = slot_views.as_slice();
         let plan_ref = plan;
-        eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
+        eng.run_tasks_in::<(), _>(threads, plan.tasks.len(), &mut ctx.affinity, move |ti, _| {
             for piece in &plan_ref.tasks[ti].pieces {
                 let (lo, hi) = (piece.lo, piece.hi);
                 // SAFETY: disjoint shard ranges (plan invariant).
@@ -485,7 +485,7 @@ pub fn adafactor_step(
             aux_views.extend(ctx.aux.iter_mut().map(|a| SharedSlice::new(a.as_mut_slice())));
             let slot_views = slot_views.as_slice();
             let aux_views = aux_views.as_slice();
-            eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
+            eng.run_tasks_in::<(), _>(threads, plan.tasks.len(), &mut ctx.affinity, move |ti, _| {
                 for piece in &plan.tasks[ti].pieces {
                     let meta = &metas[piece.tensor];
                     if meta.v != StateLayout::Factored {
@@ -595,7 +595,7 @@ pub fn adafactor_step(
             let mut aux_views = arena.lease();
             aux_views.extend(ctx.aux.iter_mut().map(|a| SharedSlice::new(a.as_mut_slice())));
             let aux_views = aux_views.as_slice();
-            eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
+            eng.run_tasks_in::<(), _>(threads, plan.tasks.len(), &mut ctx.affinity, move |ti, _| {
                 for piece in &plan_ref.tasks[ti].pieces {
                     let (lo, hi) = (piece.lo, piece.hi);
                     let g = &grads[piece.tensor].data[lo..hi];
@@ -655,7 +655,7 @@ pub fn adafactor_step(
         let invs: &[Option<f32>] = invs;
 
         // ---------- Phase W: clip, momentum, weight update -----------
-        eng.run_tasks::<(), _>(threads, plan.tasks.len(), move |ti, _| {
+        eng.run_tasks_in::<(), _>(threads, plan.tasks.len(), &mut ctx.affinity, move |ti, _| {
             for piece in &plan_ref.tasks[ti].pieces {
                 let (lo, hi) = (piece.lo, piece.hi);
                 let g = &grads[piece.tensor].data[lo..hi];

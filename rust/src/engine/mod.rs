@@ -106,6 +106,80 @@
 //!    every thread count and every prefetch depth
 //!    (`rust/tests/offload_pipeline.rs`).
 //!
+//! # Scheduler
+//!
+//! Parallel phases run under one of two schedulers, resolved once per
+//! process from `LOWBIT_ENGINE_SCHED=queue|sticky|auto` (mirroring
+//! `LOWBIT_KERNEL_TIER`; unknown values are a hard error) or overridden
+//! per engine with [`StepEngine::with_sched`]:
+//!
+//! * **`queue`** — the reference scheduler: workers pull task indices
+//!   off one shared atomic counter in plan order. Simple, fair, and the
+//!   baseline the parity suites compare against.
+//! * **`sticky`** (the `auto` default) — locality-aware per-worker
+//!   claim queues driven by an [`Affinity`] table, so a warmed-up step
+//!   re-claims the same shards on the same workers and each worker's
+//!   4-bit state tiles stay hot in its local cache slice.
+//!
+//! **Affinity lifecycle.** The table records, per task id, the worker
+//! slot that last ran it. A task with no recorded owner is seeded by
+//! contiguous range partition (task `i` of `n` on `t` workers → slot
+//! `i·t/n` — the plan emits tasks in address order, so the seed is a
+//! contiguous address-space split); owners recorded under a larger
+//! worker count are remapped by `% threads`. Ownership is updated from
+//! who *actually* ran each task, stealers included. The executors keep
+//! one table per optimizer inside [`ctx::StepContext`] and pass it to
+//! the `run_tasks*_in` entry points, so it persists across phases and
+//! steps; the plain `run_tasks*` methods use a throwaway table. The
+//! table is grow-only and [`Affinity::prepare`] rebuilds the claim
+//! blocks in place, so a warmed-up step allocates nothing
+//! (`ctx_cache.rs` pins this, sticky mode included). A context rebuild
+//! resets the table — task ids renumber with the plan. Sharing one
+//! table across phases with different task counts (phase A vs the
+//! offload queue) is deliberate: affinity is purely a locality
+//! heuristic, so a stale or remapped owner can cost a steal but never
+//! changes results.
+//!
+//! **Stealing bounds.** Each phase, `prepare` groups the task ids into
+//! one contiguous block per worker (a stable counting sort — ascending
+//! task order *within* each block) and workers claim from their own
+//! block through a per-worker cursor. Only when the local block is
+//! drained does a worker steal: victims are visited deterministically
+//! by ascending slot distance (`(slot + d) % threads`, `d = 1..t`),
+//! each victim's remaining block is drained from the *front*, and after
+//! one full pass over the victims the worker exits the phase.
+//!
+//! **Why determinism survives.** Scheduling decides only *who* runs a
+//! task and *when* — never what the task is (rule 1), what randomness
+//! it draws (rule 2), or how cross-shard reductions combine (rule 3).
+//! So any claim order — local, stolen, or re-randomized — produces
+//! bit-identical bytes, and `queue` vs `sticky` is pinned bitwise by
+//! `engine_parity.rs` at threads 1/2/7. For dependency queues
+//! (`run_tasks_dep`) the deadlock-freedom argument survives stealing:
+//! consider the smallest unfinished entry `m`, owned by slot `v`.
+//! Every entry before `m` in `v`'s block is smaller (ascending blocks),
+//! hence finished — so `v` is not parked on a dependency (anything it
+//! claimed earlier is finished) and `v`'s next local claim is `m`
+//! itself, unless a stealer already took `m` off the block front. In
+//! either case `m`'s dependency (`< m`) is finished, so whoever holds
+//! `m` runs it immediately: progress at every worker count.
+//!
+//! **Dependency waits.** An unfinished dependency is awaited in three
+//! stages: a bounded spin (covers the common near-miss), a bounded run
+//! of yields, then a parked condvar wait with a short timeout — a long
+//! link-stage wait in the offload pipeline stops burning a core. A
+//! completion store-releases the done flag, then fences (SeqCst) and
+//! checks the waiter count before notifying — Dekker-style pairing with
+//! the waiter's SeqCst registration, so a wakeup is never lost; the
+//! timeout converts any missed edge into bounded latency, not a hang.
+//!
+//! **Telemetry.** Per-worker claim / steal / affinity-hit counters
+//! (relaxed atomics, negligible next to a shard's work) accumulate in
+//! the `Affinity` table, surface through [`Affinity::stats`] and
+//! `Optimizer::sched_stats`, and land in the bench JSON trajectories
+//! (`BENCH_engine.json` / `BENCH_offload.json`) tagged with the active
+//! scheduler mode.
+//!
 //! # Pool lifecycle
 //!
 //! Worker threads are **persistent**, not spawned per phase: the first
@@ -180,8 +254,9 @@ pub use plan::{build_plan, MetaSpec, Plan, StateLayout, TensorMeta};
 pub use shared::SharedSlice;
 
 use pool::WorkerPool;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{fence, AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
 
 /// Default shard size in elements (~256 KB of f32 values per shard).
 pub const DEFAULT_SHARD_ELEMS: usize = 1 << 16;
@@ -224,10 +299,335 @@ impl std::fmt::Debug for PoolCell {
     }
 }
 
+/// Task scheduler selection — see the module docs' "Scheduler" section.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Reference scheduler: one shared atomic claim counter.
+    Queue,
+    /// Locality-aware scheduler: per-worker claim queues seeded from the
+    /// [`Affinity`] table, with bounded work stealing.
+    Sticky,
+}
+
+impl SchedMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedMode::Queue => "queue",
+            SchedMode::Sticky => "sticky",
+        }
+    }
+}
+
+/// The pure scheduler-resolution rule behind [`active_sched`], split out
+/// so tests can pin every arm without touching the process environment.
+/// `over` is the `LOWBIT_ENGINE_SCHED` value, if set. Unknown values are
+/// a hard error — a typo silently falling back to a default would make
+/// A/B runs lie.
+pub fn resolve_sched(over: Option<&str>) -> SchedMode {
+    match over {
+        None | Some("auto") => SchedMode::Sticky,
+        Some("queue") => SchedMode::Queue,
+        Some("sticky") => SchedMode::Sticky,
+        Some(other) => panic!(
+            "LOWBIT_ENGINE_SCHED={other:?} is not a scheduler (expected queue|sticky|auto)"
+        ),
+    }
+}
+
+/// The process-wide scheduler mode: `LOWBIT_ENGINE_SCHED` when set, else
+/// `sticky`. Read **once per process** and cached, exactly like
+/// [`auto_threads`] / `LOWBIT_KERNEL_TIER` — each `ci.sh` test run is its
+/// own process, so the `queue` pass genuinely flips the whole suite to
+/// the reference scheduler. Per-engine [`StepEngine::with_sched`]
+/// overrides bypass it (the parity suite compares both modes in one
+/// process that way).
+pub fn active_sched() -> SchedMode {
+    static ACTIVE: OnceLock<SchedMode> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let over = std::env::var("LOWBIT_ENGINE_SCHED").ok();
+        resolve_sched(over.as_deref())
+    })
+}
+
+/// Scheduler telemetry totals, summed over workers — the claims include
+/// the steals, and the affinity hits are the claims whose task was
+/// re-run by the worker that ran it last time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedStats {
+    pub mode: SchedMode,
+    pub claims: u64,
+    pub steals: u64,
+    pub affinity_hits: u64,
+}
+
+/// Owner entry for a task nobody has run yet.
+const UNSEEDED: u32 = u32::MAX;
+
+/// The sticky scheduler's state: the persistent task→worker ownership
+/// map, the per-phase claim blocks built from it, and the telemetry
+/// counters. One table lives in each optimizer's `StepContext` (passed
+/// to the `run_tasks*_in` entry points); the plain `run_tasks*` methods
+/// use a throwaway one. Everything is grow-only, so a warmed-up phase
+/// prepares and runs with zero allocations. See the module docs'
+/// "Scheduler" section for the lifecycle and the stealing bounds.
+#[derive(Default)]
+pub struct Affinity {
+    /// Worker slot that last ran each task id; [`UNSEEDED`] until then.
+    owner: Vec<AtomicU32>,
+    /// This phase's task ids, grouped into one contiguous block per
+    /// worker, ascending task order within each block.
+    queue: Vec<u32>,
+    /// Per-worker claim cursor into `queue`. Stealers bump their
+    /// victim's cursor too, so a block drains exactly once.
+    cursors: Vec<AtomicUsize>,
+    /// Exclusive end of each worker's block in `queue`.
+    ends: Vec<usize>,
+    /// Counting-sort scratch (block write positions).
+    counts: Vec<usize>,
+    /// Telemetry, per worker slot (relaxed; read by [`Self::stats`]).
+    claims: Vec<AtomicU64>,
+    steals: Vec<AtomicU64>,
+    hits: Vec<AtomicU64>,
+}
+
+impl Affinity {
+    pub fn new() -> Affinity {
+        Affinity::default()
+    }
+
+    /// Drop the learned task→worker map (the plan was rebuilt, so task
+    /// ids renumbered). Telemetry totals are kept — they count the
+    /// process, not one plan.
+    pub fn reset(&mut self) {
+        self.owner.clear();
+    }
+
+    /// Record `slot` as `task`'s owner, as if that worker had just run
+    /// it. Public for the forced-steal schedule tests (`audit_stress`):
+    /// parking every task on one slot makes every other worker's local
+    /// queue empty, so the phase runs entirely on steals.
+    pub fn force_owner(&mut self, task: usize, slot: u32) {
+        if self.owner.len() <= task {
+            self.owner.resize_with(task + 1, || AtomicU32::new(UNSEEDED));
+        }
+        self.owner[task].store(slot, Ordering::Relaxed);
+    }
+
+    /// Telemetry totals so far, summed over workers.
+    pub fn stats(&self, mode: SchedMode) -> SchedStats {
+        let sum = |v: &[AtomicU64]| v.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+        SchedStats {
+            mode,
+            claims: sum(&self.claims),
+            steals: sum(&self.steals),
+            affinity_hits: sum(&self.hits),
+        }
+    }
+
+    /// Grow the per-worker tables (cursors, block bounds, counters) to
+    /// `threads` entries. Grow-only; allocation-free once warm.
+    fn ensure_workers(&mut self, threads: usize) {
+        if self.cursors.len() < threads {
+            self.cursors.resize_with(threads, || AtomicUsize::new(0));
+            self.ends.resize(threads, 0);
+            self.counts.resize(threads, 0);
+            self.claims.resize_with(threads, || AtomicU64::new(0));
+            self.steals.resize_with(threads, || AtomicU64::new(0));
+            self.hits.resize_with(threads, || AtomicU64::new(0));
+        }
+    }
+
+    /// Grow the ownership map to `n_tasks` entries. Grow-only.
+    fn ensure_tasks(&mut self, n_tasks: usize) {
+        if self.owner.len() < n_tasks {
+            self.owner.resize_with(n_tasks, || AtomicU32::new(UNSEEDED));
+        }
+    }
+
+    /// Block assignment for task `i`: its recorded owner when it has
+    /// one (remapped by `% threads` if it was recorded under a larger
+    /// worker count), else the contiguous range-partition seed.
+    fn home_slot(&self, i: usize, threads: usize, n_tasks: usize) -> usize {
+        let o = self.owner[i].load(Ordering::Relaxed);
+        if o == UNSEEDED {
+            i * threads / n_tasks
+        } else {
+            (o as usize) % threads
+        }
+    }
+
+    /// Build this phase's claim blocks: a stable counting sort of the
+    /// task ids by home slot (ascending task order within each block —
+    /// the dependency-queue progress proof relies on that), then reset
+    /// every cursor to its block start. In-place and allocation-free
+    /// once the tables are grown.
+    fn prepare(&mut self, threads: usize, n_tasks: usize) {
+        self.ensure_workers(threads);
+        self.ensure_tasks(n_tasks);
+        if self.queue.len() < n_tasks {
+            self.queue.resize(n_tasks, 0);
+        }
+        self.counts[..threads].fill(0);
+        for i in 0..n_tasks {
+            self.counts[self.home_slot(i, threads, n_tasks)] += 1;
+        }
+        let mut start = 0usize;
+        for s in 0..threads {
+            let c = self.counts[s];
+            self.counts[s] = start; // becomes the block write position
+            self.cursors[s].store(start, Ordering::Relaxed);
+            start += c;
+            self.ends[s] = start;
+        }
+        for i in 0..n_tasks {
+            let s = self.home_slot(i, threads, n_tasks);
+            let pos = self.counts[s];
+            self.queue[pos] = i as u32;
+            self.counts[s] = pos + 1;
+        }
+    }
+
+    /// Sticky claim loop for worker `slot`: drain the local block, then
+    /// steal by ascending slot distance, draining each victim's
+    /// remaining block from the front (see the module docs' "Stealing
+    /// bounds"). `run` is invoked with claimed task ids.
+    fn run_worker(&self, slot: usize, threads: usize, mut run: impl FnMut(usize)) {
+        let end = self.ends[slot];
+        loop {
+            let pos = self.cursors[slot].fetch_add(1, Ordering::Relaxed);
+            if pos >= end {
+                break;
+            }
+            let i = self.queue[pos] as usize;
+            self.claims[slot].fetch_add(1, Ordering::Relaxed);
+            if self.owner[i].load(Ordering::Relaxed) == slot as u32 {
+                self.hits[slot].fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.owner[i].store(slot as u32, Ordering::Relaxed);
+            }
+            run(i);
+        }
+        for d in 1..threads {
+            let v = (slot + d) % threads;
+            let vend = self.ends[v];
+            loop {
+                let pos = self.cursors[v].fetch_add(1, Ordering::Relaxed);
+                if pos >= vend {
+                    break;
+                }
+                let i = self.queue[pos] as usize;
+                self.claims[slot].fetch_add(1, Ordering::Relaxed);
+                self.steals[slot].fetch_add(1, Ordering::Relaxed);
+                self.owner[i].store(slot as u32, Ordering::Relaxed);
+                run(i);
+            }
+        }
+    }
+
+    /// Queue-mode claim loop (the reference scheduler) with the same
+    /// telemetry and ownership updates, so switching an engine to
+    /// sticky mid-process starts from a live map.
+    fn run_worker_queue(
+        &self,
+        slot: usize,
+        next: &AtomicUsize,
+        n_tasks: usize,
+        mut run: impl FnMut(usize),
+    ) {
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n_tasks {
+                break;
+            }
+            self.claims[slot].fetch_add(1, Ordering::Relaxed);
+            if self.owner[i].load(Ordering::Relaxed) == slot as u32 {
+                self.hits[slot].fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.owner[i].store(slot as u32, Ordering::Relaxed);
+            }
+            run(i);
+        }
+    }
+}
+
+/// Dependency-wait backoff for `run_tasks_dep`: bounded spin → bounded
+/// yields → parked condvar wait with a timeout. Stack-allocated per
+/// phase (Linux `Mutex`/`Condvar` are futex-based and heap-free). See
+/// the module docs' "Dependency waits" for the wakeup protocol.
+struct DepWait {
+    lock: Mutex<()>,
+    cv: Condvar,
+    /// Workers currently parked (or committed to parking). SeqCst so the
+    /// completer's fence+load pairs with the waiter's registration.
+    waiters: AtomicUsize,
+}
+
+/// Spin iterations before yielding, then yields before parking. Tuned
+/// loosely: spins cover a compute task finishing, yields cover a short
+/// link transfer, parking covers everything longer.
+const DEP_SPINS: usize = 128;
+const DEP_YIELDS: usize = 32;
+/// Park timeout: converts any (theoretically impossible, see `notify`)
+/// missed wakeup into bounded latency instead of a hang.
+const DEP_PARK: Duration = Duration::from_millis(5);
+
+impl DepWait {
+    fn new() -> DepWait {
+        DepWait {
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+            waiters: AtomicUsize::new(0),
+        }
+    }
+
+    /// Block until `done` reads true.
+    fn wait(&self, done: &AtomicBool) {
+        for _ in 0..DEP_SPINS {
+            if done.load(Ordering::Acquire) {
+                return;
+            }
+            std::hint::spin_loop();
+        }
+        for _ in 0..DEP_YIELDS {
+            if done.load(Ordering::Acquire) {
+                return;
+            }
+            std::thread::yield_now();
+        }
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        let mut guard = self.lock.lock().unwrap();
+        // Re-check under the lock: `notify` takes the lock before
+        // notifying, so a completion between this check and the wait
+        // cannot slip a notification past us.
+        while !done.load(Ordering::Acquire) {
+            let (g, _) = self.cv.wait_timeout(guard, DEP_PARK).unwrap();
+            guard = g;
+        }
+        drop(guard);
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Wake parked workers after a completion. The caller has already
+    /// store-released the done flag; the SeqCst fence orders that store
+    /// before the waiter-count load, pairing with the waiter's SeqCst
+    /// registration (Dekker): either we observe the waiter and notify,
+    /// or the waiter's re-check observes the done flag.
+    fn notify(&self) {
+        fence(Ordering::SeqCst);
+        if self.waiters.load(Ordering::Relaxed) > 0 {
+            drop(self.lock.lock().unwrap());
+            self.cv.notify_all();
+        }
+    }
+}
+
 /// The task scheduler: each phase runs its tasks on the engine's
-/// persistent worker pool, workers pulling task indices off an atomic
-/// queue. Execution *order* is nondeterministic; results are not,
-/// because each task is self-contained (see the module docs).
+/// persistent worker pool, workers claiming task indices through the
+/// resolved scheduler mode — the shared atomic queue (`queue`) or the
+/// affinity-seeded per-worker claim queues with bounded stealing
+/// (`sticky`; see the module docs' "Scheduler" section). Execution
+/// *order* is nondeterministic; results are not, because each task is
+/// self-contained (see the module docs).
 ///
 /// The pool outlives phases and steps (see the module docs' "Pool
 /// lifecycle"), removing the former per-phase spawn tax; tiny workloads
@@ -239,6 +639,9 @@ pub struct StepEngine {
     threads: usize,
     /// Target shard size in elements.
     shard_elems: usize,
+    /// Scheduler override; `None` defers to the process-wide
+    /// [`active_sched`] resolution.
+    sched: Option<SchedMode>,
     /// Persistent worker pool, shared by clones of this engine.
     pool: Arc<PoolCell>,
     /// Aliasing-auditor interval tracker, shared by clones of this
@@ -258,6 +661,7 @@ impl StepEngine {
         StepEngine {
             threads: 0,
             shard_elems: DEFAULT_SHARD_ELEMS,
+            sched: None,
             pool: Arc::new(PoolCell {
                 inner: Mutex::new(None),
             }),
@@ -280,12 +684,25 @@ impl StepEngine {
         self
     }
 
+    /// Pin this engine to a scheduler mode, overriding the process-wide
+    /// `LOWBIT_ENGINE_SCHED` resolution — how the parity suite compares
+    /// `queue` against `sticky` inside one process.
+    pub fn with_sched(mut self, sched: SchedMode) -> StepEngine {
+        self.sched = Some(sched);
+        self
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }
 
     pub fn shard_elems(&self) -> usize {
         self.shard_elems
+    }
+
+    /// The scheduler this engine's parallel phases run under.
+    pub fn sched(&self) -> SchedMode {
+        self.sched.unwrap_or_else(active_sched)
     }
 
     /// Worker count for a workload of `n_tasks` tasks over `total_elems`
@@ -317,6 +734,18 @@ impl StepEngine {
         S: Default + Send,
         F: Fn(usize, &mut S) + Sync,
     {
+        self.run_tasks_in(threads, n_tasks, &mut Affinity::new(), f)
+    }
+
+    /// [`Self::run_tasks`] against a caller-owned [`Affinity`] table, so
+    /// the learned shard→worker map (and the telemetry) persists across
+    /// phases and steps — the executors pass their `StepContext`'s
+    /// table. The plain method uses a throwaway table instead.
+    pub fn run_tasks_in<S, F>(&self, threads: usize, n_tasks: usize, aff: &mut Affinity, f: F)
+    where
+        S: Default + Send,
+        F: Fn(usize, &mut S) + Sync,
+    {
         if n_tasks == 0 {
             return;
         }
@@ -335,21 +764,30 @@ impl StepEngine {
             }
             return;
         }
+        let sched = self.sched();
+        match sched {
+            SchedMode::Sticky => aff.prepare(threads, n_tasks),
+            SchedMode::Queue => {
+                aff.ensure_workers(threads);
+                aff.ensure_tasks(n_tasks);
+            }
+        }
         let next = AtomicUsize::new(0);
         let next = &next;
         let f = &f;
+        let aff = &*aff;
         #[cfg(feature = "audit")]
         let audit_reg = &self.audit;
-        let body = move |_slot: usize| {
+        let body = move |slot: usize| {
             let mut scratch = S::default();
-            loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n_tasks {
-                    break;
-                }
+            let run = |i: usize| {
                 #[cfg(feature = "audit")]
                 let _task = audit::task_scope(audit_reg, i as u64);
                 f(i, &mut scratch);
+            };
+            match sched {
+                SchedMode::Sticky => aff.run_worker(slot, threads, run),
+                SchedMode::Queue => aff.run_worker_queue(slot, next, n_tasks, run),
             }
         };
         self.pool.ensure(threads).broadcast(threads, &body);
@@ -373,6 +811,26 @@ impl StepEngine {
         &self,
         threads: usize,
         deps: &[Option<usize>],
+        scratch: &mut [S],
+        f: F,
+    ) where
+        S: Send,
+        F: Fn(usize, &mut S) + Sync,
+    {
+        self.run_tasks_dep_in(threads, deps, &mut Affinity::new(), scratch, f)
+    }
+
+    /// [`Self::run_tasks_dep`] against a caller-owned [`Affinity`] table
+    /// (see [`Self::run_tasks_in`]). Under the sticky scheduler the
+    /// claim blocks keep ascending entry order and stealers take the
+    /// front of a victim's remaining block, which preserves the
+    /// "smallest unfinished entry is always runnable" progress proof —
+    /// see the module docs' "Scheduler" section.
+    pub fn run_tasks_dep_in<S, F>(
+        &self,
+        threads: usize,
+        deps: &[Option<usize>],
+        aff: &mut Affinity,
         scratch: &mut [S],
         f: F,
     ) where
@@ -406,14 +864,25 @@ impl StepEngine {
             "scratch pool ({}) smaller than the worker count ({threads})",
             scratch.len()
         );
+        let sched = self.sched();
+        match sched {
+            SchedMode::Sticky => aff.prepare(threads, n_tasks),
+            SchedMode::Queue => {
+                aff.ensure_workers(threads);
+                aff.ensure_tasks(n_tasks);
+            }
+        }
         let done: Vec<AtomicBool> = (0..n_tasks).map(|_| AtomicBool::new(false)).collect();
         let done = &done[..];
+        let wait = DepWait::new();
+        let wait = &wait;
         let next = AtomicUsize::new(0);
         let next = &next;
         let f = &f;
         let deps = &deps[..];
         let scratch_view = SharedSlice::new(scratch);
         let scratch_view = &scratch_view;
+        let aff = &*aff;
         #[cfg(feature = "audit")]
         let audit_reg = &self.audit;
         let body = move |slot: usize| {
@@ -424,20 +893,12 @@ impl StepEngine {
             // single owner.
             let slot_scratch = unsafe { scratch_view.range_mut(slot, slot + 1) };
             let s = &mut slot_scratch[0];
-            loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n_tasks {
-                    break;
-                }
+            let run = |i: usize| {
                 if let Some(d) = deps[i] {
-                    // The dependency was claimed before `i` (in-order
-                    // claiming); its worker makes progress because the
-                    // smallest unfinished entry never waits (deps point
-                    // strictly backwards), so this spin terminates.
-                    while !done[d].load(Ordering::Acquire) {
-                        std::hint::spin_loop();
-                        std::thread::yield_now();
-                    }
+                    // Whoever holds the dependency makes progress (the
+                    // smallest unfinished entry never waits — deps point
+                    // strictly backwards), so this wait terminates.
+                    wait.wait(&done[d]);
                 }
                 #[cfg(feature = "audit")]
                 let _task = audit::task_scope(audit_reg, i as u64);
@@ -445,6 +906,11 @@ impl StepEngine {
                 #[cfg(feature = "audit")]
                 drop(_task);
                 done[i].store(true, Ordering::Release);
+                wait.notify();
+            };
+            match sched {
+                SchedMode::Sticky => aff.run_worker(slot, threads, run),
+                SchedMode::Queue => aff.run_worker_queue(slot, next, n_tasks, run),
             }
         };
         self.pool.ensure(threads).broadcast(threads, &body);
@@ -457,6 +923,22 @@ impl StepEngine {
     /// free). `scratch` must hold at least `threads` entries.
     pub fn run_tasks_with<S, F>(&self, threads: usize, n_tasks: usize, scratch: &mut [S], f: F)
     where
+        S: Send,
+        F: Fn(usize, &mut S) + Sync,
+    {
+        self.run_tasks_with_in(threads, n_tasks, &mut Affinity::new(), scratch, f)
+    }
+
+    /// [`Self::run_tasks_with`] against a caller-owned [`Affinity`]
+    /// table (see [`Self::run_tasks_in`]).
+    pub fn run_tasks_with_in<S, F>(
+        &self,
+        threads: usize,
+        n_tasks: usize,
+        aff: &mut Affinity,
+        scratch: &mut [S],
+        f: F,
+    ) where
         S: Send,
         F: Fn(usize, &mut S) + Sync,
     {
@@ -479,11 +961,20 @@ impl StepEngine {
             "scratch pool ({}) smaller than the worker count ({threads})",
             scratch.len()
         );
+        let sched = self.sched();
+        match sched {
+            SchedMode::Sticky => aff.prepare(threads, n_tasks),
+            SchedMode::Queue => {
+                aff.ensure_workers(threads);
+                aff.ensure_tasks(n_tasks);
+            }
+        }
         let next = AtomicUsize::new(0);
         let next = &next;
         let f = &f;
         let scratch_view = SharedSlice::new(scratch);
         let scratch_view = &scratch_view;
+        let aff = &*aff;
         #[cfg(feature = "audit")]
         let audit_reg = &self.audit;
         let body = move |slot: usize| {
@@ -494,14 +985,14 @@ impl StepEngine {
             // single owner.
             let slot_scratch = unsafe { scratch_view.range_mut(slot, slot + 1) };
             let s = &mut slot_scratch[0];
-            loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n_tasks {
-                    break;
-                }
+            let run = |i: usize| {
                 #[cfg(feature = "audit")]
                 let _task = audit::task_scope(audit_reg, i as u64);
                 f(i, &mut *s);
+            };
+            match sched {
+                SchedMode::Sticky => aff.run_worker(slot, threads, run),
+                SchedMode::Queue => aff.run_worker_queue(slot, next, n_tasks, run),
             }
         };
         self.pool.ensure(threads).broadcast(threads, &body);
@@ -550,15 +1041,132 @@ mod tests {
 
     #[test]
     fn run_tasks_covers_every_index_once() {
-        for threads in [1, 2, 7] {
-            let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
-            let eng = StepEngine::new();
-            eng.run_tasks::<(), _>(threads, 100, |i, _| {
-                hits[i].fetch_add(1, Ordering::Relaxed);
-            });
-            for (i, h) in hits.iter().enumerate() {
-                assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} at {threads} threads");
+        for sched in [SchedMode::Queue, SchedMode::Sticky] {
+            for threads in [1, 2, 7] {
+                let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+                let eng = StepEngine::new().with_sched(sched);
+                eng.run_tasks::<(), _>(threads, 100, |i, _| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(
+                        h.load(Ordering::Relaxed),
+                        1,
+                        "task {i} at {threads} threads ({})",
+                        sched.name()
+                    );
+                }
             }
+        }
+    }
+
+    #[test]
+    fn resolve_sched_rules() {
+        assert_eq!(resolve_sched(None), SchedMode::Sticky, "unset = auto");
+        assert_eq!(resolve_sched(Some("auto")), SchedMode::Sticky);
+        assert_eq!(resolve_sched(Some("sticky")), SchedMode::Sticky);
+        assert_eq!(resolve_sched(Some("queue")), SchedMode::Queue);
+        assert_eq!(SchedMode::Queue.name(), "queue");
+        assert_eq!(SchedMode::Sticky.name(), "sticky");
+        let eng = StepEngine::new().with_sched(SchedMode::Queue);
+        assert_eq!(eng.sched(), SchedMode::Queue, "per-engine override wins");
+    }
+
+    #[test]
+    #[should_panic(expected = "not a scheduler")]
+    fn resolve_sched_rejects_unknown_values() {
+        resolve_sched(Some("stickyy"));
+    }
+
+    #[test]
+    fn sticky_warm_rerun_is_all_affinity_hits() {
+        // Two tasks, two workers, each task gated on a 2-party barrier
+        // so both workers participate and neither can drain its block
+        // and start stealing while the other still owns unclaimed work —
+        // the schedule is pinned. Phase 1 seeds the range partition
+        // (task i → slot i) and records the owners; phase 2 re-claims
+        // every task on its recorded owner, so every phase-2 claim is an
+        // affinity hit and nothing is ever stolen.
+        let eng = StepEngine::new().with_sched(SchedMode::Sticky);
+        let mut aff = Affinity::new();
+        for _ in 0..2 {
+            let barrier = std::sync::Barrier::new(2);
+            eng.run_tasks_in::<(), _>(2, 2, &mut aff, |_i, _| {
+                barrier.wait();
+            });
+        }
+        let s = aff.stats(SchedMode::Sticky);
+        assert_eq!(s.claims, 4, "every task claimed exactly once per phase");
+        assert_eq!(s.steals, 0, "disjoint warm blocks leave nothing to steal");
+        assert_eq!(s.affinity_hits, 2, "the warm rerun re-claims both tasks in place");
+    }
+
+    #[test]
+    fn sticky_steals_when_local_queue_is_empty() {
+        // Both tasks are parked on slot 1, and each task blocks on a
+        // 2-party barrier — so they *must* run on different workers.
+        // Slot 0's local block is empty, hence its task was a steal.
+        let threads = 2;
+        let eng = StepEngine::new().with_sched(SchedMode::Sticky);
+        let mut aff = Affinity::new();
+        aff.force_owner(0, 1);
+        aff.force_owner(1, 1);
+        let barrier = std::sync::Barrier::new(2);
+        eng.run_tasks_in::<(), _>(threads, 2, &mut aff, |_i, _| {
+            barrier.wait();
+        });
+        let s = aff.stats(SchedMode::Sticky);
+        assert_eq!(s.claims, 2);
+        assert_eq!(s.steals, 1, "exactly one task crossed to the idle worker");
+    }
+
+    #[test]
+    fn queue_mode_counts_claims_in_shared_table() {
+        let eng = StepEngine::new().with_sched(SchedMode::Queue);
+        let mut aff = Affinity::new();
+        eng.run_tasks_in::<(), _>(3, 50, &mut aff, |_i, _| {});
+        let s = aff.stats(SchedMode::Queue);
+        assert_eq!(s.mode, SchedMode::Queue);
+        assert_eq!(s.claims, 50);
+        assert_eq!(s.steals, 0, "the reference scheduler never steals");
+    }
+
+    #[test]
+    fn affinity_prepare_partitions_and_reset_clears_owners() {
+        let mut aff = Affinity::new();
+        aff.prepare(4, 8);
+        // Unseeded: contiguous range partition, two tasks per block,
+        // ascending within each block.
+        assert_eq!(&aff.queue[..8], &[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(aff.ends, vec![2, 4, 6, 8]);
+        // A recorded owner moves its task; stale owners remap % threads.
+        aff.force_owner(0, 3);
+        aff.force_owner(7, 9); // 9 % 4 == 1
+        aff.prepare(4, 8);
+        assert_eq!(&aff.queue[..8], &[1, 2, 3, 7, 4, 5, 0, 6]);
+        assert_eq!(aff.ends, vec![1, 4, 6, 8]);
+        aff.reset();
+        aff.prepare(4, 8);
+        assert_eq!(&aff.queue[..8], &[0, 1, 2, 3, 4, 5, 6, 7], "reset forgot the owners");
+    }
+
+    #[test]
+    fn run_tasks_dep_waits_park_and_wake() {
+        // The dependency outlasts the spin+yield budget, forcing the
+        // condvar path: entry 1 waits on entry 0, whose body sleeps well
+        // past any reasonable spin. Ordering must still hold.
+        let eng = StepEngine::new().with_threads(2);
+        for sched in [SchedMode::Queue, SchedMode::Sticky] {
+            let eng = eng.clone().with_sched(sched);
+            let order: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+            let mut scratch = vec![(); 2];
+            eng.run_tasks_dep(2, &[None, Some(0)], &mut scratch, |i, _: &mut ()| {
+                if i == 0 {
+                    std::thread::sleep(Duration::from_millis(30));
+                }
+                order.lock().unwrap().push(i);
+            });
+            assert_eq!(*order.lock().unwrap(), vec![0, 1], "{}", sched.name());
         }
     }
 

@@ -6,7 +6,10 @@
 //! shard size — never of the thread count. That is the first half of the
 //! engine's determinism contract (see the module docs in `mod.rs`): any
 //! number of workers executes the *same* tasks over the *same* ranges
-//! with the *same* per-task RNG streams.
+//! with the *same* per-task RNG streams. The plan's task order is also
+//! what the sticky scheduler's seed partition follows: unseeded tasks
+//! are range-partitioned contiguously by task index, so neighbouring
+//! shards (usually neighbouring memory) start on the same worker.
 //!
 //! Alignment rules per tensor (all boundaries are element offsets):
 //!

@@ -18,6 +18,13 @@
 //! step), and it keeps the protocol small enough to audit. Re-entrant
 //! submission from inside a task would deadlock — don't call back into
 //! the same pool from a task body.
+//!
+//! Each broadcast participant receives a distinct slot in `0..workers`,
+//! and a worker thread keeps its slot for its lifetime. That slot
+//! identity is the key of the sticky scheduler's affinity table (see
+//! the engine module docs' "Scheduler" section): "the worker that ran
+//! this shard last step" is meaningful across steps precisely because
+//! slots are stable on the persistent pool.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};

@@ -48,7 +48,7 @@ use crate::engine::adamw4::{
 };
 use crate::engine::ctx::{StepContext, StepScratch};
 use crate::engine::plan::{MetaSpec, StateLayout};
-use crate::engine::{dense, step_seed, SharedSlice, StepEngine, PHASE_C_STREAM_BASE};
+use crate::engine::{dense, step_seed, Affinity, SharedSlice, StepEngine, PHASE_C_STREAM_BASE};
 use crate::optim::state::{MomentState, SecondState};
 use crate::optim::{Hyper, Param};
 use crate::quant::{QuantMap, Scales};
@@ -190,6 +190,7 @@ fn run_queue<T, C>(
     eng: &StepEngine,
     threads: usize,
     queue: &Queue,
+    aff: &mut Affinity,
     scratch: &mut [StepScratch],
     transfer: &T,
     compute: &C,
@@ -199,7 +200,7 @@ fn run_queue<T, C>(
 {
     let (entries, deps) = queue;
     let entries = &entries[..];
-    eng.run_tasks_dep(threads, deps, scratch, |qi, s: &mut StepScratch| match entries[qi] {
+    eng.run_tasks_dep_in(threads, deps, aff, scratch, |qi, s: &mut StepScratch| match entries[qi] {
         Entry::In(p) => transfer(p, true),
         Entry::Out(p) => transfer(p, false),
         Entry::Compute(p) => compute(p, s),
@@ -272,6 +273,7 @@ pub fn compressed_offloaded_step(
         arena,
         stage_bytes,
         stage_vals,
+        affinity,
         ..
     } = ctx;
     let plan = &*plan;
@@ -286,7 +288,7 @@ pub fn compressed_offloaded_step(
     // Gradients are device-resident and factored stats stay resident,
     // so phase F runs exactly as in memory — no staging involved.
     if metas.iter().any(|m| m.v == StateLayout::Factored) {
-        phase_f(eng, threads, plan, metas, slots, red, arena, grads, &hp, v_states);
+        phase_f(eng, threads, plan, metas, slots, red, arena, grads, &hp, v_states, affinity);
     }
 
     {
@@ -456,7 +458,7 @@ pub fn compressed_offloaded_step(
                     );
                 }
             };
-            run_queue(eng, threads, &os.queue_a, &mut scratch[..], &transfer, &compute);
+            run_queue(eng, threads, &os.queue_a, affinity, &mut scratch[..], &transfer, &compute);
         }
 
         // ---------- Reduce A→C: combine scale statistics -------------
@@ -548,7 +550,7 @@ pub fn compressed_offloaded_step(
                     }
                 }
             };
-            run_queue(eng, threads, &os.queue_c, &mut scratch[..], &transfer, &compute);
+            run_queue(eng, threads, &os.queue_c, affinity, &mut scratch[..], &transfer, &compute);
         }
     }
 
@@ -622,6 +624,7 @@ pub fn dense_offloaded_step(
         arena,
         stage_bytes,
         stage_vals,
+        affinity,
         ..
     } = ctx;
     let plan = &*plan;
@@ -687,7 +690,7 @@ pub fn dense_offloaded_step(
                 dense::adamw32_piece(w, mm, vv, g, hp, bc1, bc2, lr);
             }
         };
-        run_queue(eng, threads, &os.queue_a, &mut scratch[..], &transfer, &compute);
+        run_queue(eng, threads, &os.queue_a, affinity, &mut scratch[..], &transfer, &compute);
     }
 
     let totals = {

@@ -11,7 +11,7 @@
 //! off-engine reference for the parity suite.
 
 use super::{Hyper, Optimizer, Param};
-use crate::engine::{dense, StepContext, StepEngine};
+use crate::engine::{dense, SchedMode, SchedStats, StepContext, StepEngine};
 use crate::offload::{pipeline, OffloadConfig, OffloadReport, OffloadState};
 use crate::tensor::Tensor;
 
@@ -120,6 +120,17 @@ impl AdamW {
         self
     }
 
+    /// Pin the engine scheduler mode, bypassing the process-level
+    /// `LOWBIT_ENGINE_SCHED` resolution. Results are bit-identical in
+    /// every mode (the parity suite compares them); this only moves
+    /// which worker runs which shard. Invalidates the cached step
+    /// context.
+    pub fn with_sched(mut self, mode: SchedMode) -> AdamW {
+        self.engine = Some(self.engine.unwrap_or_default().with_sched(mode));
+        self.ctx.invalidate();
+        self
+    }
+
     fn lazy_init(&mut self, params: &[Param]) {
         if self.m.is_empty() {
             self.m = params.iter().map(|p| Tensor::zeros(&p.tensor.shape)).collect();
@@ -199,6 +210,10 @@ impl Optimizer for AdamW {
 
     fn invalidate_step_cache(&mut self) {
         self.ctx.invalidate();
+    }
+
+    fn sched_stats(&self) -> Option<SchedStats> {
+        self.engine.as_ref().map(|eng| self.ctx.affinity.stats(eng.sched()))
     }
 }
 

@@ -16,7 +16,7 @@
 use super::factor::FactoredSecond;
 use super::state::{MomentState, SecondState};
 use super::{Hyper, Optimizer, Param, ParamKind};
-use crate::engine::{compressed_step, StepContext, StepEngine, StepParams};
+use crate::engine::{compressed_step, SchedMode, SchedStats, StepContext, StepEngine, StepParams};
 use crate::offload::{pipeline, OffloadConfig, OffloadReport, OffloadState};
 use crate::quant::{MapKind, NormKind, QuantMap, Quantizer};
 use crate::tensor::Tensor;
@@ -203,6 +203,17 @@ impl CompressedAdamW {
     /// step context.
     pub fn with_shard_elems(mut self, shard_elems: usize) -> CompressedAdamW {
         self.engine = self.engine.clone().with_shard_elems(shard_elems);
+        self.ctx.invalidate();
+        self
+    }
+
+    /// Pin the engine scheduler mode, bypassing the process-level
+    /// `LOWBIT_ENGINE_SCHED` resolution. Results are bit-identical in
+    /// every mode (the parity suite compares them); this only moves
+    /// which worker runs which shard. Invalidates the cached step
+    /// context.
+    pub fn with_sched(mut self, mode: SchedMode) -> CompressedAdamW {
+        self.engine = self.engine.clone().with_sched(mode);
         self.ctx.invalidate();
         self
     }
@@ -426,6 +437,10 @@ impl Optimizer for CompressedAdamW {
 
     fn invalidate_step_cache(&mut self) {
         self.ctx.invalidate();
+    }
+
+    fn sched_stats(&self) -> Option<SchedStats> {
+        Some(self.ctx.affinity.stats(self.engine.sched()))
     }
 }
 

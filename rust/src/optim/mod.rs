@@ -11,6 +11,7 @@ pub mod sgdm;
 pub mod sm3;
 pub mod state;
 
+use crate::engine::SchedStats;
 use crate::tensor::Tensor;
 
 /// What a parameter tensor is; drives per-parameter quantization policy
@@ -87,6 +88,14 @@ pub trait Optimizer {
     /// cold-vs-warm benchmarking and cache tests. No-op for optimizers
     /// without an engine-backed cache.
     fn invalidate_step_cache(&mut self) {}
+
+    /// Engine-scheduler telemetry accumulated by this optimizer's cached
+    /// step context (cumulative claim/steal/affinity-hit counts — see
+    /// the engine module docs' "Scheduler" section); `None` for
+    /// optimizers that don't step through the engine.
+    fn sched_stats(&self) -> Option<SchedStats> {
+        None
+    }
 }
 
 /// Construct an optimizer by preset name (the names used across the

@@ -16,7 +16,10 @@
 //! n})` counts in lanes and then draws per element *in element order*,
 //! so the RNG stream is draw-for-draw the scalar one.
 //!
-//! Non-4-bit widths, short runs, and the stochastic fused-EMA arm
+//! Byte-per-code widths (8-bit maps) decode through an 8-lane
+//! `vgatherdps` over the same clamp-padded 256-entry direct table the
+//! scalar tier indexes — a pure table load, structurally bit-exact.
+//! Non-4-bit encodes, short runs, and the stochastic fused-EMA arm
 //! delegate to the scalar tier — same contract, nothing to prove.
 
 // Older toolchains require explicit `unsafe {}` blocks inside these
@@ -50,8 +53,15 @@ pub fn decode_run_scaled(
     s: f32,
     out: &mut [f32],
 ) {
-    if bits != 4 || out.len() < VEC_MIN {
+    if out.len() < VEC_MIN {
         return scalar::decode_run_scaled(map, bits, packed, pos0, s, out);
+    }
+    if bits != 4 {
+        // Every non-4-bit width stores one code per byte and decodes
+        // through the clamp-padded direct table, so the gather kernel
+        // covers them all.
+        // SAFETY: AVX2 verified by the dispatcher (see below).
+        return unsafe { decode_run_scaled_v8(map.kernels(), packed, pos0, s, out) };
     }
     // SAFETY: this tier is only dispatched (or directly invoked by the
     // differential tests) when `is_x86_feature_detected!("avx2")` holds,
@@ -69,8 +79,14 @@ pub fn decode_rank1_row(
     cseg: &[f32],
     out: &mut [f32],
 ) {
-    if bits != 4 || out.len() < VEC_MIN {
+    if out.len() < VEC_MIN {
         return scalar::decode_rank1_row(map, bits, packed, pos0, ri, cseg, out);
+    }
+    if bits != 4 {
+        // Byte-per-code widths take the gather kernel (see
+        // decode_run_scaled).
+        // SAFETY: AVX2 verified by the dispatcher (see decode_run_scaled).
+        return unsafe { decode_rank1_row_v8(map.kernels(), packed, pos0, ri, cseg, out) };
     }
     // SAFETY: AVX2 verified by the dispatcher (see decode_run_scaled).
     unsafe { decode_rank1_row_v(map.kernels(), packed, pos0, ri, cseg, out) }
@@ -456,6 +472,79 @@ unsafe fn decode_rank1_row_v(
         if o + 2 * pairs < out.len() {
             let last = out.len() - 1;
             out[last] = k.decode_byte(packed[(pos0 + last) / 2] & 0x0F) * smin(ri, cseg[last]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Byte-per-code (8-bit) vector decode: one code per byte, no nibble
+// edges — 8 codes widen to i32 lanes, gather from the clamp-padded
+// 256-entry direct table (the exact table `decode_byte` indexes, so the
+// clamp of out-of-range codes is baked into the load), scale, store.
+// ---------------------------------------------------------------------
+
+/// # Safety
+/// AVX2 must be available; `packed` covers positions
+/// `0..pos0 + out.len()`.
+#[target_feature(enable = "avx2")]
+unsafe fn decode_run_scaled_v8(
+    k: &QuantKernels,
+    packed: &[u8],
+    pos0: usize,
+    s: f32,
+    out: &mut [f32],
+) {
+    // SAFETY: target feature per caller contract; each group loads the 8
+    // bytes at `pos0 + p` and stores 8 floats at `p`, in bounds while
+    // `p + 8 <= out.len()` by the run geometry; the gather indexes are
+    // zero-extended bytes, inside the 256-entry table.
+    unsafe {
+        let vs = _mm256_set1_ps(s);
+        let n = out.len();
+        let mut p = 0usize;
+        while p + 8 <= n {
+            let w = _mm_loadl_epi64(packed.as_ptr().add(pos0 + p) as *const __m128i);
+            let idx = _mm256_cvtepu8_epi32(w);
+            let v = _mm256_i32gather_ps::<4>(k.byte.as_ptr(), idx);
+            _mm256_storeu_ps(out.as_mut_ptr().add(p), _mm256_mul_ps(v, vs));
+            p += 8;
+        }
+        for q in p..n {
+            out[q] = k.decode_byte(packed[pos0 + q]) * s;
+        }
+    }
+}
+
+/// # Safety
+/// AVX2 must be available; `cseg.len() == out.len()`; `packed` covers
+/// positions `0..pos0 + out.len()`.
+#[target_feature(enable = "avx2")]
+unsafe fn decode_rank1_row_v8(
+    k: &QuantKernels,
+    packed: &[u8],
+    pos0: usize,
+    ri: f32,
+    cseg: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(cseg.len(), out.len());
+    // SAFETY: target feature per caller contract; bounds as in
+    // decode_run_scaled_v8, with cseg walking in lockstep with out.
+    unsafe {
+        let vri = _mm256_set1_ps(ri);
+        let n = out.len();
+        let mut p = 0usize;
+        while p + 8 <= n {
+            let w = _mm_loadl_epi64(packed.as_ptr().add(pos0 + p) as *const __m128i);
+            let idx = _mm256_cvtepu8_epi32(w);
+            let v = _mm256_i32gather_ps::<4>(k.byte.as_ptr(), idx);
+            // vminps(a, b) = if a < b { a } else { b } — the scalar smin.
+            let sv = _mm256_min_ps(vri, _mm256_loadu_ps(cseg.as_ptr().add(p)));
+            _mm256_storeu_ps(out.as_mut_ptr().add(p), _mm256_mul_ps(v, sv));
+            p += 8;
+        }
+        for q in p..n {
+            out[q] = k.decode_byte(packed[pos0 + q]) * smin(ri, cseg[q]);
         }
     }
 }

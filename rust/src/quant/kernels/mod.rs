@@ -38,7 +38,9 @@
 //! portable reference tier) and [`avx2`] (256-bit SIMD for the 4-bit
 //! hot arms — shuffle-based 16-entry nibble lookup for decode, vector
 //! midpoint compare-count for encode, vectorized normalize + bracket
-//! counts for stochastic rounding). The free functions in this module
+//! counts for stochastic rounding — plus a gather-based decode over the
+//! clamped direct table for the byte-per-code widths). The free
+//! functions in this module
 //! dispatch on [`active_tier`], resolved **once per process** from the
 //! `LOWBIT_KERNEL_TIER` env override (`scalar` | `avx2` | `auto`) or,
 //! by default, from `is_x86_feature_detected!("avx2")` — the same

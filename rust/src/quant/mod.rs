@@ -28,7 +28,10 @@
 //! (the portable reference) and `kernels::avx2` (256-bit SIMD), selected
 //! once per process by [`kernels::active_tier`] from CPU feature
 //! detection, with the `LOWBIT_KERNEL_TIER=scalar|avx2|auto` environment
-//! override for forced-tier CI runs.
+//! override for forced-tier CI runs. The AVX2 tier vectorizes the 4-bit
+//! arms in full and the byte-per-code (8-bit) decode arms via a table
+//! gather over the clamp-padded 256-entry direct table; the remaining
+//! 8-bit arms delegate to the scalar tier.
 //!
 //! **Contract:** every tier must match the oracle-pinned scalar paths
 //! *bit for bit* — [`mapping::QuantMap::encode`] (the midpoint partition

@@ -16,7 +16,7 @@
 //! propagates the abort, out-of-bounds ranges abort, and a task scope
 //! that outlives its phase barrier aborts.
 
-use lowbit_opt::engine::{SharedSlice, StepEngine};
+use lowbit_opt::engine::{Affinity, SchedMode, SharedSlice, StepEngine};
 use lowbit_opt::util::rng::Pcg64;
 
 /// Deterministic per-(seed, task) schedule perturbation: a few yields
@@ -173,6 +173,175 @@ fn zst_and_empty_ranges_are_not_aliasing() {
         seg[0] += 1.0;
     });
     assert_eq!(data.iter().sum::<f32>(), 4.0);
+}
+
+// ---------------------------------------------------------------------
+// Forced-steal schedules (sticky scheduler). `Affinity::force_owner`
+// parks tasks on a chosen slot before the phase runs, so these tests
+// pick the claim schedule instead of racing for one: steal storms (all
+// tasks on one slot, every other worker's local queue empty), stolen
+// dependency chains, and single-task plans. The executors' disjointness
+// contract — and the auditor, under `--features audit` — must hold on
+// stolen schedules exactly as on natural ones.
+// ---------------------------------------------------------------------
+
+/// All tasks parked on slot 0: every other worker starts with an empty
+/// local block and runs purely on steals. Contents must land exactly as
+/// under any other schedule, and the claim telemetry must account for
+/// every task exactly once.
+#[test]
+fn steal_storm_keeps_disjoint_segments_intact() {
+    const SEG: usize = 13;
+    const TASKS: usize = 40;
+    for &threads in &[2usize, 4, 7] {
+        let engine = StepEngine::new()
+            .with_threads(threads)
+            .with_sched(SchedMode::Sticky);
+        for seed in 60..66u64 {
+            let mut aff = Affinity::new();
+            for t in 0..TASKS {
+                aff.force_owner(t, 0);
+            }
+            let mut data = vec![0u64; SEG * TASKS];
+            let view = SharedSlice::new(&mut data);
+            engine.run_tasks_in::<(), _>(threads, TASKS, &mut aff, |i, _| {
+                jitter(seed, i);
+                // SAFETY: task i owns segment i — pairwise disjoint.
+                let seg = unsafe { view.range_mut(i * SEG, (i + 1) * SEG) };
+                for (k, v) in seg.iter_mut().enumerate() {
+                    *v = (i * SEG + k) as u64 + 1;
+                }
+            });
+            for (k, &v) in data.iter().enumerate() {
+                assert_eq!(v, k as u64 + 1, "seed {seed}, {threads} threads, elem {k}");
+            }
+            let stats = aff.stats(SchedMode::Sticky);
+            assert_eq!(stats.claims, TASKS as u64, "every task claimed exactly once");
+            assert!(stats.steals <= stats.claims);
+        }
+    }
+}
+
+/// Deterministic steal storm: exactly `threads` tasks, all parked on
+/// slot 0, each task gated on a barrier sized to the worker count. No
+/// worker can finish its first task until every task has *started*, so
+/// each worker ends up executing exactly one — which forces every
+/// worker but slot 0 to steal. Claims and steals are exact, not racy.
+#[test]
+fn steal_storm_executes_on_every_worker() {
+    use std::sync::Barrier;
+    for &threads in &[2usize, 4] {
+        let engine = StepEngine::new()
+            .with_threads(threads)
+            .with_sched(SchedMode::Sticky);
+        let mut aff = Affinity::new();
+        for t in 0..threads {
+            aff.force_owner(t, 0);
+        }
+        let barrier = Barrier::new(threads);
+        let mut data = vec![0u64; threads];
+        let view = SharedSlice::new(&mut data);
+        engine.run_tasks_in::<(), _>(threads, threads, &mut aff, |i, _| {
+            barrier.wait();
+            // SAFETY: task i owns element i — pairwise disjoint.
+            let seg = unsafe { view.range_mut(i, i + 1) };
+            seg[0] = i as u64 + 1;
+        });
+        for (k, &v) in data.iter().enumerate() {
+            assert_eq!(v, k as u64 + 1, "{threads} threads, elem {k}");
+        }
+        let stats = aff.stats(SchedMode::Sticky);
+        assert_eq!(stats.claims, threads as u64);
+        assert_eq!(
+            stats.steals,
+            threads as u64 - 1,
+            "every worker but the parked owner must steal its task"
+        );
+    }
+}
+
+/// The sticky dependency queue under a steal storm: every entry parked
+/// on slot 0 while stride-`d` chains force cross-entry ordering. The
+/// "smallest unfinished entry is always runnable" progress proof relies
+/// on stealers taking the *front* of a victim's remaining block — this
+/// drives exactly that path (and, under `--features audit`, proves the
+/// auditor accepts ancestor-related range reuse on stolen schedules).
+#[test]
+fn dependency_chains_survive_forced_steals() {
+    const SLOT: usize = 16;
+    const LINKS: usize = 8;
+    for &stride in &[1usize, 3] {
+        for &threads in &[2usize, 4] {
+            let n = LINKS * stride;
+            let deps: Vec<Option<usize>> = (0..n)
+                .map(|i| if i >= stride { Some(i - stride) } else { None })
+                .collect();
+            let engine = StepEngine::new()
+                .with_threads(threads)
+                .with_sched(SchedMode::Sticky);
+            for seed in 70..76u64 {
+                let mut aff = Affinity::new();
+                for t in 0..n {
+                    aff.force_owner(t, 0);
+                }
+                let mut data = vec![0u64; SLOT * stride];
+                let view = SharedSlice::new(&mut data);
+                let mut scratch = vec![0u8; threads];
+                engine.run_tasks_dep_in(threads, &deps, &mut aff, &mut scratch, |i, _| {
+                    jitter(seed, i);
+                    let chain = i % stride;
+                    // SAFETY: the chain's entries are dependency-ordered,
+                    // so only one of them can hold this slot at a time.
+                    let seg = unsafe { view.range_mut(chain * SLOT, (chain + 1) * SLOT) };
+                    for v in seg.iter_mut() {
+                        *v += (i + 1) as u64;
+                    }
+                });
+                for c in 0..stride {
+                    let want: u64 = (0..LINKS).map(|k| (c + k * stride + 1) as u64).sum();
+                    for k in 0..SLOT {
+                        assert_eq!(
+                            data[c * SLOT + k],
+                            want,
+                            "stride {stride}, {threads} threads, seed {seed}, chain {c}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Single-task plans: the degenerate claim queue (one block, everything
+/// else empty) both unseeded and parked on the *last* slot, so the
+/// claiming worker is a stealer whenever it isn't the owner.
+#[test]
+fn single_task_plans_run_under_sticky() {
+    for &threads in &[1usize, 2, 5] {
+        let engine = StepEngine::new()
+            .with_threads(threads)
+            .with_sched(SchedMode::Sticky);
+        for owner in [None, Some(threads as u32 - 1)] {
+            let mut aff = Affinity::new();
+            if let Some(o) = owner {
+                aff.force_owner(0, o);
+            }
+            let mut data = vec![0u64; 4];
+            let view = SharedSlice::new(&mut data);
+            engine.run_tasks_in::<(), _>(threads, 1, &mut aff, |_i, _| {
+                // SAFETY: the only task owns the whole slice.
+                let seg = unsafe { view.range_mut(0, 4) };
+                for v in seg.iter_mut() {
+                    *v += 7;
+                }
+            });
+            assert!(data.iter().all(|&v| v == 7), "{threads} threads, owner {owner:?}");
+            if threads > 1 {
+                let stats = aff.stats(SchedMode::Sticky);
+                assert_eq!(stats.claims, 1, "{threads} threads, owner {owner:?}");
+            }
+        }
+    }
 }
 
 #[cfg(feature = "audit")]

@@ -15,9 +15,12 @@
 //!
 //! A counting global allocator tallies every allocation in the process,
 //! so the tests serialize on one mutex: only the measuring test may run
-//! while a measurement is in flight. All optimizers here run with
+//! while a measurement is in flight. The optimizers here run with
 //! explicit `threads = 1` (the sequential schedule of the same plan) so
-//! no pool workers allocate concurrently.
+//! no pool workers allocate concurrently — except the sticky-scheduler
+//! pin, which runs two workers on purpose: the affinity table's claim
+//! queues and telemetry are grow-only and must also be allocation-free
+//! once warm.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -265,6 +268,39 @@ fn steady_state_adamw4_step_is_allocation_free() {
         after - before,
         0,
         "adamw4 steady-state step allocated {} times over 5 steps",
+        after - before
+    );
+}
+
+// Not run under `--features audit`: the auditor keeps lazy per-thread
+// call-site caches, and a steady-state steal can route a task to a
+// worker that has never executed that `range_mut` site before — a
+// one-time auditor allocation, not an engine one.
+#[cfg(not(feature = "audit"))]
+#[test]
+fn steady_state_adamw4_sticky_two_threads_is_allocation_free() {
+    let _g = LOCK.lock().unwrap();
+    let hp = Hyper::default();
+    let policy = QuantPolicy::bit4();
+    let (mut params, grads) = model();
+    let mut opt = CompressedAdamW::new(hp, policy)
+        .with_threads(2)
+        .with_shard_elems(SHARD)
+        .with_sched(lowbit_opt::engine::SchedMode::Sticky);
+    // Warm up: pool spin-up, context build, affinity-table growth (claim
+    // queue, per-worker cursors and telemetry counters are all grow-only).
+    for _ in 0..3 {
+        opt.step(&mut params, &grads, 1e-3);
+    }
+    let before = allocs();
+    for _ in 0..5 {
+        opt.step(&mut params, &grads, 1e-3);
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "sticky 2-thread adamw4 steady-state step allocated {} times over 5 steps",
         after - before
     );
 }

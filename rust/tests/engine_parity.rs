@@ -448,3 +448,151 @@ fn parity_auto_threads_equals_explicit() {
     let b = run_params(policy, 1, big_mixed_params);
     assert_eq!(a, b, "auto thread count diverged");
 }
+
+// ---------------------------------------------------------------------
+// Scheduler modes: queue vs sticky are bit-identical at every thread
+// count. The sticky scheduler only moves *which worker claims which
+// task* (affinity blocks plus bounded stealing); plans, RNG streams and
+// reductions are all keyed by task index, so the results may not move
+// by a single bit.
+// ---------------------------------------------------------------------
+
+use lowbit_opt::engine::SchedMode;
+use lowbit_opt::offload::{LinkModel, OffloadConfig};
+
+const SCHEDS: [SchedMode; 2] = [SchedMode::Queue, SchedMode::Sticky];
+
+fn run_sched(
+    policy: QuantPolicy,
+    mode: SchedMode,
+    threads: usize,
+    offload_depth: Option<usize>,
+) -> RunOut {
+    let hp = Hyper::default();
+    let mut opt = CompressedAdamW::new(hp, policy)
+        .with_threads(threads)
+        .with_shard_elems(SHARD_ELEMS)
+        .with_sched(mode);
+    if let Some(depth) = offload_depth {
+        opt = opt.offloaded(OffloadConfig::new(LinkModel::pcie_offload(1e-3), depth));
+    }
+    let mut params = mixed_params();
+    for s in 0..STEPS {
+        let mut grng = Pcg64::seeded(1000 + s as u64);
+        let grads: Vec<Tensor> = params
+            .iter()
+            .map(|p| Tensor::randn(&p.tensor.shape, 0.1, &mut grng))
+            .collect();
+        opt.step(&mut params, &grads, 1e-2);
+    }
+    RunOut {
+        weights: params.iter().map(|p| p.tensor.data.clone()).collect(),
+        moments: (0..params.len())
+            .map(|i| {
+                let (m, v) = opt.moments(i).expect("moments");
+                (m.data, v.data)
+            })
+            .collect(),
+        state_bytes: opt.state_bytes(),
+    }
+}
+
+#[test]
+fn parity_sched_modes_adamw4() {
+    // SR on, so the claim schedule also may not perturb the per-task RNG
+    // streams.
+    let policy = || quantize_everything(QuantPolicy::bit4().stochastic());
+    let baseline = run_sched(policy(), SchedMode::Queue, 1, None);
+    for mode in SCHEDS {
+        for &t in &THREADS {
+            let out = run_sched(policy(), mode, t, None);
+            assert_eq!(
+                baseline, out,
+                "adamw4 sched={} threads={t} diverged from the sequential queue schedule",
+                mode.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn parity_sched_modes_offloaded_adamw4() {
+    // The sticky dependency-queue variant must preserve the offload
+    // pipeline's bit-identity too (prefetch depth 2 keeps transfer →
+    // compute dependencies live across the claim blocks).
+    let policy = || quantize_everything(QuantPolicy::bit4());
+    let baseline = run_sched(policy(), SchedMode::Queue, 1, None);
+    for mode in SCHEDS {
+        for &t in &THREADS {
+            let out = run_sched(policy(), mode, t, Some(2));
+            assert_eq!(
+                baseline, out,
+                "offloaded adamw4 sched={} threads={t} diverged from the in-memory schedule",
+                mode.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn parity_sched_modes_dense_adamw32() {
+    let hp = Hyper::default();
+    let reference = run_dense(AdamW::sequential(hp), mixed_params, adamw_state);
+    for mode in SCHEDS {
+        for &t in &THREADS {
+            let opt = AdamW::new(hp)
+                .with_threads(t)
+                .with_shard_elems(SHARD_ELEMS)
+                .with_sched(mode);
+            let out = run_dense(opt, mixed_params, adamw_state);
+            assert_eq!(
+                reference, out,
+                "adamw32 sched={} threads={t} != sequential reference",
+                mode.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn sched_stats_report_mode_and_consistent_counters() {
+    // Telemetry sanity at a genuinely parallel thread count (the
+    // sequential path never touches the claim tables): every claim is
+    // recorded, steals and affinity hits are subsets of claims, the
+    // queue reference never steals, and a warm sticky run keeps hitting
+    // the learned affinity.
+    for mode in SCHEDS {
+        let hp = Hyper::default();
+        let policy = quantize_everything(QuantPolicy::bit4());
+        let mut opt = CompressedAdamW::new(hp, policy)
+            .with_threads(2)
+            .with_shard_elems(SHARD_ELEMS)
+            .with_sched(mode);
+        let mut params = mixed_params();
+        for s in 0..STEPS {
+            let mut grng = Pcg64::seeded(1000 + s as u64);
+            let grads: Vec<Tensor> = params
+                .iter()
+                .map(|p| Tensor::randn(&p.tensor.shape, 0.1, &mut grng))
+                .collect();
+            opt.step(&mut params, &grads, 1e-2);
+        }
+        let stats = opt.sched_stats().expect("engine-backed optimizer");
+        assert_eq!(stats.mode, mode);
+        assert!(stats.claims > 0, "sched={}: no claims recorded", mode.name());
+        assert!(stats.steals <= stats.claims, "sched={}: steals exceed claims", mode.name());
+        assert!(
+            stats.affinity_hits <= stats.claims,
+            "sched={}: affinity hits exceed claims",
+            mode.name()
+        );
+        if mode == SchedMode::Queue {
+            assert_eq!(stats.steals, 0, "the shared-queue reference never steals");
+        } else {
+            assert!(
+                stats.affinity_hits > 0,
+                "warm sticky steps should re-claim their learned shards"
+            );
+        }
+    }
+}

@@ -109,6 +109,24 @@ fn offloaded_adamw4_is_bit_identical_at_every_thread_count_and_depth() {
 }
 
 #[test]
+fn offloaded_deep_prefetch_depth_parks_and_stays_bit_identical() {
+    // Depth 8 keeps up to eight transfers in flight ahead of compute, so
+    // compute entries routinely outrun their staged inputs and fall
+    // through the dependency wait's spin and yield windows into the
+    // parked condvar path (regression test for the parked backoff —
+    // results may not move by a bit, and the run may not hang).
+    let policy = || quantize_everything(QuantPolicy::bit4().stochastic());
+    let baseline = run_compressed(policy(), 1, None);
+    for &t in &THREADS {
+        let out = run_compressed(policy(), t, Some(8));
+        assert_eq!(
+            baseline, out,
+            "deep-depth offloaded adamw4 diverged at threads={t}"
+        );
+    }
+}
+
+#[test]
 fn offloaded_stochastic_rounding_matches_in_memory_streams() {
     // SR consumes the per-task RNG streams; the offloaded schedule must
     // draw the identical sequence.
