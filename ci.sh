@@ -70,4 +70,23 @@ echo "== bench smoke: offload_pipeline (appends to BENCH_offload.json)"
 cargo bench --bench offload_pipeline -- --smoke --json BENCH_offload.json
 test -s BENCH_offload.json || { echo "FAIL: offload_pipeline did not append to BENCH_offload.json"; exit 1; }
 
+echo "== bench JSON schema: every run carries trace_summary + tier/sched tags"
+./target/release/lowbit trace --check-bench BENCH_engine.json
+./target/release/lowbit trace --check-bench BENCH_offload.json
+
+# The trace-feature passes run last so the feature-set flip costs one
+# rebuild instead of thrashing the cache mid-run.
+echo "== cargo test -q --features trace (span rings on; includes ctx_cache zero-alloc pins)"
+cargo test -q --features trace
+
+echo "== trace smoke: record via LOWBIT_TRACE + the trace subcommand, validate exports"
+cargo build --release --features trace
+# adamw4 records A/reduce/C/commit (F is factored-v only, C needs
+# rank-1 globals — present on the tiny model's 2-D tensors).
+LOWBIT_TRACE=trace_train.json ./target/release/lowbit train --steps 3 --quiet
+./target/release/lowbit trace --check trace_train.json --expect engine.A,engine.reduce,engine.C,engine.commit
+./target/release/lowbit trace --out trace_cli.json --steps 3 --optimizer adamw32
+./target/release/lowbit trace --check trace_cli.json --expect dense.adamw32
+rm -f trace_train.json trace_cli.json
+
 echo "CI OK"

@@ -14,6 +14,7 @@ mod bench_util;
 
 use bench_util::{append_bench_run, bench, section};
 use lowbit_opt::engine::{active_sched, SchedStats};
+use lowbit_opt::obs::report::SpanSummary;
 use lowbit_opt::offload::{LinkModel, OffloadConfig, OffloadReport};
 use lowbit_opt::quant::active_tier;
 use lowbit_opt::optim::adamw::AdamW;
@@ -58,6 +59,10 @@ fn main() {
     // — cumulative over the whole run, warmup included)
     let mut results: Vec<(&str, usize, usize, f64, OffloadReport, Option<SchedStats>)> =
         Vec::new();
+    // Span-timing summary of the benched steps — `{"enabled": false}`
+    // unless the bench was built with `--features trace` (satisfies the
+    // bench-JSON schema either way).
+    let mut trace_summary: Option<Json> = None;
 
     section("offload pipeline: wall time + virtual step time (threads x depth)");
     for preset in presets {
@@ -85,6 +90,9 @@ fn main() {
                         let res = bench(&label, min_secs, || {
                             opt.step(&mut params, &grads, 1e-3);
                         });
+                        if let Some(s) = opt.step_report().and_then(|rep| rep.spans) {
+                            trace_summary = Some(s.to_json());
+                        }
                         (res, *opt.offload_report().expect("offloaded"), opt.sched_stats())
                     }
                     _ => {
@@ -95,6 +103,9 @@ fn main() {
                         let res = bench(&label, min_secs, || {
                             opt.step(&mut params, &grads, 1e-3);
                         });
+                        if let Some(s) = opt.step_report().and_then(|rep| rep.spans) {
+                            trace_summary = Some(s.to_json());
+                        }
                         (res, *opt.offload_report().expect("offloaded"), opt.sched_stats())
                     }
                 };
@@ -171,6 +182,10 @@ fn main() {
             by_opt.set(preset, by_threads);
         }
         run.set("optimizers", by_opt);
+        run.set(
+            "trace_summary",
+            trace_summary.unwrap_or_else(SpanSummary::disabled_json),
+        );
         append_bench_run(&path, run);
         println!("appended run to {path}");
     }

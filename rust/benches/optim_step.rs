@@ -15,6 +15,7 @@ mod bench_util;
 
 use bench_util::{append_bench_run, bench, section, BenchResult};
 use lowbit_opt::engine::{active_sched, SchedMode, SchedStats};
+use lowbit_opt::obs::report::SpanSummary;
 use lowbit_opt::model::TransformerConfig;
 use lowbit_opt::optim::lowbit::{CompressedAdamW, QuantPolicy};
 use lowbit_opt::optim::{build, build_threaded, Hyper, Optimizer, Param, ParamKind};
@@ -169,6 +170,10 @@ fn main() {
     // --------------------------------------------------------------
     section("scheduler modes: queue vs sticky (adamw4, 8 threads)");
     let mut sched_results: Vec<(&'static str, BenchResult, SchedStats)> = Vec::new();
+    // Span-timing summary of the benched steps — `{"enabled": false}`
+    // unless the bench was built with `--features trace` (satisfies the
+    // bench-JSON schema either way).
+    let mut trace_summary: Option<Json> = None;
     for mode in [SchedMode::Queue, SchedMode::Sticky] {
         let mut opt = CompressedAdamW::new(Hyper::default(), QuantPolicy::bit4())
             .with_threads(8)
@@ -194,6 +199,9 @@ fn main() {
             },
         );
         let stats = opt.sched_stats().expect("engine-backed optimizer");
+        if let Some(s) = opt.step_report().and_then(|rep| rep.spans) {
+            trace_summary = Some(s.to_json());
+        }
         println!(
             "{}  claims {}  steals {}  affinity hits {}",
             res.throughput_line(None),
@@ -266,6 +274,10 @@ fn main() {
             by_sched.set(name, jr);
         }
         run.set("sched_compare_8t", by_sched);
+        run.set(
+            "trace_summary",
+            trace_summary.unwrap_or_else(SpanSummary::disabled_json),
+        );
         append_bench_run(&path, run);
         println!("appended run to {path}");
     }

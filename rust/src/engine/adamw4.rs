@@ -43,6 +43,11 @@ use super::ctx::{GlobalSlot, StepContext, StepScratch, VecArena};
 use super::plan::{MetaSpec, Piece, Plan, StateLayout, TensorMeta};
 use super::shared::SharedSlice;
 use super::{step_seed, Affinity, StepEngine, PHASE_C_STREAM_BASE};
+use crate::obs::quant::QuantAccum;
+#[cfg(feature = "trace")]
+use crate::obs::trace::{
+    now, P_ENGINE_A, P_ENGINE_C, P_ENGINE_COMMIT, P_ENGINE_F, P_ENGINE_REDUCE, TASK_NONE,
+};
 use crate::optim::factor::FactoredSecond;
 use crate::optim::state::{MomentState, SecondState};
 use crate::optim::{Hyper, Param};
@@ -232,6 +237,7 @@ enum Requant<'a> {
 /// bit-identity guarantee.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn update_piece(
+    tensor: usize,
     lo: usize,
     shape: &[usize],
     cols: usize,
@@ -248,7 +254,12 @@ pub(crate) fn update_piece(
     let len = g.len();
     debug_assert_eq!(w.len(), len);
     let hi = lo + len;
-    let StepScratch { m: sm, v: sv } = scratch;
+    let StepScratch {
+        m: sm,
+        v: sv,
+        quant,
+        ..
+    } = scratch;
 
     // ---- load the first moment ----
     let (m_vals, m_re): (&mut [f32], Requant<'_>) = match m {
@@ -383,6 +394,11 @@ pub(crate) fn update_piece(
                     scales,
                 } => {
                     q.encode_block_range(map, v_vals, block, scales, packed, rng);
+                    if let Some(acc) = quant.as_mut() {
+                        observe_block_encode(
+                            acc, true, tensor, v_vals, block, packed, scales, q.bits, map,
+                        );
+                    }
                 }
                 Requant::Stats(stat) => {
                     accumulate_scale_stats(v_vals, lo, shape, stat);
@@ -402,9 +418,80 @@ pub(crate) fn update_piece(
             scales,
         } => {
             q.encode_block_range(map, m_vals, block, scales, packed, rng);
+            if let Some(acc) = quant.as_mut() {
+                observe_block_encode(acc, false, tensor, m_vals, block, packed, scales, q.bits, map);
+            }
         }
         Requant::Stats(stat) => {
             accumulate_scale_stats(m_vals, lo, shape, stat);
+        }
+    }
+}
+
+/// Quant-metrics tap for a block-normalized piece encode: re-derive each
+/// emitted code's decoded value from the map's value table (the same
+/// source the decode LUTs are built from, so `x̂` is bit-identical to a
+/// real decode) and feed the per-worker accumulator. Observational only
+/// — runs after the encode and never touches the RNG.
+#[allow(clippy::too_many_arguments)]
+fn observe_block_encode(
+    acc: &mut QuantAccum,
+    second: bool,
+    tensor: usize,
+    vals: &[f32],
+    block: usize,
+    packed: &[u8],
+    scales: &[f32],
+    bits: u8,
+    map: &QuantMap,
+) {
+    let zc = map.zero_code();
+    for (k, &x) in vals.iter().enumerate() {
+        let code = packing::get(packed, k, bits);
+        let s = scales[k / block];
+        let xhat = map.values[code as usize] * s;
+        if second {
+            acc.observe_v(tensor, x, xhat, s);
+            acc.v.observe_code(code, bits, zc);
+        } else {
+            acc.observe_m(tensor, x, xhat, s);
+            acc.m.observe_code(code, bits, zc);
+        }
+    }
+}
+
+/// Quant-metrics tap for a globally-normalized phase-C piece encode:
+/// `vals` are the pre-encode fp32 values, `decoded` the round-tripped
+/// post-encode values (decoded through the canonical
+/// [`dequantize_packed_range_into`] path), `packed` the freshly encoded
+/// piece-local codes.
+#[allow(clippy::too_many_arguments)]
+fn observe_global_encode(
+    acc: &mut QuantAccum,
+    second: bool,
+    tensor: usize,
+    vals: &[f32],
+    decoded: &[f32],
+    packed: &[u8],
+    lo: usize,
+    shape: &[usize],
+    scales: &Scales,
+    bits: u8,
+    map: &QuantMap,
+) {
+    let zc = map.zero_code();
+    for (k, (&x, &xhat)) in vals.iter().zip(decoded.iter()).enumerate() {
+        // Piece-local index k addresses the piece-local packed slice
+        // directly: shard boundaries are byte-aligned, so lo is even
+        // for 4-bit codes and nibble parity is preserved.
+        let code = packing::get(packed, k, bits);
+        let s = scales.scale_at(lo + k, shape);
+        if second {
+            acc.observe_v(tensor, x, xhat, s);
+            acc.v.observe_code(code, bits, zc);
+        } else {
+            acc.observe_m(tensor, x, xhat, s);
+            acc.m.observe_code(code, bits, zc);
         }
     }
 }
@@ -741,6 +828,9 @@ pub fn compressed_step(
         v_buf_of,
         arena,
         affinity,
+        quant,
+        #[cfg(feature = "trace")]
+        trace,
         ..
     } = ctx;
     let plan = &*plan;
@@ -748,12 +838,28 @@ pub fn compressed_step(
     let globals = &*globals;
     let (m_buf_of, v_buf_of) = (&*m_buf_of, &*v_buf_of);
 
+    // Arm the per-worker quant accumulators (runtime-gated). The
+    // `get_or_insert_with` allocates only on the first metered step;
+    // warm steps clear in place and `ensure_tensors` is grow-only.
+    let metrics_on = quant.is_some();
+    if metrics_on {
+        for s in scratch[..threads].iter_mut() {
+            let acc = s.quant.get_or_insert_with(QuantAccum::default);
+            acc.ensure_tensors(n);
+            acc.clear();
+        }
+    }
+
     let seed = step_seed(sp.base_seed, sp.t as u64);
     let hp = sp.hp;
 
     // ---------------- Phase F: factored-v statistics -----------------
     if metas.iter().any(|m| m.v == StateLayout::Factored) {
+        #[cfg(feature = "trace")]
+        let _t0 = now();
         phase_f(eng, threads, plan, metas, slots, red, arena, grads, &hp, v_states, affinity);
+        #[cfg(feature = "trace")]
+        trace.record(P_ENGINE_F, TASK_NONE, _t0);
     }
 
     {
@@ -861,39 +967,61 @@ pub fn compressed_step(
             slot_views.extend(slots.iter_mut().map(|s| SharedSlice::new(s.as_mut_slice())));
             let slot_views = slot_views.as_slice();
             let plan_ref = plan;
+            #[cfg(feature = "trace")]
+            let _t0 = now();
             eng.run_tasks_with_in(
                 threads,
                 plan.tasks.len(),
                 affinity,
                 &mut scratch[..],
                 |ti, scratch| {
+                    #[cfg(feature = "trace")]
+                    let _ts = now();
                     let mut rng = Pcg64::new(seed, ti as u64);
                     for piece in &plan_ref.tasks[ti].pieces {
                         phase_a_piece(piece, ctxs, slot_views, &hp, sp.t, sp.lr, scratch, &mut rng);
                     }
+                    #[cfg(feature = "trace")]
+                    scratch.ring.record(P_ENGINE_A, ti as u32, _ts);
                 },
             );
+            #[cfg(feature = "trace")]
+            trace.record(P_ENGINE_A, TASK_NONE, _t0);
         }
 
         // ---------- Reduce A→C: combine scale statistics -------------
-        reduce_global_scales(plan, metas, globals, slots, red, new_scales);
+        {
+            #[cfg(feature = "trace")]
+            let _t0 = now();
+            reduce_global_scales(plan, metas, globals, slots, red, new_scales);
+            #[cfg(feature = "trace")]
+            trace.record(P_ENGINE_REDUCE, TASK_NONE, _t0);
+        }
 
         // --------------- Phase C: global re-encode -------------------
         if !globals.is_empty() {
             let plan_ref = plan;
             let new_scales_ref: &[Option<Scales>] = &new_scales[..];
+            #[cfg(feature = "trace")]
+            let _t0 = now();
             eng.run_tasks_with_in(
                 threads,
                 plan.tasks.len(),
                 affinity,
                 &mut scratch[..],
                 |ti, scratch| {
+                    #[cfg(feature = "trace")]
+                    let _ts = now();
                     let mut rng = Pcg64::new(seed, PHASE_C_STREAM_BASE + ti as u64);
                     for piece in &plan_ref.tasks[ti].pieces {
                         phase_c_piece(piece, ctxs, new_scales_ref, &hp, scratch, &mut rng);
                     }
+                    #[cfg(feature = "trace")]
+                    scratch.ring.record(P_ENGINE_C, ti as u32, _ts);
                 },
             );
+            #[cfg(feature = "trace")]
+            trace.record(P_ENGINE_C, TASK_NONE, _t0);
         }
     }
 
@@ -902,7 +1030,27 @@ pub fn compressed_step(
     // scales move into the state, and the state's previous buffers move
     // back into the context to be overwritten next step. No allocation,
     // no copy.
-    commit_globals(globals, Some(&mut new_bufs[..]), new_scales, m_states, v_states);
+    {
+        #[cfg(feature = "trace")]
+        let _t0 = now();
+        commit_globals(globals, Some(&mut new_bufs[..]), new_scales, m_states, v_states);
+        #[cfg(feature = "trace")]
+        trace.record(P_ENGINE_COMMIT, TASK_NONE, _t0);
+    }
+
+    // Fold the per-worker quant accumulators into the context's merged
+    // one, in worker-slot order. Integer counters are order-independent;
+    // the f64 error sums are slot-order deterministic (see obs::quant).
+    if metrics_on {
+        let total = quant.as_mut().expect("metrics_on implies an armed accumulator");
+        total.ensure_tensors(n);
+        total.clear();
+        for s in scratch[..threads].iter() {
+            if let Some(acc) = &s.quant {
+                total.merge(acc);
+            }
+        }
+    }
 }
 
 /// Write the reduced scale statistics into a (possibly recycled)
@@ -1124,7 +1272,21 @@ fn phase_a_piece(
             row_mean: *row_mean,
         },
     };
-    update_piece(lo, tc.shape, tc.cols, w, g, m_src, v_src, hp, t, lr, scratch, rng);
+    update_piece(
+        piece.tensor,
+        lo,
+        tc.shape,
+        tc.cols,
+        w,
+        g,
+        m_src,
+        v_src,
+        hp,
+        t,
+        lr,
+        scratch,
+        rng,
+    );
 }
 
 /// Phase C for one piece: re-derive updated state values from the old
@@ -1147,7 +1309,18 @@ fn phase_c_piece(
     let (lo, hi) = (piece.lo, piece.hi);
     let len = hi - lo;
     let g = &tc.g[lo..hi];
-    let StepScratch { m: sm, v: sv } = scratch;
+    let StepScratch {
+        m: sm,
+        v: sv,
+        quant,
+        ..
+    } = scratch;
+    // With quant metrics armed, take the unfused reference arm
+    // unconditionally: it materializes the pre-encode fp32 values in
+    // scratch (the fused pass never does) and is bit-identical to the
+    // fused arm — packed bytes and RNG draws alike — so metering a step
+    // never changes its result.
+    let metrics = quant.is_some();
 
     if let MRoute::Global {
         q,
@@ -1162,9 +1335,11 @@ fn phase_c_piece(
         // SAFETY: byte-aligned disjoint shard ranges of the fresh buffer.
         let dst = unsafe { new_packed.range_mut(b0, b1) };
         dst.copy_from_slice(&old.packed[b0..b1]);
-        if !q.ema_reencode_range(
-            map, dst, lo, tc.shape, &old.scales, scales, g, hp.beta1, false, rng,
-        ) {
+        let fused = !metrics
+            && q.ema_reencode_range(
+                map, dst, lo, tc.shape, &old.scales, scales, g, hp.beta1, false, rng,
+            );
+        if !fused {
             decode_ema_piece(
                 q.bits,
                 map,
@@ -1178,6 +1353,27 @@ fn phase_c_piece(
                 sm,
             );
             q.encode_range_with_scales(map, &sm[..len], lo, tc.shape, scales, dst, rng);
+            if let Some(acc) = quant.as_mut() {
+                // Round-trip the fresh codes through the canonical decode
+                // into the (currently free) v scratch buffer.
+                sv.resize(len, 0.0);
+                dequantize_packed_range_into(
+                    map, q.bits, dst, lo, scales, tc.shape, lo, hi, &mut sv[..len],
+                );
+                observe_global_encode(
+                    acc,
+                    false,
+                    piece.tensor,
+                    &sm[..len],
+                    &sv[..len],
+                    dst,
+                    lo,
+                    tc.shape,
+                    scales,
+                    q.bits,
+                    map,
+                );
+            }
         }
     }
 
@@ -1194,9 +1390,11 @@ fn phase_c_piece(
         // SAFETY: byte-aligned disjoint shard ranges of the fresh buffer.
         let dst = unsafe { new_packed.range_mut(b0, b1) };
         dst.copy_from_slice(&old.packed[b0..b1]);
-        if !q.ema_reencode_range(
-            map, dst, lo, tc.shape, &old.scales, scales, g, hp.beta2, true, rng,
-        ) {
+        let fused = !metrics
+            && q.ema_reencode_range(
+                map, dst, lo, tc.shape, &old.scales, scales, g, hp.beta2, true, rng,
+            );
+        if !fused {
             decode_ema_piece(
                 q.bits,
                 map,
@@ -1210,6 +1408,26 @@ fn phase_c_piece(
                 sv,
             );
             q.encode_range_with_scales(map, &sv[..len], lo, tc.shape, scales, dst, rng);
+            if let Some(acc) = quant.as_mut() {
+                // m scratch is free by now (the m arm, if any, is done).
+                sm.resize(len, 0.0);
+                dequantize_packed_range_into(
+                    map, q.bits, dst, lo, scales, tc.shape, lo, hi, &mut sm[..len],
+                );
+                observe_global_encode(
+                    acc,
+                    true,
+                    piece.tensor,
+                    &sv[..len],
+                    &sm[..len],
+                    dst,
+                    lo,
+                    tc.shape,
+                    scales,
+                    q.bits,
+                    map,
+                );
+            }
         }
     }
 }

@@ -41,6 +41,9 @@
 
 use super::plan::{build_plan, MetaSpec, Plan, TensorMeta};
 use super::Affinity;
+use crate::obs::quant::QuantAccum;
+#[cfg(feature = "trace")]
+use crate::obs::trace::{Ring, DEFAULT_RING_CAP};
 use crate::quant::{Quantizer, Scales};
 use std::alloc::Layout;
 use std::cell::RefCell;
@@ -55,6 +58,15 @@ use std::ptr::NonNull;
 pub struct StepScratch {
     pub m: Vec<f32>,
     pub v: Vec<f32>,
+    /// Per-worker span ring (`trace` feature): the executors record one
+    /// span per task body into the slot's ring. Preallocated by
+    /// [`StepContext::ensure_scratch`]; recording never allocates.
+    #[cfg(feature = "trace")]
+    pub ring: Ring,
+    /// Per-worker quant-quality accumulator — `Some` only while the
+    /// owning optimizer has quant metrics enabled (runtime-gated; sized
+    /// on enable, allocation-free per step thereafter).
+    pub quant: Option<QuantAccum>,
 }
 
 /// A globally-normalized (rank-1 / per-tensor) quantized state scheduled
@@ -290,6 +302,16 @@ pub struct StepContext {
     /// warm-step pins cover it); reset on rebuild since task ids
     /// renumber with the plan.
     pub(crate) affinity: Affinity,
+    /// Coordinator-side span ring (`trace` feature): executors record
+    /// one span per phase (and per sequential reduction) here.
+    /// Preallocated on rebuild; recording never allocates.
+    #[cfg(feature = "trace")]
+    pub(crate) trace: Ring,
+    /// Merged quant-quality accumulator for the most recent step —
+    /// `Some` only when the optimizer has quant metrics enabled (the
+    /// compressed executor folds the per-worker accumulators in here,
+    /// in worker-slot order, at the end of the step).
+    pub(crate) quant: Option<QuantAccum>,
 }
 
 impl Default for StepContext {
@@ -321,7 +343,38 @@ impl StepContext {
             stage_bytes: Vec::new(),
             stage_vals: Vec::new(),
             affinity: Affinity::new(),
+            #[cfg(feature = "trace")]
+            trace: Ring::default(),
+            quant: None,
         }
+    }
+
+    /// The span rings, paired with their chrome-trace display thread
+    /// ids: 0 is the coordinator, `1 + slot` a pool worker. Export-time
+    /// only (allocates the pair list).
+    #[cfg(feature = "trace")]
+    pub fn trace_rings(&self) -> Vec<(u32, &Ring)> {
+        let mut rings = Vec::with_capacity(1 + self.scratch.len());
+        rings.push((0u32, &self.trace));
+        for (i, s) in self.scratch.iter().enumerate() {
+            rings.push((i as u32 + 1, &s.ring));
+        }
+        rings
+    }
+
+    /// Forget all recorded spans (storage is kept).
+    #[cfg(feature = "trace")]
+    pub fn clear_trace(&mut self) {
+        self.trace.clear();
+        for s in &mut self.scratch {
+            s.ring.clear();
+        }
+    }
+
+    /// The merged quant-quality accumulator of the most recent step, if
+    /// the optimizer has quant metrics enabled.
+    pub fn quant_metrics(&self) -> Option<&QuantAccum> {
+        self.quant.as_ref()
     }
 
     /// Force the next `ensure` to rebuild (called by the optimizer
@@ -378,6 +431,15 @@ impl StepContext {
         // Task ids renumber with the plan, so the learned task→worker
         // map is meaningless now (it could only cost mis-seeded steals).
         self.affinity.reset();
+        // Preallocate the coordinator span ring (and resolve the trace
+        // epoch) on the cold path so warm-step recording never touches
+        // the allocator. Recorded spans survive rebuilds — the ring is a
+        // rolling window over recent phases, not per-plan state.
+        #[cfg(feature = "trace")]
+        {
+            self.trace.ensure_cap(DEFAULT_RING_CAP);
+            let _ = crate::obs::trace::now();
+        }
         self.shard_elems = shard_elems;
         self.valid = true;
         self.generation += 1;
@@ -424,6 +486,12 @@ impl StepContext {
         let want = workers.max(1);
         if self.scratch.len() < want {
             self.scratch.resize_with(want, StepScratch::default);
+        }
+        // Preallocate every slot's span ring (idempotent, grow-only) so
+        // task-span recording on the warm path never allocates.
+        #[cfg(feature = "trace")]
+        for s in &mut self.scratch[..want] {
+            s.ring.ensure_cap(DEFAULT_RING_CAP);
         }
     }
 }

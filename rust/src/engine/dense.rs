@@ -42,6 +42,11 @@ use super::ctx::StepContext;
 use super::plan::{MetaSpec, StateLayout};
 use super::shared::SharedSlice;
 use super::StepEngine;
+#[cfg(feature = "trace")]
+use crate::obs::trace::{
+    now, P_DENSE_ADAMW32, P_DENSE_AF_F, P_DENSE_AF_REDUCE, P_DENSE_AF_RMS, P_DENSE_AF_U,
+    P_DENSE_AF_W, P_DENSE_SGDM, P_DENSE_SM3, P_DENSE_SM3_REDUCE, TASK_NONE,
+};
 use crate::optim::adafactor::Second;
 use crate::optim::sm3::Accum;
 use crate::optim::{Hyper, Param};
@@ -108,9 +113,12 @@ pub fn adamw32_step(
     if ctx.plan.tasks.is_empty() {
         return;
     }
+    let threads = eng.resolve_threads(ctx.plan.tasks.len(), ctx.plan.total_elems);
+    // The dense update itself needs no scratch; the per-worker slots
+    // carry the trace rings (and stay untouched when tracing is off).
+    ctx.ensure_scratch(threads);
     let plan = &ctx.plan;
     let arena = &ctx.arena;
-    let threads = eng.resolve_threads(plan.tasks.len(), plan.total_elems);
     let bc1 = 1.0 - hp.beta1.powi(t as i32);
     let bc2 = 1.0 - hp.beta2.powi(t as i32);
 
@@ -122,20 +130,34 @@ pub fn adamw32_step(
     vs.extend(v.iter_mut().map(|t| SharedSlice::new(t.data.as_mut_slice())));
     let (ws, ms, vs) = (ws.as_slice(), ms.as_slice(), vs.as_slice());
     let plan_ref = plan;
-    eng.run_tasks_in::<(), _>(threads, plan.tasks.len(), &mut ctx.affinity, move |ti, _| {
-        for piece in &plan_ref.tasks[ti].pieces {
-            let (lo, hi) = (piece.lo, piece.hi);
-            // SAFETY: pieces partition each tensor disjointly (plan
-            // invariant), so this task is the sole writer of [lo, hi).
-            let w = unsafe { ws[piece.tensor].range_mut(lo, hi) };
-            // SAFETY: same disjoint piece range, moment buffer.
-            let mm = unsafe { ms[piece.tensor].range_mut(lo, hi) };
-            // SAFETY: same disjoint piece range, second-moment buffer.
-            let vv = unsafe { vs[piece.tensor].range_mut(lo, hi) };
-            let g = &grads[piece.tensor].data[lo..hi];
-            adamw32_piece(w, mm, vv, g, hp, bc1, bc2, lr);
-        }
-    });
+    #[cfg(feature = "trace")]
+    let _t0 = now();
+    eng.run_tasks_with_in(
+        threads,
+        plan.tasks.len(),
+        &mut ctx.affinity,
+        &mut ctx.scratch[..],
+        move |ti, _s| {
+            #[cfg(feature = "trace")]
+            let _ts = now();
+            for piece in &plan_ref.tasks[ti].pieces {
+                let (lo, hi) = (piece.lo, piece.hi);
+                // SAFETY: pieces partition each tensor disjointly (plan
+                // invariant), so this task is the sole writer of [lo, hi).
+                let w = unsafe { ws[piece.tensor].range_mut(lo, hi) };
+                // SAFETY: same disjoint piece range, moment buffer.
+                let mm = unsafe { ms[piece.tensor].range_mut(lo, hi) };
+                // SAFETY: same disjoint piece range, second-moment buffer.
+                let vv = unsafe { vs[piece.tensor].range_mut(lo, hi) };
+                let g = &grads[piece.tensor].data[lo..hi];
+                adamw32_piece(w, mm, vv, g, hp, bc1, bc2, lr);
+            }
+            #[cfg(feature = "trace")]
+            _s.ring.record(P_DENSE_ADAMW32, ti as u32, _ts);
+        },
+    );
+    #[cfg(feature = "trace")]
+    ctx.trace.record(P_DENSE_ADAMW32, TASK_NONE, _t0);
 }
 
 /// One dense-momentum SGDM step on the shard plan (paper Alg. 2 with the
@@ -174,6 +196,8 @@ pub fn sgdm_step(
     ms.extend(m.iter_mut().map(|t| SharedSlice::new(t.data.as_mut_slice())));
     let (ws, ms) = (ws.as_slice(), ms.as_slice());
     let plan_ref = plan;
+    #[cfg(feature = "trace")]
+    let _t0 = now();
     eng.run_tasks_in::<(), _>(threads, plan.tasks.len(), &mut ctx.affinity, move |ti, _| {
         for piece in &plan_ref.tasks[ti].pieces {
             let (lo, hi) = (piece.lo, piece.hi);
@@ -189,6 +213,8 @@ pub fn sgdm_step(
             }
         }
     });
+    #[cfg(feature = "trace")]
+    ctx.trace.record(P_DENSE_SGDM, TASK_NONE, _t0);
 }
 
 /// Per-tensor route of the SM3 executor: cover accumulators (read-only
@@ -256,6 +282,8 @@ pub fn sm3_step(
     let wd = hp.weight_decay;
 
     {
+        #[cfg(feature = "trace")]
+        let _t0 = now();
         let mut routes = arena.lease();
         routes.extend(acc.iter_mut().map(|a| match a {
             Accum::Cover {
@@ -333,10 +361,14 @@ pub fn sm3_step(
                 }
             }
         });
+        #[cfg(feature = "trace")]
+        ctx.trace.record(P_DENSE_SM3, TASK_NONE, _t0);
     }
 
     // Sequential max-reduce in shard order into the context's reduction
     // scratch, then committed in place: fresh cover accumulators.
+    #[cfg(feature = "trace")]
+    let _t0 = now();
     let red = &mut ctx.red;
     for i in 0..n {
         if let Accum::Cover {
@@ -364,6 +396,8 @@ pub fn sm3_step(
             mu_col.copy_from_slice(&maxes[rows..]);
         }
     }
+    #[cfg(feature = "trace")]
+    ctx.trace.record(P_DENSE_SM3_REDUCE, TASK_NONE, _t0);
 }
 
 /// Per-tensor route of the Adafactor executor: factored second moment
@@ -476,6 +510,8 @@ pub fn adafactor_step(
     // ---------------- Phase F: factored statistics -------------------
     if ctx.metas.iter().any(|mt| mt.v == StateLayout::Factored) {
         {
+            #[cfg(feature = "trace")]
+            let _t0 = now();
             let plan = &ctx.plan;
             let metas = &ctx.metas;
             let arena = &ctx.arena;
@@ -513,10 +549,14 @@ pub fn adafactor_step(
                     }
                 }
             });
+            #[cfg(feature = "trace")]
+            ctx.trace.record(P_DENSE_AF_F, TASK_NONE, _t0);
         }
         // Sequential reduce in shard order + EMA (matches
         // FactoredSecond::update bit-for-bit when a tensor is a single
         // shard; see the module docs for the multi-shard contract).
+        #[cfg(feature = "trace")]
+        let _t0 = now();
         let plan = &ctx.plan;
         let metas = &ctx.metas;
         let red = &mut ctx.red;
@@ -558,6 +598,8 @@ pub fn adafactor_step(
                 *c = beta2 * *c + (1.0 - beta2) * ((total / rows as f64) as f32);
             }
         }
+        #[cfg(feature = "trace")]
+        ctx.trace.record(P_DENSE_AF_REDUCE, TASK_NONE, _t0);
     }
 
     {
@@ -592,6 +634,8 @@ pub fn adafactor_step(
 
         // ------------- Phase U: update v, accumulate Σu² -------------
         {
+            #[cfg(feature = "trace")]
+            let _t0 = now();
             let mut aux_views = arena.lease();
             aux_views.extend(ctx.aux.iter_mut().map(|a| SharedSlice::new(a.as_mut_slice())));
             let aux_views = aux_views.as_slice();
@@ -627,9 +671,13 @@ pub fn adafactor_step(
                     out[1] = pc;
                 }
             });
+            #[cfg(feature = "trace")]
+            ctx.trace.record(P_DENSE_AF_U, TASK_NONE, _t0);
         }
 
         // ------- Reduce: per-tensor RMS → clip factor (Alg. 4) -------
+        #[cfg(feature = "trace")]
+        let _t0 = now();
         let invs = &mut ctx.invs;
         invs.fill(None);
         for (i, inv) in invs.iter_mut().enumerate() {
@@ -653,8 +701,12 @@ pub fn adafactor_step(
             }
         }
         let invs: &[Option<f32>] = invs;
+        #[cfg(feature = "trace")]
+        ctx.trace.record(P_DENSE_AF_RMS, TASK_NONE, _t0);
 
         // ---------- Phase W: clip, momentum, weight update -----------
+        #[cfg(feature = "trace")]
+        let _t0 = now();
         eng.run_tasks_in::<(), _>(threads, plan.tasks.len(), &mut ctx.affinity, move |ti, _| {
             for piece in &plan_ref.tasks[ti].pieces {
                 let (lo, hi) = (piece.lo, piece.hi);
@@ -696,6 +748,8 @@ pub fn adafactor_step(
                 }
             }
         });
+        #[cfg(feature = "trace")]
+        ctx.trace.record(P_DENSE_AF_W, TASK_NONE, _t0);
     }
 }
 

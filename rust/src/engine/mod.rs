@@ -238,6 +238,37 @@
 //! Audit-mode registries are engine-wide but reached through a
 //! thread-local task scope, so concurrently running engines (e.g. the
 //! test harness's parallel tests) never cross-talk.
+//!
+//! # Observability
+//!
+//! The engine feeds the [`crate::obs`] telemetry subsystem on three
+//! channels, all designed to keep the hot path untouched:
+//!
+//! * **Span tracing** (`--features trace`, mirroring the `audit`
+//!   feature's gating): every executor phase (F/A/reduce/C/commit, the
+//!   dense per-preset phases, and the offload queue/in/compute/out
+//!   stages) and every worker task records a span into preallocated
+//!   rings owned by [`StepContext`] — the coordinator's ring plus one
+//!   per scratch slot, sized on the cold `ensure`/`ensure_scratch`
+//!   paths so warm-step recording is a wrapping indexed store with zero
+//!   allocations (the `ctx_cache` zero-alloc pins also run with the
+//!   feature on). With the feature off every record site compiles away.
+//!   Export as chrome://tracing JSON via `Optimizer::export_trace`,
+//!   `LOWBIT_TRACE=path.json` on any training run, or the `lowbit
+//!   trace` subcommand.
+//! * **Quantization-quality metrics** (runtime-gated, no feature):
+//!   armed per-optimizer via `with_quant_metrics(true)`, phase C taps
+//!   the fresh codes while the data is already in cache and accumulates
+//!   per-moment RMSE / max-abs / relative error, nibble-code occupancy
+//!   histograms and outlier counters into per-worker accumulators,
+//!   merged in slot order at commit. Metered steps route through the
+//!   unfused phase-C arm, which is bit-identical (RNG draws included)
+//!   to the fused default.
+//! * **Unified reporting**: scheduler telemetry ([`SchedStats`]),
+//!   offload totals, span summaries and quant metrics surface through
+//!   one `Optimizer::step_report` accessor (`obs::report::StepReport`),
+//!   printed by the trainer at a configurable cadence and appended as
+//!   summary percentiles to the bench JSON artifacts.
 
 pub mod adamw4;
 #[cfg(feature = "audit")]

@@ -25,6 +25,13 @@
 //! the engine module docs' "Scheduler" section): "the worker that ran
 //! this shard last step" is meaningful across steps precisely because
 //! slots are stable on the persistent pool.
+//!
+//! The pool itself records no telemetry. Span tracing (`--features
+//! trace`, see the engine module docs' "Observability" section) lives
+//! one level up in the executors: task bodies record into their
+//! exclusive `StepScratch` slot's ring, keyed by the same stable slot
+//! index, so the pool's broadcast protocol stays free of instrumentation
+//! branches.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};

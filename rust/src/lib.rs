@@ -11,6 +11,8 @@
 //!   ([`data`]), the PJRT runtime ([`runtime`]) that executes the AOT
 //!   artifacts, memory accounting ([`memory`]), the offload tier —
 //!   analytic oracle + executable host-state pipeline ([`offload`]) —
+//!   the telemetry/observability layer ([`obs`]: span tracing behind
+//!   the `trace` feature, quant-quality metrics, unified step reports),
 //!   and the paper-experiment harness ([`exp`]).
 //!
 //! # The unsafe boundary
@@ -38,6 +40,7 @@ pub mod data;
 pub mod train;
 pub mod runtime;
 pub mod memory;
+pub mod obs;
 pub mod offload;
 pub mod config;
 pub mod exp;

@@ -6,17 +6,20 @@
 //!   exp      regenerate a paper table/figure (table1..6, fig1..4, all)
 //!   memory   memory estimator / largest-trainable-model search
 //!   inspect  dump quantization map tables and quantizer behaviour
+//!   trace    record / validate chrome://tracing span exports
 //!   info     runtime + artifact status
 
 use lowbit_opt::config::{RawConfig, RunConfig};
 use lowbit_opt::data::{LmBatch, MarkovCorpus};
 use lowbit_opt::exp::{self, ExpContext};
 use lowbit_opt::memory::{training_bytes, StatePreset, TrainSetup, GB};
-use lowbit_opt::model::{llama_family, opt_family};
-use lowbit_opt::optim::{Optimizer, Param};
+use lowbit_opt::model::{llama_family, opt_family, TransformerConfig};
+use lowbit_opt::obs::trace::PHASE_NAMES;
+use lowbit_opt::optim::{Hyper, Optimizer, Param};
 use lowbit_opt::quant::{MapKind, QuantMap};
 use lowbit_opt::train::{LrSchedule, Trainer, TransformerEngine};
 use lowbit_opt::util::cli::Command;
+use lowbit_opt::util::json::Json;
 use lowbit_opt::util::rng::Pcg64;
 use lowbit_opt::util::stats::fmt_bytes;
 
@@ -27,6 +30,7 @@ fn main() {
         Some("exp") => cmd_exp(&argv[1..]),
         Some("memory") => cmd_memory(&argv[1..]),
         Some("inspect") => cmd_inspect(&argv[1..]),
+        Some("trace") => cmd_trace(&argv[1..]),
         Some("info") => cmd_info(),
         Some("--help") | Some("-h") | None => {
             print_usage();
@@ -50,6 +54,7 @@ fn print_usage() {
          \x20 exp      regenerate a paper table/figure (table1..table6, fig1..fig4, all)\n\
          \x20 memory   memory estimator + largest-trainable-model search\n\
          \x20 inspect  print quantization map tables\n\
+         \x20 trace    record a chrome://tracing span export, or validate one\n\
          \x20 info     runtime + artifact status\n\n\
          Run `lowbit <subcommand> --help` for options."
     );
@@ -71,6 +76,11 @@ fn cmd_train(argv: &[String]) -> i32 {
             "threads",
             "step-engine worker threads, dense + compressed presets (0 = auto)",
             None,
+        )
+        .opt(
+            "report-every",
+            "print the optimizer's unified StepReport every N steps (0 = off)",
+            Some("0"),
         )
         .flag("quiet", "suppress progress logs");
     let args = match cmd.parse(argv) {
@@ -119,7 +129,7 @@ fn cmd_train(argv: &[String]) -> i32 {
             return 2;
         }
     };
-    match run_training(&cfg) {
+    match run_training(&cfg, args.get_usize("report-every", 0)) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("training failed: {e}");
@@ -128,7 +138,7 @@ fn cmd_train(argv: &[String]) -> i32 {
     }
 }
 
-fn run_training(cfg: &RunConfig) -> anyhow::Result<()> {
+fn run_training(cfg: &RunConfig, report_every: usize) -> anyhow::Result<()> {
     println!(
         "model: {} params | optimizer: {} | engine: {} | steps: {} | threads: {}",
         cfg.model.n_params(),
@@ -147,7 +157,7 @@ fn run_training(cfg: &RunConfig) -> anyhow::Result<()> {
         warmup: cfg.warmup,
         total: cfg.steps,
     };
-    let trainer = Trainer::new(cfg.steps, schedule);
+    let trainer = Trainer::new(cfg.steps, schedule).with_report_every(report_every);
 
     // Optimizer: presets + the PJRT fused variant.
     let mut opt: Box<dyn Optimizer> = if cfg.optimizer == "adamw4-fused" {
@@ -323,6 +333,198 @@ fn cmd_inspect(argv: &[String]) -> i32 {
             println!("  {:?}", m.values);
         }
     }
+    0
+}
+
+fn cmd_trace(argv: &[String]) -> i32 {
+    let cmd = Command::new(
+        "trace",
+        "record a chrome://tracing span export from a short training run, \
+         or validate an existing export / bench-JSON reporting schema",
+    )
+    .opt("out", "output path for the recorded trace", Some("trace.json"))
+    .opt("steps", "training steps to record", Some("5"))
+    .opt("optimizer", "optimizer preset to trace", Some("adamw4"))
+    .opt("threads", "engine worker threads (0 = auto)", Some("0"))
+    .opt("seed", "run seed", Some("7"))
+    .opt("check", "validate FILE as a chrome trace export (instead of recording)", None)
+    .opt(
+        "expect",
+        "comma list of phase names --check requires to be present",
+        Some("engine.A,engine.C"),
+    )
+    .opt(
+        "check-bench",
+        "validate FILE as BENCH_*.json: every run carries trace_summary/tier/sched",
+        None,
+    );
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    if let Some(path) = args.get("check") {
+        return check_trace_file(path, args.get_or("expect", ""));
+    }
+    if let Some(path) = args.get("check-bench") {
+        return check_bench_file(path);
+    }
+
+    // Record mode: a short builtin run on the tiny transformer, then dump
+    // the spans the optimizer's rings currently hold (a rolling window
+    // over the most recent steps; older spans fall off once a ring
+    // fills, counted in the summary's `dropped`).
+    let steps = args.get_usize("steps", 5);
+    let preset = args.get_or("optimizer", "adamw4").to_string();
+    let threads = args.get_usize("threads", 0);
+    let seed = args.get_usize("seed", 7) as u64;
+    let Some(mut opt) = lowbit_opt::optim::build_threaded(&preset, Hyper::default(), threads)
+    else {
+        eprintln!("unknown optimizer {preset}");
+        return 2;
+    };
+    let cfg = TransformerConfig::tiny();
+    let mut rng = Pcg64::seeded(seed);
+    let mut params = cfg.init_params(&mut rng);
+    let mut data_rng = rng.split(1);
+    let corpus = MarkovCorpus::new(cfg.vocab, seed ^ 0xC0DE);
+    let engine = TransformerEngine::new(cfg);
+    let mut engine_fn = |p: &[Param], b: &LmBatch| engine.loss_and_grads(p, b);
+    let trainer = Trainer::new(steps, LrSchedule::Constant(1e-3));
+    trainer.run(&mut params, opt.as_mut(), &mut engine_fn, |_| {
+        corpus.sample(2, cfg.max_seq, &mut data_rng)
+    });
+    match opt.as_ref().export_trace() {
+        Some(doc) => {
+            let out = args.get_or("out", "trace.json");
+            let events = doc.get("traceEvents").and_then(|e| e.as_arr()).map_or(0, |a| a.len());
+            if let Err(e) = std::fs::write(out, doc.to_string()) {
+                eprintln!("cannot write {out}: {e}");
+                return 1;
+            }
+            println!("wrote {out}: {events} span events from a {steps}-step run");
+            0
+        }
+        None => {
+            eprintln!(
+                "this build records no spans — rebuild with `--features trace` \
+                 (and use an engine-backed optimizer preset)"
+            );
+            1
+        }
+    }
+}
+
+/// `lowbit trace --check`: the file must parse, hold a non-empty
+/// `traceEvents` array of complete-event (`"ph":"X"`) entries with finite
+/// non-negative timestamps, use only known phase names, and contain every
+/// phase listed in `--expect`.
+fn check_trace_file(path: &str, expect: &str) -> i32 {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {path}: {e}");
+            return 1;
+        }
+    };
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{path}: invalid JSON: {e}");
+            return 1;
+        }
+    };
+    let Some(events) = doc.get("traceEvents").and_then(|e| e.as_arr()) else {
+        eprintln!("{path}: no traceEvents array");
+        return 1;
+    };
+    if events.is_empty() {
+        eprintln!("{path}: traceEvents is empty (was the run built with --features trace?)");
+        return 1;
+    }
+    let mut seen: Vec<&str> = Vec::new();
+    for (i, ev) in events.iter().enumerate() {
+        let Some(name) = ev.get("name").and_then(|n| n.as_str()) else {
+            eprintln!("{path}: event {i} has no name");
+            return 1;
+        };
+        if !PHASE_NAMES.contains(&name) {
+            eprintln!("{path}: event {i} has unknown phase name '{name}'");
+            return 1;
+        }
+        if ev.get("ph").and_then(|p| p.as_str()) != Some("X") {
+            eprintln!("{path}: event {i} is not a complete event (ph != \"X\")");
+            return 1;
+        }
+        for key in ["ts", "dur"] {
+            match ev.get(key).and_then(|v| v.as_f64()) {
+                Some(x) if x.is_finite() && x >= 0.0 => {}
+                _ => {
+                    eprintln!("{path}: event {i} has missing or invalid '{key}'");
+                    return 1;
+                }
+            }
+        }
+        if !seen.contains(&name) {
+            seen.push(name);
+        }
+    }
+    for want in expect.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        if !seen.contains(&want) {
+            eprintln!("{path}: expected phase '{want}' absent (saw {seen:?})");
+            return 1;
+        }
+    }
+    println!("{path}: OK — {} events across phases {seen:?}", events.len());
+    0
+}
+
+/// `lowbit trace --check-bench`: the file must be a top-level array of run
+/// objects, and every run must carry the unified-reporting schema keys —
+/// `trace_summary` (with its boolean `enabled` marker), `tier`, `sched`.
+fn check_bench_file(path: &str) -> i32 {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {path}: {e}");
+            return 1;
+        }
+    };
+    let runs = match Json::parse(&text) {
+        Ok(Json::Arr(v)) => v,
+        Ok(_) => {
+            eprintln!("{path}: expected a top-level array of bench runs");
+            return 1;
+        }
+        Err(e) => {
+            eprintln!("{path}: invalid JSON: {e}");
+            return 1;
+        }
+    };
+    if runs.is_empty() {
+        eprintln!("{path}: no bench runs");
+        return 1;
+    }
+    for (i, run) in runs.iter().enumerate() {
+        for key in ["trace_summary", "tier", "sched"] {
+            if run.get(key).is_none() {
+                eprintln!("{path}: run {i} missing key '{key}'");
+                return 1;
+            }
+        }
+        if run
+            .get("trace_summary")
+            .and_then(|t| t.get("enabled"))
+            .and_then(Json::as_bool)
+            .is_none()
+        {
+            eprintln!("{path}: run {i} trace_summary lacks boolean 'enabled'");
+            return 1;
+        }
+    }
+    println!("{path}: OK — {} runs carry trace_summary/tier/sched", runs.len());
     0
 }
 

@@ -209,6 +209,19 @@ mod tests {
                 actual, predicted,
                 "{preset_name}: actual {actual} vs predicted {predicted}"
             );
+            // The measured allocation (buffer capacities) can only sit
+            // at or above the analytic count — and for state buffers,
+            // which are sized once and never grown, not far above it.
+            let allocated = opt.state_bytes_allocated() as u64;
+            assert!(
+                allocated >= actual,
+                "{preset_name}: allocated {allocated} below analytic {actual}"
+            );
+            assert!(
+                allocated <= 2 * actual,
+                "{preset_name}: allocated {allocated} vs analytic {actual} — \
+                 state buffers should be sized tight"
+            );
         }
     }
 

@@ -1,0 +1,78 @@
+#![forbid(unsafe_code)]
+//! Observability: structured, low-overhead telemetry for the step engine,
+//! the offload pipeline and the quantizer.
+//!
+//! Three layers, one report:
+//!
+//! * [`trace`] — span tracing. Every engine/offload phase and (where the
+//!   executor threads worker scratch through the pool) every worker task
+//!   records a `(phase, task, t0, t1)` [`trace::Span`] into a
+//!   preallocated ring buffer. The coordinator ring and the per-worker
+//!   rings are owned by the optimizer's cached
+//!   [`crate::engine::StepContext`] (the coordinator ring directly, the
+//!   worker rings inside each [`crate::engine::StepScratch`] slot), so a
+//!   warmed-up traced step performs **zero heap allocations** — the same
+//!   contract `rust/tests/ctx_cache.rs` pins for the untraced step.
+//! * [`quant`] — quantization-quality metrics. Optional (runtime-gated,
+//!   see below) per-step accumulators of quantization error (RMSE /
+//!   max-abs / relative) of the first and second moments against their
+//!   pre-encode fp32 values, nibble-code occupancy histograms (the
+//!   zero-point diagnostic: how often a map's zero code fires), and
+//!   per-tensor dynamic-range / top-of-range outlier counters.
+//! * [`report`] — unified reporting. [`report::StepReport`] bundles
+//!   scheduler telemetry ([`crate::engine::SchedStats`]), the offload
+//!   pipeline's [`crate::offload::OffloadReport`], span summaries
+//!   (per-phase count/total/p50/p95/max percentiles — never raw spans)
+//!   and the quant metrics behind one `Optimizer::step_report()`
+//!   accessor; `train/trainer.rs` prints it at a configurable cadence
+//!   and the benches append its summary to `BENCH_engine.json` /
+//!   `BENCH_offload.json`.
+//!
+//! # Overhead contract
+//!
+//! * **Feature-gated spans.** Span *recording* compiles to nothing
+//!   without the `trace` cargo feature, mirroring `engine/audit.rs`: the
+//!   ring fields on `StepContext` / `StepScratch` and every record call
+//!   are behind `#[cfg(feature = "trace")]`, so the hot paths are
+//!   untouched no-ops when the feature is off. The types in this module
+//!   always compile (reports still carry sched/offload/quant data).
+//! * **Zero steady-state allocations.** Rings are preallocated to a
+//!   fixed capacity on the cold (`ensure`) path and recording is a plain
+//!   indexed store plus one monotonic-clock read; when a ring is full it
+//!   wraps, overwriting the oldest span and counting the overwrite in
+//!   `dropped`. `ctx_cache.rs` runs its allocation pins with
+//!   `--features trace` in CI.
+//! * **Runtime-gated quant metrics.** Quant-quality accumulation is off
+//!   by default and enabled per optimizer
+//!   (`CompressedAdamW::with_quant_metrics`); it re-reads state the
+//!   phase-C / phase-A encode just produced while the pre-encode fp32
+//!   values are still resident in shard-local scratch, and never
+//!   perturbs results (no extra RNG draws — metrics ride the unfused
+//!   reference re-encode arm, which is bit-identical to the fused one).
+//!
+//! # Export format
+//!
+//! [`trace::chrome_trace`] renders the rings as chrome://tracing /
+//! Perfetto "trace event" JSON: one complete event (`"ph": "X"`) per
+//! span with `ts`/`dur` in microseconds, `tid` 0 for the coordinator and
+//! `1 + worker slot` for pool workers, and the task id under `args`.
+//! Write it via `LOWBIT_TRACE=path.json` (exported by the trainer at the
+//! end of a run) or the `lowbit trace` CLI subcommand, then load it in
+//! `chrome://tracing` or `ui.perfetto.dev`.
+//!
+//! # Determinism
+//!
+//! Which worker records a task span (and every timestamp) is
+//! schedule-dependent; everything else — which spans exist, their phase
+//! ids, their task ids, the coordinator's phase order — is a pure
+//! function of the plan and therefore identical across runs, thread
+//! counts and scheduler modes. [`trace::fingerprint`] extracts exactly
+//! that schedule-independent part; `rust/tests/obs_trace.rs` pins it.
+
+pub mod quant;
+pub mod report;
+pub mod trace;
+
+pub use quant::{MomentAccum, QuantAccum};
+pub use report::{PhaseSummary, QuantReport, SpanSummary, StepReport};
+pub use trace::{chrome_trace, fingerprint, Ring, Span};

@@ -1,0 +1,298 @@
+#![forbid(unsafe_code)]
+//! Quantization-quality accumulators (runtime-gated, see the
+//! [module docs](super)). The engine's phase-A/phase-C encode sites feed
+//! per-worker [`QuantAccum`]s living in shard-local scratch; after the
+//! step they are merged in worker-slot order into one accumulator the
+//! report layer summarizes.
+//!
+//! Integer counters (element counts, code histograms, zero-code /
+//! outlier / zero-value counts) are exact and order-independent, so they
+//! are bit-identical across thread counts and scheduler modes. The f64
+//! error sums are merged in slot order — deterministic for a fixed
+//! schedule, but float rounding may differ across scheduler modes; the
+//! determinism suite pins only the exact counters.
+
+/// Number of histogram buckets. 4-bit codes map 1:1; wider codes are
+/// bucketed by their top 4 bits.
+pub const CODE_BUCKETS: usize = 16;
+
+/// Error/occupancy statistics for one moment kind (m or v), accumulated
+/// over every element that went through a quantizing encode this step.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MomentAccum {
+    /// Elements observed with pre/post-encode values.
+    pub count: u64,
+    /// Σ (x − x̂)² — RMSE numerator.
+    pub sq_err: f64,
+    /// Σ |x − x̂| — relative-error numerator.
+    pub abs_err_sum: f64,
+    /// Σ |x| — relative-error denominator.
+    pub abs_sum: f64,
+    /// max |x − x̂|.
+    pub max_abs_err: f64,
+    /// max |x| (pre-encode dynamic range).
+    pub abs_max: f64,
+    /// Pre-encode exact zeros.
+    pub zero_vals: u64,
+    /// Elements in the top half of their quantization scale
+    /// (|x| ≥ scale/2) — the block-max-dominating outliers of the
+    /// paper's §3 analysis.
+    pub outliers: u64,
+    /// Codes observed in the occupancy histogram (= Σ hist).
+    pub code_count: u64,
+    /// Codes that decode to exactly 0.0 (the zero-point diagnostic).
+    pub zero_codes: u64,
+    /// Code occupancy, 4-bit resolution (see [`CODE_BUCKETS`]).
+    pub hist: [u64; CODE_BUCKETS],
+}
+
+impl MomentAccum {
+    pub fn clear(&mut self) {
+        *self = MomentAccum::default();
+    }
+
+    pub fn merge(&mut self, o: &MomentAccum) {
+        self.count += o.count;
+        self.sq_err += o.sq_err;
+        self.abs_err_sum += o.abs_err_sum;
+        self.abs_sum += o.abs_sum;
+        self.max_abs_err = self.max_abs_err.max(o.max_abs_err);
+        self.abs_max = self.abs_max.max(o.abs_max);
+        self.zero_vals += o.zero_vals;
+        self.outliers += o.outliers;
+        self.code_count += o.code_count;
+        self.zero_codes += o.zero_codes;
+        for (a, b) in self.hist.iter_mut().zip(o.hist.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// Observe one element: pre-encode value `x`, decoded post-encode
+    /// value `xhat`, and the quantization scale at its position (0 for
+    /// an all-zero block — no outlier claim possible).
+    #[inline]
+    pub fn observe(&mut self, x: f32, xhat: f32, scale: f32) {
+        let xd = x as f64;
+        let e = (xd - xhat as f64).abs();
+        let ax = xd.abs();
+        self.count += 1;
+        self.sq_err += e * e;
+        self.abs_err_sum += e;
+        self.abs_sum += ax;
+        if e > self.max_abs_err {
+            self.max_abs_err = e;
+        }
+        if ax > self.abs_max {
+            self.abs_max = ax;
+        }
+        if x == 0.0 {
+            self.zero_vals += 1;
+        }
+        if scale > 0.0 && ax >= 0.5 * scale as f64 {
+            self.outliers += 1;
+        }
+    }
+
+    /// Observe one emitted code of width `bits`; `zero_code` is the code
+    /// that decodes to exactly 0.0, if the map has one.
+    #[inline]
+    pub fn observe_code(&mut self, code: u8, bits: u8, zero_code: Option<u8>) {
+        let bucket = if bits <= 4 {
+            code as usize
+        } else {
+            (code >> (bits - 4)) as usize
+        };
+        self.hist[bucket & (CODE_BUCKETS - 1)] += 1;
+        self.code_count += 1;
+        if zero_code == Some(code) {
+            self.zero_codes += 1;
+        }
+    }
+
+    /// √(Σ(x−x̂)²/n).
+    pub fn rmse(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            (self.sq_err / self.count as f64).sqrt()
+        }
+    }
+
+    /// Σ|x−x̂| / Σ|x| (0 when nothing non-zero was observed).
+    pub fn rel_err(&self) -> f64 {
+        if self.abs_sum > 0.0 {
+            self.abs_err_sum / self.abs_sum
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of emitted codes that decode to exactly 0.
+    pub fn zero_code_frac(&self) -> f64 {
+        if self.code_count == 0 {
+            0.0
+        } else {
+            self.zero_codes as f64 / self.code_count as f64
+        }
+    }
+}
+
+/// Per-tensor dynamic-range / outlier counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TensorAccum {
+    /// max |m| pre-encode.
+    pub m_abs_max: f64,
+    /// max |v| pre-encode.
+    pub v_abs_max: f64,
+    /// Top-of-range outliers (|x| ≥ scale/2), both moments.
+    pub outliers: u64,
+}
+
+impl TensorAccum {
+    pub fn merge(&mut self, o: &TensorAccum) {
+        self.m_abs_max = self.m_abs_max.max(o.m_abs_max);
+        self.v_abs_max = self.v_abs_max.max(o.v_abs_max);
+        self.outliers += o.outliers;
+    }
+}
+
+/// One worker's (or the merged) quant-quality accumulator for a step.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QuantAccum {
+    pub m: MomentAccum,
+    pub v: MomentAccum,
+    pub tensors: Vec<TensorAccum>,
+}
+
+impl QuantAccum {
+    /// Size the per-tensor table (cold path; grow-only).
+    pub fn ensure_tensors(&mut self, n: usize) {
+        if self.tensors.len() < n {
+            self.tensors.resize(n, TensorAccum::default());
+        }
+    }
+
+    /// Reset every counter, keeping the per-tensor table's storage.
+    pub fn clear(&mut self) {
+        self.m.clear();
+        self.v.clear();
+        for t in &mut self.tensors {
+            *t = TensorAccum::default();
+        }
+    }
+
+    /// Fold another accumulator in (per-worker → merged, slot order).
+    pub fn merge(&mut self, o: &QuantAccum) {
+        self.m.merge(&o.m);
+        self.v.merge(&o.v);
+        self.ensure_tensors(o.tensors.len());
+        for (a, b) in self.tensors.iter_mut().zip(o.tensors.iter()) {
+            a.merge(b);
+        }
+    }
+
+    /// Observe one first-moment element of tensor `tensor`.
+    #[inline]
+    pub fn observe_m(&mut self, tensor: usize, x: f32, xhat: f32, scale: f32) {
+        self.m.observe(x, xhat, scale);
+        if let Some(t) = self.tensors.get_mut(tensor) {
+            let ax = (x as f64).abs();
+            if ax > t.m_abs_max {
+                t.m_abs_max = ax;
+            }
+            if scale > 0.0 && ax >= 0.5 * scale as f64 {
+                t.outliers += 1;
+            }
+        }
+    }
+
+    /// Observe one second-moment element of tensor `tensor`.
+    #[inline]
+    pub fn observe_v(&mut self, tensor: usize, x: f32, xhat: f32, scale: f32) {
+        self.v.observe(x, xhat, scale);
+        if let Some(t) = self.tensors.get_mut(tensor) {
+            let ax = (x as f64).abs();
+            if ax > t.v_abs_max {
+                t.v_abs_max = ax;
+            }
+            if scale > 0.0 && ax >= 0.5 * scale as f64 {
+                t.outliers += 1;
+            }
+        }
+    }
+
+    /// Anything observed this step?
+    pub fn is_empty(&self) -> bool {
+        self.m.count == 0 && self.v.count == 0 && self.m.code_count == 0 && self.v.code_count == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_accumulates_error_stats() {
+        let mut a = MomentAccum::default();
+        a.observe(1.0, 0.75, 1.0); // err .25, outlier (|x| >= .5)
+        a.observe(0.0, 0.0, 1.0); // exact zero
+        a.observe(-0.1, -0.2, 1.0); // err .1, not outlier
+        assert_eq!(a.count, 3);
+        assert_eq!(a.zero_vals, 1);
+        assert_eq!(a.outliers, 1);
+        assert!((a.max_abs_err - 0.25).abs() < 1e-12);
+        assert!((a.abs_max - 1.0).abs() < 1e-12);
+        let expect_rmse = ((0.25f64 * 0.25
+            + (-0.1f64 - -0.2f64).abs().powi(2))
+            / 3.0)
+            .sqrt();
+        assert!((a.rmse() - expect_rmse).abs() < 1e-9);
+        assert!((a.rel_err() - 0.35 / 1.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn observe_code_buckets_and_zero_codes() {
+        let mut a = MomentAccum::default();
+        a.observe_code(0, 4, Some(0));
+        a.observe_code(0, 4, Some(0));
+        a.observe_code(15, 4, Some(0));
+        a.observe_code(0x80, 8, None); // top-4-bit bucket 8
+        assert_eq!(a.hist[0], 2);
+        assert_eq!(a.hist[15], 1);
+        assert_eq!(a.hist[8], 1);
+        assert_eq!(a.code_count, 4);
+        assert_eq!(a.zero_codes, 2);
+        assert!((a.zero_code_frac() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_is_addition() {
+        let mut a = QuantAccum::default();
+        a.ensure_tensors(2);
+        a.observe_m(0, 0.5, 0.5, 1.0);
+        a.observe_v(1, 0.9, 0.8, 1.0);
+        let mut b = QuantAccum::default();
+        b.ensure_tensors(2);
+        b.observe_m(0, -2.0, -1.9, 2.0);
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.m.count, 2);
+        assert_eq!(merged.v.count, 1);
+        assert!((merged.m.abs_max - 2.0).abs() < 1e-12);
+        assert!((merged.tensors[0].m_abs_max - 2.0).abs() < 1e-12);
+        // Both observed elements of tensor 0 are outliers (|x| >= scale/2).
+        assert_eq!(merged.tensors[0].outliers, 2);
+        assert!(!merged.is_empty());
+        merged.clear();
+        assert!(merged.is_empty());
+        assert_eq!(merged.tensors.len(), 2, "clear keeps the table");
+    }
+
+    #[test]
+    fn empty_accum_reports_zeros() {
+        let a = MomentAccum::default();
+        assert_eq!(a.rmse(), 0.0);
+        assert_eq!(a.rel_err(), 0.0);
+        assert_eq!(a.zero_code_frac(), 0.0);
+    }
+}

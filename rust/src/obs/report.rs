@@ -1,0 +1,361 @@
+#![forbid(unsafe_code)]
+//! Unified step reporting: summaries of span rings and quant
+//! accumulators, bundled with the scheduler and offload telemetry into
+//! one [`StepReport`] behind `Optimizer::step_report()`. Summaries carry
+//! per-phase percentiles — never raw spans — so appending them to the
+//! bench JSON trajectories stays cheap and schema-stable.
+
+use super::quant::QuantAccum;
+use super::trace::{phase_name, Ring, PHASE_NAMES};
+use crate::engine::SchedStats;
+use crate::offload::OffloadReport;
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+
+/// Timing summary of one phase over the spans currently in the rings.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseSummary {
+    pub name: &'static str,
+    /// Spans (phase spans for the coordinator row of a phase, task spans
+    /// for its workers — both aggregate here under the one phase name).
+    pub count: u64,
+    pub total_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub max_us: f64,
+}
+
+/// Per-phase summaries plus the total span-drop count across rings.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SpanSummary {
+    pub phases: Vec<PhaseSummary>,
+    pub dropped: u64,
+}
+
+impl SpanSummary {
+    /// Summarize whatever the rings currently hold. Export-time only —
+    /// allocates freely.
+    pub fn from_rings(rings: &[(u32, &Ring)]) -> SpanSummary {
+        let mut durs: Vec<Vec<f64>> = vec![Vec::new(); PHASE_NAMES.len()];
+        let mut dropped = 0u64;
+        for &(_tid, ring) in rings {
+            dropped += ring.dropped();
+            for s in ring.iter() {
+                if let Some(d) = durs.get_mut(s.phase as usize) {
+                    d.push(s.dur_ns() as f64 / 1e3);
+                }
+            }
+        }
+        let phases = durs
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| !d.is_empty())
+            .map(|(id, d)| PhaseSummary {
+                name: phase_name(id as u16),
+                count: d.len() as u64,
+                total_us: d.iter().sum(),
+                p50_us: percentile(d, 50.0),
+                p95_us: percentile(d, 95.0),
+                max_us: percentile(d, 100.0),
+            })
+            .collect();
+        SpanSummary { phases, dropped }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("enabled", Json::Bool(true))
+            .set("dropped", Json::Num(self.dropped as f64));
+        let mut phases = Json::obj();
+        for p in &self.phases {
+            let mut e = Json::obj();
+            e.set("count", Json::Num(p.count as f64))
+                .set("total_us", Json::Num(p.total_us))
+                .set("p50_us", Json::Num(p.p50_us))
+                .set("p95_us", Json::Num(p.p95_us))
+                .set("max_us", Json::Num(p.max_us));
+            phases.set(p.name, e);
+        }
+        o.set("phases", phases);
+        o
+    }
+
+    /// The placeholder recorded when span tracing is compiled out (the
+    /// `trace` feature is off) — keeps the bench JSON schema stable.
+    pub fn disabled_json() -> Json {
+        let mut o = Json::obj();
+        o.set("enabled", Json::Bool(false));
+        o
+    }
+}
+
+/// Summary of one moment kind's quant-quality accumulator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MomentReport {
+    pub count: u64,
+    pub rmse: f64,
+    pub max_abs_err: f64,
+    pub rel_err: f64,
+    pub abs_max: f64,
+    pub zero_vals: u64,
+    pub outliers: u64,
+    pub zero_code_frac: f64,
+    pub hist: [u64; super::quant::CODE_BUCKETS],
+}
+
+impl MomentReport {
+    fn from_accum(a: &super::quant::MomentAccum) -> MomentReport {
+        MomentReport {
+            count: a.count,
+            rmse: a.rmse(),
+            max_abs_err: a.max_abs_err,
+            rel_err: a.rel_err(),
+            abs_max: a.abs_max,
+            zero_vals: a.zero_vals,
+            outliers: a.outliers,
+            zero_code_frac: a.zero_code_frac(),
+            hist: a.hist,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("count", Json::Num(self.count as f64))
+            .set("rmse", Json::Num(self.rmse))
+            .set("max_abs_err", Json::Num(self.max_abs_err))
+            .set("rel_err", Json::Num(self.rel_err))
+            .set("abs_max", Json::Num(self.abs_max))
+            .set("zero_vals", Json::Num(self.zero_vals as f64))
+            .set("outliers", Json::Num(self.outliers as f64))
+            .set("zero_code_frac", Json::Num(self.zero_code_frac))
+            .set(
+                "hist",
+                Json::Arr(self.hist.iter().map(|&c| Json::Num(c as f64)).collect()),
+            );
+        o
+    }
+}
+
+/// Quantization-quality report for one step (merged over workers).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantReport {
+    pub m: MomentReport,
+    pub v: MomentReport,
+    /// Per-tensor `(m_abs_max, v_abs_max, outliers)` dynamic-range rows.
+    pub tensors: Vec<(f64, f64, u64)>,
+}
+
+impl QuantReport {
+    pub fn from_accum(a: &QuantAccum) -> QuantReport {
+        QuantReport {
+            m: MomentReport::from_accum(&a.m),
+            v: MomentReport::from_accum(&a.v),
+            tensors: a
+                .tensors
+                .iter()
+                .map(|t| (t.m_abs_max, t.v_abs_max, t.outliers))
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("m", self.m.to_json()).set("v", self.v.to_json());
+        let tensors = self
+            .tensors
+            .iter()
+            .map(|&(m, v, out)| {
+                let mut t = Json::obj();
+                t.set("m_abs_max", Json::Num(m))
+                    .set("v_abs_max", Json::Num(v))
+                    .set("outliers", Json::Num(out as f64));
+                t
+            })
+            .collect();
+        o.set("tensors", Json::Arr(tensors));
+        o
+    }
+}
+
+/// Everything one step's telemetry has to say, from one accessor.
+#[derive(Clone, Debug, Default)]
+pub struct StepReport {
+    /// Optimizer step counter at report time.
+    pub step: usize,
+    pub sched: Option<SchedStats>,
+    pub offload: Option<OffloadReport>,
+    /// `None` when the `trace` feature is off or nothing recorded yet.
+    pub spans: Option<SpanSummary>,
+    /// `None` unless quant metrics are enabled on the optimizer.
+    pub quant: Option<QuantReport>,
+}
+
+impl StepReport {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("step", Json::Num(self.step as f64));
+        if let Some(s) = &self.sched {
+            let mut j = Json::obj();
+            j.set("mode", Json::Str(s.mode.name().to_string()))
+                .set("claims", Json::Num(s.claims as f64))
+                .set("steals", Json::Num(s.steals as f64))
+                .set("affinity_hits", Json::Num(s.affinity_hits as f64));
+            o.set("sched", j);
+        }
+        if let Some(r) = &self.offload {
+            let mut j = Json::obj();
+            j.set("steps", Json::Num(r.steps as f64))
+                .set("bytes_down", Json::Num(r.bytes_down as f64))
+                .set("bytes_up", Json::Num(r.bytes_up as f64))
+                .set("transfers", Json::Num(r.transfers as f64))
+                .set("virtual_step_s", Json::Num(r.step_seconds()))
+                .set("overlap_fraction", Json::Num(r.overlap_fraction()));
+            o.set("offload", j);
+        }
+        o.set(
+            "trace_summary",
+            match &self.spans {
+                Some(s) => s.to_json(),
+                None => SpanSummary::disabled_json(),
+            },
+        );
+        if let Some(q) = &self.quant {
+            o.set("quant", q.to_json());
+        }
+        o
+    }
+
+    /// Compact human rendering for the trainer's cadence printing.
+    pub fn render(&self) -> String {
+        let mut out = format!("[step {}]", self.step);
+        if let Some(s) = &self.sched {
+            out.push_str(&format!(
+                " sched={} claims={} steals={} hits={}",
+                s.mode.name(),
+                s.claims,
+                s.steals,
+                s.affinity_hits
+            ));
+        }
+        if let Some(r) = &self.offload {
+            out.push_str(&format!(
+                " offload: {:.1} us/step virtual, overlap {:.0}%",
+                r.step_seconds() * 1e6,
+                r.overlap_fraction() * 100.0
+            ));
+        }
+        if let Some(sp) = &self.spans {
+            for p in &sp.phases {
+                out.push_str(&format!(
+                    "\n  {:<16} n={:<6} total={:>9.1}us p50={:>7.1}us p95={:>7.1}us max={:>7.1}us",
+                    p.name, p.count, p.total_us, p.p50_us, p.p95_us, p.max_us
+                ));
+            }
+            if sp.dropped > 0 {
+                out.push_str(&format!("\n  (dropped {} spans)", sp.dropped));
+            }
+        }
+        if let Some(q) = &self.quant {
+            out.push_str(&format!(
+                "\n  quant m: rmse={:.3e} rel={:.3e} max={:.3e} zero-code={:.1}% outliers={}",
+                q.m.rmse,
+                q.m.rel_err,
+                q.m.max_abs_err,
+                q.m.zero_code_frac * 100.0,
+                q.m.outliers
+            ));
+            out.push_str(&format!(
+                "\n  quant v: rmse={:.3e} rel={:.3e} max={:.3e} zero-code={:.1}% outliers={}",
+                q.v.rmse,
+                q.v.rel_err,
+                q.v.max_abs_err,
+                q.v.zero_code_frac * 100.0,
+                q.v.outliers
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{Span, P_ENGINE_A, P_ENGINE_C, TASK_NONE};
+
+    fn ring_with(spans: &[(u16, u32, u64, u64)]) -> Ring {
+        let mut r = Ring::default();
+        r.ensure_cap(32);
+        for &(p, t, a, b) in spans {
+            r.push(Span {
+                phase: p,
+                task: t,
+                t0: a,
+                t1: b,
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn span_summary_percentiles() {
+        let coord = ring_with(&[(P_ENGINE_A, TASK_NONE, 0, 10_000)]);
+        let w = ring_with(&[
+            (P_ENGINE_A, 0, 0, 1_000),
+            (P_ENGINE_A, 1, 0, 3_000),
+            (P_ENGINE_C, 0, 0, 2_000),
+        ]);
+        let s = SpanSummary::from_rings(&[(0, &coord), (1, &w)]);
+        assert_eq!(s.phases.len(), 2);
+        let a = s.phases.iter().find(|p| p.name == "engine.A").unwrap();
+        assert_eq!(a.count, 3);
+        assert!((a.total_us - 14.0).abs() < 1e-9);
+        assert!((a.max_us - 10.0).abs() < 1e-9);
+        assert!((a.p50_us - 3.0).abs() < 1e-9);
+        let c = s.phases.iter().find(|p| p.name == "engine.C").unwrap();
+        assert_eq!(c.count, 1);
+    }
+
+    #[test]
+    fn step_report_json_always_has_trace_summary() {
+        let r = StepReport {
+            step: 7,
+            ..StepReport::default()
+        };
+        let j = r.to_json();
+        let ts = j.get("trace_summary").expect("key must always exist");
+        assert_eq!(ts.get("enabled").unwrap().as_bool(), Some(false));
+        // With spans present it flips to enabled with phase entries.
+        let coord = ring_with(&[(P_ENGINE_A, TASK_NONE, 0, 5_000)]);
+        let r2 = StepReport {
+            step: 8,
+            spans: Some(SpanSummary::from_rings(&[(0, &coord)])),
+            ..StepReport::default()
+        };
+        let j2 = r2.to_json();
+        let ts2 = j2.get("trace_summary").unwrap();
+        assert_eq!(ts2.get("enabled").unwrap().as_bool(), Some(true));
+        assert!(ts2.get("phases").unwrap().get("engine.A").is_some());
+        // And the whole report survives a serialize → parse roundtrip.
+        let back = Json::parse(&j2.to_string()).unwrap();
+        assert_eq!(back.get("step").unwrap().as_f64(), Some(8.0));
+    }
+
+    #[test]
+    fn render_mentions_phases_and_quant() {
+        let coord = ring_with(&[(P_ENGINE_C, TASK_NONE, 0, 4_000)]);
+        let mut acc = QuantAccum::default();
+        acc.ensure_tensors(1);
+        acc.observe_v(0, 0.5, 0.4, 1.0);
+        acc.v.observe_code(0, 4, Some(0));
+        let rep = StepReport {
+            step: 3,
+            spans: Some(SpanSummary::from_rings(&[(0, &coord)])),
+            quant: Some(QuantReport::from_accum(&acc)),
+            ..StepReport::default()
+        };
+        let text = rep.render();
+        assert!(text.contains("engine.C"));
+        assert!(text.contains("quant v"));
+        assert!(text.contains("zero-code=100.0%"));
+    }
+}

@@ -1,0 +1,372 @@
+#![forbid(unsafe_code)]
+//! Span tracing primitives: phase-id table, the preallocated [`Ring`]
+//! buffer, chrome-trace export and the schedule-independent
+//! [`fingerprint`]. See the [module docs](super) for the overhead
+//! contract; the recording *call sites* (and the ring storage) live in
+//! the engine/offload executors behind `#[cfg(feature = "trace")]` —
+//! this file is feature-independent so exports and tests always compile.
+
+use crate::util::json::Json;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Task id used by coordinator-side phase spans (no single task).
+pub const TASK_NONE: u32 = u32::MAX;
+
+// Phase ids. Keep `PHASE_NAMES` in sync — `phase_name` indexes it.
+/// Compressed executor: factored-statistics phase (factored tensors only).
+pub const P_ENGINE_F: u16 = 0;
+/// Compressed executor: decompress → AdamW → block requantize.
+pub const P_ENGINE_A: u16 = 1;
+/// Compressed executor: sequential global-scale reduction between A and C.
+pub const P_ENGINE_REDUCE: u16 = 2;
+/// Compressed executor: global re-encode against the reduced scales.
+pub const P_ENGINE_C: u16 = 3;
+/// Compressed executor: commit of the re-encoded buffers/scales.
+pub const P_ENGINE_COMMIT: u16 = 4;
+/// Dense fp32 AdamW single elementwise phase.
+pub const P_DENSE_ADAMW32: u16 = 5;
+/// Dense SGDM single elementwise phase.
+pub const P_DENSE_SGDM: u16 = 6;
+/// SM3 update phase (per-shard cover maxima accumulate alongside).
+pub const P_DENSE_SM3: u16 = 7;
+/// SM3 sequential max-reduce.
+pub const P_DENSE_SM3_REDUCE: u16 = 8;
+/// Adafactor factored-statistics phase.
+pub const P_DENSE_AF_F: u16 = 9;
+/// Adafactor sequential row/col reduction.
+pub const P_DENSE_AF_REDUCE: u16 = 10;
+/// Adafactor update-RMS phase.
+pub const P_DENSE_AF_U: u16 = 11;
+/// Adafactor sequential RMS reduction.
+pub const P_DENSE_AF_RMS: u16 = 12;
+/// Adafactor clipped-write phase.
+pub const P_DENSE_AF_W: u16 = 13;
+/// Offload pipeline: one interleaved prefetch/compute/writeback queue.
+pub const P_OFF_QUEUE: u16 = 14;
+/// Offload pipeline: stage-in (prefetch) transfer task.
+pub const P_OFF_IN: u16 = 15;
+/// Offload pipeline: staged shard compute task.
+pub const P_OFF_COMPUTE: u16 = 16;
+/// Offload pipeline: writeback transfer task.
+pub const P_OFF_OUT: u16 = 17;
+
+/// Phase display names, indexed by phase id.
+pub const PHASE_NAMES: [&str; 18] = [
+    "engine.F",
+    "engine.A",
+    "engine.reduce",
+    "engine.C",
+    "engine.commit",
+    "dense.adamw32",
+    "dense.sgdm",
+    "dense.sm3",
+    "dense.sm3.reduce",
+    "dense.af.F",
+    "dense.af.reduce",
+    "dense.af.U",
+    "dense.af.rms",
+    "dense.af.W",
+    "offload.queue",
+    "offload.in",
+    "offload.compute",
+    "offload.out",
+];
+
+/// Display name of a phase id (`"?"` for out-of-table ids).
+pub fn phase_name(id: u16) -> &'static str {
+    PHASE_NAMES.get(id as usize).copied().unwrap_or("?")
+}
+
+/// Nanoseconds since the process-global trace epoch (first call). One
+/// shared epoch keeps coordinator and worker timestamps on a single
+/// timeline for the chrome export. Allocation-free.
+#[inline]
+pub fn now() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// One recorded span: a phase id, the task id within the phase
+/// ([`TASK_NONE`] for coordinator phase spans) and the start/end
+/// timestamps from [`now`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Span {
+    pub phase: u16,
+    pub task: u32,
+    pub t0: u64,
+    pub t1: u64,
+}
+
+impl Span {
+    /// Duration in nanoseconds (0 for a clock hiccup, never negative).
+    #[inline]
+    pub fn dur_ns(&self) -> u64 {
+        self.t1.saturating_sub(self.t0)
+    }
+}
+
+/// Default ring capacity (spans). 16 bytes per span ⇒ 32 KiB per ring.
+pub const DEFAULT_RING_CAP: usize = 2048;
+
+/// Fixed-capacity span ring. All storage is allocated up front by
+/// [`Ring::ensure_cap`] (the executors call it on the cold `ensure`
+/// path); [`Ring::record`] is a wrapping indexed store — no allocation,
+/// no branch on capacity growth. When full the oldest span is
+/// overwritten and counted in [`Ring::dropped`].
+#[derive(Debug, Default)]
+pub struct Ring {
+    spans: Vec<Span>,
+    /// Next write index.
+    head: usize,
+    /// Number of live spans (≤ capacity).
+    len: usize,
+    /// Spans overwritten after the ring filled.
+    dropped: u64,
+}
+
+impl Ring {
+    /// Grow the preallocated storage to at least `cap` spans. Cold path;
+    /// idempotent and grow-only, so warmed-up steps never re-enter the
+    /// allocator. Existing contents are reset (capacity growth renumbers
+    /// the wrap point; rings are cleared per warm-up anyway).
+    pub fn ensure_cap(&mut self, cap: usize) {
+        if self.spans.len() < cap {
+            self.spans = vec![Span::default(); cap];
+            self.head = 0;
+            self.len = 0;
+        }
+    }
+
+    /// Forget all recorded spans (storage is kept).
+    pub fn clear(&mut self) {
+        self.head = 0;
+        self.len = 0;
+        self.dropped = 0;
+    }
+
+    /// Record a span that started at `t0` (from [`now`]) and ends now.
+    #[inline]
+    pub fn record(&mut self, phase: u16, task: u32, t0: u64) {
+        self.push(Span {
+            phase,
+            task,
+            t0,
+            t1: now(),
+        });
+    }
+
+    /// Append a fully-formed span (wrapping; drops into `dropped` when
+    /// the ring was never given capacity).
+    #[inline]
+    pub fn push(&mut self, s: Span) {
+        let cap = self.spans.len();
+        if cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        self.spans[self.head] = s;
+        self.head += 1;
+        if self.head == cap {
+            self.head = 0;
+        }
+        if self.len < cap {
+            self.len += 1;
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Live span count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Spans overwritten because the ring was full (or had no capacity).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Iterate the live spans oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &Span> {
+        let cap = self.spans.len();
+        let start = if self.len < cap || cap == 0 {
+            0
+        } else {
+            self.head
+        };
+        (0..self.len).map(move |i| {
+            let idx = if cap == 0 { 0 } else { (start + i) % cap };
+            &self.spans[idx]
+        })
+    }
+}
+
+/// Render rings as chrome://tracing "trace event format" JSON. `rings`
+/// pairs a display thread id (0 = coordinator, `1 + slot` = pool worker)
+/// with its ring; export allocates freely (it is never on the step hot
+/// path).
+pub fn chrome_trace(rings: &[(u32, &Ring)]) -> Json {
+    let mut events = Vec::new();
+    for &(tid, ring) in rings {
+        for s in ring.iter() {
+            let mut e = Json::obj();
+            e.set("name", Json::Str(phase_name(s.phase).to_string()))
+                .set("cat", Json::Str("lowbit".to_string()))
+                .set("ph", Json::Str("X".to_string()))
+                .set("ts", Json::Num(s.t0 as f64 / 1e3))
+                .set("dur", Json::Num(s.dur_ns() as f64 / 1e3))
+                .set("pid", Json::Num(1.0))
+                .set("tid", Json::Num(tid as f64));
+            if s.task != TASK_NONE {
+                let mut args = Json::obj();
+                args.set("task", Json::Num(s.task as f64));
+                e.set("args", args);
+            }
+            events.push(e);
+        }
+    }
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(events))
+        .set("displayTimeUnit", Json::Str("ns".to_string()));
+    doc
+}
+
+/// The schedule-independent part of a trace: the coordinator's phase-id
+/// sequence in recorded order, plus the multiset of worker `(phase,
+/// task)` pairs sorted canonically (which *worker* ran a task and every
+/// timestamp are schedule-dependent and excluded). Identical seeds ⇒
+/// identical fingerprints across runs, thread counts and scheduler
+/// modes — pinned by `rust/tests/obs_trace.rs`.
+pub fn fingerprint(rings: &[(u32, &Ring)]) -> (Vec<u16>, Vec<(u16, u32)>) {
+    let mut coord = Vec::new();
+    let mut tasks = Vec::new();
+    for &(tid, ring) in rings {
+        for s in ring.iter() {
+            if tid == 0 {
+                coord.push(s.phase);
+            } else {
+                tasks.push((s.phase, s.task));
+            }
+        }
+    }
+    tasks.sort_unstable();
+    (coord, tasks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let mut r = Ring::default();
+        // No capacity: everything drops.
+        r.record(P_ENGINE_A, 0, now());
+        assert_eq!(r.len(), 0);
+        assert_eq!(r.dropped(), 1);
+        r.clear();
+        r.ensure_cap(4);
+        for i in 0..6u32 {
+            r.push(Span {
+                phase: P_ENGINE_A,
+                task: i,
+                t0: i as u64,
+                t1: i as u64 + 1,
+            });
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 2);
+        // Oldest → newest after wrap: tasks 2, 3, 4, 5.
+        let tasks: Vec<u32> = r.iter().map(|s| s.task).collect();
+        assert_eq!(tasks, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn ensure_cap_is_grow_only_and_idempotent() {
+        let mut r = Ring::default();
+        r.ensure_cap(8);
+        r.record(P_ENGINE_C, 1, now());
+        r.ensure_cap(8); // no-op: contents survive
+        assert_eq!(r.len(), 1);
+        r.ensure_cap(4); // shrink request: no-op
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let mut r = Ring::default();
+        r.ensure_cap(8);
+        r.push(Span {
+            phase: P_ENGINE_A,
+            task: 3,
+            t0: 1000,
+            t1: 3500,
+        });
+        let mut coord = Ring::default();
+        coord.ensure_cap(8);
+        coord.push(Span {
+            phase: P_ENGINE_REDUCE,
+            task: TASK_NONE,
+            t0: 0,
+            t1: 9000,
+        });
+        let doc = chrome_trace(&[(0, &coord), (1, &r)]);
+        let text = doc.to_string();
+        let back = Json::parse(&text).expect("chrome trace must be valid JSON");
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        let e0 = &events[0];
+        assert_eq!(e0.get("name").unwrap().as_str(), Some("engine.reduce"));
+        assert_eq!(e0.get("ph").unwrap().as_str(), Some("X"));
+        assert!(e0.get("args").is_none(), "phase spans carry no task arg");
+        let e1 = &events[1];
+        assert_eq!(e1.get("name").unwrap().as_str(), Some("engine.A"));
+        assert_eq!(
+            e1.get("args").unwrap().get("task").unwrap().as_f64(),
+            Some(3.0)
+        );
+        assert_eq!(e1.get("ts").unwrap().as_f64(), Some(1.0));
+        assert_eq!(e1.get("dur").unwrap().as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn fingerprint_ignores_worker_assignment_and_time() {
+        let mk = |spans: &[(u16, u32)]| {
+            let mut r = Ring::default();
+            r.ensure_cap(16);
+            for (i, &(p, t)) in spans.iter().enumerate() {
+                r.push(Span {
+                    phase: p,
+                    task: t,
+                    t0: i as u64 * 10,
+                    t1: i as u64 * 10 + 5,
+                });
+            }
+            r
+        };
+        let coord = mk(&[(P_ENGINE_A, TASK_NONE), (P_ENGINE_C, TASK_NONE)]);
+        // Same tasks split across workers differently, different times.
+        let w1a = mk(&[(P_ENGINE_A, 0), (P_ENGINE_A, 2)]);
+        let w2a = mk(&[(P_ENGINE_A, 1)]);
+        let w1b = mk(&[(P_ENGINE_A, 1), (P_ENGINE_A, 0)]);
+        let w2b = mk(&[(P_ENGINE_A, 2)]);
+        let fa = fingerprint(&[(0, &coord), (1, &w1a), (2, &w2a)]);
+        let fb = fingerprint(&[(0, &coord), (1, &w1b), (2, &w2b)]);
+        assert_eq!(fa, fb);
+        assert_eq!(fa.0, vec![P_ENGINE_A, P_ENGINE_C]);
+    }
+
+    #[test]
+    fn phase_names_cover_ids() {
+        for (i, name) in PHASE_NAMES.iter().enumerate() {
+            assert_eq!(phase_name(i as u16), *name);
+            assert!(!name.is_empty());
+        }
+        assert_eq!(phase_name(999), "?");
+    }
+}

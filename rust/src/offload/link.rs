@@ -60,6 +60,20 @@ pub struct LinkTotals {
     pub transfers: u64,
 }
 
+impl LinkTotals {
+    /// Fraction of this step's link occupancy hidden behind compute
+    /// (`0.0` for a step that moved no bytes — never `0/0`). The
+    /// accumulated-run counterpart is
+    /// [`super::pipeline::OffloadReport::overlap_fraction`].
+    pub fn hidden_fraction(&self) -> f64 {
+        if self.comm_seconds > 0.0 {
+            (self.hidden_seconds / self.comm_seconds).clamp(0.0, 1.0)
+        } else {
+            0.0
+        }
+    }
+}
+
 impl ThrottledLink {
     pub fn new(model: LinkModel) -> ThrottledLink {
         ThrottledLink { model }

@@ -49,6 +49,8 @@ use crate::engine::adamw4::{
 use crate::engine::ctx::{StepContext, StepScratch};
 use crate::engine::plan::{MetaSpec, StateLayout};
 use crate::engine::{dense, step_seed, Affinity, SharedSlice, StepEngine, PHASE_C_STREAM_BASE};
+#[cfg(feature = "trace")]
+use crate::obs::trace::{now, P_OFF_COMPUTE, P_OFF_IN, P_OFF_OUT, P_OFF_QUEUE, TASK_NONE};
 use crate::optim::state::{MomentState, SecondState};
 use crate::optim::{Hyper, Param};
 use crate::quant::{QuantMap, Scales};
@@ -92,10 +94,17 @@ impl OffloadReport {
         self.virtual_seconds / self.steps.max(1) as f64
     }
 
-    /// Fraction of link time hidden behind compute.
+    /// Fraction of link time hidden behind compute, in `[0, 1]`.
+    ///
+    /// Degenerate steps are absorbed cleanly rather than poisoning the
+    /// ratio: an empty plan never reaches [`OffloadReport::absorb`] at
+    /// all, and a zero-transfer step (every staged segment empty)
+    /// contributes `comm_seconds == 0`, for which this reports `0.0`
+    /// instead of `0/0 = NaN`. The clamp covers accumulated rounding in
+    /// long runs — by construction `hidden ≤ comm` per step.
     pub fn overlap_fraction(&self) -> f64 {
         if self.comm_seconds > 0.0 {
-            self.hidden_seconds / self.comm_seconds
+            (self.hidden_seconds / self.comm_seconds).clamp(0.0, 1.0)
         } else {
             0.0
         }
@@ -200,10 +209,26 @@ fn run_queue<T, C>(
 {
     let (entries, deps) = queue;
     let entries = &entries[..];
-    eng.run_tasks_dep_in(threads, deps, aff, scratch, |qi, s: &mut StepScratch| match entries[qi] {
-        Entry::In(p) => transfer(p, true),
-        Entry::Out(p) => transfer(p, false),
-        Entry::Compute(p) => compute(p, s),
+    eng.run_tasks_dep_in(threads, deps, aff, scratch, |qi, s: &mut StepScratch| {
+        #[cfg(feature = "trace")]
+        let _ts = now();
+        match entries[qi] {
+            Entry::In(p) => {
+                transfer(p, true);
+                #[cfg(feature = "trace")]
+                s.ring.record(P_OFF_IN, p as u32, _ts);
+            }
+            Entry::Out(p) => {
+                transfer(p, false);
+                #[cfg(feature = "trace")]
+                s.ring.record(P_OFF_OUT, p as u32, _ts);
+            }
+            Entry::Compute(p) => {
+                compute(p, s);
+                #[cfg(feature = "trace")]
+                s.ring.record(P_OFF_COMPUTE, p as u32, _ts);
+            }
+        }
     });
 }
 
@@ -253,6 +278,13 @@ pub fn compressed_offloaded_step(
     ctx.begin_step();
     let threads = eng.resolve_threads(ctx.plan.tasks.len(), ctx.plan.total_elems);
     ctx.ensure_scratch(threads);
+    // Quant-quality metrics are an in-memory-executor feature (see
+    // `obs::quant`): the staged path shares `update_piece`, whose taps
+    // key off the per-worker accumulator, so disarm anything a prior
+    // metered in-memory step left behind. No-op on steady offload runs.
+    for s in ctx.scratch.iter_mut() {
+        s.quant = None;
+    }
     let depth = os.cfg.depth.max(1);
     {
         let tp = os.tier.as_ref().expect("tier plan built above");
@@ -274,6 +306,8 @@ pub fn compressed_offloaded_step(
         stage_bytes,
         stage_vals,
         affinity,
+        #[cfg(feature = "trace")]
+        trace,
         ..
     } = ctx;
     let plan = &*plan;
@@ -453,12 +487,16 @@ pub fn compressed_offloaded_step(
                         _ => unreachable!("v staging matches its storage form"),
                     };
                     update_piece(
-                        lo, tc.shape, tc.cols, w, g, m_src, v_src, &hp, sp.t, sp.lr, scratch,
-                        &mut rng,
+                        piece.tensor, lo, tc.shape, tc.cols, w, g, m_src, v_src, &hp, sp.t,
+                        sp.lr, scratch, &mut rng,
                     );
                 }
             };
+            #[cfg(feature = "trace")]
+            let _t0 = now();
             run_queue(eng, threads, &os.queue_a, affinity, &mut scratch[..], &transfer, &compute);
+            #[cfg(feature = "trace")]
+            trace.record(P_OFF_QUEUE, TASK_NONE, _t0);
         }
 
         // ---------- Reduce A→C: combine scale statistics -------------
@@ -550,7 +588,11 @@ pub fn compressed_offloaded_step(
                     }
                 }
             };
+            #[cfg(feature = "trace")]
+            let _t0 = now();
             run_queue(eng, threads, &os.queue_c, affinity, &mut scratch[..], &transfer, &compute);
+            #[cfg(feature = "trace")]
+            trace.record(P_OFF_QUEUE, TASK_NONE, _t0);
         }
     }
 
@@ -625,6 +667,8 @@ pub fn dense_offloaded_step(
         stage_bytes,
         stage_vals,
         affinity,
+        #[cfg(feature = "trace")]
+        trace,
         ..
     } = ctx;
     let plan = &*plan;
@@ -690,7 +734,11 @@ pub fn dense_offloaded_step(
                 dense::adamw32_piece(w, mm, vv, g, hp, bc1, bc2, lr);
             }
         };
+        #[cfg(feature = "trace")]
+        let _t0 = now();
         run_queue(eng, threads, &os.queue_a, affinity, &mut scratch[..], &transfer, &compute);
+        #[cfg(feature = "trace")]
+        trace.record(P_OFF_QUEUE, TASK_NONE, _t0);
     }
 
     let totals = {
@@ -742,6 +790,70 @@ mod tests {
                 .unwrap_or(0);
             assert!(first_comp <= d.min(n.max(1)), "n={n} d={d}");
         }
+    }
+
+    fn test_link() -> LinkModel {
+        LinkModel {
+            bandwidth: 1e9,
+            latency: 0.0,
+            compute_per_step: 1.0,
+            overlap: 1.0,
+        }
+    }
+
+    #[test]
+    fn report_stays_finite_on_degenerate_steps() {
+        // Fresh report: no steps, no transfers — every accessor must be
+        // finite, not NaN.
+        let r = OffloadReport::default();
+        assert_eq!(r.overlap_fraction(), 0.0);
+        assert_eq!(r.step_seconds(), 0.0);
+
+        // A zero-transfer step (every staged segment empty) absorbs
+        // comm == 0 without poisoning the overlap ratio.
+        let mut r = OffloadReport::default();
+        let totals = ThrottledLink::new(test_link()).step_totals(2, &[&[][..]]);
+        r.absorb(&totals, test_link().compute_per_step);
+        assert_eq!(r.steps, 1);
+        assert_eq!(r.transfers, 0);
+        assert_eq!(r.overlap_fraction(), 0.0);
+        assert!(r.step_seconds().is_finite());
+        assert!((r.step_seconds() - 1.0).abs() < 1e-12, "{}", r.step_seconds());
+    }
+
+    #[test]
+    fn empty_model_offloaded_steps_are_no_ops() {
+        // An empty parameter list produces an empty plan; both staged
+        // steps must return before charging the link, leaving a report
+        // whose accessors are all finite.
+        let eng = StepEngine::new().with_threads(1);
+        let mut ctx = StepContext::new();
+        let mut os = OffloadState::new(OffloadConfig::new(test_link(), 2));
+        let sp = StepParams {
+            hp: Hyper::default(),
+            t: 1,
+            lr: 1e-3,
+            base_seed: 7,
+            m_map: None,
+            v_map: None,
+            v1_map: None,
+        };
+        compressed_offloaded_step(&eng, &mut ctx, &mut os, &sp, &mut [], &[], &mut [], &mut []);
+        dense_offloaded_step(
+            &eng,
+            &mut ctx,
+            &mut os,
+            &Hyper::default(),
+            1,
+            1e-3,
+            &mut [],
+            &[],
+            &mut [],
+            &mut [],
+        );
+        assert_eq!(os.report.steps, 0);
+        assert_eq!(os.report.overlap_fraction(), 0.0);
+        assert_eq!(os.report.step_seconds(), 0.0);
     }
 
     #[test]

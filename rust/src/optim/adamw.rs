@@ -12,8 +12,10 @@
 
 use super::{Hyper, Optimizer, Param};
 use crate::engine::{dense, SchedMode, SchedStats, StepContext, StepEngine};
+use crate::obs::report::StepReport;
 use crate::offload::{pipeline, OffloadConfig, OffloadReport, OffloadState};
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 
 /// In-place AdamW update of one parameter tensor given its decompressed
 /// moments. Returns nothing; `m`/`v` are updated to the new (pre-compress)
@@ -214,6 +216,46 @@ impl Optimizer for AdamW {
 
     fn sched_stats(&self) -> Option<SchedStats> {
         self.engine.as_ref().map(|eng| self.ctx.affinity.stats(eng.sched()))
+    }
+
+    fn step_report(&self) -> Option<StepReport> {
+        // The sequential reference loop has no engine telemetry at all.
+        self.engine.as_ref()?;
+        let mut r = StepReport {
+            step: self.t,
+            sched: self.sched_stats(),
+            offload: self.offload_report().copied(),
+            spans: None,
+            quant: None,
+        };
+        #[cfg(feature = "trace")]
+        {
+            let s = crate::obs::report::SpanSummary::from_rings(&self.ctx.trace_rings());
+            if !s.phases.is_empty() || s.dropped > 0 {
+                r.spans = Some(s);
+            }
+        }
+        Some(r)
+    }
+
+    fn export_trace(&self) -> Option<Json> {
+        #[cfg(not(feature = "trace"))]
+        {
+            None
+        }
+        #[cfg(feature = "trace")]
+        {
+            self.engine.as_ref()?;
+            Some(crate::obs::trace::chrome_trace(&self.ctx.trace_rings()))
+        }
+    }
+
+    fn state_bytes_allocated(&self) -> usize {
+        self.m
+            .iter()
+            .chain(self.v.iter())
+            .map(|t| t.data.capacity() * 4)
+            .sum()
     }
 }
 

@@ -45,6 +45,11 @@ impl FactoredSecond {
         4 * (self.row.len() + self.col.len())
     }
 
+    /// Bytes actually allocated (stat-vector capacities); `>= bytes()`.
+    pub fn allocated_bytes(&self) -> usize {
+        4 * (self.row.capacity() + self.col.capacity())
+    }
+
     /// EMA update with the squared gradient:
     /// `R ← β2 R + (1-β2) rowmean(G²+eps)`, likewise for `C`
     /// (Adafactor Alg. 1; we use means so R and C share the scale of V).

@@ -17,9 +17,12 @@ use super::factor::FactoredSecond;
 use super::state::{MomentState, SecondState};
 use super::{Hyper, Optimizer, Param, ParamKind};
 use crate::engine::{compressed_step, SchedMode, SchedStats, StepContext, StepEngine, StepParams};
+use crate::obs::quant::QuantAccum;
+use crate::obs::report::{QuantReport, StepReport};
 use crate::offload::{pipeline, OffloadConfig, OffloadReport, OffloadState};
 use crate::quant::{MapKind, NormKind, QuantMap, Quantizer};
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
 /// Which states get quantized and how (paper §5 + App. D.1).
@@ -187,6 +190,27 @@ impl CompressedAdamW {
     /// (`None` until [`Self::offloaded`] configures the pipeline).
     pub fn offload_report(&self) -> Option<&OffloadReport> {
         self.offload.as_ref().map(|os| &os.report)
+    }
+
+    /// Enable (or disable) per-step quantization-quality metrics:
+    /// RMSE / max-abs / relative quant error of m and v against their
+    /// pre-encode fp32 values, nibble-code occupancy histograms (the
+    /// zero-point diagnostic — how often DE's zero code fires vs
+    /// Linear's never), and per-tensor dynamic-range counters. See
+    /// [`crate::obs::quant`]. Runtime-gated — no feature flag; results
+    /// are bit-identical with metrics on or off (metered steps take the
+    /// reference re-encode arm in phase C, which is pinned equal to the
+    /// fused arm), at some throughput cost. Offloaded steps are never
+    /// metered.
+    pub fn with_quant_metrics(mut self, on: bool) -> CompressedAdamW {
+        self.ctx.quant = if on { Some(QuantAccum::default()) } else { None };
+        self
+    }
+
+    /// The merged quant-quality accumulator of the most recent metered
+    /// step (`None` unless [`Self::with_quant_metrics`] enabled it).
+    pub fn quant_metrics(&self) -> Option<&QuantAccum> {
+        self.ctx.quant_metrics()
     }
 
     /// Set the engine worker count (0 = auto). Results are bit-identical
@@ -442,6 +466,44 @@ impl Optimizer for CompressedAdamW {
     fn sched_stats(&self) -> Option<SchedStats> {
         Some(self.ctx.affinity.stats(self.engine.sched()))
     }
+
+    fn step_report(&self) -> Option<StepReport> {
+        let mut r = StepReport {
+            step: self.t,
+            sched: self.sched_stats(),
+            offload: self.offload_report().copied(),
+            spans: None,
+            quant: self
+                .ctx
+                .quant_metrics()
+                .filter(|a| !a.is_empty())
+                .map(QuantReport::from_accum),
+        };
+        #[cfg(feature = "trace")]
+        {
+            let s = crate::obs::report::SpanSummary::from_rings(&self.ctx.trace_rings());
+            if !s.phases.is_empty() || s.dropped > 0 {
+                r.spans = Some(s);
+            }
+        }
+        Some(r)
+    }
+
+    fn export_trace(&self) -> Option<Json> {
+        #[cfg(not(feature = "trace"))]
+        {
+            None
+        }
+        #[cfg(feature = "trace")]
+        {
+            Some(crate::obs::trace::chrome_trace(&self.ctx.trace_rings()))
+        }
+    }
+
+    fn state_bytes_allocated(&self) -> usize {
+        self.m.iter().map(|s| s.allocated_bytes()).sum::<usize>()
+            + self.v.iter().map(|s| s.allocated_bytes()).sum::<usize>()
+    }
 }
 
 #[cfg(test)]
@@ -634,5 +696,71 @@ mod tests {
             blowup_de > 5.0 * blowup_lin,
             "DE worst step {blowup_de} vs Linear {blowup_lin}"
         );
+    }
+
+    #[test]
+    fn quant_metrics_reproduce_zero_point_asymmetry() {
+        // The same Tab. 1 phenomenon, now *measured* instead of inferred
+        // from the trajectory: under sparse gradients one outlier
+        // dominates each block's scale and DE's zero code swallows the
+        // rest of the block, while Linear has no zero code at all — its
+        // occupancy is zero by construction.
+        let hp = Hyper {
+            weight_decay: 0.0,
+            ..Hyper::default()
+        };
+        let run = |map: MapKind| -> f64 {
+            let mut policy = QuantPolicy::bit4()
+                .with_v(Some(Quantizer::new(NormKind::Block(2048), map, 4, false)));
+            policy.min_quant_size = 0;
+            policy.m_quant = None; // isolate the second moment
+            let mut opt = CompressedAdamW::new(hp, policy).with_quant_metrics(true);
+            let mut rng = Pcg64::seeded(77);
+            let mut params = vec![Param::new(
+                "w",
+                ParamKind::Weight,
+                Tensor::zeros(&[64, 64]),
+            )];
+            for _ in 0..20 {
+                // Mostly tiny gradients with a huge outlier coordinate.
+                let mut g = Tensor::randn(&[64, 64], 1e-4, &mut rng);
+                g.data[0] = 5.0;
+                opt.step(&mut params, &[g], 1e-3);
+            }
+            let acc = opt.quant_metrics().expect("metrics enabled");
+            assert!(!acc.is_empty());
+            // Every v element is encoded (and metered) once per step; the
+            // accumulator holds the last step.
+            assert_eq!(acc.v.code_count, 4096);
+            assert_eq!(acc.v.count, 4096);
+            assert!(acc.v.rmse().is_finite());
+            // And the unified report carries the same numbers.
+            let rep = opt.step_report().expect("compressed optimizer reports");
+            let q = rep.quant.expect("quant metrics in the report");
+            assert!((q.v.zero_code_frac - acc.v.zero_code_frac()).abs() < 1e-12);
+            acc.v.zero_code_frac()
+        };
+        let de = run(MapKind::DynExp);
+        let lin = run(MapKind::Linear);
+        assert_eq!(lin, 0.0, "Linear has no zero code to fire");
+        assert!(
+            de > 0.5,
+            "DE's zero code should dominate sparse blocks, got {de}"
+        );
+    }
+
+    #[test]
+    fn metered_steps_are_bit_identical_to_unmetered() {
+        // Quant metrics ride the reference re-encode arm in phase C,
+        // which is pinned bit-identical (codes and RNG draws alike) to
+        // the fused arm — so metering must never change the trajectory.
+        let hp = Hyper::default();
+        let mut policy = QuantPolicy::bit4().stochastic();
+        policy.min_quant_size = 0;
+        let mut plain = CompressedAdamW::new(hp, policy);
+        let mut metered = CompressedAdamW::new(hp, policy).with_quant_metrics(true);
+        let (_, wa) = quadratic_run(&mut plain, &[32, 16], 40);
+        let (_, wb) = quadratic_run(&mut metered, &[32, 16], 40);
+        assert_eq!(wa, wb);
     }
 }

@@ -12,7 +12,9 @@ pub mod sm3;
 pub mod state;
 
 use crate::engine::SchedStats;
+use crate::obs::report::StepReport;
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 
 /// What a parameter tensor is; drives per-parameter quantization policy
 /// (the 8-bit baseline skips embeddings, the ≤4096 rule skips small
@@ -95,6 +97,30 @@ pub trait Optimizer {
     /// optimizers that don't step through the engine.
     fn sched_stats(&self) -> Option<SchedStats> {
         None
+    }
+
+    /// Unified step telemetry (scheduler counters, offload totals, span
+    /// summaries, quant-quality metrics — whatever this optimizer
+    /// collects; see `obs::report`). `None` for optimizers with no
+    /// engine-backed telemetry at all.
+    fn step_report(&self) -> Option<StepReport> {
+        None
+    }
+
+    /// The recorded span rings as one chrome://tracing JSON document
+    /// (load via `chrome://tracing` or Perfetto). `None` when the
+    /// `trace` feature is compiled out or this optimizer records no
+    /// spans.
+    fn export_trace(&self) -> Option<Json> {
+        None
+    }
+
+    /// Optimizer-state bytes actually allocated (buffer capacities,
+    /// including growth slack), as opposed to the analytic accounting of
+    /// [`Optimizer::state_bytes`]. Defaults to the analytic number for
+    /// optimizers that don't track allocation.
+    fn state_bytes_allocated(&self) -> usize {
+        self.state_bytes()
     }
 }
 

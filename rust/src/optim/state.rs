@@ -44,6 +44,15 @@ impl MomentState {
             MomentState::Quant(q) => q.bytes(),
         }
     }
+
+    /// Bytes actually allocated (buffer capacities, including growth
+    /// slack) — the measured counterpart of the analytic [`Self::bytes`].
+    pub fn allocated_bytes(&self) -> usize {
+        match self {
+            MomentState::F32(t) => 4 * t.data.capacity(),
+            MomentState::Quant(q) => q.allocated_bytes(),
+        }
+    }
 }
 
 /// Storage of a second-moment tensor; adds the factored form (§4.3).
@@ -59,6 +68,16 @@ impl SecondState {
             SecondState::F32(t) => 4 * t.numel(),
             SecondState::Quant(q) => q.bytes(),
             SecondState::Factored(f) => f.bytes(),
+        }
+    }
+
+    /// Bytes actually allocated (buffer capacities, including growth
+    /// slack) — the measured counterpart of the analytic [`Self::bytes`].
+    pub fn allocated_bytes(&self) -> usize {
+        match self {
+            SecondState::F32(t) => 4 * t.data.capacity(),
+            SecondState::Quant(q) => q.allocated_bytes(),
+            SecondState::Factored(f) => f.allocated_bytes(),
         }
     }
 }

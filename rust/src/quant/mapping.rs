@@ -229,6 +229,14 @@ impl QuantMap {
         self.values[q as usize]
     }
 
+    /// The code that decodes to exactly `0.0`, if the map has one.
+    /// Linear (both signs) and DE-0 exclude zero by construction
+    /// (`None`); plain DynExp carries it — the zero-point asymmetry the
+    /// quant-quality metrics diagnose (see `obs::quant`).
+    pub fn zero_code(&self) -> Option<u8> {
+        self.values.iter().position(|&v| v == 0.0).map(|i| i as u8)
+    }
+
     /// §Perf: the kernel-layer encode ([`super::kernels`]) — closed-form
     /// for Linear maps, bits-keyed LUT for DE/DE-0 — bit-exact to
     /// [`Self::encode`], which stays the oracle-pinned reference the

@@ -68,6 +68,19 @@ impl Scales {
         }
     }
 
+    /// Bytes actually allocated for the scales — buffer *capacities*,
+    /// so growth slack counts, unlike the analytic
+    /// [`Self::overhead_bytes`].
+    pub fn allocated_bytes(&self) -> usize {
+        match self {
+            Scales::PerTensor(_) => 4,
+            Scales::Block { scales, .. } => 4 * scales.capacity(),
+            Scales::Rank1 { per_axis } => {
+                4 * per_axis.iter().map(|a| a.capacity()).sum::<usize>()
+            }
+        }
+    }
+
     /// The scale of flattened element `idx` of a tensor with `shape`.
     #[inline]
     pub fn scale_at(&self, idx: usize, shape: &[usize]) -> f32 {

@@ -497,6 +497,12 @@ impl QuantizedTensor {
         self.packed.len() + self.scales.overhead_bytes()
     }
 
+    /// Bytes actually allocated (code and scale buffer capacities);
+    /// always `>= bytes()`, the analytic accounting.
+    pub fn allocated_bytes(&self) -> usize {
+        self.packed.capacity() + self.scales.allocated_bytes()
+    }
+
     /// Decompress to f32 (`N^{-1} ∘ T`).
     pub fn dequantize(&self) -> Tensor {
         let map = self.quantizer.build_map();

@@ -129,6 +129,10 @@ pub struct Trainer {
     pub steps: usize,
     /// Stop early on divergence (keeps ablation sweeps fast).
     pub stop_on_divergence: bool,
+    /// Print the optimizer's unified [`StepReport`] every this many
+    /// steps (`obs::report`; scheduler counters, offload totals, span
+    /// summaries, quant metrics). `0` disables the cadence printing.
+    pub report_every: usize,
 }
 
 impl Trainer {
@@ -138,7 +142,14 @@ impl Trainer {
             divergence: DivergenceRule::default(),
             steps,
             stop_on_divergence: true,
+            report_every: 0,
         }
+    }
+
+    /// Set the [`Self::report_every`] cadence (0 = off).
+    pub fn with_report_every(mut self, every: usize) -> Trainer {
+        self.report_every = every;
+        self
     }
 
     /// Run the loop. `sampler(step)` provides the batch for each step.
@@ -173,8 +184,40 @@ impl Trainer {
             }
             let lr = self.schedule.at(step);
             opt.step(params, &grads, lr);
+            if self.report_every > 0 && (step + 1) % self.report_every == 0 {
+                if let Some(rep) = opt.step_report() {
+                    println!("{}", rep.render());
+                }
+            }
         }
+        export_trace_env(opt);
         TrainReport::from_losses(losses, diverged, timer.seconds(), opt.state_bytes())
+    }
+}
+
+/// When `LOWBIT_TRACE=path.json` is set, write the optimizer's recorded
+/// spans there as a chrome://tracing document (load in `chrome://tracing`
+/// or Perfetto). Called at the end of every [`Trainer::run`]; a silent
+/// no-op when the variable is unset, with a stderr note (never a panic)
+/// when it is set but the build lacks `--features trace` or the write
+/// fails.
+pub fn export_trace_env(opt: &dyn Optimizer) {
+    let Ok(path) = std::env::var("LOWBIT_TRACE") else {
+        return;
+    };
+    if path.is_empty() {
+        return;
+    }
+    match opt.export_trace() {
+        Some(doc) => {
+            if let Err(e) = std::fs::write(&path, doc.to_string()) {
+                eprintln!("LOWBIT_TRACE: cannot write {path}: {e}");
+            }
+        }
+        None => eprintln!(
+            "LOWBIT_TRACE is set but this optimizer records no spans \
+             (build with --features trace)"
+        ),
     }
 }
 
