@@ -46,6 +46,16 @@ cargo test -q --features audit
 echo "== cargo test -q --features audit (engine threads pinned to 7)"
 LOWBIT_ENGINE_THREADS=7 cargo test -q --features audit
 
+# The chaos suite runs fault-free in every pass above; these two passes
+# re-run it under a pinned process-wide fault schedule so the env gate
+# (fault::active) is exercised end to end, and once more with the
+# aliasing auditor on so retried transfers prove free of false alarms.
+echo "== chaos suite under a pinned fault schedule (LOWBIT_FAULTS)"
+LOWBIT_FAULTS=1234:0.05:mixed cargo test -q --test chaos
+
+echo "== chaos suite under the pinned schedule + aliasing auditor"
+LOWBIT_FAULTS=1234:0.05:mixed cargo test -q --features audit --test chaos
+
 echo "== unsafe-boundary lint"
 cargo run --release --bin lint
 
@@ -70,7 +80,7 @@ echo "== bench smoke: offload_pipeline (appends to BENCH_offload.json)"
 cargo bench --bench offload_pipeline -- --smoke --json BENCH_offload.json
 test -s BENCH_offload.json || { echo "FAIL: offload_pipeline did not append to BENCH_offload.json"; exit 1; }
 
-echo "== bench JSON schema: every run carries trace_summary + tier/sched tags"
+echo "== bench JSON schema: every run carries trace_summary + tier/sched tags + fault counters"
 ./target/release/lowbit trace --check-bench BENCH_engine.json
 ./target/release/lowbit trace --check-bench BENCH_offload.json
 

@@ -14,7 +14,7 @@ mod bench_util;
 
 use bench_util::{append_bench_run, bench, section};
 use lowbit_opt::engine::{active_sched, SchedStats};
-use lowbit_opt::obs::report::SpanSummary;
+use lowbit_opt::obs::report::{FaultCounters, SpanSummary};
 use lowbit_opt::offload::{LinkModel, OffloadConfig, OffloadReport};
 use lowbit_opt::quant::active_tier;
 use lowbit_opt::optim::adamw::AdamW;
@@ -63,6 +63,11 @@ fn main() {
     // unless the bench was built with `--features trace` (satisfies the
     // bench-JSON schema either way).
     let mut trace_summary: Option<Json> = None;
+    // Fault/retry/rollback counters of the last benched optimizer. The
+    // bench inherits any `LOWBIT_FAULTS` gate from the environment, so
+    // CI can point the schema check at a faulted record too; unset, the
+    // counters are all zero.
+    let mut faults_json: Option<Json> = None;
 
     section("offload pipeline: wall time + virtual step time (threads x depth)");
     for preset in presets {
@@ -90,8 +95,13 @@ fn main() {
                         let res = bench(&label, min_secs, || {
                             opt.step(&mut params, &grads, 1e-3);
                         });
-                        if let Some(s) = opt.step_report().and_then(|rep| rep.spans) {
-                            trace_summary = Some(s.to_json());
+                        if let Some(rep) = opt.step_report() {
+                            if let Some(s) = &rep.spans {
+                                trace_summary = Some(s.to_json());
+                            }
+                            if let Some(f) = &rep.faults {
+                                faults_json = Some(f.to_json());
+                            }
                         }
                         (res, *opt.offload_report().expect("offloaded"), opt.sched_stats())
                     }
@@ -103,8 +113,13 @@ fn main() {
                         let res = bench(&label, min_secs, || {
                             opt.step(&mut params, &grads, 1e-3);
                         });
-                        if let Some(s) = opt.step_report().and_then(|rep| rep.spans) {
-                            trace_summary = Some(s.to_json());
+                        if let Some(rep) = opt.step_report() {
+                            if let Some(s) = &rep.spans {
+                                trace_summary = Some(s.to_json());
+                            }
+                            if let Some(f) = &rep.faults {
+                                faults_json = Some(f.to_json());
+                            }
                         }
                         (res, *opt.offload_report().expect("offloaded"), opt.sched_stats())
                     }
@@ -185,6 +200,10 @@ fn main() {
         run.set(
             "trace_summary",
             trace_summary.unwrap_or_else(SpanSummary::disabled_json),
+        );
+        run.set(
+            "faults",
+            faults_json.unwrap_or_else(|| FaultCounters::default().to_json()),
         );
         append_bench_run(&path, run);
         println!("appended run to {path}");

@@ -15,7 +15,7 @@ mod bench_util;
 
 use bench_util::{append_bench_run, bench, section, BenchResult};
 use lowbit_opt::engine::{active_sched, SchedMode, SchedStats};
-use lowbit_opt::obs::report::SpanSummary;
+use lowbit_opt::obs::report::{FaultCounters, SpanSummary};
 use lowbit_opt::model::TransformerConfig;
 use lowbit_opt::optim::lowbit::{CompressedAdamW, QuantPolicy};
 use lowbit_opt::optim::{build, build_threaded, Hyper, Optimizer, Param, ParamKind};
@@ -174,6 +174,10 @@ fn main() {
     // unless the bench was built with `--features trace` (satisfies the
     // bench-JSON schema either way).
     let mut trace_summary: Option<Json> = None;
+    // Fault/retry/rollback counters of the benched optimizer — all
+    // zeros here (no fault plan is armed in the bench), but the key is
+    // schema-required so fault regressions stay visible in CI.
+    let mut faults_json: Option<Json> = None;
     for mode in [SchedMode::Queue, SchedMode::Sticky] {
         let mut opt = CompressedAdamW::new(Hyper::default(), QuantPolicy::bit4())
             .with_threads(8)
@@ -199,8 +203,13 @@ fn main() {
             },
         );
         let stats = opt.sched_stats().expect("engine-backed optimizer");
-        if let Some(s) = opt.step_report().and_then(|rep| rep.spans) {
-            trace_summary = Some(s.to_json());
+        if let Some(rep) = opt.step_report() {
+            if let Some(s) = &rep.spans {
+                trace_summary = Some(s.to_json());
+            }
+            if let Some(f) = &rep.faults {
+                faults_json = Some(f.to_json());
+            }
         }
         println!(
             "{}  claims {}  steals {}  affinity hits {}",
@@ -277,6 +286,10 @@ fn main() {
         run.set(
             "trace_summary",
             trace_summary.unwrap_or_else(SpanSummary::disabled_json),
+        );
+        run.set(
+            "faults",
+            faults_json.unwrap_or_else(|| FaultCounters::default().to_json()),
         );
         append_bench_run(&path, run);
         println!("appended run to {path}");

@@ -269,6 +269,41 @@
 //!   one `Optimizer::step_report` accessor (`obs::report::StepReport`),
 //!   printed by the trainer at a configurable cadence and appended as
 //!   summary percentiles to the bench JSON artifacts.
+//!
+//! # Failure semantics
+//!
+//! What happens when a task body panics mid-phase (a bug, or an
+//! injected fault from [`crate::fault`]):
+//!
+//! * **The phase aborts, the step's results are void.** The pool
+//!   catches the unwind on the worker, records the panicked broadcast
+//!   sequence, lets the phase drain, and **re-panics on the submitter**
+//!   ("engine worker panicked during a broadcast task") once every
+//!   worker has returned. The pool and its threads stay reusable — the
+//!   next broadcast runs normally (`pool.rs` pins this).
+//! * **Dependents are released, not stranded.** In dependency-ordered
+//!   phases (`run_tasks_dep`) each task's done flag is set by an
+//!   unwind-safe guard ([`DoneGuard`]), so entries depending on a
+//!   panicked task run instead of parking in [`DepWait`] forever.
+//!   They may read a partially-written scratch slot: memory-safe (the
+//!   disjointness contract is about ranges, not values — the auditor
+//!   stays false-alarm-free under injected faults), numerically
+//!   garbage. That is acceptable *because* the step as a whole aborts.
+//! * **Recovery is the caller's transaction.** Nothing in the engine
+//!   rolls state back; `Optimizer::try_step` snapshots the in-place
+//!   mutated state (packed bufs / scales / weights / `t`) before the
+//!   step, catches the submitter re-panic, restores the snapshot and
+//!   invalidates the step context — a post-abort retry is bit-identical
+//!   to a never-faulted step. Plain `step` keeps the old contract: a
+//!   worker panic propagates and optimizer state is undefined.
+//! * **Fatal, by design:** panics outside a broadcast body (planning,
+//!   reductions on the submitter) and poisoned pool mutexes — both mean
+//!   the submitter itself is unwinding, and there is nothing coherent
+//!   to hand back.
+//!
+//! Transfer-level faults (link failures, payload corruption) never
+//! reach the engine: the offload pipeline detects and retries them at
+//! the staging boundary — see the offload module's "Failure semantics".
 
 pub mod adamw4;
 #[cfg(feature = "audit")]
@@ -652,6 +687,28 @@ impl DepWait {
     }
 }
 
+/// Unwind-safe completion marker for one dependency-ordered task: marks
+/// the task's done flag and wakes [`DepWait`] parkers on drop, so a
+/// panicking task body cannot strand dependents parked on it (they
+/// would otherwise re-check only every [`DEP_PARK`] — or spin forever
+/// if the panicking worker was the one destined to run their dep).
+/// Dependents released this way may read a partially-written scratch
+/// slot — memory-safe (disjoint ranges), numerically garbage — which is
+/// why a panicked broadcast re-panics on the submitter and transactional
+/// callers ([`crate::optim::Optimizer::try_step`]) roll the whole step
+/// back. See the module docs' "Failure semantics".
+struct DoneGuard<'a> {
+    done: &'a AtomicBool,
+    wait: &'a DepWait,
+}
+
+impl Drop for DoneGuard<'_> {
+    fn drop(&mut self) {
+        self.done.store(true, Ordering::Release);
+        self.wait.notify();
+    }
+}
+
 /// The task scheduler: each phase runs its tasks on the engine's
 /// persistent worker pool, workers claiming task indices through the
 /// resolved scheduler mode — the shared atomic queue (`queue`) or the
@@ -931,13 +988,16 @@ impl StepEngine {
                     // strictly backwards), so this wait terminates.
                     wait.wait(&done[d]);
                 }
+                // Declared before the audit scope so the scope closes
+                // first on unwind, then the guard marks done + notifies
+                // (the same order as the straight-line path below).
+                let guard = DoneGuard { done: &done[i], wait };
                 #[cfg(feature = "audit")]
                 let _task = audit::task_scope(audit_reg, i as u64);
                 f(i, &mut *s);
                 #[cfg(feature = "audit")]
                 drop(_task);
-                done[i].store(true, Ordering::Release);
-                wait.notify();
+                drop(guard);
             };
             match sched {
                 SchedMode::Sticky => aff.run_worker(slot, threads, run),
@@ -1292,6 +1352,49 @@ mod tests {
         let eng = StepEngine::new().with_threads(2);
         let mut scratch = vec![(); 2];
         eng.run_tasks_dep(2, &[Some(1), None], &mut scratch, |_i, _: &mut ()| {});
+    }
+
+    #[test]
+    fn run_tasks_dep_panic_releases_parked_dependents() {
+        // Regression (the DoneGuard fix): entry 1 parks in DepWait on
+        // entry 0, whose body sleeps past the spin+yield budget and then
+        // panics. Without the unwind-safe done marker the dependent
+        // would re-check only on the park timeout — and if it were
+        // *spinning* on a dependency whose owner died, it would never
+        // see completion at all (`active` never drains and the
+        // broadcast hangs). The phase must instead drain, re-panic on
+        // the submitter, and leave the engine reusable.
+        for threads in [2usize, 7] {
+            let eng = StepEngine::new().with_threads(threads);
+            let released = AtomicU64::new(0);
+            let mut scratch = vec![(); threads];
+            let t0 = std::time::Instant::now();
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                eng.run_tasks_dep(threads, &[None, Some(0)], &mut scratch, |i, _: &mut ()| {
+                    if i == 0 {
+                        std::thread::sleep(Duration::from_millis(30));
+                        panic!("injected: dep producer dies");
+                    }
+                    released.fetch_add(1, Ordering::Relaxed);
+                });
+            }));
+            assert!(r.is_err(), "submitter must observe the worker panic");
+            assert_eq!(
+                released.load(Ordering::Relaxed),
+                1,
+                "dependent must be released, not stranded ({threads} threads)"
+            );
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "release must not hang ({threads} threads)"
+            );
+            // The pool survives: the next dependency phase runs clean.
+            let order: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+            eng.run_tasks_dep(threads, &[None, Some(0)], &mut scratch, |i, _: &mut ()| {
+                order.lock().unwrap().push(i);
+            });
+            assert_eq!(*order.lock().unwrap(), vec![0, 1], "{threads} threads after abort");
+        }
     }
 
     #[test]

@@ -1,0 +1,436 @@
+#![forbid(unsafe_code)]
+//! Deterministic fault injection and integrity primitives.
+//!
+//! A [`FaultPlan`] is a seeded, schedule-independent description of which
+//! transfers fail, which payloads arrive corrupted, and which workers
+//! panic. Decisions are pure functions of logical coordinates — (step,
+//! phase, task, direction, attempt) — drawn from the plan's own `Pcg64`
+//! stream family, so the same plan produces the same faults at any
+//! thread count or prefetch depth, and a *retried* transfer re-rolls on
+//! its own attempt index rather than replaying the failure forever.
+//!
+//! Arming:
+//! * builder API — `FaultPlan::new(seed).with_rate(r).with_kind(k)`
+//!   plus scheduled worker panics via [`FaultPlan::panic_at`]; or
+//! * environment — `LOWBIT_FAULTS=seed:rate[:kind]` with
+//!   `kind ∈ fail|corrupt|mixed` (default `mixed`), parsed once per
+//!   process by [`active`] exactly like the `LOWBIT_ENGINE_SCHED` /
+//!   `LOWBIT_KERNEL_TIER` gates (unknown values are a hard error).
+//!   Env plans carry no panic schedule: scheduled panics only make
+//!   sense under a driver that retries via `Optimizer::try_step`.
+//!
+//! Unarmed, the whole layer is zero-cost: the offload pipeline checks
+//! one `Option` per step and takes the exact pre-fault code path.
+//!
+//! The module also hosts the integrity primitives the rest of the stack
+//! detects corruption with: a table-driven IEEE CRC-32 ([`crc32`], plus
+//! the incremental [`Crc32`]) used for per-transfer checksums over
+//! staged bytes and per-section checksums in checkpoint manifests.
+
+use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+// ---------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320)
+// ---------------------------------------------------------------------
+
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// Incremental IEEE CRC-32. `update` as bytes stream in, `finish` for
+/// the digest; [`crc32`] is the one-shot convenience.
+#[derive(Clone, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut s = self.state;
+        for &b in bytes {
+            s = CRC_TABLE[((s ^ b as u32) & 0xFF) as usize] ^ (s >> 8);
+        }
+        self.state = s;
+    }
+
+    /// Fold a `f32` slice through the digest by its little-endian bit
+    /// pattern (no unsafe byte casts; NaN payloads digest faithfully).
+    pub fn update_f32s(&mut self, vals: &[f32]) {
+        for v in vals {
+            self.update(&v.to_bits().to_le_bytes());
+        }
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot IEEE CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+// ---------------------------------------------------------------------
+// Fault plan
+// ---------------------------------------------------------------------
+
+/// Which fault family a rate-armed plan injects on the link.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Transient transfer failures only (payload never arrives).
+    Fail,
+    /// Payload corruption only (arrives, fails its checksum).
+    Corrupt,
+    /// A deterministic per-site mix of both (the default).
+    Mixed,
+}
+
+/// The offload-pipeline phase a fault is keyed to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Phase A: block-normalized state staging + update.
+    A,
+    /// Phase C: global re-encode against reduced scales.
+    C,
+}
+
+impl Phase {
+    fn id(self) -> u64 {
+        match self {
+            Phase::A => 0xA,
+            Phase::C => 0xC,
+        }
+    }
+}
+
+/// What an injected transfer fault did to one attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransferFault {
+    /// The transfer failed outright; nothing arrived.
+    Fail,
+    /// The payload arrived corrupted (stage-in only — the checksum
+    /// verify catches it before any compute reads the slot).
+    Corrupt,
+}
+
+struct PanicPoint {
+    step: u64,
+    phase: Phase,
+    task: usize,
+    /// One-shot: a rolled-back step retried at the same `t` must not
+    /// re-fire the same panic, or recovery could never converge.
+    fired: AtomicBool,
+}
+
+/// A seeded, deterministic fault schedule. See the module docs.
+pub struct FaultPlan {
+    seed: u64,
+    rate: f64,
+    kind: FaultKind,
+    panics: Vec<PanicPoint>,
+}
+
+/// Domain-separation salt so fault rolls never correlate with the
+/// optimizer's own per-task update streams (which key off the step seed).
+const FAULT_STREAM_SALT: u64 = 0xFA17_FA17_FA17_FA17;
+
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+fn site_key(step: u64, phase: Phase, task: u64, up: bool, attempt: u32) -> u64 {
+    let mut k = mix64(step ^ 0x9E37_79B9_7F4A_7C15);
+    k = mix64(k ^ phase.id());
+    k = mix64(k ^ task);
+    mix64(k ^ ((up as u64) << 32) ^ attempt as u64)
+}
+
+impl FaultPlan {
+    /// A plan with the given seed and nothing armed yet.
+    pub fn new(seed: u64) -> Self {
+        FaultPlan { seed, rate: 0.0, kind: FaultKind::Mixed, panics: Vec::new() }
+    }
+
+    /// An inert plan. Installing it on an optimizer *overrides* an
+    /// env-armed plan — the explicit way to pin a run fault-free.
+    pub fn none() -> Self {
+        FaultPlan::new(0)
+    }
+
+    /// Per-attempt transfer fault probability in `[0, 1)`.
+    pub fn with_rate(mut self, rate: f64) -> Self {
+        assert!(
+            (0.0..1.0).contains(&rate),
+            "fault rate must be in [0, 1): a rate of 1 can never retry to success"
+        );
+        self.rate = rate;
+        self
+    }
+
+    pub fn with_kind(mut self, kind: FaultKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    /// Schedule a one-shot worker panic at `(step, phase, task)`.
+    /// `step` is the optimizer's post-increment `t` of the step to hit.
+    pub fn panic_at(mut self, step: u64, phase: Phase, task: usize) -> Self {
+        self.panics.push(PanicPoint { step, phase, task, fired: AtomicBool::new(false) });
+        self
+    }
+
+    /// Whether this plan can inject anything at all.
+    pub fn armed(&self) -> bool {
+        self.rate > 0.0 || !self.panics.is_empty()
+    }
+
+    /// Roll for a fault on one transfer attempt. Pure in its logical
+    /// coordinates: schedule order, thread count and prefetch depth
+    /// cannot change the outcome. `up` is the writeback direction;
+    /// corruption is modeled on stage-in only (an up-direction hit
+    /// degrades to [`TransferFault::Fail`], i.e. replay-from-staging).
+    pub fn transfer_fault(
+        &self,
+        step: u64,
+        phase: Phase,
+        task: usize,
+        up: bool,
+        attempt: u32,
+    ) -> Option<TransferFault> {
+        if self.rate <= 0.0 {
+            return None;
+        }
+        let mut r =
+            Pcg64::new(self.seed ^ FAULT_STREAM_SALT, site_key(step, phase, task as u64, up, attempt));
+        if r.next_f64() >= self.rate {
+            return None;
+        }
+        let kind = match self.kind {
+            FaultKind::Fail => TransferFault::Fail,
+            FaultKind::Corrupt => TransferFault::Corrupt,
+            FaultKind::Mixed => {
+                if r.next_u64() & 1 == 0 {
+                    TransferFault::Fail
+                } else {
+                    TransferFault::Corrupt
+                }
+            }
+        };
+        Some(if up { TransferFault::Fail } else { kind })
+    }
+
+    /// Deterministic byte offset to corrupt within an `len`-byte staged
+    /// payload (same stream family as the fault roll that chose it).
+    pub fn corrupt_offset(&self, step: u64, phase: Phase, task: usize, attempt: u32, len: usize) -> usize {
+        let k = site_key(step, phase, task as u64, false, attempt);
+        let mut r = Pcg64::new(self.seed ^ FAULT_STREAM_SALT.rotate_left(17), k);
+        (r.next_u64() % len.max(1) as u64) as usize
+    }
+
+    /// True exactly once for a scheduled `(step, phase, task)` panic
+    /// point; subsequent calls (the rolled-back retry) see `false`.
+    pub fn should_panic(&self, step: u64, phase: Phase, task: usize) -> bool {
+        self.panics.iter().any(|p| {
+            p.step == step
+                && p.phase == phase
+                && p.task == task
+                && p.fired.compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire).is_ok()
+        })
+    }
+}
+
+/// Parse a `LOWBIT_FAULTS` spec: `seed:rate[:kind]`.
+pub fn parse_spec(spec: &str) -> Result<FaultPlan, String> {
+    let mut it = spec.split(':');
+    let seed = it
+        .next()
+        .filter(|s| !s.is_empty())
+        .ok_or_else(|| "missing seed (want seed:rate[:kind])".to_string())?
+        .parse::<u64>()
+        .map_err(|e| format!("bad seed: {e}"))?;
+    let rate = it
+        .next()
+        .ok_or_else(|| "missing rate (want seed:rate[:kind])".to_string())?
+        .parse::<f64>()
+        .map_err(|e| format!("bad rate: {e}"))?;
+    if !(0.0..1.0).contains(&rate) {
+        return Err(format!("rate {rate} out of range [0, 1)"));
+    }
+    let kind = match it.next() {
+        None | Some("mixed") => FaultKind::Mixed,
+        Some("fail") => FaultKind::Fail,
+        Some("corrupt") => FaultKind::Corrupt,
+        Some(k) => return Err(format!("unknown fault kind '{k}' (use fail|corrupt|mixed)")),
+    };
+    if it.next().is_some() {
+        return Err("trailing fields after seed:rate:kind".to_string());
+    }
+    Ok(FaultPlan::new(seed).with_rate(rate).with_kind(kind))
+}
+
+/// The process-wide env-armed plan (`LOWBIT_FAULTS=seed:rate[:kind]`),
+/// parsed once. `None` when the variable is unset or empty; a malformed
+/// spec is a hard configuration error, matching the other env gates.
+pub fn active() -> Option<&'static FaultPlan> {
+    static ACTIVE: OnceLock<Option<FaultPlan>> = OnceLock::new();
+    ACTIVE
+        .get_or_init(|| match std::env::var("LOWBIT_FAULTS") {
+            Ok(s) if !s.is_empty() => {
+                Some(parse_spec(&s).unwrap_or_else(|e| panic!("LOWBIT_FAULTS: {e}")))
+            }
+            _ => None,
+        })
+        .as_ref()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // The canonical IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // Incremental == one-shot, across arbitrary split points.
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let whole = crc32(data);
+        for split in [0, 1, 7, data.len()] {
+            let mut c = Crc32::new();
+            c.update(&data[..split]);
+            c.update(&data[split..]);
+            assert_eq!(c.finish(), whole);
+        }
+    }
+
+    #[test]
+    fn crc32_f32_fold_is_bit_pattern_sensitive() {
+        let mut a = Crc32::new();
+        a.update_f32s(&[0.0, 1.5]);
+        let mut b = Crc32::new();
+        b.update_f32s(&[-0.0, 1.5]); // same value comparison-wise, different bits
+        assert_ne!(a.finish(), b.finish());
+        // f32 fold == byte fold of the LE bit patterns.
+        let mut c = Crc32::new();
+        c.update(&0.0f32.to_bits().to_le_bytes());
+        c.update(&1.5f32.to_bits().to_le_bytes());
+        assert_eq!(a.finish(), c.finish());
+    }
+
+    #[test]
+    fn unarmed_plan_rolls_nothing() {
+        let p = FaultPlan::none();
+        assert!(!p.armed());
+        for task in 0..64 {
+            assert_eq!(p.transfer_fault(1, Phase::A, task, false, 0), None);
+        }
+    }
+
+    #[test]
+    fn rolls_are_deterministic_and_attempt_keyed() {
+        let p = FaultPlan::new(42).with_rate(0.5);
+        let q = FaultPlan::new(42).with_rate(0.5);
+        let mut hits = 0;
+        let mut attempt_differs = false;
+        for task in 0..256 {
+            let a = p.transfer_fault(3, Phase::A, task, false, 0);
+            assert_eq!(a, q.transfer_fault(3, Phase::A, task, false, 0));
+            if a.is_some() {
+                hits += 1;
+                // A retry re-rolls on its own attempt index; over many
+                // sites at rate 0.5 some retry must come up clean.
+                if p.transfer_fault(3, Phase::A, task, false, 1).is_none() {
+                    attempt_differs = true;
+                }
+            }
+        }
+        assert!(hits > 64 && hits < 192, "rate 0.5 should hit roughly half: {hits}/256");
+        assert!(attempt_differs, "attempt index must reach the roll");
+    }
+
+    #[test]
+    fn kind_filters_and_up_direction_degrade() {
+        let fail_only = FaultPlan::new(7).with_rate(0.9).with_kind(FaultKind::Fail);
+        let corrupt_only = FaultPlan::new(7).with_rate(0.9).with_kind(FaultKind::Corrupt);
+        let mut saw_corrupt = false;
+        for task in 0..64 {
+            if let Some(f) = fail_only.transfer_fault(1, Phase::C, task, false, 0) {
+                assert_eq!(f, TransferFault::Fail);
+            }
+            if let Some(f) = corrupt_only.transfer_fault(1, Phase::C, task, false, 0) {
+                assert_eq!(f, TransferFault::Corrupt);
+                saw_corrupt = true;
+            }
+            // Writeback direction never corrupts — replay covers it.
+            if let Some(f) = corrupt_only.transfer_fault(1, Phase::C, task, true, 0) {
+                assert_eq!(f, TransferFault::Fail);
+            }
+        }
+        assert!(saw_corrupt);
+    }
+
+    #[test]
+    fn scheduled_panics_fire_exactly_once() {
+        let p = FaultPlan::new(1).panic_at(4, Phase::A, 2);
+        assert!(p.armed());
+        assert!(!p.should_panic(4, Phase::A, 1), "wrong task");
+        assert!(!p.should_panic(3, Phase::A, 2), "wrong step");
+        assert!(!p.should_panic(4, Phase::C, 2), "wrong phase");
+        assert!(p.should_panic(4, Phase::A, 2));
+        assert!(!p.should_panic(4, Phase::A, 2), "one-shot: the retry must run clean");
+    }
+
+    #[test]
+    fn spec_parsing_accepts_and_rejects() {
+        let p = parse_spec("9:0.25").unwrap();
+        assert!(p.armed());
+        assert!(parse_spec("9:0.25:fail").is_ok());
+        assert!(parse_spec("9:0.25:corrupt").is_ok());
+        assert!(parse_spec("9:0.25:mixed").is_ok());
+        for bad in ["", "9", "x:0.1", "9:nope", "9:1.0", "9:-0.1", "9:0.1:weird", "9:0.1:fail:x"] {
+            assert!(parse_spec(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn corrupt_offset_is_in_bounds_and_deterministic() {
+        let p = FaultPlan::new(11).with_rate(0.5);
+        for len in [1usize, 2, 17, 4096] {
+            let o = p.corrupt_offset(2, Phase::A, 5, 0, len);
+            assert!(o < len);
+            assert_eq!(o, p.corrupt_offset(2, Phase::A, 5, 0, len));
+        }
+    }
+}

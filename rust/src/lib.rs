@@ -13,7 +13,9 @@
 //!   analytic oracle + executable host-state pipeline ([`offload`]) —
 //!   the telemetry/observability layer ([`obs`]: span tracing behind
 //!   the `trace` feature, quant-quality metrics, unified step reports),
-//!   and the paper-experiment harness ([`exp`]).
+//!   the deterministic fault-injection and integrity layer ([`fault`]:
+//!   seeded fault plans, CRC-32 transfer/section checksums), and the
+//!   paper-experiment harness ([`exp`]).
 //!
 //! # The unsafe boundary
 //!
@@ -33,6 +35,7 @@
 pub mod util;
 pub mod tensor;
 pub mod quant;
+pub mod fault;
 pub mod engine;
 pub mod optim;
 pub mod model;

@@ -355,7 +355,8 @@ fn cmd_trace(argv: &[String]) -> i32 {
     )
     .opt(
         "check-bench",
-        "validate FILE as BENCH_*.json: every run carries trace_summary/tier/sched",
+        "validate FILE as BENCH_*.json: every run carries trace_summary/tier/sched \
+         and fault counters (faults.retries / faults.rollbacks)",
         None,
     );
     let args = match cmd.parse(argv) {
@@ -483,7 +484,9 @@ fn check_trace_file(path: &str, expect: &str) -> i32 {
 
 /// `lowbit trace --check-bench`: the file must be a top-level array of run
 /// objects, and every run must carry the unified-reporting schema keys —
-/// `trace_summary` (with its boolean `enabled` marker), `tier`, `sched`.
+/// `trace_summary` (with its boolean `enabled` marker), `tier`, `sched`,
+/// and `faults` with numeric `retries` / `rollbacks` counters (zeros on a
+/// clean run — the key must exist so fault regressions are visible).
 fn check_bench_file(path: &str) -> i32 {
     let text = match std::fs::read_to_string(path) {
         Ok(t) => t,
@@ -508,7 +511,7 @@ fn check_bench_file(path: &str) -> i32 {
         return 1;
     }
     for (i, run) in runs.iter().enumerate() {
-        for key in ["trace_summary", "tier", "sched"] {
+        for key in ["trace_summary", "tier", "sched", "faults"] {
             if run.get(key).is_none() {
                 eprintln!("{path}: run {i} missing key '{key}'");
                 return 1;
@@ -523,8 +526,22 @@ fn check_bench_file(path: &str) -> i32 {
             eprintln!("{path}: run {i} trace_summary lacks boolean 'enabled'");
             return 1;
         }
+        for key in ["retries", "rollbacks"] {
+            if run
+                .get("faults")
+                .and_then(|f| f.get(key))
+                .and_then(Json::as_f64)
+                .is_none()
+            {
+                eprintln!("{path}: run {i} faults lacks numeric '{key}'");
+                return 1;
+            }
+        }
     }
-    println!("{path}: OK — {} runs carry trace_summary/tier/sched", runs.len());
+    println!(
+        "{path}: OK — {} runs carry trace_summary/tier/sched/faults",
+        runs.len()
+    );
     0
 }
 

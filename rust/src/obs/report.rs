@@ -177,6 +177,46 @@ impl QuantReport {
     }
 }
 
+/// Fault-injection / recovery counters for one optimizer's lifetime:
+/// link retries broken down by cause, the virtual time those retries
+/// cost, and the number of aborted-then-rolled-back steps (see
+/// `offload/mod.rs` "Failure semantics"). All zeros on a clean run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultCounters {
+    /// Transfers replayed because the link dropped them.
+    pub link_fail_retries: u64,
+    /// Transfers replayed because the staged payload failed its CRC-32.
+    pub link_corrupt_retries: u64,
+    /// Virtual seconds the retries added (backoff + re-transfer, charged
+    /// serially — see `offload::link::RetryPolicy`).
+    pub retry_virtual_seconds: f64,
+    /// Steps that aborted mid-flight and were rolled back by `try_step`.
+    pub rollbacks: u64,
+}
+
+impl FaultCounters {
+    pub fn retries(&self) -> u64 {
+        self.link_fail_retries + self.link_corrupt_retries
+    }
+
+    pub fn any(&self) -> bool {
+        self.retries() > 0 || self.rollbacks > 0
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("retries", Json::Num(self.retries() as f64))
+            .set("link_fail_retries", Json::Num(self.link_fail_retries as f64))
+            .set(
+                "link_corrupt_retries",
+                Json::Num(self.link_corrupt_retries as f64),
+            )
+            .set("retry_virtual_s", Json::Num(self.retry_virtual_seconds))
+            .set("rollbacks", Json::Num(self.rollbacks as f64));
+        o
+    }
+}
+
 /// Everything one step's telemetry has to say, from one accessor.
 #[derive(Clone, Debug, Default)]
 pub struct StepReport {
@@ -188,6 +228,9 @@ pub struct StepReport {
     pub spans: Option<SpanSummary>,
     /// `None` unless quant metrics are enabled on the optimizer.
     pub quant: Option<QuantReport>,
+    /// Fault/retry/rollback counters; `None` for optimizers without the
+    /// fault-injection layer wired in.
+    pub faults: Option<FaultCounters>,
 }
 
 impl StepReport {
@@ -222,6 +265,9 @@ impl StepReport {
         if let Some(q) = &self.quant {
             o.set("quant", q.to_json());
         }
+        if let Some(f) = &self.faults {
+            o.set("faults", f.to_json());
+        }
         o
     }
 
@@ -253,6 +299,18 @@ impl StepReport {
             }
             if sp.dropped > 0 {
                 out.push_str(&format!("\n  (dropped {} spans)", sp.dropped));
+            }
+        }
+        if let Some(f) = &self.faults {
+            if f.any() {
+                out.push_str(&format!(
+                    " faults: retries={} (fail={} corrupt={}) retry_virtual={:.1}us rollbacks={}",
+                    f.retries(),
+                    f.link_fail_retries,
+                    f.link_corrupt_retries,
+                    f.retry_virtual_seconds * 1e6,
+                    f.rollbacks
+                ));
             }
         }
         if let Some(q) = &self.quant {

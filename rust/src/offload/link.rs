@@ -33,6 +33,15 @@
 //! With realistic shard sizes the latency term is a rounding error, and
 //! the per-transfer accounting is the honest model of a pipeline that
 //! actually issues one DMA per staged shard.
+//!
+//! Faulted transfers (injected by [`crate::fault`], detected by the
+//! pipeline's per-transfer checksums) are charged through
+//! [`ThrottledLink::retry_seconds`] + [`LinkTotals::charge_retries`]:
+//! every retried attempt pays its full transfer charge plus a bounded
+//! exponential backoff delay ([`RetryPolicy`]) — virtual seconds, no
+//! wall-clock sleeps — and retries extend the step serially (a replay
+//! stalls the slot it is replaying into). A fault-free step's totals
+//! stay bit-identical to a link with no retry machinery at all.
 
 use super::LinkModel;
 
@@ -58,6 +67,13 @@ pub struct LinkTotals {
     pub bytes_up: u64,
     /// Number of non-empty transfers charged.
     pub transfers: u64,
+    /// Transfer attempts that were retried (injected failures +
+    /// checksum-detected corruption), charged via
+    /// [`LinkTotals::charge_retries`].
+    pub retries: u64,
+    /// Virtual time the retries cost: re-transfer charges plus backoff
+    /// delays. Already folded into `comm`/`serial`/`step`.
+    pub retry_seconds: f64,
 }
 
 impl LinkTotals {
@@ -71,6 +87,54 @@ impl LinkTotals {
         } else {
             0.0
         }
+    }
+
+    /// Charge `count` retried transfer attempts worth `seconds` of
+    /// virtual time. Retries extend the step **serially**: a retry
+    /// stalls the slot whose payload it is replaying, so the conservative
+    /// model charges it outside the overlap window (a fault-free step —
+    /// `count == 0, seconds == 0` — is charged identically to a link
+    /// with no retry machinery at all).
+    pub fn charge_retries(&mut self, count: u64, seconds: f64) {
+        self.retries += count;
+        self.retry_seconds += seconds;
+        self.comm_seconds += seconds;
+        self.serial_seconds += seconds;
+        self.step_seconds += seconds;
+    }
+}
+
+/// Bounded-exponential-backoff retry policy for faulted transfers. All
+/// delays are *virtual* seconds — charged to the step totals, never
+/// slept.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Attempts before the transfer is declared fatally failed (the
+    /// pipeline panics, which `Optimizer::try_step` converts into a
+    /// rolled-back step). Rate-armed fault plans re-roll per attempt,
+    /// so hitting this bound requires `rate^max_attempts` luck.
+    pub max_attempts: u32,
+    /// Backoff before retry `k` is `base · factor^k`, capped at `cap`.
+    pub backoff_base: f64,
+    pub backoff_factor: f64,
+    pub backoff_cap: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 32,
+            backoff_base: 50e-6,
+            backoff_factor: 2.0,
+            backoff_cap: 5e-3,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Virtual backoff delay before re-issuing attempt `attempt + 1`.
+    pub fn backoff_seconds(&self, attempt: u32) -> f64 {
+        (self.backoff_base * self.backoff_factor.powi(attempt.min(64) as i32)).min(self.backoff_cap)
     }
 }
 
@@ -87,6 +151,19 @@ impl ThrottledLink {
         } else {
             self.model.latency + bytes as f64 / self.model.bandwidth
         }
+    }
+
+    /// Virtual-time cost of `retries` faulted attempts of one
+    /// `bytes`-sized transfer: each faulted attempt pays its full
+    /// transfer charge (the bytes moved — or were re-requested — before
+    /// the fault was detected) plus the bounded exponential backoff
+    /// before the replay. The successful final attempt is *not* charged
+    /// here — it is the transfer the plain [`Self::step_totals`]
+    /// accounting already covers.
+    pub fn retry_seconds(&self, bytes: u64, retries: u32, policy: &RetryPolicy) -> f64 {
+        (0..retries)
+            .map(|k| policy.backoff_seconds(k) + self.transfer_seconds(bytes))
+            .sum()
     }
 
     /// Fold a step's transfers into virtual totals. `phases` holds one
@@ -211,6 +288,38 @@ mod tests {
         let edge_a = 1e-3 + 1e-3;
         let edge_c = 5e-4 + 5e-4;
         assert!((phased.serial_seconds - (edge_a + edge_c)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backoff_is_bounded_exponential() {
+        let p = RetryPolicy::default();
+        assert!((p.backoff_seconds(0) - 50e-6).abs() < 1e-12);
+        assert!((p.backoff_seconds(1) - 100e-6).abs() < 1e-12);
+        assert_eq!(p.backoff_seconds(30), p.backoff_cap, "capped, not unbounded");
+    }
+
+    #[test]
+    fn retry_charges_extend_the_step_serially() {
+        let l = link(1e9, 1e-4, 1.0, 1.0);
+        let p = RetryPolicy::default();
+        assert_eq!(l.retry_seconds(1_000_000, 0, &p), 0.0, "fault-free is free");
+        let one = l.retry_seconds(1_000_000, 1, &p);
+        assert!((one - (p.backoff_seconds(0) + 1e-4 + 1e-3)).abs() < 1e-12, "{one}");
+        let two = l.retry_seconds(1_000_000, 2, &p);
+        assert!(two > 2.0 * one - 1e-12, "backoff grows across attempts");
+
+        let tasks = vec![(500_000u64, 500_000u64); 4];
+        let clean = l.step_totals(2, &[&tasks[..]]);
+        let mut faulted = l.step_totals(2, &[&tasks[..]]);
+        faulted.charge_retries(3, one);
+        assert_eq!(faulted.retries, 3);
+        assert!((faulted.step_seconds - (clean.step_seconds + one)).abs() < 1e-12);
+        assert!((faulted.serial_seconds - (clean.serial_seconds + one)).abs() < 1e-12);
+        assert_eq!(faulted.hidden_seconds, clean.hidden_seconds, "retries never hide");
+        // Zero-retry charge leaves the totals bit-identical.
+        let mut zero = l.step_totals(2, &[&tasks[..]]);
+        zero.charge_retries(0, 0.0);
+        assert_eq!(zero.step_seconds.to_bits(), clean.step_seconds.to_bits());
     }
 
     #[test]

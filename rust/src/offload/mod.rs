@@ -38,12 +38,46 @@
 //! pipeline charges latency per transfer (the oracle once per step),
 //! and globally-normalized 4-bit states cross the link a third time for
 //! the phase-C re-encode (see the [`pipeline`] docs).
+//!
+//! # Failure semantics
+//!
+//! The pipeline distinguishes three failure classes, from recoverable to
+//! fatal. All fault injection is *deterministic* (seeded, keyed by
+//! logical `(step, phase, task, direction, attempt)` coordinates — see
+//! [`crate::fault`]) and disabled at zero cost unless a plan is armed
+//! via [`OffloadState::faults`] or the `LOWBIT_FAULTS` env gate.
+//!
+//! * **Transient transfer failures** (the link "drops" a staging copy):
+//!   retried in place with bounded exponential backoff. Each retry is
+//!   charged in *virtual time* — `backoff + latency + bytes/bandwidth`,
+//!   folded serially into the step total in task order, never hidden
+//!   under overlap — so faulted runs are slower on the virtual clock but
+//!   remain **bit-identical** to fault-free runs: host state is intact,
+//!   and a replayed copy stages exactly the same bytes.
+//! * **Payload corruption**: every stage-in carries a CRC-32 over the
+//!   staged bytes, computed on the sender side and re-verified on the
+//!   receiver side *before* any kernel reads the slot. A mismatch is
+//!   handled like a transient failure — recopy from the intact host
+//!   tier — so corruption can never leak into decode/encode or the
+//!   phase-C re-encode.
+//! * **Worker panics** mid-step: the engine aborts the phase and
+//!   re-raises on the submitter (parked dependents are released, see
+//!   `engine/mod.rs` "Failure semantics"). Recovery is the *caller's*
+//!   transaction: `CompressedAdamW::try_step` snapshots weights and
+//!   packed state, catches the unwind, rolls back, and a retried step is
+//!   bit-identical to a never-faulted one.
+//!
+//! Fatal (by design, not retried): a transfer still faulting after
+//! [`RetryPolicy::max_attempts`] (panics naming the task), and panics
+//! escaping a caller that does not use `try_step`. Retry and rollback
+//! counts surface through [`OffloadReport`] and
+//! `obs::report::StepReport`.
 
 pub mod link;
 pub mod pipeline;
 pub mod tier;
 
-pub use link::{LinkTotals, ThrottledLink};
+pub use link::{LinkTotals, RetryPolicy, ThrottledLink};
 pub use pipeline::{OffloadConfig, OffloadReport, OffloadState};
 
 use crate::memory::{model_state_bytes, StatePreset};

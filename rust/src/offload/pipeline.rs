@@ -39,7 +39,7 @@
 //! the scratch slot, so no double-buffer arenas are allocated for
 //! offloaded execution.
 
-use super::link::{LinkTotals, ThrottledLink};
+use super::link::{LinkTotals, RetryPolicy, ThrottledLink};
 use super::tier::{self, TierPlan};
 use super::LinkModel;
 use crate::engine::adamw4::{
@@ -49,6 +49,7 @@ use crate::engine::adamw4::{
 use crate::engine::ctx::{StepContext, StepScratch};
 use crate::engine::plan::{MetaSpec, StateLayout};
 use crate::engine::{dense, step_seed, Affinity, SharedSlice, StepEngine, PHASE_C_STREAM_BASE};
+use crate::fault::{self, Crc32, FaultPlan, TransferFault};
 #[cfg(feature = "trace")]
 use crate::obs::trace::{now, P_OFF_COMPUTE, P_OFF_IN, P_OFF_OUT, P_OFF_QUEUE, TASK_NONE};
 use crate::optim::state::{MomentState, SecondState};
@@ -56,6 +57,7 @@ use crate::optim::{Hyper, Param};
 use crate::quant::{QuantMap, Scales};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicU32, Ordering};
 
 /// Offload-execution configuration: the link profile to charge and the
 /// prefetch depth (number of device-scratch slots).
@@ -86,12 +88,25 @@ pub struct OffloadReport {
     pub compute_seconds: f64,
     /// Σ per-step virtual wall time (compute + serial communication).
     pub virtual_seconds: f64,
+    /// Transfer attempts replayed after an injected transient failure.
+    pub fail_retries: u64,
+    /// Transfer attempts replayed after checksum-detected corruption.
+    pub corrupt_retries: u64,
+    /// Virtual time the retries cost (re-transfer + backoff), already
+    /// folded into `comm`/`virtual` via [`LinkTotals::charge_retries`].
+    pub retry_seconds: f64,
 }
 
 impl OffloadReport {
     /// Mean virtual step time.
     pub fn step_seconds(&self) -> f64 {
         self.virtual_seconds / self.steps.max(1) as f64
+    }
+
+    /// Total transfer attempts that were replayed (failures + detected
+    /// corruption). Zero on any unarmed run.
+    pub fn retries(&self) -> u64 {
+        self.fail_retries + self.corrupt_retries
     }
 
     /// Fraction of link time hidden behind compute, in `[0, 1]`.
@@ -119,6 +134,7 @@ impl OffloadReport {
         self.hidden_seconds += t.hidden_seconds;
         self.compute_seconds += compute;
         self.virtual_seconds += t.step_seconds;
+        self.retry_seconds += t.retry_seconds;
     }
 }
 
@@ -174,6 +190,11 @@ fn build_queue(n: usize, depth: usize) -> Queue {
 pub struct OffloadState {
     pub cfg: OffloadConfig,
     pub report: OffloadReport,
+    /// Fault-plan override. `None` defers to the process-wide
+    /// env-armed plan ([`fault::active`]); `Some` wins outright, so an
+    /// inert [`FaultPlan::none`] pins a run fault-free even under
+    /// `LOWBIT_FAULTS`.
+    pub faults: Option<FaultPlan>,
     tier: Option<TierPlan>,
     queue_a: Queue,
     queue_c: Queue,
@@ -185,11 +206,159 @@ impl OffloadState {
         OffloadState {
             cfg,
             report: OffloadReport::default(),
+            faults: None,
             tier: None,
             queue_a: (Vec::new(), Vec::new()),
             queue_c: (Vec::new(), Vec::new()),
             generation: 0,
         }
+    }
+
+    /// The plan this run injects from, if any: the per-run override,
+    /// else the env-armed plan; unarmed plans resolve to `None` so the
+    /// hot path stays on the exact pre-fault code.
+    fn fault_plan(&self) -> Option<&FaultPlan> {
+        match &self.faults {
+            Some(p) => Some(p).filter(|p| p.armed()),
+            None => fault::active().filter(|p| p.armed()),
+        }
+    }
+}
+
+/// Per-staged-task retry counters, written by whichever worker runs the
+/// transfer entry and folded **serially in task order** after the phase
+/// drains — so the virtual-time retry charges are schedule-independent.
+#[derive(Default)]
+struct FaultCell {
+    fail_down: AtomicU32,
+    corrupt_down: AtomicU32,
+    fail_up: AtomicU32,
+}
+
+fn fault_cells(n: usize, armed: bool) -> Vec<FaultCell> {
+    if armed {
+        (0..n).map(|_| FaultCell::default()).collect()
+    } else {
+        Vec::new()
+    }
+}
+
+/// Execute one staged transfer under an armed fault plan: replay the
+/// identical [`tier::copy_task_segments`] call (copies are idempotent,
+/// so retries preserve bit-identity) until the payload lands clean.
+///
+/// Stage-in integrity: after a clean copy the staged payload's CRC-32
+/// is the sender-side checksum; the modeled link may then corrupt a
+/// deterministic staged byte, and the receiver-side re-verify catches
+/// the mismatch *before any compute entry reads the slot* (the compute
+/// depends on this transfer entry). Transient failures re-roll on their
+/// attempt index, so a retry is not doomed to repeat its fault.
+/// Exhausting [`RetryPolicy::max_attempts`] is fatal-by-panic, which
+/// `Optimizer::try_step` converts into a rolled-back step.
+#[allow(clippy::too_many_arguments)]
+fn transfer_with_faults(
+    plan: &FaultPlan,
+    phase: fault::Phase,
+    step: u64,
+    ts: &tier::TaskStaging,
+    cell: &FaultCell,
+    sb: SharedSlice<u8>,
+    sv: SharedSlice<f32>,
+    to_device: bool,
+    copy: &dyn Fn(),
+) {
+    let max = RetryPolicy::default().max_attempts;
+    // A direction that moves no bytes issues no DMA — nothing to fault.
+    if (to_device && ts.down_bytes == 0) || (!to_device && ts.up_bytes == 0) {
+        copy();
+        return;
+    }
+    let mut attempt = 0u32;
+    loop {
+        assert!(
+            attempt < max,
+            "offload link: task {} transfer ({:?}, step {step}) still faulted after {max} attempts",
+            ts.task,
+            phase,
+        );
+        copy();
+        if !to_device {
+            // Writeback: corruption degrades to replay-from-staging
+            // (the staged source is intact), so any fault is a redo.
+            match plan.transfer_fault(step, phase, ts.task, true, attempt) {
+                Some(_) => {
+                    cell.fail_up.fetch_add(1, Ordering::Relaxed);
+                    attempt += 1;
+                }
+                None => return,
+            }
+            continue;
+        }
+        // Stage-in: checksum, maybe corrupt, verify.
+        // SAFETY: the slot is exclusive to this transfer entry until
+        // its dependent compute runs (dependency discipline), and this
+        // task may hold overlapping views of its own slot.
+        let bytes: &mut [u8] = unsafe { sb.range_mut(0, ts.bytes_len) };
+        // SAFETY: same exclusive slot, the disjoint f32 arena.
+        let vals: &mut [f32] = unsafe { sv.range_mut(0, ts.vals_len) };
+        let mut sender = Crc32::new();
+        sender.update(bytes);
+        sender.update_f32s(vals);
+        let expected = sender.finish();
+        match plan.transfer_fault(step, phase, ts.task, false, attempt) {
+            Some(TransferFault::Fail) => {
+                cell.fail_down.fetch_add(1, Ordering::Relaxed);
+                attempt += 1;
+                continue;
+            }
+            Some(TransferFault::Corrupt) => {
+                // The link flips a deterministic staged byte (or an f32
+                // bit when this task stages no packed bytes).
+                if ts.bytes_len > 0 {
+                    let off = plan.corrupt_offset(step, phase, ts.task, attempt, ts.bytes_len);
+                    bytes[off] ^= 0xFF;
+                } else if ts.vals_len > 0 {
+                    let off = plan.corrupt_offset(step, phase, ts.task, attempt, ts.vals_len);
+                    vals[off] = f32::from_bits(vals[off].to_bits() ^ 1);
+                }
+            }
+            None => {}
+        }
+        let mut receiver = Crc32::new();
+        receiver.update(bytes);
+        receiver.update_f32s(vals);
+        if receiver.finish() != expected {
+            cell.corrupt_down.fetch_add(1, Ordering::Relaxed);
+            attempt += 1;
+            continue;
+        }
+        return;
+    }
+}
+
+/// Fold a phase's retry cells into the step totals and the report
+/// counters — serially, in staged-task order, so the charges are
+/// bit-reproducible at any worker count.
+fn charge_fault_cells(
+    link: &ThrottledLink,
+    policy: &RetryPolicy,
+    cells: &[FaultCell],
+    stagings: &[tier::TaskStaging],
+    totals: &mut LinkTotals,
+    report: &mut OffloadReport,
+) {
+    for (cell, ts) in cells.iter().zip(stagings.iter()) {
+        let fd = cell.fail_down.load(Ordering::Relaxed);
+        let cd = cell.corrupt_down.load(Ordering::Relaxed);
+        let fu = cell.fail_up.load(Ordering::Relaxed);
+        if fd + cd + fu == 0 {
+            continue;
+        }
+        let secs = link.retry_seconds(ts.down_bytes, fd + cd, policy)
+            + link.retry_seconds(ts.up_bytes, fu, policy);
+        totals.charge_retries((fd + cd + fu) as u64, secs);
+        report.fail_retries += (fd + fu) as u64;
+        report.corrupt_retries += cd as u64;
     }
 }
 
@@ -317,6 +486,10 @@ pub fn compressed_offloaded_step(
 
     let seed = step_seed(sp.base_seed, sp.t as u64);
     let hp = sp.hp;
+    let step_u = sp.t as u64;
+    let faults = os.fault_plan();
+    let cells_a = fault_cells(tp.a.len(), faults.is_some());
+    let cells_c = fault_cells(tp.c.len(), faults.is_some());
 
     // ---------------- Phase F: factored-v statistics -----------------
     // Gradients are device-resident and factored stats stay resident,
@@ -366,19 +539,40 @@ pub fn compressed_offloaded_step(
             let stagings = &tp.a[..];
             let transfer = |pos: usize, to_device: bool| {
                 let ts = &stagings[pos];
-                tier::copy_task_segments(
-                    ts,
-                    &plan.tasks[ts.task].pieces,
-                    m_hosts,
-                    v_hosts,
-                    sb_views[pos % depth],
-                    sv_views[pos % depth],
-                    to_device,
-                    !to_device,
-                );
+                let copy = || {
+                    tier::copy_task_segments(
+                        ts,
+                        &plan.tasks[ts.task].pieces,
+                        m_hosts,
+                        v_hosts,
+                        sb_views[pos % depth],
+                        sv_views[pos % depth],
+                        to_device,
+                        !to_device,
+                    );
+                };
+                match faults {
+                    None => copy(),
+                    Some(p) => transfer_with_faults(
+                        p,
+                        fault::Phase::A,
+                        step_u,
+                        ts,
+                        &cells_a[pos],
+                        sb_views[pos % depth],
+                        sv_views[pos % depth],
+                        to_device,
+                        &copy,
+                    ),
+                }
             };
             let compute = |pos: usize, scratch: &mut StepScratch| {
                 let ts = &stagings[pos];
+                if let Some(p) = faults {
+                    if p.should_panic(step_u, fault::Phase::A, ts.task) {
+                        panic!("injected fault: worker panic at phase A task {}", ts.task);
+                    }
+                }
                 let sb = sb_views[pos % depth];
                 let sv = sv_views[pos % depth];
                 let pieces = &plan.tasks[ts.task].pieces;
@@ -508,19 +702,40 @@ pub fn compressed_offloaded_step(
             let new_scales_ref: &[Option<Scales>] = &new_scales[..];
             let transfer = |pos: usize, to_device: bool| {
                 let ts = &stagings[pos];
-                tier::copy_task_segments(
-                    ts,
-                    &plan.tasks[ts.task].pieces,
-                    m_hosts,
-                    v_hosts,
-                    sb_views[pos % depth],
-                    sv_views[pos % depth],
-                    to_device,
-                    !to_device,
-                );
+                let copy = || {
+                    tier::copy_task_segments(
+                        ts,
+                        &plan.tasks[ts.task].pieces,
+                        m_hosts,
+                        v_hosts,
+                        sb_views[pos % depth],
+                        sv_views[pos % depth],
+                        to_device,
+                        !to_device,
+                    );
+                };
+                match faults {
+                    None => copy(),
+                    Some(p) => transfer_with_faults(
+                        p,
+                        fault::Phase::C,
+                        step_u,
+                        ts,
+                        &cells_c[pos],
+                        sb_views[pos % depth],
+                        sv_views[pos % depth],
+                        to_device,
+                        &copy,
+                    ),
+                }
             };
             let compute = |pos: usize, scratch: &mut StepScratch| {
                 let ts = &stagings[pos];
+                if let Some(p) = faults {
+                    if p.should_panic(step_u, fault::Phase::C, ts.task) {
+                        panic!("injected fault: worker panic at phase C task {}", ts.task);
+                    }
+                }
                 let sb = sb_views[pos % depth];
                 let pieces = &plan.tasks[ts.task].pieces;
                 let mut rng = Pcg64::new(seed, PHASE_C_STREAM_BASE + ts.task as u64);
@@ -601,7 +816,7 @@ pub fn compressed_offloaded_step(
     commit_globals(globals, None, new_scales, m_states, v_states);
 
     // ------------------- Virtual-time accounting ---------------------
-    let totals = {
+    let mut totals = {
         let mut pairs_a = arena.lease::<(u64, u64)>();
         pairs_a.extend(tp.a.iter().map(|ts| (ts.down_bytes, ts.up_bytes)));
         let mut pairs_c = arena.lease::<(u64, u64)>();
@@ -609,6 +824,12 @@ pub fn compressed_offloaded_step(
         ThrottledLink::new(os.cfg.link)
             .step_totals(depth, &[pairs_a.as_slice(), pairs_c.as_slice()])
     };
+    if !cells_a.is_empty() || !cells_c.is_empty() {
+        let link = ThrottledLink::new(os.cfg.link);
+        let policy = RetryPolicy::default();
+        charge_fault_cells(&link, &policy, &cells_a, &tp.a, &mut totals, &mut os.report);
+        charge_fault_cells(&link, &policy, &cells_c, &tp.c, &mut totals, &mut os.report);
+    }
     os.report.absorb(&totals, os.cfg.link.compute_per_step);
 }
 
@@ -674,6 +895,12 @@ pub fn dense_offloaded_step(
     let plan = &*plan;
     let bc1 = 1.0 - hp.beta1.powi(t as i32);
     let bc2 = 1.0 - hp.beta2.powi(t as i32);
+    let step_u = t as u64;
+    // Dense staging shares the transfer-level fault/retry machinery;
+    // scheduled worker panics stay a compressed-path feature (they pair
+    // with `CompressedAdamW::try_step`'s rollback).
+    let faults = os.fault_plan();
+    let cells = fault_cells(tp.a.len(), faults.is_some());
 
     {
         let mut m_hosts = arena.lease::<tier::HostMoment>();
@@ -702,16 +929,32 @@ pub fn dense_offloaded_step(
         let stagings = &tp.a[..];
         let transfer = |pos: usize, to_device: bool| {
             let ts = &stagings[pos];
-            tier::copy_task_segments(
-                ts,
-                &plan.tasks[ts.task].pieces,
-                m_hosts,
-                v_hosts,
-                sb_views[pos % depth],
-                sv_views[pos % depth],
-                to_device,
-                !to_device,
-            );
+            let copy = || {
+                tier::copy_task_segments(
+                    ts,
+                    &plan.tasks[ts.task].pieces,
+                    m_hosts,
+                    v_hosts,
+                    sb_views[pos % depth],
+                    sv_views[pos % depth],
+                    to_device,
+                    !to_device,
+                );
+            };
+            match faults {
+                None => copy(),
+                Some(p) => transfer_with_faults(
+                    p,
+                    fault::Phase::A,
+                    step_u,
+                    ts,
+                    &cells[pos],
+                    sb_views[pos % depth],
+                    sv_views[pos % depth],
+                    to_device,
+                    &copy,
+                ),
+            }
         };
         let compute = |pos: usize, _s: &mut StepScratch| {
             let ts = &stagings[pos];
@@ -741,11 +984,16 @@ pub fn dense_offloaded_step(
         trace.record(P_OFF_QUEUE, TASK_NONE, _t0);
     }
 
-    let totals = {
+    let mut totals = {
         let mut pairs = arena.lease::<(u64, u64)>();
         pairs.extend(tp.a.iter().map(|ts| (ts.down_bytes, ts.up_bytes)));
         ThrottledLink::new(os.cfg.link).step_totals(depth, &[pairs.as_slice()])
     };
+    if !cells.is_empty() {
+        let link = ThrottledLink::new(os.cfg.link);
+        let policy = RetryPolicy::default();
+        charge_fault_cells(&link, &policy, &cells, &tp.a, &mut totals, &mut os.report);
+    }
     os.report.absorb(&totals, os.cfg.link.compute_per_step);
 }
 

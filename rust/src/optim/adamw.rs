@@ -12,7 +12,7 @@
 
 use super::{Hyper, Optimizer, Param};
 use crate::engine::{dense, SchedMode, SchedStats, StepContext, StepEngine};
-use crate::obs::report::StepReport;
+use crate::obs::report::{FaultCounters, StepReport};
 use crate::offload::{pipeline, OffloadConfig, OffloadReport, OffloadState};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -227,6 +227,14 @@ impl Optimizer for AdamW {
             offload: self.offload_report().copied(),
             spans: None,
             quant: None,
+            // Dense steps have no rollback transaction; only the link's
+            // retry counters apply, and only when offloaded.
+            faults: self.offload_report().map(|off| FaultCounters {
+                link_fail_retries: off.fail_retries,
+                link_corrupt_retries: off.corrupt_retries,
+                retry_virtual_seconds: off.retry_seconds,
+                rollbacks: 0,
+            }),
         };
         #[cfg(feature = "trace")]
         {

@@ -15,11 +15,13 @@
 
 use super::factor::FactoredSecond;
 use super::state::{MomentState, SecondState};
-use super::{Hyper, Optimizer, Param, ParamKind};
+use super::{Hyper, Optimizer, Param, ParamKind, StepError};
 use crate::engine::{compressed_step, SchedMode, SchedStats, StepContext, StepEngine, StepParams};
+use crate::fault::FaultPlan;
 use crate::obs::quant::QuantAccum;
-use crate::obs::report::{QuantReport, StepReport};
+use crate::obs::report::{FaultCounters, QuantReport, StepReport};
 use crate::offload::{pipeline, OffloadConfig, OffloadReport, OffloadState};
+use crate::quant::Scales;
 use crate::quant::{MapKind, NormKind, QuantMap, Quantizer};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -152,6 +154,69 @@ pub struct CompressedAdamW {
     /// Bit-identical to in-memory execution — this trades simulated
     /// link traffic (tracked in the report) for device state memory.
     offload: Option<OffloadState>,
+    /// Steps aborted mid-flight and rolled back by [`Self::try_step`].
+    rollbacks: u64,
+}
+
+/// Pre-step snapshot of one first-moment state — just the mutable parts
+/// (packed codes + scales, or the fp32 values); shapes, quantizer
+/// configs and block maps never change mid-step.
+enum MSnap {
+    F32(Vec<f32>),
+    Quant(Vec<u8>, Scales),
+}
+
+impl MSnap {
+    fn of(s: &MomentState) -> MSnap {
+        match s {
+            MomentState::F32(t) => MSnap::F32(t.data.clone()),
+            MomentState::Quant(q) => MSnap::Quant(q.packed.clone(), q.scales.clone()),
+        }
+    }
+
+    fn restore(self, s: &mut MomentState) {
+        match (self, s) {
+            (MSnap::F32(d), MomentState::F32(t)) => t.data = d,
+            (MSnap::Quant(p, sc), MomentState::Quant(q)) => {
+                q.packed = p;
+                q.scales = sc;
+            }
+            // A step never changes a state's representation.
+            _ => unreachable!("moment-state variant changed mid-step"),
+        }
+    }
+}
+
+/// Pre-step snapshot of one second-moment state (see [`MSnap`]).
+enum VSnap {
+    F32(Vec<f32>),
+    Quant(Vec<u8>, Scales),
+    Factored(Vec<f32>, Vec<f32>),
+}
+
+impl VSnap {
+    fn of(s: &SecondState) -> VSnap {
+        match s {
+            SecondState::F32(t) => VSnap::F32(t.data.clone()),
+            SecondState::Quant(q) => VSnap::Quant(q.packed.clone(), q.scales.clone()),
+            SecondState::Factored(f) => VSnap::Factored(f.row.clone(), f.col.clone()),
+        }
+    }
+
+    fn restore(self, s: &mut SecondState) {
+        match (self, s) {
+            (VSnap::F32(d), SecondState::F32(t)) => t.data = d,
+            (VSnap::Quant(p, sc), SecondState::Quant(q)) => {
+                q.packed = p;
+                q.scales = sc;
+            }
+            (VSnap::Factored(r, c), SecondState::Factored(f)) => {
+                f.row = r;
+                f.col = c;
+            }
+            _ => unreachable!("second-state variant changed mid-step"),
+        }
+    }
 }
 
 impl CompressedAdamW {
@@ -170,6 +235,7 @@ impl CompressedAdamW {
             engine: StepEngine::new(),
             ctx: StepContext::new(),
             offload: None,
+            rollbacks: 0,
         }
     }
 
@@ -190,6 +256,27 @@ impl CompressedAdamW {
     /// (`None` until [`Self::offloaded`] configures the pipeline).
     pub fn offload_report(&self) -> Option<&OffloadReport> {
         self.offload.as_ref().map(|os| &os.report)
+    }
+
+    /// Pin a deterministic fault plan on the offload pipeline,
+    /// overriding the `LOWBIT_FAULTS` env gate (use
+    /// [`FaultPlan::none`] to pin a run fault-free regardless of the
+    /// environment). Must be called after [`Self::offloaded`] — faults
+    /// are injected at the pipeline's transfer and compute sites, so
+    /// there is nowhere to arm them on an in-memory optimizer. Faulted
+    /// runs stay bit-identical to fault-free ones; the cost shows up as
+    /// retries/rollbacks in [`Self::step_report`].
+    pub fn with_faults(mut self, plan: FaultPlan) -> CompressedAdamW {
+        self.offload
+            .as_mut()
+            .expect("with_faults requires an offloaded optimizer (call .offloaded(cfg) first)")
+            .faults = Some(plan);
+        self
+    }
+
+    /// Steps aborted mid-flight and rolled back by [`Self::try_step`].
+    pub fn rollbacks(&self) -> u64 {
+        self.rollbacks
     }
 
     /// Enable (or disable) per-step quantization-quality metrics:
@@ -436,6 +523,62 @@ impl Optimizer for CompressedAdamW {
         }
     }
 
+    /// [`Optimizer::step`] as a transaction. Weights, packed states,
+    /// scales and the step counter are snapshotted before the step; if
+    /// an engine worker panics mid-step (injected via [`FaultPlan`] or
+    /// real), the unwind is caught on the submitter, everything is
+    /// rolled back, the cached step context is invalidated, and the
+    /// optimizer is reusable — a retried step is bit-identical to a
+    /// never-faulted run (`rust/tests/chaos.rs` pins this).
+    fn try_step(
+        &mut self,
+        params: &mut [Param],
+        grads: &[Tensor],
+        lr: f32,
+    ) -> Result<(), StepError> {
+        assert_eq!(params.len(), grads.len());
+        // Initialize state outside the transaction so the snapshot
+        // covers every tensor (init-time RNG draws are not replayed).
+        self.lazy_init(params);
+        let t0 = self.t;
+        let w0: Vec<Vec<f32>> = params.iter().map(|p| p.tensor.data.clone()).collect();
+        let m0: Vec<MSnap> = self.m.iter().map(MSnap::of).collect();
+        let v0: Vec<VSnap> = self.v.iter().map(VSnap::of).collect();
+        // AssertUnwindSafe: on Err every &mut the closure touched is
+        // restored from the snapshot (or rebuilt, for the step context)
+        // before anyone can observe the broken invariants.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.step(params, grads, lr)
+        }));
+        match res {
+            Ok(()) => Ok(()),
+            Err(payload) => {
+                for (p, w) in params.iter_mut().zip(w0) {
+                    p.tensor.data = w;
+                }
+                for (s, snap) in self.m.iter_mut().zip(m0) {
+                    snap.restore(s);
+                }
+                for (s, snap) in self.v.iter_mut().zip(v0) {
+                    snap.restore(s);
+                }
+                self.t = t0;
+                // Scratch arenas and stat slots may hold a half-finished
+                // step; rebuild them from scratch on the next step.
+                self.ctx.invalidate();
+                self.rollbacks += 1;
+                let message = if let Some(s) = payload.downcast_ref::<&str>() {
+                    (*s).to_string()
+                } else if let Some(s) = payload.downcast_ref::<String>() {
+                    s.clone()
+                } else {
+                    "non-string panic payload".to_string()
+                };
+                Err(StepError { message })
+            }
+        }
+    }
+
     fn state_bytes(&self) -> usize {
         self.m.iter().map(|s| s.bytes()).sum::<usize>()
             + self.v.iter().map(|s| s.bytes()).sum::<usize>()
@@ -468,16 +611,25 @@ impl Optimizer for CompressedAdamW {
     }
 
     fn step_report(&self) -> Option<StepReport> {
+        let off = self.offload_report();
         let mut r = StepReport {
             step: self.t,
             sched: self.sched_stats(),
-            offload: self.offload_report().copied(),
+            offload: off.copied(),
             spans: None,
             quant: self
                 .ctx
                 .quant_metrics()
                 .filter(|a| !a.is_empty())
                 .map(QuantReport::from_accum),
+            // Always present for the compressed optimizer (zeros on a
+            // clean run) so downstream schemas can rely on the key.
+            faults: Some(FaultCounters {
+                link_fail_retries: off.map_or(0, |o| o.fail_retries),
+                link_corrupt_retries: off.map_or(0, |o| o.corrupt_retries),
+                retry_virtual_seconds: off.map_or(0.0, |o| o.retry_seconds),
+                rollbacks: self.rollbacks,
+            }),
         };
         #[cfg(feature = "trace")]
         {

@@ -67,6 +67,24 @@ impl Default for Hyper {
     }
 }
 
+/// A step that aborted mid-flight (e.g. an engine worker panicked) and
+/// was rolled back by [`Optimizer::try_step`]. The optimizer and its
+/// state are exactly as they were before the step; calling `try_step`
+/// again with the same inputs retries it.
+#[derive(Clone, Debug)]
+pub struct StepError {
+    /// Human-readable cause — the panic payload when one was caught.
+    pub message: String,
+}
+
+impl std::fmt::Display for StepError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "optimizer step aborted: {}", self.message)
+    }
+}
+
+impl std::error::Error for StepError {}
+
 /// The common optimizer interface. `step` consumes one gradient per
 /// parameter (same order); optimizers lazily initialize state on first
 /// use, so the same instance works for any model.
@@ -74,6 +92,24 @@ pub trait Optimizer {
     /// One update step. `lr` override allows schedules without mutating
     /// the stored hyperparameters.
     fn step(&mut self, params: &mut [Param], grads: &[Tensor], lr: f32);
+
+    /// [`Optimizer::step`] as a transaction: on success equivalent to
+    /// `step`; if the step aborts (a worker panic — injected by
+    /// `crate::fault` or real), optimizers that override this roll
+    /// parameters, optimizer state and the step counter back to their
+    /// pre-step values and return `Err`, leaving the instance reusable —
+    /// a retry is bit-identical to a never-faulted run. The default
+    /// implementation provides no such recovery: it simply forwards to
+    /// `step` and propagates any panic.
+    fn try_step(
+        &mut self,
+        params: &mut [Param],
+        grads: &[Tensor],
+        lr: f32,
+    ) -> Result<(), StepError> {
+        self.step(params, grads, lr);
+        Ok(())
+    }
 
     /// Persistent optimizer-state memory in bytes — the paper's central
     /// accounting quantity (codes + quantization scales + factored stats).

@@ -12,7 +12,18 @@
 //! `Vec` growth — and loaders validate every manifest extent against the
 //! blob length (checked arithmetic, `InvalidData` on any disagreement)
 //! instead of trusting offsets.
+//!
+//! Durability (see `offload/mod.rs`, "Failure semantics"): both files
+//! are written atomically — staged to a `.tmp` sibling, `fsync`ed, then
+//! renamed over the destination — so a crash mid-save leaves the
+//! previous checkpoint intact, never a torn one. Every section (one
+//! tensor's data, one state's codes + scales) additionally carries a
+//! CRC-32 over its blob bytes; loaders verify before decoding and
+//! reject a corrupted or truncated file with an error *naming the bad
+//! section*. Checkpoints written before the CRC fields existed still
+//! load (extent validation alone).
 
+use crate::fault::crc32;
 use crate::optim::factor::FactoredSecond;
 use crate::optim::lowbit::CompressedAdamW;
 use crate::optim::state::{MomentState, SecondState};
@@ -20,7 +31,7 @@ use crate::optim::{Param, ParamKind};
 use crate::quant::{packing, MapKind, NormKind, QuantizedTensor, Quantizer, Scales};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
-use std::io::{BufWriter, Read, Write};
+use std::io::{Read, Write};
 
 /// Append a f32 slice's little-endian bytes in one bulk copy per tensor.
 fn push_f32s(blob: &mut Vec<u8>, vals: &[f32]) {
@@ -65,13 +76,69 @@ fn read_bytes(blob: &[u8], offset: usize, len: usize) -> std::io::Result<Vec<u8>
     Ok(blob[offset..end].to_vec())
 }
 
-fn write_blob(path: &str, blob: &[u8]) -> std::io::Result<()> {
+/// Write `bytes` to `path` atomically: stage to a `.tmp` sibling,
+/// `fsync`, then rename over the destination. A crash at any point
+/// leaves either the old file or the new one — never a torn mix.
+fn write_atomic(path: &str, bytes: &[u8]) -> std::io::Result<()> {
     if let Some(parent) = std::path::Path::new(path).parent() {
         std::fs::create_dir_all(parent)?;
     }
-    let mut w = BufWriter::new(std::fs::File::create(format!("{path}.bin"))?);
-    w.write_all(blob)?;
-    w.flush()
+    let tmp = format!("{path}.tmp.{}", std::process::id());
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+fn write_blob(path: &str, blob: &[u8]) -> std::io::Result<()> {
+    write_atomic(&format!("{path}.bin"), blob)
+}
+
+/// Stamp a section's blob range and CRC-32 on its manifest entry.
+/// `start` is `blob.len()` before the section's bytes were pushed — each
+/// entry's pushes are contiguous, so `[start, blob.len())` covers
+/// exactly the bytes the loader will read for this entry.
+fn seal_section(e: &mut Json, blob: &[u8], start: usize) {
+    e.set("sec_offset", Json::Num(start as f64))
+        .set("sec_len", Json::Num((blob.len() - start) as f64))
+        .set("crc", Json::Num(crc32(&blob[start..]) as f64));
+}
+
+/// Verify a manifest entry's section CRC against the blob, bounds first
+/// (a truncated blob is reported as truncation, not a bad slice).
+/// Entries without a `crc` field (pre-CRC checkpoints) pass through —
+/// extent validation still applies downstream.
+fn verify_section(e: &Json, blob: &[u8], name: &str) -> std::io::Result<()> {
+    let stored = match e.get("crc").and_then(|x| x.as_f64()) {
+        Some(c) => c as u32,
+        None => return Ok(()),
+    };
+    let off = e
+        .get("sec_offset")
+        .and_then(|x| x.as_usize())
+        .ok_or_else(|| bad(&format!("section {name}: crc without sec_offset")))?;
+    let len = e
+        .get("sec_len")
+        .and_then(|x| x.as_usize())
+        .ok_or_else(|| bad(&format!("section {name}: crc without sec_len")))?;
+    let end = off
+        .checked_add(len)
+        .ok_or_else(|| bad(&format!("section {name}: extent overflows")))?;
+    if end > blob.len() {
+        return Err(bad(&format!(
+            "section {name}: blob truncated (section ends at byte {end}, file has {})",
+            blob.len()
+        )));
+    }
+    let got = crc32(&blob[off..end]);
+    if got != stored {
+        return Err(bad(&format!(
+            "section {name}: CRC-32 mismatch (stored {stored:#010x}, computed {got:#010x})"
+        )));
+    }
+    Ok(())
 }
 
 /// Save parameters to `<path>.json` + `<path>.bin`.
@@ -88,6 +155,7 @@ pub fn save_params(path: &str, params: &[Param], step: usize) -> std::io::Result
             .set("shape", Json::from_usizes(&p.tensor.shape))
             .set("offset", Json::Num(offset as f64))
             .set("len", Json::Num(p.tensor.numel() as f64));
+        seal_section(&mut e, &blob, offset);
         entries.push(e);
     }
     debug_assert_eq!(blob.len(), total);
@@ -96,11 +164,11 @@ pub fn save_params(path: &str, params: &[Param], step: usize) -> std::io::Result
         .set("version", Json::Num(1.0))
         .set("step", Json::Num(step as f64))
         .set("tensors", Json::Arr(entries));
-    if let Some(parent) = std::path::Path::new(path).parent() {
-        std::fs::create_dir_all(parent)?;
-    }
-    std::fs::write(format!("{path}.json"), manifest.pretty())?;
-    write_blob(path, &blob)
+    // Blob first: until the manifest rename lands, a loader still sees
+    // the previous (manifest, blob) pair or fails extent validation —
+    // never silently reads new offsets against old bytes.
+    write_blob(path, &blob)?;
+    write_atomic(&format!("{path}.json"), manifest.pretty().as_bytes())
 }
 
 /// Load parameters saved by [`save_params`]. Returns (params, step).
@@ -137,6 +205,7 @@ pub fn load_params(path: &str) -> std::io::Result<(Vec<Param>, usize)> {
         if shape.iter().product::<usize>() != len {
             return Err(bad("shape disagrees with len"));
         }
+        verify_section(e, &blob, &format!("tensor '{name}'"))?;
         let data = read_f32s(&blob, offset, len)?;
         covered = covered.max(offset + 4 * len);
         params.push(Param::new(
@@ -206,7 +275,9 @@ fn state_entry(
     let mut e = Json::obj();
     e.set("which", Json::Str(which.to_string()))
         .set("idx", Json::Num(idx as f64));
+    let start = blob.len();
     body(&mut e, blob);
+    seal_section(&mut e, blob, start);
     e
 }
 
@@ -259,11 +330,8 @@ pub fn save_opt_state(path: &str, opt: &CompressedAdamW) -> std::io::Result<()> 
         .set("t", Json::Num(t as f64))
         .set("count", Json::Num(ms.len() as f64))
         .set("states", Json::Arr(entries));
-    if let Some(parent) = std::path::Path::new(path).parent() {
-        std::fs::create_dir_all(parent)?;
-    }
-    std::fs::write(format!("{path}.json"), manifest.pretty())?;
-    write_blob(path, &blob)
+    write_blob(path, &blob)?;
+    write_atomic(&format!("{path}.json"), manifest.pretty().as_bytes())
 }
 
 fn parse_quant(e: &Json, blob: &[u8], covered: &mut usize) -> std::io::Result<QuantizedTensor> {
@@ -395,6 +463,7 @@ pub fn load_opt_state(path: &str, opt: &mut CompressedAdamW) -> std::io::Result<
         if idx >= count {
             return Err(bad("state idx out of range"));
         }
+        verify_section(e, &blob, &format!("{which}[{idx}]"))?;
         let form = e.get("form").and_then(|x| x.as_str()).ok_or_else(|| bad("form"))?;
         match which {
             "m" => {
@@ -621,6 +690,89 @@ mod tests {
             assert_eq!(v1.data, v2.data, "v[{i}]");
         }
         assert_eq!(opt_a.state_bytes(), opt_c.state_bytes());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_section_is_rejected_by_name() {
+        // One flipped byte inside a state's codes must fail the section
+        // CRC and the error must say *which* section is bad.
+        let hp = Hyper::default();
+        let mut policy = QuantPolicy::bit4();
+        policy.min_quant_size = 0;
+        let shapes: Vec<Vec<usize>> = vec![vec![12, 64], vec![600]];
+        let mut opt = CompressedAdamW::new(hp, policy);
+        let mut params = mk_params(&shapes);
+        opt.step(&mut params, &grads_at(&shapes, 0), 1e-2);
+        let (dir, path) = tmp_base("crc");
+        save_opt_state(&path, &opt).unwrap();
+        let bin = format!("{path}.bin");
+        let good = std::fs::read(&bin).unwrap();
+        let mut evil = good.clone();
+        evil[5] ^= 0x40;
+        std::fs::write(&bin, &evil).unwrap();
+        let mut opt2 = CompressedAdamW::new(hp, policy);
+        let err = load_opt_state(&path, &mut opt2).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        let msg = err.to_string();
+        assert!(msg.contains("CRC-32"), "unexpected error: {msg}");
+        assert!(msg.contains("m[0]"), "error should name the section: {msg}");
+
+        // Params get the same treatment, named by tensor.
+        save_params(&path, &params, 1).unwrap();
+        let good = std::fs::read(&bin).unwrap();
+        let mut evil = good.clone();
+        let last = evil.len() - 1;
+        evil[last] ^= 0x01;
+        std::fs::write(&bin, &evil).unwrap();
+        let err = load_params(&path).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("CRC-32"), "unexpected error: {msg}");
+        assert!(msg.contains("tensor 'p1'"), "error should name the tensor: {msg}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_blob_is_reported_as_truncation() {
+        let hp = Hyper::default();
+        let mut policy = QuantPolicy::bit4();
+        policy.min_quant_size = 0;
+        let shapes: Vec<Vec<usize>> = vec![vec![12, 64]];
+        let mut opt = CompressedAdamW::new(hp, policy);
+        let mut params = mk_params(&shapes);
+        opt.step(&mut params, &grads_at(&shapes, 0), 1e-2);
+        let (dir, path) = tmp_base("torn");
+        save_opt_state(&path, &opt).unwrap();
+        let bin = format!("{path}.bin");
+        let good = std::fs::read(&bin).unwrap();
+        std::fs::write(&bin, &good[..good.len() / 2]).unwrap();
+        let mut opt2 = CompressedAdamW::new(hp, policy);
+        let err = load_opt_state(&path, &mut opt2).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("truncated"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn saves_leave_no_tmp_files() {
+        // Atomic writes stage through `.tmp.<pid>` siblings; a completed
+        // save must leave only the final `.json` + `.bin` pair.
+        let hp = Hyper::default();
+        let mut policy = QuantPolicy::bit4();
+        policy.min_quant_size = 0;
+        let shapes: Vec<Vec<usize>> = vec![vec![12, 64]];
+        let mut opt = CompressedAdamW::new(hp, policy);
+        let mut params = mk_params(&shapes);
+        opt.step(&mut params, &grads_at(&shapes, 0), 1e-2);
+        let (dir, path) = tmp_base("atomic");
+        save_params(&path, &params, 1).unwrap();
+        save_opt_state(&format!("{path}_opt"), &opt).unwrap();
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names.len(), 4, "{names:?}");
+        assert!(names.iter().all(|n| !n.contains(".tmp")), "{names:?}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -88,6 +88,12 @@ pub struct TrainReport {
     pub total_seconds: f64,
     pub step_seconds: f64,
     pub state_bytes: usize,
+    /// Optimizer steps the loop *skipped* because the step was unsound
+    /// to apply — the divergence rule fired (with `stop_on_divergence`
+    /// off the run continues, but stepping on a blown loss would push
+    /// garbage into the optimizer state) or a gradient came back
+    /// non-finite. Always 0 on a healthy run.
+    pub skipped_steps: usize,
 }
 
 impl TrainReport {
@@ -118,6 +124,7 @@ impl TrainReport {
                 0.0
             },
             state_bytes,
+            skipped_steps: 0,
         }
     }
 }
@@ -163,6 +170,7 @@ impl Trainer {
         let timer = Timer::start();
         let mut losses = Vec::with_capacity(self.steps);
         let mut diverged = false;
+        let mut skipped = 0usize;
         let mut ref_loss = f32::NAN;
         for step in 0..self.steps {
             let batch = sampler(step);
@@ -182,6 +190,14 @@ impl Trainer {
                     break;
                 }
             }
+            // A blown step (continuing past divergence) or a non-finite
+            // gradient must not reach the optimizer: NaN/inf would
+            // poison the moments — and through them every later step —
+            // even if the loss itself recovers. Skip and count instead.
+            if blown || grads.iter().any(|g| g.any_nonfinite()) {
+                skipped += 1;
+                continue;
+            }
             let lr = self.schedule.at(step);
             opt.step(params, &grads, lr);
             if self.report_every > 0 && (step + 1) % self.report_every == 0 {
@@ -191,7 +207,10 @@ impl Trainer {
             }
         }
         export_trace_env(opt);
-        TrainReport::from_losses(losses, diverged, timer.seconds(), opt.state_bytes())
+        let mut report =
+            TrainReport::from_losses(losses, diverged, timer.seconds(), opt.state_bytes());
+        report.skipped_steps = skipped;
+        report
     }
 }
 
@@ -298,6 +317,52 @@ mod tests {
         let report = trainer.run(&mut params, opt.as_mut(), &mut engine_fn, |s| s);
         assert!(report.diverged);
         assert!(report.steps < 50, "stopped early at {}", report.steps);
+    }
+
+    #[test]
+    fn blown_or_nonfinite_steps_are_skipped_not_applied() {
+        // Continuing past divergence (stop_on_divergence = false) must
+        // not feed NaN losses/grads into the optimizer: the moments
+        // would go NaN and stay NaN. The loop skips those steps, counts
+        // them, and the optimizer's step counter only advances for the
+        // applied ones.
+        let mut params = vec![Param::new(
+            "w",
+            crate::optim::ParamKind::Weight,
+            Tensor::zeros(&[4]),
+        )];
+        let mut opt = build("adamw32", Hyper::default()).unwrap();
+        let mut engine_fn = |_: &[Param], s: &usize| {
+            if *s % 3 == 2 {
+                // Bad step: NaN loss AND a non-finite gradient.
+                (f32::NAN, vec![Tensor::full(&[4], f32::INFINITY)])
+            } else {
+                (1.0, vec![Tensor::full(&[4], 0.01)])
+            }
+        };
+        let mut trainer = Trainer::new(30, LrSchedule::Constant(1e-3));
+        trainer.stop_on_divergence = false;
+        let report = trainer.run(&mut params, opt.as_mut(), &mut engine_fn, |s| s);
+        assert!(report.diverged);
+        assert_eq!(report.steps, 30);
+        assert_eq!(report.skipped_steps, 10);
+        assert_eq!(opt.t(), 20, "only clean steps reach the optimizer");
+        assert!(
+            !params[0].tensor.any_nonfinite(),
+            "weights stayed finite through skipped steps"
+        );
+
+        // And a fully healthy run skips nothing.
+        let mut opt2 = build("adamw32", Hyper::default()).unwrap();
+        let mut clean = |_: &[Param], _: &usize| (1.0, vec![Tensor::full(&[4], 0.01)]);
+        let mut p2 = vec![Param::new(
+            "w",
+            crate::optim::ParamKind::Weight,
+            Tensor::zeros(&[4]),
+        )];
+        let report2 = trainer.run(&mut p2, opt2.as_mut(), &mut clean, |s| s);
+        assert_eq!(report2.skipped_steps, 0);
+        assert_eq!(opt2.t(), 30);
     }
 
     #[test]

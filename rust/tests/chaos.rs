@@ -1,0 +1,437 @@
+//! Chaos suite: the fault-injection / retry / recovery acceptance tests.
+//!
+//! 1. **Bit-identity under link faults**: offloaded `adamw4` runs with
+//!    seeded transfer failures and payload corruption are bit-identical
+//!    to the fault-free in-memory run at threads 1/2/7 × depths 1/2/4 —
+//!    retries replay identical bytes and corruption is caught by the
+//!    per-transfer CRC before any kernel reads it. Retry counters are
+//!    nonzero and *identical* across every thread count and depth (the
+//!    fault schedule is keyed by logical coordinates, not wall time).
+//! 2. **Step atomicity**: a scheduled mid-step worker panic aborts the
+//!    step, `try_step` rolls back, and the retried run — weights, packed
+//!    codes, scales, step counter — is bit-identical to a never-faulted
+//!    one, with the rollback counted in the step report.
+//! 3. **Checkpoint integrity** (property): a checkpoint truncated at
+//!    *every* section boundary (and mid-section) is rejected with an
+//!    error naming a section — never loaded, never a panic.
+//!
+//! Under `--features audit` the same sweeps double as a false-alarm
+//! check: the retry loop's checksum views and the staging copies live in
+//! the same transfer task, which the aliasing auditor must accept.
+
+use lowbit_opt::fault::{crc32, Crc32, FaultKind, FaultPlan, Phase};
+use lowbit_opt::offload::{LinkModel, OffloadConfig};
+use lowbit_opt::optim::lowbit::{CompressedAdamW, QuantPolicy};
+use lowbit_opt::optim::state::{MomentState, SecondState};
+use lowbit_opt::optim::{Hyper, Optimizer, Param, ParamKind};
+use lowbit_opt::quant::Scales;
+use lowbit_opt::tensor::Tensor;
+use lowbit_opt::train::checkpoint::{load_opt_state, save_opt_state};
+use lowbit_opt::util::json::Json;
+use lowbit_opt::util::rng::Pcg64;
+
+const SHARD_ELEMS: usize = 512;
+const STEPS: usize = 4;
+const THREADS: [usize; 3] = [1, 2, 7];
+const DEPTHS: [usize; 3] = [1, 2, 4];
+
+fn mixed_params() -> Vec<Param> {
+    let mut rng = Pcg64::seeded(7);
+    vec![
+        Param::new("w2d", ParamKind::Weight, Tensor::randn(&[40, 96], 0.5, &mut rng)),
+        Param::new("w1d", ParamKind::Weight, Tensor::randn(&[6000], 0.5, &mut rng)),
+        Param::new("w2d_b", ParamKind::Weight, Tensor::randn(&[24, 32], 0.5, &mut rng)),
+        Param::new("bias", ParamKind::Bias, Tensor::randn(&[10], 0.5, &mut rng)),
+    ]
+}
+
+fn step_grads(params: &[Param], s: usize) -> Vec<Tensor> {
+    let mut grng = Pcg64::seeded(1000 + s as u64);
+    params
+        .iter()
+        .map(|p| Tensor::randn(&p.tensor.shape, 0.1, &mut grng))
+        .collect()
+}
+
+fn any_link() -> LinkModel {
+    LinkModel::pcie_offload(1e-3)
+}
+
+fn bit4_all() -> QuantPolicy {
+    let mut p = QuantPolicy::bit4();
+    p.min_quant_size = 0;
+    p
+}
+
+/// CRC fingerprint of everything a step mutates: weights, the exact
+/// packed codes + scales of every state, and the step counter. Equal
+/// fingerprints mean bit-identical runs (stronger than comparing
+/// decompressed moments — it pins the stored bytes themselves).
+fn fingerprint(opt: &CompressedAdamW, params: &[Param]) -> Vec<u32> {
+    fn f32s(vals: &[f32]) -> u32 {
+        let mut c = Crc32::new();
+        c.update_f32s(vals);
+        c.finish()
+    }
+    fn scales(out: &mut Vec<u32>, s: &Scales) {
+        match s {
+            Scales::PerTensor(x) => out.push(x.to_bits()),
+            Scales::Block { scales, .. } => out.push(f32s(scales)),
+            Scales::Rank1 { per_axis } => {
+                for axis in per_axis {
+                    out.push(f32s(axis));
+                }
+            }
+        }
+    }
+    let (t, ms, vs) = opt.export_states();
+    let mut out = vec![t as u32];
+    for p in params {
+        out.push(f32s(&p.tensor.data));
+    }
+    for m in ms {
+        match m {
+            MomentState::F32(tn) => out.push(f32s(&tn.data)),
+            MomentState::Quant(q) => {
+                out.push(crc32(&q.packed));
+                scales(&mut out, &q.scales);
+            }
+        }
+    }
+    for v in vs {
+        match v {
+            SecondState::F32(tn) => out.push(f32s(&tn.data)),
+            SecondState::Quant(q) => {
+                out.push(crc32(&q.packed));
+                scales(&mut out, &q.scales);
+            }
+            SecondState::Factored(f) => {
+                out.push(f32s(&f.row));
+                out.push(f32s(&f.col));
+            }
+        }
+    }
+    out
+}
+
+/// In-memory run: no offload pipeline, hence no fault sites at all —
+/// the fault-free reference even when `LOWBIT_FAULTS` is set.
+fn baseline(policy: QuantPolicy) -> Vec<u32> {
+    let mut opt = CompressedAdamW::new(Hyper::default(), policy)
+        .with_threads(1)
+        .with_shard_elems(SHARD_ELEMS);
+    let mut params = mixed_params();
+    for s in 0..STEPS {
+        let grads = step_grads(&params, s);
+        opt.step(&mut params, &grads, 1e-2);
+    }
+    fingerprint(&opt, &params)
+}
+
+fn faulted_opt(policy: QuantPolicy, threads: usize, depth: usize, plan: FaultPlan) -> CompressedAdamW {
+    CompressedAdamW::new(Hyper::default(), policy)
+        .with_threads(threads)
+        .with_shard_elems(SHARD_ELEMS)
+        .offloaded(OffloadConfig::new(any_link(), depth))
+        .with_faults(plan)
+}
+
+#[test]
+fn link_faults_keep_bit_identity_across_threads_depths_and_rates() {
+    let reference = baseline(bit4_all());
+    for kind in [FaultKind::Fail, FaultKind::Corrupt, FaultKind::Mixed] {
+        for rate in [0.05, 0.25] {
+            // (retries, fail, corrupt, virtual seconds bits) of the first
+            // combo; every other thread × depth combo must match exactly —
+            // the schedule is keyed by (step, phase, task), never by who
+            // ran it or how deep the prefetch pipeline was.
+            let mut pinned: Option<(u64, u64, f64)> = None;
+            for &t in &THREADS {
+                for &d in &DEPTHS {
+                    let plan = FaultPlan::new(0xC0FFEE).with_rate(rate).with_kind(kind);
+                    let mut opt = faulted_opt(bit4_all(), t, d, plan);
+                    let mut params = mixed_params();
+                    for s in 0..STEPS {
+                        let grads = step_grads(&params, s);
+                        opt.step(&mut params, &grads, 1e-2);
+                    }
+                    assert_eq!(
+                        reference,
+                        fingerprint(&opt, &params),
+                        "faulted run diverged: kind {kind:?} rate {rate} threads {t} depth {d}"
+                    );
+                    let rep = opt.offload_report().expect("offloaded").clone();
+                    let retries = rep.retries();
+                    assert!(
+                        retries > 0,
+                        "rate {rate} {kind:?} rolled no faults over {STEPS} steps"
+                    );
+                    match kind {
+                        FaultKind::Fail => assert_eq!(rep.corrupt_retries, 0),
+                        FaultKind::Corrupt => {
+                            // Writeback faults degrade to Fail; stage-in
+                            // corruption must actually fire too.
+                            assert!(rep.corrupt_retries > 0);
+                        }
+                        FaultKind::Mixed => {}
+                    }
+                    assert!(rep.retry_seconds > 0.0, "retries must cost virtual time");
+                    match pinned {
+                        None => pinned = Some((rep.fail_retries, rep.corrupt_retries, rep.retry_seconds)),
+                        Some((f0, c0, s0)) => {
+                            assert_eq!(
+                                (f0, c0, s0.to_bits()),
+                                (rep.fail_retries, rep.corrupt_retries, rep.retry_seconds.to_bits()),
+                                "retry accounting must be schedule-independent \
+                                 (kind {kind:?} rate {rate} threads {t} depth {d})"
+                            );
+                        }
+                    }
+                    // The unified report carries the same counters.
+                    let sr = opt.step_report().expect("compressed optimizer reports");
+                    let fc = sr.faults.expect("fault counters always present");
+                    assert_eq!(fc.retries(), retries);
+                    assert_eq!(fc.rollbacks, 0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn stochastic_rounding_survives_faults_bit_identically() {
+    // SR draws from per-shard RNG streams during phase C; replayed
+    // transfers must not shift a single draw.
+    let policy = || {
+        let mut p = QuantPolicy::bit4().stochastic();
+        p.min_quant_size = 0;
+        p
+    };
+    let reference = baseline(policy());
+    let plan = || FaultPlan::new(7).with_rate(0.25).with_kind(FaultKind::Mixed);
+    for &t in &THREADS {
+        let mut opt = faulted_opt(policy(), t, 2, plan());
+        let mut params = mixed_params();
+        for s in 0..STEPS {
+            let grads = step_grads(&params, s);
+            opt.step(&mut params, &grads, 1e-2);
+        }
+        assert_eq!(reference, fingerprint(&opt, &params), "SR diverged at threads {t}");
+    }
+}
+
+#[test]
+fn heavy_corruption_recovers_without_audit_alarms() {
+    // A corruption-heavy sweep: every retry runs the CRC views and the
+    // staging copies in the same transfer task, which the aliasing
+    // auditor (when this suite is compiled with `--features audit`)
+    // must accept without a false alarm — and the run must still be
+    // bit-identical.
+    let reference = baseline(bit4_all());
+    let plan = FaultPlan::new(99).with_rate(0.45).with_kind(FaultKind::Corrupt);
+    let mut opt = faulted_opt(bit4_all(), 7, 4, plan);
+    let mut params = mixed_params();
+    for s in 0..STEPS {
+        let grads = step_grads(&params, s);
+        opt.step(&mut params, &grads, 1e-2);
+    }
+    assert_eq!(reference, fingerprint(&opt, &params));
+    assert!(opt.offload_report().expect("offloaded").corrupt_retries > 10);
+}
+
+#[test]
+fn env_gated_faults_keep_bit_identity() {
+    // No builder override here: the pipeline falls back to the process
+    // `LOWBIT_FAULTS` gate. Under ci.sh's pinned schedule this exercises
+    // the env path end to end; with the variable unset it is a clean
+    // offloaded run. Either way the result is bit-identical to the
+    // in-memory reference.
+    let reference = baseline(bit4_all());
+    let mut opt = CompressedAdamW::new(Hyper::default(), bit4_all())
+        .with_threads(2)
+        .with_shard_elems(SHARD_ELEMS)
+        .offloaded(OffloadConfig::new(any_link(), 2));
+    let mut params = mixed_params();
+    for s in 0..STEPS {
+        let grads = step_grads(&params, s);
+        opt.step(&mut params, &grads, 1e-2);
+    }
+    assert_eq!(reference, fingerprint(&opt, &params));
+}
+
+#[test]
+fn pinned_none_plan_overrides_the_env_gate() {
+    // FaultPlan::none() pins a run fault-free even when LOWBIT_FAULTS
+    // is set: zero retries, bit-identical, trivially.
+    let reference = baseline(bit4_all());
+    let mut opt = faulted_opt(bit4_all(), 2, 2, FaultPlan::none());
+    let mut params = mixed_params();
+    for s in 0..STEPS {
+        let grads = step_grads(&params, s);
+        opt.step(&mut params, &grads, 1e-2);
+    }
+    assert_eq!(reference, fingerprint(&opt, &params));
+    assert_eq!(opt.offload_report().expect("offloaded").retries(), 0);
+}
+
+// ---------------------------------------------------------------------
+// Step atomicity: scheduled worker panics, rollback, retry.
+// ---------------------------------------------------------------------
+
+/// Drive `opt` through the standard run, retrying any aborted step.
+/// Returns how many aborts were observed.
+fn run_with_retries(opt: &mut CompressedAdamW, params: &mut [Param]) -> usize {
+    let mut aborts = 0;
+    for s in 0..STEPS {
+        let grads = step_grads(params, s);
+        loop {
+            match opt.try_step(params, &grads, 1e-2) {
+                Ok(()) => break,
+                Err(e) => {
+                    aborts += 1;
+                    // The injected message survives when the panicking
+                    // task ran on the submitter; a pool worker's unwind
+                    // is re-raised under the engine's generic banner.
+                    assert!(
+                        e.message.contains("injected fault")
+                            || e.message.contains("engine worker panicked"),
+                        "unexpected abort cause: {}",
+                        e.message
+                    );
+                    assert!(aborts < 16, "rollback retry did not converge");
+                }
+            }
+        }
+    }
+    aborts
+}
+
+#[test]
+fn mid_step_panic_rolls_back_and_retries_bit_identically() {
+    let reference = baseline(bit4_all());
+    for (phase, task) in [(Phase::A, 1), (Phase::A, 0), (Phase::C, 0)] {
+        for &t in &THREADS {
+            // Panic on the third step; the one-shot trigger lets the
+            // post-rollback retry of that same step run clean.
+            let plan = FaultPlan::new(0xABAD).panic_at(3, phase, task);
+            let mut opt = faulted_opt(bit4_all(), t, 2, plan);
+            let mut params = mixed_params();
+            let aborts = run_with_retries(&mut opt, &mut params);
+            assert_eq!(aborts, 1, "exactly one abort at {phase:?}/{task} threads {t}");
+            assert_eq!(opt.rollbacks(), 1);
+            assert_eq!(
+                reference,
+                fingerprint(&opt, &params),
+                "post-rollback retry diverged at {phase:?}/{task} threads {t}"
+            );
+            let fc = opt.step_report().expect("report").faults.expect("counters");
+            assert_eq!(fc.rollbacks, 1);
+        }
+    }
+}
+
+#[test]
+fn acceptance_link_faults_plus_mid_step_panic() {
+    // The issue's acceptance schedule: link failures at a nonzero rate
+    // AND one mid-step worker panic. The run completes, is bit-identical
+    // to the fault-free reference, and the step report carries nonzero
+    // retry and rollback counters.
+    let reference = baseline(bit4_all());
+    let plan = FaultPlan::new(0xFA11)
+        .with_rate(0.1)
+        .with_kind(FaultKind::Mixed)
+        .panic_at(2, Phase::A, 0);
+    let mut opt = faulted_opt(bit4_all(), 7, 2, plan);
+    let mut params = mixed_params();
+    let aborts = run_with_retries(&mut opt, &mut params);
+    assert_eq!(aborts, 1);
+    assert_eq!(reference, fingerprint(&opt, &params));
+    let fc = opt.step_report().expect("report").faults.expect("counters");
+    assert!(fc.retries() > 0, "link faults must have fired");
+    assert_eq!(fc.rollbacks, 1, "the panic must have rolled back once");
+    assert!(fc.retry_virtual_seconds > 0.0);
+}
+
+#[test]
+fn pool_is_reusable_after_an_uncaught_abort() {
+    // Even without try_step, a panicked step must leave the engine pool
+    // and the optimizer's buffers in a state where a *fresh* optimizer
+    // sharing nothing still works — and the panicked instance itself can
+    // continue after the one-shot trigger fired (its state is torn, but
+    // stepping must not hang or double-panic).
+    let plan = FaultPlan::new(5).panic_at(1, Phase::A, 0);
+    let mut opt = faulted_opt(bit4_all(), 2, 2, plan);
+    let mut params = mixed_params();
+    let grads = step_grads(&params, 0);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        opt.step(&mut params, &grads, 1e-2);
+    }));
+    assert!(r.is_err(), "scheduled panic must propagate through step()");
+    // The same instance steps again (trigger is one-shot).
+    opt.invalidate_step_cache();
+    opt.step(&mut params, &grads, 1e-2);
+    assert_eq!(opt.t(), 2, "both steps counted (no rollback without try_step)");
+}
+
+// ---------------------------------------------------------------------
+// Checkpoint integrity property test.
+// ---------------------------------------------------------------------
+
+#[test]
+fn checkpoint_truncated_at_every_section_boundary_is_rejected() {
+    // Save a checkpoint holding every state form (f32 below the size
+    // threshold, quantized, factored), then truncate the blob at every
+    // section boundary and mid-section. Every cut must be rejected with
+    // an error naming a section; the intact file must still load.
+    let hp = Hyper::default();
+    let mut policy = QuantPolicy::bit4().factored();
+    policy.min_quant_size = 1000;
+    let mut opt = CompressedAdamW::new(hp, policy);
+    let mut params = mixed_params();
+    for s in 0..2 {
+        let grads = step_grads(&params, s);
+        opt.step(&mut params, &grads, 1e-2);
+    }
+    let dir = std::env::temp_dir().join(format!("lowbit_chaos_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("opt").to_str().unwrap().to_string();
+    save_opt_state(&path, &opt).unwrap();
+
+    let manifest = Json::parse(&std::fs::read_to_string(format!("{path}.json")).unwrap()).unwrap();
+    let states = manifest.get("states").and_then(|s| s.as_arr()).unwrap();
+    assert!(states.len() >= 6, "want every form represented");
+    let bin = format!("{path}.bin");
+    let good = std::fs::read(&bin).unwrap();
+
+    let mut cuts: Vec<usize> = Vec::new();
+    for e in states {
+        let off = e.get("sec_offset").and_then(|x| x.as_usize()).expect("sealed section");
+        let len = e.get("sec_len").and_then(|x| x.as_usize()).expect("sealed section");
+        cuts.push(off); // exactly at the boundary before this section
+        if len > 1 {
+            cuts.push(off + len / 2); // torn mid-section
+            cuts.push(off + len - 1); // one byte short of complete
+        }
+    }
+    cuts.sort_unstable();
+    cuts.dedup();
+    for &cut in &cuts {
+        assert!(cut < good.len());
+        std::fs::write(&bin, &good[..cut]).unwrap();
+        let mut fresh = CompressedAdamW::new(hp, policy);
+        let err = load_opt_state(&path, &mut fresh).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "cut at {cut}");
+        let msg = err.to_string();
+        assert!(
+            msg.contains("section"),
+            "cut at {cut}: error must name a section, got: {msg}"
+        );
+    }
+
+    // Restore the intact blob: the checkpoint loads and resumes.
+    std::fs::write(&bin, &good).unwrap();
+    let mut fresh = CompressedAdamW::new(hp, policy);
+    load_opt_state(&path, &mut fresh).unwrap();
+    assert_eq!(fresh.t(), 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
